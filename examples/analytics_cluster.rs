@@ -1,0 +1,83 @@
+//! Distributed analytics on simulated clusters — the §5.2 scenario end
+//! to end: the same TPC-H shuffle jobs on a server-centric cluster and
+//! its Lovelock replacements, with real per-worker compute and the
+//! flow-level fabric deciding the network phases.
+//!
+//! Run: `cargo run --release --example analytics_cluster -- [--sf 0.02] [--workers 8]`
+
+use lovelock::cli::Command;
+use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::configfmt::Json;
+use lovelock::coordinator::DistributedQuery;
+use lovelock::analytics::{TpchConfig, TpchDb};
+use lovelock::platform::n2d_milan;
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("analytics_cluster", "distributed TPC-H: traditional vs Lovelock")
+        .opt("sf", Some("0.02"), "TPC-H scale factor")
+        .opt("workers", Some("8"), "server count of the traditional cluster")
+        .opt("seed", Some("7"), "dbgen seed");
+    let args = match cmd.parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(m) => {
+            eprintln!("{m}");
+            std::process::exit(2);
+        }
+    };
+    let sf = args.get_f64("sf", 0.02);
+    let workers = args.get_usize("workers", 8);
+    let seed = args.get_u64("seed", 7);
+
+    println!("generating TPC-H SF {sf} (seed {seed})…");
+    let db = TpchDb::generate(TpchConfig::new(sf, seed));
+    println!("{} lineitems, {} orders\n", db.lineitem.len(), db.orders.len());
+
+    let trad = ClusterSpec::traditional(workers, n2d_milan(), Role::LiteCompute);
+    let mut records = Vec::new();
+    println!(
+        "{:<10} {:<22} {:>9} {:>10} {:>9} {:>9} {:>8}",
+        "query", "cluster", "cpu ms", "shuffle ms", "io ms", "total ms", "vs trad"
+    );
+    for q in ["q1", "q6", "q18"] {
+        let base = DistributedQuery::new(trad.clone()).run(&db, q)?;
+        let base_total = base.total_secs();
+        for (label, cluster) in [
+            ("traditional".to_string(), trad.clone()),
+            ("lovelock phi=1".to_string(), ClusterSpec::lovelock_e2000(&trad, 1)),
+            ("lovelock phi=2".to_string(), ClusterSpec::lovelock_e2000(&trad, 2)),
+            ("lovelock phi=3".to_string(), ClusterSpec::lovelock_e2000(&trad, 3)),
+        ] {
+            let r = DistributedQuery::new(cluster).run(&db, q)?;
+            println!(
+                "{:<10} {:<22} {:>9.3} {:>10.3} {:>9.3} {:>9.3} {:>7.2}x",
+                q,
+                label,
+                r.compute_secs * 1e3,
+                r.shuffle_secs * 1e3,
+                r.io_secs * 1e3,
+                r.total_secs() * 1e3,
+                base_total / r.total_secs()
+            );
+            records.push(
+                Json::obj()
+                    .field("query", q)
+                    .field("cluster", label.as_str())
+                    .field("compute_secs", r.compute_secs)
+                    .field("shuffle_secs", r.shuffle_secs)
+                    .field("io_secs", r.io_secs)
+                    .field("rows", r.rows.len())
+                    .field("shuffle_bytes", r.shuffle_bytes),
+            );
+        }
+        println!();
+    }
+    // Machine-readable run record.
+    let record = Json::obj()
+        .field("sf", sf)
+        .field("workers", workers)
+        .field("runs", Json::Arr(records));
+    let path = std::env::temp_dir().join("lovelock_analytics_cluster.json");
+    std::fs::write(&path, record.render())?;
+    println!("run record: {}", path.display());
+    Ok(())
+}

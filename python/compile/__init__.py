@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX model (L2) + Pallas kernels (L1) + AOT.
+
+Nothing here runs on the request path — ``aot.py`` lowers everything to
+HLO text under ``artifacts/`` once, and the Rust runtime loads those.
+"""

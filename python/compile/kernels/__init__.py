@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the Lovelock compute hot-spots.
+
+``matmul`` — MXU-tiled matrix multiply; ``attention`` — fused
+flash-attention forward (custom-vjp backward via the reference);
+``q6_scan`` — the TPC-H Q6 scan-aggregate offload. ``ref`` holds the
+pure-jnp oracles that pytest checks every kernel against.
+"""
+
+from . import attention, matmul, q6_scan, ref  # noqa: F401

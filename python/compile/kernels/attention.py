@@ -1,0 +1,116 @@
+"""Flash-attention-style fused attention Pallas kernel.
+
+Hardware adaptation: the GPU flash-attention papers tile Q into
+threadblocks and stream K/V through shared memory with an online softmax.
+On TPU the same insight maps to: one Q block resident in VMEM per grid
+step, K/V streamed block-by-block with the running (max, denominator)
+carried in registers/VMEM scratch, block matmuls on the MXU. Here the
+K/V stream is a ``fori_loop`` over blocks of the full-sequence K/V slabs
+(S·D f32 at our sizes is tens of KiB — comfortably VMEM-resident), which
+is the right shape for short-context models like ours.
+
+``interpret=True`` everywhere: real-TPU lowering emits Mosaic custom
+calls the CPU PJRT plugin cannot run.
+
+The public ``attention`` wrapper is a ``jax.custom_vjp``: forward runs
+this kernel, backward differentiates the jnp reference — so the AOT
+training step keeps the kernel on its forward path while remaining
+differentiable (the standard recipe when no hand-written backward kernel
+is provided).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, causal, scale):
+    # Block shapes: q_ref [1, bq, D]; k_ref/v_ref [1, S, D]; o_ref [1, bq, D].
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :] * scale  # [bq, d]
+    s_total = k_ref.shape[1]
+    d = q.shape[-1]
+    nblocks = s_total // bk
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+
+    def body(kb, carry):
+        acc, m_run, l_run = carry
+        k_blk = jax.lax.dynamic_slice(k_ref[0, :, :], (kb * bk, 0), (bk, d))
+        v_blk = jax.lax.dynamic_slice(v_ref[0, :, :], (kb * bk, 0), (bk, d))
+        logits = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+        if causal:
+            k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            logits = jnp.where(q_pos >= k_pos, logits, NEG_INF)
+        m_new = jnp.maximum(m_run, logits.max(axis=-1))
+        correction = jnp.exp(m_run - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_new = l_run * correction + p.sum(axis=-1)
+        acc = acc * correction[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _, l_run = jax.lax.fori_loop(0, nblocks, body, (acc0, m0, l0))
+    o_ref[0, :, :] = acc / l_run[:, None]
+
+
+def _attention_fwd_pallas(q, k, v, *, bq, bk, causal):
+    b, h, s, d = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, f"S={s} must tile by ({bq},{bk})"
+    scale = 1.0 / (d**0.5)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    kernel = functools.partial(
+        _attention_kernel, bq=bq, bk=bk, causal=causal, scale=scale
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, s, d), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def attention(q, k, v, bq=64, bk=64, causal=True):
+    """Fused attention: Pallas forward, reference-vjp backward."""
+    return _attention_fwd_pallas(q, k, v, bq=bq, bk=bk, causal=causal)
+
+
+def _fwd(q, k, v, bq, bk, causal):
+    out = _attention_fwd_pallas(q, k, v, bq=bq, bk=bk, causal=causal)
+    return out, (q, k, v)
+
+
+def _bwd(bq, bk, causal, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=causal), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_fwd, _bwd)
+
+
+def vmem_bytes(bq=64, bk=64, s=128, d=64, dtype_bytes=4):
+    """Estimated VMEM per grid step: Q block + K/V slabs + accumulators."""
+    return (bq * d + 2 * s * d + 2 * bq * d + 2 * bq) * dtype_bytes

@@ -1,0 +1,63 @@
+"""Tiled matmul Pallas kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on a real TPU this
+kernel drives the MXU with (bm x bk)·(bk x bn) tiles resident in VMEM and
+an output tile revisited across the K grid axis (the accumulation axis is
+innermost so the output block stays hot). On this CPU image it must run
+with ``interpret=True`` — real TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+
+VMEM budget at the default blocks (bm=bn=128, bk=128, f32):
+3 tiles x 128·128·4 B = 192 KiB « 16 MiB VMEM; MXU utilization estimate:
+128-multiples feed the 128x128 systolic array at full occupancy.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    # Zero the output tile on the first K step, then accumulate partial
+    # products as the K grid axis revisits the same output block.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm=128, bn=128, bk=128):
+    """``x @ y`` via the tiled Pallas kernel (interpret mode on CPU).
+
+    Shapes must tile evenly: M % bm == K % bk == N % bn == 0.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"({m},{k})x({k},{n}) does not tile by ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(bm=128, bn=128, bk=128, dtype_bytes=4):
+    """Estimated VMEM footprint of one grid step (perf model input)."""
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes

@@ -1,0 +1,72 @@
+"""TPC-H Q6 scan-aggregate Pallas kernel — the analytics offload path.
+
+The paper singles out Q6 as the compute-bound scan in Figure 3; this
+kernel is the Lovelock "data processing accelerator" version of it
+(§6): a single fused pass of filter + multiply + reduce over columnar
+inputs, blocked along the row axis so each grid step streams one
+VMEM-resident tile per column and accumulates a scalar partial.
+
+On TPU the 8192-row f32 tiles (4 columns x 32 KiB) stream HBM→VMEM at
+memory speed and reduce on the VPU; on this CPU image it runs under
+``interpret=True``. The Rust engine executes the AOT artifact of this
+kernel via PJRT as an alternative Q6 backend (``runtime`` +
+``examples/quickstart.rs``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed chunk the AOT artifact is compiled for; the Rust caller pads the
+# last chunk (shipdate = +inf fails every filter).
+CHUNK = 65536
+BLOCK = 8192
+
+
+def _q6_kernel(ship_ref, disc_ref, qty_ref, price_ref, bounds_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ship = ship_ref[...]
+    disc = disc_ref[...]
+    qty = qty_ref[...]
+    price = price_ref[...]
+    b = bounds_ref[...]
+    mask = (
+        (ship >= b[0])
+        & (ship < b[1])
+        & (disc >= b[2])
+        & (disc < b[3])
+        & (qty < b[4])
+    )
+    o_ref[...] += jnp.sum(jnp.where(mask, price * disc, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def q6_scan(shipdate, discount, quantity, extprice, bounds, *, block=BLOCK):
+    """Fused Q6 revenue over equal-length f32 columns.
+
+    ``bounds`` = f32[5]: [date_lo, date_hi, disc_lo, disc_hi, qty_lt].
+    Length must tile by ``block``.
+    """
+    (n,) = shipdate.shape
+    block = min(block, n)
+    assert n % block == 0, f"n={n} must tile by block={block}"
+    grid = (n // block,)
+    col = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _q6_kernel,
+        grid=grid,
+        in_specs=[col, col, col, col, pl.BlockSpec((5,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(shipdate, discount, quantity, extprice, bounds)
+
+
+def vmem_bytes(block=BLOCK, dtype_bytes=4):
+    """Estimated VMEM per grid step: 4 column tiles + bounds + scalar."""
+    return (4 * block + 5 + 1) * dtype_bytes

@@ -1,0 +1,47 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has its numerics checked against these
+references by ``python/tests`` (exact structure, loose float tolerance).
+The references are also used as the backward pass of the custom-vjp
+wrappers (forward = Pallas kernel, backward = vjp of the reference),
+which keeps the AOT-lowered training step differentiable while the
+forward compute path goes through the kernels.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain matmul, f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """Scaled dot-product attention over [B, H, S, D] tensors."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def q6_ref(shipdate, discount, quantity, extprice, bounds):
+    """TPC-H Q6 revenue: sum(extprice*discount) under the filters.
+
+    ``bounds`` = [date_lo, date_hi, disc_lo, disc_hi, qty_lt] (f32[5]).
+    The date window is half-open [lo, hi), the discount window half-open
+    [lo, hi), quantity strictly less-than — matching the Rust engine.
+    """
+    date_lo, date_hi, disc_lo, disc_hi, qty_lt = (bounds[i] for i in range(5))
+    mask = (
+        (shipdate >= date_lo)
+        & (shipdate < date_hi)
+        & (discount >= disc_lo)
+        & (discount < disc_hi)
+        & (quantity < qty_lt)
+    )
+    return jnp.sum(jnp.where(mask, extprice * discount, 0.0))

@@ -1,0 +1,214 @@
+"""L2: GLaM-style dense decoder-only transformer, packed-state training.
+
+This is the §5.3 workload — the model the accelerators run while the
+(smart-NIC) host merely coordinates. The whole training state lives in a
+single flat f32 vector so the Rust driver can hold it as one device
+buffer and feed each step's output straight back in (no per-step host
+round-trips):
+
+    state = [ loss, step, theta (P), adam_m (P), adam_v (P) ]   # f32[2+3P]
+
+Exported entry points (AOT-lowered by ``aot.py``):
+
+* ``make_init(cfg)``   — ``(seed i32[1]) -> f32[2+3P]``
+* ``make_train_step(cfg)`` — ``(state f32[2+3P], tokens i32[B,S+1]) ->
+  f32[2+3P]`` — one AdamW step of next-token cross-entropy; the new
+  loss is written into slot 0.
+
+Attention runs through the Pallas flash kernel
+(``kernels.attention.attention``) so the lowered HLO carries the L1
+kernel on its forward path.
+"""
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq: int
+    batch: int
+    d_ff: int = 0  # 0 → 4·d_model
+    lr: float = 1e-3
+    wd: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.98
+    eps: float = 1e-8
+
+    @property
+    def ff(self) -> int:
+        return self.d_ff or 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+TINY = Config(name="tiny", vocab=512, d_model=64, n_layers=2, n_heads=4, seq=64, batch=8)
+GLAM_100M = Config(
+    name="100m", vocab=8192, d_model=768, n_layers=12, n_heads=12, seq=128, batch=2
+)
+
+CONFIGS = {c.name: c for c in (TINY, GLAM_100M)}
+
+
+# ------------------------------------------------------------- parameters
+
+def param_shapes(cfg: Config) -> Dict[str, tuple]:
+    """Ordered parameter dictionary (order defines the packing layout)."""
+    shapes = {"embed": (cfg.vocab, cfg.d_model)}
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        shapes[p + "ln1"] = (cfg.d_model,)
+        shapes[p + "wqkv"] = (cfg.d_model, 3 * cfg.d_model)
+        shapes[p + "wo"] = (cfg.d_model, cfg.d_model)
+        shapes[p + "ln2"] = (cfg.d_model,)
+        shapes[p + "w1"] = (cfg.d_model, cfg.ff)
+        shapes[p + "w2"] = (cfg.ff, cfg.d_model)
+    shapes["ln_f"] = (cfg.d_model,)
+    return shapes
+
+
+def num_params(cfg: Config) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for s in param_shapes(cfg).values())
+
+
+def state_len(cfg: Config) -> int:
+    return 2 + 3 * num_params(cfg)
+
+
+def unpack(cfg: Config, flat):
+    """Flat parameter vector → dict of arrays."""
+    params = {}
+    off = 0
+    for name, shape in param_shapes(cfg).items():
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def pack(cfg: Config, params) -> jnp.ndarray:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name in param_shapes(cfg)]
+    )
+
+
+# ------------------------------------------------------------------ model
+
+def _layernorm(x, gain):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * gain
+
+
+def forward(cfg: Config, params, tokens):
+    """Logits for tokens [B, S] → [B, S, vocab]. Tied embeddings."""
+    x = params["embed"][tokens]  # [B, S, D]
+    b, s, d = x.shape
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = _layernorm(x, params[p + "ln1"])
+        qkv = h @ params[p + "wqkv"]  # [B, S, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+        # Pallas flash-attention kernel; whole-sequence tiles (bq = bk =
+        # S up to 128) keep the interpret-mode grid minimal and the VMEM
+        # estimate at S·D·4B per slab — see EXPERIMENTS.md §Perf L1.
+        bs = min(128, s)
+        o = attention(heads(q), heads(k), heads(v), bs, bs)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + o @ params[p + "wo"]
+        h = _layernorm(x, params[p + "ln2"])
+        x = x + jax.nn.gelu(h @ params[p + "w1"]) @ params[p + "w2"]
+    x = _layernorm(x, params["ln_f"])
+    return x @ params["embed"].T
+
+
+def loss_fn(cfg: Config, params, tokens):
+    """Mean next-token cross-entropy; tokens [B, S+1]."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# --------------------------------------------------------------- training
+
+def make_init(cfg: Config):
+    """(seed i32[1]) -> packed state f32[2+3P]."""
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed[0])
+        shapes = param_shapes(cfg)
+        keys = jax.random.split(key, len(shapes))
+        params = {}
+        for (name, shape), k in zip(shapes.items(), keys):
+            if len(shape) == 1:
+                params[name] = jnp.ones(shape, jnp.float32)  # LN gains
+            else:
+                fan_in = shape[0]
+                std = (1.0 / fan_in) ** 0.5
+                params[name] = std * jax.random.normal(k, shape, jnp.float32)
+        theta = pack(cfg, params)
+        zeros = jnp.zeros_like(theta)
+        head = jnp.array([0.0, 0.0], jnp.float32)  # loss, step
+        return jnp.concatenate([head, theta, zeros, zeros])
+
+    return init
+
+
+def make_train_step(cfg: Config):
+    """(state f32[2+3P], tokens i32[B,S+1]) -> state f32[2+3P]."""
+    p = num_params(cfg)
+
+    def step(state, tokens):
+        t = state[1] + 1.0
+        theta = state[2 : 2 + p]
+        m = state[2 + p : 2 + 2 * p]
+        v = state[2 + 2 * p : 2 + 3 * p]
+
+        params = unpack(cfg, theta)
+        loss, grads = jax.value_and_grad(lambda q: loss_fn(cfg, q, tokens))(params)
+        g = pack(cfg, grads)
+
+        m = cfg.beta1 * m + (1.0 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1.0 - cfg.beta2) * g * g
+        m_hat = m / (1.0 - cfg.beta1**t)
+        v_hat = v / (1.0 - cfg.beta2**t)
+        theta = theta - cfg.lr * (
+            m_hat / (jnp.sqrt(v_hat) + cfg.eps) + cfg.wd * theta
+        )
+        head = jnp.stack([loss, t])
+        return jnp.concatenate([head, theta, m, v])
+
+    return step
+
+
+def make_eval_loss(cfg: Config):
+    """(state f32[2+3P], tokens i32[B,S+1]) -> f32[1] loss (no update)."""
+    p = num_params(cfg)
+
+    def eval_loss(state, tokens):
+        params = unpack(cfg, state[2 : 2 + p])
+        return jnp.stack([loss_fn(cfg, params, tokens)])
+
+    return eval_loss

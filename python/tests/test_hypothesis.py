@@ -1,0 +1,80 @@
+"""Hypothesis sweeps over kernel shapes/values vs the references."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, matmul, q6_scan, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def matmul_shapes(draw):
+    bm = draw(st.sampled_from([16, 32, 64]))
+    bk = draw(st.sampled_from([16, 32, 64]))
+    bn = draw(st.sampled_from([16, 32, 64]))
+    m = bm * draw(st.integers(1, 4))
+    k = bk * draw(st.integers(1, 4))
+    n = bn * draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, k, n, bm, bk, bn, seed
+
+
+@given(matmul_shapes())
+@settings(**SETTINGS)
+def test_matmul_shape_sweep(shape):
+    m, k, n, bm, bk, bn, seed = shape
+    rs = np.random.RandomState(seed)
+    x = rs.randn(m, k).astype(np.float32)
+    y = rs.randn(k, n).astype(np.float32)
+    got = matmul.matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-3)
+
+
+@st.composite
+def attn_shapes(draw):
+    b = draw(st.integers(1, 2))
+    h = draw(st.sampled_from([1, 2, 4]))
+    s = draw(st.sampled_from([32, 64, 128]))
+    d = draw(st.sampled_from([16, 32, 64]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    causal = draw(st.booleans())
+    return b, h, s, d, seed, causal
+
+
+@given(attn_shapes())
+@settings(**SETTINGS)
+def test_attention_shape_sweep(shape):
+    b, h, s, d, seed, causal = shape
+    rs = np.random.RandomState(seed)
+    q = (0.5 * rs.randn(b, h, s, d)).astype(np.float32)
+    k = (0.5 * rs.randn(b, h, s, d)).astype(np.float32)
+    v = rs.randn(b, h, s, d).astype(np.float32)
+    got = attention.attention(q, k, v, min(32, s), min(32, s), causal)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@st.composite
+def q6_case(draw):
+    n = draw(st.sampled_from([4096, 8192, 16384]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    lo = draw(st.floats(8000, 8500))
+    width = draw(st.floats(10, 500))
+    qty_lt = draw(st.floats(1, 50))
+    return n, seed, lo, lo + width, qty_lt
+
+
+@given(q6_case())
+@settings(**SETTINGS)
+def test_q6_bounds_sweep(case):
+    n, seed, lo, hi, qty_lt = case
+    rs = np.random.RandomState(seed)
+    ship = rs.uniform(7900, 8600, n).astype(np.float32)
+    disc = (rs.randint(0, 11, n) / 100.0).astype(np.float32)
+    qty = rs.randint(1, 51, n).astype(np.float32)
+    price = rs.uniform(1, 1000, n).astype(np.float32)
+    bounds = np.array([lo, hi, 0.045, 0.075, qty_lt], np.float32)
+    got = float(q6_scan.q6_scan(ship, disc, qty, price, bounds, block=4096)[0])
+    want = float(ref.q6_ref(ship, disc, qty, price, bounds))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)

@@ -1,0 +1,125 @@
+"""Kernel vs reference: the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import attention, matmul, q6_scan, ref
+
+
+def rand(shape, seed, scale=1.0):
+    return (scale * np.random.RandomState(seed).randn(*shape)).astype(np.float32)
+
+
+class TestMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n", [(128, 128, 128), (256, 512, 384), (128, 256, 128), (512, 128, 256)]
+    )
+    def test_matches_ref(self, m, k, n):
+        x, y = rand((m, k), 0), rand((k, n), 1)
+        got = matmul.matmul(x, y)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=2e-5, atol=2e-4)
+
+    def test_small_blocks(self):
+        x, y = rand((64, 64), 2), rand((64, 64), 3)
+        got = matmul.matmul(x, y, bm=32, bn=32, bk=16)
+        np.testing.assert_allclose(got, ref.matmul_ref(x, y), rtol=2e-5, atol=2e-4)
+
+    def test_rejects_untileable(self):
+        with pytest.raises(AssertionError):
+            matmul.matmul(rand((100, 128), 0), rand((128, 128), 1), bm=64)
+
+    def test_identity(self):
+        x = rand((128, 128), 4)
+        eye = np.eye(128, dtype=np.float32)
+        np.testing.assert_allclose(matmul.matmul(x, eye), x, rtol=1e-6, atol=1e-5)
+
+    def test_vmem_budget(self):
+        # Default tiles must fit comfortably in 16 MiB VMEM.
+        assert matmul.vmem_bytes() < 4 << 20
+
+
+class TestAttention:
+    @pytest.mark.parametrize("b,h,s,d", [(1, 1, 64, 32), (2, 4, 128, 64), (1, 2, 256, 64)])
+    def test_causal_matches_ref(self, b, h, s, d):
+        q, k, v = rand((b, h, s, d), 0, 0.5), rand((b, h, s, d), 1, 0.5), rand((b, h, s, d), 2)
+        got = attention.attention(q, k, v)
+        want = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_non_causal(self):
+        q = rand((1, 2, 64, 32), 3, 0.5)
+        got = attention.attention(q, q, q, 32, 32, False)
+        want = ref.attention_ref(q, q, q, causal=False)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_block_size_invariance(self):
+        q = rand((1, 2, 128, 32), 4, 0.5)
+        a = attention.attention(q, q, q, 32, 32, True)
+        b = attention.attention(q, q, q, 64, 128, True)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_gradients_flow(self):
+        # custom-vjp backward (reference vjp) must match autodiff of ref.
+        q = rand((1, 2, 64, 32), 5, 0.3)
+
+        def loss_kernel(x):
+            return attention.attention(x, x, x).sum()
+
+        def loss_ref(x):
+            return ref.attention_ref(x, x, x, causal=True).sum()
+
+        gk = jax.grad(loss_kernel)(q)
+        gr = jax.grad(loss_ref)(q)
+        np.testing.assert_allclose(gk, gr, rtol=5e-4, atol=5e-4)
+
+    def test_first_row_attends_self_only(self):
+        # Causality: output row 0 must equal v row 0.
+        q, k = rand((1, 1, 64, 16), 6), rand((1, 1, 64, 16), 7)
+        v = rand((1, 1, 64, 16), 8)
+        out = attention.attention(q, k, v)
+        np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=1e-5, atol=1e-6)
+
+
+class TestQ6:
+    def cols(self, n, seed=0):
+        rs = np.random.RandomState(seed)
+        ship = rs.uniform(8000, 9000, n).astype(np.float32)
+        disc = (rs.randint(0, 11, n) / 100.0).astype(np.float32)
+        qty = rs.randint(1, 51, n).astype(np.float32)
+        price = rs.uniform(100, 10000, n).astype(np.float32)
+        return ship, disc, qty, price
+
+    def bounds(self):
+        return np.array([8300, 8600, 0.045, 0.075, 24.0], np.float32)
+
+    @pytest.mark.parametrize("n", [8192, 65536])
+    def test_matches_ref(self, n):
+        cols = self.cols(n)
+        got = q6_scan.q6_scan(*cols, self.bounds())
+        want = ref.q6_ref(*cols, self.bounds())
+        np.testing.assert_allclose(got[0], want, rtol=1e-4)
+
+    def test_empty_window(self):
+        cols = self.cols(8192, 1)
+        b = np.array([0, 1, 0.045, 0.075, 24.0], np.float32)
+        assert float(q6_scan.q6_scan(*cols, b)[0]) == 0.0
+
+    def test_block_invariance(self):
+        cols = self.cols(65536, 2)
+        a = q6_scan.q6_scan(*cols, self.bounds(), block=8192)
+        b = q6_scan.q6_scan(*cols, self.bounds(), block=65536)
+        np.testing.assert_allclose(a, b, rtol=1e-5)
+
+    def test_padding_convention(self):
+        # The Rust caller pads with shipdate=+inf; padded rows contribute 0.
+        cols = list(self.cols(8192, 3))
+        padded = [np.concatenate([c, np.zeros(8192, np.float32)]) for c in cols]
+        padded[0][8192:] = np.float32(3.0e38)  # shipdate fails every filter
+        a = q6_scan.q6_scan(*cols, self.bounds())
+        b = q6_scan.q6_scan(*padded, self.bounds())
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_vmem_budget(self):
+        assert q6_scan.vmem_bytes() < 1 << 20

@@ -1,0 +1,83 @@
+//! Bench `cost` — regenerates every §4/§5.2/§5.3 cost & energy scenario,
+//! the fabric-cost extension, and a φ×μ sweep of Eq. 1/2.
+
+use lovelock::benchkit::Bench;
+use lovelock::costmodel::{sweep, CostModel, Scenario};
+
+fn main() {
+    let mut b = Bench::new("Cost & energy model — paper scenarios");
+    let bare = CostModel::bare_bluefield();
+    let lite = CostModel::host_only();
+    let pcie = CostModel::host_only().with_pcie_share(0.75);
+    let s53 = CostModel { c_s: 7.0, p_s: 11.2, c_p: 21.0, p_p: 33.2 };
+
+    b.row(
+        "bare phi=3 mu=1.2",
+        format!("{:.2}x / {:.2}x", bare.cost_ratio(3.0), bare.power_ratio(3.0, 1.2)),
+        "paper: 2.3x cheaper, 3.1x less energy (§4)",
+    );
+    b.row(
+        "pcie phi=1 mu=1.0",
+        format!("{:.2}x / {:.2}x", pcie.cost_ratio(1.0), pcie.power_ratio(1.0, 1.0)),
+        "paper: 1.27x / 1.3x (§4)",
+    );
+    b.row(
+        "pcie phi=2 mu=0.9",
+        format!("{:.2}x / {:.2}x", pcie.cost_ratio(2.0), pcie.power_ratio(2.0, 0.9)),
+        "paper: 1.22x / 1.4x (§4)",
+    );
+    b.row(
+        "bigquery phi=2 mu=1.22",
+        format!("{:.2}x / {:.2}x", lite.cost_ratio(2.0), lite.power_ratio(2.0, 1.22)),
+        "paper: 3.5x / 4.58x (§5.2)",
+    );
+    b.row(
+        "bigquery phi=3 mu=0.81",
+        format!("{:.2}x / {:.2}x", lite.cost_ratio(3.0), lite.power_ratio(3.0, 0.81)),
+        "paper: 2.33x / 4.58x (§5.2)",
+    );
+    b.row(
+        "fabric c_f=0.7 phi=2",
+        format!("{:.2}x", lite.cost_ratio_with_fabric(2.0, 0.7)),
+        "paper: 2.26x (§5.2)",
+    );
+    b.row(
+        "fabric c_f=0.7 phi=3",
+        format!("{:.2}x", lite.cost_ratio_with_fabric(3.0, 0.7)),
+        "paper: 1.51x (§5.2)",
+    );
+    b.row(
+        "fabric speed @ mu=1.22",
+        format!("{:.2}x", lite.required_fabric_speed(1.22)),
+        "paper: fabric may be ~19% slower (§5.2)",
+    );
+    b.row(
+        "fabric speed @ mu=0.81",
+        format!("{:.2}x", lite.required_fabric_speed(0.81)),
+        "paper: fabric must be ~23% faster (§5.2)",
+    );
+    b.row(
+        "llm training phi=1",
+        format!("{:.2}x / {:.2}x", s53.cost_ratio(1.0), s53.power_ratio(1.0, 1.0)),
+        "paper: 1.27x / 1.30x (§5.3)",
+    );
+    b.row(
+        "gnn phi=2 mu=0.9",
+        format!("{:.2}x / {:.2}x", pcie.cost_ratio(2.0), pcie.power_ratio(2.0, 0.9)),
+        "paper: 1.22x / 1.4x (§5.3)",
+    );
+
+    // φ × μ sweep (the design space the knobs expose).
+    let scenarios: Vec<Scenario> = [1.0, 2.0, 3.0, 4.0]
+        .iter()
+        .flat_map(|&phi| [0.8, 1.0, 1.2].iter().map(move |&mu| Scenario { phi, mu }))
+        .collect();
+    for (s, c, p) in sweep(&bare, &scenarios) {
+        b.row(
+            &format!("sweep phi={} mu={}", s.phi, s.mu),
+            format!("{c:.2}x / {p:.2}x"),
+            "bare cluster Eq.1 / Eq.2",
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,73 @@
+//! Bench `fig3` — regenerates Figure 3: per-core TPC-H performance when
+//! every hardware thread runs an independent query, on IPU E2000 vs AMD
+//! Milan vs Intel Skylake.
+//!
+//! Pipeline: generate TPC-H data → run each query on the real engine
+//! (timed, warm) → feed the measured demand profile into the
+//! memory-contention model per platform. Prints, per query: normalized
+//! per-core performance (1-core and all-core, E2000-1-core = 1.0) plus
+//! the whole-system ratios the paper quotes.
+
+use lovelock::analytics::profile::profile_query_warm;
+use lovelock::analytics::{TpchConfig, TpchDb, QUERY_NAMES};
+use lovelock::benchkit::Bench;
+use lovelock::memsim::{full_occupancy, simulate, system_ratio};
+use lovelock::platform::{ipu_e2000, n2d_milan, skylake_fig3};
+
+fn main() {
+    let sf = std::env::var("LOVELOCK_FIG3_SF")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.02);
+    let db = TpchDb::generate(TpchConfig::new(sf, 2026));
+    let e2000 = ipu_e2000();
+    let milan = n2d_milan();
+    let sky = skylake_fig3();
+
+    let mut b = Bench::new(&format!(
+        "Figure 3 — per-core perf under full occupancy (profiled at SF {sf}, scaled to SF 1)"
+    ));
+    let mut milan_ratios = Vec::new();
+    let mut sky_ratios = Vec::new();
+    for q in QUERY_NAMES {
+        let p = profile_query_warm(&db, q, 1.0, 3).unwrap();
+        let w = p.workload();
+        // Normalized per-core performance (E2000 single-core = 1).
+        let base = simulate(&e2000, &w, 1).per_core_rate;
+        let rows = [
+            ("e2000", full_occupancy(&e2000, &w)),
+            ("milan", full_occupancy(&milan, &w)),
+            ("skylake", full_occupancy(&sky, &w)),
+        ];
+        for (name, r) in rows {
+            b.row(
+                &format!("{q}/{name}"),
+                format!("{:.2}", r.per_core_rate / base),
+                format!(
+                    "drop {:.0}% {}",
+                    r.slowdown_frac * 100.0,
+                    if r.memory_bound { "(mem-bound)" } else { "(cpu-bound)" }
+                ),
+            );
+        }
+        milan_ratios.push(system_ratio(&milan, &e2000, &w));
+        sky_ratios.push(system_ratio(&sky, &e2000, &w));
+    }
+    let summary = |xs: &mut Vec<f64>| {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (xs[0], xs[xs.len() - 1], xs[xs.len() / 2])
+    };
+    let (mlo, mhi, mmed) = summary(&mut milan_ratios);
+    b.row(
+        "milan whole-system ratio",
+        format!("{mlo:.1}-{mhi:.1}x (median {mmed:.1})"),
+        "paper: 1.9-9.2x (median 4.7)",
+    );
+    let (slo, shi, smed) = summary(&mut sky_ratios);
+    b.row(
+        "skylake whole-system ratio",
+        format!("{slo:.1}-{shi:.1}x (median {smed:.1})"),
+        "paper: 2.1-4.5x (median 3.6)",
+    );
+    b.finish();
+}

@@ -1,0 +1,76 @@
+//! Bench `fig4` — regenerates Figure 4: BigQuery execution-time
+//! projection under Lovelock, two ways:
+//!
+//! 1. the paper's arithmetic ([19] breakdown × Fig. 3 CPU ratio), and
+//! 2. an end-to-end validation: the distributed q18 shuffle job measured
+//!    on simulated traditional vs Lovelock clusters.
+
+use lovelock::analytics::{TpchConfig, TpchDb};
+use lovelock::benchkit::Bench;
+use lovelock::bigquery::{cost_energy_for, figure4, project, Breakdown};
+use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::coordinator::DistributedQuery;
+use lovelock::platform::n2d_milan;
+
+fn main() {
+    let mut b = Bench::new("Figure 4 — BigQuery projection (normalized to baseline = 1.0)");
+    let br = Breakdown::isca23();
+    for p in figure4(&br, &[2.0, 3.0], 4.7) {
+        let label = if p.phi == 0.0 { "baseline".to_string() } else { format!("lovelock phi={}", p.phi) };
+        let paper = if p.phi == 2.0 {
+            " | paper mu=1.22"
+        } else if p.phi == 3.0 {
+            " | paper mu=0.81"
+        } else {
+            " | paper 1.00"
+        };
+        b.row(
+            &label,
+            format!("{:.2}", p.mu()),
+            format!(
+                "cpu {:.2} + shuffle {:.2} + io {:.2}{paper}",
+                p.cpu, p.shuffle, p.storage_io
+            ),
+        );
+    }
+    for (phi, paper_cost, paper_energy) in [(2.0, 3.5, 4.58), (3.0, 2.33, 4.58)] {
+        let mu = project(&br, phi, 4.7).mu();
+        let (c, e) = cost_energy_for(phi, mu);
+        b.row(
+            &format!("cost/energy phi={phi}"),
+            format!("{c:.2}x / {e:.2}x"),
+            format!("paper {paper_cost:.2}x / {paper_energy:.2}x"),
+        );
+    }
+
+    // End-to-end validation on the simulated clusters.
+    let db = TpchDb::generate(TpchConfig::new(0.02, 4242));
+    let trad = ClusterSpec::traditional(8, n2d_milan(), Role::LiteCompute);
+    let rt = DistributedQuery::new(trad.clone()).run(&db, "q18").unwrap();
+    let base = rt.total_secs();
+    b.row(
+        "e2e q18 traditional",
+        "1.00".to_string(),
+        format!(
+            "cpu {:.0}% shuffle {:.0}% io {:.0}%",
+            rt.breakdown().0 * 100.0,
+            rt.breakdown().1 * 100.0,
+            rt.breakdown().2 * 100.0
+        ),
+    );
+    for phi in [1u32, 2, 3] {
+        let love = ClusterSpec::lovelock_e2000(&trad, phi);
+        let rl = DistributedQuery::new(love).run(&db, "q18").unwrap();
+        b.row(
+            &format!("e2e q18 lovelock phi={phi}"),
+            format!("{:.2}", rl.total_secs() / base),
+            format!(
+                "cpu {:.3}s net {:.3}s (trad net {:.3}s)",
+                rl.compute_secs,
+                rl.shuffle_secs + rl.io_secs,
+                rt.shuffle_secs + rt.io_secs
+            ),
+        );
+    }
+    b.finish();
+}

@@ -1,0 +1,49 @@
+//! Bench `gnn` — §5.3's GNN input-pipeline analysis: the BGL numbers
+//! (8xV100 compute 400 mb/s, 100 Gbps feeds ~60), Lovelock φ sweeps, the
+//! cache ablation, and the generic stall-amortization claim.
+
+use lovelock::benchkit::Bench;
+use lovelock::gnn::{bandwidth_speedup, GnnHost, LovelockGnn};
+
+fn main() {
+    let mut b = Bench::new("GNN input pipeline (BGL workload, §5.3)");
+    let base = GnnHost::bgl_server();
+    b.row(
+        "server compute ceiling",
+        format!("{:.0} mb/s", base.compute_rate()),
+        "paper: 8 V100 compute 400 mini-batches/s",
+    );
+    b.row(
+        "server network ceiling",
+        format!("{:.1} mb/s", base.network_rate()),
+        "paper: shared 100 Gbps allows only ~60",
+    );
+    b.row(
+        "server GPU stall",
+        format!("{:.0}%", base.stall_fraction() * 100.0),
+        "accelerators idle waiting on fetches",
+    );
+    for phi in [1u32, 2, 4, 8] {
+        let l = LovelockGnn { phi, nic_gbps_each: 200.0, base };
+        b.row(
+            &format!("lovelock phi={phi} (200G each)"),
+            format!("{:.0} mb/s", l.achieved_rate()),
+            format!("{:.1}x vs server", l.speedup_vs_server()),
+        );
+    }
+    for hit in [0.0, 0.5, 0.8] {
+        let mut h = base;
+        h.cache_hit = hit;
+        b.row(
+            &format!("feature cache hit={hit}"),
+            format!("{:.0} mb/s", h.achieved_rate()),
+            format!("stall {:.0}%", h.stall_fraction() * 100.0),
+        );
+    }
+    b.row(
+        "2x bw @ 20% stalls",
+        format!("{:.3}x", bandwidth_speedup(0.20, 2.0)),
+        "paper: 'providing 2x of bandwidth can easily bring 10% speedup'",
+    );
+    b.finish();
+}

@@ -1,0 +1,82 @@
+//! Bench `hotpath` — microbenchmarks of the engine and coordinator hot
+//! paths, used by the §Perf optimization loop (EXPERIMENTS.md §Perf).
+
+use lovelock::analytics::ops::{all_rows, filter_i32_range, hash_join, ExecStats, GroupBy, JoinMap};
+use lovelock::analytics::{run_query, TpchConfig, TpchDb, QUERY_NAMES};
+use lovelock::benchkit::{black_box, Bench};
+use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::coordinator::DistributedQuery;
+use lovelock::platform::n2d_milan;
+use lovelock::prng::Pcg64;
+use lovelock::simnet::{Simulation, Topology};
+
+fn main() {
+    let mut b = Bench::new("hot paths");
+    let db = TpchDb::generate(TpchConfig::new(0.02, 9));
+    let li_rows = db.lineitem.len() as u64;
+
+    // Full single-node queries (engine end to end).
+    for q in QUERY_NAMES {
+        let bytes = run_query(&db, q).unwrap().stats.bytes_scanned;
+        b.measure_throughput(&format!("query {q}"), bytes, || {
+            black_box(run_query(&db, q).unwrap());
+        });
+    }
+
+    // Operator microbenches.
+    let ship = db.lineitem.col("l_shipdate").as_i32().to_vec();
+    let sel = all_rows(ship.len());
+    b.measure_throughput("filter_i32_range", li_rows * 4, || {
+        black_box(filter_i32_range(&sel, &ship, 8766, 9131));
+    });
+
+    let mut rng = Pcg64::seed_from_u64(5);
+    let build_keys: Vec<i64> = (0..200_000).map(|_| rng.gen_range_i64(0, 1 << 20)).collect();
+    let probe_keys: Vec<i64> = (0..400_000).map(|_| rng.gen_range_i64(0, 1 << 20)).collect();
+    let bsel = all_rows(build_keys.len());
+    let psel = all_rows(probe_keys.len());
+    b.measure_throughput("join build 200k", (build_keys.len() * 8) as u64, || {
+        black_box(JoinMap::build(&build_keys, &bsel));
+    });
+    b.measure_throughput("hash_join 200k/400k", ((build_keys.len() + probe_keys.len()) * 8) as u64, || {
+        let mut stats = ExecStats::default();
+        black_box(hash_join(&build_keys, &bsel, &probe_keys, &psel, &mut stats));
+    });
+
+    let agg_keys: Vec<i64> = (0..500_000).map(|_| rng.gen_range_i64(0, 4096)).collect();
+    b.measure_throughput("groupby 500k/4096g", (agg_keys.len() * 8) as u64, || {
+        let mut g: GroupBy<2> = GroupBy::with_capacity(4096);
+        for &k in &agg_keys {
+            g.update(k, [1.0, 2.0]);
+        }
+        black_box(g.groups.len());
+    });
+
+    // Fabric simulator: a 64-node all-to-all shuffle.
+    b.measure("simnet 64-node all-to-all", || {
+        let mut sim = Simulation::new(Topology::new(4, 16, 100.0, 800.0));
+        for s in 0..64usize {
+            for d in 0..64usize {
+                if s != d {
+                    sim.add_flow(s, d, 1e7, 0.0);
+                }
+            }
+        }
+        black_box(sim.run_makespan());
+    });
+
+    // Distributed query end to end (compute + codec + sim).
+    let cluster = ClusterSpec::traditional(8, n2d_milan(), Role::LiteCompute);
+    b.measure("distributed q1 (8 workers)", || {
+        black_box(DistributedQuery::new(cluster.clone()).run(&db, "q1").unwrap());
+    });
+    b.measure("distributed q18 (8 workers)", || {
+        black_box(DistributedQuery::new(cluster.clone()).run(&db, "q18").unwrap());
+    });
+
+    // dbgen throughput.
+    b.measure("dbgen sf=0.01", || {
+        black_box(TpchDb::generate(TpchConfig::new(0.01, 1)));
+    });
+    b.finish();
+}

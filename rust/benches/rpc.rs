@@ -1,0 +1,60 @@
+//! Bench `rpc` — §6's networking/RPC claims: eRPC calibration points, the
+//! E2000 single-ARM-core model, and *measured* per-core message rate and
+//! large-message goodput of our in-process RPC transport.
+
+use lovelock::benchkit::{black_box, Bench};
+use lovelock::rpc::{Endpoint, Handler, RpcModel};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("RPC per-core throughput (§6)");
+
+    // Model rows.
+    let x86 = RpcModel::erpc_x86();
+    let arm = RpcModel::e2000_arm();
+    b.row(
+        "erpc x86 small msgs",
+        format!("{:.1} M/s", x86.msgs_per_sec(32.0) / 1e6),
+        "paper/eRPC: ~10M small RPCs per second per core",
+    );
+    b.row(
+        "erpc x86 1MB goodput",
+        format!("{:.0} Gbps", x86.gbps(1e6)),
+        "paper/eRPC: ~75 Gbps with large messages",
+    );
+    b.row(
+        "e2000 arm 1MB goodput",
+        format!("{:.0} Gbps", arm.gbps(1e6)),
+        "paper: single ARM core sustains over 25 Gbps",
+    );
+    for size in [64.0, 4096.0, 65536.0, 1e6] {
+        b.row(
+            &format!("e2000 arm @ {size:.0}B"),
+            format!("{:.2} Gbps", arm.gbps(size)),
+            format!("{:.2} M msgs/s", arm.msgs_per_sec(size) / 1e6),
+        );
+    }
+    b.row(
+        "arm cores for 200G line rate",
+        format!("{:.1}", arm.cores_for(200.0, 1e6)),
+        "of the E2000's 16 cores, at 1MB messages",
+    );
+
+    // Measured rows: our in-process transport (single dispatch core).
+    let mut handlers: HashMap<u32, Handler> = HashMap::new();
+    handlers.insert(1, Arc::new(|m: &lovelock::rpc::Message| m.payload[..8.min(m.payload.len())].to_vec()));
+    let ep = Endpoint::serve(handlers);
+    let client = ep.client();
+
+    let small = vec![7u8; 32];
+    b.measure("measured small rpc", || {
+        black_box(client.call(1, small.clone()).unwrap());
+    });
+    let big = vec![7u8; 1 << 20];
+    let bytes = big.len() as u64;
+    b.measure_throughput("measured 1MB rpc goodput", bytes, || {
+        black_box(client.call(1, big.clone()).unwrap());
+    });
+    b.finish();
+}

@@ -1,0 +1,34 @@
+//! Bench `table1` — regenerates Table 1: network and DRAM bandwidth per
+//! core across cloud hosts and smart NICs, from the platform catalog.
+
+use lovelock::benchkit::Bench;
+use lovelock::platform::table1_platforms;
+
+fn main() {
+    let mut b = Bench::new("Table 1 — bandwidth per vCPU (paper values in parentheses)");
+    let paper_nic = [0.13, 0.06, 0.20, 0.14, 0.13, 1.56, 3.13];
+    let paper_dram = [2.67, 1.83, 3.20, 3.49, 2.40, 6.40, 5.60];
+    for (i, p) in table1_platforms().iter().enumerate() {
+        b.row(
+            &format!("{} nic/core", p.name),
+            format!("{:.2} GB/s", p.nic_gbs_per_core()),
+            format!("paper {:.2} GB/s | {} vcpus, {:.0}G NIC", paper_nic[i], p.vcpus, p.nic_gbps),
+        );
+        b.row(
+            &format!("{} dram/core", p.name),
+            format!("{:.2} GB/s", p.dram_gbs_per_core()),
+            format!(
+                "paper {:.2} GB/s | {}ch x {:.0} MT/s",
+                paper_dram[i], p.mem_channels, p.mem_mtps
+            ),
+        );
+    }
+    // The §6 BlueField observation.
+    let bf = lovelock::platform::bluefield_v3();
+    b.row(
+        "bluefield dram/nic ratio",
+        format!("{:.2}x", bf.dram_gbs() / bf.nic_gbs()),
+        "paper: ~1.8x (cannot process at line rate)",
+    );
+    b.finish();
+}

@@ -1,0 +1,76 @@
+//! Bench `table2` — regenerates Table 2: host CPU and DRAM use during
+//! distributed LLM training (GLaM 1B–39B on 8 hosts × 4 accelerators),
+//! plus the §5.3 checkpoint-chunking ablation and, when artifacts are
+//! built, a *measured* row from the real PJRT training driver.
+
+use lovelock::benchkit::Bench;
+use lovelock::runtime::artifacts_available;
+use lovelock::training::driver::TrainDriver;
+use lovelock::training::hostmodel::{CheckpointPolicy, GlamModel, TrainSetup};
+
+fn main() {
+    let mut b = Bench::new("Table 2 — host CPU/DRAM during training (8 hosts x 4 accels)");
+    let setup = TrainSetup::default();
+    let paper = [
+        ("GLaM1B", 4.8, 8.9, 0.2, 0.8, 3.4, 5.0),
+        ("GLaM4B", 3.8, 6.2, 0.4, 1.8, 3.8, 6.5),
+        ("GLaM17B", 3.4, 10.2, 2.0, 8.1, 4.2, 17.8),
+        ("GLaM39B", 2.1, 13.3, 4.5, 18.2, 4.7, 35.7),
+    ];
+    for (m, p) in GlamModel::table2_models().iter().zip(paper.iter()) {
+        let u = setup.host_usage(m);
+        b.row(
+            &format!("{} cpu mean/peak", m.name),
+            format!("{:.1}% / {:.1}%", u.mean_cpu_frac * 100.0, u.peak_cpu_frac * 100.0),
+            format!("paper {:.1}% / {:.1}%", p.1, p.2),
+        );
+        b.row(
+            &format!("{} state accel/host", m.name),
+            format!("{:.1} / {:.1} GB", u.state_per_accel / 1e9, u.state_per_host / 1e9),
+            format!("paper {:.1} / {:.1} GB", p.3, p.4),
+        );
+        b.row(
+            &format!("{} mem mean/max", m.name),
+            format!("{:.1} / {:.1} GB", u.mean_mem / 1e9, u.max_mem / 1e9),
+            format!("paper {:.1} / {:.1} GB", p.5, p.6),
+        );
+    }
+
+    // §5.3 ablation: chunked-stream checkpointing caps the peak.
+    let chunked = TrainSetup {
+        policy: CheckpointPolicy::ChunkedStream { chunk_bytes: 256 << 20 },
+        ..setup
+    };
+    for m in [GlamModel::glam_17b(), GlamModel::glam_39b()] {
+        let mono = setup.host_usage(&m).max_mem / 1e9;
+        let chk = chunked.host_usage(&m).max_mem / 1e9;
+        b.row(
+            &format!("{} max mem, chunked ckpt", m.name),
+            format!("{chk:.1} GB"),
+            format!("monolithic {mono:.1} GB — paper's §5.3 proposal"),
+        );
+        b.row(
+            &format!("{} accels per E2000 (48GB)", m.name),
+            format!("{}", chunked.accels_per_e2000(&m, 48e9)),
+            "paper: each E2000 can drive 2-4 accelerators",
+        );
+    }
+
+    // Measured: the real AOT training loop's host-vs-device split.
+    if artifacts_available() {
+        if let Ok(mut driver) = TrainDriver::load("tiny", 11) {
+            driver.init(11).unwrap();
+            driver.run(30, 0).unwrap();
+            let acc = driver.accounting;
+            b.row(
+                "measured tiny driver host-cpu",
+                format!("{:.1}%", acc.host_cpu_frac() * 100.0),
+                format!(
+                    "host {:.3}s vs device {:.3}s over {} steps (PJRT)",
+                    acc.host_secs, acc.device_secs, acc.steps
+                ),
+            );
+        }
+    }
+    b.finish();
+}

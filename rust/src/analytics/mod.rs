@@ -1,0 +1,19 @@
+//! The analytics engine: TPC-H data generation, columnar storage,
+//! vectorized operators, the Figure-3 query set, and workload profiling.
+//!
+//! This is the substrate for §5.1/§5.2 of the paper: a real (if compact)
+//! analytics execution engine whose measured per-query behaviour — bytes
+//! touched, hash-table footprints, CPU seconds — feeds the
+//! memory-bandwidth contention model ([`crate::memsim`]) and the
+//! distributed shuffle workloads ([`crate::coordinator`]).
+
+pub mod column;
+pub mod ops;
+pub mod profile;
+pub mod queries;
+pub mod tpch;
+
+pub use column::{Column, Table};
+pub use profile::{profile_query, QueryProfile};
+pub use queries::{run_query, QueryOutput, QUERY_NAMES};
+pub use tpch::{TpchConfig, TpchDb};

@@ -1,0 +1,114 @@
+//! TPC-H query implementations — the analytics workloads of Figure 3.
+//!
+//! Each query module provides a vectorized implementation over the
+//! columnar engine plus an independent row-at-a-time *oracle*
+//! (`naive_*`), and the test compares the two on generated data. Every
+//! run returns a [`QueryOutput`] with [`ExecStats`] feeding the
+//! memory-contention model.
+
+pub mod q1;
+pub mod q12;
+pub mod q14;
+pub mod q18;
+pub mod q19;
+pub mod q3;
+pub mod q5;
+pub mod q6;
+pub mod q9;
+
+use super::ops::ExecStats;
+use super::tpch::TpchDb;
+
+/// A result cell.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            Value::Int(i) => *i as f64,
+            Value::Float(f) => *f,
+            Value::Str(_) => panic!("string cell"),
+        }
+    }
+
+    /// Approximate equality (floats within relative 1e-9).
+    pub fn approx_eq(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Int(a), Value::Int(b)) => a == b,
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (a, b) => {
+                let (x, y) = (a.as_f64(), b.as_f64());
+                (x - y).abs() <= 1e-9 * x.abs().max(y.abs()).max(1.0)
+            }
+        }
+    }
+}
+
+pub type Row = Vec<Value>;
+
+/// Output of one query execution.
+#[derive(Clone, Debug, Default)]
+pub struct QueryOutput {
+    pub rows: Vec<Row>,
+    pub stats: ExecStats,
+}
+
+impl QueryOutput {
+    pub fn approx_eq_rows(&self, other: &[Row]) -> bool {
+        self.rows.len() == other.len()
+            && self
+                .rows
+                .iter()
+                .zip(other.iter())
+                .all(|(a, b)| a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.approx_eq(y)))
+    }
+}
+
+/// Names of all implemented queries, Figure-3 order.
+pub const QUERY_NAMES: [&str; 9] = ["q1", "q3", "q5", "q6", "q9", "q12", "q14", "q18", "q19"];
+
+/// Run a query by name.
+pub fn run_query(db: &TpchDb, name: &str) -> Option<QueryOutput> {
+    match name {
+        "q1" => Some(q1::run(db)),
+        "q3" => Some(q3::run(db)),
+        "q5" => Some(q5::run(db)),
+        "q6" => Some(q6::run(db)),
+        "q9" => Some(q9::run(db)),
+        "q12" => Some(q12::run(db)),
+        "q14" => Some(q14::run(db)),
+        "q18" => Some(q18::run(db)),
+        "q19" => Some(q19::run(db)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::tpch::TpchConfig;
+
+    #[test]
+    fn registry_runs_all() {
+        let db = TpchDb::generate(TpchConfig::new(0.001, 3));
+        for name in QUERY_NAMES {
+            let out = run_query(&db, name).unwrap_or_else(|| panic!("{name} missing"));
+            assert!(out.stats.bytes_scanned > 0, "{name} reported no scan bytes");
+        }
+        assert!(run_query(&db, "q99").is_none());
+    }
+
+    #[test]
+    fn value_approx_eq() {
+        assert!(Value::Int(3).approx_eq(&Value::Int(3)));
+        assert!(Value::Float(1.0).approx_eq(&Value::Float(1.0 + 1e-12)));
+        assert!(!Value::Float(1.0).approx_eq(&Value::Float(1.01)));
+        assert!(Value::Str("x".into()).approx_eq(&Value::Str("x".into())));
+        assert!(Value::Int(2).approx_eq(&Value::Float(2.0)));
+    }
+}

@@ -1,0 +1,166 @@
+//! TPC-H Q1 — pricing summary report.
+//!
+//! Full scan of `lineitem` with a date filter and a tiny group-by
+//! (returnflag × linestatus). The most memory-bandwidth-hungry query of
+//! the set: it touches seven wide columns end to end.
+
+use crate::analytics::column::date_to_days;
+use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats, GroupBy};
+use crate::analytics::queries::{QueryOutput, Row, Value};
+use crate::analytics::tpch::TpchDb;
+
+/// Cutoff: shipdate <= 1998-12-01 - 90 days = 1998-09-02.
+fn cutoff() -> i32 {
+    date_to_days(1998, 12, 1) - 90
+}
+
+pub fn run(db: &TpchDb) -> QueryOutput {
+    let li = &db.lineitem;
+    let n = li.len();
+    let mut stats = ExecStats::default();
+
+    let ship = li.col("l_shipdate").as_i32();
+    stats.scan(n, 4);
+    let sel = filter_i32_range(&all_rows(n), ship, i32::MIN, cutoff() + 1);
+
+    let qty = li.col("l_quantity").as_f64();
+    let price = li.col("l_extendedprice").as_f64();
+    let disc = li.col("l_discount").as_f64();
+    let tax = li.col("l_tax").as_f64();
+    let rf = li.col("l_returnflag").as_u8();
+    let ls = li.col("l_linestatus").as_u8();
+    stats.scan(sel.len(), 8 * 4 + 2);
+
+    // Accumulators: qty, price, disc_price, charge, discount.
+    let mut g: GroupBy<5> = GroupBy::with_capacity(8);
+    for &i in &sel {
+        let i = i as usize;
+        let dp = price[i] * (1.0 - disc[i]);
+        let key = ((rf[i] as i64) << 8) | ls[i] as i64;
+        g.update(key, [qty[i], price[i], dp, dp * (1.0 + tax[i]), disc[i]]);
+    }
+    stats.ht_bytes += g.bytes();
+    stats.rows_out += g.groups.len() as u64;
+
+    let mut rows: Vec<Row> = g
+        .groups
+        .iter()
+        .map(|(key, s, cnt)| {
+            let c = *cnt as f64;
+            vec![
+                Value::Str(((key >> 8) as u8 as char).to_string()),
+                Value::Str(((key & 0xff) as u8 as char).to_string()),
+                Value::Float(s[0]),
+                Value::Float(s[1]),
+                Value::Float(s[2]),
+                Value::Float(s[3]),
+                Value::Float(s[0] / c),
+                Value::Float(s[1] / c),
+                Value::Float(s[4] / c),
+                Value::Int(*cnt as i64),
+            ]
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        let ka = (str_of(&a[0]), str_of(&a[1]));
+        let kb = (str_of(&b[0]), str_of(&b[1]));
+        ka.cmp(&kb)
+    });
+    QueryOutput { rows, stats }
+}
+
+fn str_of(v: &Value) -> String {
+    match v {
+        Value::Str(s) => s.clone(),
+        _ => unreachable!(),
+    }
+}
+
+/// Row-at-a-time oracle.
+pub fn naive(db: &TpchDb) -> Vec<Row> {
+    use std::collections::BTreeMap;
+    let li = &db.lineitem;
+    let ship = li.col("l_shipdate").as_i32();
+    let qty = li.col("l_quantity").as_f64();
+    let price = li.col("l_extendedprice").as_f64();
+    let disc = li.col("l_discount").as_f64();
+    let tax = li.col("l_tax").as_f64();
+    let rf = li.col("l_returnflag").as_u8();
+    let ls = li.col("l_linestatus").as_u8();
+    let mut groups: BTreeMap<(char, char), (f64, f64, f64, f64, f64, u64)> = BTreeMap::new();
+    for i in 0..li.len() {
+        if ship[i] > cutoff() {
+            continue;
+        }
+        let e = groups
+            .entry((rf[i] as char, ls[i] as char))
+            .or_insert((0.0, 0.0, 0.0, 0.0, 0.0, 0));
+        let dp = price[i] * (1.0 - disc[i]);
+        e.0 += qty[i];
+        e.1 += price[i];
+        e.2 += dp;
+        e.3 += dp * (1.0 + tax[i]);
+        e.4 += disc[i];
+        e.5 += 1;
+    }
+    groups
+        .into_iter()
+        .map(|((f, s), (q, p, d, c, di, n))| {
+            vec![
+                Value::Str(f.to_string()),
+                Value::Str(s.to_string()),
+                Value::Float(q),
+                Value::Float(p),
+                Value::Float(d),
+                Value::Float(c),
+                Value::Float(q / n as f64),
+                Value::Float(p / n as f64),
+                Value::Float(di / n as f64),
+                Value::Int(n as i64),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::tpch::TpchConfig;
+
+    #[test]
+    fn matches_oracle() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 11));
+        let out = run(&db);
+        let oracle = naive(&db);
+        assert!(!out.rows.is_empty());
+        assert!(
+            out.approx_eq_rows(&oracle),
+            "vectorized:\n{:?}\noracle:\n{:?}",
+            out.rows,
+            oracle
+        );
+    }
+
+    #[test]
+    fn has_expected_groups() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 5));
+        let out = run(&db);
+        // Groups: (A,F), (N,F), (N,O), (R,F) — the classic Q1 output.
+        assert!(out.rows.len() >= 3 && out.rows.len() <= 4, "groups={}", out.rows.len());
+        // Counts must sum to the number of selected rows.
+        let total: i64 = out.rows.iter().map(|r| match r[9] {
+            Value::Int(n) => n,
+            _ => 0,
+        }).sum();
+        assert!(total > 0 && (total as usize) <= db.lineitem.len());
+    }
+
+    #[test]
+    fn stats_reflect_full_scan() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 5));
+        let out = run(&db);
+        // At least the shipdate column (4 B/row) must be scanned fully.
+        assert!(out.stats.bytes_scanned >= 4 * db.lineitem.len() as u64);
+        assert!(out.stats.ht_bytes > 0);
+    }
+}

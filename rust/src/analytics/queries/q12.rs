@@ -1,0 +1,143 @@
+//! TPC-H Q12 — shipping modes and order priority.
+//!
+//! Lineitem date-consistency filters + shipmode IN-list, joined to orders,
+//! counting high/low-priority orders per mode.
+
+use crate::analytics::column::date_to_days;
+use crate::analytics::ops::{all_rows, ExecStats};
+use crate::analytics::queries::{QueryOutput, Row, Value};
+use crate::analytics::tpch::TpchDb;
+
+const MODES: [&str; 2] = ["MAIL", "SHIP"];
+
+fn window() -> (i32, i32) {
+    (date_to_days(1994, 1, 1), date_to_days(1995, 1, 1))
+}
+
+fn is_high(priority: &str) -> bool {
+    priority == "1-URGENT" || priority == "2-HIGH"
+}
+
+pub fn run(db: &TpchDb) -> QueryOutput {
+    let mut stats = ExecStats::default();
+    let (lo, hi) = window();
+    let li = &db.lineitem;
+    let n = li.len();
+
+    let (mode_dict, mode_codes) = li.col("l_shipmode").as_str_codes();
+    let target_codes: Vec<u32> = MODES
+        .iter()
+        .filter_map(|m| mode_dict.iter().position(|d| d == m).map(|i| i as u32))
+        .collect();
+    let ship = li.col("l_shipdate").as_i32();
+    let commit = li.col("l_commitdate").as_i32();
+    let receipt = li.col("l_receiptdate").as_i32();
+    stats.scan(n, 4 * 4);
+
+    let sel: Vec<u32> = all_rows(n)
+        .into_iter()
+        .filter(|&i| {
+            let i = i as usize;
+            target_codes.contains(&mode_codes[i])
+                && receipt[i] >= lo
+                && receipt[i] < hi
+                && commit[i] < receipt[i]
+                && ship[i] < commit[i]
+        })
+        .collect();
+
+    // orders side: priority via dense orderkey index.
+    let orders = &db.orders;
+    let (prio_dict, prio_codes) = orders.col("o_orderpriority").as_str_codes();
+    let high_code: Vec<bool> = prio_dict.iter().map(|p| is_high(p)).collect();
+    let lok = li.col("l_orderkey").as_i64();
+    stats.scan(sel.len(), 12);
+
+    // mode code → (high, low)
+    let mut counts: std::collections::BTreeMap<String, (i64, i64)> = Default::default();
+    for &i in &sel {
+        let i = i as usize;
+        let orow = (lok[i] - 1) as usize;
+        let mode = &mode_dict[mode_codes[i] as usize];
+        let e = counts.entry(mode.clone()).or_insert((0, 0));
+        if high_code[prio_codes[orow] as usize] {
+            e.0 += 1;
+        } else {
+            e.1 += 1;
+        }
+    }
+    stats.rows_out = counts.len() as u64;
+
+    let rows = counts
+        .into_iter()
+        .map(|(m, (h, l))| vec![Value::Str(m), Value::Int(h), Value::Int(l)])
+        .collect();
+    QueryOutput { rows, stats }
+}
+
+/// Row-at-a-time oracle.
+pub fn naive(db: &TpchDb) -> Vec<Row> {
+    let (lo, hi) = window();
+    let li = &db.lineitem;
+    let orders = &db.orders;
+    let mut counts: std::collections::BTreeMap<String, (i64, i64)> = Default::default();
+    for i in 0..li.len() {
+        let mode = li.col("l_shipmode").str_at(i);
+        if !MODES.contains(&mode) {
+            continue;
+        }
+        let r = li.col("l_receiptdate").as_i32()[i];
+        let c = li.col("l_commitdate").as_i32()[i];
+        let s = li.col("l_shipdate").as_i32()[i];
+        if !(r >= lo && r < hi && c < r && s < c) {
+            continue;
+        }
+        let ok = li.col("l_orderkey").as_i64()[i];
+        let prio = orders.col("o_orderpriority").str_at((ok - 1) as usize);
+        let e = counts.entry(mode.to_string()).or_insert((0, 0));
+        if is_high(prio) {
+            e.0 += 1;
+        } else {
+            e.1 += 1;
+        }
+    }
+    counts
+        .into_iter()
+        .map(|(m, (h, l))| vec![Value::Str(m), Value::Int(h), Value::Int(l)])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::tpch::TpchConfig;
+
+    #[test]
+    fn matches_oracle() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 47));
+        let out = run(&db);
+        let oracle = naive(&db);
+        assert!(!out.rows.is_empty());
+        assert!(out.approx_eq_rows(&oracle), "{:?} vs {oracle:?}", out.rows);
+    }
+
+    #[test]
+    fn only_target_modes() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 53));
+        for r in run(&db).rows {
+            match &r[0] {
+                Value::Str(m) => assert!(MODES.contains(&m.as_str())),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn counts_nonnegative() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 59));
+        for r in run(&db).rows {
+            assert!(matches!(r[1], Value::Int(h) if h >= 0));
+            assert!(matches!(r[2], Value::Int(l) if l >= 0));
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! TPC-H Q14 — promotion effect: share of revenue from PROMO parts in a
+//! one-month shipping window.
+
+use crate::analytics::column::date_to_days;
+use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats};
+use crate::analytics::queries::{QueryOutput, Row, Value};
+use crate::analytics::tpch::TpchDb;
+
+fn window() -> (i32, i32) {
+    (date_to_days(1995, 9, 1), date_to_days(1995, 10, 1))
+}
+
+pub fn run(db: &TpchDb) -> QueryOutput {
+    let mut stats = ExecStats::default();
+    let (lo, hi) = window();
+    let li = &db.lineitem;
+    let n = li.len();
+
+    let ship = li.col("l_shipdate").as_i32();
+    stats.scan(n, 4);
+    let sel = filter_i32_range(&all_rows(n), ship, lo, hi);
+
+    let part = &db.part;
+    let (type_dict, type_codes) = part.col("p_type").as_str_codes();
+    let promo: Vec<bool> = type_dict.iter().map(|t| t.starts_with("PROMO")).collect();
+    stats.scan(part.len(), 4);
+
+    let lpk = li.col("l_partkey").as_i64();
+    let price = li.col("l_extendedprice").as_f64();
+    let disc = li.col("l_discount").as_f64();
+    stats.scan(sel.len(), 24);
+
+    let mut promo_rev = 0.0;
+    let mut total_rev = 0.0;
+    for &i in &sel {
+        let i = i as usize;
+        let rev = price[i] * (1.0 - disc[i]);
+        total_rev += rev;
+        // partkey is dense 1..=N → direct index instead of a hash join.
+        let prow = (lpk[i] - 1) as usize;
+        if promo[type_codes[prow] as usize] {
+            promo_rev += rev;
+        }
+    }
+    stats.rows_out = 1;
+    let pct = if total_rev > 0.0 { 100.0 * promo_rev / total_rev } else { 0.0 };
+    QueryOutput { rows: vec![vec![Value::Float(pct)]], stats }
+}
+
+/// Row-at-a-time oracle.
+pub fn naive(db: &TpchDb) -> Vec<Row> {
+    let (lo, hi) = window();
+    let li = &db.lineitem;
+    let part = &db.part;
+    let mut promo = 0.0;
+    let mut total = 0.0;
+    for i in 0..li.len() {
+        let s = li.col("l_shipdate").as_i32()[i];
+        if s < lo || s >= hi {
+            continue;
+        }
+        let rev = li.col("l_extendedprice").as_f64()[i] * (1.0 - li.col("l_discount").as_f64()[i]);
+        total += rev;
+        let pk = li.col("l_partkey").as_i64()[i];
+        if part.col("p_type").str_at((pk - 1) as usize).starts_with("PROMO") {
+            promo += rev;
+        }
+    }
+    vec![vec![Value::Float(if total > 0.0 { 100.0 * promo / total } else { 0.0 })]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::tpch::TpchConfig;
+
+    #[test]
+    fn matches_oracle() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 61));
+        let out = run(&db);
+        assert!(out.approx_eq_rows(&naive(&db)));
+    }
+
+    #[test]
+    fn percentage_in_range() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 67));
+        let pct = run(&db).rows[0][0].as_f64();
+        assert!((0.0..=100.0).contains(&pct), "pct={pct}");
+        // PROMO is 1 of 6 type prefixes → expect roughly 1/6 ± slack.
+        assert!(pct > 5.0 && pct < 35.0, "pct={pct}");
+    }
+}

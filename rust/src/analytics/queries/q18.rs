@@ -1,0 +1,120 @@
+//! TPC-H Q18 — large-volume customers: orders whose total quantity
+//! exceeds a threshold, top-100 by order total price.
+//!
+//! The big-aggregation query: a full group-by over every order key.
+
+use crate::analytics::ops::{ExecStats, GroupBy};
+use crate::analytics::queries::{QueryOutput, Row, Value};
+use crate::analytics::tpch::TpchDb;
+
+const QTY_THRESHOLD: f64 = 300.0;
+const TOP: usize = 100;
+
+pub fn run(db: &TpchDb) -> QueryOutput {
+    let mut stats = ExecStats::default();
+    let li = &db.lineitem;
+    let lok = li.col("l_orderkey").as_i64();
+    let qty = li.col("l_quantity").as_f64();
+    stats.scan(li.len(), 16);
+
+    // sum(quantity) per order — the expensive aggregation.
+    let mut g: GroupBy<1> = GroupBy::with_capacity(db.orders.len());
+    for i in 0..li.len() {
+        g.update(lok[i], [qty[i]]);
+    }
+    stats.ht_bytes += g.bytes();
+
+    let orders = &db.orders;
+    let ocust = orders.col("o_custkey").as_i64();
+    let odate = orders.col("o_orderdate").as_i32();
+    let ototal = orders.col("o_totalprice").as_f64();
+    stats.scan(orders.len(), 20);
+
+    let mut big: Vec<(i64, f64)> = Vec::new(); // (orderkey, totalprice)
+    let mut qty_of: std::collections::HashMap<i64, f64> = Default::default();
+    for (ok, s, _) in &g.groups {
+        if s[0] > QTY_THRESHOLD {
+            let orow = (*ok - 1) as usize;
+            big.push((*ok, ototal[orow]));
+            qty_of.insert(*ok, s[0]);
+        }
+    }
+    crate::analytics::ops::top_k_desc(&mut big, TOP);
+    stats.rows_out = big.len() as u64;
+
+    let rows = big
+        .into_iter()
+        .map(|(ok, total)| {
+            let orow = (ok - 1) as usize;
+            vec![
+                Value::Int(ocust[orow]),
+                Value::Int(ok),
+                Value::Int(odate[orow] as i64),
+                Value::Float(total),
+                Value::Float(qty_of[&ok]),
+            ]
+        })
+        .collect();
+    QueryOutput { rows, stats }
+}
+
+/// Row-at-a-time oracle.
+pub fn naive(db: &TpchDb) -> Vec<Row> {
+    use std::collections::HashMap;
+    let li = &db.lineitem;
+    let mut sums: HashMap<i64, f64> = HashMap::new();
+    for i in 0..li.len() {
+        *sums.entry(li.col("l_orderkey").as_i64()[i]).or_insert(0.0) +=
+            li.col("l_quantity").as_f64()[i];
+    }
+    let orders = &db.orders;
+    let mut big: Vec<(i64, f64)> = sums
+        .iter()
+        .filter(|(_, q)| **q > QTY_THRESHOLD)
+        .map(|(ok, _)| (*ok, orders.col("o_totalprice").as_f64()[(*ok - 1) as usize]))
+        .collect();
+    crate::analytics::ops::top_k_desc(&mut big, TOP);
+    big.into_iter()
+        .map(|(ok, total)| {
+            let orow = (ok - 1) as usize;
+            vec![
+                Value::Int(orders.col("o_custkey").as_i64()[orow]),
+                Value::Int(ok),
+                Value::Int(orders.col("o_orderdate").as_i32()[orow] as i64),
+                Value::Float(total),
+                Value::Float(sums[&ok]),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::tpch::TpchConfig;
+
+    #[test]
+    fn matches_oracle() {
+        // Larger SF so a few orders clear the 300-quantity threshold.
+        let db = TpchDb::generate(TpchConfig::new(0.01, 71));
+        let out = run(&db);
+        let oracle = naive(&db);
+        assert!(out.approx_eq_rows(&oracle), "{} vs {} rows", out.rows.len(), oracle.len());
+    }
+
+    #[test]
+    fn all_results_exceed_threshold() {
+        let db = TpchDb::generate(TpchConfig::new(0.01, 73));
+        for r in run(&db).rows {
+            assert!(r[4].as_f64() > QTY_THRESHOLD);
+        }
+    }
+
+    #[test]
+    fn groupby_covers_every_order_with_lines() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 79));
+        let out = run(&db);
+        // The aggregation hash table must be sized like the order count.
+        assert!(out.stats.ht_bytes > db.orders.len() as u64);
+    }
+}

@@ -1,0 +1,169 @@
+//! TPC-H Q3 — shipping priority: top-10 unshipped orders by revenue.
+//!
+//! customer(BUILDING) ⋈ orders(before date) ⋈ lineitem(after date),
+//! revenue grouped by order. Exercises two hash joins and a top-k.
+
+use crate::analytics::column::date_to_days;
+use crate::analytics::ops::{all_rows, filter_code_eq, filter_i32_range, top_k_desc, ExecStats, GroupBy, JoinMap};
+use crate::analytics::queries::{QueryOutput, Row, Value};
+use crate::analytics::tpch::TpchDb;
+
+fn pivot() -> i32 {
+    date_to_days(1995, 3, 15)
+}
+
+pub fn run(db: &TpchDb) -> QueryOutput {
+    let mut stats = ExecStats::default();
+    let pivot = pivot();
+
+    // customer: mktsegment = 'BUILDING'
+    let cust = &db.customer;
+    let (_, seg_codes) = cust.col("c_mktsegment").as_str_codes();
+    stats.scan(cust.len(), 4);
+    let building = match cust.col("c_mktsegment").dict_code("BUILDING") {
+        Some(c) => c,
+        None => return QueryOutput::default(),
+    };
+    let cust_sel = filter_code_eq(&all_rows(cust.len()), seg_codes, building);
+    let custkeys = cust.col("c_custkey").as_i64();
+    stats.scan(cust_sel.len(), 8);
+
+    // orders: o_orderdate < pivot, semi-joined to BUILDING customers.
+    let orders = &db.orders;
+    let odate = orders.col("o_orderdate").as_i32();
+    stats.scan(orders.len(), 4);
+    let ord_sel = filter_i32_range(&all_rows(orders.len()), odate, i32::MIN, pivot);
+    let ocust = orders.col("o_custkey").as_i64();
+    stats.scan(ord_sel.len(), 8);
+    let cust_map = JoinMap::build(custkeys, &cust_sel);
+    stats.ht_bytes += cust_map.bytes();
+    let ord_sel: Vec<u32> = ord_sel
+        .into_iter()
+        .filter(|&o| cust_map.probe_first(ocust[o as usize]).is_some())
+        .collect();
+
+    // lineitem: l_shipdate > pivot, joined to surviving orders.
+    let li = &db.lineitem;
+    let ship = li.col("l_shipdate").as_i32();
+    stats.scan(li.len(), 4);
+    let li_sel = filter_i32_range(&all_rows(li.len()), ship, pivot + 1, i32::MAX);
+    let lok = li.col("l_orderkey").as_i64();
+    let price = li.col("l_extendedprice").as_f64();
+    let disc = li.col("l_discount").as_f64();
+    stats.scan(li_sel.len(), 8 * 3);
+
+    let okeys = orders.col("o_orderkey").as_i64();
+    let ord_map = JoinMap::build(okeys, &ord_sel);
+    stats.ht_bytes += ord_map.bytes();
+
+    let mut g: GroupBy<1> = GroupBy::with_capacity(1024);
+    let mut order_date: Vec<i32> = Vec::new();
+    for &l in &li_sel {
+        let key = lok[l as usize];
+        if let Some(orow) = ord_map.probe_first(key) {
+            let gi = g.group_index(key);
+            if gi == order_date.len() {
+                order_date.push(odate[orow as usize]);
+            }
+            let li_us = l as usize;
+            g.groups[gi].1[0] += price[li_us] * (1.0 - disc[li_us]);
+            g.groups[gi].2 += 1;
+        }
+    }
+    stats.ht_bytes += g.bytes();
+
+    let mut items: Vec<(i64, f64)> = g.groups.iter().map(|(k, s, _)| (*k, s[0])).collect();
+    let dates: std::collections::HashMap<i64, i32> = g
+        .groups
+        .iter()
+        .zip(order_date.iter())
+        .map(|((k, _, _), d)| (*k, *d))
+        .collect();
+    top_k_desc(&mut items, 10);
+    stats.rows_out = items.len() as u64;
+
+    let rows = items
+        .into_iter()
+        .map(|(k, rev)| {
+            vec![Value::Int(k), Value::Float(rev), Value::Int(dates[&k] as i64)]
+        })
+        .collect();
+    QueryOutput { rows, stats }
+}
+
+/// Row-at-a-time oracle.
+pub fn naive(db: &TpchDb) -> Vec<Row> {
+    use std::collections::{HashMap, HashSet};
+    let pivot = pivot();
+    let cust = &db.customer;
+    let mut building: HashSet<i64> = HashSet::new();
+    for i in 0..cust.len() {
+        if cust.col("c_mktsegment").str_at(i) == "BUILDING" {
+            building.insert(cust.col("c_custkey").as_i64()[i]);
+        }
+    }
+    let orders = &db.orders;
+    let mut valid_orders: HashMap<i64, i32> = HashMap::new();
+    for i in 0..orders.len() {
+        let d = orders.col("o_orderdate").as_i32()[i];
+        if d < pivot && building.contains(&orders.col("o_custkey").as_i64()[i]) {
+            valid_orders.insert(orders.col("o_orderkey").as_i64()[i], d);
+        }
+    }
+    let li = &db.lineitem;
+    let mut revenue: HashMap<i64, f64> = HashMap::new();
+    for i in 0..li.len() {
+        if li.col("l_shipdate").as_i32()[i] > pivot {
+            let ok = li.col("l_orderkey").as_i64()[i];
+            if valid_orders.contains_key(&ok) {
+                *revenue.entry(ok).or_insert(0.0) += li.col("l_extendedprice").as_f64()[i]
+                    * (1.0 - li.col("l_discount").as_f64()[i]);
+            }
+        }
+    }
+    let mut items: Vec<(i64, f64)> = revenue.into_iter().collect();
+    top_k_desc(&mut items, 10);
+    items
+        .into_iter()
+        .map(|(k, r)| vec![Value::Int(k), Value::Float(r), Value::Int(valid_orders[&k] as i64)])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::tpch::TpchConfig;
+
+    #[test]
+    fn matches_oracle() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 17));
+        let out = run(&db);
+        let oracle = naive(&db);
+        assert!(!out.rows.is_empty());
+        assert!(
+            out.approx_eq_rows(&oracle),
+            "vectorized:\n{:#?}\noracle:\n{:#?}",
+            out.rows,
+            oracle
+        );
+    }
+
+    #[test]
+    fn at_most_ten_rows_sorted_desc() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 19));
+        let out = run(&db);
+        assert!(out.rows.len() <= 10);
+        let revs: Vec<f64> = out.rows.iter().map(|r| r[1].as_f64()).collect();
+        for w in revs.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn join_stats_recorded() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 17));
+        let out = run(&db);
+        assert!(out.stats.ht_bytes > 0);
+        assert!(out.stats.bytes_scanned > 0);
+    }
+}

@@ -1,0 +1,202 @@
+//! TPC-H Q5 — local supplier volume: revenue per nation within a region
+//! where the customer and supplier share the nation.
+//!
+//! Five-way join (region→nation→customer→orders→lineitem→supplier); the
+//! co-nationality constraint makes it the join-heaviest query in the set.
+
+use crate::analytics::column::date_to_days;
+use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats, GroupBy, JoinMap};
+use crate::analytics::queries::{QueryOutput, Row, Value};
+use crate::analytics::tpch::{TpchDb, NATIONS, REGIONS};
+
+const REGION: &str = "ASIA";
+
+fn window() -> (i32, i32) {
+    (date_to_days(1994, 1, 1), date_to_days(1995, 1, 1))
+}
+
+/// Nation keys belonging to the target region.
+fn region_nations() -> Vec<i64> {
+    let region_idx = REGIONS.iter().position(|r| *r == REGION).unwrap() as u32;
+    NATIONS
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, r))| *r == region_idx)
+        .map(|(i, _)| i as i64)
+        .collect()
+}
+
+pub fn run(db: &TpchDb) -> QueryOutput {
+    let mut stats = ExecStats::default();
+    let (lo, hi) = window();
+    let asia: Vec<i64> = region_nations();
+    let in_asia = |nk: i64| asia.contains(&nk);
+
+    // customer nation lookup (custkey → nationkey) for ASIA customers.
+    let cust = &db.customer;
+    let ckeys = cust.col("c_custkey").as_i64();
+    let cnat = cust.col("c_nationkey").as_i32();
+    stats.scan(cust.len(), 12);
+    let cust_sel: Vec<u32> = all_rows(cust.len())
+        .into_iter()
+        .filter(|&i| in_asia(cnat[i as usize] as i64))
+        .collect();
+    let cust_map = JoinMap::build(ckeys, &cust_sel);
+    stats.ht_bytes += cust_map.bytes();
+
+    // orders in window with ASIA customers; record order → cust nation.
+    let orders = &db.orders;
+    let odate = orders.col("o_orderdate").as_i32();
+    let ocust = orders.col("o_custkey").as_i64();
+    let okeys = orders.col("o_orderkey").as_i64();
+    stats.scan(orders.len(), 4);
+    let ord_sel = filter_i32_range(&all_rows(orders.len()), odate, lo, hi);
+    stats.scan(ord_sel.len(), 16);
+    let mut ord_nation: Vec<(u32, i32)> = Vec::new(); // (order row, cust nation)
+    for &o in &ord_sel {
+        if let Some(crow) = cust_map.probe_first(ocust[o as usize]) {
+            ord_nation.push((o, cnat[crow as usize]));
+        }
+    }
+    let ord_rows: Vec<u32> = ord_nation.iter().map(|(o, _)| *o).collect();
+    let ord_map = JoinMap::build(okeys, &ord_rows);
+    stats.ht_bytes += ord_map.bytes();
+    // order row → nation (dense side lookup).
+    let mut orow_nation = vec![-1i32; orders.len()];
+    for (o, nk) in &ord_nation {
+        orow_nation[*o as usize] = *nk;
+    }
+
+    // supplier nation lookup.
+    let sup = &db.supplier;
+    let skeys = sup.col("s_suppkey").as_i64();
+    let snat = sup.col("s_nationkey").as_i32();
+    stats.scan(sup.len(), 12);
+    let sup_map = JoinMap::build(skeys, &all_rows(sup.len()));
+    stats.ht_bytes += sup_map.bytes();
+
+    // lineitem probe.
+    let li = &db.lineitem;
+    let lok = li.col("l_orderkey").as_i64();
+    let lsk = li.col("l_suppkey").as_i64();
+    let price = li.col("l_extendedprice").as_f64();
+    let disc = li.col("l_discount").as_f64();
+    stats.scan(li.len(), 8 * 4);
+
+    let mut g: GroupBy<1> = GroupBy::with_capacity(32);
+    for i in 0..li.len() {
+        if let Some(orow) = ord_map.probe_first(lok[i]) {
+            let c_nat = orow_nation[orow as usize];
+            if let Some(srow) = sup_map.probe_first(lsk[i]) {
+                let s_nat = snat[srow as usize];
+                if s_nat == c_nat {
+                    g.update(s_nat as i64, [price[i] * (1.0 - disc[i])]);
+                }
+            }
+        }
+    }
+    stats.ht_bytes += g.bytes();
+    stats.rows_out = g.groups.len() as u64;
+
+    let mut rows: Vec<Row> = g
+        .groups
+        .iter()
+        .map(|(nk, s, _)| vec![Value::Str(NATIONS[*nk as usize].0.to_string()), Value::Float(s[0])])
+        .collect();
+    rows.sort_by(|a, b| b[1].as_f64().partial_cmp(&a[1].as_f64()).unwrap());
+    QueryOutput { rows, stats }
+}
+
+/// Row-at-a-time oracle.
+pub fn naive(db: &TpchDb) -> Vec<Row> {
+    use std::collections::HashMap;
+    let (lo, hi) = window();
+    let asia = region_nations();
+    let cust = &db.customer;
+    let mut cust_nat: HashMap<i64, i64> = HashMap::new();
+    for i in 0..cust.len() {
+        let nk = cust.col("c_nationkey").as_i32()[i] as i64;
+        if asia.contains(&nk) {
+            cust_nat.insert(cust.col("c_custkey").as_i64()[i], nk);
+        }
+    }
+    let orders = &db.orders;
+    let mut order_nat: HashMap<i64, i64> = HashMap::new();
+    for i in 0..orders.len() {
+        let d = orders.col("o_orderdate").as_i32()[i];
+        if d >= lo && d < hi {
+            if let Some(nk) = cust_nat.get(&orders.col("o_custkey").as_i64()[i]) {
+                order_nat.insert(orders.col("o_orderkey").as_i64()[i], *nk);
+            }
+        }
+    }
+    let sup = &db.supplier;
+    let mut sup_nat: HashMap<i64, i64> = HashMap::new();
+    for i in 0..sup.len() {
+        sup_nat.insert(sup.col("s_suppkey").as_i64()[i], sup.col("s_nationkey").as_i32()[i] as i64);
+    }
+    let li = &db.lineitem;
+    let mut revenue: HashMap<i64, f64> = HashMap::new();
+    for i in 0..li.len() {
+        if let Some(cn) = order_nat.get(&li.col("l_orderkey").as_i64()[i]) {
+            if let Some(sn) = sup_nat.get(&li.col("l_suppkey").as_i64()[i]) {
+                if cn == sn {
+                    *revenue.entry(*cn).or_insert(0.0) += li.col("l_extendedprice").as_f64()[i]
+                        * (1.0 - li.col("l_discount").as_f64()[i]);
+                }
+            }
+        }
+    }
+    let mut rows: Vec<Row> = revenue
+        .into_iter()
+        .map(|(nk, r)| vec![Value::Str(NATIONS[nk as usize].0.to_string()), Value::Float(r)])
+        .collect();
+    rows.sort_by(|a, b| b[1].as_f64().partial_cmp(&a[1].as_f64()).unwrap());
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::tpch::TpchConfig;
+
+    #[test]
+    fn matches_oracle() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 23));
+        let out = run(&db);
+        let oracle = naive(&db);
+        assert!(
+            out.approx_eq_rows(&oracle),
+            "vectorized:\n{:#?}\noracle:\n{:#?}",
+            out.rows,
+            oracle
+        );
+    }
+
+    #[test]
+    fn only_asia_nations_appear() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 29));
+        let out = run(&db);
+        let asia_names: Vec<&str> = region_nations()
+            .iter()
+            .map(|&nk| NATIONS[nk as usize].0)
+            .collect();
+        for r in &out.rows {
+            match &r[0] {
+                Value::Str(n) => assert!(asia_names.contains(&n.as_str()), "{n} not in ASIA"),
+                _ => panic!(),
+            }
+        }
+        assert!(out.rows.len() <= asia_names.len());
+    }
+
+    #[test]
+    fn sorted_by_revenue_desc() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 31));
+        let out = run(&db);
+        let revs: Vec<f64> = out.rows.iter().map(|r| r[1].as_f64()).collect();
+        for w in revs.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+}

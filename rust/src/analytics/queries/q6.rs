@@ -1,0 +1,144 @@
+//! TPC-H Q6 — forecasting revenue change.
+//!
+//! A pure scan: date window + discount band + quantity cap, then a single
+//! sum. The paper singles Q6 out as the *compute-bound* exception in
+//! Figure 3 ("performs a compute-bound scan of data in memory") — its
+//! working set is a handful of narrow columns and it does almost no
+//! pointer chasing, so on x86 the slowdown comes from SMT sharing rather
+//! than DRAM bandwidth.
+//!
+//! This is also the query the PJRT offload path accelerates: see
+//! `python/compile/kernels/q6_scan.py` and `runtime::q6`.
+
+use crate::analytics::column::date_to_days;
+use crate::analytics::ops::{all_rows, filter_f64_lt, filter_f64_range, filter_i32_range, sum_over, ExecStats};
+use crate::analytics::queries::{QueryOutput, Row, Value};
+use crate::analytics::tpch::TpchDb;
+
+pub struct Q6Params {
+    pub date_lo: i32,
+    pub date_hi: i32,
+    pub disc_lo: f64,
+    pub disc_hi: f64,
+    pub qty_lt: f64,
+}
+
+impl Default for Q6Params {
+    fn default() -> Self {
+        Self {
+            date_lo: date_to_days(1994, 1, 1),
+            date_hi: date_to_days(1995, 1, 1),
+            // discount between 0.06 - 0.01 and 0.06 + 0.01 (inclusive);
+            // discounts are multiples of 0.01 so half-open [0.045, 0.075).
+            disc_lo: 0.045,
+            disc_hi: 0.075,
+            qty_lt: 24.0,
+        }
+    }
+}
+
+pub fn run(db: &TpchDb) -> QueryOutput {
+    run_params(db, &Q6Params::default())
+}
+
+pub fn run_params(db: &TpchDb, p: &Q6Params) -> QueryOutput {
+    let li = &db.lineitem;
+    let n = li.len();
+    let mut stats = ExecStats::default();
+
+    let ship = li.col("l_shipdate").as_i32();
+    let disc = li.col("l_discount").as_f64();
+    let qty = li.col("l_quantity").as_f64();
+    let price = li.col("l_extendedprice").as_f64();
+
+    stats.scan(n, 4); // shipdate full scan
+    let s1 = filter_i32_range(&all_rows(n), ship, p.date_lo, p.date_hi);
+    stats.scan(s1.len(), 8);
+    let s2 = filter_f64_range(&s1, disc, p.disc_lo, p.disc_hi);
+    stats.scan(s2.len(), 8);
+    let s3 = filter_f64_lt(&s2, qty, p.qty_lt);
+    stats.scan(s3.len(), 8);
+    let revenue = sum_over(&s3, |i| price[i as usize] * disc[i as usize]);
+    stats.rows_out = s3.len() as u64;
+
+    QueryOutput { rows: vec![vec![Value::Float(revenue)]], stats }
+}
+
+/// Row-at-a-time oracle.
+pub fn naive(db: &TpchDb) -> Vec<Row> {
+    let p = Q6Params::default();
+    let li = &db.lineitem;
+    let ship = li.col("l_shipdate").as_i32();
+    let disc = li.col("l_discount").as_f64();
+    let qty = li.col("l_quantity").as_f64();
+    let price = li.col("l_extendedprice").as_f64();
+    let mut revenue = 0.0;
+    for i in 0..li.len() {
+        if ship[i] >= p.date_lo
+            && ship[i] < p.date_hi
+            && disc[i] >= p.disc_lo
+            && disc[i] < p.disc_hi
+            && qty[i] < p.qty_lt
+        {
+            revenue += price[i] * disc[i];
+        }
+    }
+    vec![vec![Value::Float(revenue)]]
+}
+
+/// The flat inputs the PJRT Q6 kernel consumes (see `runtime::q6`):
+/// (shipdate as f32-able i32, discount, quantity, extendedprice).
+pub fn kernel_inputs(db: &TpchDb) -> (&[i32], &[f64], &[f64], &[f64]) {
+    let li = &db.lineitem;
+    (
+        li.col("l_shipdate").as_i32(),
+        li.col("l_discount").as_f64(),
+        li.col("l_quantity").as_f64(),
+        li.col("l_extendedprice").as_f64(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::tpch::TpchConfig;
+
+    #[test]
+    fn matches_oracle() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 13));
+        let out = run(&db);
+        let oracle = naive(&db);
+        assert!(out.approx_eq_rows(&oracle), "{:?} vs {oracle:?}", out.rows);
+        // Selectivity sanity: a strict subset matched.
+        assert!(out.stats.rows_out > 0);
+        assert!((out.stats.rows_out as usize) < db.lineitem.len() / 10);
+    }
+
+    #[test]
+    fn revenue_positive_and_scales_with_sf() {
+        let small = run(&TpchDb::generate(TpchConfig::new(0.001, 9)));
+        let large = run(&TpchDb::generate(TpchConfig::new(0.004, 9)));
+        let (rs, rl) = (small.rows[0][0].as_f64(), large.rows[0][0].as_f64());
+        assert!(rs > 0.0);
+        // 4x data → roughly 4x revenue (generous band).
+        let ratio = rl / rs;
+        assert!(ratio > 2.5 && ratio < 6.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn empty_window_gives_zero() {
+        let db = TpchDb::generate(TpchConfig::new(0.001, 9));
+        let p = Q6Params { date_lo: 0, date_hi: 1, ..Default::default() };
+        let out = run_params(&db, &p);
+        assert_eq!(out.rows[0][0].as_f64(), 0.0);
+    }
+
+    #[test]
+    fn low_intensity_vs_q1() {
+        // Q6 touches fewer bytes than Q1 (the "compute-bound" shape).
+        let db = TpchDb::generate(TpchConfig::new(0.002, 9));
+        let q1 = crate::analytics::queries::q1::run(&db);
+        let q6 = run(&db);
+        assert!(q6.stats.bytes_scanned < q1.stats.bytes_scanned);
+    }
+}

@@ -1,0 +1,260 @@
+//! Measurement harness for `cargo bench` targets.
+//!
+//! The offline registry has no `criterion`, so this module provides the
+//! pieces the paper-reproduction benches need: warmup + timed iterations
+//! with robust statistics, fixed-format result tables (so EXPERIMENTS.md
+//! rows can be pasted from bench output), and simple throughput helpers.
+//!
+//! Benches are plain binaries with `harness = false`; each calls
+//! [`Bench::new`] and registers measurements or model-derived rows.
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+/// Robust summary statistics over a set of per-iteration timings.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Stats {
+    pub fn from_ns(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Self {
+            n,
+            mean_ns: mean,
+            median_ns: percentile(&samples, 50.0),
+            p95_ns: percentile(&samples, 95.0),
+            min_ns: samples[0],
+            max_ns: samples[n - 1],
+            stddev_ns: var.sqrt(),
+        }
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Format a nanosecond quantity with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a byte/s throughput adaptively.
+pub fn fmt_bps(bytes_per_sec: f64) -> String {
+    const GB: f64 = 1e9;
+    const MB: f64 = 1e6;
+    if bytes_per_sec >= GB {
+        format!("{:.2} GB/s", bytes_per_sec / GB)
+    } else {
+        format!("{:.2} MB/s", bytes_per_sec / MB)
+    }
+}
+
+/// A single named measurement (or model-derived row) in a bench report.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub name: String,
+    pub value: String,
+    pub detail: String,
+}
+
+/// Bench context: runs closures with warmup + timed iterations and collects
+/// a fixed-format report printed at the end (and on drop).
+pub struct Bench {
+    title: String,
+    rows: Vec<Row>,
+    warmup: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    target: Duration,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        // Quick mode keeps `cargo bench` turnaround reasonable in CI.
+        let quick = std::env::var("LOVELOCK_BENCH_QUICK").is_ok();
+        Self {
+            title: title.to_string(),
+            rows: Vec::new(),
+            warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(200) },
+            min_iters: if quick { 3 } else { 10 },
+            max_iters: if quick { 20 } else { 200 },
+            target: if quick { Duration::from_millis(100) } else { Duration::from_secs(1) },
+        }
+    }
+
+    /// Time `f` (warmup until `self.warmup` elapsed, then iterate until the
+    /// target duration or max iterations) and record a row.
+    pub fn measure<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed iterations.
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while (samples.len() < self.min_iters)
+            || (t0.elapsed() < self.target && samples.len() < self.max_iters)
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        let stats = Stats::from_ns(samples);
+        self.rows.push(Row {
+            name: name.to_string(),
+            value: fmt_ns(stats.median_ns),
+            detail: format!(
+                "mean {} p95 {} n={}",
+                fmt_ns(stats.mean_ns),
+                fmt_ns(stats.p95_ns),
+                stats.n
+            ),
+        });
+        stats
+    }
+
+    /// Time `f` and report throughput over `bytes` processed per call.
+    pub fn measure_throughput<F: FnMut()>(&mut self, name: &str, bytes: u64, mut f: F) -> f64 {
+        let stats = {
+            // Same loop as `measure` but we format as bandwidth.
+            let w0 = Instant::now();
+            while w0.elapsed() < self.warmup {
+                f();
+            }
+            let mut samples = Vec::new();
+            let t0 = Instant::now();
+            while (samples.len() < self.min_iters)
+                || (t0.elapsed() < self.target && samples.len() < self.max_iters)
+            {
+                let s = Instant::now();
+                f();
+                samples.push(s.elapsed().as_nanos() as f64);
+            }
+            Stats::from_ns(samples)
+        };
+        let bps = bytes as f64 / (stats.median_ns / 1e9);
+        self.rows.push(Row {
+            name: name.to_string(),
+            value: fmt_bps(bps),
+            detail: format!("median {} over {} B/iter", fmt_ns(stats.median_ns), bytes),
+        });
+        bps
+    }
+
+    /// Record a model-derived (non-timed) row — used by the analytic
+    /// reproductions (cost model, projections).
+    pub fn row(&mut self, name: &str, value: impl std::fmt::Display, detail: impl std::fmt::Display) {
+        self.rows.push(Row {
+            name: name.to_string(),
+            value: value.to_string(),
+            detail: detail.to_string(),
+        });
+    }
+
+    /// Render the report table.
+    pub fn report(&self) -> String {
+        let name_w = self.rows.iter().map(|r| r.name.len()).max().unwrap_or(4).max(4);
+        let val_w = self.rows.iter().map(|r| r.value.len()).max().unwrap_or(5).max(5);
+        let mut out = String::new();
+        let _ = writeln!(out, "\n=== {} ===", self.title);
+        let _ = writeln!(out, "{:<name_w$}  {:>val_w$}  {}", "name", "value", "detail");
+        let _ = writeln!(out, "{}  {}  {}", "-".repeat(name_w), "-".repeat(val_w), "-".repeat(24));
+        for r in &self.rows {
+            let _ = writeln!(out, "{:<name_w$}  {:>val_w$}  {}", r.name, r.value, r.detail);
+        }
+        out
+    }
+
+    pub fn finish(self) {
+        println!("{}", self.report());
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (stable-rust
+/// equivalent of `criterion::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_ns(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean_ns - 3.0).abs() < 1e-9);
+        assert!((s.median_ns - 3.0).abs() < 1e-9);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0];
+        assert!((percentile(&v, 50.0) - 5.0).abs() < 1e-9);
+        assert!((percentile(&v, 95.0) - 9.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.000 s");
+        assert_eq!(fmt_bps(2.0e9), "2.00 GB/s");
+        assert_eq!(fmt_bps(5.0e6), "5.00 MB/s");
+    }
+
+    #[test]
+    fn measure_runs_and_records() {
+        std::env::set_var("LOVELOCK_BENCH_QUICK", "1");
+        let mut b = Bench::new("t");
+        let mut acc = 0u64;
+        let st = b.measure("noop", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(st.n >= 3);
+        assert!(b.report().contains("noop"));
+    }
+
+    #[test]
+    fn row_renders() {
+        let mut b = Bench::new("t");
+        b.row("cost_ratio", format!("{:.2}x", 2.31), "phi=3 mu=1.2");
+        let rep = b.report();
+        assert!(rep.contains("cost_ratio"));
+        assert!(rep.contains("2.31x"));
+    }
+}

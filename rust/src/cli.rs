@@ -1,0 +1,250 @@
+//! Command-line argument parsing (clap is unavailable offline).
+//!
+//! Supports the subset the `lovelock` binary and examples need:
+//! subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, typed accessors with defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.values
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_u64(key, default as u64) as usize
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.values
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+}
+
+/// A command parser: knows its options and its subcommands.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+    subs: Vec<(&'static str, &'static str)>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new(), subs: Vec::new() }
+    }
+
+    /// Register a `--key value` option.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    /// Register a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Register a subcommand (for help text; parsing takes the first
+    /// non-option token as the subcommand when any are registered).
+    pub fn sub(mut self, name: &'static str, about: &'static str) -> Self {
+        self.subs.push((name, about));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nUSAGE: {} [subcommand] [options]", self.name);
+        if !self.subs.is_empty() {
+            let _ = writeln!(s, "\nSUBCOMMANDS:");
+            for (n, a) in &self.subs {
+                let _ = writeln!(s, "  {n:<16} {a}");
+            }
+        }
+        if !self.opts.is_empty() {
+            let _ = writeln!(s, "\nOPTIONS:");
+            for o in &self.opts {
+                let d = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                let kind = if o.is_flag { "" } else { " <value>" };
+                let _ = writeln!(s, "  --{}{kind:<10} {}{d}", o.name, o.help);
+            }
+        }
+        s
+    }
+
+    /// Parse a token stream (typically `std::env::args().skip(1)`).
+    ///
+    /// Returns `Err` with a message (including full help for `--help`).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let toks: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if t == "--help" || t == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = t.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    args.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            toks.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} expects a value"))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else if args.subcommand.is_none() && !self.subs.is_empty() {
+                if !self.subs.iter().any(|(n, _)| n == t) {
+                    return Err(format!("unknown subcommand {t:?}\n\n{}", self.help_text()));
+                }
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("lovelock", "test")
+            .sub("cost", "cost model")
+            .sub("tpch", "run tpch")
+            .opt("phi", Some("1"), "NIC multiplier")
+            .opt("seed", Some("42"), "rng seed")
+            .opt("name", None, "a name")
+            .flag("verbose", "chatty")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = cmd().parse(s(&["cost", "--phi", "3", "--verbose"])).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("cost"));
+        assert_eq!(a.get_u64("phi", 0), 3);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.get_u64("seed", 0), 42); // default
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = cmd().parse(s(&["tpch", "--phi=2", "--name=abc"])).unwrap();
+        assert_eq!(a.get_u64("phi", 0), 2);
+        assert_eq!(a.get("name"), Some("abc"));
+    }
+
+    #[test]
+    fn rejects_unknown_option() {
+        assert!(cmd().parse(s(&["cost", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_subcommand() {
+        assert!(cmd().parse(s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_text() {
+        let err = cmd().parse(s(&["--help"])).unwrap_err();
+        assert!(err.contains("USAGE"));
+        assert!(err.contains("--phi"));
+        assert!(err.contains("cost model"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = cmd().parse(s(&["tpch", "q1", "q6"])).unwrap();
+        assert_eq!(a.positional, vec!["q1", "q6"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cmd().parse(s(&["cost", "--phi"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(cmd().parse(s(&["cost", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = cmd().parse(s(&["cost", "--phi", "2"])).unwrap();
+        assert_eq!(a.get_f64("phi", 0.0), 2.0);
+        assert_eq!(a.get_usize("phi", 0), 2);
+        assert_eq!(a.get_str("name", "dflt"), "dflt");
+    }
+}

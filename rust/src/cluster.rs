@@ -1,0 +1,272 @@
+//! Cluster model: the composition of a Lovelock (or traditional) cluster.
+//!
+//! A cluster is a set of [`Node`]s — each a server or a smart NIC — with a
+//! role per §3 of the paper: *accelerator node* (attached GPUs/TPUs),
+//! *storage node* (attached SSDs), or *lite compute* node (no peripherals;
+//! shuffles and lightweight compute). [`ClusterSpec::lovelock_from`] builds
+//! the Lovelock replacement of a traditional cluster with a given φ, and
+//! the aggregate accessors feed the cost model, the fabric simulator, and
+//! the coordinator's placement decisions.
+
+use crate::costmodel::CostModel;
+use crate::platform::{self, Kind, Platform};
+use crate::simnet::Topology;
+
+/// Role of a node (what hangs off its PCIe, if anything).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Drives attached accelerators (GPU/TPU/video/crypto).
+    Accelerator { count: u32 },
+    /// Serves attached storage devices over the network.
+    Storage { devices: u32 },
+    /// No peripherals: lightweight compute and data shuffles.
+    LiteCompute,
+}
+
+/// One node in a cluster.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub platform: Platform,
+    pub role: Role,
+}
+
+impl Node {
+    /// PCIe-device count (accelerators or SSDs).
+    pub fn peripheral_count(&self) -> u32 {
+        match self.role {
+            Role::Accelerator { count } => count,
+            Role::Storage { devices } => devices,
+            Role::LiteCompute => 0,
+        }
+    }
+}
+
+/// A whole cluster: homogeneous platform per spec (matching the paper's
+/// comparisons), arbitrary role mix.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Fabric description used to instantiate `simnet`.
+    pub nodes_per_rack: usize,
+    pub tor_uplink_gbps: f64,
+}
+
+impl ClusterSpec {
+    /// A traditional server-centric cluster of `n` identical nodes.
+    pub fn traditional(n: usize, platform: Platform, role: Role) -> Self {
+        let host_gbps = platform.nic_gbps;
+        let nodes = (0..n)
+            .map(|id| Node { id, platform: platform.clone(), role })
+            .collect();
+        let nodes_per_rack = 16.min(n.max(1));
+        Self {
+            name: format!("traditional-{n}x-{}", platform.name),
+            nodes,
+            nodes_per_rack,
+            // Non-oversubscribed by default.
+            tor_uplink_gbps: nodes_per_rack as f64 * host_gbps,
+        }
+    }
+
+    /// The Lovelock replacement: φ smart NICs per original server, same
+    /// peripherals redistributed across the NICs of each group.
+    pub fn lovelock_from(orig: &ClusterSpec, phi: u32, nic: Platform) -> Self {
+        assert!(phi >= 1);
+        assert_eq!(nic.kind, Kind::SmartNic);
+        let mut nodes = Vec::with_capacity(orig.nodes.len() * phi as usize);
+        for server in &orig.nodes {
+            let total = server.peripheral_count();
+            for j in 0..phi {
+                // Distribute peripherals round-robin across the φ NICs.
+                let share = total / phi + u32::from(j < total % phi);
+                let role = match server.role {
+                    Role::Accelerator { .. } => {
+                        if share > 0 {
+                            Role::Accelerator { count: share }
+                        } else {
+                            Role::LiteCompute
+                        }
+                    }
+                    Role::Storage { .. } => {
+                        if share > 0 {
+                            Role::Storage { devices: share }
+                        } else {
+                            Role::LiteCompute
+                        }
+                    }
+                    Role::LiteCompute => Role::LiteCompute,
+                };
+                nodes.push(Node { id: nodes.len(), platform: nic.clone(), role });
+            }
+        }
+        let nodes_per_rack = (orig.nodes_per_rack * phi as usize).min(nodes.len().max(1));
+        Self {
+            name: format!("lovelock-phi{phi}-{}", nic.name),
+            nodes,
+            nodes_per_rack,
+            tor_uplink_gbps: nodes_per_rack as f64 * nic.nic_gbps,
+        }
+    }
+
+    /// Convenience: Lovelock with IPU E2000 NICs.
+    pub fn lovelock_e2000(orig: &ClusterSpec, phi: u32) -> Self {
+        Self::lovelock_from(orig, phi, platform::ipu_e2000())
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Aggregate end-host network bandwidth, Gbit/s — the quantity §5.2's
+    /// argument turns on.
+    pub fn aggregate_nic_gbps(&self) -> f64 {
+        self.nodes.iter().map(|n| n.platform.nic_gbps).sum()
+    }
+
+    /// Aggregate DRAM bandwidth, GB/s.
+    pub fn aggregate_dram_gbs(&self) -> f64 {
+        self.nodes.iter().map(|n| n.platform.dram_gbs()).sum()
+    }
+
+    /// Aggregate vCPU count.
+    pub fn total_vcpus(&self) -> u32 {
+        self.nodes.iter().map(|n| n.platform.vcpus).sum()
+    }
+
+    /// Total peripherals (must be conserved by the Lovelock transform).
+    pub fn total_peripherals(&self) -> u32 {
+        self.nodes.iter().map(|n| n.peripheral_count()).sum()
+    }
+
+    /// Relative capital cost of this cluster (sum of node + peripheral
+    /// relative costs under the paper's model; peripherals cost `c_p_each`
+    /// relative to a smart NIC).
+    pub fn relative_cost(&self, c_p_each: f64) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| n.platform.rel_cost + n.peripheral_count() as f64 * c_p_each)
+            .sum()
+    }
+
+    /// Relative power of this cluster.
+    pub fn relative_power(&self, p_p_each: f64) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| n.platform.rel_power + n.peripheral_count() as f64 * p_p_each)
+            .sum()
+    }
+
+    /// Build the `simnet` topology for this cluster.
+    pub fn topology(&self) -> Topology {
+        let racks = self.num_nodes().div_ceil(self.nodes_per_rack);
+        let host_gbps = self.nodes.first().map(|n| n.platform.nic_gbps).unwrap_or(100.0);
+        Topology::new(racks.max(1), self.nodes_per_rack, host_gbps, self.tor_uplink_gbps)
+    }
+
+    /// Cost ratio vs another cluster via the paper's per-device model.
+    pub fn cost_ratio_vs(&self, lovelock: &ClusterSpec, model: &CostModel) -> f64 {
+        let per_periph = if self.total_peripherals() > 0 {
+            model.c_p / (self.total_peripherals() as f64 / self.num_nodes() as f64)
+        } else {
+            0.0
+        };
+        self.relative_cost(per_periph) / lovelock.relative_cost(per_periph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::n2d_milan;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn traditional_cluster_shape() {
+        let c = ClusterSpec::traditional(8, n2d_milan(), Role::Accelerator { count: 4 });
+        assert_eq!(c.num_nodes(), 8);
+        assert_eq!(c.total_peripherals(), 32);
+        assert!(close(c.aggregate_nic_gbps(), 800.0, 1e-9));
+        assert_eq!(c.total_vcpus(), 8 * 224);
+    }
+
+    #[test]
+    fn lovelock_conserves_peripherals() {
+        let orig = ClusterSpec::traditional(8, n2d_milan(), Role::Accelerator { count: 4 });
+        for phi in [1, 2, 3, 4] {
+            let l = ClusterSpec::lovelock_e2000(&orig, phi);
+            assert_eq!(l.num_nodes(), 8 * phi as usize);
+            assert_eq!(l.total_peripherals(), 32, "phi={phi}");
+        }
+    }
+
+    #[test]
+    fn lovelock_phi2_doubles_nodes_and_quadruples_bandwidth() {
+        // Milan servers have 100 Gbps; E2000 has 200 Gbps → φ=2 gives
+        // 2 × 2 = 4× aggregate end-host bandwidth.
+        let orig = ClusterSpec::traditional(4, n2d_milan(), Role::LiteCompute);
+        let l = ClusterSpec::lovelock_e2000(&orig, 2);
+        assert!(close(l.aggregate_nic_gbps() / orig.aggregate_nic_gbps(), 4.0, 1e-9));
+    }
+
+    #[test]
+    fn phi3_with_4_accels_distributes_2_1_1() {
+        let orig = ClusterSpec::traditional(1, n2d_milan(), Role::Accelerator { count: 4 });
+        let l = ClusterSpec::lovelock_e2000(&orig, 3);
+        let counts: Vec<u32> = l.nodes.iter().map(|n| n.peripheral_count()).collect();
+        assert_eq!(counts, vec![2, 1, 1]);
+        // Nodes with accelerators keep the Accelerator role.
+        assert!(matches!(l.nodes[0].role, Role::Accelerator { count: 2 }));
+    }
+
+    #[test]
+    fn phi_above_peripherals_leaves_lite_nodes() {
+        let orig = ClusterSpec::traditional(1, n2d_milan(), Role::Accelerator { count: 2 });
+        let l = ClusterSpec::lovelock_e2000(&orig, 4);
+        let lite = l.nodes.iter().filter(|n| n.role == Role::LiteCompute).count();
+        assert_eq!(lite, 2);
+        assert_eq!(l.total_peripherals(), 2);
+    }
+
+    #[test]
+    fn relative_cost_matches_eq1_shape() {
+        // Bare cluster: cost ratio = c_s / φ.
+        let orig = ClusterSpec::traditional(10, n2d_milan(), Role::LiteCompute);
+        let l3 = ClusterSpec::lovelock_e2000(&orig, 3);
+        let ratio = orig.relative_cost(0.0) / l3.relative_cost(0.0);
+        assert!(close(ratio, 7.0 / 3.0, 1e-9));
+        // Power likewise.
+        let p = orig.relative_power(0.0) / l3.relative_power(0.0);
+        assert!(close(p, 11.2 / 3.0, 1e-9));
+    }
+
+    #[test]
+    fn topology_covers_all_nodes() {
+        let orig = ClusterSpec::traditional(20, n2d_milan(), Role::LiteCompute);
+        let t = orig.topology();
+        assert!(t.num_nodes() >= orig.num_nodes());
+        let l = ClusterSpec::lovelock_e2000(&orig, 3);
+        assert!(l.topology().num_nodes() >= 60);
+    }
+
+    #[test]
+    fn storage_role_distributes() {
+        let orig = ClusterSpec::traditional(2, n2d_milan(), Role::Storage { devices: 8 });
+        let l = ClusterSpec::lovelock_e2000(&orig, 2);
+        assert_eq!(l.total_peripherals(), 16);
+        assert!(l.nodes.iter().all(|n| matches!(n.role, Role::Storage { devices: 4 })));
+    }
+
+    #[test]
+    fn smartnic_platform_enforced() {
+        let orig = ClusterSpec::traditional(1, n2d_milan(), Role::LiteCompute);
+        let result = std::panic::catch_unwind(|| {
+            ClusterSpec::lovelock_from(&orig, 2, n2d_milan())
+        });
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,462 @@
+//! Configuration formats: a TOML-subset parser and a JSON emitter.
+//!
+//! Lovelock's launcher reads cluster/experiment configs from `.toml` files
+//! (sections, key = value, strings, numbers, booleans, arrays) and the
+//! examples emit machine-readable run records as JSON. serde is not in the
+//! offline registry, so both are implemented here; the TOML subset is
+//! exactly what our configs use and the parser rejects what it does not
+//! understand rather than misreading it.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config: `section.key -> Value` (top-level keys have no dot).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_i64(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn insert(&mut self, key: &str, v: Value) {
+        self.entries.insert(key.to_string(), v);
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<Config, String> {
+    let mut cfg = Config::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let value = parse_value(v.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        cfg.entries.insert(full_key, value);
+    }
+    Ok(cfg)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s:?}"))?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {s:?}"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|part| parse_value(part.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    // Numbers: prefer int when there is no '.', 'e', or 'E'.
+    let numeric = s.replace('_', "");
+    if numeric.contains('.') || numeric.contains('e') || numeric.contains('E') {
+        numeric
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| format!("bad number: {s:?}"))
+    } else {
+        numeric
+            .parse::<i64>()
+            .map(Value::Int)
+            .map_err(|_| format!("bad value: {s:?}"))
+    }
+}
+
+fn split_top_level(s: &str) -> Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or("unbalanced brackets")?;
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return Err(format!("bad escape: \\{other:?}")),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- JSON out
+
+/// Minimal JSON document builder (objects, arrays, scalars) for run records.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Self {
+        Json::Obj(Vec::new())
+    }
+
+    pub fn field(mut self, key: &str, v: impl Into<Json>) -> Self {
+        if let Json::Obj(ref mut fields) = self {
+            fields.push((key.to_string(), v.into()));
+        } else {
+            panic!("field() on non-object Json");
+        }
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    if n.fract() == 0.0 && n.abs() < 1e15 {
+                        let _ = write!(out, "{}", *n as i64);
+                    } else {
+                        let _ = write!(out, "{n}");
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+impl From<i64> for Json {
+    fn from(v: i64) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<u64> for Json {
+    fn from(v: u64) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Num(v as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Self {
+        Json::Arr(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let cfg = parse_toml(
+            r#"
+            # cluster config
+            name = "lovelock-demo"
+            [cluster]
+            phi = 3
+            slowdown = 1.2      # mu
+            smartnic = true
+            nodes = [4, 8, 16]
+            labels = ["a", "b"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.get_str("name", ""), "lovelock-demo");
+        assert_eq!(cfg.get_i64("cluster.phi", 0), 3);
+        assert!((cfg.get_f64("cluster.slowdown", 0.0) - 1.2).abs() < 1e-12);
+        assert!(cfg.get_bool("cluster.smartnic", false));
+        let nodes = cfg.get("cluster.nodes").unwrap().as_array().unwrap();
+        assert_eq!(nodes.len(), 3);
+        assert_eq!(nodes[2].as_i64(), Some(16));
+        let labels = cfg.get("cluster.labels").unwrap().as_array().unwrap();
+        assert_eq!(labels[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn int_with_underscores() {
+        let cfg = parse_toml("x = 1_000_000").unwrap();
+        assert_eq!(cfg.get_i64("x", 0), 1_000_000);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let cfg = parse_toml(r##"s = "a#b" # real comment"##).unwrap();
+        assert_eq!(cfg.get_str("s", ""), "a#b");
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let cfg = parse_toml(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(cfg.get_str("s", ""), "a\nb\t\"c\"");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_toml("not a kv line").is_err());
+        assert!(parse_toml("[unterminated").is_err());
+        assert!(parse_toml("x = ").is_err());
+        assert!(parse_toml("x = \"open").is_err());
+        assert!(parse_toml("x = [1, 2").is_err());
+        assert!(parse_toml("[]").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let cfg = parse_toml("m = [[1, 2], [3, 4]]").unwrap();
+        let m = cfg.get("m").unwrap().as_array().unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[1].as_array().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = parse_toml("").unwrap();
+        assert_eq!(cfg.get_i64("missing", 7), 7);
+        assert_eq!(cfg.get_str("missing", "d"), "d");
+    }
+
+    #[test]
+    fn json_round_structure() {
+        let j = Json::obj()
+            .field("phi", 3u64)
+            .field("mu", 1.22)
+            .field("name", "fig4")
+            .field("ok", true)
+            .field("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(2.5)]));
+        let s = j.render();
+        assert_eq!(
+            s,
+            r#"{"phi":3,"mu":1.22,"name":"fig4","ok":true,"xs":[1,2.5]}"#
+        );
+    }
+
+    #[test]
+    fn json_escapes() {
+        let s = Json::Str("a\"b\\c\nd".into()).render();
+        assert_eq!(s, r#""a\"b\\c\nd""#);
+    }
+}

@@ -1,0 +1,164 @@
+//! Credit-based backpressure.
+//!
+//! Lovelock nodes are small (16 cores, 48 GB); the coordinator bounds
+//! in-flight work per node with a credit gate. `acquire` blocks until a
+//! credit is free (or the gate is closed), `release` returns one. The
+//! distributed executor holds one credit per outstanding task per node.
+
+use std::sync::{Condvar, Mutex};
+
+struct State {
+    available: usize,
+    closed: bool,
+    /// High-water mark of concurrently held credits (for tests/metrics).
+    max_in_flight: usize,
+    capacity: usize,
+}
+
+/// A counting credit gate.
+pub struct Backpressure {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Backpressure {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            state: Mutex::new(State {
+                available: capacity,
+                closed: false,
+                max_in_flight: 0,
+                capacity,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until a credit is available. Returns `false` if closed.
+    pub fn acquire(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.available > 0 {
+                st.available -= 1;
+                let in_flight = st.capacity - st.available;
+                st.max_in_flight = st.max_in_flight.max(in_flight);
+                return true;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking acquire.
+    pub fn try_acquire(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.available == 0 {
+            return false;
+        }
+        st.available -= 1;
+        let in_flight = st.capacity - st.available;
+        st.max_in_flight = st.max_in_flight.max(in_flight);
+        true
+    }
+
+    pub fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        assert!(st.available < st.capacity, "release without acquire");
+        st.available += 1;
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    /// Close the gate: pending and future acquires return `false`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn in_flight(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.capacity - st.available
+    }
+
+    pub fn max_in_flight(&self) -> usize {
+        self.state.lock().unwrap().max_in_flight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let bp = Backpressure::new(2);
+        assert!(bp.acquire());
+        assert!(bp.acquire());
+        assert!(!bp.try_acquire());
+        assert_eq!(bp.in_flight(), 2);
+        bp.release();
+        assert!(bp.try_acquire());
+        assert_eq!(bp.max_in_flight(), 2);
+    }
+
+    #[test]
+    fn blocks_until_release() {
+        let bp = Arc::new(Backpressure::new(1));
+        assert!(bp.acquire());
+        let bp2 = bp.clone();
+        let t = std::thread::spawn(move || bp2.acquire());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        bp.release();
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    fn close_unblocks_waiters() {
+        let bp = Arc::new(Backpressure::new(1));
+        assert!(bp.acquire());
+        let bp2 = bp.clone();
+        let t = std::thread::spawn(move || bp2.acquire());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        bp.close();
+        assert!(!t.join().unwrap());
+        assert!(!bp.try_acquire());
+    }
+
+    #[test]
+    fn concurrency_never_exceeds_capacity() {
+        let bp = Arc::new(Backpressure::new(4));
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..16)
+            .map(|_| {
+                let (bp, live, peak) = (bp.clone(), live.clone(), peak.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        assert!(bp.acquire());
+                        let l = live.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(l, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_micros(50));
+                        live.fetch_sub(1, Ordering::SeqCst);
+                        bp.release();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 4);
+        assert_eq!(bp.in_flight(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn release_without_acquire_panics() {
+        Backpressure::new(1).release();
+    }
+}

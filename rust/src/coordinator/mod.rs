@@ -1,0 +1,22 @@
+//! The Lovelock coordinator — the paper's system contribution at L3.
+//!
+//! A Lovelock cluster has no servers, so cluster-level coordination runs
+//! *on* the smart NICs. This module implements the leader/worker runtime:
+//!
+//! * [`backpressure`] — credit-based admission so lite-compute nodes with
+//!   16 cores and 48 GB are never overrun;
+//! * [`scheduler`] — task placement over the node roles of a
+//!   [`crate::cluster::ClusterSpec`];
+//! * [`shuffle`] — the distributed query executor: partial aggregation on
+//!   real data partitions (executed on a thread pool standing in for the
+//!   worker fleet), wire-format partial results over the RPC substrate,
+//!   and a shuffle/storage overlay on the fabric simulator that yields the
+//!   Fig. 4-style time breakdown for any cluster spec.
+
+pub mod backpressure;
+pub mod scheduler;
+pub mod shuffle;
+
+pub use backpressure::Backpressure;
+pub use scheduler::{Placement, Scheduler, Task, TaskKind};
+pub use shuffle::{DistQueryReport, DistributedQuery};

@@ -1,0 +1,221 @@
+//! Task placement over a cluster's node roles.
+//!
+//! The coordinator assigns work to the node types of §3: scan/aggregate
+//! tasks to lite-compute nodes (or any node with spare cores), storage
+//! I/O to storage nodes, accelerator dispatch to accelerator nodes.
+//! Placement is load-balanced by outstanding-task count with role
+//! affinity, and the scheduler exposes the per-node queue depths the
+//! backpressure layer gates on.
+
+use crate::cluster::{ClusterSpec, Role};
+use std::collections::BinaryHeap;
+
+/// What a task needs from its node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// CPU scan/aggregate/shuffle work — any node, prefers lite-compute.
+    Compute,
+    /// Reads/writes attached storage — storage nodes only.
+    StorageIo,
+    /// Dispatches work to an attached accelerator — accelerator nodes only.
+    AccelDispatch,
+}
+
+/// One schedulable task.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: usize,
+    pub kind: TaskKind,
+    /// Estimated work (seconds of node CPU) — used for balance checks.
+    pub est_secs: f64,
+}
+
+/// Placement decision: task → node index in the cluster spec.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub task_id: usize,
+    pub node_id: usize,
+}
+
+/// Greedy least-loaded scheduler with role affinity.
+pub struct Scheduler {
+    /// (load_secs, queue_depth) per node.
+    load: Vec<(f64, usize)>,
+    eligible_compute: Vec<usize>,
+    eligible_storage: Vec<usize>,
+    eligible_accel: Vec<usize>,
+}
+
+impl Scheduler {
+    pub fn new(cluster: &ClusterSpec) -> Self {
+        let mut eligible_compute = Vec::new();
+        let mut eligible_storage = Vec::new();
+        let mut eligible_accel = Vec::new();
+        for n in &cluster.nodes {
+            match n.role {
+                Role::LiteCompute => eligible_compute.push(n.id),
+                Role::Storage { .. } => {
+                    eligible_storage.push(n.id);
+                    eligible_compute.push(n.id); // storage nodes can compute too
+                }
+                Role::Accelerator { .. } => {
+                    eligible_accel.push(n.id);
+                    eligible_compute.push(n.id);
+                }
+            }
+        }
+        Self {
+            load: vec![(0.0, 0); cluster.num_nodes()],
+            eligible_compute,
+            eligible_storage,
+            eligible_accel,
+        }
+    }
+
+    fn candidates(&self, kind: TaskKind) -> &[usize] {
+        match kind {
+            TaskKind::Compute => &self.eligible_compute,
+            TaskKind::StorageIo => &self.eligible_storage,
+            TaskKind::AccelDispatch => &self.eligible_accel,
+        }
+    }
+
+    /// Place one task on the least-loaded eligible node.
+    pub fn place(&mut self, task: &Task) -> Option<Placement> {
+        let candidates = self.candidates(task.kind);
+        let &node = candidates.iter().min_by(|&&a, &&b| {
+            self.load[a]
+                .0
+                .partial_cmp(&self.load[b].0)
+                .unwrap()
+                .then(self.load[a].1.cmp(&self.load[b].1))
+        })?;
+        self.load[node].0 += task.est_secs;
+        self.load[node].1 += 1;
+        Some(Placement { task_id: task.id, node_id: node })
+    }
+
+    /// Place a batch; returns None if any task has no eligible node.
+    pub fn place_all(&mut self, tasks: &[Task]) -> Option<Vec<Placement>> {
+        tasks.iter().map(|t| self.place(t)).collect()
+    }
+
+    /// Mark a task complete, releasing its load.
+    pub fn complete(&mut self, node_id: usize, est_secs: f64) {
+        self.load[node_id].0 = (self.load[node_id].0 - est_secs).max(0.0);
+        self.load[node_id].1 = self.load[node_id].1.saturating_sub(1);
+    }
+
+    pub fn queue_depth(&self, node_id: usize) -> usize {
+        self.load[node_id].1
+    }
+
+    /// Max/min load ratio across nodes that got any work (balance metric).
+    pub fn imbalance(&self) -> f64 {
+        let loads: Vec<f64> = self.load.iter().map(|(s, _)| *s).filter(|s| *s > 0.0).collect();
+        if loads.is_empty() {
+            return 1.0;
+        }
+        let max = loads.iter().fold(0.0f64, |a, &b| a.max(b));
+        let min = loads.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+        max / min
+    }
+
+    /// Simulated makespan if nodes drain their queues independently.
+    pub fn makespan(&self) -> f64 {
+        self.load.iter().map(|(s, _)| *s).fold(0.0, f64::max)
+    }
+}
+
+/// Priority-ordered work queue (longest-task-first improves balance).
+pub fn ltf_order(tasks: &mut Vec<Task>) {
+    let mut heap: BinaryHeap<(u64, usize)> = BinaryHeap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        heap.push(((t.est_secs * 1e9) as u64, i));
+    }
+    let order: Vec<usize> = std::iter::from_fn(|| heap.pop().map(|(_, i)| i)).collect();
+    let mut out = Vec::with_capacity(tasks.len());
+    for i in order {
+        out.push(tasks[i].clone());
+    }
+    *tasks = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::platform::n2d_milan;
+
+    fn mixed_cluster() -> ClusterSpec {
+        let mut c = ClusterSpec::traditional(6, n2d_milan(), Role::LiteCompute);
+        c.nodes[0].role = Role::Storage { devices: 4 };
+        c.nodes[1].role = Role::Accelerator { count: 2 };
+        c
+    }
+
+    #[test]
+    fn compute_spreads_evenly() {
+        let c = mixed_cluster();
+        let mut s = Scheduler::new(&c);
+        let tasks: Vec<Task> = (0..60)
+            .map(|id| Task { id, kind: TaskKind::Compute, est_secs: 1.0 })
+            .collect();
+        let placements = s.place_all(&tasks).unwrap();
+        assert_eq!(placements.len(), 60);
+        // 6 eligible compute nodes → 10 tasks each.
+        for n in 0..6 {
+            assert_eq!(s.queue_depth(n), 10, "node {n}");
+        }
+        assert!((s.imbalance() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn storage_tasks_only_on_storage_nodes() {
+        let c = mixed_cluster();
+        let mut s = Scheduler::new(&c);
+        for id in 0..5 {
+            let p = s.place(&Task { id, kind: TaskKind::StorageIo, est_secs: 1.0 }).unwrap();
+            assert_eq!(p.node_id, 0);
+        }
+    }
+
+    #[test]
+    fn accel_tasks_only_on_accel_nodes() {
+        let c = mixed_cluster();
+        let mut s = Scheduler::new(&c);
+        let p = s.place(&Task { id: 0, kind: TaskKind::AccelDispatch, est_secs: 1.0 }).unwrap();
+        assert_eq!(p.node_id, 1);
+    }
+
+    #[test]
+    fn no_eligible_node_is_none() {
+        let c = ClusterSpec::traditional(2, n2d_milan(), Role::LiteCompute);
+        let mut s = Scheduler::new(&c);
+        assert!(s.place(&Task { id: 0, kind: TaskKind::StorageIo, est_secs: 1.0 }).is_none());
+    }
+
+    #[test]
+    fn complete_releases_load() {
+        let c = mixed_cluster();
+        let mut s = Scheduler::new(&c);
+        let p = s.place(&Task { id: 0, kind: TaskKind::Compute, est_secs: 2.0 }).unwrap();
+        assert_eq!(s.queue_depth(p.node_id), 1);
+        s.complete(p.node_id, 2.0);
+        assert_eq!(s.queue_depth(p.node_id), 0);
+        assert_eq!(s.makespan(), 0.0);
+    }
+
+    #[test]
+    fn uneven_tasks_balance_with_ltf() {
+        let c = ClusterSpec::traditional(4, n2d_milan(), Role::LiteCompute);
+        let mut tasks: Vec<Task> = (0..16)
+            .map(|id| Task { id, kind: TaskKind::Compute, est_secs: (id % 4 + 1) as f64 })
+            .collect();
+        ltf_order(&mut tasks);
+        assert!(tasks[0].est_secs >= tasks.last().unwrap().est_secs);
+        let mut s = Scheduler::new(&c);
+        s.place_all(&tasks).unwrap();
+        assert!(s.imbalance() < 1.35, "imbalance={}", s.imbalance());
+    }
+}

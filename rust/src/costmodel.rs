@@ -1,0 +1,221 @@
+//! The paper's §4 analytical cost and energy model, plus the §5.2/§6
+//! fabric-cost extension.
+//!
+//! Notation (all relative to one smart NIC):
+//! * `c_s`, `p_s` — capital cost / power of one server,
+//! * `c_p`, `p_p` — capital cost / power of the PCIe devices attached to a
+//!   server (or to the smart NIC in Lovelock),
+//! * `φ` (phi) — Lovelock provisions φ smart NICs per replaced server,
+//! * `μ` (mu) — application slowdown on Lovelock (μ>1 slower, μ<1 faster),
+//! * `c_f` — fabric/ToR cost per server, for the extended model.
+//!
+//! Eq. 1:  cost ratio  = (c_s + c_p) / (φ + c_p)
+//! Eq. 2:  power ratio = (p_s + p_p) / (μ · (φ + p_p))
+//! Extended (§5.2): cost ratio = (c_s + c_f + c_p) / (φ·(1 + c_f) + c_p)
+
+/// Relative cost/power parameters of one cluster comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Server capital cost relative to a smart NIC (paper: ≈7, from [6]).
+    pub c_s: f64,
+    /// Server power relative to a smart NIC (paper: ≈11–11.2, from [6]).
+    pub p_s: f64,
+    /// PCIe-device capital cost relative to a smart NIC (0 if none).
+    pub c_p: f64,
+    /// PCIe-device power relative to a smart NIC (0 if none).
+    pub p_p: f64,
+}
+
+impl CostModel {
+    /// The paper's NVIDIA-white-paper baseline with no PCIe devices
+    /// (`c_s = 7`, `p_s = 11`).
+    pub fn bare_bluefield() -> Self {
+        Self { c_s: 7.0, p_s: 11.0, c_p: 0.0, p_p: 0.0 }
+    }
+
+    /// Baseline with `p_s = 11.2` (the value §4/§5.3 use when PCIe devices
+    /// are in play).
+    pub fn host_only() -> Self {
+        Self { c_s: 7.0, p_s: 11.2, c_p: 0.0, p_p: 0.0 }
+    }
+
+    /// Attach PCIe devices that account for fraction `share` of total
+    /// system cost/power (paper: 0.75 for 4-GPU servers), deriving
+    /// `c_p = c_s · share/(1-share)` and likewise for power.
+    pub fn with_pcie_share(mut self, share: f64) -> Self {
+        assert!((0.0..1.0).contains(&share));
+        self.c_p = self.c_s * share / (1.0 - share);
+        self.p_p = self.p_s * share / (1.0 - share);
+        self
+    }
+
+    /// Eq. 1 — capital cost of a traditional cluster relative to Lovelock.
+    /// Values > 1 mean Lovelock is cheaper.
+    pub fn cost_ratio(&self, phi: f64) -> f64 {
+        assert!(phi > 0.0);
+        (self.c_s + self.c_p) / (phi + self.c_p)
+    }
+
+    /// Eq. 2 — power of a traditional cluster relative to Lovelock, for a
+    /// run that takes μ× as long on Lovelock (energy = power × time).
+    pub fn power_ratio(&self, phi: f64, mu: f64) -> f64 {
+        assert!(phi > 0.0 && mu > 0.0);
+        (self.p_s + self.p_p) / (mu * (phi + self.p_p))
+    }
+
+    /// §5.2 extension: include fabric cost `c_f` per server (scaling
+    /// linearly with node count — the paper's *pessimistic* variant).
+    pub fn cost_ratio_with_fabric(&self, phi: f64, c_f: f64) -> f64 {
+        assert!(phi > 0.0 && c_f >= 0.0);
+        (self.c_s + c_f + self.c_p) / (phi * (1.0 + c_f) + self.c_p)
+    }
+
+    /// §5.2's refinement: the fabric does not need φ× capacity — only
+    /// enough to sustain the achieved execution rate. Returns the required
+    /// fabric speed relative to the traditional cluster's fabric
+    /// (`1/μ`): μ=1.22 → 0.82 (fabric may be ~18-19% *slower*);
+    /// μ=0.81 → 1.23 (fabric must be ~23% faster).
+    pub fn required_fabric_speed(&self, mu: f64) -> f64 {
+        assert!(mu > 0.0);
+        1.0 / mu
+    }
+}
+
+/// A named (φ, μ) scenario for sweep tables.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    pub phi: f64,
+    pub mu: f64,
+}
+
+/// Evaluate cost and power ratios across scenarios.
+pub fn sweep(model: &CostModel, scenarios: &[Scenario]) -> Vec<(Scenario, f64, f64)> {
+    scenarios
+        .iter()
+        .map(|s| (*s, model.cost_ratio(s.phi), model.power_ratio(s.phi, s.mu)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    /// §4: bare cluster, φ=3, μ=1.2 → "2.3× cheaper and 3.1× less energy".
+    #[test]
+    fn paper_bare_scenario() {
+        let m = CostModel::bare_bluefield();
+        assert!(close(m.cost_ratio(3.0), 2.33, 0.01));
+        assert!(close(m.power_ratio(3.0, 1.2), 3.06, 0.05)); // paper rounds to 3.1
+    }
+
+    /// §4: PCIe devices at 75% of system cost → c_p=21, p_p=33.6.
+    #[test]
+    fn pcie_share_derivation() {
+        let m = CostModel::host_only().with_pcie_share(0.75);
+        assert!(close(m.c_p, 21.0, 1e-9));
+        assert!(close(m.p_p, 33.6, 1e-9));
+    }
+
+    /// §4: φ=1 no slowdown → 1.27× cost, 1.3× energy.
+    #[test]
+    fn paper_pcie_phi1() {
+        let m = CostModel::host_only().with_pcie_share(0.75);
+        assert!(close(m.cost_ratio(1.0), 1.27, 0.005));
+        assert!(close(m.power_ratio(1.0, 1.0), 1.295, 0.01));
+    }
+
+    /// §4: φ=2, 10% faster (μ=0.9) → 1.22× cost, 1.4× energy.
+    #[test]
+    fn paper_pcie_phi2() {
+        let m = CostModel::host_only().with_pcie_share(0.75);
+        assert!(close(m.cost_ratio(2.0), 1.22, 0.005));
+        assert!(close(m.power_ratio(2.0, 0.9), 1.40, 0.01));
+    }
+
+    /// §5.2: lite-compute (no PCIe): φ=2 → 3.5×, φ=3 → 2.33×; energy 4.58×
+    /// for both (μ = 1.22 and 0.81 respectively from the Fig. 4 analysis).
+    #[test]
+    fn paper_bigquery_costs() {
+        let m = CostModel::host_only();
+        assert!(close(m.cost_ratio(2.0), 3.5, 0.01));
+        assert!(close(m.cost_ratio(3.0), 2.33, 0.01));
+        assert!(close(m.power_ratio(2.0, 1.22), 4.59, 0.05));
+        assert!(close(m.power_ratio(3.0, 0.81), 4.61, 0.05));
+    }
+
+    /// §5.2: fabric cost c_f = 0.7 → 2.26× (φ=2) and 1.51× (φ=3).
+    #[test]
+    fn paper_fabric_extension() {
+        let m = CostModel::host_only();
+        assert!(close(m.cost_ratio_with_fabric(2.0, 0.7), 2.26, 0.01));
+        assert!(close(m.cost_ratio_with_fabric(3.0, 0.7), 1.51, 0.01));
+    }
+
+    /// §5.2: fabric speed requirement — ~19% slower at μ=1.22, ~23% faster
+    /// at μ=0.81.
+    #[test]
+    fn paper_fabric_speed() {
+        let m = CostModel::host_only();
+        assert!(close(1.0 - m.required_fabric_speed(1.22), 0.18, 0.01));
+        assert!(close(m.required_fabric_speed(0.81) - 1.0, 0.235, 0.01));
+    }
+
+    /// §5.3: LLM training, φ=1, μ=1 with 75% PCIe share → 1.27× / 1.30×.
+    #[test]
+    fn paper_llm_training_costs() {
+        // The paper uses p_p = 33.2 in §5.3 (vs 33.6 in §4) — reproduce
+        // with the §5.3 constants verbatim.
+        let m = CostModel { c_s: 7.0, p_s: 11.2, c_p: 21.0, p_p: 33.2 };
+        assert!(close(m.cost_ratio(1.0), 1.27, 0.005));
+        assert!(close(m.power_ratio(1.0, 1.0), 1.30, 0.005));
+    }
+
+    /// §5.3: GNN / bandwidth-stalled accelerators: φ=2, 10% speedup →
+    /// 1.22× cost and 1.4× power.
+    #[test]
+    fn paper_gnn_costs() {
+        let m = CostModel::host_only().with_pcie_share(0.75);
+        assert!(close(m.cost_ratio(2.0), 1.22, 0.005));
+        assert!(close(m.power_ratio(2.0, 0.9), 1.40, 0.01));
+    }
+
+    #[test]
+    fn cost_monotone_decreasing_in_phi() {
+        let m = CostModel::host_only().with_pcie_share(0.5);
+        let mut last = f64::INFINITY;
+        for phi in [0.5, 1.0, 2.0, 3.0, 5.0, 10.0] {
+            let c = m.cost_ratio(phi);
+            assert!(c < last);
+            last = c;
+        }
+    }
+
+    #[test]
+    fn power_scales_inverse_mu() {
+        let m = CostModel::host_only();
+        let a = m.power_ratio(2.0, 1.0);
+        let b = m.power_ratio(2.0, 2.0);
+        assert!(close(a / b, 2.0, 1e-9));
+    }
+
+    #[test]
+    fn fabric_zero_reduces_to_eq1() {
+        let m = CostModel::host_only().with_pcie_share(0.75);
+        assert!(close(m.cost_ratio_with_fabric(2.0, 0.0), m.cost_ratio(2.0), 1e-12));
+    }
+
+    #[test]
+    fn sweep_covers_scenarios() {
+        let m = CostModel::bare_bluefield();
+        let rows = sweep(
+            &m,
+            &[Scenario { phi: 1.0, mu: 1.0 }, Scenario { phi: 3.0, mu: 1.2 }],
+        );
+        assert_eq!(rows.len(), 2);
+        assert!(close(rows[1].1, 2.33, 0.01));
+    }
+}

@@ -1,0 +1,386 @@
+//! Execution substrate: a work-stealing-free but effective thread pool,
+//! scoped parallel loops, and a tiny deadline-driven event loop.
+//!
+//! The offline registry carries neither tokio nor rayon; the Lovelock
+//! coordinator needs (a) a pool to run worker-node tasks concurrently,
+//! (b) `parallel_for`-style data parallelism for the analytics engine's
+//! partition-parallel operators, and (c) a timer wheel for simulated-time
+//! pacing in the examples. This module provides all three on std only.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool with a shared injector queue.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+    idle_cv: Arc<(Mutex<()>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// A pool with `n` worker threads (`n == 0` → number of CPUs).
+    pub fn new(n: usize) -> Self {
+        let n = if n == 0 { num_cpus() } else { n };
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let active = Arc::new(AtomicUsize::new(0));
+        let idle_cv = Arc::new((Mutex::new(()), Condvar::new()));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let active = Arc::clone(&active);
+                let idle_cv = Arc::clone(&idle_cv);
+                std::thread::Builder::new()
+                    .name(format!("lovelock-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                active.fetch_add(1, Ordering::SeqCst);
+                                job();
+                                active.fetch_sub(1, Ordering::SeqCst);
+                                idle_cv.1.notify_all();
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, active, idle_cv }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool shut down");
+    }
+
+    /// Submit a job and get a [`JoinHandle`] for its result.
+    pub fn submit<T: Send + 'static, F: FnOnce() -> T + Send + 'static>(
+        &self,
+        f: F,
+    ) -> JoinHandle<T> {
+        let (tx, rx) = channel();
+        self.spawn(move || {
+            // Receiver may have been dropped; that's fine.
+            let _ = tx.send(f());
+        });
+        JoinHandle { rx }
+    }
+
+    /// Number of jobs currently executing.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Block until no job is executing (note: queued-but-unstarted jobs
+    /// are not covered — pair with result handles for full joins).
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.idle_cv;
+        let mut guard = lock.lock().unwrap();
+        while self.active() > 0 {
+            let (g, _timeout) = cv
+                .wait_timeout(guard, std::time::Duration::from_millis(10))
+                .unwrap();
+            guard = g;
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close channel; workers exit on recv error
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Handle to a pool-submitted job's result.
+pub struct JoinHandle<T> {
+    rx: Receiver<T>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Block for the result. Panics if the job panicked.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("job panicked or pool shut down")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_join(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Process `items` with `f` on up to `threads` scoped threads, preserving
+/// input order in the output. Panics in `f` propagate.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = if threads == 0 { num_cpus() } else { threads }.max(1);
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 || n == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let inputs: Vec<Mutex<Option<T>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let outputs: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().unwrap().take().unwrap();
+                let out = f(item);
+                *outputs[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker panicked"))
+        .collect()
+}
+
+/// Parallel iteration over index ranges in contiguous chunks — used by the
+/// analytics engine's columnar operators (each chunk is one morsel).
+pub fn parallel_for_chunks<F>(len: usize, chunk: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let chunk = chunk.max(1);
+    let ranges: Vec<(usize, usize)> = (0..len)
+        .step_by(chunk)
+        .map(|s| (s, (s + chunk).min(len)))
+        .collect();
+    parallel_map(ranges, threads, |(s, e)| f(s, e));
+}
+
+/// One scheduled timer entry.
+struct TimerEntry {
+    deadline: Instant,
+    seq: u64,
+    job: Job,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline && self.seq == other.seq
+    }
+}
+impl Eq for TimerEntry {}
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Min-heap by (deadline, seq) via reversal.
+        other
+            .deadline
+            .cmp(&self.deadline)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// A deadline-driven event loop: schedule closures at instants, then run
+/// until drained or stopped. Used for paced request injection in examples.
+pub struct EventLoop {
+    heap: BinaryHeap<TimerEntry>,
+    seq: u64,
+    stop: Arc<AtomicBool>,
+}
+
+impl Default for EventLoop {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventLoop {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0, stop: Arc::new(AtomicBool::new(false)) }
+    }
+
+    pub fn stopper(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    pub fn schedule_at<F: FnOnce() + Send + 'static>(&mut self, at: Instant, f: F) {
+        self.seq += 1;
+        self.heap.push(TimerEntry { deadline: at, seq: self.seq, job: Box::new(f) });
+    }
+
+    pub fn schedule_after<F: FnOnce() + Send + 'static>(&mut self, after: Duration, f: F) {
+        self.schedule_at(Instant::now() + after, f);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Run until all timers fired or the stop flag is set.
+    pub fn run(&mut self) {
+        while let Some(top) = self.heap.peek() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let now = Instant::now();
+            if top.deadline > now {
+                std::thread::sleep((top.deadline - now).min(Duration::from_millis(5)));
+                continue;
+            }
+            let entry = self.heap.pop().unwrap();
+            (entry.job)();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let c = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..100)
+            .map(|i| {
+                let c = c.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    i * 2
+                })
+            })
+            .collect();
+        let sum: u64 = handles.into_iter().map(|h| h.join()).sum();
+        assert_eq!(sum, (0..100).map(|i| i * 2).sum::<u64>());
+        assert_eq!(c.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_returns_after_drain() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                pool.submit(move || {
+                    std::thread::sleep(Duration::from_millis(2));
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join();
+        }
+        pool.wait_idle();
+        assert_eq!(pool.active(), 0);
+        assert_eq!(c.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn pool_zero_means_ncpus() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.threads() >= 1);
+    }
+
+    #[test]
+    fn pool_shutdown_joins() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = c.clone();
+            pool.spawn(move || {
+                std::thread::sleep(Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must wait for all jobs
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map((0..1000).collect::<Vec<_>>(), 8, |x| x * x);
+        assert_eq!(out, (0..1000).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+        assert_eq!(parallel_map(vec![7], 4, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn parallel_for_chunks_covers_all() {
+        let seen = Mutex::new(vec![false; 1003]);
+        parallel_for_chunks(1003, 64, 4, |s, e| {
+            let mut g = seen.lock().unwrap();
+            for i in s..e {
+                assert!(!g[i], "index {i} visited twice");
+                g[i] = true;
+            }
+        });
+        assert!(seen.into_inner().unwrap().iter().all(|x| *x));
+    }
+
+    #[test]
+    fn event_loop_fires_in_order() {
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut el = EventLoop::new();
+        let now = Instant::now();
+        for (i, off) in [(0u32, 30u64), (1, 10), (2, 20)] {
+            let order = order.clone();
+            el.schedule_at(now + Duration::from_millis(off), move || {
+                order.lock().unwrap().push(i);
+            });
+        }
+        el.run();
+        assert_eq!(*order.lock().unwrap(), vec![1, 2, 0]);
+        assert_eq!(el.pending(), 0);
+    }
+
+    #[test]
+    fn event_loop_stop_flag() {
+        let mut el = EventLoop::new();
+        let stop = el.stopper();
+        stop.store(true, Ordering::SeqCst);
+        el.schedule_after(Duration::from_millis(1), || panic!("should not fire"));
+        el.run();
+        assert_eq!(el.pending(), 1);
+    }
+}

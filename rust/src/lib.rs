@@ -1,0 +1,54 @@
+//! # Lovelock — a smart-NIC-hosted cluster runtime and simulator
+//!
+//! Reproduction of *"Lovelock: Towards Smart NIC-hosted Clusters"*
+//! (CS.DC 2023). Lovelock replaces every server in a cluster with one or
+//! more headless smart NICs; this crate provides:
+//!
+//! * the **cluster model** ([`cluster`]) and the **Lovelock coordinator**
+//!   ([`coordinator`]) — leader/worker scheduling, distributed shuffle,
+//!   backpressure;
+//! * every **substrate** the paper's evaluation rests on: a TPC-H analytics
+//!   engine ([`analytics`]), a flow-level fabric simulator ([`simnet`]), a
+//!   memory-bandwidth contention model ([`memsim`]), a disaggregated storage
+//!   layer ([`storage`]), an RPC stack ([`rpc`]), and a distributed-training
+//!   coordinator ([`training`]);
+//! * the paper's **analytical models**: cost/energy ([`costmodel`]), the
+//!   BigQuery projection ([`bigquery`]), the GNN input pipeline ([`gnn`]),
+//!   and the platform catalog of Table 1 ([`platform`]);
+//! * a **PJRT runtime** ([`runtime`]) that loads AOT-compiled JAX/Pallas
+//!   artifacts (HLO text under `artifacts/`) and executes them from the
+//!   request path with Python never in the loop.
+//!
+//! Infrastructure substrates written in-repo because the offline registry
+//! only carries the `xla` dependency tree: [`exec`] (thread pool / parallel
+//! loops, in lieu of tokio), [`cli`] (argument parsing, in lieu of clap),
+//! [`benchkit`] (measurement harness, in lieu of criterion),
+//! [`proptest_mini`] (property testing, in lieu of proptest),
+//! [`configfmt`] (TOML-subset + JSON, in lieu of serde).
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analytics;
+pub mod benchkit;
+pub mod bigquery;
+pub mod cli;
+pub mod cluster;
+pub mod configfmt;
+pub mod coordinator;
+pub mod costmodel;
+pub mod exec;
+pub mod gnn;
+pub mod memsim;
+pub mod metrics;
+pub mod platform;
+pub mod prng;
+pub mod proptest_mini;
+pub mod rpc;
+pub mod runtime;
+pub mod simnet;
+pub mod storage;
+pub mod training;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,287 @@
+//! `lovelock` — CLI launcher for the Lovelock cluster runtime/simulator.
+//!
+//! Every paper experiment is reachable from here (the benches print the
+//! same tables with measurement loops): `lovelock fig3`, `lovelock cost`,
+//! `lovelock train --model tiny --steps 50`, …
+
+use lovelock::analytics::{profile, run_query, TpchConfig, TpchDb, QUERY_NAMES};
+use lovelock::bigquery::{self, Breakdown};
+use lovelock::cli::Command;
+use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::coordinator::DistributedQuery;
+use lovelock::costmodel::CostModel;
+use lovelock::gnn::{GnnHost, LovelockGnn};
+use lovelock::memsim;
+use lovelock::platform::{self, table1_platforms};
+use lovelock::training::driver::TrainDriver;
+use lovelock::training::hostmodel::{CheckpointPolicy, GlamModel, TrainSetup};
+
+fn main() {
+    let cmd = Command::new("lovelock", "smart-NIC-hosted cluster runtime (paper reproduction)")
+        .sub("table1", "platform bandwidth-per-core catalog (Table 1)")
+        .sub("fig3", "per-core TPC-H performance under contention (Fig. 3)")
+        .sub("fig4", "BigQuery execution-time projection (Fig. 4)")
+        .sub("table2", "host CPU/DRAM during LLM training (Table 2)")
+        .sub("cost", "cost/energy model scenarios (§4, §5.2, §5.3)")
+        .sub("gnn", "GNN input-pipeline stall analysis (§5.3)")
+        .sub("tpch", "run TPC-H queries on the local engine")
+        .sub("dist", "run a distributed query on a simulated cluster")
+        .sub("train", "real AOT-compiled training loop via PJRT")
+        .opt("sf", Some("0.01"), "TPC-H scale factor")
+        .opt("seed", Some("42"), "experiment seed")
+        .opt("phi", Some("2"), "smart NICs per replaced server")
+        .opt("workers", Some("8"), "worker nodes for dist")
+        .opt("model", Some("tiny"), "model artifact name (tiny|100m)")
+        .opt("steps", Some("50"), "training steps")
+        .opt("log-every", Some("10"), "loss log interval")
+        .opt("query", Some("q1"), "query name for dist")
+        .flag("lovelock", "use a Lovelock (E2000) cluster for dist")
+        .flag("chunked", "use chunked-stream checkpointing");
+    let args = match cmd.parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("table1") => cmd_table1(),
+        Some("fig3") => cmd_fig3(&args),
+        Some("fig4") => cmd_fig4(),
+        Some("table2") => cmd_table2(&args),
+        Some("cost") => cmd_cost(),
+        Some("gnn") => cmd_gnn(&args),
+        Some("tpch") => cmd_tpch(&args),
+        Some("dist") => cmd_dist(&args),
+        Some("train") => cmd_train(&args),
+        _ => {
+            eprintln!("{}", cmd.help_text());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_table1() -> anyhow::Result<()> {
+    println!(
+        "{:<26} {:>6} {:>9} {:>10} {:>12} {:>12}",
+        "platform", "vcpus", "nic", "dram", "nic/core", "dram/core"
+    );
+    for p in table1_platforms() {
+        println!(
+            "{:<26} {:>6} {:>7.0}G {:>8.1}GB/s {:>10.2}GB/s {:>10.2}GB/s",
+            p.name,
+            p.vcpus,
+            p.nic_gbps,
+            p.dram_gbs(),
+            p.nic_gbs_per_core(),
+            p.dram_gbs_per_core()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+    let sf = args.get_f64("sf", 0.01);
+    let seed = args.get_u64("seed", 42);
+    let db = TpchDb::generate(TpchConfig::new(sf, seed));
+    let plats = [platform::ipu_e2000(), platform::n2d_milan(), platform::skylake_fig3()];
+    println!("{:<6} {:>14} {:>14} {:>14}", "query", "E2000 drop", "Milan drop", "Skylake drop");
+    for q in QUERY_NAMES {
+        let prof = profile::profile_query(&db, q, 1.0).unwrap();
+        let w = prof.workload();
+        let drops: Vec<f64> = plats
+            .iter()
+            .map(|p| memsim::full_occupancy(p, &w).slowdown_frac * 100.0)
+            .collect();
+        println!("{q:<6} {:>13.1}% {:>13.1}% {:>13.1}%", drops[0], drops[1], drops[2]);
+    }
+    Ok(())
+}
+
+fn cmd_fig4() -> anyhow::Result<()> {
+    let b = Breakdown::isca23();
+    println!("{:<12} {:>8} {:>8} {:>8} {:>8}", "config", "cpu", "shuffle", "io", "total");
+    println!(
+        "{:<12} {:>8.3} {:>8.3} {:>8.3} {:>8.3}",
+        "baseline",
+        b.cpu,
+        b.shuffle,
+        b.storage_io,
+        b.total()
+    );
+    for phi in [2.0, 3.0] {
+        let p = bigquery::project(&b, phi, 4.7);
+        println!(
+            "{:<12} {:>8.3} {:>8.3} {:>8.3} {:>8.3}",
+            format!("lovelock x{phi}"),
+            p.cpu,
+            p.shuffle,
+            p.storage_io,
+            p.mu()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table2(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+    let policy = if args.get_flag("chunked") {
+        CheckpointPolicy::ChunkedStream { chunk_bytes: 256 << 20 }
+    } else {
+        CheckpointPolicy::Monolithic
+    };
+    let setup = TrainSetup { policy, ..TrainSetup::default() };
+    println!(
+        "{:<9} {:>9} {:>9} {:>11} {:>11} {:>9} {:>9}",
+        "model", "meanCPU%", "peakCPU%", "GB/accel", "GB/host", "meanGB", "maxGB"
+    );
+    for m in GlamModel::table2_models() {
+        let u = setup.host_usage(&m);
+        println!(
+            "{:<9} {:>8.1}% {:>8.1}% {:>11.1} {:>11.1} {:>9.1} {:>9.1}",
+            m.name,
+            u.mean_cpu_frac * 100.0,
+            u.peak_cpu_frac * 100.0,
+            u.state_per_accel / 1e9,
+            u.state_per_host / 1e9,
+            u.mean_mem / 1e9,
+            u.max_mem / 1e9
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cost() -> anyhow::Result<()> {
+    let bare = CostModel::bare_bluefield();
+    let pcie = CostModel::host_only().with_pcie_share(0.75);
+    let lite = CostModel::host_only();
+    println!("scenario                         cost    energy");
+    println!(
+        "bare phi=3 mu=1.2            {:>7.2}x {:>8.2}x",
+        bare.cost_ratio(3.0),
+        bare.power_ratio(3.0, 1.2)
+    );
+    println!(
+        "pcie phi=1 mu=1.0            {:>7.2}x {:>8.2}x",
+        pcie.cost_ratio(1.0),
+        pcie.power_ratio(1.0, 1.0)
+    );
+    println!(
+        "pcie phi=2 mu=0.9            {:>7.2}x {:>8.2}x",
+        pcie.cost_ratio(2.0),
+        pcie.power_ratio(2.0, 0.9)
+    );
+    println!(
+        "bigquery phi=2 mu=1.22       {:>7.2}x {:>8.2}x",
+        lite.cost_ratio(2.0),
+        lite.power_ratio(2.0, 1.22)
+    );
+    println!(
+        "bigquery phi=3 mu=0.81       {:>7.2}x {:>8.2}x",
+        lite.cost_ratio(3.0),
+        lite.power_ratio(3.0, 0.81)
+    );
+    println!("fabric-adjusted phi=2        {:>7.2}x", lite.cost_ratio_with_fabric(2.0, 0.7));
+    println!("fabric-adjusted phi=3        {:>7.2}x", lite.cost_ratio_with_fabric(3.0, 0.7));
+    Ok(())
+}
+
+fn cmd_gnn(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+    let base = GnnHost::bgl_server();
+    println!(
+        "server: compute {:.0} mb/s, network {:.0} mb/s, achieved {:.0} mb/s, stall {:.0}%",
+        base.compute_rate(),
+        base.network_rate(),
+        base.achieved_rate(),
+        base.stall_fraction() * 100.0
+    );
+    let phi = args.get_u64("phi", 2) as u32;
+    let l = LovelockGnn { phi, nic_gbps_each: 200.0, base };
+    println!(
+        "lovelock phi={phi}: achieved {:.0} mb/s ({:.1}x speedup)",
+        l.achieved_rate(),
+        l.speedup_vs_server()
+    );
+    Ok(())
+}
+
+fn cmd_tpch(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+    let sf = args.get_f64("sf", 0.01);
+    let seed = args.get_u64("seed", 42);
+    let db = TpchDb::generate(TpchConfig::new(sf, seed));
+    let queries: Vec<String> = if args.positional.is_empty() {
+        QUERY_NAMES.iter().map(|s| s.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    for q in queries {
+        let t = std::time::Instant::now();
+        match run_query(&db, &q) {
+            Some(out) => println!(
+                "{q}: {} rows in {:.1} ms ({} MB scanned)",
+                out.rows.len(),
+                t.elapsed().as_secs_f64() * 1e3,
+                out.stats.bytes_scanned / 1_000_000
+            ),
+            None => println!("{q}: unknown query"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_dist(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+    let sf = args.get_f64("sf", 0.01);
+    let seed = args.get_u64("seed", 42);
+    let workers = args.get_usize("workers", 8);
+    let query = args.get_str("query", "q1");
+    let db = TpchDb::generate(TpchConfig::new(sf, seed));
+    let trad = ClusterSpec::traditional(workers, platform::n2d_milan(), Role::LiteCompute);
+    let cluster = if args.get_flag("lovelock") {
+        ClusterSpec::lovelock_e2000(&trad, args.get_u64("phi", 2) as u32)
+    } else {
+        trad
+    };
+    let name = cluster.name.clone();
+    let r = DistributedQuery::new(cluster).run(&db, &query)?;
+    let (c, s, i) = r.breakdown();
+    println!(
+        "{query} on {name}: {} rows; sim total {:.3}s = cpu {:.0}% shuffle {:.0}% io {:.0}%; shuffled {} KB",
+        r.rows.len(),
+        r.total_secs(),
+        c * 100.0,
+        s * 100.0,
+        i * 100.0,
+        r.shuffle_bytes / 1000
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+    let model = args.get_str("model", "tiny");
+    let steps = args.get_u64("steps", 50) as u32;
+    let log_every = args.get_u64("log-every", 10) as u32;
+    let seed = args.get_u64("seed", 42);
+    let mut driver = TrainDriver::load(&model, seed)?;
+    driver.init(seed as i32)?;
+    println!(
+        "training {model}: {} params, batch {} x seq {}",
+        driver.spec.params, driver.spec.batch, driver.spec.seq
+    );
+    driver.run(steps, log_every)?;
+    for (step, loss) in &driver.loss_log {
+        println!("step {step:>5}  loss {loss:.4}");
+    }
+    let acc = driver.accounting;
+    println!(
+        "host cpu fraction: {:.1}% (device {:.2}s, host {:.2}s, h2d {} KB, d2h {} KB)",
+        acc.host_cpu_frac() * 100.0,
+        acc.device_secs,
+        acc.host_secs,
+        acc.h2d_bytes / 1000,
+        acc.d2h_bytes / 1000
+    );
+    Ok(())
+}

@@ -1,0 +1,272 @@
+//! Memory-bandwidth contention model — the engine behind Figure 3.
+//!
+//! The paper's Figure 3 runs one independent TPC-H query per hardware
+//! thread and observes that per-core performance collapses on x86 hosts
+//! (39–88% drop) but only mildly degrades on the IPU E2000 (8–26% drop),
+//! because the E2000 has far more DRAM bandwidth per core and no SMT.
+//!
+//! We reproduce that with a roofline-style model. A workload is summarized
+//! by its **demand profile** measured on the real analytics engine
+//! ([`WorkloadProfile`]): CPU seconds per query at E2000 single-core speed
+//! and bytes of DRAM traffic per query. Running `k` identical instances on
+//! platform `P`:
+//!
+//! * CPU-side rate per thread: `st_speed × smt(P, k) × llc(P, k)` queries/s
+//!   (normalized to E2000 1-core = `1/t_cpu`).
+//! * Memory-side rate per thread: `(BW_dram(P)/k) / bytes_per_query`.
+//! * Achieved rate = min of the two; contention overhead adds a small
+//!   super-linear penalty near saturation (queueing in the memory
+//!   controller), calibrated so the E2000 lands in the paper's 8–26% band.
+//!
+//! The model is intentionally simple — the paper's claim is about *which
+//! platform degrades and by roughly how much*, which is a pure
+//! bandwidth-per-core argument.
+
+use crate::platform::Platform;
+
+/// Demand profile of one query (or any workload unit), measured by the
+/// analytics engine on this machine and normalized to E2000 units.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadProfile {
+    /// CPU seconds for one execution on a single uncontended E2000 core.
+    pub cpu_secs: f64,
+    /// DRAM bytes moved per execution (reads + writes, post-LLC).
+    pub dram_bytes: f64,
+    /// Resident working set in bytes (hash tables + hot columns); drives
+    /// the LLC-fit correction.
+    pub working_set_bytes: f64,
+}
+
+impl WorkloadProfile {
+    /// Demanded DRAM bandwidth (bytes/s) of one instance on one
+    /// uncontended core of `p`.
+    pub fn demand_bps(&self, p: &Platform) -> f64 {
+        self.dram_bytes / (self.cpu_secs / p.st_speed)
+    }
+
+    /// Operational intensity proxy: bytes per cpu-second (E2000 scale).
+    pub fn intensity(&self) -> f64 {
+        self.dram_bytes / self.cpu_secs
+    }
+}
+
+/// Result of simulating `k` concurrent instances on a platform.
+#[derive(Clone, Copy, Debug)]
+pub struct ContentionResult {
+    /// Per-thread rate, queries/sec.
+    pub per_core_rate: f64,
+    /// Whole-system rate, queries/sec (`k × per_core_rate`).
+    pub system_rate: f64,
+    /// Fraction of per-thread performance lost vs. one uncontended thread.
+    pub slowdown_frac: f64,
+    /// True if the memory side (not CPU) is the binding constraint.
+    pub memory_bound: bool,
+}
+
+/// Fraction of single-thread speed retained per SMT thread when `k`
+/// threads run on `cores` physical cores.
+fn smt_factor(p: &Platform, k: u32) -> f64 {
+    let cores = p.cores();
+    if k <= cores {
+        1.0
+    } else {
+        // Fraction of threads whose sibling is busy.
+        let shared = (k - cores) as f64 * 2.0 / k as f64;
+        1.0 - shared * (1.0 - p.smt_efficiency)
+    }
+}
+
+/// LLC-fit correction: when the aggregate working set no longer fits in
+/// LLC, DRAM traffic is amplified; when it fits, some profiled DRAM
+/// traffic never leaves the cache. Returns a multiplier on `dram_bytes`.
+fn llc_amplification(p: &Platform, w: &WorkloadProfile, k: u32) -> f64 {
+    let llc = p.llc_mib * 1024.0 * 1024.0;
+    let per_thread_llc = llc / k as f64;
+    let fit = per_thread_llc / w.working_set_bytes.max(1.0);
+    if fit >= 1.0 {
+        // Working set cached: a fraction of profiled traffic is absorbed.
+        0.6
+    } else {
+        // Partially cached: amplification grows as share shrinks, capped.
+        (1.0 / fit.max(0.25)).min(1.6).max(0.6)
+    }
+}
+
+/// Memory-controller queueing penalty near saturation: at utilization u of
+/// the DRAM bus, effective bandwidth is scaled by `1/(1 + beta·u²)`.
+fn saturation_penalty(util: f64) -> f64 {
+    let u = util.clamp(0.0, 1.0);
+    1.0 / (1.0 + 0.30 * u * u)
+}
+
+/// CPU-side sharing penalty: even when a core is not bandwidth-starved,
+/// co-running neighbours cost it LLC hit rate, memory-controller queueing
+/// on its misses, and uncore arbitration. Modeled as
+/// `1 / (1 + busy·(BASE + COUPLE·util))` where `busy = (k-1)/k`.
+/// Calibrated so an E2000 at full occupancy lands in the paper's 8–26%
+/// degradation band across the Fig. 3 query mix.
+fn sharing_penalty(k: u32, util: f64) -> f64 {
+    const BASE: f64 = 0.08;
+    const COUPLE: f64 = 0.35;
+    let busy = (k.saturating_sub(1)) as f64 / k as f64;
+    1.0 / (1.0 + busy * (BASE + COUPLE * util.clamp(0.0, 1.0)))
+}
+
+/// Simulate `k` identical independent instances of `w` on platform `p`.
+pub fn simulate(p: &Platform, w: &WorkloadProfile, k: u32) -> ContentionResult {
+    assert!(k >= 1 && k <= p.vcpus, "k={k} exceeds vcpus of {}", p.name);
+    let base_rate = p.st_speed / w.cpu_secs; // queries/s, uncontended core
+    let single = {
+        // k = 1 still pays LLC absorption (profile is post-LLC already on
+        // an uncontended machine) — use factor at k=1 for consistency.
+        let amp = llc_amplification(p, w, 1);
+        let mem_rate = p.dram_gbs() * 1e9 / (w.dram_bytes * amp);
+        base_rate.min(mem_rate)
+    };
+
+    let amp = llc_amplification(p, w, k);
+    let bytes_eff = w.dram_bytes * amp;
+    // Raw demand if CPU-bound everywhere:
+    let raw_cpu_rate = base_rate * smt_factor(p, k);
+    let demand = raw_cpu_rate * bytes_eff * k as f64;
+    let supply = p.dram_gbs() * 1e9;
+    let util = (demand / supply).min(1.0);
+    let cpu_rate = raw_cpu_rate * sharing_penalty(k, util);
+    let eff_supply = supply * saturation_penalty(util);
+    let mem_rate = eff_supply / (k as f64 * bytes_eff);
+    let rate = cpu_rate.min(mem_rate);
+    ContentionResult {
+        per_core_rate: rate,
+        system_rate: rate * k as f64,
+        slowdown_frac: (1.0 - rate / single).max(0.0),
+        memory_bound: mem_rate < cpu_rate,
+    }
+}
+
+/// Convenience: slowdown at full occupancy (all vCPUs busy).
+pub fn full_occupancy(p: &Platform, w: &WorkloadProfile) -> ContentionResult {
+    simulate(p, w, p.vcpus)
+}
+
+/// Whole-system performance of platform `a` relative to platform `b`, both
+/// at full occupancy, for workload `w` (the paper's "Milan shows 1.9-9.2x
+/// performance of E2000" quantity).
+pub fn system_ratio(a: &Platform, b: &Platform, w: &WorkloadProfile) -> f64 {
+    full_occupancy(a, w).system_rate / full_occupancy(b, w).system_rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::{ipu_e2000, n2d_milan, skylake_fig3};
+
+    /// A memory-light profile (Q6-like compute-bound scan).
+    fn light() -> WorkloadProfile {
+        WorkloadProfile {
+            cpu_secs: 1.0,
+            dram_bytes: 2.0e9,
+            working_set_bytes: 8.0e6,
+        }
+    }
+
+    /// A memory-heavy profile (join/agg query with big hash tables).
+    fn heavy() -> WorkloadProfile {
+        WorkloadProfile {
+            cpu_secs: 1.0,
+            dram_bytes: 4.0e9,
+            working_set_bytes: 64.0e6,
+        }
+    }
+
+    #[test]
+    fn single_core_unaffected() {
+        let p = ipu_e2000();
+        let r = simulate(&p, &light(), 1);
+        assert!(r.slowdown_frac.abs() < 1e-9);
+    }
+
+    #[test]
+    fn e2000_degrades_mildly() {
+        // Paper: E2000 per-core perf drops 8-26% at full occupancy.
+        let p = ipu_e2000();
+        for w in [light(), heavy()] {
+            let r = full_occupancy(&p, &w);
+            assert!(
+                r.slowdown_frac < 0.35,
+                "E2000 slowdown {:.2} too large for {w:?}",
+                r.slowdown_frac
+            );
+        }
+    }
+
+    #[test]
+    fn x86_degrades_heavily_on_memory_heavy() {
+        // Paper: x86 per-core perf drops 39-88%.
+        for p in [n2d_milan(), skylake_fig3()] {
+            let r = full_occupancy(&p, &heavy());
+            assert!(
+                r.slowdown_frac > 0.39,
+                "{} slowdown {:.2} too small",
+                p.name,
+                r.slowdown_frac
+            );
+            assert!(r.memory_bound, "{} should be memory bound", p.name);
+        }
+    }
+
+    #[test]
+    fn x86_degrades_more_than_nic() {
+        for w in [light(), heavy()] {
+            let nic = full_occupancy(&ipu_e2000(), &w).slowdown_frac;
+            let milan = full_occupancy(&n2d_milan(), &w).slowdown_frac;
+            assert!(milan > nic, "milan {milan:.2} <= nic {nic:.2} for {w:?}");
+        }
+    }
+
+    #[test]
+    fn system_ratio_in_paper_band() {
+        // Paper: Milan whole-system = 1.9-9.2x of E2000 (median 4.7),
+        // Skylake 2.1-4.5x (median 3.6). Our profiles should land inside
+        // a generous envelope of those bands.
+        let e = ipu_e2000();
+        for w in [light(), heavy()] {
+            let rm = system_ratio(&n2d_milan(), &e, &w);
+            assert!(rm > 1.5 && rm < 10.0, "milan ratio {rm}");
+            let rs = system_ratio(&skylake_fig3(), &e, &w);
+            assert!(rs > 1.5 && rs < 6.0, "skylake ratio {rs}");
+        }
+    }
+
+    #[test]
+    fn monotone_in_k() {
+        // Per-core rate must be non-increasing in k.
+        let p = n2d_milan();
+        let w = heavy();
+        let mut last = f64::INFINITY;
+        for k in [1, 2, 4, 8, 16, 32, 64, 128, 224] {
+            let r = simulate(&p, &w, k);
+            assert!(
+                r.per_core_rate <= last + 1e-9,
+                "rate increased at k={k}"
+            );
+            last = r.per_core_rate;
+        }
+    }
+
+    #[test]
+    fn smt_factor_bounds() {
+        let p = n2d_milan();
+        assert!((smt_factor(&p, 1) - 1.0).abs() < 1e-12);
+        assert!((smt_factor(&p, p.cores()) - 1.0).abs() < 1e-12);
+        let full = smt_factor(&p, p.vcpus);
+        assert!((full - p.smt_efficiency).abs() < 1e-9);
+        let nic = ipu_e2000();
+        assert!((smt_factor(&nic, 16) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_beyond_vcpus_panics() {
+        simulate(&ipu_e2000(), &light(), 17);
+    }
+}

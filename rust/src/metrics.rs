@@ -1,0 +1,289 @@
+//! Lightweight metrics registry: counters, gauges, and histograms.
+//!
+//! The coordinator, simulators, and the E2E drivers record into a
+//! [`Registry`]; benches and examples render a snapshot at the end of a
+//! run. Histograms use fixed log-spaced buckets, good enough for latency
+//! distributions spanning ns..s.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (bits of an f64).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+const HIST_BUCKETS: usize = 64;
+
+/// Log-spaced histogram over positive values.
+///
+/// Bucket `i` covers `[2^(i/2), 2^((i+1)/2))` (half-powers of two), giving
+/// ~19 decades of range with <50% relative error per bucket — fine for the
+/// "how did tail latency move" questions the paper cares about.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_bits: Mutex<f64>,
+    max_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_bits: Mutex::new(0.0),
+            max_bits: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_of(v: f64) -> usize {
+        if v <= 1.0 {
+            return 0;
+        }
+        let b = (2.0 * v.log2()).floor() as i64;
+        b.clamp(0, HIST_BUCKETS as i64 - 1) as usize
+    }
+
+    /// Upper edge of bucket `i`.
+    fn bucket_hi(i: usize) -> f64 {
+        2f64.powf((i as f64 + 1.0) / 2.0)
+    }
+
+    pub fn observe(&self, v: f64) {
+        let v = v.max(0.0);
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        *self.sum_bits.lock().unwrap() += v;
+        // max via CAS on bits (values are non-negative so bit order = value order)
+        let bits = v.to_bits();
+        let mut cur = self.max_bits.load(Ordering::Relaxed);
+        while bits > cur {
+            match self.max_bits.compare_exchange_weak(cur, bits, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            *self.sum_bits.lock().unwrap() / c as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile from bucket upper edges.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target.max(1) {
+                return Self::bucket_hi(i);
+            }
+        }
+        Self::bucket_hi(HIST_BUCKETS - 1)
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Named metric registry, cheaply cloneable handles.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric {name} already registered with a different type"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric {name} already registered with a different type"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::default())))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric {name} already registered with a different type"),
+        }
+    }
+
+    /// Render all metrics as aligned text lines.
+    pub fn render(&self) -> String {
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{name} = {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "{name} = {:.4}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let _ = writeln!(
+                        out,
+                        "{name}: n={} mean={:.2} p50={:.2} p99={:.2} max={:.2}",
+                        h.count(),
+                        h.mean(),
+                        h.quantile(0.50),
+                        h.quantile(0.99),
+                        h.max()
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::new();
+        let c = r.counter("requests");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = r.gauge("util");
+        g.set(0.75);
+        assert!((g.get() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn same_name_returns_same_metric() {
+        let r = Registry::new();
+        r.counter("x").add(2);
+        assert_eq!(r.counter("x").get(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn type_confusion_panics() {
+        let r = Registry::new();
+        r.counter("x");
+        r.gauge("x");
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::default();
+        for i in 1..=1000 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        // log-bucketed: p50 within a bucket (~41%) of true 500
+        assert!(p50 > 300.0 && p50 < 800.0, "p50={p50}");
+        assert!((h.mean() - 500.5).abs() < 1.0);
+        assert_eq!(h.max(), 1000.0);
+    }
+
+    #[test]
+    fn histogram_concurrent_observe() {
+        let h = Arc::new(Histogram::default());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000 {
+                        h.observe((i % 100) as f64);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn render_contains_all() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.gauge("b").set(1.0);
+        r.histogram("c").observe(10.0);
+        let s = r.render();
+        assert!(s.contains("a = 1"));
+        assert!(s.contains("b = 1.0000"));
+        assert!(s.contains("c: n=1"));
+    }
+}

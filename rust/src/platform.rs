@@ -1,0 +1,302 @@
+//! Platform catalog — the hardware models behind Table 1 of the paper.
+//!
+//! Each [`Platform`] records the spec-sheet quantities the paper uses
+//! (core/SMT count, NIC bandwidth, DRAM channel count and transfer rate)
+//! plus the modeling parameters the contention simulator ([`crate::memsim`])
+//! and cost model ([`crate::costmodel`]) need: single-thread speed relative
+//! to one IPU E2000 ARM N1 core, SMT scaling, LLC size, and relative
+//! cost/power. The derived per-core bandwidths reproduce Table 1's numbers
+//! exactly (theoretical DDR bandwidths from channel count × transfer rate,
+//! 8 bytes/transfer).
+
+/// Whether a platform is a conventional server host or a smart NIC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Server,
+    SmartNic,
+}
+
+/// One hardware platform (a row of Table 1).
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    pub kind: Kind,
+    /// Hardware threads exposed (vCPUs; SMT siblings counted).
+    pub vcpus: u32,
+    /// Physical cores (vcpus / smt_ways).
+    pub smt_ways: u32,
+    /// NIC line rate in Gbit/s.
+    pub nic_gbps: f64,
+    /// DRAM channels and per-channel transfer rate (MT/s); 8 B per transfer.
+    pub mem_channels: u32,
+    pub mem_mtps: f64,
+    /// Last-level cache in MiB (modeling input for contention).
+    pub llc_mib: f64,
+    /// Single-thread performance of one core relative to one E2000 ARM N1
+    /// core, uncontended (modeling input; see DESIGN.md §6).
+    pub st_speed: f64,
+    /// Throughput retained per SMT thread when both siblings are busy
+    /// (1.0 for non-SMT parts; ~0.65 for x86 SMT2).
+    pub smt_efficiency: f64,
+    /// Capital cost relative to one smart NIC (c_s in the paper's model).
+    pub rel_cost: f64,
+    /// Power draw relative to one smart NIC (p_s in the paper's model).
+    pub rel_power: f64,
+}
+
+impl Platform {
+    /// Theoretical DRAM bandwidth in GB/s: channels × MT/s × 8 B.
+    pub fn dram_gbs(&self) -> f64 {
+        self.mem_channels as f64 * self.mem_mtps * 8.0 / 1000.0
+    }
+
+    /// NIC bandwidth in GB/s.
+    pub fn nic_gbs(&self) -> f64 {
+        self.nic_gbps / 8.0
+    }
+
+    /// Table 1 column: NIC bandwidth per vCPU, GB/s.
+    pub fn nic_gbs_per_core(&self) -> f64 {
+        self.nic_gbs() / self.vcpus as f64
+    }
+
+    /// Table 1 column: DRAM bandwidth per vCPU, GB/s.
+    pub fn dram_gbs_per_core(&self) -> f64 {
+        self.dram_gbs() / self.vcpus as f64
+    }
+
+    /// Physical cores.
+    pub fn cores(&self) -> u32 {
+        self.vcpus / self.smt_ways
+    }
+}
+
+/// Google Cloud N1 host: 2× Intel Skylake, DDR4-2666, 100 Gbps.
+pub fn n1_skylake() -> Platform {
+    Platform {
+        name: "GCP N1 (2x Skylake)",
+        kind: Kind::Server,
+        vcpus: 96,
+        smt_ways: 2,
+        nic_gbps: 100.0,
+        mem_channels: 12,
+        mem_mtps: 2666.0,
+        llc_mib: 2.0 * 38.5,
+        st_speed: 1.30,
+        smt_efficiency: 0.65,
+        rel_cost: 7.0,
+        rel_power: 11.2,
+    }
+}
+
+/// The Skylake measurement box of Fig. 3: 112 SMTs (2× 28 cores).
+pub fn skylake_fig3() -> Platform {
+    Platform {
+        vcpus: 112,
+        ..n1_skylake()
+    }
+}
+
+/// Google Cloud N2d host: 2× AMD Milan, DDR4-3200, 100 Gbps.
+pub fn n2d_milan() -> Platform {
+    Platform {
+        name: "GCP N2d (2x Milan)",
+        kind: Kind::Server,
+        vcpus: 224,
+        smt_ways: 2,
+        nic_gbps: 100.0,
+        mem_channels: 16,
+        mem_mtps: 3200.0,
+        llc_mib: 2.0 * 256.0,
+        st_speed: 1.55,
+        smt_efficiency: 0.65,
+        rel_cost: 7.0,
+        rel_power: 11.2,
+    }
+}
+
+/// AWS M6in host: 2× Intel Ice Lake, DDR4-3200, 200 Gbps.
+pub fn m6in_icelake() -> Platform {
+    Platform {
+        name: "AWS M6in (2x Ice Lake)",
+        kind: Kind::Server,
+        vcpus: 128,
+        smt_ways: 2,
+        nic_gbps: 200.0,
+        mem_channels: 16,
+        mem_mtps: 3200.0,
+        llc_mib: 2.0 * 54.0,
+        st_speed: 1.45,
+        smt_efficiency: 0.65,
+        rel_cost: 7.0,
+        rel_power: 11.2,
+    }
+}
+
+/// Google Cloud C3 host: 2× Sapphire Rapids, DDR5-4800, 200 Gbps.
+pub fn c3_sapphire_rapids() -> Platform {
+    Platform {
+        name: "GCP C3 (2x SPR)",
+        kind: Kind::Server,
+        vcpus: 176,
+        smt_ways: 2,
+        nic_gbps: 200.0,
+        mem_channels: 16,
+        mem_mtps: 4800.0,
+        llc_mib: 2.0 * 105.0,
+        st_speed: 1.65,
+        smt_efficiency: 0.65,
+        rel_cost: 7.0,
+        rel_power: 11.2,
+    }
+}
+
+/// AMD Genoa (1× EPYC 9654) paired with a 200 Gbps NIC (paper footnote 1).
+pub fn genoa() -> Platform {
+    Platform {
+        name: "AMD Genoa (EPYC 9654)",
+        kind: Kind::Server,
+        vcpus: 192,
+        smt_ways: 2,
+        nic_gbps: 200.0,
+        mem_channels: 12,
+        mem_mtps: 4800.0,
+        llc_mib: 384.0,
+        st_speed: 1.70,
+        smt_efficiency: 0.65,
+        rel_cost: 7.0,
+        rel_power: 11.2,
+    }
+}
+
+/// Intel IPU E2000 smart NIC: 16 ARM Neoverse N1 cores, 3-ch LPDDR4-4266,
+/// 200 Gbps. The paper's reference smart NIC (cost/power baseline = 1).
+pub fn ipu_e2000() -> Platform {
+    Platform {
+        name: "Intel IPU E2000",
+        kind: Kind::SmartNic,
+        vcpus: 16,
+        smt_ways: 1,
+        nic_gbps: 200.0,
+        mem_channels: 3,
+        mem_mtps: 4266.0,
+        llc_mib: 32.0,
+        st_speed: 1.0,
+        smt_efficiency: 1.0,
+        rel_cost: 1.0,
+        rel_power: 1.0,
+    }
+}
+
+/// NVIDIA BlueField-3 DPU: 16 ARM cores, 2-ch DDR5-5600, 400 Gbps.
+pub fn bluefield_v3() -> Platform {
+    Platform {
+        name: "BlueField v3",
+        kind: Kind::SmartNic,
+        vcpus: 16,
+        smt_ways: 1,
+        nic_gbps: 400.0,
+        mem_channels: 2,
+        mem_mtps: 5600.0,
+        llc_mib: 16.0,
+        st_speed: 1.05,
+        smt_efficiency: 1.0,
+        rel_cost: 1.0,
+        rel_power: 1.0,
+    }
+}
+
+/// All Table 1 rows in paper order.
+pub fn table1_platforms() -> Vec<Platform> {
+    vec![
+        n1_skylake(),
+        n2d_milan(),
+        m6in_icelake(),
+        c3_sapphire_rapids(),
+        genoa(),
+        ipu_e2000(),
+        bluefield_v3(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    /// Table 1's "NIC bw per core" column, GB/s (paper-reported values).
+    #[test]
+    fn table1_nic_bw_per_core_matches_paper() {
+        assert!(close(n1_skylake().nic_gbs_per_core(), 0.13, 0.005));
+        assert!(close(n2d_milan().nic_gbs_per_core(), 0.06, 0.005));
+        assert!(close(m6in_icelake().nic_gbs_per_core(), 0.20, 0.005));
+        assert!(close(c3_sapphire_rapids().nic_gbs_per_core(), 0.14, 0.005));
+        assert!(close(genoa().nic_gbs_per_core(), 0.13, 0.005));
+        assert!(close(ipu_e2000().nic_gbs_per_core(), 1.56, 0.005));
+        assert!(close(bluefield_v3().nic_gbs_per_core(), 3.13, 0.005));
+    }
+
+    /// Table 1's "DRAM bw per core" column, GB/s (paper-reported values).
+    #[test]
+    fn table1_dram_bw_per_core_matches_paper() {
+        assert!(close(n1_skylake().dram_gbs_per_core(), 2.67, 0.01));
+        assert!(close(n2d_milan().dram_gbs_per_core(), 1.83, 0.01));
+        assert!(close(m6in_icelake().dram_gbs_per_core(), 3.20, 0.01));
+        assert!(close(c3_sapphire_rapids().dram_gbs_per_core(), 3.49, 0.01));
+        assert!(close(genoa().dram_gbs_per_core(), 2.40, 0.01));
+        assert!(close(ipu_e2000().dram_gbs_per_core(), 6.40, 0.01));
+        assert!(close(bluefield_v3().dram_gbs_per_core(), 5.60, 0.01));
+    }
+
+    /// §6: BlueField v3's DRAM bandwidth is only ~1.8× its NIC bandwidth —
+    /// the paper's "cannot process at line rate" observation.
+    #[test]
+    fn bluefield_mem_to_nic_ratio() {
+        let bf = bluefield_v3();
+        let ratio = bf.dram_gbs() / bf.nic_gbs();
+        assert!(close(ratio, 1.8, 0.05), "ratio={ratio}");
+        // E2000 doesn't exhibit the limitation (ratio > 4).
+        let e = ipu_e2000();
+        assert!(e.dram_gbs() / e.nic_gbs() > 4.0);
+    }
+
+    #[test]
+    fn smartnics_have_bandwidth_advantage() {
+        // The paper's headline: NICs have ~10x NIC-bw/core and ~2-3x
+        // DRAM-bw/core vs server hosts.
+        let e = ipu_e2000();
+        for p in table1_platforms() {
+            if p.kind == Kind::Server {
+                assert!(e.nic_gbs_per_core() > 7.0 * p.nic_gbs_per_core(), "{}", p.name);
+                assert!(e.dram_gbs_per_core() > 1.8 * p.dram_gbs_per_core(), "{}", p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn core_counts() {
+        assert_eq!(n2d_milan().cores(), 112);
+        assert_eq!(skylake_fig3().cores(), 56);
+        assert_eq!(ipu_e2000().cores(), 16);
+    }
+
+    #[test]
+    fn paper_core_ratio_7_to_11x() {
+        // §5.1: smart NICs have 7-11x fewer cores than traditional systems.
+        let e = ipu_e2000().vcpus as f64;
+        let lo = table1_platforms()
+            .iter()
+            .filter(|p| p.kind == Kind::Server)
+            .map(|p| p.vcpus as f64 / e)
+            .fold(f64::INFINITY, f64::min);
+        let hi = table1_platforms()
+            .iter()
+            .filter(|p| p.kind == Kind::Server)
+            .map(|p| p.vcpus as f64 / e)
+            .fold(0.0, f64::max);
+        assert!(lo >= 6.0 && hi <= 14.5, "lo={lo} hi={hi}");
+    }
+}

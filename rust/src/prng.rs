@@ -1,0 +1,313 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! Every simulator and workload generator in Lovelock takes an explicit
+//! seed so experiments are reproducible bit-for-bit. We implement PCG64
+//! (O'Neill's PCG XSL RR 128/64) plus SplitMix64 for seeding, rather than
+//! pulling in `rand` (unavailable in the offline registry). The statistical
+//! quality of PCG64 is more than sufficient for workload synthesis.
+
+/// SplitMix64: used to expand a single `u64` seed into PCG state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG XSL RR 128/64 — the main generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let i0 = sm.next_u64() as u128;
+        let i1 = sm.next_u64() as u128;
+        let mut pcg = Self {
+            state: (s0 << 64) | s1,
+            inc: ((i0 << 64) | i1) | 1,
+        };
+        // Burn a couple of outputs to decorrelate nearby seeds.
+        pcg.next_u64();
+        pcg.next_u64();
+        pcg
+    }
+
+    /// Derive an independent stream for a named sub-component.
+    ///
+    /// Used so e.g. each TPC-H table generator gets its own stream from the
+    /// top-level experiment seed without coupling their sequences.
+    pub fn derive(&self, tag: &str) -> Self {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a
+        for b in tag.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        let mut clone = self.clone();
+        let mix = clone.next_u64();
+        Self::seed_from_u64(h ^ mix)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn gen_range_u64(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in the inclusive range `[lo, hi]`.
+    #[inline]
+    pub fn gen_range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + self.gen_range_u64(span) as i64
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / ((1u64 << 53) as f64))
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    pub fn gen_range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.gen_f64() * (hi - lo)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (one value; simple, adequate here).
+    pub fn gen_normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = self.gen_f64().max(1e-300);
+        let u2 = self.gen_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Exponential with rate `lambda` (mean `1/lambda`).
+    pub fn gen_exp(&mut self, lambda: f64) -> f64 {
+        let u = self.gen_f64().max(1e-300);
+        -u.ln() / lambda
+    }
+
+    /// Zipf-like rank sample over `[0, n)` with skew `s` via rejection
+    /// inversion (adequate for workload skew synthesis).
+    pub fn gen_zipf(&mut self, n: u64, s: f64) -> u64 {
+        debug_assert!(n > 0);
+        if s <= 0.0 {
+            return self.gen_range_u64(n);
+        }
+        // Inverse-CDF on the continuous approximation.
+        let hmax = harmonic_approx(n as f64, s);
+        let u = self.gen_f64() * hmax;
+        let x = inv_harmonic_approx(u, s).floor() as u64;
+        x.min(n - 1)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range_u64(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose one element uniformly.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range_u64(xs.len() as u64) as usize]
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn choose_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.gen_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            if u < *w {
+                return i;
+            }
+            u -= *w;
+        }
+        weights.len() - 1
+    }
+}
+
+fn harmonic_approx(n: f64, s: f64) -> f64 {
+    if (s - 1.0).abs() < 1e-9 {
+        n.ln() + 0.5772156649
+    } else {
+        (n.powf(1.0 - s) - 1.0) / (1.0 - s) + 1.0
+    }
+}
+
+fn inv_harmonic_approx(h: f64, s: f64) -> f64 {
+    if (s - 1.0).abs() < 1e-9 {
+        (h - 0.5772156649).exp()
+    } else {
+        ((h - 1.0) * (1.0 - s) + 1.0).powf(1.0 / (1.0 - s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Pcg64::seed_from_u64(42);
+        let mut b = Pcg64::seed_from_u64(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed_from_u64(1);
+        let mut b = Pcg64::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn derive_streams_independent() {
+        let root = Pcg64::seed_from_u64(7);
+        let mut l = root.derive("lineitem");
+        let mut o = root.derive("orders");
+        let same = (0..64).filter(|_| l.next_u64() == o.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn range_bounds_hold() {
+        let mut r = Pcg64::seed_from_u64(3);
+        for _ in 0..10_000 {
+            let v = r.gen_range_u64(17);
+            assert!(v < 17);
+            let w = r.gen_range_i64(-5, 5);
+            assert!((-5..=5).contains(&w));
+            let f = r.gen_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn range_covers_all_values() {
+        let mut r = Pcg64::seed_from_u64(4);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[r.gen_range_u64(10) as usize] = true;
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+
+    #[test]
+    fn uniform_mean_is_centered() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.gen_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seed_from_u64(6);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gen_normal(3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut r = Pcg64::seed_from_u64(8);
+        let mut counts = [0u32; 100];
+        for _ in 0..50_000 {
+            counts[r.gen_zipf(100, 1.1) as usize] += 1;
+        }
+        assert!(counts[0] > counts[50] * 5);
+        assert!(counts.iter().enumerate().all(|(i, _)| i < 100));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed_from_u64(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_choice_respects_weights() {
+        let mut r = Pcg64::seed_from_u64(10);
+        let w = [1.0, 0.0, 9.0];
+        let mut counts = [0u32; 3];
+        for _ in 0..10_000 {
+            counts[r.choose_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > counts[0] * 5);
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Pcg64::seed_from_u64(11);
+        let n = 100_000;
+        let mean = (0..n).map(|_| r.gen_exp(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+}

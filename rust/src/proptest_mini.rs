@@ -1,0 +1,349 @@
+//! Property-based testing mini-framework (proptest is unavailable offline).
+//!
+//! Provides generator combinators over a deterministic PRNG, automatic
+//! counterexample shrinking, and a `check` entry point. Used by
+//! `rust/tests/properties.rs` for coordinator invariants (routing
+//! conservation, shuffle totals, fairness, cost-model monotonicity).
+//!
+//! Design: a [`Gen<T>`] draws a value from a PRNG. Shrinking is
+//! value-based: each strategy also knows how to propose smaller variants
+//! of a failing input, and [`check`] greedily descends until no proposed
+//! shrink still fails.
+
+use crate::prng::Pcg64;
+use std::fmt::Debug;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Number of random cases per property (override with LOVELOCK_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("LOVELOCK_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// A generation + shrinking strategy for `T`.
+pub trait Strategy: Clone {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Propose strictly "smaller" variants of `v` (may be empty).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value>;
+}
+
+/// Uniform integer range `[lo, hi]`, shrinking toward `lo`.
+#[derive(Clone)]
+pub struct IntRange {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+pub fn int_range(lo: i64, hi: i64) -> IntRange {
+    assert!(lo <= hi);
+    IntRange { lo, hi }
+}
+
+impl Strategy for IntRange {
+    type Value = i64;
+    fn generate(&self, rng: &mut Pcg64) -> i64 {
+        rng.gen_range_i64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        if *v != self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*v - self.lo) / 2;
+            if mid != *v {
+                out.push(mid);
+            }
+            if *v - 1 >= self.lo {
+                out.push(*v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// Uniform float range `[lo, hi)`, shrinking toward `lo` and simple values.
+#[derive(Clone)]
+pub struct FloatRange {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+pub fn float_range(lo: f64, hi: f64) -> FloatRange {
+    assert!(lo < hi);
+    FloatRange { lo, hi }
+}
+
+impl Strategy for FloatRange {
+    type Value = f64;
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        rng.gen_range_f64(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        for cand in [self.lo, 0.0, 1.0, (self.lo + *v) / 2.0] {
+            if cand >= self.lo && cand < self.hi && cand != *v && (cand - *v).abs() > 1e-12 {
+                out.push(cand);
+            }
+        }
+        out
+    }
+}
+
+/// Vector of values from an element strategy, shrinking by halving length
+/// then shrinking elements.
+#[derive(Clone)]
+pub struct VecOf<S: Strategy> {
+    pub elem: S,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+pub fn vec_of<S: Strategy>(elem: S, min_len: usize, max_len: usize) -> VecOf<S> {
+    assert!(min_len <= max_len);
+    VecOf { elem, min_len, max_len }
+}
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Value = Vec<S::Value>;
+    fn generate(&self, rng: &mut Pcg64) -> Vec<S::Value> {
+        let len = self.min_len + rng.gen_range_u64((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<S::Value>) -> Vec<Vec<S::Value>> {
+        let mut out = Vec::new();
+        // Halve the vector (front half, back half).
+        if v.len() > self.min_len {
+            let half = (v.len() / 2).max(self.min_len);
+            out.push(v[..half].to_vec());
+            out.push(v[v.len() - half..].to_vec());
+            // Drop one element.
+            if v.len() - 1 >= self.min_len {
+                let mut w = v.clone();
+                w.pop();
+                out.push(w);
+            }
+        }
+        // Shrink the first shrinkable element.
+        for (i, elem) in v.iter().enumerate().take(8) {
+            for smaller in self.elem.shrink(elem).into_iter().take(2) {
+                let mut w = v.clone();
+                w[i] = smaller;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of two strategies.
+#[derive(Clone)]
+pub struct PairOf<A: Strategy, B: Strategy> {
+    pub a: A,
+    pub b: B,
+}
+
+pub fn pair_of<A: Strategy, B: Strategy>(a: A, b: B) -> PairOf<A, B> {
+    PairOf { a, b }
+}
+
+impl<A: Strategy, B: Strategy> Strategy for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.a.generate(rng), self.b.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .a
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.b.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Result of a property check.
+#[derive(Debug)]
+pub enum PropResult<T: Debug> {
+    Ok { cases: usize },
+    Failed { original: T, shrunk: T, message: String },
+}
+
+/// Run `prop` over `cases` random inputs from `strategy`; on failure,
+/// shrink greedily and return the minimal counterexample found.
+pub fn check_with_seed<S, F>(seed: u64, cases: usize, strategy: &S, prop: F) -> PropResult<S::Value>
+where
+    S: Strategy,
+    F: Fn(&S::Value) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    let mut rng = Pcg64::seed_from_u64(seed);
+    for _ in 0..cases {
+        let input = strategy.generate(&mut rng);
+        if let Err(msg) = run_case(&prop, &input) {
+            // Shrink.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in strategy.shrink(&best) {
+                    if let Err(m) = run_case(&prop, &cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            return PropResult::Failed { original: input, shrunk: best, message: best_msg };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+fn run_case<T: Clone + Debug, F>(prop: &F, input: &T) -> Result<(), String>
+where
+    F: Fn(&T) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    let input2 = input.clone();
+    match catch_unwind(AssertUnwindSafe(|| prop(&input2))) {
+        Ok(r) => r,
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic".to_string());
+            Err(format!("panicked: {msg}"))
+        }
+    }
+}
+
+/// Assert-style wrapper: panics with the shrunk counterexample on failure.
+pub fn check<S, F>(name: &str, strategy: &S, prop: F)
+where
+    S: Strategy,
+    F: Fn(&S::Value) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    let seed = 0xC0FFEE ^ fnv(name);
+    match check_with_seed(seed, default_cases(), strategy, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { original, shrunk, message } => {
+            panic!(
+                "property {name} failed: {message}\n  original: {original:?}\n  shrunk:   {shrunk:?}"
+            );
+        }
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let r = check_with_seed(1, 64, &int_range(0, 100), |v| {
+            if *v <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert!(matches!(r, PropResult::Ok { cases: 64 }));
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        // Fails for v >= 50; minimal counterexample is 50.
+        let r = check_with_seed(2, 256, &int_range(0, 1000), |v| {
+            if *v < 50 {
+                Ok(())
+            } else {
+                Err(format!("{v} too big"))
+            }
+        });
+        match r {
+            PropResult::Failed { shrunk, .. } => assert_eq!(shrunk, 50),
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn vec_shrinks_toward_small() {
+        // Fails when the vec contains any element >= 10.
+        let strat = vec_of(int_range(0, 100), 0, 50);
+        let r = check_with_seed(3, 256, &strat, |v| {
+            if v.iter().all(|x| *x < 10) {
+                Ok(())
+            } else {
+                Err("has big elem".into())
+            }
+        });
+        match r {
+            PropResult::Failed { shrunk, .. } => {
+                assert!(shrunk.len() <= 2, "shrunk too big: {shrunk:?}");
+                assert!(shrunk.iter().any(|x| *x >= 10));
+            }
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn panic_is_caught_as_failure() {
+        let r = check_with_seed(4, 64, &int_range(0, 10), |v| {
+            if *v > 8 {
+                panic!("boom at {v}");
+            }
+            Ok(())
+        });
+        assert!(matches!(r, PropResult::Failed { .. }));
+    }
+
+    #[test]
+    fn pair_strategy_generates_and_shrinks() {
+        let strat = pair_of(int_range(0, 100), float_range(0.0, 1.0));
+        let mut rng = Pcg64::seed_from_u64(5);
+        let v = strat.generate(&mut rng);
+        assert!((0..=100).contains(&v.0));
+        assert!((0.0..1.0).contains(&v.1));
+        let r = check_with_seed(6, 128, &strat, |(a, _b)| {
+            if *a < 90 {
+                Ok(())
+            } else {
+                Err("a big".into())
+            }
+        });
+        match r {
+            PropResult::Failed { shrunk, .. } => assert_eq!(shrunk.0, 90),
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let f = |v: &i64| if *v < 5000 { Ok(()) } else { Err("x".into()) };
+        let a = check_with_seed(7, 64, &int_range(0, 10_000), f);
+        let b = check_with_seed(7, 64, &int_range(0, 10_000), f);
+        match (a, b) {
+            (PropResult::Failed { original: o1, .. }, PropResult::Failed { original: o2, .. }) => {
+                assert_eq!(o1, o2)
+            }
+            (PropResult::Ok { .. }, PropResult::Ok { .. }) => {}
+            _ => panic!("nondeterministic"),
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them
+//! from the Rust request path — Python is never in the loop.
+//!
+//! Artifacts are HLO **text** (`artifacts/*.hlo.txt`), produced once by
+//! `python/compile/aot.py`. Text is the interchange format because jax ≥
+//! 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+//! xla_extension 0.5.1 backing the `xla` crate rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! [`Engine`] wraps the PJRT CPU client; [`Module`] is one compiled
+//! executable. For iterated execution (the training loop) use the
+//! buffer-to-buffer path ([`Module::execute_buffers`]) so parameters stay
+//! resident and no literal round-trips happen per step.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// The PJRT engine (CPU plugin).
+pub struct Engine {
+    client: PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: PjRtClient::cpu().context("create PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_module<P: AsRef<Path>>(&self, path: P) -> Result<Module> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Module { exe, name: path.display().to_string() })
+    }
+
+    /// Copy a host literal into a device buffer.
+    pub fn to_device(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("host->device: {e}"))
+    }
+}
+
+/// One compiled executable.
+pub struct Module {
+    exe: PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Module {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host literals; returns the outputs as literals.
+    ///
+    /// Single-output modules (`return_tuple=False` in aot.py) yield one
+    /// array literal; tuple-rooted modules are decomposed into their
+    /// elements.
+    pub fn execute(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let outs = self.exe.execute::<Literal>(inputs).map_err(|e| anyhow!("execute: {e}"))?;
+        let lit = outs[0][0].to_literal_sync().map_err(|e| anyhow!("d2h: {e}"))?;
+        let is_tuple = lit.shape().map(|s| s.is_tuple()).unwrap_or(false);
+        if is_tuple {
+            Ok(lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?)
+        } else {
+            Ok(vec![lit])
+        }
+    }
+
+    /// Execute buffer-to-buffer (no host round trip). Returns the raw
+    /// output buffers of the first (only) device.
+    ///
+    /// CAUTION: the CPU PJRT client executes asynchronously; callers must
+    /// keep the input buffers alive until the outputs have been observed
+    /// (see `TrainDriver`, which retires inputs one generation late).
+    pub fn execute_buffers<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        inputs: &[B],
+    ) -> Result<Vec<PjRtBuffer>> {
+        let mut outs =
+            self.exe.execute_b(inputs).map_err(|e| anyhow!("execute_b: {e}"))?;
+        Ok(outs.swap_remove(0))
+    }
+}
+
+/// Blocking partial read of `n` f32 elements at `offset` from a device
+/// buffer. Doubles as a synchronization point: PJRT CPU executes
+/// asynchronously, and this returns only after the producing computation
+/// finished — after which its input buffers may safely be dropped.
+pub fn read_f32_at(buf: &PjRtBuffer, offset: usize, n: usize) -> Result<Vec<f32>> {
+    let mut out = vec![0f32; n];
+    buf.copy_raw_to_host_sync(&mut out, offset)
+        .map_err(|e| anyhow!("copy_raw_to_host_sync: {e}"))?;
+    Ok(out)
+}
+
+/// f32 vector → rank-N literal.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// i32 vector → rank-N literal.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Literal → f32 vec.
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+}
+
+/// Scalar f32 from a literal.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    let v = to_f32(lit)?;
+    anyhow::ensure!(!v.is_empty(), "empty literal");
+    Ok(v[0])
+}
+
+/// Path to an artifact, honouring LOVELOCK_ARTIFACTS.
+pub fn artifact_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::var("LOVELOCK_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    std::path::Path::new(&dir).join(name)
+}
+
+/// True if the artifact directory has been built.
+pub fn artifacts_available() -> bool {
+    artifact_path("q6_scan.hlo.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full engine tests (needing artifacts) live in
+    // rust/tests/integration_runtime.rs; these cover the helpers.
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let l = literal_f32(&[42.5], &[1]).unwrap();
+        assert_eq!(scalar_f32(&l).unwrap(), 42.5);
+    }
+
+    #[test]
+    fn artifact_path_respects_env() {
+        std::env::set_var("LOVELOCK_ARTIFACTS", "/tmp/lovelock-test-artifacts");
+        assert_eq!(
+            artifact_path("x.hlo.txt"),
+            std::path::PathBuf::from("/tmp/lovelock-test-artifacts/x.hlo.txt")
+        );
+        std::env::remove_var("LOVELOCK_ARTIFACTS");
+    }
+}

@@ -1,0 +1,390 @@
+//! Flow-level datacenter-fabric simulator.
+//!
+//! Lovelock's §5.2/§6 arguments are about *aggregate end-host bandwidth*
+//! and *fabric capacity*: replacing one server (one NIC) with φ smart NICs
+//! multiplies end-host ports, while the ToR/fabric may be oversubscribed.
+//! This simulator models exactly that altitude: nodes with host links,
+//! two-tier topology (ToR uplinks to a non-blocking core), flows that
+//! share links by **max-min fairness** (progressive filling), and an
+//! event-driven loop that advances simulated time between flow arrivals
+//! and completions. Shuffle and storage traffic in the coordinator run on
+//! top of it.
+
+use std::collections::BTreeMap;
+
+/// Identifier of a node (a server or a smart NIC).
+pub type NodeId = usize;
+/// Identifier of a flow.
+pub type FlowId = usize;
+
+/// Two-tier topology: `racks × nodes_per_rack` hosts; each rack's ToR has
+/// an aggregated uplink (per direction) to a non-blocking core.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub racks: usize,
+    pub nodes_per_rack: usize,
+    /// Host link rate per node, Gbit/s (full duplex: modeled per direction).
+    pub host_gbps: f64,
+    /// ToR uplink aggregate per direction, Gbit/s.
+    pub tor_uplink_gbps: f64,
+}
+
+impl Topology {
+    pub fn new(racks: usize, nodes_per_rack: usize, host_gbps: f64, tor_uplink_gbps: f64) -> Self {
+        assert!(racks > 0 && nodes_per_rack > 0 && host_gbps > 0.0 && tor_uplink_gbps > 0.0);
+        Self { racks, nodes_per_rack, host_gbps, tor_uplink_gbps }
+    }
+
+    /// Non-oversubscribed fabric for `n` nodes in one logical rack.
+    pub fn flat(n: usize, host_gbps: f64) -> Self {
+        Self::new(1, n, host_gbps, host_gbps * n as f64)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.racks * self.nodes_per_rack
+    }
+
+    pub fn rack_of(&self, n: NodeId) -> usize {
+        n / self.nodes_per_rack
+    }
+
+    /// Oversubscription ratio: worst-case rack egress demand over uplink.
+    pub fn oversubscription(&self) -> f64 {
+        self.nodes_per_rack as f64 * self.host_gbps / self.tor_uplink_gbps
+    }
+}
+
+/// Links are identified structurally for the fairness computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum Link {
+    HostUp(NodeId),
+    HostDown(NodeId),
+    TorUp(usize),
+    TorDown(usize),
+}
+
+/// One flow: `bytes` from `src` to `dst`, injected at `start` (seconds).
+#[derive(Clone, Debug)]
+pub struct Flow {
+    pub id: FlowId,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: f64,
+    pub start: f64,
+}
+
+/// Completion record for a finished flow.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowDone {
+    pub id: FlowId,
+    pub start: f64,
+    pub finish: f64,
+    pub bytes: f64,
+}
+
+impl FlowDone {
+    pub fn duration(&self) -> f64 {
+        self.finish - self.start
+    }
+    /// Average achieved goodput, Gbit/s.
+    pub fn gbps(&self) -> f64 {
+        self.bytes * 8.0 / self.duration() / 1e9
+    }
+}
+
+/// The simulator: add flows, then [`Simulation::run`].
+pub struct Simulation {
+    topo: Topology,
+    flows: Vec<Flow>,
+    next_id: FlowId,
+}
+
+impl Simulation {
+    pub fn new(topo: Topology) -> Self {
+        Self { topo, flows: Vec::new(), next_id: 0 }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Queue a flow; returns its id. `src == dst` flows complete instantly
+    /// (local loopback — infinite bandwidth at this altitude).
+    pub fn add_flow(&mut self, src: NodeId, dst: NodeId, bytes: f64, start: f64) -> FlowId {
+        assert!(src < self.topo.num_nodes() && dst < self.topo.num_nodes());
+        assert!(bytes >= 0.0 && start >= 0.0);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.flows.push(Flow { id, src, dst, bytes, start });
+        id
+    }
+
+    fn links_of(&self, f: &Flow) -> Vec<Link> {
+        let (sr, dr) = (self.topo.rack_of(f.src), self.topo.rack_of(f.dst));
+        let mut ls = vec![Link::HostUp(f.src), Link::HostDown(f.dst)];
+        if sr != dr {
+            ls.push(Link::TorUp(sr));
+            ls.push(Link::TorDown(dr));
+        }
+        ls
+    }
+
+    /// Max-min fair rates (bytes/s) for the given active flow indices.
+    fn rates(&self, active: &[usize]) -> Vec<f64> {
+        // Capacities in bytes/s.
+        let cap_of = |l: Link| -> f64 {
+            match l {
+                Link::HostUp(_) | Link::HostDown(_) => self.topo.host_gbps * 1e9 / 8.0,
+                Link::TorUp(_) | Link::TorDown(_) => self.topo.tor_uplink_gbps * 1e9 / 8.0,
+            }
+        };
+        let mut remaining: BTreeMap<Link, (f64, usize)> = BTreeMap::new();
+        let mut flow_links: Vec<Vec<Link>> = Vec::with_capacity(active.len());
+        for &fi in active {
+            let ls = self.links_of(&self.flows[fi]);
+            for &l in &ls {
+                let e = remaining.entry(l).or_insert((cap_of(l), 0));
+                e.1 += 1;
+            }
+            flow_links.push(ls);
+        }
+        let mut rate = vec![0.0f64; active.len()];
+        let mut fixed = vec![false; active.len()];
+        let mut unfixed = active.len();
+        // Progressive filling: repeatedly saturate the tightest link.
+        while unfixed > 0 {
+            // Find the link with the smallest fair share among links that
+            // still carry unfixed flows.
+            let mut best: Option<(f64, Link)> = None;
+            for (&l, &(cap, cnt)) in &remaining {
+                if cnt == 0 {
+                    continue;
+                }
+                let share = cap / cnt as f64;
+                if best.map(|(s, _)| share < s).unwrap_or(true) {
+                    best = Some((share, l));
+                }
+            }
+            let (share, bottleneck) = match best {
+                Some(b) => b,
+                None => break,
+            };
+            // Fix every unfixed flow crossing the bottleneck at `share`.
+            for (ai, links) in flow_links.iter().enumerate() {
+                if fixed[ai] || !links.contains(&bottleneck) {
+                    continue;
+                }
+                fixed[ai] = true;
+                unfixed -= 1;
+                rate[ai] = share;
+                for &l in links {
+                    let e = remaining.get_mut(&l).unwrap();
+                    e.0 = (e.0 - share).max(0.0);
+                    e.1 -= 1;
+                }
+            }
+        }
+        rate
+    }
+
+    /// Run to completion of all flows; returns per-flow records sorted by
+    /// id. Zero-byte and loopback flows complete at their start time.
+    pub fn run(&mut self) -> Vec<FlowDone> {
+        let mut done: Vec<FlowDone> = Vec::with_capacity(self.flows.len());
+        let mut remaining: Vec<f64> = self.flows.iter().map(|f| f.bytes).collect();
+        let mut finished: Vec<bool> = vec![false; self.flows.len()];
+        // Instant completions.
+        for (i, f) in self.flows.iter().enumerate() {
+            if f.bytes == 0.0 || f.src == f.dst {
+                finished[i] = true;
+                done.push(FlowDone { id: f.id, start: f.start, finish: f.start, bytes: f.bytes });
+            }
+        }
+        let mut now = 0.0f64;
+        loop {
+            let active: Vec<usize> = self
+                .flows
+                .iter()
+                .enumerate()
+                .filter(|(i, f)| !finished[*i] && f.start <= now + 1e-12)
+                .map(|(i, _)| i)
+                .collect();
+            let next_arrival = self
+                .flows
+                .iter()
+                .enumerate()
+                .filter(|(i, f)| !finished[*i] && f.start > now + 1e-12)
+                .map(|(_, f)| f.start)
+                .fold(f64::INFINITY, f64::min);
+            if active.is_empty() {
+                if next_arrival.is_infinite() {
+                    break;
+                }
+                now = next_arrival;
+                continue;
+            }
+            let rates = self.rates(&active);
+            // Time to the first completion among active flows.
+            let mut dt = f64::INFINITY;
+            for (ai, &fi) in active.iter().enumerate() {
+                if rates[ai] > 0.0 {
+                    dt = dt.min(remaining[fi] / rates[ai]);
+                }
+            }
+            assert!(dt.is_finite(), "deadlock: active flows with zero rate");
+            let step = dt.min(next_arrival - now);
+            for (ai, &fi) in active.iter().enumerate() {
+                remaining[fi] -= rates[ai] * step;
+                if remaining[fi] <= 1e-6 {
+                    finished[fi] = true;
+                    let f = &self.flows[fi];
+                    done.push(FlowDone {
+                        id: f.id,
+                        start: f.start,
+                        finish: now + step,
+                        bytes: f.bytes,
+                    });
+                }
+            }
+            now += step;
+        }
+        done.sort_by_key(|d| d.id);
+        done
+    }
+
+    /// Makespan of a flow set: max finish time.
+    pub fn run_makespan(&mut self) -> f64 {
+        self.run().iter().map(|d| d.finish).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn single_flow_gets_line_rate() {
+        // 100 Gbps host links: 12.5 GB/s; 12.5 GB flow takes 1 s.
+        let mut sim = Simulation::new(Topology::flat(4, 100.0));
+        sim.add_flow(0, 1, 12.5e9, 0.0);
+        let d = sim.run();
+        assert!(close(d[0].finish, 1.0, 1e-6));
+        assert!(close(d[0].gbps(), 100.0, 0.01));
+    }
+
+    #[test]
+    fn two_flows_share_receiver_fairly() {
+        // Both flows target node 2: its down-link halves each rate.
+        let mut sim = Simulation::new(Topology::flat(4, 100.0));
+        sim.add_flow(0, 2, 12.5e9, 0.0);
+        sim.add_flow(1, 2, 12.5e9, 0.0);
+        let d = sim.run();
+        assert!(close(d[0].finish, 2.0, 1e-6));
+        assert!(close(d[1].finish, 2.0, 1e-6));
+    }
+
+    #[test]
+    fn disjoint_flows_do_not_interfere() {
+        let mut sim = Simulation::new(Topology::flat(4, 100.0));
+        sim.add_flow(0, 1, 12.5e9, 0.0);
+        sim.add_flow(2, 3, 12.5e9, 0.0);
+        let d = sim.run();
+        assert!(close(d[0].finish, 1.0, 1e-6));
+        assert!(close(d[1].finish, 1.0, 1e-6));
+    }
+
+    #[test]
+    fn short_flow_releases_bandwidth() {
+        // Flow B is half the size; after it finishes, A speeds up.
+        // Shared receiver: each at 6.25 GB/s. B (6.25 GB) done at t=1.
+        // A then runs at 12.5 GB/s for its remaining 6.25 GB → done t=1.5.
+        let mut sim = Simulation::new(Topology::flat(4, 100.0));
+        sim.add_flow(0, 2, 12.5e9, 0.0);
+        sim.add_flow(1, 2, 6.25e9, 0.0);
+        let d = sim.run();
+        assert!(close(d[1].finish, 1.0, 1e-6));
+        assert!(close(d[0].finish, 1.5, 1e-6));
+    }
+
+    #[test]
+    fn oversubscribed_tor_throttles_cross_rack() {
+        // 2 racks × 4 nodes, 100 Gbps hosts, 200 Gbps uplink → 2:1 oversub.
+        let topo = Topology::new(2, 4, 100.0, 200.0);
+        assert!(close(topo.oversubscription(), 2.0, 1e-12));
+        let mut sim = Simulation::new(topo);
+        // All 4 nodes of rack 0 send cross-rack: 400 Gbps demand on a
+        // 200 Gbps uplink → each achieves 50 Gbps.
+        for i in 0..4 {
+            sim.add_flow(i, 4 + i, 6.25e9, 0.0); // 6.25 GB at 6.25 GB/s-half
+        }
+        let d = sim.run();
+        for f in &d {
+            assert!(close(f.gbps(), 50.0, 0.5), "gbps={}", f.gbps());
+        }
+    }
+
+    #[test]
+    fn intra_rack_unaffected_by_oversubscription() {
+        let topo = Topology::new(2, 4, 100.0, 100.0);
+        let mut sim = Simulation::new(topo);
+        sim.add_flow(0, 1, 12.5e9, 0.0); // same rack
+        let d = sim.run();
+        assert!(close(d[0].gbps(), 100.0, 0.1));
+    }
+
+    #[test]
+    fn staggered_arrivals() {
+        // Second flow arrives at t=0.5 sharing the same receiver.
+        let mut sim = Simulation::new(Topology::flat(4, 100.0));
+        sim.add_flow(0, 2, 12.5e9, 0.0);
+        sim.add_flow(1, 2, 12.5e9, 0.5);
+        let d = sim.run();
+        // A alone for 0.5s (6.25 GB done), then shared: each 6.25 GB/s.
+        // A needs 1 more second → t=1.5. B: 12.5 GB at 6.25 GB/s, then
+        // alone after A finishes: 6.25 GB done by 1.5, remaining 6.25 GB
+        // at full rate → t=2.0.
+        assert!(close(d[0].finish, 1.5, 1e-6));
+        assert!(close(d[1].finish, 2.0, 1e-6));
+    }
+
+    #[test]
+    fn zero_bytes_and_loopback_complete_instantly() {
+        let mut sim = Simulation::new(Topology::flat(2, 100.0));
+        sim.add_flow(0, 1, 0.0, 3.0);
+        sim.add_flow(1, 1, 5e9, 2.0);
+        let d = sim.run();
+        assert!(close(d[0].finish, 3.0, 1e-12));
+        assert!(close(d[1].finish, 2.0, 1e-12));
+    }
+
+    #[test]
+    fn phi_scaling_increases_aggregate_bandwidth() {
+        // The Lovelock argument: 1 server with 100 Gbps vs φ=2 NICs with
+        // 200 Gbps each. Same total shuffle bytes split across nodes →
+        // makespan shrinks by 4x.
+        let total_bytes = 100e9;
+        // Server-centric: 2 servers exchange.
+        let mut s1 = Simulation::new(Topology::flat(2, 100.0));
+        s1.add_flow(0, 1, total_bytes / 2.0, 0.0);
+        s1.add_flow(1, 0, total_bytes / 2.0, 0.0);
+        let m1 = s1.run_makespan();
+        // Lovelock φ=2, 200 Gbps/NIC: 4 nodes, pairwise exchange.
+        let mut s2 = Simulation::new(Topology::flat(4, 200.0));
+        for i in 0..4usize {
+            let j = (i + 2) % 4;
+            s2.add_flow(i, j, total_bytes / 4.0, 0.0);
+        }
+        let m2 = s2.run_makespan();
+        assert!(close(m1 / m2, 4.0, 0.05), "ratio={}", m1 / m2);
+    }
+
+    #[test]
+    fn makespan_of_empty_is_zero() {
+        let mut sim = Simulation::new(Topology::flat(2, 100.0));
+        assert_eq!(sim.run_makespan(), 0.0);
+    }
+}

@@ -1,0 +1,231 @@
+//! Disaggregated storage substrate.
+//!
+//! In Lovelock, a *storage node* is a smart NIC with several SSDs serving
+//! requests over the network. This module provides (a) an in-memory object
+//! store with SSD bandwidth/IOPS accounting (the simulated device), and
+//! (b) a [`StorageNode`] that fronts a set of devices and reports the
+//! service time of each request so the coordinator can overlay storage I/O
+//! onto the fabric simulation.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Performance envelope of one storage device.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceSpec {
+    /// Sequential read bandwidth, bytes/s.
+    pub read_bps: f64,
+    /// Sequential write bandwidth, bytes/s.
+    pub write_bps: f64,
+    /// Per-request fixed latency, seconds.
+    pub latency_s: f64,
+}
+
+impl DeviceSpec {
+    /// A datacenter NVMe SSD: 3.2 GB/s read, 2.0 GB/s write, 80 µs.
+    pub fn nvme() -> Self {
+        Self { read_bps: 3.2e9, write_bps: 2.0e9, latency_s: 80e-6 }
+    }
+
+    /// A capacity HDD: 250 MB/s, 8 ms.
+    pub fn hdd() -> Self {
+        Self { read_bps: 250e6, write_bps: 220e6, latency_s: 8e-3 }
+    }
+}
+
+/// One simulated device: stores object bytes and accounts busy time.
+struct Device {
+    spec: DeviceSpec,
+    /// device-time at which the device next becomes free (seconds).
+    busy_until: f64,
+    bytes_read: u64,
+    bytes_written: u64,
+}
+
+/// Result of a storage request.
+#[derive(Clone, Copy, Debug)]
+pub struct IoResult {
+    /// When the device completed the request (device timeline, seconds).
+    pub complete_at: f64,
+    /// Pure service time (latency + transfer).
+    pub service_s: f64,
+    pub bytes: u64,
+}
+
+/// A storage node: object key → (device, bytes), striped over devices.
+pub struct StorageNode {
+    devices: Mutex<Vec<Device>>,
+    objects: Mutex<HashMap<String, (usize, Vec<u8>)>>,
+    next_device: Mutex<usize>,
+}
+
+impl StorageNode {
+    pub fn new(n_devices: usize, spec: DeviceSpec) -> Self {
+        assert!(n_devices > 0);
+        Self {
+            devices: Mutex::new(
+                (0..n_devices)
+                    .map(|_| Device { spec, busy_until: 0.0, bytes_read: 0, bytes_written: 0 })
+                    .collect(),
+            ),
+            objects: Mutex::new(HashMap::new()),
+            next_device: Mutex::new(0),
+        }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.lock().unwrap().len()
+    }
+
+    /// Write an object at simulated time `now`; round-robin placement.
+    pub fn put(&self, key: &str, data: Vec<u8>, now: f64) -> IoResult {
+        let dev_idx = {
+            let mut g = self.next_device.lock().unwrap();
+            let i = *g;
+            *g = (*g + 1) % self.num_devices();
+            i
+        };
+        let bytes = data.len() as u64;
+        let service = {
+            let mut devs = self.devices.lock().unwrap();
+            let d = &mut devs[dev_idx];
+            let start = d.busy_until.max(now);
+            let service = d.spec.latency_s + bytes as f64 / d.spec.write_bps;
+            d.busy_until = start + service;
+            d.bytes_written += bytes;
+            IoResult { complete_at: start + service, service_s: service, bytes }
+        };
+        self.objects.lock().unwrap().insert(key.to_string(), (dev_idx, data));
+        service
+    }
+
+    /// Read an object at simulated time `now`.
+    pub fn get(&self, key: &str, now: f64) -> Option<(Vec<u8>, IoResult)> {
+        let (dev_idx, data) = {
+            let objs = self.objects.lock().unwrap();
+            let (i, d) = objs.get(key)?;
+            (*i, d.clone())
+        };
+        let bytes = data.len() as u64;
+        let mut devs = self.devices.lock().unwrap();
+        let d = &mut devs[dev_idx];
+        let start = d.busy_until.max(now);
+        let service = d.spec.latency_s + bytes as f64 / d.spec.read_bps;
+        d.busy_until = start + service;
+        d.bytes_read += bytes;
+        Some((data, IoResult { complete_at: start + service, service_s: service, bytes }))
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.objects.lock().unwrap().contains_key(key)
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        self.objects.lock().unwrap().remove(key).is_some()
+    }
+
+    /// Total bytes stored.
+    pub fn stored_bytes(&self) -> u64 {
+        self.objects.lock().unwrap().values().map(|(_, d)| d.len() as u64).sum()
+    }
+
+    /// (bytes_read, bytes_written) across devices.
+    pub fn io_totals(&self) -> (u64, u64) {
+        let devs = self.devices.lock().unwrap();
+        devs.iter().fold((0, 0), |(r, w), d| (r + d.bytes_read, w + d.bytes_written))
+    }
+
+    /// Aggregate sequential read bandwidth of the node, bytes/s.
+    pub fn aggregate_read_bps(&self) -> f64 {
+        let devs = self.devices.lock().unwrap();
+        devs.iter().map(|d| d.spec.read_bps).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let node = StorageNode::new(4, DeviceSpec::nvme());
+        let data = vec![42u8; 1024];
+        node.put("obj/1", data.clone(), 0.0);
+        let (got, _) = node.get("obj/1", 0.0).unwrap();
+        assert_eq!(got, data);
+        assert!(node.contains("obj/1"));
+        assert!(!node.contains("obj/2"));
+    }
+
+    #[test]
+    fn read_timing_matches_spec() {
+        let node = StorageNode::new(1, DeviceSpec::nvme());
+        let mb = vec![0u8; 3_200_000]; // 3.2 MB → 1 ms transfer
+        node.put("k", mb, 0.0);
+        let (_, io) = node.get("k", 1.0).unwrap();
+        assert!(close(io.service_s, 80e-6 + 1e-3, 1e-9));
+    }
+
+    #[test]
+    fn device_queueing_serializes() {
+        // Two reads on the same (single) device queue behind each other.
+        let node = StorageNode::new(1, DeviceSpec::nvme());
+        node.put("a", vec![0u8; 3_200_000], 0.0);
+        let w = node.get("a", 10.0).unwrap().1; // starts at max(busy, 10.0)
+        let x = node.get("a", 10.0).unwrap().1;
+        assert!(x.complete_at > w.complete_at);
+        assert!(close(x.complete_at - w.complete_at, w.service_s, 1e-9));
+    }
+
+    #[test]
+    fn striping_round_robins() {
+        let node = StorageNode::new(4, DeviceSpec::nvme());
+        for i in 0..8 {
+            node.put(&format!("k{i}"), vec![0u8; 100], 0.0);
+        }
+        // With 4 devices and 8 objects, reads of k0..k3 queue on distinct
+        // devices → identical start times.
+        let times: Vec<f64> = (0..4)
+            .map(|i| node.get(&format!("k{i}"), 1.0).unwrap().1.complete_at)
+            .collect();
+        for t in &times {
+            assert!(close(*t, times[0], 1e-9));
+        }
+    }
+
+    #[test]
+    fn totals_account() {
+        let node = StorageNode::new(2, DeviceSpec::nvme());
+        node.put("a", vec![1u8; 500], 0.0);
+        node.put("b", vec![2u8; 300], 0.0);
+        node.get("a", 0.0);
+        let (r, w) = node.io_totals();
+        assert_eq!(w, 800);
+        assert_eq!(r, 500);
+        assert_eq!(node.stored_bytes(), 800);
+        assert!(node.delete("a"));
+        assert_eq!(node.stored_bytes(), 300);
+        assert!(!node.delete("a"));
+    }
+
+    #[test]
+    fn hdd_slower_than_nvme() {
+        let nvme = StorageNode::new(1, DeviceSpec::nvme());
+        let hdd = StorageNode::new(1, DeviceSpec::hdd());
+        nvme.put("k", vec![0u8; 10_000_000], 0.0);
+        hdd.put("k", vec![0u8; 10_000_000], 0.0);
+        let t_nvme = nvme.get("k", 100.0).unwrap().1.service_s;
+        let t_hdd = hdd.get("k", 100.0).unwrap().1.service_s;
+        assert!(t_hdd > 10.0 * t_nvme);
+    }
+
+    #[test]
+    fn aggregate_bandwidth_scales_with_devices() {
+        let node = StorageNode::new(4, DeviceSpec::nvme());
+        assert!(close(node.aggregate_read_bps(), 4.0 * 3.2e9, 1.0));
+    }
+}

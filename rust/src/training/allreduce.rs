@@ -1,0 +1,103 @@
+//! All-reduce traffic accounting — the §6 "Scaling networking bandwidth"
+//! discussion.
+//!
+//! In a traditional cluster, the GPUs inside one host reduce gradients
+//! over NVLink before touching the datacenter network; only one
+//! host-level shard crosses the fabric. If Lovelock splits a host's GPUs
+//! across φ smart NICs, intra-host reduction shrinks and datacenter
+//! all-reduce traffic grows ≈ φ× — the cost the paper flags for workloads
+//! with fast intra-host interconnects.
+
+/// Topology of one ring all-reduce over `nodes` network endpoints, each
+/// aggregating `gpus_per_node` GPUs locally first.
+#[derive(Clone, Copy, Debug)]
+pub struct AllReduceTopology {
+    pub nodes: u32,
+    pub gpus_per_node: u32,
+}
+
+impl AllReduceTopology {
+    /// Bytes each network endpoint sends over the fabric for one ring
+    /// all-reduce of a `bytes`-sized gradient: 2·(n−1)/n · bytes.
+    pub fn fabric_bytes_per_node(&self, bytes: f64) -> f64 {
+        let n = self.nodes as f64;
+        if n <= 1.0 {
+            return 0.0;
+        }
+        2.0 * (n - 1.0) / n * bytes
+    }
+
+    /// Total bytes crossing the datacenter fabric.
+    pub fn fabric_bytes_total(&self, bytes: f64) -> f64 {
+        self.fabric_bytes_per_node(bytes) * self.nodes as f64
+    }
+
+    /// Ring all-reduce wall time given per-endpoint NIC bandwidth (GB/s),
+    /// ignoring latency terms (bandwidth-dominated regime).
+    pub fn time_secs(&self, bytes: f64, nic_gbs: f64) -> f64 {
+        self.fabric_bytes_per_node(bytes) / (nic_gbs * 1e9)
+    }
+}
+
+/// Traffic multiplier of Lovelock vs a traditional cluster: `hosts`
+/// servers with `gpus_per_host` GPUs each, vs `hosts × phi` NICs with
+/// `gpus_per_host / phi` GPUs each, all-reducing the same gradient.
+pub fn lovelock_traffic_multiplier(hosts: u32, gpus_per_host: u32, phi: u32) -> f64 {
+    assert!(phi >= 1 && gpus_per_host % phi == 0);
+    let grad = 1.0; // normalized gradient size
+    let trad = AllReduceTopology { nodes: hosts, gpus_per_node: gpus_per_host }
+        .fabric_bytes_total(grad);
+    let love = AllReduceTopology {
+        nodes: hosts * phi,
+        gpus_per_node: gpus_per_host / phi,
+    }
+    .fabric_bytes_total(grad);
+    love / trad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn ring_formula() {
+        let t = AllReduceTopology { nodes: 4, gpus_per_node: 8 };
+        assert!(close(t.fabric_bytes_per_node(1e9), 1.5e9, 1.0));
+        assert!(close(t.fabric_bytes_total(1e9), 6e9, 1.0));
+        let single = AllReduceTopology { nodes: 1, gpus_per_node: 8 };
+        assert_eq!(single.fabric_bytes_per_node(1e9), 0.0);
+    }
+
+    /// §6: "the total datacenter network traffic for all-reduce
+    /// operations will increase by φ" (asymptotically in node count).
+    #[test]
+    fn lovelock_multiplies_traffic_by_phi() {
+        let m2 = lovelock_traffic_multiplier(64, 8, 2);
+        assert!(m2 > 1.9 && m2 <= 2.05, "m2={m2}");
+        let m4 = lovelock_traffic_multiplier(64, 8, 4);
+        assert!(m4 > 3.8 && m4 <= 4.10, "m4={m4}");
+    }
+
+    #[test]
+    fn time_accounts_for_nic_speed() {
+        // φ=2 E2000s (200G) vs one server NIC (100G): per-node traffic is
+        // about the same (2·(n-1)/n saturates), but each node has its own
+        // faster port, so the all-reduce *time* still improves.
+        let grad = 10e9;
+        let trad = AllReduceTopology { nodes: 8, gpus_per_node: 8 };
+        let love = AllReduceTopology { nodes: 16, gpus_per_node: 4 };
+        let t_trad = trad.time_secs(grad, 100.0 / 8.0);
+        let t_love = love.time_secs(grad, 200.0 / 8.0);
+        assert!(t_love < t_trad, "lovelock {t_love} vs trad {t_trad}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_gpu_split_panics() {
+        lovelock_traffic_multiplier(8, 6, 4);
+    }
+}

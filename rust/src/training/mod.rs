@@ -1,0 +1,23 @@
+//! Distributed-training coordination — §5.3 "Ability to Drive
+//! Accelerators" and Table 2.
+//!
+//! Three pieces:
+//!
+//! * [`hostmodel`] — the analytic host-resource model behind Table 2:
+//!   given a GLaM-style model size, accelerator fleet, and checkpoint
+//!   policy, derive host CPU% (normalized to an IPU E2000) and host DRAM
+//!   mean/peak over a training run;
+//! * [`allreduce`] — ring all-reduce traffic accounting, including the §6
+//!   observation that splitting a host's GPUs across φ smart NICs
+//!   multiplies datacenter all-reduce traffic by φ;
+//! * [`driver`] — the *real* training loop: loads the AOT-compiled JAX
+//!   train step (`artifacts/train_step.hlo.txt`) through the PJRT runtime
+//!   and steps it while accounting host-side work exactly like the
+//!   analytic model (the E2E example uses this).
+
+pub mod allreduce;
+pub mod driver;
+pub mod hostmodel;
+
+pub use allreduce::{lovelock_traffic_multiplier, AllReduceTopology};
+pub use hostmodel::{CheckpointPolicy, GlamModel, HostUsage, TrainSetup};

@@ -1,0 +1,118 @@
+//! Integration: the analytics engine end to end — dbgen → queries →
+//! profiles → contention model, i.e. the full Figure-3 pipeline.
+
+use lovelock::analytics::profile::{profile_all, profile_query};
+use lovelock::analytics::queries::{self, run_query, QUERY_NAMES};
+use lovelock::analytics::{TpchConfig, TpchDb};
+use lovelock::memsim::{full_occupancy, system_ratio};
+use lovelock::platform::{ipu_e2000, n2d_milan, skylake_fig3};
+
+fn db() -> TpchDb {
+    // Large enough that per-query wall times dominate timer/alloc noise.
+    TpchDb::generate(TpchConfig::new(0.01, 2026))
+}
+
+#[test]
+fn every_query_matches_its_oracle_on_one_db() {
+    // One shared database, all queries vs their independent naive oracles
+    // — the strongest single correctness statement about the engine.
+    let db = db();
+    let checks: Vec<(&str, Vec<queries::Row>)> = vec![
+        ("q1", queries::q1::naive(&db)),
+        ("q3", queries::q3::naive(&db)),
+        ("q5", queries::q5::naive(&db)),
+        ("q6", queries::q6::naive(&db)),
+        ("q9", queries::q9::naive(&db)),
+        ("q12", queries::q12::naive(&db)),
+        ("q14", queries::q14::naive(&db)),
+        ("q18", queries::q18::naive(&db)),
+        ("q19", queries::q19::naive(&db)),
+    ];
+    for (name, oracle) in checks {
+        let out = run_query(&db, name).unwrap();
+        assert!(
+            out.approx_eq_rows(&oracle),
+            "{name}: vectorized ({} rows) != oracle ({} rows)",
+            out.rows.len(),
+            oracle.len()
+        );
+    }
+}
+
+#[test]
+fn figure3_pipeline_shape() {
+    // Profiles → per-platform degradation. The paper's claims:
+    //  * E2000 per-core slowdown is mild (8-26%);
+    //  * x86 slowdown is severe (39-88%);
+    //  * whole-system: Milan 1.9-9.2x of E2000, Skylake 2.1-4.5x.
+    // Our engine + model won't match the absolute numbers of a
+    // proprietary engine, but the ordering must hold per query and the
+    // medians must land in plausible bands.
+    let db = db();
+    let profiles = profile_all(&db, 1.0);
+    assert_eq!(profiles.len(), QUERY_NAMES.len());
+    let e2000 = ipu_e2000();
+    let milan = n2d_milan();
+    let skylake = skylake_fig3();
+    let mut milan_ratios = Vec::new();
+    for p in &profiles {
+        let w = p.workload();
+        let drop_nic = full_occupancy(&e2000, &w).slowdown_frac;
+        let drop_milan = full_occupancy(&milan, &w).slowdown_frac;
+        let drop_sky = full_occupancy(&skylake, &w).slowdown_frac;
+        assert!(
+            drop_milan >= drop_nic,
+            "{}: milan {drop_milan:.2} < nic {drop_nic:.2}",
+            p.name
+        );
+        assert!(
+            drop_sky >= drop_nic,
+            "{}: skylake {drop_sky:.2} < nic {drop_nic:.2}",
+            p.name
+        );
+        assert!(drop_nic < 0.45, "{}: nic drop {drop_nic:.2} too large", p.name);
+        milan_ratios.push(system_ratio(&milan, &e2000, &w));
+    }
+    milan_ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = milan_ratios[milan_ratios.len() / 2];
+    // The pure-CPU-bound ceiling is 224·1.55·0.65/16 ≈ 14.1; the median
+    // must sit strictly below it (memory throttling visible) and above
+    // parity. Debug builds inflate cpu_secs (unoptimized engine), pushing
+    // ratios toward the ceiling — the calibrated release numbers are
+    // produced by `cargo bench --bench fig3` (median ≈ 8, paper: 4.7).
+    assert!(
+        median > 1.5 && median < 14.05,
+        "milan/e2000 median system ratio {median:.2} out of band"
+    );
+}
+
+#[test]
+fn query_times_scale_with_sf() {
+    let small = TpchDb::generate(TpchConfig::new(0.002, 5));
+    let big = TpchDb::generate(TpchConfig::new(0.008, 5));
+    let t_small = run_query(&small, "q1").unwrap().stats.bytes_scanned;
+    let t_big = run_query(&big, "q1").unwrap().stats.bytes_scanned;
+    let ratio = t_big as f64 / t_small as f64;
+    assert!(ratio > 3.0 && ratio < 5.0, "bytes ratio {ratio}");
+}
+
+#[test]
+fn profile_bytes_exceed_table_scan_for_joins() {
+    let db = db();
+    let q5 = profile_query(&db, "q5", 1.0).unwrap();
+    let q6 = profile_query(&db, "q6", 1.0).unwrap();
+    // Join queries move more bytes and hold bigger working sets.
+    assert!(q5.working_set_bytes > q6.working_set_bytes);
+}
+
+#[test]
+fn q6_is_lowest_intensity_scan() {
+    // The paper's Q6 exception: a compute-bound scan. In our engine it
+    // must have the smallest bytes-per-run of the full-scan queries.
+    let db = db();
+    let q1 = profile_query(&db, "q1", 1.0).unwrap();
+    let q6 = profile_query(&db, "q6", 1.0).unwrap();
+    let q18 = profile_query(&db, "q18", 1.0).unwrap();
+    assert!(q6.dram_bytes < q1.dram_bytes);
+    assert!(q6.dram_bytes < q18.dram_bytes);
+}

@@ -1,0 +1,127 @@
+//! Integration: coordinator × cluster × simnet × analytics — distributed
+//! queries on simulated traditional vs Lovelock clusters, validating the
+//! §5.2 argument inside the repo (not just the Fig. 4 arithmetic).
+
+use lovelock::analytics::{queries, TpchConfig, TpchDb};
+use lovelock::bigquery::{project, Breakdown};
+use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::coordinator::{Backpressure, DistributedQuery, Scheduler, Task, TaskKind};
+use lovelock::platform::{ipu_e2000, n2d_milan};
+use lovelock::rpc::{Endpoint, Handler};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn db() -> TpchDb {
+    TpchDb::generate(TpchConfig::new(0.01, 777))
+}
+
+fn traditional(n: usize) -> ClusterSpec {
+    ClusterSpec::traditional(n, n2d_milan(), Role::LiteCompute)
+}
+
+#[test]
+fn distributed_results_match_local_across_clusters() {
+    let db = db();
+    for (name, cluster) in [
+        ("traditional", traditional(8)),
+        ("lovelock-phi2", ClusterSpec::lovelock_e2000(&traditional(8), 2)),
+        ("lovelock-phi3", ClusterSpec::lovelock_e2000(&traditional(8), 3)),
+    ] {
+        for q in ["q1", "q6", "q18"] {
+            let local = queries::run_query(&db, q).unwrap();
+            let dist = DistributedQuery::new(cluster.clone()).run(&db, q).unwrap();
+            assert!(
+                local.approx_eq_rows(&dist.rows),
+                "{q} on {name} diverged from local execution"
+            );
+        }
+    }
+}
+
+#[test]
+fn lovelock_phi_reduces_network_phase() {
+    // The §5.2 mechanism observed end-to-end: with φ=2 E2000s per Milan
+    // server (200G vs 100G ports and twice the nodes), the simulated
+    // shuffle+IO time of the same query drops by ≈4x.
+    let db = db();
+    let trad = traditional(8);
+    let love2 = ClusterSpec::lovelock_e2000(&trad, 2);
+    let rt = DistributedQuery::new(trad).run(&db, "q18").unwrap();
+    let rl = DistributedQuery::new(love2).run(&db, "q18").unwrap();
+    let net_t = rt.io_secs + rt.shuffle_secs;
+    let net_l = rl.io_secs + rl.shuffle_secs;
+    let gain = net_t / net_l;
+    assert!(gain > 2.0, "network phase gain {gain:.2} < 2 (t={net_t:.4}s l={net_l:.4}s)");
+}
+
+#[test]
+fn breakdown_feeds_fig4_model() {
+    // Wire the measured distributed breakdown into the Fig. 4 projection:
+    // a network-heavy workload must cross μ<1 somewhere in φ∈[2,6].
+    let db = db();
+    let r = DistributedQuery::new(traditional(8)).run(&db, "q18").unwrap();
+    let (cpu, shuffle, io) = r.breakdown();
+    let b = Breakdown { cpu, shuffle, storage_io: io };
+    let mu6 = project(&b, 6.0, 4.7).mu();
+    assert!(mu6 < 1.0, "even φ=6 does not win (breakdown cpu={cpu:.2})");
+}
+
+#[test]
+fn scheduler_with_backpressure_executes_all_tasks() {
+    // Leader/worker control plane over the real RPC endpoint with a
+    // credit gate: all tasks complete, concurrency never exceeds credits.
+    let mut handlers: HashMap<u32, Handler> = HashMap::new();
+    handlers.insert(
+        1,
+        Arc::new(|m: &lovelock::rpc::Message| {
+            // Worker: "execute" the task by echoing its id.
+            m.payload.clone()
+        }),
+    );
+    let ep = Endpoint::serve(handlers);
+    let bp = Arc::new(Backpressure::new(4));
+    let cluster = traditional(4);
+    let mut sched = Scheduler::new(&cluster);
+    let tasks: Vec<Task> = (0..64)
+        .map(|id| Task { id, kind: TaskKind::Compute, est_secs: 0.01 })
+        .collect();
+    let placements = sched.place_all(&tasks).unwrap();
+    let threads: Vec<_> = placements
+        .into_iter()
+        .map(|p| {
+            let client = ep.client();
+            let bp = bp.clone();
+            std::thread::spawn(move || {
+                assert!(bp.acquire());
+                let resp = client.call(1, p.task_id.to_le_bytes().to_vec()).unwrap();
+                bp.release();
+                u64::from_le_bytes(resp[..8].try_into().unwrap())
+            })
+        })
+        .collect();
+    let mut ids: Vec<u64> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..64).collect::<Vec<u64>>());
+    assert!(bp.max_in_flight() <= 4);
+}
+
+#[test]
+fn lovelock_cluster_cost_accounting_consistent_with_eq1() {
+    // ClusterSpec's bottom-up cost sum reproduces Eq. 1 for bare nodes.
+    let trad = traditional(16);
+    for phi in [1u32, 2, 3] {
+        let love = ClusterSpec::lovelock_e2000(&trad, phi);
+        let ratio = trad.relative_cost(0.0) / love.relative_cost(0.0);
+        let eq1 = 7.0 / phi as f64;
+        assert!((ratio - eq1).abs() < 1e-9, "phi={phi}: {ratio} vs {eq1}");
+    }
+}
+
+#[test]
+fn e2000_cluster_has_more_aggregate_bandwidth_fewer_cores() {
+    let trad = traditional(8);
+    let love = ClusterSpec::lovelock_e2000(&trad, 3);
+    assert!(love.aggregate_nic_gbps() > trad.aggregate_nic_gbps() * 5.9);
+    assert!(love.total_vcpus() < trad.total_vcpus());
+    assert_eq!(love.nodes[0].platform.name, ipu_e2000().name);
+}

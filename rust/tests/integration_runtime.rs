@@ -1,0 +1,203 @@
+//! Integration: PJRT runtime × AOT artifacts (requires `make artifacts`).
+//!
+//! These tests exercise the full L1→L2→L3 composition: Pallas kernels and
+//! the JAX model, lowered to HLO text by python, loaded and executed from
+//! Rust with Python out of the loop.
+
+use lovelock::analytics::queries::q6;
+use lovelock::analytics::{TpchConfig, TpchDb};
+use lovelock::runtime::*;
+use lovelock::training::driver::TrainDriver;
+
+fn need_artifacts() -> bool {
+    if artifacts_available() {
+        true
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        false
+    }
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    if !need_artifacts() {
+        return;
+    }
+    let eng = Engine::cpu().unwrap();
+    assert!(eng.platform().to_lowercase().contains("cpu"));
+}
+
+#[test]
+fn matmul_artifact_matches_cpu() {
+    if !need_artifacts() {
+        return;
+    }
+    let eng = Engine::cpu().unwrap();
+    let module = eng.load_module(artifact_path("matmul.hlo.txt")).unwrap();
+    // a: 256x512, b: 512x384 (the shapes aot.py lowered).
+    let a: Vec<f32> = (0..256 * 512).map(|i| ((i % 17) as f32 - 8.0) * 0.1).collect();
+    let b: Vec<f32> = (0..512 * 384).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+    let out = module
+        .execute(&[
+            literal_f32(&a, &[256, 512]).unwrap(),
+            literal_f32(&b, &[512, 384]).unwrap(),
+        ])
+        .unwrap();
+    let got = to_f32(&out[0]).unwrap();
+    assert_eq!(got.len(), 256 * 384);
+    // Spot-check a few entries against a host matmul.
+    for &(i, j) in &[(0usize, 0usize), (7, 11), (255, 383), (100, 200)] {
+        let mut want = 0.0f64;
+        for k in 0..512 {
+            want += a[i * 512 + k] as f64 * b[k * 384 + j] as f64;
+        }
+        let g = got[i * 384 + j] as f64;
+        assert!(
+            (g - want).abs() <= 1e-3 * want.abs().max(1.0),
+            "({i},{j}): {g} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn q6_artifact_matches_engine() {
+    if !need_artifacts() {
+        return;
+    }
+    // Real TPC-H data through the PJRT Q6 kernel vs the native engine.
+    let db = TpchDb::generate(TpchConfig::new(0.01, 42));
+    let native = q6::run(&db).rows[0][0].as_f64();
+
+    let (ship, disc, qty, price) = q6::kernel_inputs(&db);
+    let eng = Engine::cpu().unwrap();
+    let module = eng.load_module(artifact_path("q6_scan.hlo.txt")).unwrap();
+    const CHUNK: usize = 65536;
+    let p = q6::Q6Params::default();
+    let bounds = [
+        p.date_lo as f32,
+        p.date_hi as f32,
+        p.disc_lo as f32,
+        p.disc_hi as f32,
+        p.qty_lt as f32,
+    ];
+    let mut total = 0f64;
+    let n = ship.len();
+    let mut off = 0;
+    while off < n {
+        let take = CHUNK.min(n - off);
+        let mut s = vec![3.0e38f32; CHUNK]; // pad fails the date filter
+        let mut d = vec![0f32; CHUNK];
+        let mut q = vec![0f32; CHUNK];
+        let mut x = vec![0f32; CHUNK];
+        for i in 0..take {
+            s[i] = ship[off + i] as f32;
+            d[i] = disc[off + i] as f32;
+            q[i] = qty[off + i] as f32;
+            x[i] = price[off + i] as f32;
+        }
+        let out = module
+            .execute(&[
+                literal_f32(&s, &[CHUNK as i64]).unwrap(),
+                literal_f32(&d, &[CHUNK as i64]).unwrap(),
+                literal_f32(&q, &[CHUNK as i64]).unwrap(),
+                literal_f32(&x, &[CHUNK as i64]).unwrap(),
+                literal_f32(&bounds, &[5]).unwrap(),
+            ])
+            .unwrap();
+        total += to_f32(&out[0]).unwrap()[0] as f64;
+        off += take;
+    }
+    // f32 accumulation over ~100k rows: allow 0.1% relative error.
+    let rel = (total - native).abs() / native.abs().max(1.0);
+    assert!(rel < 1e-3, "pjrt {total} vs native {native} (rel {rel})");
+}
+
+#[test]
+fn attention_artifact_runs() {
+    if !need_artifacts() {
+        return;
+    }
+    let eng = Engine::cpu().unwrap();
+    let module = eng.load_module(artifact_path("attention.hlo.txt")).unwrap();
+    let (b, h, s, d) = (2usize, 4usize, 128usize, 64usize);
+    let n = b * h * s * d;
+    let q: Vec<f32> = (0..n).map(|i| ((i % 23) as f32 - 11.0) * 0.05).collect();
+    let out = module
+        .execute(&[
+            literal_f32(&q, &[b as i64, h as i64, s as i64, d as i64]).unwrap(),
+            literal_f32(&q, &[b as i64, h as i64, s as i64, d as i64]).unwrap(),
+            literal_f32(&q, &[b as i64, h as i64, s as i64, d as i64]).unwrap(),
+        ])
+        .unwrap();
+    let got = to_f32(&out[0]).unwrap();
+    assert_eq!(got.len(), n);
+    // Causal row 0 attends only to itself → output row 0 == v row 0.
+    for j in 0..d {
+        assert!((got[j] - q[j]).abs() < 1e-4, "j={j}: {} vs {}", got[j], q[j]);
+    }
+    assert!(got.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn train_driver_loss_decreases() {
+    if !need_artifacts() {
+        return;
+    }
+    let mut driver = TrainDriver::load("tiny", 7).unwrap();
+    driver.init(7).unwrap();
+    driver.run(40, 10).unwrap();
+    assert_eq!(driver.loss_log.len(), 4);
+    let first = driver.loss_log[0].1;
+    let last = driver.loss_log.last().unwrap().1;
+    assert!(
+        last < first - 0.3,
+        "loss did not decrease: {first} -> {last}"
+    );
+    assert!(driver.accounting.steps == 40);
+    // The §5.3 shape: host does almost nothing vs device compute.
+    assert!(driver.accounting.host_cpu_frac() < 0.25);
+}
+
+#[test]
+fn train_driver_deterministic_given_seed() {
+    if !need_artifacts() {
+        return;
+    }
+    let run = |seed: u64| {
+        let mut d = TrainDriver::load("tiny", seed).unwrap();
+        d.init(seed as i32).unwrap();
+        d.run(10, 10).unwrap();
+        d.loss_log.last().unwrap().1
+    };
+    assert_eq!(run(3), run(3));
+    assert_ne!(run(3), run(4));
+}
+
+#[test]
+fn checkpoint_roundtrip_and_chunking() {
+    if !need_artifacts() {
+        return;
+    }
+    let mut driver = TrainDriver::load("tiny", 5).unwrap();
+    driver.init(5).unwrap();
+    driver.run(3, 0).unwrap();
+    let dir = std::env::temp_dir().join("lovelock-ckpt-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mono = dir.join("mono.bin");
+    let chunked = dir.join("chunked.bin");
+    let b1 = driver.checkpoint(&mono, false).unwrap();
+    let b2 = driver.checkpoint(&chunked, true).unwrap();
+    assert_eq!(b1, b2);
+    // Both policies must produce byte-identical snapshots.
+    let a = std::fs::read(&mono).unwrap();
+    let b = std::fs::read(&chunked).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.len() as u64, b1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_artifact_is_clean_error() {
+    let eng = Engine::cpu().unwrap();
+    assert!(eng.load_module("artifacts/no-such-module.hlo.txt").is_err());
+}

@@ -1,0 +1,212 @@
+//! Property-based tests (via `proptest_mini`) on coordinator, simulator,
+//! and model invariants.
+
+use lovelock::analytics::{TpchConfig, TpchDb};
+use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::coordinator::{DistributedQuery, Scheduler, Task, TaskKind};
+use lovelock::costmodel::CostModel;
+use lovelock::memsim::{simulate, WorkloadProfile};
+use lovelock::platform::{ipu_e2000, n2d_milan};
+use lovelock::proptest_mini::*;
+use lovelock::simnet::{Simulation, Topology};
+
+#[test]
+fn prop_maxmin_rates_never_exceed_link_capacity() {
+    // Any flow set: per-flow goodput ≤ host line rate, and the sum into
+    // any receiver ≤ its down-link.
+    let strat = vec_of(
+        pair_of(int_range(0, 7), pair_of(int_range(0, 7), int_range(1, 200))),
+        1,
+        24,
+    );
+    check("maxmin_capacity", &strat, |flows| {
+        let mut sim = Simulation::new(Topology::flat(8, 100.0));
+        for (src, (dst, mb)) in flows {
+            sim.add_flow(*src as usize, *dst as usize, *mb as f64 * 1e6, 0.0);
+        }
+        let done = sim.run();
+        for d in &done {
+            if d.duration() > 1e-9 && d.bytes > 0.0 {
+                let gbps = d.gbps();
+                if gbps > 100.0 + 1e-6 {
+                    return Err(format!("flow exceeded line rate: {gbps}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flow_conservation() {
+    // Every queued flow completes exactly once, with finish ≥ start.
+    let strat = vec_of(
+        pair_of(int_range(0, 5), pair_of(int_range(0, 5), int_range(0, 100))),
+        1,
+        20,
+    );
+    check("flow_conservation", &strat, |flows| {
+        let mut sim = Simulation::new(Topology::new(2, 3, 100.0, 150.0));
+        let mut ids = Vec::new();
+        for (i, (src, (dst, mb))) in flows.iter().enumerate() {
+            ids.push(sim.add_flow(
+                *src as usize,
+                *dst as usize,
+                *mb as f64 * 1e6,
+                (i % 3) as f64 * 0.1,
+            ));
+        }
+        let done = sim.run();
+        if done.len() != ids.len() {
+            return Err(format!("{} queued, {} completed", ids.len(), done.len()));
+        }
+        for d in &done {
+            if d.finish < d.start - 1e-9 {
+                return Err(format!("flow {} finished before start", d.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memsim_slowdown_monotone_in_occupancy() {
+    let strat = pair_of(float_range(0.1, 4.0), float_range(0.5, 16.0));
+    check("memsim_monotone", &strat, |(cpu_secs, gb)| {
+        let w = WorkloadProfile {
+            cpu_secs: *cpu_secs,
+            dram_bytes: gb * 1e9,
+            working_set_bytes: 32e6,
+        };
+        for p in [ipu_e2000(), n2d_milan()] {
+            let mut last = f64::INFINITY;
+            for k in [1u32, 2, 4, 8, p.vcpus / 2, p.vcpus] {
+                let r = simulate(&p, &w, k.max(1));
+                if r.per_core_rate > last + 1e-9 {
+                    return Err(format!("{}: rate increased at k={k}", p.name));
+                }
+                last = r.per_core_rate;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_model_bounds() {
+    // 0 < ratios < c_s+c_p for any sane (φ, μ); monotone decreasing in φ.
+    let strat = pair_of(float_range(0.5, 8.0), float_range(0.3, 3.0));
+    check("cost_bounds", &strat, |(phi, mu)| {
+        let m = CostModel::host_only().with_pcie_share(0.6);
+        let c = m.cost_ratio(*phi);
+        let p = m.power_ratio(*phi, *mu);
+        if !(c > 0.0 && c.is_finite() && p > 0.0 && p.is_finite()) {
+            return Err(format!("bad ratios c={c} p={p}"));
+        }
+        let c2 = m.cost_ratio(*phi + 0.5);
+        if c2 >= c {
+            return Err("cost not decreasing in phi".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_conserves_tasks_and_respects_roles() {
+    let strat = vec_of(int_range(0, 2), 1, 60);
+    check("scheduler_roles", &strat, |kinds| {
+        let mut cluster = ClusterSpec::traditional(6, n2d_milan(), Role::LiteCompute);
+        cluster.nodes[0].role = Role::Storage { devices: 2 };
+        cluster.nodes[1].role = Role::Accelerator { count: 1 };
+        let mut sched = Scheduler::new(&cluster);
+        let tasks: Vec<Task> = kinds
+            .iter()
+            .enumerate()
+            .map(|(id, k)| Task {
+                id,
+                kind: match k {
+                    0 => TaskKind::Compute,
+                    1 => TaskKind::StorageIo,
+                    _ => TaskKind::AccelDispatch,
+                },
+                est_secs: 1.0,
+            })
+            .collect();
+        let placements = sched.place_all(&tasks).ok_or("placement failed")?;
+        if placements.len() != tasks.len() {
+            return Err("task lost".into());
+        }
+        for (t, p) in tasks.iter().zip(&placements) {
+            match t.kind {
+                TaskKind::StorageIo if p.node_id != 0 => {
+                    return Err(format!("storage task on node {}", p.node_id));
+                }
+                TaskKind::AccelDispatch if p.node_id != 1 => {
+                    return Err(format!("accel task on node {}", p.node_id));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dbgen_deterministic_and_fk_closed() {
+    let strat = pair_of(int_range(1, 1000), int_range(1, 8));
+    check("dbgen_fk", &strat, |(seed, scale)| {
+        let sf = *scale as f64 * 0.0005;
+        let a = TpchDb::generate(TpchConfig::new(sf, *seed as u64));
+        let b = TpchDb::generate(TpchConfig::new(sf, *seed as u64));
+        if a.lineitem.len() != b.lineitem.len() {
+            return Err("nondeterministic lineitem count".into());
+        }
+        let n_orders = a.orders.len() as i64;
+        for &ok in a.lineitem.col("l_orderkey").as_i64().iter().take(500) {
+            if ok < 1 || ok > n_orders {
+                return Err(format!("dangling orderkey {ok}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_distributed_q6_invariant_to_worker_count() {
+    // Routing/partitioning invariance: any worker count gives the same
+    // answer (the shuffle-conservation property).
+    let db = TpchDb::generate(TpchConfig::new(0.002, 99));
+    let reference = lovelock::analytics::run_query(&db, "q6").unwrap();
+    let strat = int_range(1, 12);
+    check("dist_q6_workers", &strat, |w| {
+        let cluster = ClusterSpec::traditional(*w as usize, n2d_milan(), Role::LiteCompute);
+        let r = DistributedQuery::new(cluster)
+            .run(&db, "q6")
+            .map_err(|e| e.to_string())?;
+        if !reference.approx_eq_rows(&r.rows) {
+            return Err(format!("diverged at {w} workers"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_groupby_total_count_conserved() {
+    use lovelock::analytics::ops::GroupBy;
+    let strat = vec_of(int_range(-50, 50), 0, 400);
+    check("groupby_conservation", &strat, |keys| {
+        let mut g: GroupBy<1> = GroupBy::with_capacity(8);
+        for &k in keys {
+            g.update(k, [1.0]);
+        }
+        let total: u64 = g.groups.iter().map(|(_, _, c)| c).sum();
+        if total != keys.len() as u64 {
+            return Err(format!("{total} != {}", keys.len()));
+        }
+        let sum: f64 = g.groups.iter().map(|(_, s, _)| s[0]).sum();
+        if (sum - keys.len() as f64).abs() > 1e-9 {
+            return Err("sum mismatch".into());
+        }
+        Ok(())
+    });
+}
