@@ -1,0 +1,25 @@
+#!/usr/bin/env sh
+# CI gate for the lovelock crate. No network, no external dependencies:
+# everything builds from the repo with the stock Rust toolchain.
+#
+#   ./ci.sh            full gate (build, tests, docs-with-denied-warnings)
+#   ./ci.sh quick      skip the release build (debug tests + docs only)
+
+set -eu
+
+cd "$(dirname "$0")"
+
+if [ "${1:-}" != "quick" ]; then
+    echo "==> cargo build --release"
+    cargo build --release
+    echo "==> cargo bench --no-run (compile bench targets)"
+    cargo bench --no-run
+fi
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "CI gate passed."

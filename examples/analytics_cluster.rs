@@ -12,7 +12,7 @@ use lovelock::coordinator::DistributedQuery;
 use lovelock::analytics::{TpchConfig, TpchDb};
 use lovelock::platform::n2d_milan;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> lovelock::Result<()> {
     let cmd = Command::new("analytics_cluster", "distributed TPC-H: traditional vs Lovelock")
         .opt("sf", Some("0.02"), "TPC-H scale factor")
         .opt("workers", Some("8"), "server count of the traditional cluster")

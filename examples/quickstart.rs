@@ -2,21 +2,20 @@
 //!
 //! Builds a traditional cluster and its Lovelock replacement, prices them
 //! with the paper's cost model, runs a real TPC-H query on the analytics
-//! engine (natively, and — when artifacts are built — through the
-//! AOT-compiled Pallas Q6 kernel via PJRT), and projects the BigQuery
-//! breakdown.
+//! engine (single-threaded, morsel-parallel, and distributed across the
+//! simulated NIC cluster), and projects the BigQuery breakdown.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use lovelock::analytics::queries::q6;
+use lovelock::analytics::morsel::run_query_morsel;
 use lovelock::analytics::{run_query, TpchConfig, TpchDb};
 use lovelock::bigquery::{project, Breakdown};
 use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::coordinator::DistributedQuery;
 use lovelock::costmodel::CostModel;
 use lovelock::platform::n2d_milan;
-use lovelock::runtime::{artifact_path, artifacts_available, literal_f32, to_f32, Engine};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> lovelock::Result<()> {
     // 1. A cluster of 8 Milan servers, each with 4 accelerators…
     let trad = ClusterSpec::traditional(8, n2d_milan(), Role::Accelerator { count: 4 });
     // …and the Lovelock replacement: 2 IPU E2000s per server.
@@ -35,46 +34,35 @@ fn main() -> anyhow::Result<()> {
         m.power_ratio(2.0, 0.9)
     );
 
-    // 3. Real analytics: generate TPC-H and run Q6 on the native engine.
+    // 3. Real analytics: generate TPC-H and run Q6 on the native engine,
+    //    single-threaded and morsel-parallel (same rows either way).
     let db = TpchDb::generate(TpchConfig::new(0.01, 42));
     let native = run_query(&db, "q6").unwrap();
     let revenue = native.rows[0][0].as_f64();
     println!("\nTPC-H SF 0.01: {} lineitems", db.lineitem.len());
-    println!("q6 native revenue  = {revenue:.2}");
+    println!("q6 single-threaded revenue = {revenue:.2}");
+    let parallel = run_query_morsel(&db, "q6", 0, 16_384).unwrap();
+    assert!(parallel.approx_eq_rows(&native.rows), "morsel path diverged");
+    println!("q6 morsel-parallel revenue = {:.2} (all cores)", parallel.rows[0][0].as_f64());
 
-    // 4. The same query through the AOT-compiled Pallas kernel (PJRT).
-    if artifacts_available() {
-        let eng = Engine::cpu()?;
-        let module = eng.load_module(artifact_path("q6_scan.hlo.txt"))?;
-        let (ship, disc, qty, price) = q6::kernel_inputs(&db);
-        let p = q6::Q6Params::default();
-        let bounds = [p.date_lo as f32, p.date_hi as f32, p.disc_lo as f32, p.disc_hi as f32, p.qty_lt as f32];
-        const CHUNK: usize = 65536;
-        let mut total = 0f64;
-        let mut off = 0;
-        while off < ship.len() {
-            let take = CHUNK.min(ship.len() - off);
-            let mut cols = [vec![3.0e38f32; CHUNK], vec![0f32; CHUNK], vec![0f32; CHUNK], vec![0f32; CHUNK]];
-            for i in 0..take {
-                cols[0][i] = ship[off + i] as f32;
-                cols[1][i] = disc[off + i] as f32;
-                cols[2][i] = qty[off + i] as f32;
-                cols[3][i] = price[off + i] as f32;
-            }
-            let out = module.execute(&[
-                literal_f32(&cols[0], &[CHUNK as i64])?,
-                literal_f32(&cols[1], &[CHUNK as i64])?,
-                literal_f32(&cols[2], &[CHUNK as i64])?,
-                literal_f32(&cols[3], &[CHUNK as i64])?,
-                literal_f32(&bounds, &[5])?,
-            ])?;
-            total += to_f32(&out[0])?[0] as f64;
-            off += take;
-        }
-        println!("q6 via PJRT kernel = {total:.2} (rel err {:.2e})",
-            (total - revenue).abs() / revenue.max(1.0));
-    } else {
-        println!("(run `make artifacts` to also execute q6 through the Pallas kernel)");
+    // 4. The same query distributed across the simulated NIC cluster:
+    //    every worker aggregates its partition, partials shuffle to the
+    //    leader over the fabric simulator.
+    let compute = ClusterSpec::traditional(8, n2d_milan(), Role::LiteCompute);
+    let lite_love = ClusterSpec::lovelock_e2000(&compute, 2);
+    for cluster in [compute, lite_love] {
+        let name = cluster.name.clone();
+        let r = DistributedQuery::new(cluster).run(&db, "q6")?;
+        assert!(native.approx_eq_rows(&r.rows), "distributed q6 diverged");
+        let (c, s, i) = r.breakdown();
+        println!(
+            "q6 on {name}: {} workers, sim total {:.4}s (cpu {:.0}% / shuffle {:.0}% / io {:.0}%)",
+            r.workers,
+            r.total_secs(),
+            c * 100.0,
+            s * 100.0,
+            i * 100.0
+        );
     }
 
     // 5. The Fig. 4 projection.

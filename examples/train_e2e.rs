@@ -17,7 +17,7 @@ use lovelock::training::driver::TrainDriver;
 use lovelock::training::hostmodel::{GlamModel, TrainSetup};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> lovelock::Result<()> {
     let cmd = Command::new("train_e2e", "AOT-compiled transformer training via PJRT")
         .opt("model", Some("100m"), "model config: tiny | 100m")
         .opt("steps", Some("300"), "training steps")
@@ -114,7 +114,7 @@ fn main() -> anyhow::Result<()> {
 
     // Success criterion: loss visibly below the starting point.
     if let (Some(first), Some(last)) = (driver.loss_log.first(), driver.loss_log.last()) {
-        anyhow::ensure!(
+        lovelock::ensure!(
             last.1 < first.1,
             "loss did not decrease ({} -> {})",
             first.1,

@@ -69,5 +69,16 @@ fn main() {
         format!("{slo:.1}-{shi:.1}x (median {smed:.1})"),
         "paper: 2.1-4.5x (median 3.6)",
     );
+
+    // Sanity anchor for the morsel path: the parallel engine reproduces
+    // the serial rows on this host (Fig. 3 profiles stay single-threaded
+    // by methodology; the shuffle executor uses the morsel kernels).
+    let q1_serial = lovelock::analytics::run_query(&db, "q1").unwrap();
+    let q1_morsel = lovelock::analytics::run_query_morsel(&db, "q1", 0, 16_384).unwrap();
+    b.row(
+        "morsel path agrees with serial",
+        format!("{}", q1_morsel.approx_eq_rows(&q1_serial.rows)),
+        "q1 rows, all cores vs 1 thread",
+    );
     b.finish();
 }

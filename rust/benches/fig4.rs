@@ -48,14 +48,15 @@ fn main() {
     let trad = ClusterSpec::traditional(8, n2d_milan(), Role::LiteCompute);
     let rt = DistributedQuery::new(trad.clone()).run(&db, "q18").unwrap();
     let base = rt.total_secs();
+    let (cpu, shuffle, io) = rt.breakdown();
     b.row(
         "e2e q18 traditional",
         "1.00".to_string(),
         format!(
             "cpu {:.0}% shuffle {:.0}% io {:.0}%",
-            rt.breakdown().0 * 100.0,
-            rt.breakdown().1 * 100.0,
-            rt.breakdown().2 * 100.0
+            cpu * 100.0,
+            shuffle * 100.0,
+            io * 100.0
         ),
     );
     for phi in [1u32, 2, 3] {
@@ -69,6 +70,30 @@ fn main() {
                 rl.compute_secs,
                 rl.shuffle_secs + rl.io_secs,
                 rt.shuffle_secs + rt.io_secs
+            ),
+        );
+    }
+
+    // Per-query shuffle intensity across the whole Figure-3 set: every
+    // query now has a distributed plan; the shuffle-byte spread is what
+    // makes q18 the Fig. 4 stress case.
+    for q in lovelock::analytics::QUERY_NAMES {
+        // q18 was already executed above for the baseline row.
+        let r = if q == "q18" {
+            rt.clone()
+        } else {
+            DistributedQuery::new(trad.clone()).run(&db, q).unwrap()
+        };
+        let (cpu, shuffle, io) = r.breakdown();
+        b.row(
+            &format!("dist {q} shuffle"),
+            format!("{} KB", r.shuffle_bytes / 1000),
+            format!(
+                "cpu {:.0}% shuffle {:.0}% io {:.0}% ({} workers)",
+                cpu * 100.0,
+                shuffle * 100.0,
+                io * 100.0,
+                r.workers
             ),
         );
     }

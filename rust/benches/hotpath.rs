@@ -1,7 +1,8 @@
 //! Bench `hotpath` — microbenchmarks of the engine and coordinator hot
 //! paths, used by the §Perf optimization loop (EXPERIMENTS.md §Perf).
 
-use lovelock::analytics::ops::{all_rows, filter_i32_range, hash_join, ExecStats, GroupBy, JoinMap};
+use lovelock::analytics::morsel::run_query_morsel;
+use lovelock::analytics::ops::{all_rows, filter_i32_range, hash_join, par_filter_i32_range, ExecStats, GroupBy, JoinMap};
 use lovelock::analytics::{run_query, TpchConfig, TpchDb, QUERY_NAMES};
 use lovelock::benchkit::{black_box, Bench};
 use lovelock::cluster::{ClusterSpec, Role};
@@ -23,11 +24,30 @@ fn main() {
         });
     }
 
+    // Morsel-driven vs single-threaded engine at SF 0.1 — the speedup
+    // rows EXPERIMENTS.md §Morsel records. The morsel path must beat the
+    // serial path at ≥4 threads.
+    let big = TpchDb::generate(TpchConfig::new(0.1, 9));
+    for q in ["q1", "q6", "q18"] {
+        let bytes = run_query(&big, q).unwrap().stats.bytes_scanned;
+        b.measure_throughput(&format!("{q} sf0.1 serial"), bytes, || {
+            black_box(run_query(&big, q).unwrap());
+        });
+        for threads in [2usize, 4, 8] {
+            b.measure_throughput(&format!("{q} sf0.1 morsel x{threads}"), bytes, || {
+                black_box(run_query_morsel(&big, q, threads, 16_384).unwrap());
+            });
+        }
+    }
+
     // Operator microbenches.
     let ship = db.lineitem.col("l_shipdate").as_i32().to_vec();
     let sel = all_rows(ship.len());
     b.measure_throughput("filter_i32_range", li_rows * 4, || {
         black_box(filter_i32_range(&sel, &ship, 8766, 9131));
+    });
+    b.measure_throughput("par_filter_i32_range x4", li_rows * 4, || {
+        black_box(par_filter_i32_range(&ship, 8766, 9131, 4, 16_384));
     });
 
     let mut rng = Pcg64::seed_from_u64(5);

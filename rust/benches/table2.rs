@@ -1,11 +1,10 @@
 //! Bench `table2` — regenerates Table 2: host CPU and DRAM use during
 //! distributed LLM training (GLaM 1B–39B on 8 hosts × 4 accelerators),
-//! plus the §5.3 checkpoint-chunking ablation and, when artifacts are
-//! built, a *measured* row from the real PJRT training driver.
+//! plus the §5.3 checkpoint-chunking ablation and, when built with the
+//! `xla` feature and artifacts, a *measured* row from the real PJRT
+//! training driver.
 
 use lovelock::benchkit::Bench;
-use lovelock::runtime::artifacts_available;
-use lovelock::training::driver::TrainDriver;
 use lovelock::training::hostmodel::{CheckpointPolicy, GlamModel, TrainSetup};
 
 fn main() {
@@ -56,21 +55,32 @@ fn main() {
         );
     }
 
-    // Measured: the real AOT training loop's host-vs-device split.
-    if artifacts_available() {
-        if let Ok(mut driver) = TrainDriver::load("tiny", 11) {
-            driver.init(11).unwrap();
-            driver.run(30, 0).unwrap();
-            let acc = driver.accounting;
-            b.row(
-                "measured tiny driver host-cpu",
-                format!("{:.1}%", acc.host_cpu_frac() * 100.0),
-                format!(
-                    "host {:.3}s vs device {:.3}s over {} steps (PJRT)",
-                    acc.host_secs, acc.device_secs, acc.steps
-                ),
-            );
-        }
-    }
+    // Measured: the real AOT training loop's host-vs-device split
+    // (needs the xla feature and built artifacts).
+    measured_driver_row(&mut b);
     b.finish();
 }
+
+#[cfg(feature = "xla")]
+fn measured_driver_row(b: &mut Bench) {
+    use lovelock::training::driver::TrainDriver;
+    if !lovelock::runtime::artifacts_available() {
+        return;
+    }
+    if let Ok(mut driver) = TrainDriver::load("tiny", 11) {
+        driver.init(11).unwrap();
+        driver.run(30, 0).unwrap();
+        let acc = driver.accounting;
+        b.row(
+            "measured tiny driver host-cpu",
+            format!("{:.1}%", acc.host_cpu_frac() * 100.0),
+            format!(
+                "host {:.3}s vs device {:.3}s over {} steps (PJRT)",
+                acc.host_secs, acc.device_secs, acc.steps
+            ),
+        );
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn measured_driver_row(_b: &mut Bench) {}

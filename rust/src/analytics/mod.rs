@@ -1,19 +1,36 @@
 //! The analytics engine: TPC-H data generation, columnar storage,
-//! vectorized operators, the Figure-3 query set, and workload profiling.
+//! vectorized operators, morsel-driven parallel execution, the Figure-3
+//! query set, and workload profiling.
 //!
 //! This is the substrate for §5.1/§5.2 of the paper: a real (if compact)
 //! analytics execution engine whose measured per-query behaviour — bytes
 //! touched, hash-table footprints, CPU seconds — feeds the
 //! memory-bandwidth contention model ([`crate::memsim`]) and the
 //! distributed shuffle workloads ([`crate::coordinator`]).
+//!
+//! Queries run three ways, all producing the same rows: single-threaded
+//! ([`run_query`]), morsel-parallel on a local thread pool
+//! ([`morsel::run_query_morsel`]), and distributed across a simulated
+//! NIC cluster ([`crate::coordinator::DistributedQuery`]).
+//!
+//! ```
+//! use lovelock::analytics::{morsel, run_query, TpchConfig, TpchDb};
+//!
+//! let db = TpchDb::generate(TpchConfig::new(0.001, 42));
+//! let serial = run_query(&db, "q1").unwrap();
+//! let parallel = morsel::run_query_morsel(&db, "q1", 2, 1024).unwrap();
+//! assert!(parallel.approx_eq_rows(&serial.rows));
+//! ```
 
 pub mod column;
+pub mod morsel;
 pub mod ops;
 pub mod profile;
 pub mod queries;
 pub mod tpch;
 
 pub use column::{Column, Table};
+pub use morsel::run_query_morsel;
 pub use profile::{profile_query, QueryProfile};
 pub use queries::{run_query, QueryOutput, QUERY_NAMES};
 pub use tpch::{TpchConfig, TpchDb};

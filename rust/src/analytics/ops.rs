@@ -62,6 +62,30 @@ pub fn filter_f64_range(sel: &[u32], col: &[f64], lo: f64, hi: f64) -> Vec<u32> 
     out
 }
 
+/// Morsel-parallel full-column variant of [`filter_i32_range`]: splits
+/// the column into `morsel_rows`-sized chunks, filters each on the
+/// scoped-thread pool, and concatenates the per-morsel selections in
+/// row order (so output equals the serial filter exactly).
+pub fn par_filter_i32_range(
+    col: &[i32],
+    lo: i32,
+    hi: i32,
+    threads: usize,
+    morsel_rows: usize,
+) -> Vec<u32> {
+    crate::exec::parallel_map_chunks(col.len(), morsel_rows, threads, |s, e| {
+        let mut v = Vec::with_capacity(e - s);
+        for i in s..e {
+            let x = col[i];
+            if x >= lo && x < hi {
+                v.push(i as u32);
+            }
+        }
+        v
+    })
+    .concat()
+}
+
 /// `lo <= col[i] < hi` over i32 (date windows).
 pub fn filter_i32_range(sel: &[u32], col: &[i32], lo: i32, hi: i32) -> Vec<u32> {
     let mut out = Vec::with_capacity(sel.len());
@@ -358,6 +382,17 @@ mod tests {
         assert_eq!(filter_i32_range(&all_rows(4), &dates, 20, 40), vec![1, 2]);
         let codes = vec![0u32, 1, 0, 2];
         assert_eq!(filter_code_eq(&all_rows(4), &codes, 0), vec![0, 2]);
+    }
+
+    #[test]
+    fn par_filter_matches_serial() {
+        let col: Vec<i32> = (0..10_000).map(|i| (i * 7919) % 1000).collect();
+        let serial = filter_i32_range(&all_rows(col.len()), &col, 100, 600);
+        for (threads, morsel) in [(1, 64), (4, 64), (4, 1), (8, 4096), (4, 1 << 20)] {
+            let par = par_filter_i32_range(&col, 100, 600, threads, morsel);
+            assert_eq!(par, serial, "threads={threads} morsel={morsel}");
+        }
+        assert!(par_filter_i32_range(&[], 0, 1, 4, 64).is_empty());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! the set: it touches seven wide columns end to end.
 
 use crate::analytics::column::date_to_days;
+use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
 use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats, GroupBy};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -74,6 +75,70 @@ fn str_of(v: &Value) -> String {
         Value::Str(s) => s.clone(),
         _ => unreachable!(),
     }
+}
+
+/// Morsel plan: per-morsel (returnflag × linestatus) group-by with the
+/// five running sums; finalize computes the averages and sorts by flags.
+pub(crate) fn morsel_plan() -> MorselPlan {
+    MorselPlan { width: 5, prepare: morsel_prepare, finalize: morsel_finalize }
+}
+
+fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
+    let li = &db.lineitem;
+    let cut = cutoff();
+    let ship = li.col("l_shipdate").as_i32();
+    let qty = li.col("l_quantity").as_f64();
+    let price = li.col("l_extendedprice").as_f64();
+    let disc = li.col("l_discount").as_f64();
+    let tax = li.col("l_tax").as_f64();
+    let rf = li.col("l_returnflag").as_u8();
+    let ls = li.col("l_linestatus").as_u8();
+    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
+        let mut stats = ExecStats::default();
+        stats.scan(hi - lo, 4 + 8 * 4 + 2);
+        let mut g: GroupBy<5> = GroupBy::with_capacity(8);
+        for i in lo..hi {
+            if ship[i] > cut {
+                continue;
+            }
+            let dp = price[i] * (1.0 - disc[i]);
+            let key = ((rf[i] as i64) << 8) | ls[i] as i64;
+            g.update(key, [qty[i], price[i], dp, dp * (1.0 + tax[i]), disc[i]]);
+        }
+        stats.ht_bytes += g.bytes();
+        stats.rows_out += g.groups.len() as u64;
+        Partial::from_groupby(&g, stats)
+    });
+    (kernel, ExecStats::default())
+}
+
+fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
+    let mut rows: Vec<Row> = (0..p.len())
+        .map(|gi| {
+            let key = p.keys[gi];
+            let s = p.acc(gi);
+            let cnt = p.counts[gi];
+            let c = cnt as f64;
+            vec![
+                Value::Str(((key >> 8) as u8 as char).to_string()),
+                Value::Str(((key & 0xff) as u8 as char).to_string()),
+                Value::Float(s[0]),
+                Value::Float(s[1]),
+                Value::Float(s[2]),
+                Value::Float(s[3]),
+                Value::Float(s[0] / c),
+                Value::Float(s[1] / c),
+                Value::Float(s[4] / c),
+                Value::Int(cnt as i64),
+            ]
+        })
+        .collect();
+    rows.sort_by(|a, b| {
+        let ka = (str_of(&a[0]), str_of(&a[1]));
+        let kb = (str_of(&b[0]), str_of(&b[1]));
+        ka.cmp(&kb)
+    });
+    rows
 }
 
 /// Row-at-a-time oracle.

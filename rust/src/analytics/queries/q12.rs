@@ -4,7 +4,8 @@
 //! counting high/low-priority orders per mode.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::ops::{all_rows, ExecStats};
+use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
+use crate::analytics::ops::{all_rows, ExecStats, GroupBy};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
 
@@ -73,6 +74,76 @@ pub fn run(db: &TpchDb) -> QueryOutput {
         .map(|(m, (h, l))| vec![Value::Str(m), Value::Int(h), Value::Int(l)])
         .collect();
     QueryOutput { rows, stats }
+}
+
+/// Morsel plan: morsels count high/low-priority lines per ship-mode
+/// dictionary code; finalize resolves codes to mode strings and sorts.
+pub(crate) fn morsel_plan() -> MorselPlan {
+    MorselPlan { width: 2, prepare: morsel_prepare, finalize: morsel_finalize }
+}
+
+fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
+    let mut stats = ExecStats::default();
+    let (lo_d, hi_d) = window();
+    let li = &db.lineitem;
+
+    let (mode_dict, mode_codes) = li.col("l_shipmode").as_str_codes();
+    let target_codes: Vec<u32> = MODES
+        .iter()
+        .filter_map(|m| mode_dict.iter().position(|d| d == m).map(|i| i as u32))
+        .collect();
+    let ship = li.col("l_shipdate").as_i32();
+    let commit = li.col("l_commitdate").as_i32();
+    let receipt = li.col("l_receiptdate").as_i32();
+    let lok = li.col("l_orderkey").as_i64();
+
+    let (prio_dict, prio_codes) = db.orders.col("o_orderpriority").as_str_codes();
+    let high_code: Vec<bool> = prio_dict.iter().map(|p| is_high(p)).collect();
+    stats.scan(db.orders.len(), 4);
+
+    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
+        let mut st = ExecStats::default();
+        st.scan(hi - lo, 4 * 4 + 12);
+        let mut g: GroupBy<2> = GroupBy::with_capacity(8);
+        for i in lo..hi {
+            if !(target_codes.contains(&mode_codes[i])
+                && receipt[i] >= lo_d
+                && receipt[i] < hi_d
+                && commit[i] < receipt[i]
+                && ship[i] < commit[i])
+            {
+                continue;
+            }
+            let orow = (lok[i] - 1) as usize;
+            let high = high_code[prio_codes[orow] as usize];
+            g.update(
+                mode_codes[i] as i64,
+                [if high { 1.0 } else { 0.0 }, if high { 0.0 } else { 1.0 }],
+            );
+        }
+        st.rows_out += g.groups.len() as u64;
+        Partial::from_groupby(&g, st)
+    });
+    (kernel, stats)
+}
+
+fn morsel_finalize(db: &TpchDb, p: &Partial) -> Vec<Row> {
+    let (mode_dict, _) = db.lineitem.col("l_shipmode").as_str_codes();
+    let mut rows: Vec<Row> = (0..p.len())
+        .map(|i| {
+            let a = p.acc(i);
+            vec![
+                Value::Str(mode_dict[p.keys[i] as usize].clone()),
+                Value::Int(a[0] as i64),
+                Value::Int(a[1] as i64),
+            ]
+        })
+        .collect();
+    rows.sort_by(|a, b| match (&a[0], &b[0]) {
+        (Value::Str(x), Value::Str(y)) => x.cmp(y),
+        _ => unreachable!(),
+    });
+    rows
 }
 
 /// Row-at-a-time oracle.

@@ -2,6 +2,7 @@
 //! one-month shipping window.
 
 use crate::analytics::column::date_to_days;
+use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
 use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -45,6 +46,61 @@ pub fn run(db: &TpchDb) -> QueryOutput {
     stats.rows_out = 1;
     let pct = if total_rev > 0.0 { 100.0 * promo_rev / total_rev } else { 0.0 };
     QueryOutput { rows: vec![vec![Value::Float(pct)]], stats }
+}
+
+/// Morsel plan: morsels sum promo and total revenue in the ship window;
+/// finalize computes the percentage from the two merged sums.
+pub(crate) fn morsel_plan() -> MorselPlan {
+    MorselPlan { width: 2, prepare: morsel_prepare, finalize: morsel_finalize }
+}
+
+fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
+    let mut stats = ExecStats::default();
+    let (lo_d, hi_d) = window();
+    let li = &db.lineitem;
+    let ship = li.col("l_shipdate").as_i32();
+    let lpk = li.col("l_partkey").as_i64();
+    let price = li.col("l_extendedprice").as_f64();
+    let disc = li.col("l_discount").as_f64();
+
+    let part = &db.part;
+    let (type_dict, type_codes) = part.col("p_type").as_str_codes();
+    let promo: Vec<bool> = type_dict.iter().map(|t| t.starts_with("PROMO")).collect();
+    stats.scan(part.len(), 4);
+
+    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
+        let mut st = ExecStats::default();
+        st.scan(hi - lo, 4 + 24);
+        let mut promo_rev = 0.0;
+        let mut total_rev = 0.0;
+        let mut matched = 0u64;
+        for i in lo..hi {
+            if ship[i] < lo_d || ship[i] >= hi_d {
+                continue;
+            }
+            let rev = price[i] * (1.0 - disc[i]);
+            total_rev += rev;
+            matched += 1;
+            let prow = (lpk[i] - 1) as usize;
+            if promo[type_codes[prow] as usize] {
+                promo_rev += rev;
+            }
+        }
+        st.rows_out = 1;
+        Partial::single(0, &[promo_rev, total_rev], matched, st)
+    });
+    (kernel, stats)
+}
+
+fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
+    let (promo_rev, total_rev) = if p.is_empty() {
+        (0.0, 0.0)
+    } else {
+        let a = p.acc(0);
+        (a[0], a[1])
+    };
+    let pct = if total_rev > 0.0 { 100.0 * promo_rev / total_rev } else { 0.0 };
+    vec![vec![Value::Float(pct)]]
 }
 
 /// Row-at-a-time oracle.

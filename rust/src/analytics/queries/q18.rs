@@ -3,6 +3,7 @@
 //!
 //! The big-aggregation query: a full group-by over every order key.
 
+use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
 use crate::analytics::ops::{ExecStats, GroupBy};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -56,6 +57,60 @@ pub fn run(db: &TpchDb) -> QueryOutput {
         })
         .collect();
     QueryOutput { rows, stats }
+}
+
+/// Morsel plan: the heavy one — every morsel produces a per-orderkey
+/// quantity group-by (the shuffle-dominant partial of the Fig. 4
+/// analysis); finalize applies the quantity threshold and the top-100.
+pub(crate) fn morsel_plan() -> MorselPlan {
+    MorselPlan { width: 1, prepare: morsel_prepare, finalize: morsel_finalize }
+}
+
+fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
+    let li = &db.lineitem;
+    let lok = li.col("l_orderkey").as_i64();
+    let qty = li.col("l_quantity").as_f64();
+    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
+        let mut st = ExecStats::default();
+        st.scan(hi - lo, 16);
+        let mut g: GroupBy<1> = GroupBy::with_capacity((hi - lo) / 4 + 16);
+        for i in lo..hi {
+            g.update(lok[i], [qty[i]]);
+        }
+        st.ht_bytes += g.bytes();
+        Partial::from_groupby(&g, st)
+    });
+    (kernel, ExecStats::default())
+}
+
+fn morsel_finalize(db: &TpchDb, p: &Partial) -> Vec<Row> {
+    let orders = &db.orders;
+    let ocust = orders.col("o_custkey").as_i64();
+    let odate = orders.col("o_orderdate").as_i32();
+    let ototal = orders.col("o_totalprice").as_f64();
+    let mut big: Vec<(i64, f64)> = Vec::new();
+    let mut qty_of: std::collections::HashMap<i64, f64> = Default::default();
+    for i in 0..p.len() {
+        let q = p.acc(i)[0];
+        if q > QTY_THRESHOLD {
+            let ok = p.keys[i];
+            big.push((ok, ototal[(ok - 1) as usize]));
+            qty_of.insert(ok, q);
+        }
+    }
+    crate::analytics::ops::top_k_desc(&mut big, TOP);
+    big.into_iter()
+        .map(|(ok, total)| {
+            let orow = (ok - 1) as usize;
+            vec![
+                Value::Int(ocust[orow]),
+                Value::Int(ok),
+                Value::Int(odate[orow] as i64),
+                Value::Float(total),
+                Value::Float(qty_of[&ok]),
+            ]
+        })
+        .collect()
 }
 
 /// Row-at-a-time oracle.

@@ -4,6 +4,7 @@
 //! revenue grouped by order. Exercises two hash joins and a top-k.
 
 use crate::analytics::column::date_to_days;
+use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
 use crate::analytics::ops::{all_rows, filter_code_eq, filter_i32_range, top_k_desc, ExecStats, GroupBy, JoinMap};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -89,6 +90,76 @@ pub fn run(db: &TpchDb) -> QueryOutput {
         })
         .collect();
     QueryOutput { rows, stats }
+}
+
+/// Morsel plan: the customer semi-join and the order hash map are built
+/// once over the broadcast tables; morsels probe orders per lineitem and
+/// sum revenue per order key. Finalize takes the top-10 and resolves
+/// order dates through the dense orderkey index.
+pub(crate) fn morsel_plan() -> MorselPlan {
+    MorselPlan { width: 1, prepare: morsel_prepare, finalize: morsel_finalize }
+}
+
+fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
+    let mut stats = ExecStats::default();
+    let pivot = pivot();
+
+    let cust = &db.customer;
+    let (_, seg_codes) = cust.col("c_mktsegment").as_str_codes();
+    stats.scan(cust.len(), 4);
+    let cust_sel = match cust.col("c_mktsegment").dict_code("BUILDING") {
+        Some(c) => filter_code_eq(&all_rows(cust.len()), seg_codes, c),
+        None => Vec::new(),
+    };
+    let custkeys = cust.col("c_custkey").as_i64();
+    stats.scan(cust_sel.len(), 8);
+    let cust_map = JoinMap::build(custkeys, &cust_sel);
+    stats.ht_bytes += cust_map.bytes();
+
+    let orders = &db.orders;
+    let odate = orders.col("o_orderdate").as_i32();
+    let ocust = orders.col("o_custkey").as_i64();
+    stats.scan(orders.len(), 4);
+    let ord_sel: Vec<u32> = filter_i32_range(&all_rows(orders.len()), odate, i32::MIN, pivot)
+        .into_iter()
+        .filter(|&o| cust_map.probe_first(ocust[o as usize]).is_some())
+        .collect();
+    stats.scan(ord_sel.len(), 8);
+    let okeys = orders.col("o_orderkey").as_i64();
+    let ord_map = JoinMap::build(okeys, &ord_sel);
+    stats.ht_bytes += ord_map.bytes();
+
+    let li = &db.lineitem;
+    let ship = li.col("l_shipdate").as_i32();
+    let lok = li.col("l_orderkey").as_i64();
+    let price = li.col("l_extendedprice").as_f64();
+    let disc = li.col("l_discount").as_f64();
+    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
+        let mut st = ExecStats::default();
+        st.scan(hi - lo, 4 + 8 * 3);
+        let mut g: GroupBy<1> = GroupBy::with_capacity(256);
+        for i in lo..hi {
+            if ship[i] > pivot && ord_map.probe_first(lok[i]).is_some() {
+                g.update(lok[i], [price[i] * (1.0 - disc[i])]);
+            }
+        }
+        st.ht_bytes += g.bytes();
+        st.rows_out += g.groups.len() as u64;
+        Partial::from_groupby(&g, st)
+    });
+    (kernel, stats)
+}
+
+fn morsel_finalize(db: &TpchDb, p: &Partial) -> Vec<Row> {
+    let odate = db.orders.col("o_orderdate").as_i32();
+    let mut items: Vec<(i64, f64)> = (0..p.len()).map(|i| (p.keys[i], p.acc(i)[0])).collect();
+    top_k_desc(&mut items, 10);
+    items
+        .into_iter()
+        .map(|(k, rev)| {
+            vec![Value::Int(k), Value::Float(rev), Value::Int(odate[(k - 1) as usize] as i64)]
+        })
+        .collect()
 }
 
 /// Row-at-a-time oracle.

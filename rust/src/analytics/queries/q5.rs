@@ -5,6 +5,7 @@
 //! co-nationality constraint makes it the join-heaviest query in the set.
 
 use crate::analytics::column::date_to_days;
+use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
 use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats, GroupBy, JoinMap};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::{TpchDb, NATIONS, REGIONS};
@@ -105,6 +106,94 @@ pub fn run(db: &TpchDb) -> QueryOutput {
         .collect();
     rows.sort_by(|a, b| b[1].as_f64().partial_cmp(&a[1].as_f64()).unwrap());
     QueryOutput { rows, stats }
+}
+
+/// Morsel plan: customer/order/supplier maps built once (broadcast
+/// side); morsels probe both maps per lineitem and sum revenue per
+/// nation where customer and supplier nations agree.
+pub(crate) fn morsel_plan() -> MorselPlan {
+    MorselPlan { width: 1, prepare: morsel_prepare, finalize: morsel_finalize }
+}
+
+fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
+    let mut stats = ExecStats::default();
+    let (lo_d, hi_d) = window();
+    let asia = region_nations();
+    let in_asia = |nk: i64| asia.contains(&nk);
+
+    let cust = &db.customer;
+    let ckeys = cust.col("c_custkey").as_i64();
+    let cnat = cust.col("c_nationkey").as_i32();
+    stats.scan(cust.len(), 12);
+    let cust_sel: Vec<u32> = all_rows(cust.len())
+        .into_iter()
+        .filter(|&i| in_asia(cnat[i as usize] as i64))
+        .collect();
+    let cust_map = JoinMap::build(ckeys, &cust_sel);
+    stats.ht_bytes += cust_map.bytes();
+
+    let orders = &db.orders;
+    let odate = orders.col("o_orderdate").as_i32();
+    let ocust = orders.col("o_custkey").as_i64();
+    let okeys = orders.col("o_orderkey").as_i64();
+    stats.scan(orders.len(), 4);
+    let ord_sel = filter_i32_range(&all_rows(orders.len()), odate, lo_d, hi_d);
+    stats.scan(ord_sel.len(), 16);
+    let mut ord_rows: Vec<u32> = Vec::new();
+    let mut orow_nation = vec![-1i32; orders.len()];
+    for &o in &ord_sel {
+        if let Some(crow) = cust_map.probe_first(ocust[o as usize]) {
+            ord_rows.push(o);
+            orow_nation[o as usize] = cnat[crow as usize];
+        }
+    }
+    let ord_map = JoinMap::build(okeys, &ord_rows);
+    stats.ht_bytes += ord_map.bytes();
+
+    let sup = &db.supplier;
+    let skeys = sup.col("s_suppkey").as_i64();
+    let snat = sup.col("s_nationkey").as_i32();
+    stats.scan(sup.len(), 12);
+    let sup_map = JoinMap::build(skeys, &all_rows(sup.len()));
+    stats.ht_bytes += sup_map.bytes();
+
+    let li = &db.lineitem;
+    let lok = li.col("l_orderkey").as_i64();
+    let lsk = li.col("l_suppkey").as_i64();
+    let price = li.col("l_extendedprice").as_f64();
+    let disc = li.col("l_discount").as_f64();
+    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
+        let mut st = ExecStats::default();
+        st.scan(hi - lo, 8 * 4);
+        let mut g: GroupBy<1> = GroupBy::with_capacity(32);
+        for i in lo..hi {
+            if let Some(orow) = ord_map.probe_first(lok[i]) {
+                let c_nat = orow_nation[orow as usize];
+                if let Some(srow) = sup_map.probe_first(lsk[i]) {
+                    if snat[srow as usize] == c_nat {
+                        g.update(c_nat as i64, [price[i] * (1.0 - disc[i])]);
+                    }
+                }
+            }
+        }
+        st.ht_bytes += g.bytes();
+        st.rows_out += g.groups.len() as u64;
+        Partial::from_groupby(&g, st)
+    });
+    (kernel, stats)
+}
+
+fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
+    let mut rows: Vec<Row> = (0..p.len())
+        .map(|i| {
+            vec![
+                Value::Str(NATIONS[p.keys[i] as usize].0.to_string()),
+                Value::Float(p.acc(i)[0]),
+            ]
+        })
+        .collect();
+    rows.sort_by(|a, b| b[1].as_f64().partial_cmp(&a[1].as_f64()).unwrap());
+    rows
 }
 
 /// Row-at-a-time oracle.

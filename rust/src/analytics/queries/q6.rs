@@ -11,6 +11,7 @@
 //! `python/compile/kernels/q6_scan.py` and `runtime::q6`.
 
 use crate::analytics::column::date_to_days;
+use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
 use crate::analytics::ops::{all_rows, filter_f64_lt, filter_f64_range, filter_i32_range, sum_over, ExecStats};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -62,6 +63,46 @@ pub fn run_params(db: &TpchDb, p: &Q6Params) -> QueryOutput {
     stats.rows_out = s3.len() as u64;
 
     QueryOutput { rows: vec![vec![Value::Float(revenue)]], stats }
+}
+
+/// Morsel plan: the pure parallel scan — each morsel fuses the three
+/// filters and the revenue sum; finalize reads the single accumulator.
+pub(crate) fn morsel_plan() -> MorselPlan {
+    MorselPlan { width: 1, prepare: morsel_prepare, finalize: morsel_finalize }
+}
+
+fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
+    let p = Q6Params::default();
+    let li = &db.lineitem;
+    let ship = li.col("l_shipdate").as_i32();
+    let disc = li.col("l_discount").as_f64();
+    let qty = li.col("l_quantity").as_f64();
+    let price = li.col("l_extendedprice").as_f64();
+    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
+        let mut st = ExecStats::default();
+        st.scan(hi - lo, 4 + 8 * 3);
+        let mut rev = 0.0;
+        let mut matched = 0u64;
+        for i in lo..hi {
+            if ship[i] >= p.date_lo
+                && ship[i] < p.date_hi
+                && disc[i] >= p.disc_lo
+                && disc[i] < p.disc_hi
+                && qty[i] < p.qty_lt
+            {
+                rev += price[i] * disc[i];
+                matched += 1;
+            }
+        }
+        st.rows_out = matched;
+        Partial::single(0, &[rev], matched, st)
+    });
+    (kernel, ExecStats::default())
+}
+
+fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
+    let rev = if p.is_empty() { 0.0 } else { p.acc(0)[0] };
+    vec![vec![Value::Float(rev)]]
 }
 
 /// Row-at-a-time oracle.

@@ -119,6 +119,12 @@ impl ClusterSpec {
         self.nodes.len()
     }
 
+    /// The node platform of this cluster (specs are homogeneous per the
+    /// paper's comparisons). Panics on an empty cluster.
+    pub fn platform(&self) -> &Platform {
+        &self.nodes.first().expect("cluster has no nodes").platform
+    }
+
     /// Aggregate end-host network bandwidth, Gbit/s — the quantity §5.2's
     /// argument turns on.
     pub fn aggregate_nic_gbps(&self) -> f64 {
@@ -192,6 +198,7 @@ mod tests {
         assert_eq!(c.total_peripherals(), 32);
         assert!(close(c.aggregate_nic_gbps(), 800.0, 1e-9));
         assert_eq!(c.total_vcpus(), 8 * 224);
+        assert_eq!(c.platform().name, n2d_milan().name);
     }
 
     #[test]

@@ -4,14 +4,33 @@
 //! *on* the smart NICs. This module implements the leader/worker runtime:
 //!
 //! * [`backpressure`] — credit-based admission so lite-compute nodes with
-//!   16 cores and 48 GB are never overrun;
+//!   16 cores and 48 GB are never overrun (the distributed executor gates
+//!   leader-side partial decoding on it);
 //! * [`scheduler`] — task placement over the node roles of a
-//!   [`crate::cluster::ClusterSpec`];
-//! * [`shuffle`] — the distributed query executor: partial aggregation on
-//!   real data partitions (executed on a thread pool standing in for the
-//!   worker fleet), wire-format partial results over the RPC substrate,
+//!   [`crate::cluster::ClusterSpec`] (the distributed executor places its
+//!   worker partitions through it);
+//! * [`shuffle`] — the distributed query executor: morsel-driven partial
+//!   aggregation on real data partitions (worker threads standing in for
+//!   the NIC fleet), wire-format partial results over the RPC substrate,
 //!   and a shuffle/storage overlay on the fabric simulator that yields the
 //!   Fig. 4-style time breakdown for any cluster spec.
+//!
+//! Every TPC-H query runs distributed and produces the same rows as the
+//! single-node engine:
+//!
+//! ```
+//! use lovelock::analytics::{run_query, TpchConfig, TpchDb};
+//! use lovelock::cluster::{ClusterSpec, Role};
+//! use lovelock::coordinator::DistributedQuery;
+//! use lovelock::platform::n2d_milan;
+//!
+//! let db = TpchDb::generate(TpchConfig::new(0.001, 9));
+//! let cluster = ClusterSpec::traditional(2, n2d_milan(), Role::LiteCompute);
+//! let report = DistributedQuery::new(cluster).run(&db, "q6").unwrap();
+//! let local = run_query(&db, "q6").unwrap();
+//! assert_eq!(report.workers, 2);
+//! assert!(local.approx_eq_rows(&report.rows));
+//! ```
 
 pub mod backpressure;
 pub mod scheduler;

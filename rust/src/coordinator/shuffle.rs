@@ -1,24 +1,37 @@
 //! Distributed query execution: scatter partitions, compute real partial
-//! aggregates, shuffle partials over the simulated fabric, merge.
+//! aggregates morsel by morsel, shuffle partials over the simulated
+//! fabric, merge.
 //!
 //! This is the BigQuery-shaped workload of §5.2 run end to end *inside*
-//! the repository: the data is real (TPC-H partitions), the per-worker
-//! compute is real (the vectorized engine on a thread pool), the partial
-//! results cross a real wire format ([`crate::rpc::Message`]), and the
+//! the repository: the data is real (TPC-H partitions read in place — no
+//! copies), the per-worker compute is real (the morsel kernels of
+//! [`crate::analytics::morsel`] on scoped worker threads), the partial
+//! results cross a real wire format ([`crate::rpc::Message`] carrying an
+//! encoded [`Partial`]), the leader decodes them on the coordinator
+//! [`ThreadPool`] with a [`Backpressure`] credit held per partial until
+//! it is merged (bounding decoded-partial buffering), worker tasks
+//! are placed on cluster nodes by the [`Scheduler`], and the
 //! network/storage time comes from the flow-level fabric simulator for
 //! whichever [`ClusterSpec`] is being evaluated. The resulting
 //! CPU/shuffle/IO breakdown is directly comparable to Figure 4.
+//!
+//! Every query in [`crate::analytics::queries::QUERY_NAMES`] has a
+//! distributed plan: dimension tables are broadcast (each worker builds
+//! its own hash maps from them), `lineitem` is range-partitioned, and the
+//! per-query [`crate::analytics::morsel::MorselPlan`] supplies the
+//! partial kernel and the leader-side finalizer.
 
-use crate::analytics::column::Table;
-use crate::analytics::ops::{top_k_desc, GroupBy};
-use crate::analytics::queries::{Row, Value};
+use crate::analytics::morsel::{self, Merger, Partial, DEFAULT_MORSEL_ROWS};
+use crate::analytics::queries::Row;
 use crate::analytics::tpch::TpchDb;
 use crate::cluster::ClusterSpec;
-use crate::exec::parallel_map;
+use crate::coordinator::backpressure::Backpressure;
+use crate::coordinator::scheduler::{Scheduler, Task, TaskKind};
+use crate::error::{Error, Result};
+use crate::exec::{parallel_map, ThreadPool};
 use crate::memsim::{simulate, WorkloadProfile};
 use crate::rpc::Message;
 use crate::simnet::Simulation;
-use anyhow::{bail, Result};
 use std::time::Instant;
 
 /// Distributed execution report: result rows + the simulated breakdown.
@@ -58,20 +71,33 @@ pub struct DistributedQuery {
     pub cluster: ClusterSpec,
     /// Worker nodes to use (≤ cluster nodes; 0 = all).
     pub workers: usize,
-    /// Local thread parallelism for computing the real partials.
+    /// Local thread parallelism for computing the real partials
+    /// (0 = all cores).
     pub threads: usize,
+    /// Rows per morsel inside each worker's partition.
+    pub morsel_rows: usize,
 }
 
-/// RPC method ids for the shuffle wire protocol.
+/// RPC method id for the shuffle wire protocol.
 pub const METHOD_PARTIAL: u32 = 0x51;
 
 impl DistributedQuery {
     pub fn new(cluster: ClusterSpec) -> Self {
-        Self { cluster, workers: 0, threads: 0 }
+        Self { cluster, workers: 0, threads: 0, morsel_rows: DEFAULT_MORSEL_ROWS }
     }
 
     pub fn with_workers(mut self, w: usize) -> Self {
         self.workers = w;
+        self
+    }
+
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
+
+    pub fn with_morsel_rows(mut self, rows: usize) -> Self {
+        self.morsel_rows = rows;
         self
     }
 
@@ -84,16 +110,6 @@ impl DistributedQuery {
         }
     }
 
-    /// Run a supported distributed query ("q1", "q6", "q18").
-    pub fn run(&self, db: &TpchDb, query: &str) -> Result<DistQueryReport> {
-        match query {
-            "q1" => self.run_q1(db),
-            "q6" => self.run_q6(db),
-            "q18" => self.run_q18(db),
-            other => bail!("query {other} has no distributed plan"),
-        }
-    }
-
     /// Contiguous row ranges of `len` over `w` workers.
     fn ranges(len: usize, w: usize) -> Vec<(usize, usize)> {
         let chunk = len.div_ceil(w.max(1));
@@ -102,43 +118,162 @@ impl DistributedQuery {
             .collect()
     }
 
-    fn partition_lineitem(db: &TpchDb, w: usize) -> Vec<Table> {
-        Self::ranges(db.lineitem.len(), w)
-            .into_iter()
-            .map(|(s, e)| db.lineitem.take(&(s as u32..e as u32).collect::<Vec<_>>()))
-            .collect()
+    /// Run any query from the Figure-3 set distributed across the
+    /// cluster's workers. Result rows `approx_eq_rows` the single-node
+    /// reference of [`crate::analytics::run_query`].
+    pub fn run(&self, db: &TpchDb, query: &str) -> Result<DistQueryReport> {
+        let plan = morsel::plan(query)
+            .ok_or_else(|| crate::err!("query {query} has no distributed plan"))?;
+        let w = self.n_workers();
+        crate::ensure!(w >= 1, "cluster has no nodes");
+        let n = db.lineitem.len();
+        let ranges = Self::ranges(n, w);
+        let rows_each = ranges.first().map(|(s, e)| e - s).unwrap_or(0);
+        let input_bytes_each = if n == 0 {
+            0
+        } else {
+            (db.lineitem.bytes() as f64 * rows_each as f64 / n as f64) as u64
+        };
+
+        // Worker phase: each simulated NIC worker builds its broadcast
+        // context (dimension tables are replicated to every node), folds
+        // its partition morsel by morsel, and encodes the merged partial
+        // as an RPC frame.
+        let morsel_rows = self.morsel_rows.max(1);
+        let t0 = Instant::now();
+        let worker_out: Vec<Result<(Vec<u8>, f64, u64)>> =
+            parallel_map(ranges, self.threads, |(lo, hi)| {
+                let t = Instant::now();
+                let (kernel, _prep_stats) = (plan.prepare)(db);
+                let mut merger = Merger::new(plan.width);
+                let mut morsel_ht_peak = 0u64;
+                let mut s = lo;
+                while s < hi {
+                    let e = (s + morsel_rows).min(hi);
+                    let p = kernel(s, e);
+                    // Morsels run sequentially within a worker, so the
+                    // live working set is one morsel's hash table plus
+                    // the accumulated merge state — not the sum of every
+                    // transient table (which stats.ht_bytes records).
+                    morsel_ht_peak = morsel_ht_peak.max(p.stats.ht_bytes);
+                    merger.absorb(&p)?;
+                    s = e;
+                }
+                let partial = merger.into_partial();
+                let group_bytes = (8 + 8 * plan.width + 8) as u64;
+                let ht_bytes = morsel_ht_peak + partial.len() as u64 * group_bytes;
+                let frame =
+                    Message { method: METHOD_PARTIAL, id: lo as u64, payload: partial.encode() }
+                        .encode();
+                Ok((frame, t.elapsed().as_secs_f64(), ht_bytes))
+            });
+        let host_compute_secs = t0.elapsed().as_secs_f64();
+        let mut frames = Vec::with_capacity(w);
+        for r in worker_out {
+            frames.push(r?);
+        }
+
+        let partial_bytes: Vec<u64> = frames.iter().map(|(f, _, _)| f.len() as u64).collect();
+        let host_secs: Vec<f64> = frames.iter().map(|(_, s, _)| *s).collect();
+        let ht_bytes_each = frames.iter().map(|(_, _, h)| *h).max().unwrap_or(0);
+        let shuffle_bytes: u64 = partial_bytes.iter().sum();
+
+        // Leader phase: decode the partial frames on the coordinator
+        // thread pool and merge in worker order so the result is
+        // deterministic. A backpressure credit is held per admitted
+        // frame from submission until its decoded partial has been
+        // merged, so at most `credits` decoded-but-unmerged partials
+        // ever buffer at the leader (q18 partials are large).
+        let pool = ThreadPool::new(self.threads);
+        let credits = Backpressure::new(pool.threads().max(1));
+        let mut pending: std::collections::VecDeque<crate::exec::JoinHandle<Result<Partial>>> =
+            std::collections::VecDeque::new();
+        let mut merger = Merger::new(plan.width);
+        for (frame, _, _) in frames {
+            while !credits.try_acquire() {
+                // Admission full: retire the oldest in-flight partial
+                // (merge order stays worker order) to free a credit.
+                let h = pending.pop_front().expect("credits exhausted with nothing pending");
+                merger.absorb(&h.join()?)?;
+                credits.release();
+            }
+            pending.push_back(pool.submit(move || {
+                Message::decode(&frame)
+                    .map_err(Error::msg)
+                    .and_then(|msg| Partial::decode(&msg.payload))
+            }));
+        }
+        while let Some(h) = pending.pop_front() {
+            merger.absorb(&h.join()?)?;
+            credits.release();
+        }
+        let merged = merger.into_partial();
+        let rows: Vec<Row> = (plan.finalize)(db, &merged);
+
+        // Place the worker tasks on cluster nodes (role-aware, balanced
+        // by the measured per-worker seconds) so the simulated network
+        // phases charge flows to the nodes that actually ran them.
+        let mut sched = Scheduler::new(&self.cluster);
+        let tasks: Vec<Task> = host_secs
+            .iter()
+            .enumerate()
+            .map(|(id, &est)| Task { id, kind: TaskKind::Compute, est_secs: est.max(1e-9) })
+            .collect();
+        let placements = sched
+            .place_all(&tasks)
+            .ok_or_else(|| crate::err!("no eligible compute node for worker tasks"))?;
+        let worker_nodes: Vec<usize> = placements.iter().map(|p| p.node_id).collect();
+
+        let (compute_secs, shuffle_secs, io_secs) = self.simulate_phases(
+            input_bytes_each,
+            &partial_bytes,
+            &host_secs,
+            ht_bytes_each,
+            &worker_nodes,
+        );
+        Ok(DistQueryReport {
+            query: query.to_string(),
+            rows,
+            workers: w,
+            compute_secs,
+            shuffle_secs,
+            io_secs,
+            shuffle_bytes,
+            input_bytes: input_bytes_each * w as u64,
+            host_compute_secs,
+        })
     }
 
     /// Simulate the network phases and worker compute for a run where
-    /// each worker scanned `input_bytes_each` and shipped
-    /// `partial_bytes_each` to the leader, with local per-worker compute
-    /// measured at `host_secs_each` on this host.
+    /// the worker on `worker_nodes[i]` scanned `input_bytes_each`,
+    /// shipped `partial_bytes[i]` to the leader (node 0), and its local
+    /// compute was measured at `host_secs_each[i]` on this host.
     fn simulate_phases(
         &self,
-        query: &str,
         input_bytes_each: u64,
-        partial_bytes_each: Vec<u64>,
-        host_secs_each: Vec<f64>,
+        partial_bytes: &[u64],
+        host_secs_each: &[f64],
         ht_bytes_each: u64,
+        worker_nodes: &[usize],
     ) -> (f64, f64, f64) {
-        let w = partial_bytes_each.len();
         let topo = self.cluster.topology();
         let n = topo.num_nodes();
 
-        // Phase 1 — storage read: worker i pulls its partition from a
-        // storage replica on a different node (disaggregated storage).
+        // Phase 1 — storage read: each worker node pulls its partition
+        // from a storage replica on a different node (disaggregated
+        // storage).
         let mut io_sim = Simulation::new(topo.clone());
-        for i in 0..w {
-            let src = (i + n / 2) % n;
-            if src != i {
-                io_sim.add_flow(src, i, input_bytes_each as f64, 0.0);
+        for &node in worker_nodes {
+            let src = (node + n / 2) % n;
+            if src != node && input_bytes_each > 0 {
+                io_sim.add_flow(src, node, input_bytes_each as f64, 0.0);
             }
         }
         let io_secs = io_sim.run_makespan();
 
         // Phase 2 — compute: each worker node runs its partition across
         // all its cores; memsim gives the contention-adjusted speedup.
-        let platform = &self.cluster.nodes[0].platform;
+        let platform = self.cluster.platform();
         let profile = WorkloadProfile {
             cpu_secs: 1.0, // shape only: we scale measured time below
             dram_bytes: (input_bytes_each as f64).max(1.0),
@@ -154,351 +289,47 @@ impl DistributedQuery {
             .iter()
             .map(|h| h * host_to_platform / speedup)
             .fold(0.0, f64::max);
-        let _ = query;
 
         // Phase 3 — shuffle partials to the leader (node 0).
         let mut sh_sim = Simulation::new(topo);
-        for (i, &b) in partial_bytes_each.iter().enumerate() {
-            if i != 0 && b > 0 {
-                sh_sim.add_flow(i, 0, b as f64, 0.0);
+        for (i, &b) in partial_bytes.iter().enumerate() {
+            let node = worker_nodes[i];
+            if node != 0 && b > 0 {
+                sh_sim.add_flow(node, 0, b as f64, 0.0);
             }
         }
         let shuffle_secs = sh_sim.run_makespan();
         (compute_secs, shuffle_secs, io_secs)
     }
-
-    // -------------------------------------------------------------- Q1
-
-    fn run_q1(&self, db: &TpchDb) -> Result<DistQueryReport> {
-        let w = self.n_workers();
-        let parts = Self::partition_lineitem(db, w);
-        let input_bytes_each = parts.first().map(|p| p.bytes()).unwrap_or(0);
-
-        let t0 = Instant::now();
-        let partials: Vec<(Vec<u8>, f64)> = parallel_map(parts, self.threads, |p| {
-            let t = Instant::now();
-            let sub = q1_partial(&p);
-            let frame = Message { method: METHOD_PARTIAL, id: 0, payload: encode_q1(&sub) }.encode();
-            (frame, t.elapsed().as_secs_f64())
-        });
-        let host_compute_secs = t0.elapsed().as_secs_f64();
-
-        // Leader: decode frames and merge.
-        let mut merged: GroupBy<5> = GroupBy::with_capacity(8);
-        let mut partial_bytes = Vec::with_capacity(w);
-        let mut host_secs = Vec::with_capacity(w);
-        for (frame, secs) in &partials {
-            partial_bytes.push(frame.len() as u64);
-            host_secs.push(*secs);
-            let msg = Message::decode(frame).map_err(anyhow::Error::msg)?;
-            for (key, sums, cnt) in decode_q1(&msg.payload)? {
-                let gi = merged.group_index(key);
-                for (a, v) in merged.groups[gi].1.iter_mut().zip(sums.iter()) {
-                    *a += v;
-                }
-                merged.groups[gi].2 += cnt;
-            }
-        }
-        let rows = q1_rows(&merged);
-        let shuffle_bytes: u64 = partial_bytes.iter().sum();
-        let (compute_secs, shuffle_secs, io_secs) = self.simulate_phases(
-            "q1",
-            input_bytes_each,
-            partial_bytes,
-            host_secs,
-            1 << 16,
-        );
-        Ok(DistQueryReport {
-            query: "q1".into(),
-            rows,
-            workers: w,
-            compute_secs,
-            shuffle_secs,
-            io_secs,
-            shuffle_bytes,
-            input_bytes: input_bytes_each * w as u64,
-            host_compute_secs,
-        })
-    }
-
-    // -------------------------------------------------------------- Q6
-
-    fn run_q6(&self, db: &TpchDb) -> Result<DistQueryReport> {
-        let w = self.n_workers();
-        let parts = Self::partition_lineitem(db, w);
-        let input_bytes_each = parts.first().map(|p| p.bytes()).unwrap_or(0);
-
-        let t0 = Instant::now();
-        let partials: Vec<(Vec<u8>, f64)> = parallel_map(parts, self.threads, |p| {
-            let t = Instant::now();
-            let rev = q6_partial(&p);
-            let frame =
-                Message { method: METHOD_PARTIAL, id: 0, payload: rev.to_le_bytes().to_vec() }
-                    .encode();
-            (frame, t.elapsed().as_secs_f64())
-        });
-        let host_compute_secs = t0.elapsed().as_secs_f64();
-
-        let mut revenue = 0.0;
-        let mut partial_bytes = Vec::new();
-        let mut host_secs = Vec::new();
-        for (frame, secs) in &partials {
-            partial_bytes.push(frame.len() as u64);
-            host_secs.push(*secs);
-            let msg = Message::decode(frame).map_err(anyhow::Error::msg)?;
-            revenue += f64::from_le_bytes(msg.payload[..8].try_into()?);
-        }
-        let shuffle_bytes: u64 = partial_bytes.iter().sum();
-        let (compute_secs, shuffle_secs, io_secs) =
-            self.simulate_phases("q6", input_bytes_each, partial_bytes, host_secs, 4096);
-        Ok(DistQueryReport {
-            query: "q6".into(),
-            rows: vec![vec![Value::Float(revenue)]],
-            workers: w,
-            compute_secs,
-            shuffle_secs,
-            io_secs,
-            shuffle_bytes,
-            input_bytes: input_bytes_each * w as u64,
-            host_compute_secs,
-        })
-    }
-
-    // -------------------------------------------------------------- Q18
-
-    fn run_q18(&self, db: &TpchDb) -> Result<DistQueryReport> {
-        let w = self.n_workers();
-        let parts = Self::partition_lineitem(db, w);
-        let input_bytes_each = parts.first().map(|p| p.bytes()).unwrap_or(0);
-
-        let t0 = Instant::now();
-        let partials: Vec<(Vec<u8>, f64)> = parallel_map(parts, self.threads, |p| {
-            let t = Instant::now();
-            let sums = q18_partial(&p);
-            let frame =
-                Message { method: METHOD_PARTIAL, id: 0, payload: encode_q18(&sums) }.encode();
-            (frame, t.elapsed().as_secs_f64())
-        });
-        let host_compute_secs = t0.elapsed().as_secs_f64();
-
-        // The q18 shuffle is the heavy one: per-order partial sums.
-        let mut merged: GroupBy<1> = GroupBy::with_capacity(db.orders.len());
-        let mut partial_bytes = Vec::new();
-        let mut host_secs = Vec::new();
-        for (frame, secs) in &partials {
-            partial_bytes.push(frame.len() as u64);
-            host_secs.push(*secs);
-            let msg = Message::decode(frame).map_err(anyhow::Error::msg)?;
-            for (key, qty) in decode_q18(&msg.payload)? {
-                merged.update(key, [qty]);
-            }
-        }
-        let ototal = db.orders.col("o_totalprice").as_f64();
-        let ocust = db.orders.col("o_custkey").as_i64();
-        let odate = db.orders.col("o_orderdate").as_i32();
-        let mut big: Vec<(i64, f64)> = merged
-            .groups
-            .iter()
-            .filter(|(_, s, _)| s[0] > 300.0)
-            .map(|(k, _, _)| (*k, ototal[(*k - 1) as usize]))
-            .collect();
-        top_k_desc(&mut big, 100);
-        let qty_of: std::collections::HashMap<i64, f64> =
-            merged.groups.iter().map(|(k, s, _)| (*k, s[0])).collect();
-        let rows: Vec<Row> = big
-            .into_iter()
-            .map(|(ok, total)| {
-                let orow = (ok - 1) as usize;
-                vec![
-                    Value::Int(ocust[orow]),
-                    Value::Int(ok),
-                    Value::Int(odate[orow] as i64),
-                    Value::Float(total),
-                    Value::Float(qty_of[&ok]),
-                ]
-            })
-            .collect();
-
-        let shuffle_bytes: u64 = partial_bytes.iter().sum();
-        let (compute_secs, shuffle_secs, io_secs) = self.simulate_phases(
-            "q18",
-            input_bytes_each,
-            partial_bytes,
-            host_secs,
-            (db.orders.len() * 24) as u64,
-        );
-        Ok(DistQueryReport {
-            query: "q18".into(),
-            rows,
-            workers: w,
-            compute_secs,
-            shuffle_secs,
-            io_secs,
-            shuffle_bytes,
-            input_bytes: input_bytes_each * w as u64,
-            host_compute_secs,
-        })
-    }
-}
-
-// ------------------------------------------------------------ partials
-
-fn q1_partial(part: &Table) -> GroupBy<5> {
-    use crate::analytics::column::date_to_days;
-    let cutoff = date_to_days(1998, 12, 1) - 90;
-    let ship = part.col("l_shipdate").as_i32();
-    let qty = part.col("l_quantity").as_f64();
-    let price = part.col("l_extendedprice").as_f64();
-    let disc = part.col("l_discount").as_f64();
-    let tax = part.col("l_tax").as_f64();
-    let rf = part.col("l_returnflag").as_u8();
-    let ls = part.col("l_linestatus").as_u8();
-    let mut g: GroupBy<5> = GroupBy::with_capacity(8);
-    for i in 0..part.len() {
-        if ship[i] > cutoff {
-            continue;
-        }
-        let dp = price[i] * (1.0 - disc[i]);
-        let key = ((rf[i] as i64) << 8) | ls[i] as i64;
-        g.update(key, [qty[i], price[i], dp, dp * (1.0 + tax[i]), disc[i]]);
-    }
-    g
-}
-
-fn q1_rows(g: &GroupBy<5>) -> Vec<Row> {
-    let mut rows: Vec<Row> = g
-        .groups
-        .iter()
-        .map(|(key, s, cnt)| {
-            let c = *cnt as f64;
-            vec![
-                Value::Str(((key >> 8) as u8 as char).to_string()),
-                Value::Str(((key & 0xff) as u8 as char).to_string()),
-                Value::Float(s[0]),
-                Value::Float(s[1]),
-                Value::Float(s[2]),
-                Value::Float(s[3]),
-                Value::Float(s[0] / c),
-                Value::Float(s[1] / c),
-                Value::Float(s[4] / c),
-                Value::Int(*cnt as i64),
-            ]
-        })
-        .collect();
-    rows.sort_by(|a, b| {
-        let sa = (fmt(&a[0]), fmt(&a[1]));
-        let sb = (fmt(&b[0]), fmt(&b[1]));
-        sa.cmp(&sb)
-    });
-    rows
-}
-
-fn fmt(v: &Value) -> String {
-    match v {
-        Value::Str(s) => s.clone(),
-        _ => unreachable!(),
-    }
-}
-
-fn q6_partial(part: &Table) -> f64 {
-    use crate::analytics::column::date_to_days;
-    let lo = date_to_days(1994, 1, 1);
-    let hi = date_to_days(1995, 1, 1);
-    let ship = part.col("l_shipdate").as_i32();
-    let disc = part.col("l_discount").as_f64();
-    let qty = part.col("l_quantity").as_f64();
-    let price = part.col("l_extendedprice").as_f64();
-    let mut rev = 0.0;
-    for i in 0..part.len() {
-        if ship[i] >= lo
-            && ship[i] < hi
-            && disc[i] >= 0.045
-            && disc[i] < 0.075
-            && qty[i] < 24.0
-        {
-            rev += price[i] * disc[i];
-        }
-    }
-    rev
-}
-
-fn q18_partial(part: &Table) -> Vec<(i64, f64)> {
-    let lok = part.col("l_orderkey").as_i64();
-    let qty = part.col("l_quantity").as_f64();
-    let mut g: GroupBy<1> = GroupBy::with_capacity(part.len() / 4 + 16);
-    for i in 0..part.len() {
-        g.update(lok[i], [qty[i]]);
-    }
-    g.groups.iter().map(|(k, s, _)| (*k, s[0])).collect()
-}
-
-// ------------------------------------------------------------ encoding
-
-fn encode_q1(g: &GroupBy<5>) -> Vec<u8> {
-    let mut out = Vec::with_capacity(g.groups.len() * 56);
-    for (k, sums, cnt) in &g.groups {
-        out.extend_from_slice(&k.to_le_bytes());
-        for s in sums {
-            out.extend_from_slice(&s.to_le_bytes());
-        }
-        out.extend_from_slice(&cnt.to_le_bytes());
-    }
-    out
-}
-
-type Q1Partial = Vec<(i64, [f64; 5], u64)>;
-
-fn decode_q1(buf: &[u8]) -> Result<Q1Partial> {
-    if buf.len() % 56 != 0 {
-        bail!("bad q1 partial length {}", buf.len());
-    }
-    let mut out = Vec::with_capacity(buf.len() / 56);
-    for chunk in buf.chunks_exact(56) {
-        let key = i64::from_le_bytes(chunk[0..8].try_into()?);
-        let mut sums = [0.0; 5];
-        for (i, s) in sums.iter_mut().enumerate() {
-            *s = f64::from_le_bytes(chunk[8 + i * 8..16 + i * 8].try_into()?);
-        }
-        let cnt = u64::from_le_bytes(chunk[48..56].try_into()?);
-        out.push((key, sums, cnt));
-    }
-    Ok(out)
-}
-
-fn encode_q18(sums: &[(i64, f64)]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(sums.len() * 16);
-    for (k, q) in sums {
-        out.extend_from_slice(&k.to_le_bytes());
-        out.extend_from_slice(&q.to_le_bytes());
-    }
-    out
-}
-
-fn decode_q18(buf: &[u8]) -> Result<Vec<(i64, f64)>> {
-    if buf.len() % 16 != 0 {
-        bail!("bad q18 partial length {}", buf.len());
-    }
-    Ok(buf
-        .chunks_exact(16)
-        .map(|c| {
-            (
-                i64::from_le_bytes(c[0..8].try_into().unwrap()),
-                f64::from_le_bytes(c[8..16].try_into().unwrap()),
-            )
-        })
-        .collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analytics::queries;
+    use crate::analytics::queries::{self, QUERY_NAMES};
     use crate::analytics::tpch::TpchConfig;
     use crate::cluster::Role;
     use crate::platform::n2d_milan;
 
     fn cluster(n: usize) -> ClusterSpec {
         ClusterSpec::traditional(n, n2d_milan(), Role::LiteCompute)
+    }
+
+    #[test]
+    fn every_query_matches_single_node() {
+        let db = TpchDb::generate(TpchConfig::new(0.005, 101));
+        for q in QUERY_NAMES {
+            let single = queries::run_query(&db, q).unwrap();
+            let dist = DistributedQuery::new(cluster(4)).run(&db, q).unwrap();
+            assert!(
+                single.approx_eq_rows(&dist.rows),
+                "distributed {q} diverged ({} vs {} rows)",
+                dist.rows.len(),
+                single.rows.len()
+            );
+            assert!(dist.shuffle_bytes > 0, "{q} shuffled nothing");
+            assert!(dist.compute_secs > 0.0, "{q} reported no compute");
+        }
     }
 
     #[test]
@@ -532,9 +363,25 @@ mod tests {
     }
 
     #[test]
+    fn morsel_size_does_not_change_results() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 211));
+        let single = queries::q5::run(&db);
+        for rows in [128, 4096, 1 << 22] {
+            let dist = DistributedQuery::new(cluster(3))
+                .with_morsel_rows(rows)
+                .run(&db, "q5")
+                .unwrap();
+            assert!(
+                single.approx_eq_rows(&dist.rows),
+                "q5 diverged at morsel_rows={rows}"
+            );
+        }
+    }
+
+    #[test]
     fn unsupported_query_errors() {
         let db = TpchDb::generate(TpchConfig::new(0.001, 109));
-        assert!(DistributedQuery::new(cluster(2)).run(&db, "q3").is_err());
+        assert!(DistributedQuery::new(cluster(2)).run(&db, "q99").is_err());
     }
 
     #[test]
@@ -565,21 +412,5 @@ mod tests {
         assert_eq!(r.last().unwrap().1, 103);
         let total: usize = r.iter().map(|(s, e)| e - s).sum();
         assert_eq!(total, 103);
-    }
-
-    #[test]
-    fn codec_roundtrip() {
-        let mut g: GroupBy<5> = GroupBy::with_capacity(4);
-        g.update(7, [1.0, 2.0, 3.0, 4.0, 5.0]);
-        g.update(9, [9.0, 8.0, 7.0, 6.0, 5.0]);
-        let enc = encode_q1(&g);
-        let dec = decode_q1(&enc).unwrap();
-        assert_eq!(dec.len(), 2);
-        assert_eq!(dec[0].0, 7);
-        assert_eq!(dec[1].1[0], 9.0);
-        assert!(decode_q1(&enc[..10]).is_err());
-
-        let sums = vec![(1i64, 2.5f64), (3, 4.5)];
-        assert_eq!(decode_q18(&encode_q18(&sums)).unwrap(), sums);
     }
 }

@@ -1,0 +1,194 @@
+//! Crate-wide error type — a minimal, dependency-free stand-in for
+//! `anyhow` (the offline registry is empty, so the crate vendors nothing).
+//!
+//! [`Error`] is a message plus an optional chain of context strings, built
+//! with the [`crate::err!`], [`crate::bail!`], and [`crate::ensure!`]
+//! macros and the [`Context`] extension trait:
+//!
+//! ```
+//! use lovelock::error::{Context, Result};
+//!
+//! fn parse(s: &str) -> Result<u32> {
+//!     s.parse::<u32>().context("not an integer")
+//! }
+//! assert!(parse("17").is_ok());
+//! let err = parse("x").unwrap_err();
+//! assert!(err.to_string().contains("not an integer"));
+//! ```
+
+use std::fmt;
+
+/// A message-carrying error with optional context frames (outermost last).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string(), context: Vec::new() }
+    }
+
+    /// Attach a context frame (shown before the root message).
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.context.push(c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Self::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Self::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self::msg(e)
+    }
+}
+
+impl From<std::array::TryFromSliceError> for Error {
+    fn from(e: std::array::TryFromSliceError) -> Self {
+        Self::msg(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Self::msg(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Self::msg(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, mirroring the `anyhow` API surface the crate
+/// uses.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+
+    /// Wrap the error (or `None`) with a lazily built context message.
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(msg))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`](crate::error::Error) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::error::Error) built from a
+/// format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_chains_context() {
+        let e = Error::msg("root").context("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner: root");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: i32) -> Result<i32> {
+            crate::ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                crate::bail!("zero");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero");
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative: -2");
+        let e = crate::err!("v={}", 9);
+        assert_eq!(e.to_string(), "v=9");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), String> = Err("boom".into());
+        assert_eq!(r.context("stage").unwrap_err().to_string(), "stage: boom");
+        let o: Option<u32> = None;
+        assert_eq!(o.with_context(|| "missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(5).context("x").unwrap(), 5);
+    }
+
+    #[test]
+    fn from_conversions() {
+        fn io() -> Result<()> {
+            std::fs::read("/definitely/not/a/path")?;
+            Ok(())
+        }
+        assert!(io().is_err());
+        let e: Error = "plain".into();
+        assert_eq!(e.to_string(), "plain");
+    }
+}

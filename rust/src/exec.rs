@@ -4,8 +4,21 @@
 //! The offline registry carries neither tokio nor rayon; the Lovelock
 //! coordinator needs (a) a pool to run worker-node tasks concurrently,
 //! (b) `parallel_for`-style data parallelism for the analytics engine's
-//! partition-parallel operators, and (c) a timer wheel for simulated-time
+//! morsel-parallel operators, and (c) a timer wheel for simulated-time
 //! pacing in the examples. This module provides all three on std only.
+//!
+//! ```
+//! use lovelock::exec::parallel_for_chunks;
+//! use std::sync::atomic::{AtomicU64, Ordering};
+//!
+//! // Sum 0..1000 in 64-row morsels on 4 threads.
+//! let total = AtomicU64::new(0);
+//! parallel_for_chunks(1000, 64, 4, |lo, hi| {
+//!     let s: u64 = (lo as u64..hi as u64).sum();
+//!     total.fetch_add(s, Ordering::Relaxed);
+//! });
+//! assert_eq!(total.into_inner(), 499_500);
+//! ```
 
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -172,18 +185,28 @@ where
         .collect()
 }
 
-/// Parallel iteration over index ranges in contiguous chunks — used by the
-/// analytics engine's columnar operators (each chunk is one morsel).
-pub fn parallel_for_chunks<F>(len: usize, chunk: usize, threads: usize, f: F)
+/// Parallel iteration over index ranges in contiguous chunks, collecting
+/// each chunk's result **in chunk order** — the morsel-execution
+/// primitive of the analytics engine (each chunk is one morsel).
+pub fn parallel_map_chunks<R, F>(len: usize, chunk: usize, threads: usize, f: F) -> Vec<R>
 where
-    F: Fn(usize, usize) + Sync,
+    R: Send,
+    F: Fn(usize, usize) -> R + Sync,
 {
     let chunk = chunk.max(1);
     let ranges: Vec<(usize, usize)> = (0..len)
         .step_by(chunk)
         .map(|s| (s, (s + chunk).min(len)))
         .collect();
-    parallel_map(ranges, threads, |(s, e)| f(s, e));
+    parallel_map(ranges, threads, |(s, e)| f(s, e))
+}
+
+/// [`parallel_map_chunks`] for side-effect-only bodies.
+pub fn parallel_for_chunks<F>(len: usize, chunk: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    parallel_map_chunks(len, chunk, threads, |s, e| f(s, e));
 }
 
 /// One scheduled timer entry.
@@ -343,6 +366,14 @@ mod tests {
         let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
         assert!(out.is_empty());
         assert_eq!(parallel_map(vec![7], 4, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn parallel_map_chunks_ordered() {
+        let out = parallel_map_chunks(10, 3, 4, |s, e| (s, e));
+        assert_eq!(out, vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+        let empty: Vec<(usize, usize)> = parallel_map_chunks(0, 3, 4, |s, e| (s, e));
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -8,23 +8,26 @@
 //!   ([`coordinator`]) — leader/worker scheduling, distributed shuffle,
 //!   backpressure;
 //! * every **substrate** the paper's evaluation rests on: a TPC-H analytics
-//!   engine ([`analytics`]), a flow-level fabric simulator ([`simnet`]), a
+//!   engine ([`analytics`]) with morsel-driven parallel execution
+//!   ([`analytics::morsel`]), a flow-level fabric simulator ([`simnet`]), a
 //!   memory-bandwidth contention model ([`memsim`]), a disaggregated storage
 //!   layer ([`storage`]), an RPC stack ([`rpc`]), and a distributed-training
 //!   coordinator ([`training`]);
 //! * the paper's **analytical models**: cost/energy ([`costmodel`]), the
 //!   BigQuery projection ([`bigquery`]), the GNN input pipeline ([`gnn`]),
 //!   and the platform catalog of Table 1 ([`platform`]);
-//! * a **PJRT runtime** ([`runtime`]) that loads AOT-compiled JAX/Pallas
-//!   artifacts (HLO text under `artifacts/`) and executes them from the
-//!   request path with Python never in the loop.
+//! * behind the `xla` feature, a **PJRT runtime** (`runtime`) that loads
+//!   AOT-compiled JAX/Pallas artifacts (HLO text under `artifacts/`) and
+//!   executes them from the request path with Python never in the loop.
+//!   The feature is off by default because the external `xla` crate is not
+//!   in the offline registry.
 //!
 //! Infrastructure substrates written in-repo because the offline registry
-//! only carries the `xla` dependency tree: [`exec`] (thread pool / parallel
-//! loops, in lieu of tokio), [`cli`] (argument parsing, in lieu of clap),
-//! [`benchkit`] (measurement harness, in lieu of criterion),
-//! [`proptest_mini`] (property testing, in lieu of proptest),
-//! [`configfmt`] (TOML-subset + JSON, in lieu of serde).
+//! is empty: [`error`] (error type, in lieu of anyhow), [`exec`] (thread
+//! pool / parallel loops, in lieu of tokio/rayon), [`cli`] (argument
+//! parsing, in lieu of clap), [`benchkit`] (measurement harness, in lieu
+//! of criterion), [`proptest_mini`] (property testing, in lieu of
+//! proptest), [`configfmt`] (TOML-subset + JSON, in lieu of serde).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -37,6 +40,7 @@ pub mod cluster;
 pub mod configfmt;
 pub mod coordinator;
 pub mod costmodel;
+pub mod error;
 pub mod exec;
 pub mod gnn;
 pub mod memsim;
@@ -45,10 +49,10 @@ pub mod platform;
 pub mod prng;
 pub mod proptest_mini;
 pub mod rpc;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod simnet;
 pub mod storage;
 pub mod training;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub use error::{Error, Result};

@@ -4,6 +4,7 @@
 //! same tables with measurement loops): `lovelock fig3`, `lovelock cost`,
 //! `lovelock train --model tiny --steps 50`, …
 
+use lovelock::analytics::morsel::{run_query_morsel, DEFAULT_MORSEL_ROWS};
 use lovelock::analytics::{profile, run_query, TpchConfig, TpchDb, QUERY_NAMES};
 use lovelock::bigquery::{self, Breakdown};
 use lovelock::cli::Command;
@@ -13,8 +14,11 @@ use lovelock::costmodel::CostModel;
 use lovelock::gnn::{GnnHost, LovelockGnn};
 use lovelock::memsim;
 use lovelock::platform::{self, table1_platforms};
-use lovelock::training::driver::TrainDriver;
 use lovelock::training::hostmodel::{CheckpointPolicy, GlamModel, TrainSetup};
+
+// The --morsel-rows help default below is a string literal; keep it in
+// lockstep with the engine's constant.
+const _: () = assert!(DEFAULT_MORSEL_ROWS == 16_384);
 
 fn main() {
     let cmd = Command::new("lovelock", "smart-NIC-hosted cluster runtime (paper reproduction)")
@@ -31,11 +35,14 @@ fn main() {
         .opt("seed", Some("42"), "experiment seed")
         .opt("phi", Some("2"), "smart NICs per replaced server")
         .opt("workers", Some("8"), "worker nodes for dist")
+        .opt("threads", Some("0"), "local threads for parallel paths (0 = all cores)")
+        .opt("morsel-rows", Some("16384"), "rows per morsel for parallel execution")
         .opt("model", Some("tiny"), "model artifact name (tiny|100m)")
         .opt("steps", Some("50"), "training steps")
         .opt("log-every", Some("10"), "loss log interval")
         .opt("query", Some("q1"), "query name for dist")
         .flag("lovelock", "use a Lovelock (E2000) cluster for dist")
+        .flag("serial", "run tpch single-threaded instead of morsel-driven")
         .flag("chunked", "use chunked-stream checkpointing");
     let args = match cmd.parse(std::env::args().skip(1)) {
         Ok(a) => a,
@@ -65,7 +72,7 @@ fn main() {
     }
 }
 
-fn cmd_table1() -> anyhow::Result<()> {
+fn cmd_table1() -> lovelock::Result<()> {
     println!(
         "{:<26} {:>6} {:>9} {:>10} {:>12} {:>12}",
         "platform", "vcpus", "nic", "dram", "nic/core", "dram/core"
@@ -84,7 +91,7 @@ fn cmd_table1() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_fig3(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+fn cmd_fig3(args: &lovelock::cli::Args) -> lovelock::Result<()> {
     let sf = args.get_f64("sf", 0.01);
     let seed = args.get_u64("seed", 42);
     let db = TpchDb::generate(TpchConfig::new(sf, seed));
@@ -102,7 +109,7 @@ fn cmd_fig3(args: &lovelock::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_fig4() -> anyhow::Result<()> {
+fn cmd_fig4() -> lovelock::Result<()> {
     let b = Breakdown::isca23();
     println!("{:<12} {:>8} {:>8} {:>8} {:>8}", "config", "cpu", "shuffle", "io", "total");
     println!(
@@ -127,7 +134,7 @@ fn cmd_fig4() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_table2(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+fn cmd_table2(args: &lovelock::cli::Args) -> lovelock::Result<()> {
     let policy = if args.get_flag("chunked") {
         CheckpointPolicy::ChunkedStream { chunk_bytes: 256 << 20 }
     } else {
@@ -154,7 +161,7 @@ fn cmd_table2(args: &lovelock::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_cost() -> anyhow::Result<()> {
+fn cmd_cost() -> lovelock::Result<()> {
     let bare = CostModel::bare_bluefield();
     let pcie = CostModel::host_only().with_pcie_share(0.75);
     let lite = CostModel::host_only();
@@ -189,7 +196,7 @@ fn cmd_cost() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_gnn(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+fn cmd_gnn(args: &lovelock::cli::Args) -> lovelock::Result<()> {
     let base = GnnHost::bgl_server();
     println!(
         "server: compute {:.0} mb/s, network {:.0} mb/s, achieved {:.0} mb/s, stall {:.0}%",
@@ -208,9 +215,12 @@ fn cmd_gnn(args: &lovelock::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_tpch(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+fn cmd_tpch(args: &lovelock::cli::Args) -> lovelock::Result<()> {
     let sf = args.get_f64("sf", 0.01);
     let seed = args.get_u64("seed", 42);
+    let serial = args.get_flag("serial");
+    let threads = args.get_usize("threads", 0);
+    let morsel_rows = args.get_usize("morsel-rows", DEFAULT_MORSEL_ROWS);
     let db = TpchDb::generate(TpchConfig::new(sf, seed));
     let queries: Vec<String> = if args.positional.is_empty() {
         QUERY_NAMES.iter().map(|s| s.to_string()).collect()
@@ -219,12 +229,18 @@ fn cmd_tpch(args: &lovelock::cli::Args) -> anyhow::Result<()> {
     };
     for q in queries {
         let t = std::time::Instant::now();
-        match run_query(&db, &q) {
+        let out = if serial {
+            run_query(&db, &q)
+        } else {
+            run_query_morsel(&db, &q, threads, morsel_rows)
+        };
+        match out {
             Some(out) => println!(
-                "{q}: {} rows in {:.1} ms ({} MB scanned)",
+                "{q}: {} rows in {:.1} ms ({} MB scanned, {})",
                 out.rows.len(),
                 t.elapsed().as_secs_f64() * 1e3,
-                out.stats.bytes_scanned / 1_000_000
+                out.stats.bytes_scanned / 1_000_000,
+                if serial { "serial".to_string() } else { format!("morsels of {morsel_rows}") }
             ),
             None => println!("{q}: unknown query"),
         }
@@ -232,10 +248,12 @@ fn cmd_tpch(args: &lovelock::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_dist(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+fn cmd_dist(args: &lovelock::cli::Args) -> lovelock::Result<()> {
     let sf = args.get_f64("sf", 0.01);
     let seed = args.get_u64("seed", 42);
     let workers = args.get_usize("workers", 8);
+    let threads = args.get_usize("threads", 0);
+    let morsel_rows = args.get_usize("morsel-rows", DEFAULT_MORSEL_ROWS);
     let query = args.get_str("query", "q1");
     let db = TpchDb::generate(TpchConfig::new(sf, seed));
     let trad = ClusterSpec::traditional(workers, platform::n2d_milan(), Role::LiteCompute);
@@ -245,7 +263,12 @@ fn cmd_dist(args: &lovelock::cli::Args) -> anyhow::Result<()> {
         trad
     };
     let name = cluster.name.clone();
-    let r = DistributedQuery::new(cluster).run(&db, &query)?;
+    // workers sizes the traditional cluster; a Lovelock replacement uses
+    // all φ·workers NIC nodes.
+    let r = DistributedQuery::new(cluster)
+        .with_threads(threads)
+        .with_morsel_rows(morsel_rows)
+        .run(&db, &query)?;
     let (c, s, i) = r.breakdown();
     println!(
         "{query} on {name}: {} rows; sim total {:.3}s = cpu {:.0}% shuffle {:.0}% io {:.0}%; shuffled {} KB",
@@ -259,7 +282,17 @@ fn cmd_dist(args: &lovelock::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &lovelock::cli::Args) -> anyhow::Result<()> {
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &lovelock::cli::Args) -> lovelock::Result<()> {
+    Err(lovelock::err!(
+        "the train subcommand needs the PJRT runtime; rebuild with `--features xla` \
+         (requires vendoring the xla crate — see Cargo.toml)"
+    ))
+}
+
+#[cfg(feature = "xla")]
+fn cmd_train(args: &lovelock::cli::Args) -> lovelock::Result<()> {
+    use lovelock::training::driver::TrainDriver;
     let model = args.get_str("model", "tiny");
     let steps = args.get_u64("steps", 50) as u32;
     let log_every = args.get_u64("log-every", 10) as u32;

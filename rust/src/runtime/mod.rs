@@ -12,7 +12,8 @@
 //! buffer-to-buffer path ([`Module::execute_buffers`]) so parameters stay
 //! resident and no literal round-trips happen per step.
 
-use anyhow::{anyhow, Context, Result};
+use crate::error::{Context, Result};
+use crate::err;
 use std::path::Path;
 use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
@@ -47,7 +48,7 @@ impl Engine {
     pub fn to_device(&self, lit: &Literal) -> Result<PjRtBuffer> {
         self.client
             .buffer_from_host_literal(None, lit)
-            .map_err(|e| anyhow!("host->device: {e}"))
+            .map_err(|e| err!("host->device: {e}"))
     }
 }
 
@@ -68,11 +69,11 @@ impl Module {
     /// array literal; tuple-rooted modules are decomposed into their
     /// elements.
     pub fn execute(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
-        let outs = self.exe.execute::<Literal>(inputs).map_err(|e| anyhow!("execute: {e}"))?;
-        let lit = outs[0][0].to_literal_sync().map_err(|e| anyhow!("d2h: {e}"))?;
+        let outs = self.exe.execute::<Literal>(inputs).map_err(|e| err!("execute: {e}"))?;
+        let lit = outs[0][0].to_literal_sync().map_err(|e| err!("d2h: {e}"))?;
         let is_tuple = lit.shape().map(|s| s.is_tuple()).unwrap_or(false);
         if is_tuple {
-            Ok(lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?)
+            Ok(lit.to_tuple().map_err(|e| err!("untuple: {e}"))?)
         } else {
             Ok(vec![lit])
         }
@@ -89,7 +90,7 @@ impl Module {
         inputs: &[B],
     ) -> Result<Vec<PjRtBuffer>> {
         let mut outs =
-            self.exe.execute_b(inputs).map_err(|e| anyhow!("execute_b: {e}"))?;
+            self.exe.execute_b(inputs).map_err(|e| err!("execute_b: {e}"))?;
         Ok(outs.swap_remove(0))
     }
 }
@@ -101,33 +102,33 @@ impl Module {
 pub fn read_f32_at(buf: &PjRtBuffer, offset: usize, n: usize) -> Result<Vec<f32>> {
     let mut out = vec![0f32; n];
     buf.copy_raw_to_host_sync(&mut out, offset)
-        .map_err(|e| anyhow!("copy_raw_to_host_sync: {e}"))?;
+        .map_err(|e| err!("copy_raw_to_host_sync: {e}"))?;
     Ok(out)
 }
 
 /// f32 vector → rank-N literal.
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
     let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
-    Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e}"))
+    crate::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    Literal::vec1(data).reshape(dims).map_err(|e| err!("reshape: {e}"))
 }
 
 /// i32 vector → rank-N literal.
 pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
     let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
-    Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e}"))
+    crate::ensure!(n as usize == data.len(), "shape {dims:?} != len {}", data.len());
+    Literal::vec1(data).reshape(dims).map_err(|e| err!("reshape: {e}"))
 }
 
 /// Literal → f32 vec.
 pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+    lit.to_vec::<f32>().map_err(|e| err!("to_vec: {e}"))
 }
 
 /// Scalar f32 from a literal.
 pub fn scalar_f32(lit: &Literal) -> Result<f32> {
     let v = to_f32(lit)?;
-    anyhow::ensure!(!v.is_empty(), "empty literal");
+    crate::ensure!(!v.is_empty(), "empty literal");
     Ok(v[0])
 }
 

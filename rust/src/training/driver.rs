@@ -18,7 +18,7 @@
 use crate::configfmt::parse_toml;
 use crate::prng::Pcg64;
 use crate::runtime::{artifact_path, literal_i32, to_f32, Engine, Module};
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 use std::time::Instant;
 use xla::PjRtBuffer;
 
@@ -39,7 +39,7 @@ pub fn load_spec(name: &str) -> Result<ModelSpec> {
     let path = artifact_path("manifest.toml");
     let text = std::fs::read_to_string(&path)
         .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
-    let cfg = parse_toml(&text).map_err(anyhow::Error::msg)?;
+    let cfg = parse_toml(&text).map_err(crate::error::Error::msg)?;
     let key = |k: &str| format!("{name}.{k}");
     let get = |k: &str| -> Result<i64> {
         cfg.get(&key(k))
@@ -174,7 +174,7 @@ impl TrainDriver {
             .load_module(artifact_path(&format!("init_{}.hlo.txt", self.spec.name)))?;
         let seed_lit = literal_i32(&[seed], &[1])?;
         let mut outs = init_mod.execute(&[seed_lit])?;
-        anyhow::ensure!(!outs.is_empty(), "init produced no outputs");
+        crate::ensure!(!outs.is_empty(), "init produced no outputs");
         let state_lit = outs.swap_remove(0);
         let state = self.engine.to_device(&state_lit)?;
         // The h2d copy is asynchronous: keep the literal alive until the
@@ -213,7 +213,7 @@ impl TrainDriver {
 
         let t_dev = Instant::now();
         let mut outs = self.step_mod.execute_buffers(&[&state, &tok_buf])?;
-        anyhow::ensure!(!outs.is_empty(), "train step produced no outputs");
+        crate::ensure!(!outs.is_empty(), "train step produced no outputs");
         self.graveyard.push(state);
         self.graveyard.push(tok_buf);
         self.graveyard_lits.push(tok_lit);
@@ -238,13 +238,13 @@ impl TrainDriver {
         let t_dev = Instant::now();
         let lit = state
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("d2h: {e}"))?;
+            .map_err(|e| crate::err!("d2h: {e}"))?;
         self.accounting.device_secs += t_dev.elapsed().as_secs_f64();
         self.accounting.d2h_bytes += (self.spec.state_len * 4) as u64;
         self.graveyard.clear();
         self.graveyard_lits.clear();
         let v = to_f32(&lit)?;
-        anyhow::ensure!(!v.is_empty(), "empty state");
+        crate::ensure!(!v.is_empty(), "empty state");
         self.last_loss = v[0];
         Ok(v[0])
     }
@@ -257,7 +257,7 @@ impl TrainDriver {
         let state = self.state.as_ref().context("driver not initialized")?;
         let lit = state
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("d2h: {e}"))?;
+            .map_err(|e| crate::err!("d2h: {e}"))?;
         let v = to_f32(&lit)?;
         self.accounting.d2h_bytes += (v.len() * 4) as u64;
         let mut f = std::fs::File::create(path)?;

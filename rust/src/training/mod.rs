@@ -10,12 +10,14 @@
 //! * [`allreduce`] — ring all-reduce traffic accounting, including the §6
 //!   observation that splitting a host's GPUs across φ smart NICs
 //!   multiplies datacenter all-reduce traffic by φ;
-//! * [`driver`] — the *real* training loop: loads the AOT-compiled JAX
-//!   train step (`artifacts/train_step.hlo.txt`) through the PJRT runtime
-//!   and steps it while accounting host-side work exactly like the
-//!   analytic model (the E2E example uses this).
+//! * `driver` (behind the `xla` feature) — the *real* training loop:
+//!   loads the AOT-compiled JAX train step
+//!   (`artifacts/train_step.hlo.txt`) through the PJRT runtime and steps
+//!   it while accounting host-side work exactly like the analytic model
+//!   (the E2E example uses this).
 
 pub mod allreduce;
+#[cfg(feature = "xla")]
 pub mod driver;
 pub mod hostmodel;
 

@@ -21,13 +21,15 @@ fn traditional(n: usize) -> ClusterSpec {
 
 #[test]
 fn distributed_results_match_local_across_clusters() {
+    // Every query in the Figure-3 set, on traditional and Lovelock
+    // clusters, must reproduce the single-node rows.
     let db = db();
     for (name, cluster) in [
         ("traditional", traditional(8)),
         ("lovelock-phi2", ClusterSpec::lovelock_e2000(&traditional(8), 2)),
         ("lovelock-phi3", ClusterSpec::lovelock_e2000(&traditional(8), 3)),
     ] {
-        for q in ["q1", "q6", "q18"] {
+        for q in lovelock::analytics::QUERY_NAMES {
             let local = queries::run_query(&db, q).unwrap();
             let dist = DistributedQuery::new(cluster.clone()).run(&db, q).unwrap();
             assert!(
@@ -35,6 +37,21 @@ fn distributed_results_match_local_across_clusters() {
                 "{q} on {name} diverged from local execution"
             );
         }
+    }
+}
+
+#[test]
+fn morsel_path_matches_distributed_path() {
+    // The local morsel executor and the distributed executor share the
+    // same kernels; both must agree with each other (and the reference).
+    let db = db();
+    for q in lovelock::analytics::QUERY_NAMES {
+        let local = lovelock::analytics::run_query_morsel(&db, q, 4, 8192).unwrap();
+        let dist = DistributedQuery::new(traditional(4)).run(&db, q).unwrap();
+        assert!(
+            local.approx_eq_rows(&dist.rows),
+            "{q}: morsel path diverged from distributed path"
+        );
     }
 }
 
