@@ -2,12 +2,27 @@
 # CI gate for the lovelock crate. No network, no external dependencies:
 # everything builds from the repo with the stock Rust toolchain.
 #
-#   ./ci.sh            full gate (build, tests, docs-with-denied-warnings)
+#   ./ci.sh            full gate (lint, build, tests, docs-with-denied-warnings)
 #   ./ci.sh quick      skip the release build (debug tests + docs only)
 
 set -eu
 
 cd "$(dirname "$0")"
+
+# Lint stage: rustfmt and clippy are rustup components that may be
+# absent from a minimal toolchain image — detect before demanding.
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "==> cargo fmt --check"
+    cargo fmt --all -- --check
+else
+    echo "==> cargo fmt unavailable; skipping format check"
+fi
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "==> cargo clippy (warnings denied)"
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "==> cargo clippy unavailable; skipping lint"
+fi
 
 if [ "${1:-}" != "quick" ]; then
     echo "==> cargo build --release"

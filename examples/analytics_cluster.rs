@@ -66,6 +66,7 @@ fn main() -> lovelock::Result<()> {
                     .field("shuffle_secs", r.shuffle_secs)
                     .field("io_secs", r.io_secs)
                     .field("rows", r.rows.len())
+                    .field("exchange_bytes", r.exchange_bytes)
                     .field("shuffle_bytes", r.shuffle_bytes),
             );
         }

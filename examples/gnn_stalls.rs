@@ -32,7 +32,8 @@ fn simulate_pipeline(h: &GnnHost, n: usize, queue_depth: usize) -> f64 {
 
 fn main() {
     let base = GnnHost::bgl_server();
-    println!("BGL server: compute {:.0} mb/s, network {:.1} mb/s", base.compute_rate(), base.network_rate());
+    let (comp, net) = (base.compute_rate(), base.network_rate());
+    println!("BGL server: compute {comp:.0} mb/s, network {net:.1} mb/s");
 
     println!("\n-- NIC bandwidth sweep (analytic vs discrete simulation) --");
     println!("{:>10} {:>12} {:>12} {:>10}", "nic Gbps", "analytic", "simulated", "stall%");

@@ -20,11 +20,20 @@ fn main() -> lovelock::Result<()> {
     let trad = ClusterSpec::traditional(8, n2d_milan(), Role::Accelerator { count: 4 });
     // …and the Lovelock replacement: 2 IPU E2000s per server.
     let love = ClusterSpec::lovelock_e2000(&trad, 2);
-    println!("traditional : {} nodes, {:5.0} Gbps aggregate, {} vcpus",
-        trad.num_nodes(), trad.aggregate_nic_gbps(), trad.total_vcpus());
-    println!("lovelock    : {} nodes, {:5.0} Gbps aggregate, {} vcpus",
-        love.num_nodes(), love.aggregate_nic_gbps(), love.total_vcpus());
-    println!("accelerators conserved: {} vs {}", trad.total_peripherals(), love.total_peripherals());
+    println!(
+        "traditional : {} nodes, {:5.0} Gbps aggregate, {} vcpus",
+        trad.num_nodes(),
+        trad.aggregate_nic_gbps(),
+        trad.total_vcpus()
+    );
+    println!(
+        "lovelock    : {} nodes, {:5.0} Gbps aggregate, {} vcpus",
+        love.num_nodes(),
+        love.aggregate_nic_gbps(),
+        love.total_vcpus()
+    );
+    let (tp, lp) = (trad.total_peripherals(), love.total_peripherals());
+    println!("accelerators conserved: {tp} vs {lp}");
 
     // 2. Price it with §4's model (4-accelerator servers ⇒ PCIe share 75%).
     let m = CostModel::host_only().with_pcie_share(0.75);

@@ -47,7 +47,8 @@ fn main() -> lovelock::Result<()> {
         driver.spec.vocab
     );
     driver.init(seed as i32)?;
-    println!("compiled + initialized in {:.1}s; training {steps} steps…", t0.elapsed().as_secs_f64());
+    let init_secs = t0.elapsed().as_secs_f64();
+    println!("compiled + initialized in {init_secs:.1}s; training {steps} steps…");
 
     let t1 = Instant::now();
     driver.run(steps, log_every)?;

@@ -16,7 +16,11 @@ fn main() {
     let mut b = Bench::new("Figure 4 — BigQuery projection (normalized to baseline = 1.0)");
     let br = Breakdown::isca23();
     for p in figure4(&br, &[2.0, 3.0], 4.7) {
-        let label = if p.phi == 0.0 { "baseline".to_string() } else { format!("lovelock phi={}", p.phi) };
+        let label = if p.phi == 0.0 {
+            "baseline".to_string()
+        } else {
+            format!("lovelock phi={}", p.phi)
+        };
         let paper = if p.phi == 2.0 {
             " | paper mu=1.22"
         } else if p.phi == 3.0 {

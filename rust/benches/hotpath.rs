@@ -1,8 +1,14 @@
 //! Bench `hotpath` — microbenchmarks of the engine and coordinator hot
 //! paths, used by the §Perf optimization loop (EXPERIMENTS.md §Perf).
+//!
+//! Emits `BENCH_hotpath.json` next to the working directory so the
+//! speedup tables in EXPERIMENTS.md can be regenerated mechanically.
 
+use lovelock::analytics::engine::{self, HashAgg, HashJoinTable, Merger};
 use lovelock::analytics::morsel::run_query_morsel;
-use lovelock::analytics::ops::{all_rows, filter_i32_range, hash_join, par_filter_i32_range, ExecStats, GroupBy, JoinMap};
+use lovelock::analytics::ops::{
+    all_rows, filter_i32_range, hash_join, par_filter_i32_range, ExecStats,
+};
 use lovelock::analytics::{run_query, TpchConfig, TpchDb, QUERY_NAMES};
 use lovelock::benchkit::{black_box, Bench};
 use lovelock::cluster::{ClusterSpec, Role};
@@ -40,6 +46,31 @@ fn main() {
         }
     }
 
+    // Engine kernels: predicate eval, compile+kernel, partition exchange.
+    let q6 = engine::spec("q6").unwrap();
+    let (c6, _) = (q6.compile)(&db);
+    b.measure_throughput("q6 eval_predicate", li_rows * 4, || {
+        let mut st = ExecStats::default();
+        black_box(c6.pred.eval(0, db.lineitem.len(), &mut st));
+    });
+    let q18 = engine::spec("q18").unwrap();
+    let (c18, _) = (q18.compile)(&db);
+    b.measure_throughput("q18 kernel (full range)", li_rows * 16, || {
+        black_box(engine::run_range(&c18, q18.width, 0, db.lineitem.len()));
+    });
+    let p18 = engine::run_range(&c18, q18.width, 0, db.lineitem.len());
+    b.measure("q18 partition_by_key x8", || {
+        black_box(p18.partition_by_key(8));
+    });
+    b.measure("q18 partition+merge x8", || {
+        let parts = p18.partition_by_key(8);
+        let mut m = Merger::new(q18.width);
+        for p in &parts {
+            m.absorb(p).unwrap();
+        }
+        black_box(m.into_partial().len());
+    });
+
     // Operator microbenches.
     let ship = db.lineitem.col("l_shipdate").as_i32().to_vec();
     let sel = all_rows(ship.len());
@@ -56,20 +87,24 @@ fn main() {
     let bsel = all_rows(build_keys.len());
     let psel = all_rows(probe_keys.len());
     b.measure_throughput("join build 200k", (build_keys.len() * 8) as u64, || {
-        black_box(JoinMap::build(&build_keys, &bsel));
+        black_box(HashJoinTable::build(&build_keys, &bsel));
     });
-    b.measure_throughput("hash_join 200k/400k", ((build_keys.len() + probe_keys.len()) * 8) as u64, || {
-        let mut stats = ExecStats::default();
-        black_box(hash_join(&build_keys, &bsel, &probe_keys, &psel, &mut stats));
-    });
+    b.measure_throughput(
+        "hash_join 200k/400k",
+        ((build_keys.len() + probe_keys.len()) * 8) as u64,
+        || {
+            let mut stats = ExecStats::default();
+            black_box(hash_join(&build_keys, &bsel, &probe_keys, &psel, &mut stats));
+        },
+    );
 
     let agg_keys: Vec<i64> = (0..500_000).map(|_| rng.gen_range_i64(0, 4096)).collect();
-    b.measure_throughput("groupby 500k/4096g", (agg_keys.len() * 8) as u64, || {
-        let mut g: GroupBy<2> = GroupBy::with_capacity(4096);
+    b.measure_throughput("hashagg 500k/4096g", (agg_keys.len() * 8) as u64, || {
+        let mut g = HashAgg::with_capacity(2, 4096);
         for &k in &agg_keys {
-            g.update(k, [1.0, 2.0]);
+            g.update(k, &[1.0, 2.0]);
         }
-        black_box(g.groups.len());
+        black_box(g.len());
     });
 
     // Fabric simulator: a 64-node all-to-all shuffle.
@@ -85,7 +120,7 @@ fn main() {
         black_box(sim.run_makespan());
     });
 
-    // Distributed query end to end (compute + codec + sim).
+    // Distributed query end to end (compute + codec + exchange + sim).
     let cluster = ClusterSpec::traditional(8, n2d_milan(), Role::LiteCompute);
     b.measure("distributed q1 (8 workers)", || {
         black_box(DistributedQuery::new(cluster.clone()).run(&db, "q1").unwrap());
@@ -98,5 +133,5 @@ fn main() {
     b.measure("dbgen sf=0.01", || {
         black_box(TpchDb::generate(TpchConfig::new(0.01, 1)));
     });
-    b.finish();
+    b.finish_json("BENCH_hotpath.json");
 }

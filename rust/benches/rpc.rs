@@ -43,7 +43,10 @@ fn main() {
 
     // Measured rows: our in-process transport (single dispatch core).
     let mut handlers: HashMap<u32, Handler> = HashMap::new();
-    handlers.insert(1, Arc::new(|m: &lovelock::rpc::Message| m.payload[..8.min(m.payload.len())].to_vec()));
+    handlers.insert(
+        1,
+        Arc::new(|m: &lovelock::rpc::Message| m.payload[..8.min(m.payload.len())].to_vec()),
+    );
     let ep = Endpoint::serve(handlers);
     let client = ep.client();
 

@@ -1,0 +1,178 @@
+//! Hash aggregation into mergeable [`Partial`]s — the group-by kernel
+//! every query shares.
+//!
+//! [`HashAgg`] is an open-addressing table over `i64` keys with a
+//! *runtime* accumulator width, accumulating directly into the flat
+//! layout of [`Partial`] (groups in first-seen order), so a finished
+//! aggregation is already in wire/merge form: `into_partial` is a move,
+//! not a conversion. It replaces the old const-generic `ops::GroupBy`,
+//! whose per-width monomorphizations the serial, morsel, and distributed
+//! paths each wrapped differently.
+
+use super::hash64;
+use super::partial::Partial;
+
+/// Grouped aggregation over i64 keys with `width` f64 accumulators per
+/// group plus a count. Groups come out in insertion order.
+pub struct HashAgg {
+    width: usize,
+    mask: usize,
+    /// slot → group index + 1; 0 = empty.
+    slots: Vec<u32>,
+    /// Key per slot (valid where `slots` is non-zero).
+    keys: Vec<i64>,
+    partial: Partial,
+}
+
+impl HashAgg {
+    /// A table expecting about `n` distinct groups of `width`
+    /// accumulators (it grows past `n` transparently).
+    pub fn with_capacity(width: usize, n: usize) -> Self {
+        let cap = (n.max(16) * 2).next_power_of_two();
+        Self {
+            width,
+            mask: cap - 1,
+            slots: vec![0; cap],
+            keys: vec![0; cap],
+            partial: Partial::new(width),
+        }
+    }
+
+    /// Fold one row into its group: accumulators += `values`, count += 1.
+    #[inline]
+    pub fn update(&mut self, key: i64, values: &[f64]) {
+        debug_assert_eq!(values.len(), self.width);
+        let gi = self.group_index(key);
+        let base = gi * self.width;
+        for (acc, v) in self.partial.accs[base..base + self.width].iter_mut().zip(values) {
+            *acc += v;
+        }
+        self.partial.counts[gi] += 1;
+    }
+
+    /// Index of the group for `key`, creating it if new.
+    #[inline]
+    pub fn group_index(&mut self, key: i64) -> usize {
+        if (self.partial.len() + 1) * 2 > self.slots.len() {
+            self.grow();
+        }
+        let mut slot = (hash64(key) as usize) & self.mask;
+        loop {
+            let s = self.slots[slot];
+            if s == 0 {
+                self.keys[slot] = key;
+                self.partial.keys.push(key);
+                let new_len = self.partial.accs.len() + self.width;
+                self.partial.accs.resize(new_len, 0.0);
+                self.partial.counts.push(0);
+                self.slots[slot] = self.partial.len() as u32;
+                return self.partial.len() - 1;
+            }
+            if self.keys[slot] == key {
+                return (s - 1) as usize;
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let cap = self.slots.len() * 2;
+        self.mask = cap - 1;
+        self.slots = vec![0; cap];
+        let mut keys = vec![0i64; cap];
+        for (gi, &k) in self.partial.keys.iter().enumerate() {
+            let mut slot = (hash64(k) as usize) & self.mask;
+            while self.slots[slot] != 0 {
+                slot = (slot + 1) & self.mask;
+            }
+            self.slots[slot] = gi as u32 + 1;
+            keys[slot] = k;
+        }
+        self.keys = keys;
+    }
+
+    /// Number of groups so far.
+    pub fn len(&self) -> usize {
+        self.partial.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partial.is_empty()
+    }
+
+    /// Byte footprint: slots + slot keys + group state (for ExecStats).
+    pub fn bytes(&self) -> u64 {
+        (self.slots.len() * 4
+            + self.keys.len() * 8
+            + self.partial.len() * Partial::group_bytes(self.width)) as u64
+    }
+
+    /// Finish: the accumulated groups as a mergeable [`Partial`]
+    /// (carrying default stats — the caller attaches its own).
+    pub fn into_partial(self) -> Partial {
+        self.partial
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_and_counts() {
+        let mut g = HashAgg::with_capacity(2, 4);
+        g.update(7, &[1.0, 10.0]);
+        g.update(8, &[2.0, 20.0]);
+        g.update(7, &[3.0, 30.0]);
+        assert_eq!(g.len(), 2);
+        let p = g.into_partial();
+        assert_eq!(p.keys, vec![7, 8]);
+        assert_eq!(p.acc(0), &[4.0, 40.0]);
+        assert_eq!(p.acc(1), &[2.0, 20.0]);
+        assert_eq!(p.counts, vec![2, 1]);
+    }
+
+    #[test]
+    fn grows_past_capacity() {
+        let mut g = HashAgg::with_capacity(1, 2);
+        for k in 0..10_000i64 {
+            g.update(k % 997, &[1.0]);
+        }
+        assert_eq!(g.len(), 997);
+        assert!(g.bytes() > 0);
+        let p = g.into_partial();
+        let total: f64 = p.accs.iter().sum();
+        assert_eq!(total, 10_000.0);
+        let count: u64 = p.counts.iter().sum();
+        assert_eq!(count, 10_000);
+    }
+
+    #[test]
+    fn insertion_order_preserved() {
+        let mut g = HashAgg::with_capacity(1, 4);
+        for k in [5i64, 3, 5, 9, 3] {
+            g.update(k, &[1.0]);
+        }
+        assert_eq!(g.into_partial().keys, vec![5, 3, 9]);
+    }
+
+    #[test]
+    fn empty_agg_yields_empty_partial() {
+        let g = HashAgg::with_capacity(3, 0);
+        assert!(g.is_empty());
+        let p = g.into_partial();
+        assert!(p.is_empty());
+        assert_eq!(p.width, 3);
+    }
+
+    #[test]
+    fn negative_and_extreme_keys() {
+        let mut g = HashAgg::with_capacity(1, 4);
+        for k in [-1i64, i64::MIN, i64::MAX, -1] {
+            g.update(k, &[1.0]);
+        }
+        assert_eq!(g.len(), 3);
+        let p = g.into_partial();
+        assert_eq!(p.counts[0], 2);
+    }
+}

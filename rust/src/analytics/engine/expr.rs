@@ -1,0 +1,274 @@
+//! Predicate expressions over lineitem columns.
+//!
+//! A [`Predicate`] is a small expression tree the query plans build once
+//! at compile time and the shared kernel evaluates per morsel into a
+//! *selection vector* (`Vec<u32>` of surviving row ids). Conjunctions
+//! evaluate left to right: the first conjunct scans the raw row range,
+//! every later conjunct narrows the previous selection — exactly the
+//! cascading-filter shape the hand-written query paths used to spell out
+//! per query, with per-conjunct [`ExecStats`] accounting (each leaf
+//! charges its column bytes on the rows it actually examined).
+
+use crate::analytics::column::Column;
+use crate::analytics::ops::{filter_f64_lt, filter_f64_range, filter_i32_range, ExecStats};
+
+/// A predicate over lineitem rows, evaluated vectorized into selection
+/// vectors. Leaves borrow the columns they test for `'a`.
+pub enum Predicate<'a> {
+    /// Every row passes (pure-scan queries: Q5, Q9, Q18).
+    True,
+    /// `lo <= col[i] < hi` over an i32 column (date windows).
+    I32Range { col: &'a [i32], lo: i32, hi: i32 },
+    /// `a[i] < b[i]` between two i32 columns (Q12 date consistency).
+    I32ColLt { a: &'a [i32], b: &'a [i32] },
+    /// `lo <= col[i] < hi` over an f64 column (discount bands).
+    F64Range { col: &'a [f64], lo: f64, hi: f64 },
+    /// `col[i] < x` over an f64 column (quantity caps).
+    F64Lt { col: &'a [f64], x: f64 },
+    /// `ok[codes[i]]` over a dictionary-encoded column: the per-code
+    /// boolean is precomputed from the dictionary (IN-lists, equality).
+    CodeSet { codes: &'a [u32], ok: Vec<bool> },
+    /// Conjunction, evaluated left to right.
+    And(Vec<Predicate<'a>>),
+}
+
+impl<'a> Predicate<'a> {
+    pub fn i32_range(col: &'a [i32], lo: i32, hi: i32) -> Self {
+        Predicate::I32Range { col, lo, hi }
+    }
+
+    /// `a[i] < b[i]`.
+    pub fn i32_col_lt(a: &'a [i32], b: &'a [i32]) -> Self {
+        Predicate::I32ColLt { a, b }
+    }
+
+    pub fn f64_range(col: &'a [f64], lo: f64, hi: f64) -> Self {
+        Predicate::F64Range { col, lo, hi }
+    }
+
+    pub fn f64_lt(col: &'a [f64], x: f64) -> Self {
+        Predicate::F64Lt { col, x }
+    }
+
+    /// Rows whose dictionary-encoded value satisfies `f` — the string
+    /// test runs once per dictionary entry, not once per row.
+    pub fn code_matches<F: Fn(&str) -> bool>(col: &'a Column, f: F) -> Self {
+        let (dict, codes) = col.as_str_codes();
+        Predicate::CodeSet { codes, ok: dict.iter().map(|s| f(s)).collect() }
+    }
+
+    pub fn and(preds: Vec<Predicate<'a>>) -> Self {
+        Predicate::And(preds)
+    }
+
+    /// Column bytes per examined row a leaf charges to [`ExecStats`].
+    fn leaf_bytes(&self) -> usize {
+        match self {
+            Predicate::True | Predicate::And(_) => 0,
+            Predicate::I32Range { .. } | Predicate::CodeSet { .. } => 4,
+            Predicate::I32ColLt { .. } => 8,
+            Predicate::F64Range { .. } | Predicate::F64Lt { .. } => 8,
+        }
+    }
+
+    /// Evaluate over the raw row range `[lo, hi)`, producing the ids of
+    /// surviving rows in row order and charging per-conjunct scan stats.
+    pub fn eval(&self, lo: usize, hi: usize, stats: &mut ExecStats) -> Vec<u32> {
+        match self {
+            Predicate::True => (lo as u32..hi as u32).collect(),
+            Predicate::And(ps) => {
+                let mut sel: Option<Vec<u32>> = None;
+                for p in ps {
+                    sel = Some(match sel {
+                        None => p.eval(lo, hi, stats),
+                        Some(s) => p.filter(&s, stats),
+                    });
+                }
+                sel.unwrap_or_else(|| (lo as u32..hi as u32).collect())
+            }
+            leaf => {
+                stats.scan(hi - lo, leaf.leaf_bytes());
+                let mut out = Vec::with_capacity(hi - lo);
+                match leaf {
+                    Predicate::I32Range { col, lo: a, hi: b } => {
+                        for i in lo..hi {
+                            let v = col[i];
+                            if v >= *a && v < *b {
+                                out.push(i as u32);
+                            }
+                        }
+                    }
+                    Predicate::I32ColLt { a, b } => {
+                        for i in lo..hi {
+                            if a[i] < b[i] {
+                                out.push(i as u32);
+                            }
+                        }
+                    }
+                    Predicate::F64Range { col, lo: a, hi: b } => {
+                        for i in lo..hi {
+                            let v = col[i];
+                            if v >= *a && v < *b {
+                                out.push(i as u32);
+                            }
+                        }
+                    }
+                    Predicate::F64Lt { col, x } => {
+                        for i in lo..hi {
+                            if col[i] < *x {
+                                out.push(i as u32);
+                            }
+                        }
+                    }
+                    Predicate::CodeSet { codes, ok } => {
+                        for i in lo..hi {
+                            if ok[codes[i] as usize] {
+                                out.push(i as u32);
+                            }
+                        }
+                    }
+                    Predicate::True | Predicate::And(_) => unreachable!(),
+                }
+                out
+            }
+        }
+    }
+
+    /// Narrow an existing selection vector (the cascaded-conjunct path),
+    /// charging this predicate's bytes on the examined rows.
+    pub fn filter(&self, sel: &[u32], stats: &mut ExecStats) -> Vec<u32> {
+        match self {
+            Predicate::True => sel.to_vec(),
+            Predicate::And(ps) => {
+                let mut cur = sel.to_vec();
+                for p in ps {
+                    cur = p.filter(&cur, stats);
+                }
+                cur
+            }
+            leaf => {
+                stats.scan(sel.len(), leaf.leaf_bytes());
+                match leaf {
+                    Predicate::I32Range { col, lo, hi } => filter_i32_range(sel, col, *lo, *hi),
+                    Predicate::I32ColLt { a, b } => sel
+                        .iter()
+                        .copied()
+                        .filter(|&i| a[i as usize] < b[i as usize])
+                        .collect(),
+                    Predicate::F64Range { col, lo, hi } => filter_f64_range(sel, col, *lo, *hi),
+                    Predicate::F64Lt { col, x } => filter_f64_lt(sel, col, *x),
+                    Predicate::CodeSet { codes, ok } => {
+                        let mut out = Vec::with_capacity(sel.len());
+                        for &i in sel {
+                            if ok[codes[i as usize] as usize] {
+                                out.push(i);
+                            }
+                        }
+                        out
+                    }
+                    Predicate::True | Predicate::And(_) => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_leaf_selects() {
+        let col = vec![10, 25, 30, 15, 40];
+        let p = Predicate::i32_range(&col, 15, 31);
+        let mut st = ExecStats::default();
+        assert_eq!(p.eval(0, 5, &mut st), vec![1, 2, 3]);
+        // 5 rows × 4 B charged.
+        assert_eq!(st.bytes_scanned, 20);
+        assert_eq!(st.rows_in, 5);
+    }
+
+    #[test]
+    fn conjunction_cascades_and_charges_per_conjunct() {
+        let dates = vec![5, 15, 25, 35];
+        let vals = vec![1.0, 2.0, 3.0, 4.0];
+        let p = Predicate::and(vec![
+            Predicate::i32_range(&dates, 10, 40), // rows 1,2,3
+            Predicate::f64_lt(&vals, 3.5),        // rows 1,2
+        ]);
+        let mut st = ExecStats::default();
+        assert_eq!(p.eval(0, 4, &mut st), vec![1, 2]);
+        // First conjunct: 4 rows × 4 B; second: 3 rows × 8 B.
+        assert_eq!(st.bytes_scanned, 16 + 24);
+    }
+
+    #[test]
+    fn code_set_from_dictionary() {
+        use crate::analytics::column::StrColumnBuilder;
+        let mut b = StrColumnBuilder::new();
+        for s in ["MAIL", "AIR", "SHIP", "MAIL", "RAIL"] {
+            b.push(s);
+        }
+        let col = b.finish();
+        let p = Predicate::code_matches(&col, |s| s == "MAIL" || s == "SHIP");
+        let mut st = ExecStats::default();
+        assert_eq!(p.eval(0, 5, &mut st), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn col_lt_col() {
+        let a = vec![1, 5, 3];
+        let b = vec![2, 4, 3];
+        let p = Predicate::i32_col_lt(&a, &b);
+        let mut st = ExecStats::default();
+        assert_eq!(p.eval(0, 3, &mut st), vec![0]);
+    }
+
+    #[test]
+    fn selection_edge_empty_range() {
+        let col = vec![1, 2, 3];
+        let p = Predicate::i32_range(&col, 0, 10);
+        let mut st = ExecStats::default();
+        assert!(p.eval(1, 1, &mut st).is_empty());
+        assert!(Predicate::True.eval(2, 2, &mut st).is_empty());
+        assert!(p.filter(&[], &mut st).is_empty());
+    }
+
+    #[test]
+    fn selection_edge_all_pass() {
+        let col = vec![1, 2, 3, 4];
+        let p = Predicate::i32_range(&col, i32::MIN, i32::MAX);
+        let mut st = ExecStats::default();
+        assert_eq!(p.eval(0, 4, &mut st), vec![0, 1, 2, 3]);
+        assert_eq!(Predicate::True.eval(0, 4, &mut st), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn selection_edge_single_row() {
+        let col = vec![7.0];
+        let hit = Predicate::f64_lt(&col, 8.0);
+        let miss = Predicate::f64_lt(&col, 7.0);
+        let mut st = ExecStats::default();
+        assert_eq!(hit.eval(0, 1, &mut st), vec![0]);
+        assert!(miss.eval(0, 1, &mut st).is_empty());
+        // Sub-range of a larger column: only row 2 examined.
+        let col3 = vec![1.0, 2.0, 3.0];
+        let p = Predicate::f64_lt(&col3, 10.0);
+        assert_eq!(p.eval(2, 3, &mut st), vec![2]);
+    }
+
+    #[test]
+    fn empty_and_passes_everything() {
+        let mut st = ExecStats::default();
+        assert_eq!(Predicate::and(vec![]).eval(0, 3, &mut st), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn filter_narrows_existing_selection() {
+        let col = vec![1, 2, 3, 4, 5];
+        let p = Predicate::i32_range(&col, 2, 5);
+        let mut st = ExecStats::default();
+        assert_eq!(p.filter(&[0, 2, 4], &mut st), vec![2]);
+        assert_eq!(st.rows_in, 3);
+    }
+}

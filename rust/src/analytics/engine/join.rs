@@ -1,0 +1,161 @@
+//! Build/probe hash-join table — the dimension-side kernel every join
+//! query shares.
+//!
+//! Open addressing maps key → slot; build rows sharing a key are chained
+//! through `next`; probing yields an iterator of build rows. Multiply-
+//! shift hashing, linear probing, power-of-two capacity — measured ~3-4×
+//! faster than `std::HashMap` for this workload and, equally important,
+//! with a byte footprint the engine can report exactly.
+//!
+//! (Moved here from `analytics::ops` when the engine layer was unified;
+//! `ops::JoinMap` remains as a re-export alias.)
+
+use super::hash64;
+use crate::analytics::ops::ExecStats;
+
+/// Build-side hash index for joins: key → list of build-row ids.
+pub struct HashJoinTable {
+    mask: usize,
+    keys: Vec<i64>,
+    /// head[slot] = first build row + 1 (0 = empty).
+    head: Vec<u32>,
+    /// next[row] = next build row with same key + 1 (0 = end).
+    next: Vec<u32>,
+}
+
+impl HashJoinTable {
+    /// Build from `keys[sel[i]]` for each selected build row.
+    pub fn build(keys: &[i64], sel: &[u32]) -> Self {
+        let cap = (sel.len().max(1) * 2).next_power_of_two();
+        let mut m = Self {
+            mask: cap - 1,
+            keys: vec![0; cap],
+            head: vec![0; cap],
+            next: vec![0; keys.len()],
+        };
+        for &row in sel {
+            let k = keys[row as usize];
+            let mut slot = (hash64(k) as usize) & m.mask;
+            loop {
+                if m.head[slot] == 0 {
+                    m.keys[slot] = k;
+                    m.head[slot] = row + 1;
+                    break;
+                }
+                if m.keys[slot] == k {
+                    // Prepend to the chain.
+                    let old = m.head[slot];
+                    m.head[slot] = row + 1;
+                    m.next[row as usize] = old;
+                    break;
+                }
+                slot = (slot + 1) & m.mask;
+            }
+        }
+        m
+    }
+
+    /// [`HashJoinTable::build`] plus charging the table's byte footprint
+    /// to `stats` — the one-liner every plan's dimension build uses.
+    pub fn build_dim(keys: &[i64], sel: &[u32], stats: &mut ExecStats) -> Self {
+        let t = Self::build(keys, sel);
+        stats.ht_bytes += t.bytes();
+        t
+    }
+
+    /// Iterate build rows matching `k`.
+    pub fn probe(&self, k: i64) -> ProbeIter<'_> {
+        let mut slot = (hash64(k) as usize) & self.mask;
+        loop {
+            if self.head[slot] == 0 {
+                return ProbeIter { map: self, cur: 0 };
+            }
+            if self.keys[slot] == k {
+                return ProbeIter { map: self, cur: self.head[slot] };
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    /// First matching build row, if any (fast path for unique keys).
+    pub fn probe_first(&self, k: i64) -> Option<u32> {
+        let mut slot = (hash64(k) as usize) & self.mask;
+        loop {
+            if self.head[slot] == 0 {
+                return None;
+            }
+            if self.keys[slot] == k {
+                return Some(self.head[slot] - 1);
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    /// Approximate byte footprint (for ExecStats).
+    pub fn bytes(&self) -> u64 {
+        (self.keys.len() * 8 + self.head.len() * 4 + self.next.len() * 4) as u64
+    }
+}
+
+/// Iterator over build rows matching one probe key.
+pub struct ProbeIter<'a> {
+    map: &'a HashJoinTable,
+    cur: u32,
+}
+
+impl Iterator for ProbeIter<'_> {
+    type Item = u32;
+    fn next(&mut self) -> Option<u32> {
+        if self.cur == 0 {
+            return None;
+        }
+        let row = self.cur - 1;
+        self.cur = self.map.next[row as usize];
+        Some(row)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::ops::all_rows;
+
+    #[test]
+    fn probe_chains() {
+        let keys = vec![10, 20, 10, 30, 10];
+        let m = HashJoinTable::build(&keys, &all_rows(5));
+        let mut rows: Vec<u32> = m.probe(10).collect();
+        rows.sort_unstable();
+        assert_eq!(rows, vec![0, 2, 4]);
+        assert_eq!(m.probe(99).count(), 0);
+        assert!(m.probe_first(30).is_some());
+        assert!(m.probe_first(31).is_none());
+    }
+
+    #[test]
+    fn build_dim_charges_stats() {
+        let keys = vec![1i64, 2, 3];
+        let mut st = ExecStats::default();
+        let m = HashJoinTable::build_dim(&keys, &all_rows(3), &mut st);
+        assert_eq!(st.ht_bytes, m.bytes());
+        assert!(st.ht_bytes > 0);
+    }
+
+    #[test]
+    fn negative_keys_hash_fine() {
+        let keys = vec![-5i64, -5, 0, i64::MIN, i64::MAX];
+        let m = HashJoinTable::build(&keys, &all_rows(5));
+        assert_eq!(m.probe(-5).count(), 2);
+        assert_eq!(m.probe(i64::MIN).count(), 1);
+        assert_eq!(m.probe(i64::MAX).count(), 1);
+    }
+
+    #[test]
+    fn respects_selection_vector() {
+        let keys = vec![1i64, 2, 3];
+        let m = HashJoinTable::build(&keys, &[1]);
+        assert!(m.probe_first(2).is_some());
+        assert!(m.probe_first(1).is_none());
+        assert!(m.probe_first(3).is_none());
+    }
+}

@@ -1,0 +1,358 @@
+//! The unified vectorized execution layer: one [`PlanSpec`] per query,
+//! one kernel for every path.
+//!
+//! Before this layer existed, each TPC-H query carried three hand-written
+//! implementations — a serial `run()`, a morsel `prepare`/kernel pair,
+//! and the distributed worker fold — that duplicated every predicate and
+//! dimension-join build (a drift risk the cross-path equality tests only
+//! papered over). Now a query is a single [`PlanSpec`]:
+//!
+//! * `compile` — runs once per executor over the *broadcast* tables and
+//!   returns a [`Compiled`] context: a [`Predicate`] expression over
+//!   lineitem, the dimension [`HashJoinTable`]s captured by a per-row
+//!   evaluator, and the aggregate slot layout;
+//! * the shared kernel ([`run_range`]) evaluates the predicate into a
+//!   selection vector and folds surviving rows through [`HashAgg`] into a
+//!   mergeable [`Partial`];
+//! * `finalize` — merged partial → result rows (sorts, top-k, dimension
+//!   lookups on the leader).
+//!
+//! The three execution paths are thin drivers over those pieces:
+//! [`run_serial`] is `compile` + one full-range kernel call;
+//! [`run_parallel`] (behind [`crate::analytics::morsel::run_query_morsel`])
+//! evaluates the predicate morsel-parallel and aggregates balanced
+//! selection slices; the distributed executor
+//! ([`crate::coordinator::shuffle::DistributedQuery`]) gives each worker
+//! a row range, then exchanges hash-partitioned partials. All three
+//! produce the same rows (floating-point sums associate differently,
+//! within `approx_eq_rows` tolerance).
+//!
+//! ```
+//! use lovelock::analytics::engine;
+//! use lovelock::analytics::{TpchConfig, TpchDb};
+//!
+//! let db = TpchDb::generate(TpchConfig::new(0.001, 42));
+//! let spec = engine::spec("q6").unwrap();
+//! let serial = engine::run_serial(&db, &spec);
+//! let parallel = engine::run_parallel(&db, &spec, 2, 512);
+//! assert!(parallel.approx_eq_rows(&serial.rows));
+//! ```
+
+pub mod agg;
+pub mod expr;
+pub mod join;
+pub mod partial;
+
+pub use agg::HashAgg;
+pub use expr::Predicate;
+pub use join::{HashJoinTable, ProbeIter};
+pub use partial::{Merger, Partial};
+
+use super::ops::ExecStats;
+use super::queries::{self, QueryOutput, Row};
+use super::tpch::TpchDb;
+use crate::exec::{parallel_map_chunks, parallel_map_sel_chunks};
+
+/// Maximum aggregate slots per group across the query set (Q1 uses 5).
+pub const MAX_ACCS: usize = 5;
+
+/// Fixed-size accumulator block a row evaluator returns; only the first
+/// `PlanSpec::width` slots are used.
+pub type Accs = [f64; MAX_ACCS];
+
+/// Per-row evaluator: row id → `Some((group key, accumulator values))`,
+/// or `None` when a dimension probe misses. Borrows the database columns
+/// and the compiled dimension tables for `'a`.
+pub type RowEval<'a> = Box<dyn Fn(usize) -> Option<(i64, Accs)> + Send + Sync + 'a>;
+
+/// Pad a single accumulator value to an [`Accs`] block.
+#[inline]
+pub fn acc1(a: f64) -> Accs {
+    [a, 0.0, 0.0, 0.0, 0.0]
+}
+
+/// Pad two accumulator values to an [`Accs`] block.
+#[inline]
+pub fn acc2(a: f64, b: f64) -> Accs {
+    [a, b, 0.0, 0.0, 0.0]
+}
+
+/// Fibonacci/multiply-xorshift hash over i64 keys: adequate spread for
+/// dense keys. Shared by the join table, the aggregation table, and the
+/// partial key-partitioner (the exchange relies on all executors
+/// agreeing on it).
+#[inline]
+pub(crate) fn hash64(k: i64) -> u64 {
+    let mut h = (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= h >> 29;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^ (h >> 32)
+}
+
+/// A query's execution plan — the one description all three paths drive.
+pub struct PlanSpec {
+    /// Query name ("q1" … "q19").
+    pub name: &'static str,
+    /// Aggregate accumulator slots per group (≤ [`MAX_ACCS`]).
+    pub width: usize,
+    /// Build the broadcast-side state (dimension hash tables, dictionary
+    /// lookups, predicate) and return it with its one-time build stats.
+    pub compile: for<'a> fn(&'a TpchDb) -> (Compiled<'a>, ExecStats),
+    /// Merged partial → final result rows (leader-side).
+    pub finalize: fn(&TpchDb, &Partial) -> Vec<Row>,
+}
+
+/// The compiled per-executor context [`PlanSpec::compile`] returns.
+pub struct Compiled<'a> {
+    /// Predicate over lineitem, evaluated per morsel into a selection
+    /// vector (charges its own per-conjunct scan stats).
+    pub pred: Predicate<'a>,
+    /// Bytes per *selected* row charged for the payload columns the
+    /// evaluator reads.
+    pub payload_bytes: usize,
+    /// Row → group key + accumulator values (dimension probes inside).
+    pub eval: RowEval<'a>,
+    /// Expected distinct groups (aggregation-table capacity hint).
+    pub groups_hint: usize,
+}
+
+/// Look up the plan for a query. Every query in
+/// [`super::queries::QUERY_NAMES`] has exactly one.
+pub fn spec(name: &str) -> Option<PlanSpec> {
+    match name {
+        "q1" => Some(queries::q1::plan_spec()),
+        "q3" => Some(queries::q3::plan_spec()),
+        "q5" => Some(queries::q5::plan_spec()),
+        "q6" => Some(queries::q6::plan_spec()),
+        "q9" => Some(queries::q9::plan_spec()),
+        "q12" => Some(queries::q12::plan_spec()),
+        "q14" => Some(queries::q14::plan_spec()),
+        "q18" => Some(queries::q18::plan_spec()),
+        "q19" => Some(queries::q19::plan_spec()),
+        _ => None,
+    }
+}
+
+/// Shared aggregation loop over any row-id stream: charges payload
+/// bytes, folds rows through the evaluator into a [`HashAgg`], and
+/// stamps the table footprint + produced group count onto `stats`.
+fn aggregate_rows<I: Iterator<Item = usize>>(
+    c: &Compiled<'_>,
+    width: usize,
+    rows: I,
+    n_rows: usize,
+    mut stats: ExecStats,
+) -> Partial {
+    stats.scan(n_rows, c.payload_bytes);
+    let mut agg = HashAgg::with_capacity(width, c.groups_hint.min(n_rows + 16));
+    for i in rows {
+        if let Some((key, accs)) = (c.eval)(i) {
+            agg.update(key, &accs[..width]);
+        }
+    }
+    stats.ht_bytes += agg.bytes();
+    stats.rows_out += agg.len() as u64;
+    let mut p = agg.into_partial();
+    p.stats = stats;
+    p
+}
+
+/// Aggregate an already-computed selection slice into a [`Partial`],
+/// folding `stats` (typically the predicate-phase scan stats) into the
+/// result and charging the payload bytes, aggregation-table footprint,
+/// and produced group count on top.
+pub fn aggregate_sel(c: &Compiled<'_>, width: usize, sel: &[u32], stats: ExecStats) -> Partial {
+    aggregate_rows(c, width, sel.iter().map(|&i| i as usize), sel.len(), stats)
+}
+
+/// THE morsel kernel, shared by all three paths: evaluate the plan over
+/// lineitem rows `[lo, hi)` into a mergeable [`Partial`]. An all-pass
+/// predicate aggregates the row range directly — no materialized
+/// identity selection vector (q5/q9/q18 take this path on every
+/// executor).
+pub fn run_range(c: &Compiled<'_>, width: usize, lo: usize, hi: usize) -> Partial {
+    let mut stats = ExecStats::default();
+    if matches!(c.pred, Predicate::True) {
+        return aggregate_rows(c, width, lo..hi, hi - lo, stats);
+    }
+    let sel = c.pred.eval(lo, hi, &mut stats);
+    aggregate_sel(c, width, &sel, stats)
+}
+
+/// Run a compiled plan single-threaded over the whole of lineitem —
+/// the serial path as one full-range kernel call.
+pub fn run_serial_compiled(
+    db: &TpchDb,
+    width: usize,
+    c: &Compiled<'_>,
+    prep: ExecStats,
+    finalize: fn(&TpchDb, &Partial) -> Vec<Row>,
+) -> QueryOutput {
+    let p = run_range(c, width, 0, db.lineitem.len());
+    let mut stats = prep;
+    stats.merge(&p.stats);
+    QueryOutput { rows: finalize(db, &p), stats }
+}
+
+/// Run a query single-threaded (the reference path behind
+/// [`super::queries::run_query`]).
+pub fn run_serial(db: &TpchDb, spec: &PlanSpec) -> QueryOutput {
+    let (c, prep) = (spec.compile)(db);
+    run_serial_compiled(db, spec.width, &c, prep, spec.finalize)
+}
+
+/// Run a query morsel-parallel on `threads` threads (0 = all cores),
+/// `morsel_rows` rows per unit of scheduling.
+///
+/// Two phases, both selection-vector aware: the predicate is evaluated
+/// over fixed-size *row* morsels in parallel and the surviving row ids
+/// concatenated in row order; the aggregation then runs over fixed-size
+/// slices of that *selection* (via
+/// [`crate::exec::parallel_map_sel_chunks`]), so a selective predicate
+/// whose survivors cluster in a few row ranges still spreads its
+/// aggregation work evenly. Per-slice partials merge in slice order —
+/// deterministic regardless of thread scheduling.
+pub fn run_parallel(
+    db: &TpchDb,
+    spec: &PlanSpec,
+    threads: usize,
+    morsel_rows: usize,
+) -> QueryOutput {
+    let morsel_rows = morsel_rows.max(1);
+    let (c, prep) = (spec.compile)(db);
+    let n = db.lineitem.len();
+
+    let (pre_stats, partials): (ExecStats, Vec<Partial>) = if matches!(c.pred, Predicate::True) {
+        // Fast path: with an all-pass predicate every selection slice is
+        // a row range, so aggregate row morsels directly — no
+        // materialized n-element selection vector, no inter-phase
+        // barrier (q5/q9/q18 take this path).
+        let partials = parallel_map_chunks(n, morsel_rows, threads, |lo, hi| {
+            run_range(&c, spec.width, lo, hi)
+        });
+        (prep, partials)
+    } else {
+        // Phase 1: predicate → per-morsel selection vectors, row order.
+        let parts: Vec<(Vec<u32>, ExecStats)> =
+            parallel_map_chunks(n, morsel_rows, threads, |lo, hi| {
+                let mut st = ExecStats::default();
+                (c.pred.eval(lo, hi, &mut st), st)
+            });
+        let mut pre_stats = prep;
+        let mut sel = Vec::with_capacity(parts.iter().map(|(s, _)| s.len()).sum());
+        for (s, st) in &parts {
+            pre_stats.merge(st);
+            sel.extend_from_slice(s);
+        }
+
+        // Phase 2: aggregate balanced selection slices in parallel.
+        let partials = parallel_map_sel_chunks(&sel, morsel_rows, threads, |slice| {
+            aggregate_sel(&c, spec.width, slice, ExecStats::default())
+        });
+        (pre_stats, partials)
+    };
+
+    // Merge in slice order; fold in the compile + predicate stats.
+    let mut merger = Merger::new(spec.width);
+    *merger.stats_mut() = pre_stats;
+    let mut slice_ht_peak = 0u64;
+    for p in &partials {
+        slice_ht_peak = slice_ht_peak.max(p.stats.ht_bytes);
+        merger.absorb(p).expect("plan produced mismatched partial width");
+    }
+    let mut merged = merger.into_partial();
+    // The merge summed every transient per-slice hash table into
+    // ht_bytes; the *live* peak is the compile-side tables plus one
+    // slice table plus the merged-group state. Keep ht_bytes at its
+    // documented "live at once" meaning.
+    merged.stats.ht_bytes = pre_stats.ht_bytes
+        + slice_ht_peak
+        + merged.len() as u64 * Partial::group_bytes(spec.width) as u64;
+    let rows = (spec.finalize)(db, &merged);
+    QueryOutput { rows, stats: merged.stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::queries::QUERY_NAMES;
+    use crate::analytics::tpch::TpchConfig;
+
+    #[test]
+    fn every_query_has_exactly_one_spec() {
+        for q in QUERY_NAMES {
+            let s = spec(q).unwrap_or_else(|| panic!("{q} has no PlanSpec"));
+            assert_eq!(s.name, q);
+            assert!(s.width >= 1 && s.width <= MAX_ACCS, "{q} width {}", s.width);
+        }
+        assert!(spec("q99").is_none());
+    }
+
+    #[test]
+    fn serial_path_is_one_kernel_call() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 7));
+        for q in ["q1", "q6", "q18"] {
+            let s = spec(q).unwrap();
+            let (c, prep) = (s.compile)(&db);
+            let p = run_range(&c, s.width, 0, db.lineitem.len());
+            let direct = (s.finalize)(&db, &p);
+            let driver = run_serial(&db, &s);
+            assert!(driver.approx_eq_rows(&direct), "{q}: driver != direct kernel");
+            assert!(driver.stats.bytes_scanned >= p.stats.bytes_scanned);
+            let _ = prep;
+        }
+    }
+
+    #[test]
+    fn kernel_splits_merge_to_full_range() {
+        // Splitting the range and merging partials must equal one
+        // full-range call, group for group (f64-exact within slices of
+        // identical association is not guaranteed — compare via rows).
+        let db = TpchDb::generate(TpchConfig::new(0.002, 11));
+        let s = spec("q1").unwrap();
+        let (c, _) = (s.compile)(&db);
+        let n = db.lineitem.len();
+        let full = run_range(&c, s.width, 0, n);
+        let mut m = Merger::new(s.width);
+        let mid = n / 3;
+        for (lo, hi) in [(0, mid), (mid, n)] {
+            m.absorb(&run_range(&c, s.width, lo, hi)).unwrap();
+        }
+        let merged = m.into_partial();
+        let rows_full = (s.finalize)(&db, &full);
+        let rows_merged = (s.finalize)(&db, &merged);
+        let out = QueryOutput { rows: rows_merged, stats: ExecStats::default() };
+        assert!(out.approx_eq_rows(&rows_full));
+    }
+
+    #[test]
+    fn empty_range_yields_empty_partial() {
+        let db = TpchDb::generate(TpchConfig::new(0.001, 13));
+        for q in QUERY_NAMES {
+            let s = spec(q).unwrap();
+            let (c, _) = (s.compile)(&db);
+            let p = run_range(&c, s.width, 0, 0);
+            assert!(p.is_empty(), "{q}: non-empty partial from empty range");
+            assert_eq!(p.width, s.width, "{q}: width mismatch");
+            // Finalize must tolerate an empty partial (scalar queries
+            // return their zero row, grouped queries no rows).
+            let _ = (s.finalize)(&db, &p);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_for_all() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 17));
+        for q in QUERY_NAMES {
+            let s = spec(q).unwrap();
+            let serial = run_serial(&db, &s);
+            let par = run_parallel(&db, &s, 3, 777);
+            assert!(
+                par.approx_eq_rows(&serial.rows),
+                "{q}: parallel ({} rows) diverged from serial ({} rows)",
+                par.rows.len(),
+                serial.rows.len()
+            );
+        }
+    }
+}

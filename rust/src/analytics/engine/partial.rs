@@ -1,0 +1,283 @@
+//! Mergeable partial aggregates: the unit of merge between morsels, the
+//! wire unit of the distributed shuffle, and the unit of the
+//! hash-partitioned partial exchange.
+//!
+//! A [`Partial`] is a flat table of groups, each a key, `width` f64
+//! accumulators, and a row count. All per-query accumulators are sums
+//! (averages, percentages, and top-k are computed at finalize), so
+//! merging is pure addition and associative. [`Merger`] absorbs partials
+//! in a deterministic first-seen order; [`Partial::partition_by_key`]
+//! splits a partial into key-disjoint partitions for the distributed
+//! exchange (merging every partition reproduces the original exactly).
+
+use super::hash64;
+use crate::analytics::ops::ExecStats;
+use crate::error::Result;
+use std::collections::HashMap;
+
+/// A mergeable partial aggregate (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct Partial {
+    /// Accumulators per group.
+    pub width: usize,
+    pub keys: Vec<i64>,
+    /// Row-major `[len × width]` accumulator block.
+    pub accs: Vec<f64>,
+    pub counts: Vec<u64>,
+    /// Engine statistics for the rows this partial covered (not encoded
+    /// on the wire — the leader accounts them host-side).
+    pub stats: ExecStats,
+}
+
+impl Partial {
+    pub fn new(width: usize) -> Self {
+        Self { width, ..Default::default() }
+    }
+
+    /// A single-group partial (scalar aggregates like Q6/Q14/Q19).
+    pub fn single(key: i64, accs: &[f64], count: u64, stats: ExecStats) -> Self {
+        Self {
+            width: accs.len(),
+            keys: vec![key],
+            accs: accs.to_vec(),
+            counts: vec![count],
+            stats,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Accumulator slice of group `i`.
+    pub fn acc(&self, i: usize) -> &[f64] {
+        &self.accs[i * self.width..(i + 1) * self.width]
+    }
+
+    /// Bytes one group occupies — on the wire and (approximately) in the
+    /// merged in-memory state: `i64 key + width × f64 accs + u64 count`.
+    pub fn group_bytes(width: usize) -> usize {
+        8 + 8 * width + 8
+    }
+
+    /// Encode for the shuffle wire: `u32 width, u32 len`, then per group
+    /// `i64 key, width × f64 accs, u64 count`, all little-endian.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + self.len() * Self::group_bytes(self.width));
+        out.extend_from_slice(&(self.width as u32).to_le_bytes());
+        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
+        for i in 0..self.len() {
+            out.extend_from_slice(&self.keys[i].to_le_bytes());
+            for a in self.acc(i) {
+                out.extend_from_slice(&a.to_le_bytes());
+            }
+            out.extend_from_slice(&self.counts[i].to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`Partial::encode`]. The decoded partial carries empty
+    /// [`ExecStats`].
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        crate::ensure!(buf.len() >= 8, "short partial frame: {} bytes", buf.len());
+        let width = u32::from_le_bytes(buf[0..4].try_into()?) as usize;
+        let len = u32::from_le_bytes(buf[4..8].try_into()?) as usize;
+        crate::ensure!(width <= 64, "implausible partial width {width}");
+        let gb = Self::group_bytes(width);
+        crate::ensure!(
+            buf.len() == 8 + len * gb,
+            "bad partial length: header says {len} groups of {gb} B, frame has {} B",
+            buf.len() - 8
+        );
+        let mut p = Self {
+            width,
+            keys: Vec::with_capacity(len),
+            accs: Vec::with_capacity(len * width),
+            counts: Vec::with_capacity(len),
+            stats: ExecStats::default(),
+        };
+        for g in 0..len {
+            let base = 8 + g * gb;
+            p.keys.push(i64::from_le_bytes(buf[base..base + 8].try_into()?));
+            for w in 0..width {
+                let o = base + 8 + w * 8;
+                p.accs.push(f64::from_le_bytes(buf[o..o + 8].try_into()?));
+            }
+            let o = base + 8 + width * 8;
+            p.counts.push(u64::from_le_bytes(buf[o..o + 8].try_into()?));
+        }
+        Ok(p)
+    }
+
+    /// Split into `parts` key-disjoint partitions by the shared key hash,
+    /// preserving relative group order within each partition. Every group
+    /// lands in exactly one partition, so merging all partitions (in any
+    /// partition order) reproduces this partial's groups exactly — the
+    /// conservation property the distributed exchange relies on.
+    /// Partition stats are empty (stats stay host-side).
+    pub fn partition_by_key(&self, parts: usize) -> Vec<Partial> {
+        let parts = parts.max(1);
+        let mut out: Vec<Partial> = (0..parts).map(|_| Partial::new(self.width)).collect();
+        for g in 0..self.len() {
+            let p = &mut out[(hash64(self.keys[g]) as usize) % parts];
+            p.keys.push(self.keys[g]);
+            p.accs.extend_from_slice(self.acc(g));
+            p.counts.push(self.counts[g]);
+        }
+        out
+    }
+}
+
+/// Order-preserving partial merger: groups appear in first-seen order
+/// across absorbed partials, accumulators and counts are summed.
+pub struct Merger {
+    width: usize,
+    index: HashMap<i64, usize>,
+    partial: Partial,
+}
+
+impl Merger {
+    pub fn new(width: usize) -> Self {
+        Self { width, index: HashMap::new(), partial: Partial::new(width) }
+    }
+
+    /// Merge one partial in (errors on accumulator-width mismatch).
+    pub fn absorb(&mut self, p: &Partial) -> Result<()> {
+        crate::ensure!(
+            p.width == self.width,
+            "partial width {} != merger width {}",
+            p.width,
+            self.width
+        );
+        self.partial.stats.merge(&p.stats);
+        for gi in 0..p.len() {
+            let key = p.keys[gi];
+            let idx = match self.index.get(&key) {
+                Some(&i) => i,
+                None => {
+                    let i = self.partial.keys.len();
+                    self.index.insert(key, i);
+                    self.partial.keys.push(key);
+                    self.partial.accs.resize(self.partial.accs.len() + self.width, 0.0);
+                    self.partial.counts.push(0);
+                    i
+                }
+            };
+            let base = idx * self.width;
+            for (w, v) in p.acc(gi).iter().enumerate() {
+                self.partial.accs[base + w] += v;
+            }
+            self.partial.counts[idx] += p.counts[gi];
+        }
+        Ok(())
+    }
+
+    /// Mutable access to the merged statistics (for folding in one-time
+    /// compile-phase stats).
+    pub fn stats_mut(&mut self) -> &mut ExecStats {
+        &mut self.partial.stats
+    }
+
+    pub fn into_partial(self) -> Partial {
+        self.partial
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::agg::HashAgg;
+    use super::*;
+
+    #[test]
+    fn codec_roundtrip() {
+        let mut g = HashAgg::with_capacity(3, 4);
+        g.update(7, &[1.0, 2.0, 3.0]);
+        g.update(-9, &[4.0, 5.0, 6.0]);
+        g.update(7, &[0.5, 0.5, 0.5]);
+        let p = g.into_partial();
+        let dec = Partial::decode(&p.encode()).unwrap();
+        assert_eq!(dec.width, 3);
+        assert_eq!(dec.keys, p.keys);
+        assert_eq!(dec.accs, p.accs);
+        assert_eq!(dec.counts, p.counts);
+    }
+
+    #[test]
+    fn decode_rejects_bad_frames() {
+        assert!(Partial::decode(&[1, 2, 3]).is_err());
+        let p = Partial::single(1, &[2.0], 1, ExecStats::default());
+        let enc = p.encode();
+        assert!(Partial::decode(&enc[..enc.len() - 1]).is_err());
+        // Implausible width.
+        let mut bad = enc.clone();
+        bad[0] = 200;
+        assert!(Partial::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn merger_sums_groups_in_first_seen_order() {
+        let a = Partial::single(5, &[1.0, 10.0], 2, ExecStats::default());
+        let b = Partial::single(9, &[3.0, 30.0], 1, ExecStats::default());
+        let c = Partial::single(5, &[0.5, 5.0], 4, ExecStats::default());
+        let mut m = Merger::new(2);
+        for p in [&a, &b, &c] {
+            m.absorb(p).unwrap();
+        }
+        let out = m.into_partial();
+        assert_eq!(out.keys, vec![5, 9]);
+        assert_eq!(out.acc(0), &[1.5, 15.0]);
+        assert_eq!(out.acc(1), &[3.0, 30.0]);
+        assert_eq!(out.counts, vec![6, 1]);
+    }
+
+    #[test]
+    fn merger_rejects_width_mismatch() {
+        let p = Partial::single(1, &[1.0], 1, ExecStats::default());
+        let mut m = Merger::new(2);
+        assert!(m.absorb(&p).is_err());
+    }
+
+    #[test]
+    fn partition_conserves_groups() {
+        let mut g = HashAgg::with_capacity(2, 8);
+        for k in 0..100i64 {
+            g.update(k % 37, &[k as f64, 1.0]);
+        }
+        let p = g.into_partial();
+        for parts in [1usize, 2, 3, 7] {
+            let split = p.partition_by_key(parts);
+            assert_eq!(split.len(), parts);
+            let total: usize = split.iter().map(|s| s.len()).sum();
+            assert_eq!(total, p.len(), "parts={parts}: group lost or duplicated");
+            // Merging every partition reproduces the original groups.
+            let mut m = Merger::new(2);
+            for s in &split {
+                m.absorb(s).unwrap();
+            }
+            let merged = m.into_partial();
+            let mut want: Vec<(i64, Vec<f64>, u64)> = (0..p.len())
+                .map(|i| (p.keys[i], p.acc(i).to_vec(), p.counts[i]))
+                .collect();
+            let mut got: Vec<(i64, Vec<f64>, u64)> = (0..merged.len())
+                .map(|i| (merged.keys[i], merged.acc(i).to_vec(), merged.counts[i]))
+                .collect();
+            want.sort_by_key(|(k, _, _)| *k);
+            got.sort_by_key(|(k, _, _)| *k);
+            assert_eq!(got, want, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn partition_of_empty_partial() {
+        let p = Partial::new(4);
+        let split = p.partition_by_key(3);
+        assert_eq!(split.len(), 3);
+        assert!(split.iter().all(|s| s.is_empty() && s.width == 4));
+        // parts = 0 is clamped to 1.
+        assert_eq!(p.partition_by_key(0).len(), 1);
+    }
+}

@@ -1,6 +1,7 @@
 //! The analytics engine: TPC-H data generation, columnar storage,
-//! vectorized operators, morsel-driven parallel execution, the Figure-3
-//! query set, and workload profiling.
+//! vectorized operators, the unified plan/kernel layer ([`engine`]),
+//! morsel-driven parallel execution, the Figure-3 query set, and
+//! workload profiling.
 //!
 //! This is the substrate for §5.1/§5.2 of the paper: a real (if compact)
 //! analytics execution engine whose measured per-query behaviour — bytes
@@ -23,6 +24,7 @@
 //! ```
 
 pub mod column;
+pub mod engine;
 pub mod morsel;
 pub mod ops;
 pub mod profile;

@@ -1,22 +1,17 @@
-//! Morsel-driven parallel query execution.
+//! Morsel-driven parallel query execution — the parallel driver over the
+//! unified engine ([`crate::analytics::engine`]).
 //!
 //! The engine's columns are split into fixed-size **morsels** (contiguous
-//! row ranges of `lineitem`, the probe side of every query). Each morsel
-//! is aggregated independently by a per-query kernel into a [`Partial`] —
-//! a mergeable grouped aggregate — and the partials are merged in morsel
-//! order, so results are deterministic regardless of how threads were
-//! scheduled. The same [`Partial`] is the wire unit of the distributed
-//! executor ([`crate::coordinator::shuffle::DistributedQuery`]): a worker
-//! is simply a larger morsel range whose merged partial crosses the
-//! simulated fabric to the leader.
-//!
-//! Every query in [`super::queries`] provides a [`MorselPlan`]:
-//!
-//! * `prepare` — runs once per executor over the *broadcast* tables
-//!   (dimension hash maps, dictionary lookups) and returns the morsel
-//!   kernel, a closure over the borrowed columns;
-//! * `finalize` — turns the merged partial into result rows (sorts,
-//!   top-k, dimension lookups on the leader).
+//! row ranges of `lineitem`, the probe side of every query). The shared
+//! engine kernel evaluates each query's [`crate::analytics::engine::PlanSpec`]
+//! predicate per morsel, and the surviving rows are aggregated over
+//! balanced selection slices into [`Partial`]s — mergeable grouped
+//! aggregates combined in slice order, so results are deterministic
+//! regardless of how threads were scheduled. The same [`Partial`] is the
+//! wire unit of the distributed executor
+//! ([`crate::coordinator::shuffle::DistributedQuery`]): a worker is
+//! simply a larger morsel range whose hash-partitioned partials cross
+//! the simulated fabric.
 //!
 //! ```
 //! use lovelock::analytics::morsel::run_query_morsel;
@@ -28,222 +23,16 @@
 //! assert!(parallel.approx_eq_rows(&serial.rows));
 //! ```
 
-use super::ops::{ExecStats, GroupBy};
-use super::queries::{self, QueryOutput, Row};
+use super::engine;
+use super::queries::QueryOutput;
 use super::tpch::TpchDb;
-use crate::error::Result;
-use crate::exec::parallel_map_chunks;
-use std::collections::HashMap;
+
+pub use super::engine::partial::{Merger, Partial};
 
 /// Default rows per morsel — big enough to amortize kernel dispatch,
 /// small enough that a scale-factor-0.1 `lineitem` yields dozens of
 /// independently schedulable units.
 pub const DEFAULT_MORSEL_ROWS: usize = 16_384;
-
-/// A mergeable partial aggregate: a flat table of groups, each a key,
-/// `width` f64 accumulators, and a row count. All per-query accumulators
-/// are sums (averages, percentages, and top-k are computed at finalize),
-/// so merging is pure addition and associative.
-#[derive(Clone, Debug, Default)]
-pub struct Partial {
-    /// Accumulators per group.
-    pub width: usize,
-    pub keys: Vec<i64>,
-    /// Row-major `[len × width]` accumulator block.
-    pub accs: Vec<f64>,
-    pub counts: Vec<u64>,
-    /// Engine statistics for the rows this partial covered (not encoded
-    /// on the wire — the leader accounts them host-side).
-    pub stats: ExecStats,
-}
-
-impl Partial {
-    pub fn new(width: usize) -> Self {
-        Self { width, ..Default::default() }
-    }
-
-    /// Flatten a [`GroupBy`] into a partial.
-    pub fn from_groupby<const W: usize>(g: &GroupBy<W>, stats: ExecStats) -> Self {
-        let mut p = Self {
-            width: W,
-            keys: Vec::with_capacity(g.groups.len()),
-            accs: Vec::with_capacity(g.groups.len() * W),
-            counts: Vec::with_capacity(g.groups.len()),
-            stats,
-        };
-        for (k, a, c) in &g.groups {
-            p.keys.push(*k);
-            p.accs.extend_from_slice(a);
-            p.counts.push(*c);
-        }
-        p
-    }
-
-    /// A single-group partial (scalar aggregates like Q6/Q14/Q19).
-    pub fn single(key: i64, accs: &[f64], count: u64, stats: ExecStats) -> Self {
-        Self {
-            width: accs.len(),
-            keys: vec![key],
-            accs: accs.to_vec(),
-            counts: vec![count],
-            stats,
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        self.keys.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.keys.is_empty()
-    }
-
-    /// Accumulator slice of group `i`.
-    pub fn acc(&self, i: usize) -> &[f64] {
-        &self.accs[i * self.width..(i + 1) * self.width]
-    }
-
-    /// Wire size of one encoded group.
-    fn group_bytes(width: usize) -> usize {
-        8 + 8 * width + 8
-    }
-
-    /// Encode for the shuffle wire: `u32 width, u32 len`, then per group
-    /// `i64 key, width × f64 accs, u64 count`, all little-endian.
-    pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(8 + self.len() * Self::group_bytes(self.width));
-        out.extend_from_slice(&(self.width as u32).to_le_bytes());
-        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
-        for i in 0..self.len() {
-            out.extend_from_slice(&self.keys[i].to_le_bytes());
-            for a in self.acc(i) {
-                out.extend_from_slice(&a.to_le_bytes());
-            }
-            out.extend_from_slice(&self.counts[i].to_le_bytes());
-        }
-        out
-    }
-
-    /// Inverse of [`Partial::encode`]. The decoded partial carries empty
-    /// [`ExecStats`].
-    pub fn decode(buf: &[u8]) -> Result<Self> {
-        crate::ensure!(buf.len() >= 8, "short partial frame: {} bytes", buf.len());
-        let width = u32::from_le_bytes(buf[0..4].try_into()?) as usize;
-        let len = u32::from_le_bytes(buf[4..8].try_into()?) as usize;
-        crate::ensure!(width <= 64, "implausible partial width {width}");
-        let gb = Self::group_bytes(width);
-        crate::ensure!(
-            buf.len() == 8 + len * gb,
-            "bad partial length: header says {len} groups of {gb} B, frame has {} B",
-            buf.len() - 8
-        );
-        let mut p = Self {
-            width,
-            keys: Vec::with_capacity(len),
-            accs: Vec::with_capacity(len * width),
-            counts: Vec::with_capacity(len),
-            stats: ExecStats::default(),
-        };
-        for g in 0..len {
-            let base = 8 + g * gb;
-            p.keys.push(i64::from_le_bytes(buf[base..base + 8].try_into()?));
-            for w in 0..width {
-                let o = base + 8 + w * 8;
-                p.accs.push(f64::from_le_bytes(buf[o..o + 8].try_into()?));
-            }
-            let o = base + 8 + width * 8;
-            p.counts.push(u64::from_le_bytes(buf[o..o + 8].try_into()?));
-        }
-        Ok(p)
-    }
-}
-
-/// Order-preserving partial merger: groups appear in first-seen order
-/// across absorbed partials, accumulators and counts are summed.
-pub struct Merger {
-    width: usize,
-    index: HashMap<i64, usize>,
-    partial: Partial,
-}
-
-impl Merger {
-    pub fn new(width: usize) -> Self {
-        Self { width, index: HashMap::new(), partial: Partial::new(width) }
-    }
-
-    /// Merge one partial in (errors on accumulator-width mismatch).
-    pub fn absorb(&mut self, p: &Partial) -> Result<()> {
-        crate::ensure!(
-            p.width == self.width,
-            "partial width {} != merger width {}",
-            p.width,
-            self.width
-        );
-        self.partial.stats.merge(&p.stats);
-        for gi in 0..p.len() {
-            let key = p.keys[gi];
-            let idx = match self.index.get(&key) {
-                Some(&i) => i,
-                None => {
-                    let i = self.partial.keys.len();
-                    self.index.insert(key, i);
-                    self.partial.keys.push(key);
-                    self.partial.accs.resize(self.partial.accs.len() + self.width, 0.0);
-                    self.partial.counts.push(0);
-                    i
-                }
-            };
-            let base = idx * self.width;
-            for (w, v) in p.acc(gi).iter().enumerate() {
-                self.partial.accs[base + w] += v;
-            }
-            self.partial.counts[idx] += p.counts[gi];
-        }
-        Ok(())
-    }
-
-    /// Mutable access to the merged statistics (for folding in one-time
-    /// prepare-phase stats).
-    pub fn stats_mut(&mut self) -> &mut ExecStats {
-        &mut self.partial.stats
-    }
-
-    pub fn into_partial(self) -> Partial {
-        self.partial
-    }
-}
-
-/// The morsel kernel for one query: aggregates lineitem rows `[lo, hi)`
-/// into a [`Partial`]. Borrows the database columns for `'a`.
-pub type PartialFn<'a> = Box<dyn Fn(usize, usize) -> Partial + Send + Sync + 'a>;
-
-/// A query's morsel-parallel execution plan.
-pub struct MorselPlan {
-    /// Accumulator count per group.
-    pub width: usize,
-    /// Build broadcast-side state (dimension hash maps etc.) and return
-    /// the morsel kernel plus the one-time statistics of that build.
-    pub prepare: for<'a> fn(&'a TpchDb) -> (PartialFn<'a>, ExecStats),
-    /// Merged partial → final result rows (leader-side).
-    pub finalize: fn(&TpchDb, &Partial) -> Vec<Row>,
-}
-
-/// Look up the morsel plan for a query. Every query in
-/// [`super::queries::QUERY_NAMES`] has one.
-pub fn plan(name: &str) -> Option<MorselPlan> {
-    match name {
-        "q1" => Some(queries::q1::morsel_plan()),
-        "q3" => Some(queries::q3::morsel_plan()),
-        "q5" => Some(queries::q5::morsel_plan()),
-        "q6" => Some(queries::q6::morsel_plan()),
-        "q9" => Some(queries::q9::morsel_plan()),
-        "q12" => Some(queries::q12::morsel_plan()),
-        "q14" => Some(queries::q14::morsel_plan()),
-        "q18" => Some(queries::q18::morsel_plan()),
-        "q19" => Some(queries::q19::morsel_plan()),
-        _ => None,
-    }
-}
 
 /// Run a query morsel-parallel on `threads` threads (0 = all cores),
 /// `morsel_rows` rows per morsel. Produces the same rows as
@@ -255,27 +44,8 @@ pub fn run_query_morsel(
     threads: usize,
     morsel_rows: usize,
 ) -> Option<QueryOutput> {
-    let plan = plan(name)?;
-    let (kernel, prep_stats) = (plan.prepare)(db);
-    let partials =
-        parallel_map_chunks(db.lineitem.len(), morsel_rows, threads, |lo, hi| kernel(lo, hi));
-    let mut merger = Merger::new(plan.width);
-    *merger.stats_mut() = prep_stats;
-    let mut morsel_ht_peak = 0u64;
-    for p in &partials {
-        morsel_ht_peak = morsel_ht_peak.max(p.stats.ht_bytes);
-        merger.absorb(p).expect("kernel produced mismatched partial width");
-    }
-    let mut merged = merger.into_partial();
-    // The merge summed every transient per-morsel hash table into
-    // ht_bytes; the *live* peak is the prepare-side tables plus one
-    // morsel table plus the merged-group state. Keep ht_bytes at its
-    // documented "live at once" meaning.
-    let group_bytes = (8 + 8 * plan.width + 8) as u64;
-    merged.stats.ht_bytes =
-        prep_stats.ht_bytes + morsel_ht_peak + merged.len() as u64 * group_bytes;
-    let rows = (plan.finalize)(db, &merged);
-    Some(QueryOutput { rows, stats: merged.stats })
+    let spec = engine::spec(name)?;
+    Some(engine::run_parallel(db, &spec, threads, morsel_rows))
 }
 
 #[cfg(test)]
@@ -285,60 +55,11 @@ mod tests {
     use crate::analytics::tpch::TpchConfig;
 
     #[test]
-    fn codec_roundtrip() {
-        let mut g: GroupBy<3> = GroupBy::with_capacity(4);
-        g.update(7, [1.0, 2.0, 3.0]);
-        g.update(-9, [4.0, 5.0, 6.0]);
-        g.update(7, [0.5, 0.5, 0.5]);
-        let p = Partial::from_groupby(&g, ExecStats::default());
-        let dec = Partial::decode(&p.encode()).unwrap();
-        assert_eq!(dec.width, 3);
-        assert_eq!(dec.keys, p.keys);
-        assert_eq!(dec.accs, p.accs);
-        assert_eq!(dec.counts, p.counts);
-    }
-
-    #[test]
-    fn decode_rejects_bad_frames() {
-        assert!(Partial::decode(&[1, 2, 3]).is_err());
-        let p = Partial::single(1, &[2.0], 1, ExecStats::default());
-        let enc = p.encode();
-        assert!(Partial::decode(&enc[..enc.len() - 1]).is_err());
-        // Implausible width.
-        let mut bad = enc.clone();
-        bad[0] = 200;
-        assert!(Partial::decode(&bad).is_err());
-    }
-
-    #[test]
-    fn merger_sums_groups_in_first_seen_order() {
-        let a = Partial::single(5, &[1.0, 10.0], 2, ExecStats::default());
-        let b = Partial::single(9, &[3.0, 30.0], 1, ExecStats::default());
-        let c = Partial::single(5, &[0.5, 5.0], 4, ExecStats::default());
-        let mut m = Merger::new(2);
-        for p in [&a, &b, &c] {
-            m.absorb(p).unwrap();
-        }
-        let out = m.into_partial();
-        assert_eq!(out.keys, vec![5, 9]);
-        assert_eq!(out.acc(0), &[1.5, 15.0]);
-        assert_eq!(out.acc(1), &[3.0, 30.0]);
-        assert_eq!(out.counts, vec![6, 1]);
-    }
-
-    #[test]
-    fn merger_rejects_width_mismatch() {
-        let p = Partial::single(1, &[1.0], 1, ExecStats::default());
-        let mut m = Merger::new(2);
-        assert!(m.absorb(&p).is_err());
-    }
-
-    #[test]
     fn every_query_has_a_plan() {
         for q in QUERY_NAMES {
-            assert!(plan(q).is_some(), "{q} has no morsel plan");
+            assert!(engine::spec(q).is_some(), "{q} has no plan");
         }
-        assert!(plan("q99").is_none());
+        assert!(engine::spec("q99").is_none());
     }
 
     #[test]

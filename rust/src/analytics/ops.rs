@@ -1,14 +1,15 @@
-//! Vectorized operators: selection, hash join, hash aggregation, top-k.
+//! Vectorized primitive operators: selection filters, join wrappers,
+//! top-k, execution statistics.
 //!
 //! Operators work over selection vectors (`Vec<u32>` of row ids) and
 //! record an [`ExecStats`] so every query run yields the bytes-touched /
-//! rows-processed profile the memory-contention model consumes.
-//!
-//! The join and group-by hash tables are purpose-built open-addressing
-//! tables over `i64` keys (multiply-shift hashing, linear probing,
-//! power-of-two capacity) — measured ~3-4× faster than `std::HashMap` for
-//! this workload and, equally important, with a byte footprint we can
-//! report exactly.
+//! rows-processed profile the memory-contention model consumes. The
+//! filters here are the leaf kernels the engine's predicate expressions
+//! ([`crate::analytics::engine::Predicate`]) compose; the hash tables
+//! themselves live in the engine layer ([`crate::analytics::engine`]) —
+//! [`JoinMap`] is a re-export alias kept for the original name.
+
+pub use crate::analytics::engine::join::{HashJoinTable as JoinMap, ProbeIter};
 
 /// Execution statistics accumulated across operators of one query run.
 #[derive(Clone, Copy, Debug, Default)]
@@ -129,111 +130,6 @@ pub fn sum_over<F: Fn(u32) -> f64>(sel: &[u32], f: F) -> f64 {
     acc
 }
 
-#[inline]
-fn hash_i64(k: i64) -> u64 {
-    // Fibonacci/multiply-xorshift: adequate spread for dense keys.
-    let mut h = (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-    h ^= h >> 29;
-    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    h ^ (h >> 32)
-}
-
-/// Build-side hash index for joins: key → list of build-row ids.
-///
-/// Open addressing maps key → slot; rows sharing a key are chained through
-/// `next`. Lookup yields an iterator of build rows.
-pub struct JoinMap {
-    mask: usize,
-    keys: Vec<i64>,
-    /// head[slot] = first build row + 1 (0 = empty).
-    head: Vec<u32>,
-    /// next[row] = next build row with same key + 1 (0 = end).
-    next: Vec<u32>,
-}
-
-impl JoinMap {
-    /// Build from `keys[sel[i]]` for each selected build row.
-    pub fn build(keys: &[i64], sel: &[u32]) -> Self {
-        let cap = (sel.len().max(1) * 2).next_power_of_two();
-        let mut m = Self {
-            mask: cap - 1,
-            keys: vec![0; cap],
-            head: vec![0; cap],
-            next: vec![0; keys.len()],
-        };
-        for &row in sel {
-            let k = keys[row as usize];
-            let mut slot = (hash_i64(k) as usize) & m.mask;
-            loop {
-                if m.head[slot] == 0 {
-                    m.keys[slot] = k;
-                    m.head[slot] = row + 1;
-                    break;
-                }
-                if m.keys[slot] == k {
-                    // Prepend to the chain.
-                    let old = m.head[slot];
-                    m.head[slot] = row + 1;
-                    m.next[row as usize] = old;
-                    break;
-                }
-                slot = (slot + 1) & m.mask;
-            }
-        }
-        m
-    }
-
-    /// Iterate build rows matching `k`.
-    pub fn probe(&self, k: i64) -> ProbeIter<'_> {
-        let mut slot = (hash_i64(k) as usize) & self.mask;
-        loop {
-            if self.head[slot] == 0 {
-                return ProbeIter { map: self, cur: 0 };
-            }
-            if self.keys[slot] == k {
-                return ProbeIter { map: self, cur: self.head[slot] };
-            }
-            slot = (slot + 1) & self.mask;
-        }
-    }
-
-    /// First matching build row, if any (fast path for unique keys).
-    pub fn probe_first(&self, k: i64) -> Option<u32> {
-        let mut slot = (hash_i64(k) as usize) & self.mask;
-        loop {
-            if self.head[slot] == 0 {
-                return None;
-            }
-            if self.keys[slot] == k {
-                return Some(self.head[slot] - 1);
-            }
-            slot = (slot + 1) & self.mask;
-        }
-    }
-
-    /// Approximate byte footprint (for ExecStats).
-    pub fn bytes(&self) -> u64 {
-        (self.keys.len() * 8 + self.head.len() * 4 + self.next.len() * 4) as u64
-    }
-}
-
-pub struct ProbeIter<'a> {
-    map: &'a JoinMap,
-    cur: u32,
-}
-
-impl Iterator for ProbeIter<'_> {
-    type Item = u32;
-    fn next(&mut self) -> Option<u32> {
-        if self.cur == 0 {
-            return None;
-        }
-        let row = self.cur - 1;
-        self.cur = self.map.next[row as usize];
-        Some(row)
-    }
-}
-
 /// Inner hash join: returns (probe_row, build_row) pairs for matches.
 pub fn hash_join(
     build_keys: &[i64],
@@ -274,88 +170,6 @@ pub fn hash_semi_join(
         .collect();
     stats.rows_out += out.len() as u64;
     out
-}
-
-/// Grouped aggregation over i64 keys with `W` f64 accumulators per group
-/// plus a count. Open addressing; returns groups in insertion order.
-pub struct GroupBy<const W: usize> {
-    mask: usize,
-    slots: Vec<i32>, // index into groups + 1; 0 = empty
-    keys: Vec<i64>,
-    pub groups: Vec<(i64, [f64; W], u64)>,
-}
-
-impl<const W: usize> GroupBy<W> {
-    pub fn with_capacity(n: usize) -> Self {
-        let cap = (n.max(16) * 2).next_power_of_two();
-        Self { mask: cap - 1, slots: vec![0; cap], keys: vec![0; cap], groups: Vec::new() }
-    }
-
-    #[inline]
-    pub fn update(&mut self, key: i64, values: [f64; W]) {
-        let gi = self.group_index(key);
-        let g = &mut self.groups[gi];
-        for (acc, v) in g.1.iter_mut().zip(values.iter()) {
-            *acc += v;
-        }
-        g.2 += 1;
-    }
-
-    /// Index of the group for `key`, creating it if new.
-    #[inline]
-    pub fn group_index(&mut self, key: i64) -> usize {
-        let mut slot = (hash_i64(key) as usize) & self.mask;
-        loop {
-            let s = self.slots[slot];
-            if s == 0 {
-                self.grow_if_needed();
-                // Re-probe after potential rehash.
-                if self.slots.len() != self.mask + 1 {
-                    unreachable!();
-                }
-                let mut slot2 = (hash_i64(key) as usize) & self.mask;
-                loop {
-                    if self.slots[slot2] == 0 {
-                        self.keys[slot2] = key;
-                        self.groups.push((key, [0.0; W], 0));
-                        self.slots[slot2] = self.groups.len() as i32;
-                        return self.groups.len() - 1;
-                    }
-                    if self.keys[slot2] == key {
-                        return (self.slots[slot2] - 1) as usize;
-                    }
-                    slot2 = (slot2 + 1) & self.mask;
-                }
-            }
-            if self.keys[slot] == key {
-                return (s - 1) as usize;
-            }
-            slot = (slot + 1) & self.mask;
-        }
-    }
-
-    fn grow_if_needed(&mut self) {
-        if (self.groups.len() + 1) * 2 < self.slots.len() {
-            return;
-        }
-        let cap = self.slots.len() * 2;
-        self.mask = cap - 1;
-        self.slots = vec![0; cap];
-        let mut keys = vec![0i64; cap];
-        for (gi, (k, _, _)) in self.groups.iter().enumerate() {
-            let mut slot = (hash_i64(*k) as usize) & self.mask;
-            while self.slots[slot] != 0 {
-                slot = (slot + 1) & self.mask;
-            }
-            self.slots[slot] = gi as i32 + 1;
-            keys[slot] = *k;
-        }
-        self.keys = keys;
-    }
-
-    pub fn bytes(&self) -> u64 {
-        (self.slots.len() * 4 + self.keys.len() * 8 + self.groups.len() * (8 + 8 * W + 8)) as u64
-    }
 }
 
 /// Top-k by f64 score, descending; stable on ties by key ascending.
@@ -404,18 +218,6 @@ mod tests {
     }
 
     #[test]
-    fn join_map_probe_chains() {
-        let keys = vec![10, 20, 10, 30, 10];
-        let m = JoinMap::build(&keys, &all_rows(5));
-        let mut rows: Vec<u32> = m.probe(10).collect();
-        rows.sort_unstable();
-        assert_eq!(rows, vec![0, 2, 4]);
-        assert_eq!(m.probe(99).count(), 0);
-        assert!(m.probe_first(30).is_some());
-        assert!(m.probe_first(31).is_none());
-    }
-
-    #[test]
     fn hash_join_matches_nested_loop() {
         let build = vec![1i64, 2, 3, 2, 9];
         let probe = vec![2i64, 9, 4, 2];
@@ -456,41 +258,6 @@ mod tests {
     }
 
     #[test]
-    fn groupby_sums_and_counts() {
-        let mut g: GroupBy<2> = GroupBy::with_capacity(4);
-        g.update(7, [1.0, 10.0]);
-        g.update(8, [2.0, 20.0]);
-        g.update(7, [3.0, 30.0]);
-        assert_eq!(g.groups.len(), 2);
-        let (k, sums, n) = g.groups[0];
-        assert_eq!(k, 7);
-        assert_eq!(sums, [4.0, 40.0]);
-        assert_eq!(n, 2);
-    }
-
-    #[test]
-    fn groupby_grows_past_capacity() {
-        let mut g: GroupBy<1> = GroupBy::with_capacity(2);
-        for k in 0..10_000i64 {
-            g.update(k % 997, [1.0]);
-        }
-        assert_eq!(g.groups.len(), 997);
-        let total: f64 = g.groups.iter().map(|(_, s, _)| s[0]).sum();
-        assert_eq!(total, 10_000.0);
-        assert!(g.bytes() > 0);
-    }
-
-    #[test]
-    fn groupby_insertion_order() {
-        let mut g: GroupBy<1> = GroupBy::with_capacity(4);
-        for k in [5i64, 3, 5, 9, 3] {
-            g.update(k, [1.0]);
-        }
-        let keys: Vec<i64> = g.groups.iter().map(|(k, _, _)| *k).collect();
-        assert_eq!(keys, vec![5, 3, 9]);
-    }
-
-    #[test]
     fn topk_orders_desc() {
         let mut items = vec![(1, 5.0), (2, 9.0), (3, 1.0), (4, 9.0)];
         top_k_desc(&mut items, 3);
@@ -504,11 +271,8 @@ mod tests {
     }
 
     #[test]
-    fn negative_keys_hash_fine() {
-        let keys = vec![-5i64, -5, 0, i64::MIN, i64::MAX];
-        let m = JoinMap::build(&keys, &all_rows(5));
-        assert_eq!(m.probe(-5).count(), 2);
-        assert_eq!(m.probe(i64::MIN).count(), 1);
-        assert_eq!(m.probe(i64::MAX).count(), 1);
+    fn generic_filter() {
+        let sel = all_rows(6);
+        assert_eq!(filter(&sel, |i| i % 2 == 0), vec![0, 2, 4]);
     }
 }

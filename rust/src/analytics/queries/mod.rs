@@ -1,10 +1,13 @@
 //! TPC-H query implementations — the analytics workloads of Figure 3.
 //!
-//! Each query module provides a vectorized implementation over the
-//! columnar engine plus an independent row-at-a-time *oracle*
-//! (`naive_*`), and the test compares the two on generated data. Every
-//! run returns a [`QueryOutput`] with [`ExecStats`] feeding the
-//! memory-contention model.
+//! Each query module defines exactly one
+//! [`crate::analytics::engine::PlanSpec`] (predicate expression,
+//! dimension hash-join builds, group key + aggregate slots, finalizer)
+//! plus an independent row-at-a-time *oracle* (`naive`), and the test
+//! compares the two on generated data. Every run returns a
+//! [`QueryOutput`] with [`ExecStats`] feeding the memory-contention
+//! model. The serial, morsel-parallel, and distributed paths all drive
+//! the same plan.
 
 pub mod q1;
 pub mod q12;
@@ -72,20 +75,10 @@ impl QueryOutput {
 /// Names of all implemented queries, Figure-3 order.
 pub const QUERY_NAMES: [&str; 9] = ["q1", "q3", "q5", "q6", "q9", "q12", "q14", "q18", "q19"];
 
-/// Run a query by name.
+/// Run a query by name, single-threaded, through the unified engine.
 pub fn run_query(db: &TpchDb, name: &str) -> Option<QueryOutput> {
-    match name {
-        "q1" => Some(q1::run(db)),
-        "q3" => Some(q3::run(db)),
-        "q5" => Some(q5::run(db)),
-        "q6" => Some(q6::run(db)),
-        "q9" => Some(q9::run(db)),
-        "q12" => Some(q12::run(db)),
-        "q14" => Some(q14::run(db)),
-        "q18" => Some(q18::run(db)),
-        "q19" => Some(q19::run(db)),
-        _ => None,
-    }
+    let spec = crate::analytics::engine::spec(name)?;
+    Some(crate::analytics::engine::run_serial(db, &spec))
 }
 
 #[cfg(test)]

@@ -5,8 +5,8 @@
 //! the set: it touches seven wide columns end to end.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
-use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats, GroupBy};
+use crate::analytics::engine::{self, Compiled, PlanSpec, Predicate, RowEval};
+use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
 
@@ -15,104 +15,32 @@ fn cutoff() -> i32 {
     date_to_days(1998, 12, 1) - 90
 }
 
-pub fn run(db: &TpchDb) -> QueryOutput {
+/// The one Q1 plan all three execution paths drive: shipdate-window
+/// predicate, (returnflag × linestatus) group key, five running sums;
+/// finalize computes the averages and sorts by the flag pair.
+pub(crate) fn plan_spec() -> PlanSpec {
+    PlanSpec { name: "q1", width: 5, compile, finalize }
+}
+
+fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let li = &db.lineitem;
-    let n = li.len();
-    let mut stats = ExecStats::default();
-
     let ship = li.col("l_shipdate").as_i32();
-    stats.scan(n, 4);
-    let sel = filter_i32_range(&all_rows(n), ship, i32::MIN, cutoff() + 1);
-
     let qty = li.col("l_quantity").as_f64();
     let price = li.col("l_extendedprice").as_f64();
     let disc = li.col("l_discount").as_f64();
     let tax = li.col("l_tax").as_f64();
     let rf = li.col("l_returnflag").as_u8();
     let ls = li.col("l_linestatus").as_u8();
-    stats.scan(sel.len(), 8 * 4 + 2);
-
-    // Accumulators: qty, price, disc_price, charge, discount.
-    let mut g: GroupBy<5> = GroupBy::with_capacity(8);
-    for &i in &sel {
-        let i = i as usize;
+    let pred = Predicate::i32_range(ship, i32::MIN, cutoff() + 1);
+    let eval: RowEval<'a> = Box::new(move |i| {
         let dp = price[i] * (1.0 - disc[i]);
         let key = ((rf[i] as i64) << 8) | ls[i] as i64;
-        g.update(key, [qty[i], price[i], dp, dp * (1.0 + tax[i]), disc[i]]);
-    }
-    stats.ht_bytes += g.bytes();
-    stats.rows_out += g.groups.len() as u64;
-
-    let mut rows: Vec<Row> = g
-        .groups
-        .iter()
-        .map(|(key, s, cnt)| {
-            let c = *cnt as f64;
-            vec![
-                Value::Str(((key >> 8) as u8 as char).to_string()),
-                Value::Str(((key & 0xff) as u8 as char).to_string()),
-                Value::Float(s[0]),
-                Value::Float(s[1]),
-                Value::Float(s[2]),
-                Value::Float(s[3]),
-                Value::Float(s[0] / c),
-                Value::Float(s[1] / c),
-                Value::Float(s[4] / c),
-                Value::Int(*cnt as i64),
-            ]
-        })
-        .collect();
-    rows.sort_by(|a, b| {
-        let ka = (str_of(&a[0]), str_of(&a[1]));
-        let kb = (str_of(&b[0]), str_of(&b[1]));
-        ka.cmp(&kb)
+        Some((key, [qty[i], price[i], dp, dp * (1.0 + tax[i]), disc[i]]))
     });
-    QueryOutput { rows, stats }
+    (Compiled { pred, payload_bytes: 8 * 4 + 2, eval, groups_hint: 8 }, ExecStats::default())
 }
 
-fn str_of(v: &Value) -> String {
-    match v {
-        Value::Str(s) => s.clone(),
-        _ => unreachable!(),
-    }
-}
-
-/// Morsel plan: per-morsel (returnflag × linestatus) group-by with the
-/// five running sums; finalize computes the averages and sorts by flags.
-pub(crate) fn morsel_plan() -> MorselPlan {
-    MorselPlan { width: 5, prepare: morsel_prepare, finalize: morsel_finalize }
-}
-
-fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
-    let li = &db.lineitem;
-    let cut = cutoff();
-    let ship = li.col("l_shipdate").as_i32();
-    let qty = li.col("l_quantity").as_f64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-    let tax = li.col("l_tax").as_f64();
-    let rf = li.col("l_returnflag").as_u8();
-    let ls = li.col("l_linestatus").as_u8();
-    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
-        let mut stats = ExecStats::default();
-        stats.scan(hi - lo, 4 + 8 * 4 + 2);
-        let mut g: GroupBy<5> = GroupBy::with_capacity(8);
-        for i in lo..hi {
-            if ship[i] > cut {
-                continue;
-            }
-            let dp = price[i] * (1.0 - disc[i]);
-            let key = ((rf[i] as i64) << 8) | ls[i] as i64;
-            g.update(key, [qty[i], price[i], dp, dp * (1.0 + tax[i]), disc[i]]);
-        }
-        stats.ht_bytes += g.bytes();
-        stats.rows_out += g.groups.len() as u64;
-        Partial::from_groupby(&g, stats)
-    });
-    (kernel, ExecStats::default())
-}
-
-fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
+fn finalize(_db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
     let mut rows: Vec<Row> = (0..p.len())
         .map(|gi| {
             let key = p.keys[gi];
@@ -139,6 +67,18 @@ fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
         ka.cmp(&kb)
     });
     rows
+}
+
+fn str_of(v: &Value) -> String {
+    match v {
+        Value::Str(s) => s.clone(),
+        _ => unreachable!(),
+    }
+}
+
+/// Single-threaded reference execution (engine-driven).
+pub fn run(db: &TpchDb) -> QueryOutput {
+    engine::run_serial(db, &plan_spec())
 }
 
 /// Row-at-a-time oracle.

@@ -4,8 +4,8 @@
 //! counting high/low-priority orders per mode.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
-use crate::analytics::ops::{all_rows, ExecStats, GroupBy};
+use crate::analytics::engine::{self, acc2, Compiled, PlanSpec, Predicate, RowEval};
+use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
 
@@ -19,115 +19,47 @@ fn is_high(priority: &str) -> bool {
     priority == "1-URGENT" || priority == "2-HIGH"
 }
 
-pub fn run(db: &TpchDb) -> QueryOutput {
-    let mut stats = ExecStats::default();
-    let (lo, hi) = window();
-    let li = &db.lineitem;
-    let n = li.len();
-
-    let (mode_dict, mode_codes) = li.col("l_shipmode").as_str_codes();
-    let target_codes: Vec<u32> = MODES
-        .iter()
-        .filter_map(|m| mode_dict.iter().position(|d| d == m).map(|i| i as u32))
-        .collect();
-    let ship = li.col("l_shipdate").as_i32();
-    let commit = li.col("l_commitdate").as_i32();
-    let receipt = li.col("l_receiptdate").as_i32();
-    stats.scan(n, 4 * 4);
-
-    let sel: Vec<u32> = all_rows(n)
-        .into_iter()
-        .filter(|&i| {
-            let i = i as usize;
-            target_codes.contains(&mode_codes[i])
-                && receipt[i] >= lo
-                && receipt[i] < hi
-                && commit[i] < receipt[i]
-                && ship[i] < commit[i]
-        })
-        .collect();
-
-    // orders side: priority via dense orderkey index.
-    let orders = &db.orders;
-    let (prio_dict, prio_codes) = orders.col("o_orderpriority").as_str_codes();
-    let high_code: Vec<bool> = prio_dict.iter().map(|p| is_high(p)).collect();
-    let lok = li.col("l_orderkey").as_i64();
-    stats.scan(sel.len(), 12);
-
-    // mode code → (high, low)
-    let mut counts: std::collections::BTreeMap<String, (i64, i64)> = Default::default();
-    for &i in &sel {
-        let i = i as usize;
-        let orow = (lok[i] - 1) as usize;
-        let mode = &mode_dict[mode_codes[i] as usize];
-        let e = counts.entry(mode.clone()).or_insert((0, 0));
-        if high_code[prio_codes[orow] as usize] {
-            e.0 += 1;
-        } else {
-            e.1 += 1;
-        }
-    }
-    stats.rows_out = counts.len() as u64;
-
-    let rows = counts
-        .into_iter()
-        .map(|(m, (h, l))| vec![Value::Str(m), Value::Int(h), Value::Int(l)])
-        .collect();
-    QueryOutput { rows, stats }
-}
-
-/// Morsel plan: morsels count high/low-priority lines per ship-mode
+/// The one Q12 plan: mode IN-list + receipt window + date-consistency
+/// predicate cascade, counting high/low-priority lines per ship-mode
 /// dictionary code; finalize resolves codes to mode strings and sorts.
-pub(crate) fn morsel_plan() -> MorselPlan {
-    MorselPlan { width: 2, prepare: morsel_prepare, finalize: morsel_finalize }
+pub(crate) fn plan_spec() -> PlanSpec {
+    PlanSpec { name: "q12", width: 2, compile, finalize }
 }
 
-fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
+fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let mut stats = ExecStats::default();
     let (lo_d, hi_d) = window();
     let li = &db.lineitem;
 
-    let (mode_dict, mode_codes) = li.col("l_shipmode").as_str_codes();
-    let target_codes: Vec<u32> = MODES
-        .iter()
-        .filter_map(|m| mode_dict.iter().position(|d| d == m).map(|i| i as u32))
-        .collect();
+    let (_, mode_codes) = li.col("l_shipmode").as_str_codes();
     let ship = li.col("l_shipdate").as_i32();
     let commit = li.col("l_commitdate").as_i32();
     let receipt = li.col("l_receiptdate").as_i32();
     let lok = li.col("l_orderkey").as_i64();
+    let pred = Predicate::and(vec![
+        Predicate::code_matches(li.col("l_shipmode"), |m| MODES.contains(&m)),
+        Predicate::i32_range(receipt, lo_d, hi_d),
+        Predicate::i32_col_lt(commit, receipt),
+        Predicate::i32_col_lt(ship, commit),
+    ]);
 
+    // orders side: priority via dense orderkey index.
     let (prio_dict, prio_codes) = db.orders.col("o_orderpriority").as_str_codes();
     let high_code: Vec<bool> = prio_dict.iter().map(|p| is_high(p)).collect();
     stats.scan(db.orders.len(), 4);
 
-    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
-        let mut st = ExecStats::default();
-        st.scan(hi - lo, 4 * 4 + 12);
-        let mut g: GroupBy<2> = GroupBy::with_capacity(8);
-        for i in lo..hi {
-            if !(target_codes.contains(&mode_codes[i])
-                && receipt[i] >= lo_d
-                && receipt[i] < hi_d
-                && commit[i] < receipt[i]
-                && ship[i] < commit[i])
-            {
-                continue;
-            }
-            let orow = (lok[i] - 1) as usize;
-            let high = high_code[prio_codes[orow] as usize];
-            g.update(
-                mode_codes[i] as i64,
-                [if high { 1.0 } else { 0.0 }, if high { 0.0 } else { 1.0 }],
-            );
-        }
-        st.rows_out += g.groups.len() as u64;
-        Partial::from_groupby(&g, st)
+    let eval: RowEval<'a> = Box::new(move |i| {
+        let orow = (lok[i] - 1) as usize;
+        let high = high_code[prio_codes[orow] as usize];
+        Some((
+            mode_codes[i] as i64,
+            acc2(if high { 1.0 } else { 0.0 }, if high { 0.0 } else { 1.0 }),
+        ))
     });
-    (kernel, stats)
+    (Compiled { pred, payload_bytes: 12, eval, groups_hint: 8 }, stats)
 }
 
-fn morsel_finalize(db: &TpchDb, p: &Partial) -> Vec<Row> {
+fn finalize(db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
     let (mode_dict, _) = db.lineitem.col("l_shipmode").as_str_codes();
     let mut rows: Vec<Row> = (0..p.len())
         .map(|i| {
@@ -144,6 +76,11 @@ fn morsel_finalize(db: &TpchDb, p: &Partial) -> Vec<Row> {
         _ => unreachable!(),
     });
     rows
+}
+
+/// Single-threaded reference execution (engine-driven).
+pub fn run(db: &TpchDb) -> QueryOutput {
+    engine::run_serial(db, &plan_spec())
 }
 
 /// Row-at-a-time oracle.

@@ -2,8 +2,8 @@
 //! one-month shipping window.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
-use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats};
+use crate::analytics::engine::{self, acc2, Compiled, PlanSpec, Predicate, RowEval};
+use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
 
@@ -11,50 +11,14 @@ fn window() -> (i32, i32) {
     (date_to_days(1995, 9, 1), date_to_days(1995, 10, 1))
 }
 
-pub fn run(db: &TpchDb) -> QueryOutput {
-    let mut stats = ExecStats::default();
-    let (lo, hi) = window();
-    let li = &db.lineitem;
-    let n = li.len();
-
-    let ship = li.col("l_shipdate").as_i32();
-    stats.scan(n, 4);
-    let sel = filter_i32_range(&all_rows(n), ship, lo, hi);
-
-    let part = &db.part;
-    let (type_dict, type_codes) = part.col("p_type").as_str_codes();
-    let promo: Vec<bool> = type_dict.iter().map(|t| t.starts_with("PROMO")).collect();
-    stats.scan(part.len(), 4);
-
-    let lpk = li.col("l_partkey").as_i64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-    stats.scan(sel.len(), 24);
-
-    let mut promo_rev = 0.0;
-    let mut total_rev = 0.0;
-    for &i in &sel {
-        let i = i as usize;
-        let rev = price[i] * (1.0 - disc[i]);
-        total_rev += rev;
-        // partkey is dense 1..=N → direct index instead of a hash join.
-        let prow = (lpk[i] - 1) as usize;
-        if promo[type_codes[prow] as usize] {
-            promo_rev += rev;
-        }
-    }
-    stats.rows_out = 1;
-    let pct = if total_rev > 0.0 { 100.0 * promo_rev / total_rev } else { 0.0 };
-    QueryOutput { rows: vec![vec![Value::Float(pct)]], stats }
+/// The one Q14 plan: ship-window predicate, promo and total revenue
+/// accumulators; finalize computes the percentage from the two merged
+/// sums.
+pub(crate) fn plan_spec() -> PlanSpec {
+    PlanSpec { name: "q14", width: 2, compile, finalize }
 }
 
-/// Morsel plan: morsels sum promo and total revenue in the ship window;
-/// finalize computes the percentage from the two merged sums.
-pub(crate) fn morsel_plan() -> MorselPlan {
-    MorselPlan { width: 2, prepare: morsel_prepare, finalize: morsel_finalize }
-}
-
-fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
+fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let mut stats = ExecStats::default();
     let (lo_d, hi_d) = window();
     let li = &db.lineitem;
@@ -68,31 +32,18 @@ fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
     let promo: Vec<bool> = type_dict.iter().map(|t| t.starts_with("PROMO")).collect();
     stats.scan(part.len(), 4);
 
-    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
-        let mut st = ExecStats::default();
-        st.scan(hi - lo, 4 + 24);
-        let mut promo_rev = 0.0;
-        let mut total_rev = 0.0;
-        let mut matched = 0u64;
-        for i in lo..hi {
-            if ship[i] < lo_d || ship[i] >= hi_d {
-                continue;
-            }
-            let rev = price[i] * (1.0 - disc[i]);
-            total_rev += rev;
-            matched += 1;
-            let prow = (lpk[i] - 1) as usize;
-            if promo[type_codes[prow] as usize] {
-                promo_rev += rev;
-            }
-        }
-        st.rows_out = 1;
-        Partial::single(0, &[promo_rev, total_rev], matched, st)
+    let pred = Predicate::i32_range(ship, lo_d, hi_d);
+    let eval: RowEval<'a> = Box::new(move |i| {
+        let rev = price[i] * (1.0 - disc[i]);
+        // partkey is dense 1..=N → direct index instead of a hash join.
+        let prow = (lpk[i] - 1) as usize;
+        let promo_rev = if promo[type_codes[prow] as usize] { rev } else { 0.0 };
+        Some((0, acc2(promo_rev, rev)))
     });
-    (kernel, stats)
+    (Compiled { pred, payload_bytes: 24, eval, groups_hint: 1 }, stats)
 }
 
-fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
+fn finalize(_db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
     let (promo_rev, total_rev) = if p.is_empty() {
         (0.0, 0.0)
     } else {
@@ -101,6 +52,11 @@ fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
     };
     let pct = if total_rev > 0.0 { 100.0 * promo_rev / total_rev } else { 0.0 };
     vec![vec![Value::Float(pct)]]
+}
+
+/// Single-threaded reference execution (engine-driven).
+pub fn run(db: &TpchDb) -> QueryOutput {
+    engine::run_serial(db, &plan_spec())
 }
 
 /// Row-at-a-time oracle.

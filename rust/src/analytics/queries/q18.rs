@@ -1,94 +1,42 @@
 //! TPC-H Q18 — large-volume customers: orders whose total quantity
 //! exceeds a threshold, top-100 by order total price.
 //!
-//! The big-aggregation query: a full group-by over every order key.
+//! The big-aggregation query: a full group-by over every order key —
+//! the shuffle-dominant partial of the Fig. 4 analysis.
 
-use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
-use crate::analytics::ops::{ExecStats, GroupBy};
+use crate::analytics::engine::{self, acc1, Compiled, PlanSpec, Predicate, RowEval};
+use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
 
 const QTY_THRESHOLD: f64 = 300.0;
 const TOP: usize = 100;
 
-pub fn run(db: &TpchDb) -> QueryOutput {
+/// The one Q18 plan: no predicate, sum(quantity) grouped by order key;
+/// finalize applies the quantity threshold and the top-100 by order
+/// total price.
+pub(crate) fn plan_spec() -> PlanSpec {
+    PlanSpec { name: "q18", width: 1, compile, finalize }
+}
+
+fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let mut stats = ExecStats::default();
     let li = &db.lineitem;
     let lok = li.col("l_orderkey").as_i64();
     let qty = li.col("l_quantity").as_f64();
-    stats.scan(li.len(), 16);
+    // The finalize side reads custkey/date/totalprice for the survivors.
+    stats.scan(db.orders.len(), 20);
+    let eval: RowEval<'a> = Box::new(move |i| Some((lok[i], acc1(qty[i]))));
+    let hint = db.orders.len();
+    (Compiled { pred: Predicate::True, payload_bytes: 16, eval, groups_hint: hint }, stats)
+}
 
-    // sum(quantity) per order — the expensive aggregation.
-    let mut g: GroupBy<1> = GroupBy::with_capacity(db.orders.len());
-    for i in 0..li.len() {
-        g.update(lok[i], [qty[i]]);
-    }
-    stats.ht_bytes += g.bytes();
-
+fn finalize(db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
     let orders = &db.orders;
     let ocust = orders.col("o_custkey").as_i64();
     let odate = orders.col("o_orderdate").as_i32();
     let ototal = orders.col("o_totalprice").as_f64();
-    stats.scan(orders.len(), 20);
-
     let mut big: Vec<(i64, f64)> = Vec::new(); // (orderkey, totalprice)
-    let mut qty_of: std::collections::HashMap<i64, f64> = Default::default();
-    for (ok, s, _) in &g.groups {
-        if s[0] > QTY_THRESHOLD {
-            let orow = (*ok - 1) as usize;
-            big.push((*ok, ototal[orow]));
-            qty_of.insert(*ok, s[0]);
-        }
-    }
-    crate::analytics::ops::top_k_desc(&mut big, TOP);
-    stats.rows_out = big.len() as u64;
-
-    let rows = big
-        .into_iter()
-        .map(|(ok, total)| {
-            let orow = (ok - 1) as usize;
-            vec![
-                Value::Int(ocust[orow]),
-                Value::Int(ok),
-                Value::Int(odate[orow] as i64),
-                Value::Float(total),
-                Value::Float(qty_of[&ok]),
-            ]
-        })
-        .collect();
-    QueryOutput { rows, stats }
-}
-
-/// Morsel plan: the heavy one — every morsel produces a per-orderkey
-/// quantity group-by (the shuffle-dominant partial of the Fig. 4
-/// analysis); finalize applies the quantity threshold and the top-100.
-pub(crate) fn morsel_plan() -> MorselPlan {
-    MorselPlan { width: 1, prepare: morsel_prepare, finalize: morsel_finalize }
-}
-
-fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
-    let li = &db.lineitem;
-    let lok = li.col("l_orderkey").as_i64();
-    let qty = li.col("l_quantity").as_f64();
-    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
-        let mut st = ExecStats::default();
-        st.scan(hi - lo, 16);
-        let mut g: GroupBy<1> = GroupBy::with_capacity((hi - lo) / 4 + 16);
-        for i in lo..hi {
-            g.update(lok[i], [qty[i]]);
-        }
-        st.ht_bytes += g.bytes();
-        Partial::from_groupby(&g, st)
-    });
-    (kernel, ExecStats::default())
-}
-
-fn morsel_finalize(db: &TpchDb, p: &Partial) -> Vec<Row> {
-    let orders = &db.orders;
-    let ocust = orders.col("o_custkey").as_i64();
-    let odate = orders.col("o_orderdate").as_i32();
-    let ototal = orders.col("o_totalprice").as_f64();
-    let mut big: Vec<(i64, f64)> = Vec::new();
     let mut qty_of: std::collections::HashMap<i64, f64> = Default::default();
     for i in 0..p.len() {
         let q = p.acc(i)[0];
@@ -111,6 +59,11 @@ fn morsel_finalize(db: &TpchDb, p: &Partial) -> Vec<Row> {
             ]
         })
         .collect()
+}
+
+/// Single-threaded reference execution (engine-driven).
+pub fn run(db: &TpchDb) -> QueryOutput {
+    engine::run_serial(db, &plan_spec())
 }
 
 /// Row-at-a-time oracle.

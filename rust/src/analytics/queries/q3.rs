@@ -4,8 +4,8 @@
 //! revenue grouped by order. Exercises two hash joins and a top-k.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
-use crate::analytics::ops::{all_rows, filter_code_eq, filter_i32_range, top_k_desc, ExecStats, GroupBy, JoinMap};
+use crate::analytics::engine::{self, acc1, Compiled, HashJoinTable, PlanSpec, Predicate, RowEval};
+use crate::analytics::ops::{all_rows, filter_code_eq, filter_i32_range, top_k_desc, ExecStats};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
 
@@ -13,97 +13,19 @@ fn pivot() -> i32 {
     date_to_days(1995, 3, 15)
 }
 
-pub fn run(db: &TpchDb) -> QueryOutput {
+/// The one Q3 plan: the customer semi-join and the order hash table are
+/// built once at compile time (broadcast side); the kernel probes orders
+/// per lineitem and sums revenue per order key. Finalize takes the
+/// top-10 and resolves order dates through the dense orderkey index.
+pub(crate) fn plan_spec() -> PlanSpec {
+    PlanSpec { name: "q3", width: 1, compile, finalize }
+}
+
+fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let mut stats = ExecStats::default();
     let pivot = pivot();
 
-    // customer: mktsegment = 'BUILDING'
-    let cust = &db.customer;
-    let (_, seg_codes) = cust.col("c_mktsegment").as_str_codes();
-    stats.scan(cust.len(), 4);
-    let building = match cust.col("c_mktsegment").dict_code("BUILDING") {
-        Some(c) => c,
-        None => return QueryOutput::default(),
-    };
-    let cust_sel = filter_code_eq(&all_rows(cust.len()), seg_codes, building);
-    let custkeys = cust.col("c_custkey").as_i64();
-    stats.scan(cust_sel.len(), 8);
-
-    // orders: o_orderdate < pivot, semi-joined to BUILDING customers.
-    let orders = &db.orders;
-    let odate = orders.col("o_orderdate").as_i32();
-    stats.scan(orders.len(), 4);
-    let ord_sel = filter_i32_range(&all_rows(orders.len()), odate, i32::MIN, pivot);
-    let ocust = orders.col("o_custkey").as_i64();
-    stats.scan(ord_sel.len(), 8);
-    let cust_map = JoinMap::build(custkeys, &cust_sel);
-    stats.ht_bytes += cust_map.bytes();
-    let ord_sel: Vec<u32> = ord_sel
-        .into_iter()
-        .filter(|&o| cust_map.probe_first(ocust[o as usize]).is_some())
-        .collect();
-
-    // lineitem: l_shipdate > pivot, joined to surviving orders.
-    let li = &db.lineitem;
-    let ship = li.col("l_shipdate").as_i32();
-    stats.scan(li.len(), 4);
-    let li_sel = filter_i32_range(&all_rows(li.len()), ship, pivot + 1, i32::MAX);
-    let lok = li.col("l_orderkey").as_i64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-    stats.scan(li_sel.len(), 8 * 3);
-
-    let okeys = orders.col("o_orderkey").as_i64();
-    let ord_map = JoinMap::build(okeys, &ord_sel);
-    stats.ht_bytes += ord_map.bytes();
-
-    let mut g: GroupBy<1> = GroupBy::with_capacity(1024);
-    let mut order_date: Vec<i32> = Vec::new();
-    for &l in &li_sel {
-        let key = lok[l as usize];
-        if let Some(orow) = ord_map.probe_first(key) {
-            let gi = g.group_index(key);
-            if gi == order_date.len() {
-                order_date.push(odate[orow as usize]);
-            }
-            let li_us = l as usize;
-            g.groups[gi].1[0] += price[li_us] * (1.0 - disc[li_us]);
-            g.groups[gi].2 += 1;
-        }
-    }
-    stats.ht_bytes += g.bytes();
-
-    let mut items: Vec<(i64, f64)> = g.groups.iter().map(|(k, s, _)| (*k, s[0])).collect();
-    let dates: std::collections::HashMap<i64, i32> = g
-        .groups
-        .iter()
-        .zip(order_date.iter())
-        .map(|((k, _, _), d)| (*k, *d))
-        .collect();
-    top_k_desc(&mut items, 10);
-    stats.rows_out = items.len() as u64;
-
-    let rows = items
-        .into_iter()
-        .map(|(k, rev)| {
-            vec![Value::Int(k), Value::Float(rev), Value::Int(dates[&k] as i64)]
-        })
-        .collect();
-    QueryOutput { rows, stats }
-}
-
-/// Morsel plan: the customer semi-join and the order hash map are built
-/// once over the broadcast tables; morsels probe orders per lineitem and
-/// sum revenue per order key. Finalize takes the top-10 and resolves
-/// order dates through the dense orderkey index.
-pub(crate) fn morsel_plan() -> MorselPlan {
-    MorselPlan { width: 1, prepare: morsel_prepare, finalize: morsel_finalize }
-}
-
-fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
-    let mut stats = ExecStats::default();
-    let pivot = pivot();
-
+    // customer: mktsegment = 'BUILDING'.
     let cust = &db.customer;
     let (_, seg_codes) = cust.col("c_mktsegment").as_str_codes();
     stats.scan(cust.len(), 4);
@@ -113,9 +35,9 @@ fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
     };
     let custkeys = cust.col("c_custkey").as_i64();
     stats.scan(cust_sel.len(), 8);
-    let cust_map = JoinMap::build(custkeys, &cust_sel);
-    stats.ht_bytes += cust_map.bytes();
+    let cust_map = HashJoinTable::build_dim(custkeys, &cust_sel, &mut stats);
 
+    // orders: o_orderdate < pivot, semi-joined to BUILDING customers.
     let orders = &db.orders;
     let odate = orders.col("o_orderdate").as_i32();
     let ocust = orders.col("o_custkey").as_i64();
@@ -126,40 +48,41 @@ fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
         .collect();
     stats.scan(ord_sel.len(), 8);
     let okeys = orders.col("o_orderkey").as_i64();
-    let ord_map = JoinMap::build(okeys, &ord_sel);
-    stats.ht_bytes += ord_map.bytes();
+    let ord_map = HashJoinTable::build_dim(okeys, &ord_sel, &mut stats);
 
+    // lineitem: l_shipdate > pivot, joined to surviving orders.
     let li = &db.lineitem;
     let ship = li.col("l_shipdate").as_i32();
     let lok = li.col("l_orderkey").as_i64();
     let price = li.col("l_extendedprice").as_f64();
     let disc = li.col("l_discount").as_f64();
-    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
-        let mut st = ExecStats::default();
-        st.scan(hi - lo, 4 + 8 * 3);
-        let mut g: GroupBy<1> = GroupBy::with_capacity(256);
-        for i in lo..hi {
-            if ship[i] > pivot && ord_map.probe_first(lok[i]).is_some() {
-                g.update(lok[i], [price[i] * (1.0 - disc[i])]);
-            }
+    let pred = Predicate::i32_range(ship, pivot + 1, i32::MAX);
+    let eval: RowEval<'a> = Box::new(move |i| {
+        if ord_map.probe_first(lok[i]).is_some() {
+            Some((lok[i], acc1(price[i] * (1.0 - disc[i]))))
+        } else {
+            None
         }
-        st.ht_bytes += g.bytes();
-        st.rows_out += g.groups.len() as u64;
-        Partial::from_groupby(&g, st)
     });
-    (kernel, stats)
+    (Compiled { pred, payload_bytes: 8 * 3, eval, groups_hint: 256 }, stats)
 }
 
-fn morsel_finalize(db: &TpchDb, p: &Partial) -> Vec<Row> {
+fn finalize(db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
     let odate = db.orders.col("o_orderdate").as_i32();
     let mut items: Vec<(i64, f64)> = (0..p.len()).map(|i| (p.keys[i], p.acc(i)[0])).collect();
     top_k_desc(&mut items, 10);
     items
         .into_iter()
         .map(|(k, rev)| {
+            // orderkey is dense 1..=N → direct date lookup.
             vec![Value::Int(k), Value::Float(rev), Value::Int(odate[(k - 1) as usize] as i64)]
         })
         .collect()
+}
+
+/// Single-threaded reference execution (engine-driven).
+pub fn run(db: &TpchDb) -> QueryOutput {
+    engine::run_serial(db, &plan_spec())
 }
 
 /// Row-at-a-time oracle.

@@ -5,8 +5,8 @@
 //! co-nationality constraint makes it the join-heaviest query in the set.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
-use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats, GroupBy, JoinMap};
+use crate::analytics::engine::{self, acc1, Compiled, HashJoinTable, PlanSpec, Predicate, RowEval};
+use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::{TpchDb, NATIONS, REGIONS};
 
@@ -27,10 +27,17 @@ fn region_nations() -> Vec<i64> {
         .collect()
 }
 
-pub fn run(db: &TpchDb) -> QueryOutput {
+/// The one Q5 plan: customer/order/supplier hash tables built once at
+/// compile time; the kernel probes both sides per lineitem and sums
+/// revenue per nation where customer and supplier nations agree.
+pub(crate) fn plan_spec() -> PlanSpec {
+    PlanSpec { name: "q5", width: 1, compile, finalize }
+}
+
+fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let mut stats = ExecStats::default();
-    let (lo, hi) = window();
-    let asia: Vec<i64> = region_nations();
+    let (lo_d, hi_d) = window();
+    let asia = region_nations();
     let in_asia = |nk: i64| asia.contains(&nk);
 
     // customer nation lookup (custkey → nationkey) for ASIA customers.
@@ -42,96 +49,9 @@ pub fn run(db: &TpchDb) -> QueryOutput {
         .into_iter()
         .filter(|&i| in_asia(cnat[i as usize] as i64))
         .collect();
-    let cust_map = JoinMap::build(ckeys, &cust_sel);
-    stats.ht_bytes += cust_map.bytes();
+    let cust_map = HashJoinTable::build_dim(ckeys, &cust_sel, &mut stats);
 
-    // orders in window with ASIA customers; record order → cust nation.
-    let orders = &db.orders;
-    let odate = orders.col("o_orderdate").as_i32();
-    let ocust = orders.col("o_custkey").as_i64();
-    let okeys = orders.col("o_orderkey").as_i64();
-    stats.scan(orders.len(), 4);
-    let ord_sel = filter_i32_range(&all_rows(orders.len()), odate, lo, hi);
-    stats.scan(ord_sel.len(), 16);
-    let mut ord_nation: Vec<(u32, i32)> = Vec::new(); // (order row, cust nation)
-    for &o in &ord_sel {
-        if let Some(crow) = cust_map.probe_first(ocust[o as usize]) {
-            ord_nation.push((o, cnat[crow as usize]));
-        }
-    }
-    let ord_rows: Vec<u32> = ord_nation.iter().map(|(o, _)| *o).collect();
-    let ord_map = JoinMap::build(okeys, &ord_rows);
-    stats.ht_bytes += ord_map.bytes();
-    // order row → nation (dense side lookup).
-    let mut orow_nation = vec![-1i32; orders.len()];
-    for (o, nk) in &ord_nation {
-        orow_nation[*o as usize] = *nk;
-    }
-
-    // supplier nation lookup.
-    let sup = &db.supplier;
-    let skeys = sup.col("s_suppkey").as_i64();
-    let snat = sup.col("s_nationkey").as_i32();
-    stats.scan(sup.len(), 12);
-    let sup_map = JoinMap::build(skeys, &all_rows(sup.len()));
-    stats.ht_bytes += sup_map.bytes();
-
-    // lineitem probe.
-    let li = &db.lineitem;
-    let lok = li.col("l_orderkey").as_i64();
-    let lsk = li.col("l_suppkey").as_i64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-    stats.scan(li.len(), 8 * 4);
-
-    let mut g: GroupBy<1> = GroupBy::with_capacity(32);
-    for i in 0..li.len() {
-        if let Some(orow) = ord_map.probe_first(lok[i]) {
-            let c_nat = orow_nation[orow as usize];
-            if let Some(srow) = sup_map.probe_first(lsk[i]) {
-                let s_nat = snat[srow as usize];
-                if s_nat == c_nat {
-                    g.update(s_nat as i64, [price[i] * (1.0 - disc[i])]);
-                }
-            }
-        }
-    }
-    stats.ht_bytes += g.bytes();
-    stats.rows_out = g.groups.len() as u64;
-
-    let mut rows: Vec<Row> = g
-        .groups
-        .iter()
-        .map(|(nk, s, _)| vec![Value::Str(NATIONS[*nk as usize].0.to_string()), Value::Float(s[0])])
-        .collect();
-    rows.sort_by(|a, b| b[1].as_f64().partial_cmp(&a[1].as_f64()).unwrap());
-    QueryOutput { rows, stats }
-}
-
-/// Morsel plan: customer/order/supplier maps built once (broadcast
-/// side); morsels probe both maps per lineitem and sum revenue per
-/// nation where customer and supplier nations agree.
-pub(crate) fn morsel_plan() -> MorselPlan {
-    MorselPlan { width: 1, prepare: morsel_prepare, finalize: morsel_finalize }
-}
-
-fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
-    let mut stats = ExecStats::default();
-    let (lo_d, hi_d) = window();
-    let asia = region_nations();
-    let in_asia = |nk: i64| asia.contains(&nk);
-
-    let cust = &db.customer;
-    let ckeys = cust.col("c_custkey").as_i64();
-    let cnat = cust.col("c_nationkey").as_i32();
-    stats.scan(cust.len(), 12);
-    let cust_sel: Vec<u32> = all_rows(cust.len())
-        .into_iter()
-        .filter(|&i| in_asia(cnat[i as usize] as i64))
-        .collect();
-    let cust_map = JoinMap::build(ckeys, &cust_sel);
-    stats.ht_bytes += cust_map.bytes();
-
+    // orders in window with ASIA customers; record order row → nation.
     let orders = &db.orders;
     let odate = orders.col("o_orderdate").as_i32();
     let ocust = orders.col("o_custkey").as_i64();
@@ -147,43 +67,34 @@ fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
             orow_nation[o as usize] = cnat[crow as usize];
         }
     }
-    let ord_map = JoinMap::build(okeys, &ord_rows);
-    stats.ht_bytes += ord_map.bytes();
+    let ord_map = HashJoinTable::build_dim(okeys, &ord_rows, &mut stats);
 
+    // supplier nation lookup.
     let sup = &db.supplier;
     let skeys = sup.col("s_suppkey").as_i64();
     let snat = sup.col("s_nationkey").as_i32();
     stats.scan(sup.len(), 12);
-    let sup_map = JoinMap::build(skeys, &all_rows(sup.len()));
-    stats.ht_bytes += sup_map.bytes();
+    let sup_map = HashJoinTable::build_dim(skeys, &all_rows(sup.len()), &mut stats);
 
+    // lineitem probe.
     let li = &db.lineitem;
     let lok = li.col("l_orderkey").as_i64();
     let lsk = li.col("l_suppkey").as_i64();
     let price = li.col("l_extendedprice").as_f64();
     let disc = li.col("l_discount").as_f64();
-    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
-        let mut st = ExecStats::default();
-        st.scan(hi - lo, 8 * 4);
-        let mut g: GroupBy<1> = GroupBy::with_capacity(32);
-        for i in lo..hi {
-            if let Some(orow) = ord_map.probe_first(lok[i]) {
-                let c_nat = orow_nation[orow as usize];
-                if let Some(srow) = sup_map.probe_first(lsk[i]) {
-                    if snat[srow as usize] == c_nat {
-                        g.update(c_nat as i64, [price[i] * (1.0 - disc[i])]);
-                    }
-                }
-            }
+    let eval: RowEval<'a> = Box::new(move |i| {
+        let orow = ord_map.probe_first(lok[i])?;
+        let c_nat = orow_nation[orow as usize];
+        let srow = sup_map.probe_first(lsk[i])?;
+        if snat[srow as usize] != c_nat {
+            return None;
         }
-        st.ht_bytes += g.bytes();
-        st.rows_out += g.groups.len() as u64;
-        Partial::from_groupby(&g, st)
+        Some((c_nat as i64, acc1(price[i] * (1.0 - disc[i]))))
     });
-    (kernel, stats)
+    (Compiled { pred: Predicate::True, payload_bytes: 8 * 4, eval, groups_hint: 32 }, stats)
 }
 
-fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
+fn finalize(_db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
     let mut rows: Vec<Row> = (0..p.len())
         .map(|i| {
             vec![
@@ -194,6 +105,11 @@ fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
         .collect();
     rows.sort_by(|a, b| b[1].as_f64().partial_cmp(&a[1].as_f64()).unwrap());
     rows
+}
+
+/// Single-threaded reference execution (engine-driven).
+pub fn run(db: &TpchDb) -> QueryOutput {
+    engine::run_serial(db, &plan_spec())
 }
 
 /// Row-at-a-time oracle.

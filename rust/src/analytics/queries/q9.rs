@@ -6,8 +6,8 @@
 //! substring filter on part names.
 
 use crate::analytics::column::days_to_date;
-use crate::analytics::morsel::{MorselPlan, Partial, PartialFn};
-use crate::analytics::ops::{all_rows, ExecStats, GroupBy, JoinMap};
+use crate::analytics::engine::{self, acc1, Compiled, HashJoinTable, PlanSpec, Predicate, RowEval};
+use crate::analytics::ops::{all_rows, ExecStats};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::{TpchDb, NATIONS};
 
@@ -19,7 +19,14 @@ fn ps_key(partkey: i64, suppkey: i64) -> i64 {
     (partkey << 21) | suppkey
 }
 
-pub fn run(db: &TpchDb) -> QueryOutput {
+/// The one Q9 plan: part/partsupp/supplier hash tables built once at
+/// compile time; the kernel runs the full probe chain per lineitem and
+/// sums profit per (nation, year).
+pub(crate) fn plan_spec() -> PlanSpec {
+    PlanSpec { name: "q9", width: 1, compile, finalize }
+}
+
+fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let mut stats = ExecStats::default();
 
     // parts with COLOR in the name.
@@ -32,8 +39,7 @@ pub fn run(db: &TpchDb) -> QueryOutput {
         .into_iter()
         .filter(|&i| color_code[codes[i as usize] as usize])
         .collect();
-    let part_map = JoinMap::build(pkeys, &part_sel);
-    stats.ht_bytes += part_map.bytes();
+    let part_map = HashJoinTable::build_dim(pkeys, &part_sel, &mut stats);
 
     // partsupp composite index → supplycost.
     let ps = &db.partsupp;
@@ -42,116 +48,20 @@ pub fn run(db: &TpchDb) -> QueryOutput {
     let ps_cost = ps.col("ps_supplycost").as_f64();
     stats.scan(ps.len(), 24);
     let ps_keys: Vec<i64> = (0..ps.len()).map(|i| ps_key(ps_pk[i], ps_sk[i])).collect();
-    let ps_map = JoinMap::build(&ps_keys, &all_rows(ps.len()));
-    stats.ht_bytes += ps_map.bytes();
+    let ps_map = HashJoinTable::build_dim(&ps_keys, &all_rows(ps.len()), &mut stats);
 
     // supplier → nation.
     let sup = &db.supplier;
     let skeys = sup.col("s_suppkey").as_i64();
     let snat = sup.col("s_nationkey").as_i32();
     stats.scan(sup.len(), 12);
-    let sup_map = JoinMap::build(skeys, &all_rows(sup.len()));
-    stats.ht_bytes += sup_map.bytes();
+    let sup_map = HashJoinTable::build_dim(skeys, &all_rows(sup.len()), &mut stats);
 
     // orders → year (dense array: orderkey is 1..=N).
-    let orders = &db.orders;
-    let odate = orders.col("o_orderdate").as_i32();
-    stats.scan(orders.len(), 4);
-
-    // lineitem probe.
-    let li = &db.lineitem;
-    let lok = li.col("l_orderkey").as_i64();
-    let lpk = li.col("l_partkey").as_i64();
-    let lsk = li.col("l_suppkey").as_i64();
-    let qty = li.col("l_quantity").as_f64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-    stats.scan(li.len(), 8 * 6);
-
-    let mut g: GroupBy<1> = GroupBy::with_capacity(256);
-    for i in 0..li.len() {
-        if part_map.probe_first(lpk[i]).is_none() {
-            continue;
-        }
-        let Some(ps_row) = ps_map.probe_first(ps_key(lpk[i], lsk[i])) else {
-            continue;
-        };
-        let Some(srow) = sup_map.probe_first(lsk[i]) else {
-            continue;
-        };
-        let nation = snat[srow as usize] as i64;
-        let (year, _, _) = days_to_date(odate[(lok[i] - 1) as usize]);
-        let profit = price[i] * (1.0 - disc[i]) - ps_cost[ps_row as usize] * qty[i];
-        g.update((nation << 16) | year as i64, [profit]);
-    }
-    stats.ht_bytes += g.bytes();
-    stats.rows_out = g.groups.len() as u64;
-
-    let mut rows: Vec<Row> = g
-        .groups
-        .iter()
-        .map(|(key, s, _)| {
-            vec![
-                Value::Str(NATIONS[(key >> 16) as usize].0.to_string()),
-                Value::Int(key & 0xffff),
-                Value::Float(s[0]),
-            ]
-        })
-        .collect();
-    rows.sort_by(|a, b| {
-        let na = match &a[0] {
-            Value::Str(s) => s.clone(),
-            _ => unreachable!(),
-        };
-        let nb = match &b[0] {
-            Value::Str(s) => s.clone(),
-            _ => unreachable!(),
-        };
-        na.cmp(&nb).then(b[1].as_f64().partial_cmp(&a[1].as_f64()).unwrap())
-    });
-    QueryOutput { rows, stats }
-}
-
-/// Morsel plan: part/partsupp/supplier maps built once; morsels run the
-/// full probe chain per lineitem and sum profit per (nation, year).
-pub(crate) fn morsel_plan() -> MorselPlan {
-    MorselPlan { width: 1, prepare: morsel_prepare, finalize: morsel_finalize }
-}
-
-fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
-    let mut stats = ExecStats::default();
-
-    let part = &db.part;
-    let (dict, codes) = part.col("p_name").as_str_codes();
-    stats.scan(part.len(), 4);
-    let color_code: Vec<bool> = dict.iter().map(|s| s.contains(COLOR)).collect();
-    let pkeys = part.col("p_partkey").as_i64();
-    let part_sel: Vec<u32> = all_rows(part.len())
-        .into_iter()
-        .filter(|&i| color_code[codes[i as usize] as usize])
-        .collect();
-    let part_map = JoinMap::build(pkeys, &part_sel);
-    stats.ht_bytes += part_map.bytes();
-
-    let ps = &db.partsupp;
-    let ps_pk = ps.col("ps_partkey").as_i64();
-    let ps_sk = ps.col("ps_suppkey").as_i64();
-    let ps_cost = ps.col("ps_supplycost").as_f64();
-    stats.scan(ps.len(), 24);
-    let ps_keys: Vec<i64> = (0..ps.len()).map(|i| ps_key(ps_pk[i], ps_sk[i])).collect();
-    let ps_map = JoinMap::build(&ps_keys, &all_rows(ps.len()));
-    stats.ht_bytes += ps_map.bytes();
-
-    let sup = &db.supplier;
-    let skeys = sup.col("s_suppkey").as_i64();
-    let snat = sup.col("s_nationkey").as_i32();
-    stats.scan(sup.len(), 12);
-    let sup_map = JoinMap::build(skeys, &all_rows(sup.len()));
-    stats.ht_bytes += sup_map.bytes();
-
     let odate = db.orders.col("o_orderdate").as_i32();
     stats.scan(db.orders.len(), 4);
 
+    // lineitem probe chain.
     let li = &db.lineitem;
     let lok = li.col("l_orderkey").as_i64();
     let lpk = li.col("l_partkey").as_i64();
@@ -159,33 +69,19 @@ fn morsel_prepare<'a>(db: &'a TpchDb) -> (PartialFn<'a>, ExecStats) {
     let qty = li.col("l_quantity").as_f64();
     let price = li.col("l_extendedprice").as_f64();
     let disc = li.col("l_discount").as_f64();
-    let kernel: PartialFn<'a> = Box::new(move |lo, hi| {
-        let mut st = ExecStats::default();
-        st.scan(hi - lo, 8 * 6);
-        let mut g: GroupBy<1> = GroupBy::with_capacity(256);
-        for i in lo..hi {
-            if part_map.probe_first(lpk[i]).is_none() {
-                continue;
-            }
-            let Some(ps_row) = ps_map.probe_first(ps_key(lpk[i], lsk[i])) else {
-                continue;
-            };
-            let Some(srow) = sup_map.probe_first(lsk[i]) else {
-                continue;
-            };
-            let nation = snat[srow as usize] as i64;
-            let (year, _, _) = days_to_date(odate[(lok[i] - 1) as usize]);
-            let profit = price[i] * (1.0 - disc[i]) - ps_cost[ps_row as usize] * qty[i];
-            g.update((nation << 16) | year as i64, [profit]);
-        }
-        st.ht_bytes += g.bytes();
-        st.rows_out += g.groups.len() as u64;
-        Partial::from_groupby(&g, st)
+    let eval: RowEval<'a> = Box::new(move |i| {
+        part_map.probe_first(lpk[i])?;
+        let ps_row = ps_map.probe_first(ps_key(lpk[i], lsk[i]))?;
+        let srow = sup_map.probe_first(lsk[i])?;
+        let nation = snat[srow as usize] as i64;
+        let (year, _, _) = days_to_date(odate[(lok[i] - 1) as usize]);
+        let profit = price[i] * (1.0 - disc[i]) - ps_cost[ps_row as usize] * qty[i];
+        Some(((nation << 16) | year as i64, acc1(profit)))
     });
-    (kernel, stats)
+    (Compiled { pred: Predicate::True, payload_bytes: 8 * 6, eval, groups_hint: 256 }, stats)
 }
 
-fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
+fn finalize(_db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
     let mut rows: Vec<Row> = (0..p.len())
         .map(|i| {
             let key = p.keys[i];
@@ -208,6 +104,11 @@ fn morsel_finalize(_db: &TpchDb, p: &Partial) -> Vec<Row> {
         na.cmp(&nb).then(b[1].as_f64().partial_cmp(&a[1].as_f64()).unwrap())
     });
     rows
+}
+
+/// Single-threaded reference execution (engine-driven).
+pub fn run(db: &TpchDb) -> QueryOutput {
+    engine::run_serial(db, &plan_spec())
 }
 
 /// Row-at-a-time oracle.

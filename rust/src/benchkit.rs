@@ -172,7 +172,12 @@ impl Bench {
 
     /// Record a model-derived (non-timed) row — used by the analytic
     /// reproductions (cost model, projections).
-    pub fn row(&mut self, name: &str, value: impl std::fmt::Display, detail: impl std::fmt::Display) {
+    pub fn row(
+        &mut self,
+        name: &str,
+        value: impl std::fmt::Display,
+        detail: impl std::fmt::Display,
+    ) {
         self.rows.push(Row {
             name: name.to_string(),
             value: value.to_string(),
@@ -197,6 +202,55 @@ impl Bench {
     pub fn finish(self) {
         println!("{}", self.report());
     }
+
+    /// Serialize the report rows as a JSON array (machine-readable bench
+    /// artifacts; no serde offline, so the writer is hand-rolled).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let _ = write!(
+                s,
+                "  {{\"name\": \"{}\", \"value\": \"{}\", \"detail\": \"{}\"}}",
+                json_escape(&r.name),
+                json_escape(&r.value),
+                json_escape(&r.detail)
+            );
+            s.push_str(if i + 1 < self.rows.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("]\n");
+        s
+    }
+
+    /// Print the report and also write it as JSON to `path` (e.g.
+    /// `BENCH_hotpath.json`). A write failure is reported on stderr but
+    /// does not fail the bench.
+    pub fn finish_json(self, path: &str) {
+        println!("{}", self.report());
+        if let Err(e) = std::fs::write(path, self.to_json()) {
+            eprintln!("warning: could not write {path}: {e}");
+        } else {
+            println!("(wrote {path})");
+        }
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Prevent the optimizer from eliding a computed value (stable-rust
@@ -256,5 +310,25 @@ mod tests {
         let rep = b.report();
         assert!(rep.contains("cost_ratio"));
         assert!(rep.contains("2.31x"));
+    }
+
+    #[test]
+    fn json_report_escapes_and_lists_rows() {
+        let mut b = Bench::new("t");
+        b.row("a \"quoted\" name", "1.0", "line1\nline2");
+        b.row("plain", "2 GB/s", "ok");
+        let j = b.to_json();
+        assert!(j.starts_with("[\n") && j.ends_with("]\n"), "{j}");
+        assert!(j.contains("a \\\"quoted\\\" name"));
+        assert!(j.contains("line1\\nline2"));
+        assert!(j.contains("\"value\": \"2 GB/s\""));
+        // Two rows → exactly one separating comma line.
+        assert_eq!(j.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn json_escape_controls() {
+        assert_eq!(json_escape("a\tb\\c"), "a\\tb\\\\c");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
     }
 }

@@ -71,7 +71,12 @@ impl Command {
     }
 
     /// Register a `--key value` option.
-    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
         self.opts.push(OptSpec { name, help, default, is_flag: false });
         self
     }

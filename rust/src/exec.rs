@@ -209,6 +209,27 @@ where
     parallel_map_chunks(len, chunk, threads, |s, e| f(s, e));
 }
 
+/// Selection-vector-aware variant of [`parallel_map_chunks`]: splits a
+/// selection vector (row ids surviving a predicate) into contiguous
+/// `chunk`-sized slices and maps each on up to `threads` scoped threads,
+/// collecting results **in slice order**.
+///
+/// Where [`parallel_map_chunks`] balances raw row ranges, this balances
+/// *surviving* rows: after a selective predicate the survivors may
+/// cluster in a few ranges, and slicing the selection spreads the
+/// downstream (aggregation/probe) work evenly across threads. The
+/// engine's parallel driver uses it for the aggregate phase of every
+/// query.
+pub fn parallel_map_sel_chunks<R, F>(sel: &[u32], chunk: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(&[u32]) -> R + Sync,
+{
+    let chunk = chunk.max(1);
+    let slices: Vec<&[u32]> = sel.chunks(chunk).collect();
+    parallel_map(slices, threads, |s| f(s))
+}
+
 /// One scheduled timer entry.
 struct TimerEntry {
     deadline: Instant,
@@ -387,6 +408,31 @@ mod tests {
             }
         });
         assert!(seen.into_inner().unwrap().iter().all(|x| *x));
+    }
+
+    #[test]
+    fn parallel_map_sel_chunks_ordered_and_complete() {
+        let sel: Vec<u32> = (0..101).map(|i| i * 3).collect();
+        let out = parallel_map_sel_chunks(&sel, 7, 4, |s| s.to_vec());
+        assert_eq!(out.concat(), sel, "slice order or content broken");
+        assert_eq!(out.len(), 101usize.div_ceil(7));
+        for (i, s) in out.iter().enumerate() {
+            let want = if i == out.len() - 1 { 101 % 7 } else { 7 };
+            assert_eq!(s.len(), if want == 0 { 7 } else { want });
+        }
+    }
+
+    #[test]
+    fn parallel_map_sel_chunks_edges() {
+        // Empty selection → no slices.
+        let out: Vec<usize> = parallel_map_sel_chunks(&[], 8, 4, |s| s.len());
+        assert!(out.is_empty());
+        // Single row.
+        let out = parallel_map_sel_chunks(&[42], 8, 4, |s| s.to_vec());
+        assert_eq!(out, vec![vec![42]]);
+        // chunk = 0 clamps to 1.
+        let out = parallel_map_sel_chunks(&[1, 2, 3], 0, 2, |s| s.len());
+        assert_eq!(out, vec![1, 1, 1]);
     }
 
     #[test]

@@ -90,8 +90,8 @@ impl LovelockGnn {
             ..self.base
         };
         let compute = gpus_per_node * node.compute_mbps_per_gpu;
-        let network =
-            (self.nic_gbps_each / 8.0) * 1e9 / (self.base.fetch_bytes_per_mb * (1.0 - self.base.cache_hit));
+        let network = (self.nic_gbps_each / 8.0) * 1e9
+            / (self.base.fetch_bytes_per_mb * (1.0 - self.base.cache_hit));
         self.phi as f64 * compute.min(network)
     }
 

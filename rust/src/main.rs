@@ -271,12 +271,13 @@ fn cmd_dist(args: &lovelock::cli::Args) -> lovelock::Result<()> {
         .run(&db, &query)?;
     let (c, s, i) = r.breakdown();
     println!(
-        "{query} on {name}: {} rows; sim total {:.3}s = cpu {:.0}% shuffle {:.0}% io {:.0}%; shuffled {} KB",
+        "{query} on {name}: {} rows; sim total {:.3}s = cpu {:.0}% shuffle {:.0}% io {:.0}%; exchanged {} KB, {} KB to leader",
         r.rows.len(),
         r.total_secs(),
         c * 100.0,
         s * 100.0,
         i * 100.0,
+        r.exchange_bytes / 1000,
         r.shuffle_bytes / 1000
     );
     Ok(())

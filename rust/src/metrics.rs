@@ -87,7 +87,9 @@ impl Histogram {
         let bits = v.to_bits();
         let mut cur = self.max_bits.load(Ordering::Relaxed);
         while bits > cur {
-            match self.max_bits.compare_exchange_weak(cur, bits, Ordering::Relaxed, Ordering::Relaxed)
+            match self
+                .max_bits
+                .compare_exchange_weak(cur, bits, Ordering::Relaxed, Ordering::Relaxed)
             {
                 Ok(_) => break,
                 Err(c) => cur = c,

@@ -108,7 +108,8 @@ pub fn vec_of<S: Strategy>(elem: S, min_len: usize, max_len: usize) -> VecOf<S> 
 impl<S: Strategy> Strategy for VecOf<S> {
     type Value = Vec<S::Value>;
     fn generate(&self, rng: &mut Pcg64) -> Vec<S::Value> {
-        let len = self.min_len + rng.gen_range_u64((self.max_len - self.min_len + 1) as u64) as usize;
+        let span = (self.max_len - self.min_len + 1) as u64;
+        let len = self.min_len + rng.gen_range_u64(span) as usize;
         (0..len).map(|_| self.elem.generate(rng)).collect()
     }
     fn shrink(&self, v: &Vec<S::Value>) -> Vec<Vec<S::Value>> {

@@ -74,10 +74,14 @@ impl Endpoint {
                                 let payload = h(&msg);
                                 Message { method: msg.method, id: msg.id, payload }.encode()
                             }
-                            None => Message { method: u32::MAX, id: msg.id, payload: b"no such method".to_vec() }
-                                .encode(),
+                            None => {
+                                let payload = b"no such method".to_vec();
+                                Message { method: u32::MAX, id: msg.id, payload }.encode()
+                            }
                         },
-                        Err(e) => Message { method: u32::MAX, id: 0, payload: e.into_bytes() }.encode(),
+                        Err(e) => {
+                            Message { method: u32::MAX, id: 0, payload: e.into_bytes() }.encode()
+                        }
                     };
                     let _ = reply_tx.send(resp);
                 }

@@ -191,21 +191,111 @@ fn prop_distributed_q6_invariant_to_worker_count() {
 }
 
 #[test]
-fn prop_groupby_total_count_conserved() {
-    use lovelock::analytics::ops::GroupBy;
+fn prop_hashagg_total_count_conserved() {
+    use lovelock::analytics::engine::HashAgg;
     let strat = vec_of(int_range(-50, 50), 0, 400);
-    check("groupby_conservation", &strat, |keys| {
-        let mut g: GroupBy<1> = GroupBy::with_capacity(8);
+    check("hashagg_conservation", &strat, |keys| {
+        let mut g = HashAgg::with_capacity(1, 8);
         for &k in keys {
-            g.update(k, [1.0]);
+            g.update(k, &[1.0]);
         }
-        let total: u64 = g.groups.iter().map(|(_, _, c)| c).sum();
+        let p = g.into_partial();
+        let total: u64 = p.counts.iter().sum();
         if total != keys.len() as u64 {
             return Err(format!("{total} != {}", keys.len()));
         }
-        let sum: f64 = g.groups.iter().map(|(_, s, _)| s[0]).sum();
+        let sum: f64 = p.accs.iter().sum();
         if (sum - keys.len() as f64).abs() > 1e-9 {
             return Err("sum mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partial_codec_roundtrip() {
+    // The shuffle wire codec: encode→decode is the identity on every
+    // (width, groups) shape the engine can produce.
+    use lovelock::analytics::engine::{HashAgg, Partial};
+    let strat = pair_of(
+        int_range(1, 5),
+        vec_of(pair_of(int_range(-1000, 1000), float_range(-1e6, 1e6)), 0, 64),
+    );
+    check("partial_codec_roundtrip", &strat, |(width, rows)| {
+        let w = *width as usize;
+        let mut g = HashAgg::with_capacity(w, 8);
+        for (k, v) in rows {
+            let vals: Vec<f64> = (0..w).map(|j| v + j as f64).collect();
+            g.update(*k, &vals);
+        }
+        let p = g.into_partial();
+        let d = Partial::decode(&p.encode()).map_err(|e| e.to_string())?;
+        if d.width != p.width || d.keys != p.keys || d.accs != p.accs || d.counts != p.counts {
+            return Err(format!("roundtrip mismatch at width {w}, {} groups", p.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_then_merge_equals_merge_all() {
+    // The distributed exchange invariant: partitioning every worker
+    // partial by key, pre-merging per partition (worker order), and
+    // merging the partition results must equal merging the raw partials
+    // directly — bit-for-bit, since each key's contributions meet in the
+    // same order on both routes.
+    use lovelock::analytics::engine::{HashAgg, Merger, Partial};
+    use std::collections::BTreeMap;
+    let strat = pair_of(
+        int_range(1, 8),
+        vec_of(pair_of(int_range(-40, 40), float_range(0.0, 100.0)), 0, 80),
+    );
+    check("partition_then_merge", &strat, |(parts, rows)| {
+        let p_count = *parts as usize;
+        // One "worker" partial per 10 rows.
+        let mut partials: Vec<Partial> = Vec::new();
+        for chunk in rows.chunks(10) {
+            let mut g = HashAgg::with_capacity(2, 8);
+            for (k, v) in chunk {
+                g.update(*k, &[*v, 1.0]);
+            }
+            partials.push(g.into_partial());
+        }
+        // Route A: leader merges every raw partial.
+        let mut direct = Merger::new(2);
+        for p in &partials {
+            direct.absorb(p).map_err(|e| e.to_string())?;
+        }
+        let direct = direct.into_partial();
+        // Route B: hash-partition each partial, pre-merge per partition
+        // in worker order, then merge the partition results.
+        let mut per_part: Vec<Merger> = (0..p_count).map(|_| Merger::new(2)).collect();
+        for p in &partials {
+            for (pi, part) in p.partition_by_key(p_count).iter().enumerate() {
+                per_part[pi].absorb(part).map_err(|e| e.to_string())?;
+            }
+        }
+        let mut leader = Merger::new(2);
+        for m in per_part {
+            leader.absorb(&m.into_partial()).map_err(|e| e.to_string())?;
+        }
+        let exchanged = leader.into_partial();
+        // Compare as key → (accs, count) maps (group order differs by
+        // construction; contents must be exactly equal).
+        let as_map = |p: &Partial| -> BTreeMap<i64, (Vec<u64>, u64)> {
+            (0..p.len())
+                .map(|i| {
+                    let bits: Vec<u64> = p.acc(i).iter().map(|a| a.to_bits()).collect();
+                    (p.keys[i], (bits, p.counts[i]))
+                })
+                .collect()
+        };
+        if as_map(&direct) != as_map(&exchanged) {
+            return Err(format!(
+                "exchange diverged: {} direct vs {} exchanged groups",
+                direct.len(),
+                exchanged.len()
+            ));
         }
         Ok(())
     });
