@@ -34,6 +34,21 @@ fi
 echo "==> cargo test -q"
 cargo test -q
 
+if [ "${1:-}" != "quick" ]; then
+    # Bench smoke: run every bench once with the short measurement loop
+    # (LOVELOCK_BENCH_QUICK), so a bench that panics (or drifts from a
+    # changed API) fails CI — timings themselves are not checked. The SF
+    # overrides apply to hotpath (the only bench that generates large
+    # data); its JSON artifact is redirected so the smoke run's tiny-SF
+    # rows never clobber a real BENCH_hotpath.json measurement.
+    for bench in table1 fig3 fig4 table2 cost gnn rpc hotpath; do
+        echo "==> bench smoke: $bench"
+        LOVELOCK_BENCH_QUICK=1 LOVELOCK_BENCH_SF=0.004 LOVELOCK_BENCH_SF_BIG=0.01 \
+            LOVELOCK_BENCH_JSON=/tmp/BENCH_hotpath_smoke.json \
+            cargo bench --bench "$bench" >/dev/null
+    done
+fi
+
 echo "==> cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

@@ -8,7 +8,7 @@
 use lovelock::cli::Command;
 use lovelock::cluster::{ClusterSpec, Role};
 use lovelock::configfmt::Json;
-use lovelock::coordinator::DistributedQuery;
+use lovelock::coordinator::{DistributedQuery, QueryService};
 use lovelock::analytics::{TpchConfig, TpchDb};
 use lovelock::platform::n2d_milan;
 
@@ -29,7 +29,7 @@ fn main() -> lovelock::Result<()> {
     let seed = args.get_u64("seed", 7);
 
     println!("generating TPC-H SF {sf} (seed {seed})…");
-    let db = TpchDb::generate(TpchConfig::new(sf, seed));
+    let db = std::sync::Arc::new(TpchDb::generate(TpchConfig::new(sf, seed)));
     println!("{} lineitems, {} orders\n", db.lineitem.len(), db.orders.len());
 
     let trad = ClusterSpec::traditional(workers, n2d_milan(), Role::LiteCompute);
@@ -72,6 +72,32 @@ fn main() -> lovelock::Result<()> {
         }
         println!();
     }
+    // The session API: submit the whole query set at once and let the
+    // queries interleave over one service's shared scheduler, credits,
+    // and worker endpoints (frames of different queries mix on the wire).
+    let svc = QueryService::new(trad.clone());
+    let t0 = std::time::Instant::now();
+    let batch = ["q1", "q6", "q18", "q3"];
+    let ids: Vec<_> = batch
+        .iter()
+        .map(|q| svc.submit(&db, q))
+        .collect::<lovelock::Result<_>>()?;
+    println!("submitted {} concurrent queries:", batch.len());
+    for (q, id) in batch.iter().zip(ids) {
+        let (rows, r) = svc.wait(id)?;
+        println!(
+            "  {id} {q}: {} rows, {} KB exchanged, {} B control frames",
+            rows.len(),
+            r.exchange_bytes / 1000,
+            r.control_bytes
+        );
+    }
+    println!(
+        "batch wall time {:.1} ms ({:.1} queries/s)\n",
+        t0.elapsed().as_secs_f64() * 1e3,
+        batch.len() as f64 / t0.elapsed().as_secs_f64()
+    );
+
     // Machine-readable run record.
     let record = Json::obj()
         .field("sf", sf)

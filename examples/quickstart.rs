@@ -45,7 +45,7 @@ fn main() -> lovelock::Result<()> {
 
     // 3. Real analytics: generate TPC-H and run Q6 on the native engine,
     //    single-threaded and morsel-parallel (same rows either way).
-    let db = TpchDb::generate(TpchConfig::new(0.01, 42));
+    let db = std::sync::Arc::new(TpchDb::generate(TpchConfig::new(0.01, 42)));
     let native = run_query(&db, "q6").unwrap();
     let revenue = native.rows[0][0].as_f64();
     println!("\nTPC-H SF 0.01: {} lineitems", db.lineitem.len());

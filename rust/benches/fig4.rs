@@ -48,7 +48,7 @@ fn main() {
     }
 
     // End-to-end validation on the simulated clusters.
-    let db = TpchDb::generate(TpchConfig::new(0.02, 4242));
+    let db = std::sync::Arc::new(TpchDb::generate(TpchConfig::new(0.02, 4242)));
     let trad = ClusterSpec::traditional(8, n2d_milan(), Role::LiteCompute);
     let rt = DistributedQuery::new(trad.clone()).run(&db, "q18").unwrap();
     let base = rt.total_secs();

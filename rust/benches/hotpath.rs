@@ -12,14 +12,21 @@ use lovelock::analytics::ops::{
 use lovelock::analytics::{run_query, TpchConfig, TpchDb, QUERY_NAMES};
 use lovelock::benchkit::{black_box, Bench};
 use lovelock::cluster::{ClusterSpec, Role};
-use lovelock::coordinator::DistributedQuery;
+use lovelock::coordinator::{DistributedQuery, QueryService, ServiceConfig};
 use lovelock::platform::n2d_milan;
 use lovelock::prng::Pcg64;
 use lovelock::simnet::{Simulation, Topology};
+use std::sync::Arc;
+
+/// Scale-factor override for CI smoke runs (`LOVELOCK_BENCH_SF`,
+/// `LOVELOCK_BENCH_SF_BIG`).
+fn env_sf(var: &str, default: f64) -> f64 {
+    std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
 
 fn main() {
     let mut b = Bench::new("hot paths");
-    let db = TpchDb::generate(TpchConfig::new(0.02, 9));
+    let db = Arc::new(TpchDb::generate(TpchConfig::new(env_sf("LOVELOCK_BENCH_SF", 0.02), 9)));
     let li_rows = db.lineitem.len() as u64;
 
     // Full single-node queries (engine end to end).
@@ -33,7 +40,7 @@ fn main() {
     // Morsel-driven vs single-threaded engine at SF 0.1 — the speedup
     // rows EXPERIMENTS.md §Morsel records. The morsel path must beat the
     // serial path at ≥4 threads.
-    let big = TpchDb::generate(TpchConfig::new(0.1, 9));
+    let big = TpchDb::generate(TpchConfig::new(env_sf("LOVELOCK_BENCH_SF_BIG", 0.1), 9));
     for q in ["q1", "q6", "q18"] {
         let bytes = run_query(&big, q).unwrap().stats.bytes_scanned;
         b.measure_throughput(&format!("{q} sf0.1 serial"), bytes, || {
@@ -129,9 +136,32 @@ fn main() {
         black_box(DistributedQuery::new(cluster.clone()).run(&db, "q18").unwrap());
     });
 
+    // QueryService session throughput: N simultaneous q6 submissions on
+    // one long-lived service — the concurrency datapoint EXPERIMENTS.md
+    // records (queries/s at --concurrency {1,4,8}).
+    let svc = QueryService::with_config(cluster.clone(), ServiceConfig::default());
+    for conc in [1usize, 4, 8] {
+        let st = b.measure(&format!("service q6 x{conc} concurrent"), || {
+            let ids: Vec<_> = (0..conc).map(|_| svc.submit(&db, "q6").unwrap()).collect();
+            for id in ids {
+                black_box(svc.wait(id).unwrap());
+                svc.retire(id);
+            }
+        });
+        b.row(
+            &format!("service q6 x{conc} queries/s"),
+            format!("{:.1}", conc as f64 / (st.median_ns / 1e9)),
+            format!("median batch {:.2} ms", st.median_ns / 1e6),
+        );
+    }
+
     // dbgen throughput.
     b.measure("dbgen sf=0.01", || {
         black_box(TpchDb::generate(TpchConfig::new(0.01, 1)));
     });
-    b.finish_json("BENCH_hotpath.json");
+    // CI smoke runs redirect the artifact so tiny-SF rows never clobber
+    // a real measurement of BENCH_hotpath.json.
+    let json_path = std::env::var("LOVELOCK_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    b.finish_json(&json_path);
 }

@@ -3,9 +3,7 @@
 //! large-message goodput of our in-process RPC transport.
 
 use lovelock::benchkit::{black_box, Bench};
-use lovelock::rpc::{Endpoint, Handler, RpcModel};
-use std::collections::HashMap;
-use std::sync::Arc;
+use lovelock::rpc::{Dispatch, RpcModel};
 
 fn main() {
     let mut b = Bench::new("RPC per-core throughput (§6)");
@@ -42,16 +40,21 @@ fn main() {
     );
 
     // Measured rows: our in-process transport (single dispatch core).
-    let mut handlers: HashMap<u32, Handler> = HashMap::new();
-    handlers.insert(
-        1,
-        Arc::new(|m: &lovelock::rpc::Message| m.payload[..8.min(m.payload.len())].to_vec()),
-    );
-    let ep = Endpoint::serve(handlers);
+    let ep = Dispatch::new()
+        .on(1, |m: &lovelock::rpc::Message| Ok(m.payload[..8.min(m.payload.len())].to_vec()))
+        .serve();
     let client = ep.client();
 
     let small = vec![7u8; 32];
     b.measure("measured small rpc", || {
+        black_box(client.call(1, small.clone()).unwrap());
+    });
+    // One-way casts: batch + closing call, so the unbounded queue drains
+    // every iteration instead of outrunning the single dispatch core.
+    b.measure("measured 64 casts + flush", || {
+        for _ in 0..64 {
+            black_box(client.cast(1, small.clone()).unwrap());
+        }
         black_box(client.call(1, small.clone()).unwrap());
     });
     let big = vec![7u8; 1 << 20];

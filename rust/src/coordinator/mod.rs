@@ -1,19 +1,25 @@
 //! The Lovelock coordinator — the paper's system contribution at L3.
 //!
 //! A Lovelock cluster has no servers, so cluster-level coordination runs
-//! *on* the smart NICs. This module implements the leader/worker runtime:
+//! *on* the smart NICs — which means leader and workers can only talk
+//! through messages on the fabric. This module implements that runtime:
 //!
+//! * [`protocol`] — the typed leader↔worker wire frames (`PlanFragment`,
+//!   `ExecuteRange`, `PartialFrame`, `Ack`, `ReduceCmd`, `CancelQuery`)
+//!   with exact-inverse codecs layered on [`crate::rpc::Message`];
+//! * [`service`] — [`QueryService`]: submit/poll/wait/cancel sessions
+//!   under which every byte crossing the leader/worker boundary is a
+//!   real encoded message dispatched through [`crate::rpc::Endpoint`]
+//!   handlers, and any number of queries interleave over the shared
+//!   scheduler, backpressure credits, and decode pool;
 //! * [`backpressure`] — credit-based admission so lite-compute nodes with
-//!   16 cores and 48 GB are never overrun (the distributed executor gates
-//!   leader-side partial decoding on it);
+//!   16 cores and 48 GB are never overrun (the leader gates partial
+//!   decoding on it);
 //! * [`scheduler`] — task placement over the node roles of a
-//!   [`crate::cluster::ClusterSpec`] (the distributed executor places its
-//!   worker partitions through it);
-//! * [`shuffle`] — the distributed query executor: morsel-driven partial
-//!   aggregation on real data partitions (worker threads standing in for
-//!   the NIC fleet), wire-format partial results over the RPC substrate,
-//!   and a shuffle/storage overlay on the fabric simulator that yields the
-//!   Fig. 4-style time breakdown for any cluster spec.
+//!   [`crate::cluster::ClusterSpec`] (worker tasks of concurrent queries
+//!   spread over its least-loaded nodes);
+//! * [`shuffle`] — the one-shot compatibility wrapper:
+//!   [`DistributedQuery::run`] = `submit` + `wait`.
 //!
 //! Every TPC-H query runs distributed and produces the same rows as the
 //! single-node engine:
@@ -23,8 +29,9 @@
 //! use lovelock::cluster::{ClusterSpec, Role};
 //! use lovelock::coordinator::DistributedQuery;
 //! use lovelock::platform::n2d_milan;
+//! use std::sync::Arc;
 //!
-//! let db = TpchDb::generate(TpchConfig::new(0.001, 9));
+//! let db = Arc::new(TpchDb::generate(TpchConfig::new(0.001, 9)));
 //! let cluster = ClusterSpec::traditional(2, n2d_milan(), Role::LiteCompute);
 //! let report = DistributedQuery::new(cluster).run(&db, "q6").unwrap();
 //! let local = run_query(&db, "q6").unwrap();
@@ -33,9 +40,13 @@
 //! ```
 
 pub mod backpressure;
+pub mod protocol;
 pub mod scheduler;
+pub mod service;
 pub mod shuffle;
 
 pub use backpressure::Backpressure;
+pub use protocol::QueryId;
 pub use scheduler::{Placement, Scheduler, Task, TaskKind};
-pub use shuffle::{DistQueryReport, DistributedQuery};
+pub use service::{DistQueryReport, QueryService, QueryStatus, ServiceConfig};
+pub use shuffle::DistributedQuery;

@@ -1,0 +1,492 @@
+//! The leader↔worker wire protocol of the distributed query service.
+//!
+//! Lovelock nodes are headless smart NICs: the only way the coordinator
+//! can reach a worker is a message on the fabric. Every frame that
+//! crosses the leader/worker (or worker/worker) boundary is one of the
+//! typed structs below, encoded little-endian into the payload of an
+//! [`crate::rpc::Message`] whose `method` is the frame's `METHOD_*` id,
+//! and delivered through an [`crate::rpc::Endpoint`].
+//!
+//! One query's conversation (see `DESIGN.md §3b` for the state machines):
+//!
+//! ```text
+//! leader → worker  : PlanFragment   announce query, width, morsel size
+//! leader → worker  : ExecuteRange   assign the lineitem row range
+//! worker → worker  : PartialFrame   hash-partitioned partial, partition p
+//!                                   goes to the reducer co-located with
+//!                                   worker p (empty partitions not sent)
+//! worker → leader  : Ack            map report: per-partition frame
+//!                                   bytes, map time, table footprint
+//! leader → reducer : ReduceCmd      which workers' partitions to expect
+//! reducer → leader : PartialFrame   the pre-merged, key-deduplicated
+//!                                   partition (reduce time piggybacked)
+//! leader → worker  : CancelQuery    best-effort abort (frame-boundary
+//!                                   granularity — a mid-map worker
+//!                                   finishes and its output is dropped)
+//! ```
+//!
+//! All codecs are exact inverses (`encode` then `decode` is identity),
+//! property-tested in `rust/tests/properties.rs`.
+
+use crate::error::Result;
+use std::fmt;
+
+/// Method id of [`PlanFragment`] frames.
+pub const METHOD_PLAN: u32 = 0x50;
+/// Method id of [`PartialFrame`] frames (kept from the pre-service
+/// shuffle protocol).
+pub const METHOD_PARTIAL: u32 = 0x51;
+/// Method id of [`ExecuteRange`] frames.
+pub const METHOD_EXECUTE: u32 = 0x52;
+/// Method id of [`Ack`] frames.
+pub const METHOD_ACK: u32 = 0x53;
+/// Method id of [`ReduceCmd`] frames.
+pub const METHOD_REDUCE: u32 = 0x54;
+/// Method id of [`CancelQuery`] frames.
+pub const METHOD_CANCEL: u32 = 0x55;
+
+/// Identifier of one submitted query, unique within a
+/// [`crate::coordinator::service::QueryService`]. Frames of concurrent
+/// queries interleave on the shared endpoints; the id is what keys every
+/// per-query state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct QueryId(pub u64);
+
+impl fmt::Display for QueryId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "q#{}", self.0)
+    }
+}
+
+// ----------------------------------------------------------- wire reader
+
+/// Little-endian payload reader with bounds-checked accessors.
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        crate::ensure!(
+            self.off + n <= self.buf.len(),
+            "truncated frame: need {n} bytes at offset {}, have {}",
+            self.off,
+            self.buf.len() - self.off
+        );
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec()).map_err(crate::error::Error::msg)
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let len = self.u32()? as usize;
+        Ok(self.take(len)?.to_vec())
+    }
+
+    fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let len = self.u32()? as usize;
+        (0..len).map(|_| self.u64()).collect()
+    }
+
+    fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let len = self.u32()? as usize;
+        (0..len).map(|_| self.u32()).collect()
+    }
+
+    fn finish(self) -> Result<()> {
+        crate::ensure!(
+            self.off == self.buf.len(),
+            "trailing garbage: {} bytes past end of frame",
+            self.buf.len() - self.off
+        );
+        Ok(())
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+fn put_vec_u64(out: &mut Vec<u8>, v: &[u64]) {
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_vec_u32(out: &mut Vec<u8>, v: &[u32]) {
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+// ----------------------------------------------------------------- frames
+
+/// Leader → worker: announce a query before any range executes. The
+/// worker stores the fragment and compiles its broadcast context
+/// (dimension hash tables) lazily when the [`ExecuteRange`] arrives.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanFragment {
+    pub query_id: QueryId,
+    /// Query name in [`crate::analytics::queries::QUERY_NAMES`].
+    pub query: String,
+    /// Aggregate accumulator slots per group.
+    pub width: u32,
+    /// Worker count `w` — the fan-out of the partition exchange.
+    pub workers: u32,
+    /// Rows per morsel inside the worker's fold.
+    pub morsel_rows: u64,
+}
+
+impl PlanFragment {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32 + self.query.len());
+        out.extend_from_slice(&self.query_id.0.to_le_bytes());
+        put_str(&mut out, &self.query);
+        out.extend_from_slice(&self.width.to_le_bytes());
+        out.extend_from_slice(&self.workers.to_le_bytes());
+        out.extend_from_slice(&self.morsel_rows.to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self {
+            query_id: QueryId(r.u64()?),
+            query: r.str()?,
+            width: r.u32()?,
+            workers: r.u32()?,
+            morsel_rows: r.u64()?,
+        };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// Leader → worker: execute the query over lineitem rows `[lo, hi)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecuteRange {
+    pub query_id: QueryId,
+    /// Receiving worker's index (also its reducer partition).
+    pub worker: u32,
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl ExecuteRange {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(28);
+        out.extend_from_slice(&self.query_id.0.to_le_bytes());
+        out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.lo.to_le_bytes());
+        out.extend_from_slice(&self.hi.to_le_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self {
+            query_id: QueryId(r.u64()?),
+            worker: r.u32()?,
+            lo: r.u64()?,
+            hi: r.u64()?,
+        };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// Worker → leader: the map phase finished (or failed). `part_bytes[p]`
+/// is the encoded [`PartialFrame`] wire bytes this worker cast to
+/// reducer `p` (0 for empty partitions, which are never sent) — the
+/// leader assembles the exchange matrix from these reports.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Ack {
+    pub query_id: QueryId,
+    pub worker: u32,
+    /// Nanoseconds of host compute the map fold took (≥ 1: a
+    /// measured phase never reports zero).
+    pub map_ns: u64,
+    /// Peak live hash-table footprint of the fold (bytes).
+    pub ht_bytes: u64,
+    /// Exchange frame bytes per reducer partition (length `w`).
+    pub part_bytes: Vec<u64>,
+    /// Empty on success; a failed worker reports why here.
+    pub error: String,
+}
+
+impl Ack {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(40 + 8 * self.part_bytes.len() + self.error.len());
+        out.extend_from_slice(&self.query_id.0.to_le_bytes());
+        out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.map_ns.to_le_bytes());
+        out.extend_from_slice(&self.ht_bytes.to_le_bytes());
+        put_vec_u64(&mut out, &self.part_bytes);
+        put_str(&mut out, &self.error);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self {
+            query_id: QueryId(r.u64()?),
+            worker: r.u32()?,
+            map_ns: r.u64()?,
+            ht_bytes: r.u64()?,
+            part_bytes: r.vec_u64()?,
+            error: r.str()?,
+        };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// Leader → reducer `partition`: every map ack is in; merge the
+/// [`PartialFrame`]s from exactly the workers in `expect` (the ones
+/// whose partition was non-empty) and ship the result to the leader.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReduceCmd {
+    pub query_id: QueryId,
+    pub partition: u32,
+    /// Worker indices whose partition frames to await, ascending.
+    pub expect: Vec<u32>,
+}
+
+impl ReduceCmd {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + 4 * self.expect.len());
+        out.extend_from_slice(&self.query_id.0.to_le_bytes());
+        out.extend_from_slice(&self.partition.to_le_bytes());
+        put_vec_u32(&mut out, &self.expect);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self {
+            query_id: QueryId(r.u64()?),
+            partition: r.u32()?,
+            expect: r.vec_u32()?,
+        };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// A partial aggregate on the wire: worker → reducer during the
+/// exchange, reducer → leader after the pre-merge. `body` is
+/// [`crate::analytics::engine::Partial::encode`] output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartialFrame {
+    pub query_id: QueryId,
+    /// Reducer partition this partial belongs to.
+    pub partition: u32,
+    /// Sender: worker index (exchange hop) or reducer index (leader hop).
+    pub from_worker: u32,
+    /// Reducer → leader only: nanoseconds the pre-merge took.
+    pub reduce_ns: u64,
+    /// Encoded [`crate::analytics::engine::Partial`].
+    pub body: Vec<u8>,
+}
+
+impl PartialFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(28 + self.body.len());
+        out.extend_from_slice(&self.query_id.0.to_le_bytes());
+        out.extend_from_slice(&self.partition.to_le_bytes());
+        out.extend_from_slice(&self.from_worker.to_le_bytes());
+        out.extend_from_slice(&self.reduce_ns.to_le_bytes());
+        put_bytes(&mut out, &self.body);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self {
+            query_id: QueryId(r.u64()?),
+            partition: r.u32()?,
+            from_worker: r.u32()?,
+            reduce_ns: r.u64()?,
+            body: r.bytes()?,
+        };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// Leader → worker: abort a query. Takes effect at frame boundaries
+/// (an endpoint mid-map finishes its fold; the leader discards the
+/// output) — exactly the granularity a single-dispatch-core NIC has.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CancelQuery {
+    pub query_id: QueryId,
+}
+
+impl CancelQuery {
+    pub fn encode(&self) -> Vec<u8> {
+        self.query_id.0.to_le_bytes().to_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self { query_id: QueryId(r.u64()?) };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// Any protocol frame, decoded from a raw [`crate::rpc::Message`] by
+/// method id — the tracing/debugging view of a conversation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Plan(PlanFragment),
+    Execute(ExecuteRange),
+    Ack(Ack),
+    Reduce(ReduceCmd),
+    Partial(PartialFrame),
+    Cancel(CancelQuery),
+}
+
+impl Frame {
+    pub fn decode(msg: &crate::rpc::Message) -> Result<Frame> {
+        match msg.method {
+            METHOD_PLAN => Ok(Frame::Plan(PlanFragment::decode(&msg.payload)?)),
+            METHOD_EXECUTE => Ok(Frame::Execute(ExecuteRange::decode(&msg.payload)?)),
+            METHOD_ACK => Ok(Frame::Ack(Ack::decode(&msg.payload)?)),
+            METHOD_REDUCE => Ok(Frame::Reduce(ReduceCmd::decode(&msg.payload)?)),
+            METHOD_PARTIAL => Ok(Frame::Partial(PartialFrame::decode(&msg.payload)?)),
+            METHOD_CANCEL => Ok(Frame::Cancel(CancelQuery::decode(&msg.payload)?)),
+            m => crate::bail!("unknown protocol method {m:#x}"),
+        }
+    }
+
+    pub fn query_id(&self) -> QueryId {
+        match self {
+            Frame::Plan(f) => f.query_id,
+            Frame::Execute(f) => f.query_id,
+            Frame::Ack(f) => f.query_id,
+            Frame::Reduce(f) => f.query_id,
+            Frame::Partial(f) => f.query_id,
+            Frame::Cancel(f) => f.query_id,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::Message;
+
+    #[test]
+    fn plan_fragment_roundtrip() {
+        let f = PlanFragment {
+            query_id: QueryId(7),
+            query: "q18".into(),
+            width: 2,
+            workers: 8,
+            morsel_rows: 16_384,
+        };
+        assert_eq!(PlanFragment::decode(&f.encode()).unwrap(), f);
+    }
+
+    #[test]
+    fn execute_range_roundtrip() {
+        let f = ExecuteRange { query_id: QueryId(1), worker: 3, lo: 1000, hi: 2000 };
+        assert_eq!(ExecuteRange::decode(&f.encode()).unwrap(), f);
+    }
+
+    #[test]
+    fn ack_roundtrip_with_error_and_parts() {
+        let f = Ack {
+            query_id: QueryId(9),
+            worker: 2,
+            map_ns: 12345,
+            ht_bytes: 1 << 20,
+            part_bytes: vec![0, 64, 0, 1024],
+            error: "".into(),
+        };
+        assert_eq!(Ack::decode(&f.encode()).unwrap(), f);
+        let e = Ack { error: "no plan for q#9".into(), part_bytes: vec![], ..f };
+        assert_eq!(Ack::decode(&e.encode()).unwrap(), e);
+    }
+
+    #[test]
+    fn reduce_cmd_roundtrip() {
+        let f = ReduceCmd { query_id: QueryId(4), partition: 1, expect: vec![0, 2, 5] };
+        assert_eq!(ReduceCmd::decode(&f.encode()).unwrap(), f);
+    }
+
+    #[test]
+    fn partial_frame_roundtrip() {
+        let f = PartialFrame {
+            query_id: QueryId(2),
+            partition: 5,
+            from_worker: 1,
+            reduce_ns: 88,
+            body: vec![1, 2, 3, 4, 5, 6, 7],
+        };
+        assert_eq!(PartialFrame::decode(&f.encode()).unwrap(), f);
+    }
+
+    #[test]
+    fn cancel_roundtrip() {
+        let f = CancelQuery { query_id: QueryId(0xDEAD) };
+        assert_eq!(CancelQuery::decode(&f.encode()).unwrap(), f);
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_trailing_garbage() {
+        let enc = ReduceCmd { query_id: QueryId(4), partition: 1, expect: vec![0, 2] }.encode();
+        assert!(ReduceCmd::decode(&enc[..enc.len() - 1]).is_err());
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(ReduceCmd::decode(&padded).is_err());
+        assert!(PlanFragment::decode(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn frame_decodes_by_method() {
+        let pf = PlanFragment {
+            query_id: QueryId(3),
+            query: "q1".into(),
+            width: 5,
+            workers: 2,
+            morsel_rows: 64,
+        };
+        let msg = Message { method: METHOD_PLAN, id: 1, payload: pf.encode() };
+        match Frame::decode(&msg).unwrap() {
+            Frame::Plan(got) => assert_eq!(got, pf),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        assert_eq!(Frame::decode(&msg).unwrap().query_id(), QueryId(3));
+        let bad = Message { method: 0x99, id: 1, payload: vec![] };
+        assert!(Frame::decode(&bad).is_err());
+    }
+}

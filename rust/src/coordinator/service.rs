@@ -1,0 +1,1345 @@
+//! `QueryService` — the message-native distributed query service.
+//!
+//! The paper's premise is that every "server" is a headless smart NIC:
+//! the leader can only reach a worker with a message on the fabric. This
+//! module is the coordinator's L3 rebuilt on that constraint. Leader and
+//! workers are [`crate::rpc::Endpoint`]s (one single-threaded dispatch
+//! core each, like the §6 measurement) that communicate **exclusively**
+//! through the typed frames of [`super::protocol`]; every partial
+//! aggregate that crosses the leader/worker or worker/worker boundary is
+//! a real encoded [`crate::rpc::Message`], and the observed frame bytes
+//! are what the fabric simulator charges.
+//!
+//! The API is submit/poll/wait/cancel rather than one blocking call, so
+//! any number of queries interleave over the shared [`Scheduler`],
+//! [`Backpressure`] credits, and decode [`ThreadPool`]:
+//!
+//! ```
+//! use lovelock::analytics::{run_query, TpchConfig, TpchDb};
+//! use lovelock::cluster::{ClusterSpec, Role};
+//! use lovelock::coordinator::QueryService;
+//! use lovelock::platform::n2d_milan;
+//! use std::sync::Arc;
+//!
+//! let db = Arc::new(TpchDb::generate(TpchConfig::new(0.001, 9)));
+//! let cluster = ClusterSpec::traditional(2, n2d_milan(), Role::LiteCompute);
+//! let svc = QueryService::new(cluster);
+//! let a = svc.submit(&db, "q6").unwrap();
+//! let b = svc.submit(&db, "q1").unwrap();
+//! let (rows_b, _) = svc.wait(b).unwrap();
+//! let (rows_a, _) = svc.wait(a).unwrap();
+//! assert!(run_query(&db, "q6").unwrap().approx_eq_rows(&rows_a));
+//! assert!(run_query(&db, "q1").unwrap().approx_eq_rows(&rows_b));
+//! ```
+//!
+//! **State machines.** Worker `i` (per query): `Idle → Planned
+//! (PlanFragment) → Mapped (ExecuteRange: fold the range morsel by
+//! morsel, hash-partition, cast PartialFrames to reducers, cast Ack to
+//! leader)`; as reducer `i`: `Collecting (buffer PartialFrames) →
+//! Reduced (ReduceCmd names the expected workers; pre-merge in worker
+//! order, cast the deduplicated partial to the leader)`. Leader (per
+//! query): `Mapping (await w Acks) → Reducing (await one PartialFrame
+//! per non-empty partition) → Done (decode behind backpressure credits,
+//! merge in partition order, finalize, simulate the phase network)`.
+//! Cancellation takes effect at frame boundaries — the granularity a
+//! single-dispatch-core NIC actually has.
+//!
+//! The input tables are *not* messaged: workers read their range of the
+//! shared, immutably attached [`TpchDb`] in place (the disaggregated
+//! storage attach of §5.2, whose read cost is charged by the IO phase of
+//! the simulation). Everything derived from the data crosses as frames.
+
+use crate::analytics::engine::{self, Merger, Partial};
+use crate::analytics::morsel::DEFAULT_MORSEL_ROWS;
+use crate::analytics::queries::Row;
+use crate::analytics::tpch::TpchDb;
+use crate::cluster::ClusterSpec;
+use crate::coordinator::backpressure::Backpressure;
+use crate::coordinator::protocol::{
+    Ack, CancelQuery, ExecuteRange, PartialFrame, PlanFragment, QueryId, ReduceCmd, METHOD_ACK,
+    METHOD_CANCEL, METHOD_EXECUTE, METHOD_PARTIAL, METHOD_PLAN, METHOD_REDUCE,
+};
+use crate::coordinator::scheduler::{Scheduler, Task, TaskKind};
+use crate::error::Result;
+use crate::exec::{JoinHandle, ThreadPool};
+use crate::memsim::{simulate, WorkloadProfile};
+use crate::rpc::{Client, Dispatch, Endpoint};
+use crate::simnet::Simulation;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Distributed execution report: result rows + the simulated breakdown.
+#[derive(Clone, Debug)]
+pub struct DistQueryReport {
+    pub query: String,
+    pub rows: Vec<Row>,
+    pub workers: usize,
+    /// Simulated seconds of per-worker compute (map + reduce makespans).
+    pub compute_secs: f64,
+    /// Simulated seconds for the two shuffle phases (partition exchange
+    /// + pre-merged partials to the leader, control frames included).
+    pub shuffle_secs: f64,
+    /// Simulated seconds for reading input from disaggregated storage.
+    pub io_secs: f64,
+    /// Bytes crossing the fabric in the worker↔worker partition exchange
+    /// (a worker's own partition stays local and is not counted).
+    pub exchange_bytes: u64,
+    /// Bytes shuffled leader-ward: the pre-merged reducer partials.
+    pub shuffle_bytes: u64,
+    /// Control-plane frame bytes (PlanFragment, ExecuteRange, ReduceCmd,
+    /// Ack, CancelQuery) between leader and workers, both directions.
+    pub control_bytes: u64,
+    /// Bytes read from storage.
+    pub input_bytes: u64,
+    /// Host seconds spent computing partials: slowest map + slowest
+    /// reduce, i.e. the critical path through this process's fold work.
+    pub host_compute_secs: f64,
+}
+
+impl DistQueryReport {
+    pub fn total_secs(&self) -> f64 {
+        self.compute_secs + self.shuffle_secs + self.io_secs
+    }
+
+    /// Normalized breakdown (cpu, shuffle, io).
+    pub fn breakdown(&self) -> (f64, f64, f64) {
+        let t = self.total_secs().max(1e-12);
+        (self.compute_secs / t, self.shuffle_secs / t, self.io_secs / t)
+    }
+}
+
+/// Lifecycle snapshot of one submitted query (see [`QueryService::poll`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QueryStatus {
+    /// The id was never issued by this service (or predates it).
+    Unknown,
+    /// Map phase: `acked` of `workers` map reports are in.
+    Mapping { acked: usize, workers: usize },
+    /// Exchange/reduce phase: `received` of `expected` pre-merged
+    /// partition frames have reached the leader.
+    Reducing { received: usize, expected: usize },
+    Done,
+    Failed(String),
+    Cancelled,
+}
+
+/// Service tuning (all fields have sensible zero-ish defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Worker endpoints to spin up (0 = one per cluster node).
+    pub workers: usize,
+    /// Leader decode-pool threads (0 = all cores).
+    pub threads: usize,
+    /// Rows per morsel inside each worker's fold.
+    pub morsel_rows: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { workers: 0, threads: 0, morsel_rows: DEFAULT_MORSEL_ROWS }
+    }
+}
+
+// --------------------------------------------------------------- worker
+
+/// Per-query state a worker holds between PlanFragment and ExecuteRange.
+struct PlanState {
+    query: String,
+    morsel_rows: usize,
+    workers: usize,
+    db: Arc<TpchDb>,
+}
+
+/// Per-query state a worker holds in its reducer role.
+struct ReduceState {
+    /// Worker indices to await (set by ReduceCmd; None until it arrives).
+    expect: Option<Vec<u32>>,
+    /// Buffered partition bodies by sending worker.
+    got: HashMap<u32, Vec<u8>>,
+}
+
+/// One worker node's endpoint state — everything its handlers touch.
+struct WorkerShared {
+    wi: u32,
+    /// Query → attached input tables (the storage layer; see module docs).
+    catalog: Arc<Mutex<HashMap<QueryId, Arc<TpchDb>>>>,
+    plans: Mutex<HashMap<QueryId, PlanState>>,
+    reduces: Mutex<HashMap<QueryId, ReduceState>>,
+    /// Cancelled ids (set + insertion order, oldest evicted first so the
+    /// bound never wipes a *recently* cancelled id whose frames are
+    /// still in flight).
+    cancelled: Mutex<(HashSet<QueryId>, VecDeque<QueryId>)>,
+    /// Clients to every worker endpoint (self included), leader-wired
+    /// after all endpoints exist.
+    peers: OnceLock<Vec<Client>>,
+    leader: OnceLock<Client>,
+}
+
+impl WorkerShared {
+    fn leader(&self) -> &Client {
+        self.leader.get().expect("leader client not wired")
+    }
+
+    fn peers(&self) -> &[Client] {
+        self.peers.get().expect("peer clients not wired")
+    }
+
+    fn is_cancelled(&self, qid: QueryId) -> bool {
+        self.cancelled.lock().unwrap().0.contains(&qid)
+    }
+
+    /// Report a worker-side failure to the leader as an error Ack.
+    fn ack_error(&self, qid: QueryId, msg: String) {
+        let ack = Ack {
+            query_id: qid,
+            worker: self.wi,
+            map_ns: 0,
+            ht_bytes: 0,
+            part_bytes: Vec::new(),
+            error: msg,
+        };
+        let _ = self.leader().cast(METHOD_ACK, ack.encode());
+    }
+
+    fn on_plan(&self, pf: PlanFragment) {
+        if self.is_cancelled(pf.query_id) {
+            return;
+        }
+        let db = match self.catalog.lock().unwrap().get(&pf.query_id) {
+            Some(db) => Arc::clone(db),
+            None => {
+                self.ack_error(pf.query_id, format!("{}: no storage attached", pf.query_id));
+                return;
+            }
+        };
+        self.plans.lock().unwrap().insert(
+            pf.query_id,
+            PlanState {
+                query: pf.query,
+                morsel_rows: (pf.morsel_rows as usize).max(1),
+                workers: pf.workers as usize,
+                db,
+            },
+        );
+    }
+
+    fn on_execute(&self, ex: ExecuteRange) {
+        let qid = ex.query_id;
+        if self.is_cancelled(qid) {
+            return;
+        }
+        let plan = match self.plans.lock().unwrap().remove(&qid) {
+            Some(p) => p,
+            None => {
+                self.ack_error(qid, format!("{qid}: ExecuteRange without PlanFragment"));
+                return;
+            }
+        };
+        match self.map_fold(&plan, qid, ex.lo as usize, ex.hi as usize) {
+            Ok(ack) => {
+                let _ = self.leader().cast(METHOD_ACK, ack.encode());
+            }
+            Err(e) => self.ack_error(qid, e.to_string()),
+        }
+    }
+
+    /// The map phase: fold the assigned range morsel by morsel through
+    /// the shared engine kernel, hash-partition the merged partial, cast
+    /// the non-empty partitions to their reducers, and report to the
+    /// leader (partition frame bytes, map time, table footprint).
+    fn map_fold(&self, plan: &PlanState, qid: QueryId, lo: usize, hi: usize) -> Result<Ack> {
+        let t = Instant::now();
+        let spec = engine::spec(&plan.query)
+            .ok_or_else(|| crate::err!("{qid}: query {} has no plan", plan.query))?;
+        let (c, _prep) = (spec.compile)(&plan.db);
+        let mut merger = Merger::new(spec.width);
+        let mut morsel_ht_peak = 0u64;
+        let mut s = lo;
+        while s < hi {
+            let e = (s + plan.morsel_rows).min(hi);
+            let p = engine::run_range(&c, spec.width, s, e);
+            // Morsels run sequentially within a worker, so the live
+            // working set is one morsel's hash table plus the
+            // accumulated merge state.
+            morsel_ht_peak = morsel_ht_peak.max(p.stats.ht_bytes);
+            merger.absorb(&p)?;
+            s = e;
+        }
+        let partial = merger.into_partial();
+        let ht_bytes =
+            morsel_ht_peak + partial.len() as u64 * Partial::group_bytes(spec.width) as u64;
+        // Empty partitions (single-group queries leave w-1 of them) are
+        // never encoded or shipped — no real system sends header-only
+        // frames. The Ack's zero tells the leader not to expect them.
+        let w = plan.workers;
+        let mut part_bytes = vec![0u64; w];
+        for (p_idx, part) in partial.partition_by_key(w).iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            let frame = PartialFrame {
+                query_id: qid,
+                partition: p_idx as u32,
+                from_worker: self.wi,
+                reduce_ns: 0,
+                body: part.encode(),
+            };
+            part_bytes[p_idx] = self.peers()[p_idx].cast(METHOD_PARTIAL, frame.encode())? as u64;
+        }
+        Ok(Ack {
+            query_id: qid,
+            worker: self.wi,
+            // Clamped ≥ 1 ns: a measured phase never reports zero, so
+            // the simulated compute share cannot vanish on fast hosts.
+            map_ns: (t.elapsed().as_nanos() as u64).max(1),
+            ht_bytes,
+            part_bytes,
+            error: String::new(),
+        })
+    }
+
+    fn on_partial(&self, pf: PartialFrame) {
+        let qid = pf.query_id;
+        if self.is_cancelled(qid) {
+            return;
+        }
+        {
+            let mut g = self.reduces.lock().unwrap();
+            let st = g
+                .entry(qid)
+                .or_insert_with(|| ReduceState { expect: None, got: HashMap::new() });
+            st.got.insert(pf.from_worker, pf.body);
+        }
+        self.try_reduce(qid);
+    }
+
+    fn on_reduce(&self, rc: ReduceCmd) {
+        let qid = rc.query_id;
+        if self.is_cancelled(qid) {
+            return;
+        }
+        {
+            let mut g = self.reduces.lock().unwrap();
+            let st = g
+                .entry(qid)
+                .or_insert_with(|| ReduceState { expect: None, got: HashMap::new() });
+            st.expect = Some(rc.expect);
+        }
+        self.try_reduce(qid);
+    }
+
+    /// If every expected partition frame is buffered, pre-merge them in
+    /// worker order (deterministic) and ship one key-deduplicated
+    /// partial to the leader.
+    fn try_reduce(&self, qid: QueryId) {
+        let st = {
+            let mut g = self.reduces.lock().unwrap();
+            let complete = match g.get(&qid) {
+                Some(st) => match &st.expect {
+                    Some(e) => e.iter().all(|w| st.got.contains_key(w)),
+                    None => false,
+                },
+                None => false,
+            };
+            if !complete {
+                return;
+            }
+            g.remove(&qid).unwrap()
+        };
+        if let Err(e) = self.pre_merge(qid, st) {
+            self.ack_error(qid, e.to_string());
+        }
+    }
+
+    fn pre_merge(&self, qid: QueryId, st: ReduceState) -> Result<()> {
+        let t = Instant::now();
+        let mut expect = st.expect.expect("checked complete");
+        expect.sort_unstable();
+        let mut merger: Option<Merger> = None;
+        for wi in &expect {
+            let p = Partial::decode(&st.got[wi])?;
+            merger.get_or_insert_with(|| Merger::new(p.width)).absorb(&p)?;
+        }
+        let merged = match merger {
+            Some(m) => m.into_partial(),
+            None => return Ok(()), // nothing expected: nothing to ship
+        };
+        let frame = PartialFrame {
+            query_id: qid,
+            partition: self.wi,
+            from_worker: self.wi,
+            reduce_ns: (t.elapsed().as_nanos() as u64).max(1),
+            body: merged.encode(),
+        };
+        self.leader().cast(METHOD_PARTIAL, frame.encode())?;
+        Ok(())
+    }
+
+    fn on_cancel(&self, c: CancelQuery) {
+        self.plans.lock().unwrap().remove(&c.query_id);
+        self.reduces.lock().unwrap().remove(&c.query_id);
+        let mut cc = self.cancelled.lock().unwrap();
+        let (set, order) = &mut *cc;
+        if set.insert(c.query_id) {
+            order.push_back(c.query_id);
+        }
+        // Bounded memory: evict the *oldest* ids only — their frames
+        // have long drained; a stray late frame for an evicted id would
+        // merely recreate a plans/reduces entry that the next CancelQuery
+        // (or nothing) cleans, never corrupt a live query.
+        while order.len() > 4096 {
+            if let Some(old) = order.pop_front() {
+                set.remove(&old);
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- leader
+
+enum Phase {
+    Mapping,
+    Reducing,
+    Done,
+    Failed(String),
+    Cancelled,
+}
+
+struct AckInfo {
+    map_ns: u64,
+    ht_bytes: u64,
+    part_bytes: Vec<u64>,
+}
+
+/// Leader-side protocol state of one query.
+struct QueryState {
+    query: String,
+    width: usize,
+    finalize: fn(&TpchDb, &Partial) -> Vec<Row>,
+    /// Dropped at completion so a long-lived service does not pin dbs.
+    db: Option<Arc<TpchDb>>,
+    phase: Phase,
+    w: usize,
+    worker_nodes: Vec<usize>,
+    est_secs: Vec<f64>,
+    input_bytes_each: u64,
+    acks: Vec<Option<AckInfo>>,
+    acked: usize,
+    expected_reducers: usize,
+    reducer_got: usize,
+    /// Per partition: (partial body, reduce ns, wire bytes).
+    reducer_frames: Vec<Option<(Vec<u8>, u64, u64)>>,
+    control_to: Vec<u64>,
+    control_from: Vec<u64>,
+    /// Leader's view of the conversation, in order (for tests/debugging).
+    trace: Vec<String>,
+    /// Set at completion (result rows live inside, once). The heavy
+    /// per-phase buffers (`acks`, `reducer_frames`) are cleared then, so
+    /// a finished query retains only its rows, report, and trace.
+    result: Option<DistQueryReport>,
+}
+
+impl QueryState {
+    fn status(&self) -> QueryStatus {
+        match &self.phase {
+            Phase::Mapping => QueryStatus::Mapping { acked: self.acked, workers: self.w },
+            Phase::Reducing => QueryStatus::Reducing {
+                received: self.reducer_got,
+                expected: self.expected_reducers,
+            },
+            Phase::Done => QueryStatus::Done,
+            Phase::Failed(e) => QueryStatus::Failed(e.clone()),
+            Phase::Cancelled => QueryStatus::Cancelled,
+        }
+    }
+}
+
+/// Everything the leader endpoint's handlers touch.
+struct LeaderShared {
+    cluster: ClusterSpec,
+    queries: Mutex<HashMap<QueryId, QueryState>>,
+    cv: Condvar,
+    pool: ThreadPool,
+    credits: Backpressure,
+    sched: Mutex<Scheduler>,
+    catalog: Arc<Mutex<HashMap<QueryId, Arc<TpchDb>>>>,
+    worker_clients: OnceLock<Vec<Client>>,
+}
+
+impl LeaderShared {
+    /// Release the resources a live query holds (storage attach,
+    /// scheduler load). Callers flip `phase` themselves.
+    fn release(&self, qid: QueryId, st: &QueryState) {
+        self.catalog.lock().unwrap().remove(&qid);
+        let mut s = self.sched.lock().unwrap();
+        for (node, est) in st.worker_nodes.iter().zip(&st.est_secs) {
+            s.complete(*node, *est);
+        }
+    }
+
+    fn fail(&self, qid: QueryId, st: &mut QueryState, msg: String) {
+        self.release(qid, st);
+        st.db = None;
+        st.acks = Vec::new();
+        st.reducer_frames = Vec::new();
+        // Clean the workers' per-query state (pending plans, buffered
+        // exchange partials) so a failed query cannot leak buffers.
+        if let Some(clients) = self.worker_clients.get() {
+            for c in clients {
+                let _ = c.cast(METHOD_CANCEL, CancelQuery { query_id: qid }.encode());
+            }
+        }
+        st.trace.push(format!("failed: {msg}"));
+        st.phase = Phase::Failed(msg);
+    }
+
+    fn on_ack(&self, ack: Ack, wire_bytes: u64) {
+        let qid = ack.query_id;
+        let mut g = self.queries.lock().unwrap();
+        let Some(st) = g.get_mut(&qid) else { return };
+        if !ack.error.is_empty() {
+            if matches!(st.phase, Phase::Mapping | Phase::Reducing) {
+                st.trace.push(format!("recv Ack w{} error", ack.worker));
+                self.fail(qid, st, ack.error);
+                self.cv.notify_all();
+            }
+            return;
+        }
+        if !matches!(st.phase, Phase::Mapping) {
+            return;
+        }
+        let wi = ack.worker as usize;
+        if wi >= st.w || st.acks[wi].is_some() {
+            return;
+        }
+        if ack.part_bytes.len() != st.w {
+            let msg = format!(
+                "w{wi} reported {} partitions, expected {}",
+                ack.part_bytes.len(),
+                st.w
+            );
+            self.fail(qid, st, msg);
+            self.cv.notify_all();
+            return;
+        }
+        st.control_from[wi] += wire_bytes;
+        st.trace.push(format!("recv Ack w{wi}"));
+        st.acks[wi] = Some(AckInfo {
+            map_ns: ack.map_ns,
+            ht_bytes: ack.ht_bytes,
+            part_bytes: ack.part_bytes,
+        });
+        st.acked += 1;
+        if st.acked == st.w {
+            self.start_reduce(qid, st);
+        }
+        self.cv.notify_all();
+    }
+
+    /// All map acks are in: assemble the exchange expectations and
+    /// command the engaged reducers.
+    fn start_reduce(&self, qid: QueryId, st: &mut QueryState) {
+        let mut expect_per_p: Vec<Vec<u32>> = vec![Vec::new(); st.w];
+        for (wi, info) in st.acks.iter().enumerate() {
+            let info = info.as_ref().expect("acked == w");
+            for (p, &b) in info.part_bytes.iter().enumerate() {
+                if b > 0 {
+                    expect_per_p[p].push(wi as u32);
+                }
+            }
+        }
+        st.expected_reducers = expect_per_p.iter().filter(|e| !e.is_empty()).count();
+        st.phase = Phase::Reducing;
+        let clients = self.worker_clients.get().expect("worker clients not wired");
+        for (p, expect) in expect_per_p.into_iter().enumerate() {
+            if expect.is_empty() {
+                continue;
+            }
+            st.trace.push(format!("send Reduce p{p} expect={}", expect.len()));
+            let cmd = ReduceCmd { query_id: qid, partition: p as u32, expect };
+            match clients[p].cast(METHOD_REDUCE, cmd.encode()) {
+                Ok(b) => st.control_to[p] += b as u64,
+                Err(e) => {
+                    // An unreachable reducer would leave the query in
+                    // Reducing forever (its frame can never arrive) and
+                    // wait() blocked — fail it instead.
+                    self.fail(qid, st, format!("reduce command to w{p}: {e}"));
+                    return;
+                }
+            }
+        }
+        if st.expected_reducers == 0 {
+            // Empty input or zero groups everywhere: complete now.
+            self.complete(qid, st);
+        }
+    }
+
+    fn on_partial(&self, pf: PartialFrame, wire_bytes: u64) {
+        let qid = pf.query_id;
+        let mut g = self.queries.lock().unwrap();
+        let Some(st) = g.get_mut(&qid) else { return };
+        if !matches!(st.phase, Phase::Reducing) {
+            return;
+        }
+        let p = pf.partition as usize;
+        if p >= st.w || st.reducer_frames[p].is_some() {
+            return;
+        }
+        st.trace.push(format!("recv Partial p{p}"));
+        st.reducer_frames[p] = Some((pf.body, pf.reduce_ns, wire_bytes));
+        st.reducer_got += 1;
+        if st.reducer_got == st.expected_reducers {
+            self.complete(qid, st);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Every expected pre-merged partition is in: final merge (decode on
+    /// the pool behind backpressure credits, partition order), finalize,
+    /// charge the simulated phase network, release resources.
+    ///
+    /// Runs on the leader endpoint thread with the state lock held —
+    /// completions serialize, which is the single-leader-core semantic
+    /// this service models (the dominant cost, the map folds, runs on
+    /// the worker endpoints without this lock).
+    fn complete(&self, qid: QueryId, st: &mut QueryState) {
+        // Take the per-phase buffers out of the state: the bodies move
+        // straight into the decode (no copies of the shuffle payload),
+        // and a finished query retains only rows, report, and trace.
+        let frames = std::mem::take(&mut st.reducer_frames);
+        let acks = std::mem::take(&mut st.acks);
+        let mut reduce_secs = vec![0.0; st.w];
+        let mut leader_bytes = vec![0u64; st.w];
+        let mut bodies: Vec<Vec<u8>> = Vec::with_capacity(st.reducer_got);
+        for (p, f) in frames.into_iter().enumerate() {
+            if let Some((body, ns, bytes)) = f {
+                reduce_secs[p] = ns as f64 * 1e-9;
+                leader_bytes[p] = bytes;
+                bodies.push(body);
+            }
+        }
+        let mut merger = Merger::new(st.width);
+        if let Err(e) = decode_and_merge(&self.pool, &self.credits, bodies, &mut merger) {
+            self.fail(qid, st, e.to_string());
+            return;
+        }
+        let merged = merger.into_partial();
+        let db = st.db.take().expect("completed twice");
+        let rows: Vec<Row> = (st.finalize)(&db, &merged);
+        self.release(qid, st);
+
+        let worker_secs: Vec<f64> = acks
+            .iter()
+            .map(|a| a.as_ref().map_or(0.0, |a| a.map_ns as f64 * 1e-9))
+            .collect();
+        let ht_bytes_each =
+            acks.iter().map(|a| a.as_ref().map_or(0, |a| a.ht_bytes)).max().unwrap_or(0);
+        let exchange_pair_bytes: Vec<Vec<u64>> = acks
+            .into_iter()
+            .map(|a| a.map_or_else(|| vec![0; st.w], |a| a.part_bytes))
+            .collect();
+        let exchange_bytes: u64 = exchange_pair_bytes
+            .iter()
+            .enumerate()
+            .map(|(wi, row)| {
+                row.iter().enumerate().filter(|(p, _)| *p != wi).map(|(_, b)| *b).sum::<u64>()
+            })
+            .sum();
+        let shuffle_bytes: u64 = leader_bytes.iter().sum();
+        let control_bytes: u64 =
+            st.control_to.iter().sum::<u64>() + st.control_from.iter().sum::<u64>();
+        let (compute_secs, shuffle_secs, io_secs) = simulate_phases(
+            &self.cluster,
+            &PhaseInputs {
+                input_bytes_each: st.input_bytes_each,
+                exchange_pair_bytes: &exchange_pair_bytes,
+                leader_bytes: &leader_bytes,
+                worker_secs: &worker_secs,
+                reduce_secs: &reduce_secs,
+                ht_bytes_each,
+                worker_nodes: &st.worker_nodes,
+                control_to: &st.control_to,
+                control_from: &st.control_from,
+            },
+        );
+        let max = |v: &[f64]| v.iter().fold(0.0f64, |a, &b| a.max(b));
+        let report = DistQueryReport {
+            query: st.query.clone(),
+            rows,
+            workers: st.w,
+            compute_secs,
+            shuffle_secs,
+            io_secs,
+            exchange_bytes,
+            shuffle_bytes,
+            control_bytes,
+            input_bytes: st.input_bytes_each * st.w as u64,
+            host_compute_secs: max(&worker_secs) + max(&reduce_secs),
+        };
+        st.trace.push(format!("done rows={}", report.rows.len()));
+        st.result = Some(report);
+        st.phase = Phase::Done;
+        self.cv.notify_all();
+    }
+}
+
+// -------------------------------------------------------------- service
+
+/// The message-native distributed query service (see module docs).
+pub struct QueryService {
+    w: usize,
+    morsel_rows: usize,
+    next_query: AtomicU64,
+    catalog: Arc<Mutex<HashMap<QueryId, Arc<TpchDb>>>>,
+    worker_clients: Vec<Client>,
+    leader: Arc<LeaderShared>,
+    // Declaration order is drop order: worker endpoints drain first
+    // (their final casts still find the leader endpoint alive), the
+    // leader endpoint drains last.
+    _worker_eps: Vec<Endpoint>,
+    _leader_ep: Endpoint,
+}
+
+impl QueryService {
+    /// Spin up the service with default tuning: one worker endpoint per
+    /// cluster node, decode pool on all cores, default morsel size.
+    pub fn new(cluster: ClusterSpec) -> Self {
+        Self::with_config(cluster, ServiceConfig::default())
+    }
+
+    /// Spin up the service: `w` worker endpoints plus one leader
+    /// endpoint, each a single-threaded [`Endpoint`] dispatch core.
+    pub fn with_config(cluster: ClusterSpec, cfg: ServiceConfig) -> Self {
+        let n = cluster.num_nodes();
+        let w = if cfg.workers == 0 { n } else { cfg.workers.min(n) };
+        let catalog: Arc<Mutex<HashMap<QueryId, Arc<TpchDb>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let shareds: Vec<Arc<WorkerShared>> = (0..w)
+            .map(|wi| {
+                Arc::new(WorkerShared {
+                    wi: wi as u32,
+                    catalog: Arc::clone(&catalog),
+                    plans: Mutex::new(HashMap::new()),
+                    reduces: Mutex::new(HashMap::new()),
+                    cancelled: Mutex::new((HashSet::new(), VecDeque::new())),
+                    peers: OnceLock::new(),
+                    leader: OnceLock::new(),
+                })
+            })
+            .collect();
+        let worker_eps: Vec<Endpoint> = shareds
+            .iter()
+            .map(|ws| {
+                let (p, e, x, r, c) =
+                    (ws.clone(), ws.clone(), ws.clone(), ws.clone(), ws.clone());
+                Dispatch::new()
+                    .on(METHOD_PLAN, move |m| {
+                        p.on_plan(PlanFragment::decode(&m.payload)?);
+                        Ok(Vec::new())
+                    })
+                    .on(METHOD_EXECUTE, move |m| {
+                        e.on_execute(ExecuteRange::decode(&m.payload)?);
+                        Ok(Vec::new())
+                    })
+                    .on(METHOD_PARTIAL, move |m| {
+                        x.on_partial(PartialFrame::decode(&m.payload)?);
+                        Ok(Vec::new())
+                    })
+                    .on(METHOD_REDUCE, move |m| {
+                        r.on_reduce(ReduceCmd::decode(&m.payload)?);
+                        Ok(Vec::new())
+                    })
+                    .on(METHOD_CANCEL, move |m| {
+                        c.on_cancel(CancelQuery::decode(&m.payload)?);
+                        Ok(Vec::new())
+                    })
+                    .serve()
+            })
+            .collect();
+        let worker_clients: Vec<Client> = worker_eps.iter().map(|e| e.client()).collect();
+        let pool = ThreadPool::new(cfg.threads);
+        let credits = Backpressure::new(pool.threads().max(1));
+        let sched = Mutex::new(Scheduler::new(&cluster));
+        let leader = Arc::new(LeaderShared {
+            cluster,
+            queries: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            pool,
+            credits,
+            sched,
+            catalog: Arc::clone(&catalog),
+            worker_clients: OnceLock::new(),
+        });
+        let (la, lp) = (Arc::clone(&leader), Arc::clone(&leader));
+        let leader_ep = Dispatch::new()
+            .on(METHOD_ACK, move |m| {
+                la.on_ack(Ack::decode(&m.payload)?, 16 + m.payload.len() as u64);
+                Ok(Vec::new())
+            })
+            .on(METHOD_PARTIAL, move |m| {
+                lp.on_partial(PartialFrame::decode(&m.payload)?, 16 + m.payload.len() as u64);
+                Ok(Vec::new())
+            })
+            .serve();
+        let leader_client = leader_ep.client();
+        let _ = leader.worker_clients.set(worker_clients.clone());
+        for ws in &shareds {
+            let _ = ws.peers.set(worker_clients.clone());
+            let _ = ws.leader.set(leader_client.clone());
+        }
+        Self {
+            w,
+            morsel_rows: cfg.morsel_rows.max(1),
+            next_query: AtomicU64::new(0),
+            catalog,
+            worker_clients,
+            leader,
+            _worker_eps: worker_eps,
+            _leader_ep: leader_ep,
+        }
+    }
+
+    /// Worker endpoints this service runs.
+    pub fn workers(&self) -> usize {
+        self.w
+    }
+
+    /// Contiguous row ranges of `len` over `w` workers.
+    fn ranges(len: usize, w: usize) -> Vec<(usize, usize)> {
+        let chunk = len.div_ceil(w.max(1));
+        (0..w)
+            .map(|i| ((i * chunk).min(len), ((i + 1) * chunk).min(len)))
+            .collect()
+    }
+
+    /// Submit a query: attach the input tables, place the worker tasks
+    /// on cluster nodes, and cast the PlanFragment + ExecuteRange frames.
+    /// Returns immediately — the query runs on the endpoint threads.
+    pub fn submit(&self, db: &Arc<TpchDb>, query: &str) -> Result<QueryId> {
+        let spec = engine::spec(query)
+            .ok_or_else(|| crate::err!("query {query} has no distributed plan"))?;
+        crate::ensure!(self.w >= 1, "cluster has no nodes");
+        let qid = QueryId(self.next_query.fetch_add(1, Ordering::SeqCst) + 1);
+        let n = db.lineitem.len();
+        let ranges = Self::ranges(n, self.w);
+        let rows_each = ranges.first().map(|(s, e)| e - s).unwrap_or(0);
+        let input_bytes_each = if n == 0 {
+            0
+        } else {
+            (db.lineitem.bytes() as f64 * rows_each as f64 / n as f64) as u64
+        };
+        // Place the worker tasks up front (estimate: rows at a nominal
+        // per-row rate — only relative load matters) so concurrent
+        // queries spread over the shared scheduler's least-loaded nodes.
+        // Placement runs before the storage attach: a placement failure
+        // must not leave the db pinned in the catalog.
+        let est_secs: Vec<f64> =
+            ranges.iter().map(|(s, e)| ((e - s) as f64 * 2e-8).max(1e-9)).collect();
+        let worker_nodes: Vec<usize> = {
+            let tasks: Vec<Task> = est_secs
+                .iter()
+                .enumerate()
+                .map(|(id, &est)| Task { id, kind: TaskKind::Compute, est_secs: est })
+                .collect();
+            let mut s = self.leader.sched.lock().unwrap();
+            s.place_all(&tasks)
+                .ok_or_else(|| crate::err!("no eligible compute node for worker tasks"))?
+                .iter()
+                .map(|p| p.node_id)
+                .collect()
+        };
+        self.catalog.lock().unwrap().insert(qid, Arc::clone(db));
+        let mut g = self.leader.queries.lock().unwrap();
+        g.insert(
+            qid,
+            QueryState {
+                query: query.to_string(),
+                width: spec.width,
+                finalize: spec.finalize,
+                db: Some(Arc::clone(db)),
+                phase: Phase::Mapping,
+                w: self.w,
+                worker_nodes,
+                est_secs,
+                input_bytes_each,
+                acks: (0..self.w).map(|_| None).collect(),
+                acked: 0,
+                expected_reducers: 0,
+                reducer_got: 0,
+                reducer_frames: (0..self.w).map(|_| None).collect(),
+                control_to: vec![0; self.w],
+                control_from: vec![0; self.w],
+                trace: Vec::new(),
+                result: None,
+            },
+        );
+        // Cast the plan + range to every worker while holding the state
+        // lock: acks cannot race past the insert, and the trace stays
+        // ordered (casts are non-blocking sends).
+        let cast_all = (|| -> Result<()> {
+            let st = g.get_mut(&qid).expect("just inserted");
+            for (wi, &(lo, hi)) in ranges.iter().enumerate() {
+                let plan = PlanFragment {
+                    query_id: qid,
+                    query: query.to_string(),
+                    width: spec.width as u32,
+                    workers: self.w as u32,
+                    morsel_rows: self.morsel_rows as u64,
+                };
+                st.trace.push(format!("send Plan w{wi}"));
+                st.control_to[wi] +=
+                    self.worker_clients[wi].cast(METHOD_PLAN, plan.encode())? as u64;
+                let ex = ExecuteRange {
+                    query_id: qid,
+                    worker: wi as u32,
+                    lo: lo as u64,
+                    hi: hi as u64,
+                };
+                st.trace.push(format!("send Execute w{wi} rows={lo}..{hi}"));
+                st.control_to[wi] +=
+                    self.worker_clients[wi].cast(METHOD_EXECUTE, ex.encode())? as u64;
+            }
+            Ok(())
+        })();
+        if let Err(e) = cast_all {
+            // A dead worker endpoint must not leak the registered query:
+            // unwind the insert, the storage attach, and the scheduler
+            // load, and tell the live workers to drop what they got.
+            let st = g.remove(&qid).expect("just inserted");
+            self.leader.release(qid, &st);
+            for c in &self.worker_clients {
+                let _ = c.cast(METHOD_CANCEL, CancelQuery { query_id: qid }.encode());
+            }
+            return Err(e);
+        }
+        Ok(qid)
+    }
+
+    /// Snapshot a query's lifecycle state (non-blocking).
+    pub fn poll(&self, id: QueryId) -> QueryStatus {
+        let g = self.leader.queries.lock().unwrap();
+        g.get(&id).map_or(QueryStatus::Unknown, |st| st.status())
+    }
+
+    /// Block until the query finishes; returns its rows and report.
+    /// Waiting is idempotent — any number of callers get the result.
+    pub fn wait(&self, id: QueryId) -> Result<(Vec<Row>, DistQueryReport)> {
+        let mut g = self.leader.queries.lock().unwrap();
+        loop {
+            match g.get(&id) {
+                None => crate::bail!("{id}: unknown query"),
+                Some(st) => match &st.phase {
+                    Phase::Done => {
+                        let report = st.result.clone().expect("done without result");
+                        return Ok((report.rows.clone(), report));
+                    }
+                    Phase::Failed(e) => crate::bail!("{id} failed: {e}"),
+                    Phase::Cancelled => crate::bail!("{id} cancelled"),
+                    Phase::Mapping | Phase::Reducing => {}
+                },
+            }
+            g = self.leader.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Best-effort cancel: returns `true` if the query was still in
+    /// flight (its late frames will be discarded), `false` if it already
+    /// finished, failed, or never existed.
+    pub fn cancel(&self, id: QueryId) -> bool {
+        let mut g = self.leader.queries.lock().unwrap();
+        let Some(st) = g.get_mut(&id) else { return false };
+        if !matches!(st.phase, Phase::Mapping | Phase::Reducing) {
+            return false;
+        }
+        self.leader.release(id, st);
+        st.db = None;
+        st.acks = Vec::new();
+        st.reducer_frames = Vec::new();
+        st.phase = Phase::Cancelled;
+        st.trace.push("cancelled".to_string());
+        for (wi, c) in self.worker_clients.iter().enumerate() {
+            if let Ok(b) = c.cast(METHOD_CANCEL, CancelQuery { query_id: id }.encode()) {
+                st.control_to[wi] += b as u64;
+            }
+        }
+        self.leader.cv.notify_all();
+        true
+    }
+
+    /// Evict a finished (done, failed, or cancelled) query's retained
+    /// state — rows, report, trace. Returns `false` if the query is
+    /// still in flight (or unknown); a long-lived service that serves an
+    /// unbounded query stream should retire ids once their result has
+    /// been consumed.
+    pub fn retire(&self, id: QueryId) -> bool {
+        let mut g = self.leader.queries.lock().unwrap();
+        let terminal = g
+            .get(&id)
+            .is_some_and(|st| !matches!(st.phase, Phase::Mapping | Phase::Reducing));
+        if terminal {
+            g.remove(&id);
+        }
+        terminal
+    }
+
+    /// The leader's ordered view of a query's conversation — one line
+    /// per frame sent or received (empty for unknown ids).
+    pub fn conversation(&self, id: QueryId) -> Vec<String> {
+        let g = self.leader.queries.lock().unwrap();
+        g.get(&id).map_or_else(Vec::new, |st| st.trace.clone())
+    }
+}
+
+// ------------------------------------------------- leader decode + sim
+
+/// Decode partial bodies on `pool` and absorb them into `merger` in
+/// order. A backpressure credit is held per admitted body from
+/// submission until its decoded partial has been merged, bounding
+/// decoded-but-unmerged buffering. Credits are released on *every* path
+/// — a decode or merge failure must not leak the credit out of a
+/// long-lived gate (the leak regression tests below drive this).
+fn decode_and_merge(
+    pool: &ThreadPool,
+    credits: &Backpressure,
+    bodies: Vec<Vec<u8>>,
+    merger: &mut Merger,
+) -> Result<()> {
+    let mut pending: VecDeque<JoinHandle<Result<Partial>>> = VecDeque::new();
+    let mut result: Result<()> = Ok(());
+    for body in bodies {
+        // Admission: retire the oldest in-flight partial (merge order
+        // stays body order) until a credit frees up.
+        while result.is_ok() && !credits.try_acquire() {
+            let h = pending.pop_front().expect("credits exhausted with nothing pending");
+            let r = h.join().and_then(|p| merger.absorb(&p));
+            credits.release();
+            result = result.and(r);
+        }
+        if result.is_err() {
+            break;
+        }
+        pending.push_back(pool.submit(move || Partial::decode(&body)));
+    }
+    // Drain: release every remaining credit even after a failure.
+    while let Some(h) = pending.pop_front() {
+        let r = h.join().and_then(|p| merger.absorb(&p));
+        credits.release();
+        result = result.and(r);
+    }
+    result
+}
+
+/// Per-run inputs to the phase simulation.
+struct PhaseInputs<'a> {
+    input_bytes_each: u64,
+    /// `[worker][reducer]` frame bytes of the partition exchange.
+    exchange_pair_bytes: &'a [Vec<u64>],
+    /// Per-reducer pre-merged frame bytes shipped to the leader.
+    leader_bytes: &'a [u64],
+    /// Measured host seconds per worker (map) and per reducer (reduce).
+    worker_secs: &'a [f64],
+    reduce_secs: &'a [f64],
+    ht_bytes_each: u64,
+    worker_nodes: &'a [usize],
+    /// Control frame bytes leader → worker i / worker i → leader.
+    control_to: &'a [u64],
+    control_from: &'a [u64],
+}
+
+/// Simulate the network phases and worker compute for a run where the
+/// worker on `worker_nodes[i]` scanned `input_bytes_each`, exchanged
+/// `exchange_pair_bytes[i][p]` with the reducer on `worker_nodes[p]`,
+/// and the reducers shipped `leader_bytes[p]` to the leader (node 0).
+/// Control frames ride the leader-ward phase as concurrent tiny flows.
+fn simulate_phases(cluster: &ClusterSpec, ph: &PhaseInputs<'_>) -> (f64, f64, f64) {
+    let topo = cluster.topology();
+    let n = topo.num_nodes();
+
+    // Phase 1 — storage read: each worker node pulls its partition
+    // from a storage replica on a different node (disaggregated
+    // storage).
+    let mut io_sim = Simulation::new(topo.clone());
+    for &node in ph.worker_nodes {
+        let src = (node + n / 2) % n;
+        if src != node && ph.input_bytes_each > 0 {
+            io_sim.add_flow(src, node, ph.input_bytes_each as f64, 0.0);
+        }
+    }
+    let io_secs = io_sim.run_makespan();
+
+    // Phase 2 — compute: each worker node runs its partition across
+    // all its cores; memsim gives the contention-adjusted speedup.
+    // Map and reduce are sequential phases, so their scaled
+    // makespans add.
+    let platform = cluster.platform();
+    let profile = WorkloadProfile {
+        cpu_secs: 1.0, // shape only: we scale measured time below
+        dram_bytes: (ph.input_bytes_each as f64).max(1.0),
+        working_set_bytes: (ph.ht_bytes_each as f64).max(4e6),
+    };
+    let k = platform.vcpus;
+    let r = simulate(platform, &profile, k);
+    // Effective parallel speedup on the node vs one uncontended core.
+    let single = simulate(platform, &profile, 1).per_core_rate;
+    let speedup = (r.system_rate / single).max(1e-9);
+    let host_to_platform = crate::analytics::profile::host_speed() / platform.st_speed;
+    let scale = |h: &f64| h * host_to_platform / speedup;
+    let map_secs = ph.worker_secs.iter().map(scale).fold(0.0, f64::max);
+    let red_secs = ph.reduce_secs.iter().map(scale).fold(0.0, f64::max);
+    let compute_secs = map_secs + red_secs;
+
+    // Phase 3 — partition exchange: worker i → reducer p. A worker's
+    // own partition stays on-node and adds no flow.
+    let mut ex_sim = Simulation::new(topo.clone());
+    for (wi, row) in ph.exchange_pair_bytes.iter().enumerate() {
+        for (p, &b) in row.iter().enumerate() {
+            let (src, dst) = (ph.worker_nodes[wi], ph.worker_nodes[p]);
+            if src != dst && b > 0 {
+                ex_sim.add_flow(src, dst, b as f64, 0.0);
+            }
+        }
+    }
+    let exchange_secs = ex_sim.run_makespan();
+
+    // Phase 4 — pre-merged reducer partials to the leader (node 0),
+    // with the query's control frames as concurrent flows.
+    let mut sh_sim = Simulation::new(topo);
+    for (p, &b) in ph.leader_bytes.iter().enumerate() {
+        let node = ph.worker_nodes[p];
+        if node != 0 && b > 0 {
+            sh_sim.add_flow(node, 0, b as f64, 0.0);
+        }
+    }
+    for (wi, (&to, &from)) in ph.control_to.iter().zip(ph.control_from).enumerate() {
+        let node = ph.worker_nodes[wi];
+        if node != 0 {
+            if to > 0 {
+                sh_sim.add_flow(0, node, to as f64, 0.0);
+            }
+            if from > 0 {
+                sh_sim.add_flow(node, 0, from as f64, 0.0);
+            }
+        }
+    }
+    let shuffle_secs = exchange_secs + sh_sim.run_makespan();
+    (compute_secs, shuffle_secs, io_secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::ops::ExecStats;
+    use crate::analytics::queries;
+    use crate::analytics::tpch::TpchConfig;
+    use crate::cluster::Role;
+    use crate::platform::n2d_milan;
+
+    fn cluster(n: usize) -> ClusterSpec {
+        ClusterSpec::traditional(n, n2d_milan(), Role::LiteCompute)
+    }
+
+    fn db(sf: f64, seed: u64) -> Arc<TpchDb> {
+        Arc::new(TpchDb::generate(TpchConfig::new(sf, seed)))
+    }
+
+    #[test]
+    fn submit_wait_matches_serial() {
+        let db = db(0.002, 41);
+        let svc = QueryService::new(cluster(4));
+        let id = svc.submit(&db, "q1").unwrap();
+        let (rows, report) = svc.wait(id).unwrap();
+        let single = queries::run_query(&db, "q1").unwrap();
+        assert!(single.approx_eq_rows(&rows));
+        assert!(single.approx_eq_rows(&report.rows));
+        assert_eq!(report.workers, 4);
+        assert!(report.shuffle_bytes > 0);
+        assert!(report.control_bytes > 0, "control frames must be charged");
+        assert_eq!(svc.poll(id), QueryStatus::Done);
+        // wait is idempotent.
+        let (rows2, _) = svc.wait(id).unwrap();
+        assert!(single.approx_eq_rows(&rows2));
+        // retire evicts the finished query's retained state.
+        assert!(svc.retire(id));
+        assert_eq!(svc.poll(id), QueryStatus::Unknown);
+        assert!(!svc.retire(id), "retire is not idempotent on evicted ids");
+    }
+
+    #[test]
+    fn interleaved_queries_each_match_serial() {
+        let db = db(0.002, 43);
+        let svc = QueryService::new(cluster(3));
+        let names = ["q1", "q6", "q18", "q14", "q1", "q6"];
+        let ids: Vec<QueryId> = names.iter().map(|q| svc.submit(&db, q).unwrap()).collect();
+        // Wait in reverse submit order: completion order must not matter.
+        for (q, id) in names.iter().zip(ids.iter()).rev() {
+            let (rows, _) = svc.wait(*id).unwrap();
+            let single = queries::run_query(&db, q).unwrap();
+            assert!(single.approx_eq_rows(&rows), "{q} ({id}) diverged");
+        }
+    }
+
+    #[test]
+    fn unknown_query_is_rejected_at_submit() {
+        let db = db(0.001, 7);
+        let svc = QueryService::new(cluster(2));
+        assert!(svc.submit(&db, "q99").is_err());
+        assert_eq!(svc.poll(QueryId(999)), QueryStatus::Unknown);
+        assert!(svc.wait(QueryId(999)).is_err());
+    }
+
+    #[test]
+    fn ranges_cover_exactly() {
+        let r = QueryService::ranges(103, 4);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[0].0, 0);
+        assert_eq!(r.last().unwrap().1, 103);
+        let total: usize = r.iter().map(|(s, e)| e - s).sum();
+        assert_eq!(total, 103);
+    }
+
+    #[test]
+    fn single_worker_service_matches_serial() {
+        let db = db(0.002, 11);
+        let svc = QueryService::with_config(
+            cluster(4),
+            ServiceConfig { workers: 1, ..ServiceConfig::default() },
+        );
+        assert_eq!(svc.workers(), 1);
+        let id = svc.submit(&db, "q12").unwrap();
+        let (rows, report) = svc.wait(id).unwrap();
+        assert!(queries::run_query(&db, "q12").unwrap().approx_eq_rows(&rows));
+        // One worker: the whole exchange is node-local.
+        assert_eq!(report.exchange_bytes, 0);
+        assert!(report.shuffle_bytes > 0);
+    }
+
+    #[test]
+    fn conversation_trace_is_ordered() {
+        let db = db(0.002, 47);
+        let w = 3;
+        let svc = QueryService::with_config(
+            cluster(w),
+            ServiceConfig { workers: w, ..ServiceConfig::default() },
+        );
+        let id = svc.submit(&db, "q1").unwrap();
+        svc.wait(id).unwrap();
+        let trace = svc.conversation(id);
+        let count = |p: &str| trace.iter().filter(|l| l.starts_with(p)).count();
+        // Leader sends exactly one plan + one range per worker, first.
+        assert_eq!(count("send Plan"), w);
+        assert_eq!(count("send Execute"), w);
+        for (i, line) in trace.iter().take(2 * w).enumerate() {
+            let wi = i / 2;
+            let want = if i % 2 == 0 {
+                format!("send Plan w{wi}")
+            } else {
+                format!("send Execute w{wi}")
+            };
+            assert!(line.starts_with(&want), "entry {i}: {line} !~ {want}");
+        }
+        // Every worker acks its map; reduce commands only after the last
+        // ack; reducer partials only after the reduce commands; done last.
+        assert_eq!(count("recv Ack"), w);
+        let pos = |p: &str| trace.iter().position(|l| l.starts_with(p)).unwrap();
+        let rpos = |p: &str| trace.iter().rposition(|l| l.starts_with(p)).unwrap();
+        assert!(rpos("recv Ack") < pos("send Reduce"));
+        assert!(rpos("send Reduce") < pos("recv Partial"));
+        assert!(count("send Reduce") >= 1 && count("send Reduce") <= w);
+        assert_eq!(count("recv Partial"), count("send Reduce"));
+        assert!(trace.last().unwrap().starts_with("done"), "{:?}", trace.last());
+    }
+
+    #[test]
+    fn cancel_is_best_effort_but_consistent() {
+        let db = db(0.005, 53);
+        let svc = QueryService::new(cluster(2));
+        let id = svc.submit(&db, "q18").unwrap();
+        let cancelled = svc.cancel(id);
+        if cancelled {
+            assert_eq!(svc.poll(id), QueryStatus::Cancelled);
+            let err = svc.wait(id).unwrap_err();
+            assert!(err.to_string().contains("cancelled"), "{err}");
+            // A second cancel is a no-op.
+            assert!(!svc.cancel(id));
+        } else {
+            // The query won the race; its result must still be correct.
+            let (rows, _) = svc.wait(id).unwrap();
+            assert!(queries::run_query(&db, "q18").unwrap().approx_eq_rows(&rows));
+        }
+        // The service stays usable either way.
+        let id2 = svc.submit(&db, "q6").unwrap();
+        let (rows, _) = svc.wait(id2).unwrap();
+        assert!(queries::run_query(&db, "q6").unwrap().approx_eq_rows(&rows));
+        assert!(!svc.cancel(QueryId(4242)), "unknown id is not cancellable");
+    }
+
+    #[test]
+    fn poll_reports_progress_phases() {
+        let db = db(0.002, 59);
+        let svc = QueryService::new(cluster(2));
+        let id = svc.submit(&db, "q6").unwrap();
+        // Whatever instant we sample, the status is a valid lifecycle
+        // state, and it reaches Done.
+        loop {
+            match svc.poll(id) {
+                QueryStatus::Mapping { acked, workers } => assert!(acked <= workers),
+                QueryStatus::Reducing { received, expected } => assert!(received <= expected),
+                QueryStatus::Done => break,
+                other => panic!("unexpected status {other:?}"),
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    // ------------------------------------------- credit-leak regression
+
+    #[test]
+    fn decode_and_merge_absorbs_all_bodies() {
+        let pool = ThreadPool::new(2);
+        let credits = Backpressure::new(2);
+        let bodies: Vec<Vec<u8>> = (0..6)
+            .map(|i| Partial::single(i, &[1.0], 1, ExecStats::default()).encode())
+            .collect();
+        let mut merger = Merger::new(1);
+        decode_and_merge(&pool, &credits, bodies, &mut merger).unwrap();
+        assert_eq!(credits.in_flight(), 0);
+        let p = merger.into_partial();
+        assert_eq!(p.len(), 6);
+        assert_eq!(p.keys, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn decoder_error_releases_credits() {
+        // Regression: a corrupt body mid-stream used to leak the credits
+        // of every in-flight partial (the error return skipped
+        // `release`). The gate must read zero in-flight afterwards and
+        // still admit new work.
+        let pool = ThreadPool::new(2);
+        let credits = Backpressure::new(1); // capacity 1 forces retirement
+        let good = |k: i64| Partial::single(k, &[1.0], 1, ExecStats::default()).encode();
+        let mut corrupt = good(99);
+        corrupt.truncate(corrupt.len() - 3);
+        let bodies = vec![good(1), corrupt, good(2), good(3)];
+        let mut merger = Merger::new(1);
+        let err = decode_and_merge(&pool, &credits, bodies, &mut merger);
+        assert!(err.is_err(), "corrupt body must surface an error");
+        assert_eq!(credits.in_flight(), 0, "error path leaked a credit");
+        assert!(credits.try_acquire(), "gate must still admit work");
+        credits.release();
+    }
+
+    #[test]
+    fn merge_width_error_releases_credits() {
+        let pool = ThreadPool::new(2);
+        let credits = Backpressure::new(2);
+        // Width-2 partial into a width-1 merger: absorb fails.
+        let bad = Partial::single(7, &[1.0, 2.0], 1, ExecStats::default()).encode();
+        let good = Partial::single(1, &[1.0], 1, ExecStats::default()).encode();
+        let mut merger = Merger::new(1);
+        let err = decode_and_merge(&pool, &credits, vec![good, bad], &mut merger);
+        assert!(err.is_err());
+        assert_eq!(credits.in_flight(), 0, "merge error leaked a credit");
+    }
+}

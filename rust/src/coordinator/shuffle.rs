@@ -1,159 +1,35 @@
-//! Distributed query execution: scatter partitions, compute real partial
-//! aggregates morsel by morsel, exchange hash-partitioned partials over
-//! the simulated fabric, reduce, merge.
+//! Compatibility wrapper over the message-native query service.
 //!
-//! This is the BigQuery-shaped workload of §5.2 run end to end *inside*
-//! the repository: the data is real (TPC-H partitions read in place — no
-//! copies), the per-worker compute is real (the unified engine kernel of
-//! [`crate::analytics::engine`] on scoped worker threads), the partial
-//! results cross a real wire format ([`crate::rpc::Message`] carrying an
-//! encoded [`Partial`]), worker tasks are placed on cluster nodes by the
-//! [`Scheduler`], and the network/storage time comes from the flow-level
-//! fabric simulator for whichever [`ClusterSpec`] is being evaluated.
-//! The resulting CPU/shuffle/IO breakdown is directly comparable to
-//! Figure 4.
-//!
-//! The shuffle is a **hash-partitioned partial exchange**: each worker
-//! splits its merged partial into `w` key-disjoint partitions
-//! ([`Partial::partition_by_key`]); partition `p` of every worker goes
-//! to the reducer co-located with worker `p`, which pre-merges them
-//! (worker order — deterministic) and ships one *already-merged,
-//! key-deduplicated* partial to the leader. Empty partitions are never
-//! encoded or shipped, so single-group queries exchange `O(w)` frames,
-//! not `O(w²)`. The leader then decodes `w`
-//! key-disjoint frames on the coordinator [`ThreadPool`] — a
-//! [`Backpressure`] credit held per frame from submission until merge
-//! bounds decoded-partial buffering — instead of merging every raw
-//! worker partial itself. For low-cardinality aggregates (Q1's four
-//! groups) this cuts leader-ward bytes by ~w×; for all queries it moves
-//! the merge CPU off the leader onto the workers.
-//!
-//! Every query in [`crate::analytics::queries::QUERY_NAMES`] has a
-//! distributed plan: dimension tables are broadcast (each worker
-//! compiles its own [`crate::analytics::engine::PlanSpec`] context),
-//! `lineitem` is range-partitioned, and the plan supplies the kernel and
-//! the leader-side finalizer.
+//! [`DistributedQuery`] used to *be* the distributed executor — a
+//! synchronous in-process function that shared the leader's address
+//! space. The executor now lives in [`super::service`]: leader and
+//! workers are RPC endpoints exchanging the typed frames of
+//! [`super::protocol`], and queries are submitted, polled, and awaited.
+//! This type remains as the one-shot face of that service:
+//! [`DistributedQuery::run`] is exactly `submit` + `wait` on a service
+//! scoped to the call. Use [`super::service::QueryService`] directly to
+//! interleave queries.
 
-use crate::analytics::engine::{self, Merger, Partial};
 use crate::analytics::morsel::DEFAULT_MORSEL_ROWS;
-use crate::analytics::queries::Row;
 use crate::analytics::tpch::TpchDb;
 use crate::cluster::ClusterSpec;
-use crate::coordinator::backpressure::Backpressure;
-use crate::coordinator::scheduler::{Scheduler, Task, TaskKind};
-use crate::error::{Error, Result};
-use crate::exec::{parallel_map, JoinHandle, ThreadPool};
-use crate::memsim::{simulate, WorkloadProfile};
-use crate::rpc::Message;
-use crate::simnet::Simulation;
-use std::collections::VecDeque;
-use std::time::Instant;
+use crate::coordinator::service::{QueryService, ServiceConfig};
+use crate::error::Result;
+use std::sync::Arc;
 
-/// Distributed execution report: result rows + the simulated breakdown.
-#[derive(Clone, Debug)]
-pub struct DistQueryReport {
-    pub query: String,
-    pub rows: Vec<Row>,
-    pub workers: usize,
-    /// Simulated seconds of per-worker compute (map + reduce makespans).
-    pub compute_secs: f64,
-    /// Simulated seconds for the two shuffle phases (partition exchange
-    /// + pre-merged partials to the leader).
-    pub shuffle_secs: f64,
-    /// Simulated seconds for reading input from disaggregated storage.
-    pub io_secs: f64,
-    /// Bytes crossing the fabric in the worker↔worker partition exchange
-    /// (a worker's own partition stays local and is not counted).
-    pub exchange_bytes: u64,
-    /// Bytes shuffled leader-ward: the pre-merged reducer partials.
-    pub shuffle_bytes: u64,
-    /// Bytes read from storage.
-    pub input_bytes: u64,
-    /// Wall seconds this process actually spent computing partials
-    /// (map + reduce phases).
-    pub host_compute_secs: f64,
-}
+pub use crate::coordinator::protocol::METHOD_PARTIAL;
+pub use crate::coordinator::service::DistQueryReport;
 
-impl DistQueryReport {
-    pub fn total_secs(&self) -> f64 {
-        self.compute_secs + self.shuffle_secs + self.io_secs
-    }
-
-    /// Normalized breakdown (cpu, shuffle, io).
-    pub fn breakdown(&self) -> (f64, f64, f64) {
-        let t = self.total_secs().max(1e-12);
-        (self.compute_secs / t, self.shuffle_secs / t, self.io_secs / t)
-    }
-}
-
-/// Distributed query executor over a cluster spec.
+/// One-shot distributed query executor over a cluster spec (a thin
+/// wrapper over [`QueryService`]).
 pub struct DistributedQuery {
     pub cluster: ClusterSpec,
     /// Worker nodes to use (≤ cluster nodes; 0 = all).
     pub workers: usize,
-    /// Local thread parallelism for computing the real partials
-    /// (0 = all cores).
+    /// Leader decode-pool threads (0 = all cores).
     pub threads: usize,
     /// Rows per morsel inside each worker's partition.
     pub morsel_rows: usize,
-}
-
-/// RPC method id for the shuffle wire protocol.
-pub const METHOD_PARTIAL: u32 = 0x51;
-
-/// Decode partial frames on `pool` and absorb them into `merger` in
-/// frame order. A backpressure credit is held per admitted frame from
-/// submission until its decoded partial has been merged, bounding
-/// decoded-but-unmerged buffering. Credits are released on *every* path
-/// — a decode or merge failure must not leak the credit out of a
-/// long-lived gate (the leak regression test below drives this).
-fn decode_and_merge(
-    pool: &ThreadPool,
-    credits: &Backpressure,
-    frames: Vec<Vec<u8>>,
-    merger: &mut Merger,
-) -> Result<()> {
-    let mut pending: VecDeque<JoinHandle<Result<Partial>>> = VecDeque::new();
-    let mut result: Result<()> = Ok(());
-    for frame in frames {
-        // Admission: retire the oldest in-flight partial (merge order
-        // stays frame order) until a credit frees up.
-        while result.is_ok() && !credits.try_acquire() {
-            let h = pending.pop_front().expect("credits exhausted with nothing pending");
-            let r = h.join().and_then(|p| merger.absorb(&p));
-            credits.release();
-            result = result.and(r);
-        }
-        if result.is_err() {
-            break;
-        }
-        pending.push_back(pool.submit(move || {
-            Message::decode(&frame)
-                .map_err(Error::msg)
-                .and_then(|msg| Partial::decode(&msg.payload))
-        }));
-    }
-    // Drain: release every remaining credit even after a failure.
-    while let Some(h) = pending.pop_front() {
-        let r = h.join().and_then(|p| merger.absorb(&p));
-        credits.release();
-        result = result.and(r);
-    }
-    result
-}
-
-/// Per-run inputs to the phase simulation.
-struct PhaseInputs<'a> {
-    input_bytes_each: u64,
-    /// `[worker][reducer]` frame bytes of the partition exchange.
-    exchange_pair_bytes: &'a [Vec<u64>],
-    /// Per-reducer pre-merged frame bytes shipped to the leader.
-    leader_bytes: &'a [u64],
-    /// Measured host seconds per worker (map) and per reducer (reduce).
-    worker_secs: &'a [f64],
-    reduce_secs: &'a [f64],
-    ht_bytes_each: u64,
-    worker_nodes: &'a [usize],
 }
 
 impl DistributedQuery {
@@ -176,278 +52,22 @@ impl DistributedQuery {
         self
     }
 
-    fn n_workers(&self) -> usize {
-        let n = self.cluster.num_nodes();
-        if self.workers == 0 {
-            n
-        } else {
-            self.workers.min(n)
-        }
-    }
-
-    /// Contiguous row ranges of `len` over `w` workers.
-    fn ranges(len: usize, w: usize) -> Vec<(usize, usize)> {
-        let chunk = len.div_ceil(w.max(1));
-        (0..w)
-            .map(|i| ((i * chunk).min(len), ((i + 1) * chunk).min(len)))
-            .collect()
-    }
-
     /// Run any query from the Figure-3 set distributed across the
-    /// cluster's workers. Result rows `approx_eq_rows` the single-node
+    /// cluster's workers: `submit` + `wait` on a call-scoped
+    /// [`QueryService`]. Result rows `approx_eq_rows` the single-node
     /// reference of [`crate::analytics::run_query`].
-    pub fn run(&self, db: &TpchDb, query: &str) -> Result<DistQueryReport> {
-        let spec = engine::spec(query)
-            .ok_or_else(|| crate::err!("query {query} has no distributed plan"))?;
-        let w = self.n_workers();
-        crate::ensure!(w >= 1, "cluster has no nodes");
-        let n = db.lineitem.len();
-        let ranges = Self::ranges(n, w);
-        let rows_each = ranges.first().map(|(s, e)| e - s).unwrap_or(0);
-        let input_bytes_each = if n == 0 {
-            0
-        } else {
-            (db.lineitem.bytes() as f64 * rows_each as f64 / n as f64) as u64
-        };
-
-        // Map phase: each simulated NIC worker compiles its broadcast
-        // context (dimension tables are replicated to every node), folds
-        // its partition morsel by morsel through the shared engine
-        // kernel, and hash-partitions the merged result into `w`
-        // key-disjoint RPC frames, one per reducer.
-        let morsel_rows = self.morsel_rows.max(1);
-        let t0 = Instant::now();
-        let indexed: Vec<(usize, (usize, usize))> = ranges.into_iter().enumerate().collect();
-        let worker_out: Vec<Result<(Vec<(usize, Vec<u8>)>, f64, u64)>> =
-            parallel_map(indexed, self.threads, |(wi, (lo, hi))| {
-                let t = Instant::now();
-                let (c, _prep) = (spec.compile)(db);
-                let mut merger = Merger::new(spec.width);
-                let mut morsel_ht_peak = 0u64;
-                let mut s = lo;
-                while s < hi {
-                    let e = (s + morsel_rows).min(hi);
-                    let p = engine::run_range(&c, spec.width, s, e);
-                    // Morsels run sequentially within a worker, so the
-                    // live working set is one morsel's hash table plus
-                    // the accumulated merge state — not the sum of every
-                    // transient table (which stats.ht_bytes records).
-                    morsel_ht_peak = morsel_ht_peak.max(p.stats.ht_bytes);
-                    merger.absorb(&p)?;
-                    s = e;
-                }
-                let partial = merger.into_partial();
-                let ht_bytes = morsel_ht_peak
-                    + partial.len() as u64 * Partial::group_bytes(spec.width) as u64;
-                // Empty partitions (single-group queries leave w-1 of
-                // them) are not encoded or shipped — no real system
-                // sends header-only frames.
-                let frames: Vec<(usize, Vec<u8>)> = partial
-                    .partition_by_key(w)
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, part)| !part.is_empty())
-                    .map(|(p_idx, part)| {
-                        let frame = Message {
-                            method: METHOD_PARTIAL,
-                            id: ((wi as u64) << 32) | p_idx as u64,
-                            payload: part.encode(),
-                        }
-                        .encode();
-                        (p_idx, frame)
-                    })
-                    .collect();
-                Ok((frames, t.elapsed().as_secs_f64(), ht_bytes))
-            });
-        let host_map_secs = t0.elapsed().as_secs_f64();
-        let mut frames_by_worker = Vec::with_capacity(w);
-        let mut host_secs = Vec::with_capacity(w);
-        let mut ht_bytes_each = 0u64;
-        for r in worker_out {
-            let (frames, secs, ht) = r?;
-            ht_bytes_each = ht_bytes_each.max(ht);
-            host_secs.push(secs);
-            frames_by_worker.push(frames);
-        }
-
-        // Exchange: partition p of every worker goes to reducer p
-        // (co-located with worker p). Frames regroup by reducer in
-        // worker order, so every reducer's merge is deterministic.
-        let mut exchange_pair_bytes = vec![vec![0u64; w]; w];
-        let mut by_reducer: Vec<Vec<Vec<u8>>> = (0..w).map(|_| Vec::with_capacity(w)).collect();
-        for (wi, frames) in frames_by_worker.into_iter().enumerate() {
-            for (p_idx, f) in frames {
-                exchange_pair_bytes[wi][p_idx] = f.len() as u64;
-                by_reducer[p_idx].push(f);
-            }
-        }
-        let exchange_bytes: u64 = exchange_pair_bytes
-            .iter()
-            .enumerate()
-            .map(|(wi, row)| {
-                row.iter()
-                    .enumerate()
-                    .filter(|(p, _)| *p != wi)
-                    .map(|(_, b)| *b)
-                    .sum::<u64>()
-            })
-            .sum();
-
-        // Reduce: each reducer decodes its w partition frames and
-        // pre-merges them into one key-deduplicated partial for the
-        // leader. This is the merge work the leader no longer does.
-        let t1 = Instant::now();
-        let reducer_in: Vec<(usize, Vec<Vec<u8>>)> = by_reducer.into_iter().enumerate().collect();
-        let reducer_out: Vec<Result<(Option<Vec<u8>>, f64)>> =
-            parallel_map(reducer_in, self.threads, |(p_idx, frames)| {
-                let t = Instant::now();
-                let mut m = Merger::new(spec.width);
-                for f in &frames {
-                    let msg = Message::decode(f).map_err(Error::msg)?;
-                    m.absorb(&Partial::decode(&msg.payload)?)?;
-                }
-                let merged = m.into_partial();
-                // A reducer whose partition is empty ships nothing.
-                let frame = if merged.is_empty() {
-                    None
-                } else {
-                    Some(
-                        Message {
-                            method: METHOD_PARTIAL,
-                            id: p_idx as u64,
-                            payload: merged.encode(),
-                        }
-                        .encode(),
-                    )
-                };
-                Ok((frame, t.elapsed().as_secs_f64()))
-            });
-        let host_reduce_secs = t1.elapsed().as_secs_f64();
-        let mut leader_bytes = vec![0u64; w];
-        let mut leader_frames: Vec<Vec<u8>> = Vec::with_capacity(w);
-        let mut reduce_secs = Vec::with_capacity(w);
-        for (p_idx, r) in reducer_out.into_iter().enumerate() {
-            let (f, s) = r?;
-            reduce_secs.push(s);
-            if let Some(f) = f {
-                leader_bytes[p_idx] = f.len() as u64;
-                leader_frames.push(f);
-            }
-        }
-        let shuffle_bytes: u64 = leader_bytes.iter().sum();
-
-        // Leader phase: decode the pre-merged, key-disjoint reducer
-        // frames on the coordinator thread pool and merge in partition
-        // order so the result is deterministic.
-        let pool = ThreadPool::new(self.threads);
-        let credits = Backpressure::new(pool.threads().max(1));
-        let mut merger = Merger::new(spec.width);
-        decode_and_merge(&pool, &credits, leader_frames, &mut merger)?;
-        let merged = merger.into_partial();
-        let rows: Vec<Row> = (spec.finalize)(db, &merged);
-
-        // Place the worker tasks on cluster nodes (role-aware, balanced
-        // by the measured per-worker seconds) so the simulated network
-        // phases charge flows to the nodes that actually ran them.
-        let mut sched = Scheduler::new(&self.cluster);
-        let tasks: Vec<Task> = host_secs
-            .iter()
-            .enumerate()
-            .map(|(id, &est)| Task { id, kind: TaskKind::Compute, est_secs: est.max(1e-9) })
-            .collect();
-        let placements = sched
-            .place_all(&tasks)
-            .ok_or_else(|| crate::err!("no eligible compute node for worker tasks"))?;
-        let worker_nodes: Vec<usize> = placements.iter().map(|p| p.node_id).collect();
-
-        let (compute_secs, shuffle_secs, io_secs) = self.simulate_phases(&PhaseInputs {
-            input_bytes_each,
-            exchange_pair_bytes: &exchange_pair_bytes,
-            leader_bytes: &leader_bytes,
-            worker_secs: &host_secs,
-            reduce_secs: &reduce_secs,
-            ht_bytes_each,
-            worker_nodes: &worker_nodes,
-        });
-        Ok(DistQueryReport {
-            query: query.to_string(),
-            rows,
-            workers: w,
-            compute_secs,
-            shuffle_secs,
-            io_secs,
-            exchange_bytes,
-            shuffle_bytes,
-            input_bytes: input_bytes_each * w as u64,
-            host_compute_secs: host_map_secs + host_reduce_secs,
-        })
-    }
-
-    /// Simulate the network phases and worker compute for a run where
-    /// the worker on `worker_nodes[i]` scanned `input_bytes_each`,
-    /// exchanged `exchange_pair_bytes[i][p]` with the reducer on
-    /// `worker_nodes[p]`, and the reducers shipped `leader_bytes[p]` to
-    /// the leader (node 0).
-    fn simulate_phases(&self, ph: &PhaseInputs<'_>) -> (f64, f64, f64) {
-        let topo = self.cluster.topology();
-        let n = topo.num_nodes();
-
-        // Phase 1 — storage read: each worker node pulls its partition
-        // from a storage replica on a different node (disaggregated
-        // storage).
-        let mut io_sim = Simulation::new(topo.clone());
-        for &node in ph.worker_nodes {
-            let src = (node + n / 2) % n;
-            if src != node && ph.input_bytes_each > 0 {
-                io_sim.add_flow(src, node, ph.input_bytes_each as f64, 0.0);
-            }
-        }
-        let io_secs = io_sim.run_makespan();
-
-        // Phase 2 — compute: each worker node runs its partition across
-        // all its cores; memsim gives the contention-adjusted speedup.
-        // Map and reduce are sequential phases, so their scaled
-        // makespans add.
-        let platform = self.cluster.platform();
-        let profile = WorkloadProfile {
-            cpu_secs: 1.0, // shape only: we scale measured time below
-            dram_bytes: (ph.input_bytes_each as f64).max(1.0),
-            working_set_bytes: (ph.ht_bytes_each as f64).max(4e6),
-        };
-        let k = platform.vcpus;
-        let r = simulate(platform, &profile, k);
-        // Effective parallel speedup on the node vs one uncontended core.
-        let single = simulate(platform, &profile, 1).per_core_rate;
-        let speedup = (r.system_rate / single).max(1e-9);
-        let host_to_platform = crate::analytics::profile::host_speed() / platform.st_speed;
-        let scale = |h: &f64| h * host_to_platform / speedup;
-        let map_secs = ph.worker_secs.iter().map(scale).fold(0.0, f64::max);
-        let red_secs = ph.reduce_secs.iter().map(scale).fold(0.0, f64::max);
-        let compute_secs = map_secs + red_secs;
-
-        // Phase 3 — partition exchange: worker i → reducer p. A worker's
-        // own partition stays on-node and adds no flow.
-        let mut ex_sim = Simulation::new(topo.clone());
-        for (wi, row) in ph.exchange_pair_bytes.iter().enumerate() {
-            for (p, &b) in row.iter().enumerate() {
-                let (src, dst) = (ph.worker_nodes[wi], ph.worker_nodes[p]);
-                if src != dst && b > 0 {
-                    ex_sim.add_flow(src, dst, b as f64, 0.0);
-                }
-            }
-        }
-        let exchange_secs = ex_sim.run_makespan();
-
-        // Phase 4 — pre-merged reducer partials to the leader (node 0).
-        let mut sh_sim = Simulation::new(topo);
-        for (p, &b) in ph.leader_bytes.iter().enumerate() {
-            let node = ph.worker_nodes[p];
-            if node != 0 && b > 0 {
-                sh_sim.add_flow(node, 0, b as f64, 0.0);
-            }
-        }
-        let shuffle_secs = exchange_secs + sh_sim.run_makespan();
-        (compute_secs, shuffle_secs, io_secs)
+    pub fn run(&self, db: &Arc<TpchDb>, query: &str) -> Result<DistQueryReport> {
+        let svc = QueryService::with_config(
+            self.cluster.clone(),
+            ServiceConfig {
+                workers: self.workers,
+                threads: self.threads,
+                morsel_rows: self.morsel_rows,
+            },
+        );
+        let id = svc.submit(db, query)?;
+        let (_rows, report) = svc.wait(id)?;
+        Ok(report)
     }
 }
 
@@ -463,9 +83,13 @@ mod tests {
         ClusterSpec::traditional(n, n2d_milan(), Role::LiteCompute)
     }
 
+    fn db(sf: f64, seed: u64) -> Arc<TpchDb> {
+        Arc::new(TpchDb::generate(TpchConfig::new(sf, seed)))
+    }
+
     #[test]
     fn every_query_matches_single_node() {
-        let db = TpchDb::generate(TpchConfig::new(0.005, 101));
+        let db = db(0.005, 101);
         for q in QUERY_NAMES {
             let single = queries::run_query(&db, q).unwrap();
             let dist = DistributedQuery::new(cluster(4)).run(&db, q).unwrap();
@@ -481,12 +105,13 @@ mod tests {
                 assert!(dist.shuffle_bytes > 0, "{q} shuffled nothing");
             }
             assert!(dist.compute_secs > 0.0, "{q} reported no compute");
+            assert!(dist.control_bytes > 0, "{q} charged no control frames");
         }
     }
 
     #[test]
     fn distributed_q1_matches_single_node() {
-        let db = TpchDb::generate(TpchConfig::new(0.002, 101));
+        let db = db(0.002, 101);
         let single = queries::q1::run(&db);
         let dist = DistributedQuery::new(cluster(4)).run(&db, "q1").unwrap();
         assert!(single.approx_eq_rows(&dist.rows), "distributed q1 diverged");
@@ -496,7 +121,7 @@ mod tests {
 
     #[test]
     fn distributed_q6_matches_single_node() {
-        let db = TpchDb::generate(TpchConfig::new(0.002, 103));
+        let db = db(0.002, 103);
         let single = queries::q6::run(&db);
         let dist = DistributedQuery::new(cluster(8)).run(&db, "q6").unwrap();
         assert!(single.approx_eq_rows(&dist.rows));
@@ -504,7 +129,7 @@ mod tests {
 
     #[test]
     fn distributed_q18_matches_single_node() {
-        let db = TpchDb::generate(TpchConfig::new(0.01, 107));
+        let db = db(0.01, 107);
         let single = queries::q18::run(&db);
         let dist = DistributedQuery::new(cluster(4)).run(&db, "q18").unwrap();
         assert!(single.approx_eq_rows(&dist.rows), "q18 diverged");
@@ -520,7 +145,7 @@ mod tests {
         // the partition exchange the leader must receive each group
         // once, not once per worker — leader-ward bytes stay near one
         // partial's worth no matter how many workers ran.
-        let db = TpchDb::generate(TpchConfig::new(0.002, 131));
+        let db = db(0.002, 131);
         let r2 = DistributedQuery::new(cluster(2)).run(&db, "q1").unwrap();
         let r8 = DistributedQuery::new(cluster(8)).run(&db, "q1").unwrap();
         // Fixed per-frame overhead grows with w; group payload must not
@@ -538,7 +163,7 @@ mod tests {
 
     #[test]
     fn morsel_size_does_not_change_results() {
-        let db = TpchDb::generate(TpchConfig::new(0.002, 211));
+        let db = db(0.002, 211);
         let single = queries::q5::run(&db);
         for rows in [128, 4096, 1 << 22] {
             let dist = DistributedQuery::new(cluster(3))
@@ -554,13 +179,13 @@ mod tests {
 
     #[test]
     fn unsupported_query_errors() {
-        let db = TpchDb::generate(TpchConfig::new(0.001, 109));
+        let db = db(0.001, 109);
         assert!(DistributedQuery::new(cluster(2)).run(&db, "q99").is_err());
     }
 
     #[test]
     fn worker_count_caps_at_cluster() {
-        let db = TpchDb::generate(TpchConfig::new(0.001, 113));
+        let db = db(0.001, 113);
         let r = DistributedQuery::new(cluster(3)).with_workers(64).run(&db, "q6").unwrap();
         assert_eq!(r.workers, 3);
     }
@@ -569,81 +194,12 @@ mod tests {
     fn lovelock_reduces_network_time() {
         // Same bytes, Lovelock φ=2 with 200G NICs vs servers with 100G:
         // shuffle+io time must shrink.
-        let db = TpchDb::generate(TpchConfig::new(0.005, 127));
+        let db = db(0.005, 127);
         let trad = cluster(4);
         let love = ClusterSpec::lovelock_e2000(&trad, 2);
         let rt = DistributedQuery::new(trad).run(&db, "q18").unwrap();
         let rl = DistributedQuery::new(love).run(&db, "q18").unwrap();
         assert!(rl.io_secs < rt.io_secs, "lovelock io {} vs trad {}", rl.io_secs, rt.io_secs);
         assert_eq!(rl.rows.len(), rt.rows.len());
-    }
-
-    #[test]
-    fn ranges_cover_exactly() {
-        let r = DistributedQuery::ranges(103, 4);
-        assert_eq!(r.len(), 4);
-        assert_eq!(r[0].0, 0);
-        assert_eq!(r.last().unwrap().1, 103);
-        let total: usize = r.iter().map(|(s, e)| e - s).sum();
-        assert_eq!(total, 103);
-    }
-
-    // ------------------------------------------- credit-leak regression
-
-    fn frame_of(p: &Partial) -> Vec<u8> {
-        Message { method: METHOD_PARTIAL, id: 0, payload: p.encode() }.encode()
-    }
-
-    #[test]
-    fn decode_and_merge_absorbs_all_frames() {
-        use crate::analytics::ops::ExecStats;
-        let pool = ThreadPool::new(2);
-        let credits = Backpressure::new(2);
-        let frames: Vec<Vec<u8>> = (0..6)
-            .map(|i| frame_of(&Partial::single(i, &[1.0], 1, ExecStats::default())))
-            .collect();
-        let mut merger = Merger::new(1);
-        decode_and_merge(&pool, &credits, frames, &mut merger).unwrap();
-        assert_eq!(credits.in_flight(), 0);
-        let p = merger.into_partial();
-        assert_eq!(p.len(), 6);
-        assert_eq!(p.keys, vec![0, 1, 2, 3, 4, 5]);
-    }
-
-    #[test]
-    fn decoder_error_releases_credits() {
-        // Regression: a corrupt frame mid-stream used to leak the
-        // credits of every in-flight partial (the error return skipped
-        // `release`). The gate must read zero in-flight afterwards and
-        // still admit new work.
-        use crate::analytics::ops::ExecStats;
-        let pool = ThreadPool::new(2);
-        let credits = Backpressure::new(1); // capacity 1 forces retirement
-        let good = |k: i64| frame_of(&Partial::single(k, &[1.0], 1, ExecStats::default()));
-        let mut corrupt = good(99);
-        // Truncate the payload: Message::decode succeeds (length prefix
-        // rewritten) is avoided by cutting inside the frame instead.
-        corrupt.truncate(corrupt.len() - 3);
-        let frames = vec![good(1), corrupt, good(2), good(3)];
-        let mut merger = Merger::new(1);
-        let err = decode_and_merge(&pool, &credits, frames, &mut merger);
-        assert!(err.is_err(), "corrupt frame must surface an error");
-        assert_eq!(credits.in_flight(), 0, "error path leaked a credit");
-        assert!(credits.try_acquire(), "gate must still admit work");
-        credits.release();
-    }
-
-    #[test]
-    fn merge_width_error_releases_credits() {
-        use crate::analytics::ops::ExecStats;
-        let pool = ThreadPool::new(2);
-        let credits = Backpressure::new(2);
-        // Width-2 partial into a width-1 merger: absorb fails.
-        let bad = frame_of(&Partial::single(7, &[1.0, 2.0], 1, ExecStats::default()));
-        let good = frame_of(&Partial::single(1, &[1.0], 1, ExecStats::default()));
-        let mut merger = Merger::new(1);
-        let err = decode_and_merge(&pool, &credits, vec![good, bad], &mut merger);
-        assert!(err.is_err());
-        assert_eq!(credits.in_flight(), 0, "merge error leaked a credit");
     }
 }

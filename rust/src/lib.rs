@@ -5,8 +5,9 @@
 //! more headless smart NICs; this crate provides:
 //!
 //! * the **cluster model** ([`cluster`]) and the **Lovelock coordinator**
-//!   ([`coordinator`]) — leader/worker scheduling, distributed shuffle,
-//!   backpressure;
+//!   ([`coordinator`]) — a message-native distributed query service
+//!   (leader and workers converse only in typed RPC frames; submit/poll/
+//!   wait/cancel sessions), role-aware scheduling, backpressure;
 //! * every **substrate** the paper's evaluation rests on: a TPC-H analytics
 //!   engine ([`analytics`]) with morsel-driven parallel execution
 //!   ([`analytics::morsel`]), a flow-level fabric simulator ([`simnet`]), a

@@ -9,12 +9,13 @@ use lovelock::analytics::{profile, run_query, TpchConfig, TpchDb, QUERY_NAMES};
 use lovelock::bigquery::{self, Breakdown};
 use lovelock::cli::Command;
 use lovelock::cluster::{ClusterSpec, Role};
-use lovelock::coordinator::DistributedQuery;
+use lovelock::coordinator::{QueryService, ServiceConfig};
 use lovelock::costmodel::CostModel;
 use lovelock::gnn::{GnnHost, LovelockGnn};
 use lovelock::memsim;
 use lovelock::platform::{self, table1_platforms};
 use lovelock::training::hostmodel::{CheckpointPolicy, GlamModel, TrainSetup};
+use std::sync::Arc;
 
 // The --morsel-rows help default below is a string literal; keep it in
 // lockstep with the engine's constant.
@@ -41,6 +42,7 @@ fn main() {
         .opt("steps", Some("50"), "training steps")
         .opt("log-every", Some("10"), "loss log interval")
         .opt("query", Some("q1"), "query name for dist")
+        .opt("concurrency", Some("1"), "simultaneous queries for dist (submit/poll/wait)")
         .flag("lovelock", "use a Lovelock (E2000) cluster for dist")
         .flag("serial", "run tpch single-threaded instead of morsel-driven")
         .flag("chunked", "use chunked-stream checkpointing");
@@ -255,7 +257,8 @@ fn cmd_dist(args: &lovelock::cli::Args) -> lovelock::Result<()> {
     let threads = args.get_usize("threads", 0);
     let morsel_rows = args.get_usize("morsel-rows", DEFAULT_MORSEL_ROWS);
     let query = args.get_str("query", "q1");
-    let db = TpchDb::generate(TpchConfig::new(sf, seed));
+    let concurrency = args.get_usize("concurrency", 1).max(1);
+    let db = Arc::new(TpchDb::generate(TpchConfig::new(sf, seed)));
     let trad = ClusterSpec::traditional(workers, platform::n2d_milan(), Role::LiteCompute);
     let cluster = if args.get_flag("lovelock") {
         ClusterSpec::lovelock_e2000(&trad, args.get_u64("phi", 2) as u32)
@@ -264,22 +267,39 @@ fn cmd_dist(args: &lovelock::cli::Args) -> lovelock::Result<()> {
     };
     let name = cluster.name.clone();
     // workers sizes the traditional cluster; a Lovelock replacement uses
-    // all φ·workers NIC nodes.
-    let r = DistributedQuery::new(cluster)
-        .with_threads(threads)
-        .with_morsel_rows(morsel_rows)
-        .run(&db, &query)?;
-    let (c, s, i) = r.breakdown();
-    println!(
-        "{query} on {name}: {} rows; sim total {:.3}s = cpu {:.0}% shuffle {:.0}% io {:.0}%; exchanged {} KB, {} KB to leader",
-        r.rows.len(),
-        r.total_secs(),
-        c * 100.0,
-        s * 100.0,
-        i * 100.0,
-        r.exchange_bytes / 1000,
-        r.shuffle_bytes / 1000
+    // all φ·workers NIC nodes. The service hosts one worker endpoint per
+    // node; --concurrency queries interleave over them.
+    let svc = QueryService::with_config(
+        cluster,
+        ServiceConfig { workers: 0, threads, morsel_rows },
     );
+    let t0 = std::time::Instant::now();
+    let ids: Vec<_> = (0..concurrency)
+        .map(|_| svc.submit(&db, &query))
+        .collect::<lovelock::Result<_>>()?;
+    for id in &ids {
+        let (_rows, r) = svc.wait(*id)?;
+        let (c, s, i) = r.breakdown();
+        println!(
+            "{id} {query} on {name}: {} rows; sim total {:.3}s = cpu {:.0}% shuffle {:.0}% io {:.0}%; exchanged {} KB, {} KB to leader, {} B control",
+            r.rows.len(),
+            r.total_secs(),
+            c * 100.0,
+            s * 100.0,
+            i * 100.0,
+            r.exchange_bytes / 1000,
+            r.shuffle_bytes / 1000,
+            r.control_bytes
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    if concurrency > 1 {
+        println!(
+            "{concurrency} concurrent queries in {:.1} ms host wall ({:.1} queries/s)",
+            wall * 1e3,
+            concurrency as f64 / wall
+        );
+    }
     Ok(())
 }
 

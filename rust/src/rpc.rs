@@ -5,18 +5,29 @@
 //!
 //! 1. **A real transport** ([`Endpoint`]) — length-prefixed messages over
 //!    in-process channels with a server dispatch loop. The coordinator's
-//!    leader/worker control plane runs on it, and `bench rpc` measures its
-//!    per-core message rate and large-message goodput (the §6 experiment:
-//!    "a single ARM core can sustain over 25 Gbps with large message
-//!    RPCs"; eRPC's 10 M small RPCs/s/core and ~75 Gbps large-message
-//!    numbers are the calibration points).
+//!    leader/worker protocol (see [`crate::coordinator::protocol`]) runs
+//!    on it, and `bench rpc` measures its per-core message rate and
+//!    large-message goodput (the §6 experiment: "a single ARM core can
+//!    sustain over 25 Gbps with large message RPCs"; eRPC's 10 M small
+//!    RPCs/s/core and ~75 Gbps large-message numbers are the calibration
+//!    points). Clients speak two verbs: [`Client::call`] (synchronous
+//!    request/response) and [`Client::cast`] (one-way fire-and-forget —
+//!    what the query protocol's state machines use so that two busy
+//!    endpoints can never deadlock waiting on each other's replies).
 //! 2. **An analytic model** ([`RpcModel`]) mapping per-message CPU cost and
 //!    per-byte cost to achievable Gbps per core on a given platform —
 //!    used to scale measured x86 numbers to smart-NIC ARM cores.
+//!
+//! Failures carry the crate-wide [`crate::error::Error`] (frame framing
+//! errors, closed endpoints, handler errors), never bare strings.
 
+use crate::error::Result;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
+
+/// Method id reserved for error responses.
+pub const METHOD_ERR: u32 = u32::MAX;
 
 /// Wire format: 16-byte header (method, len, id) + payload.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,26 +47,75 @@ impl Message {
         buf
     }
 
-    pub fn decode(buf: &[u8]) -> Result<Self, String> {
-        if buf.len() < 16 {
-            return Err(format!("short frame: {} bytes", buf.len()));
-        }
-        let method = u32::from_le_bytes(buf[0..4].try_into().unwrap());
-        let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
-        let id = u64::from_le_bytes(buf[8..16].try_into().unwrap());
-        if buf.len() != 16 + len {
-            return Err(format!("bad frame length: header says {len}, have {}", buf.len() - 16));
-        }
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        crate::ensure!(buf.len() >= 16, "short frame: {} bytes", buf.len());
+        let method = u32::from_le_bytes(buf[0..4].try_into()?);
+        let len = u32::from_le_bytes(buf[4..8].try_into()?) as usize;
+        let id = u64::from_le_bytes(buf[8..16].try_into()?);
+        crate::ensure!(
+            buf.len() == 16 + len,
+            "bad frame length: header says {len}, have {}",
+            buf.len() - 16
+        );
         Ok(Self { method, id, payload: buf[16..].to_vec() })
     }
 }
 
-/// Handler: method → response payload.
-pub type Handler = Arc<dyn Fn(&Message) -> Vec<u8> + Send + Sync>;
+/// Handler: method → response payload (or a protocol error, which the
+/// server encodes as a [`METHOD_ERR`] frame for `call`ers and drops for
+/// `cast`s — one-way senders must report failures with their own frames).
+pub type Handler = Arc<dyn Fn(&Message) -> Result<Vec<u8>> + Send + Sync>;
+
+/// Builder for an endpoint's method table — the typed-dispatch face of
+/// [`Endpoint::serve`].
+///
+/// ```
+/// use lovelock::rpc::Dispatch;
+/// let ep = Dispatch::new()
+///     .on(1, |m| Ok(m.payload.to_vec()))
+///     .serve();
+/// assert_eq!(ep.client().call(1, vec![9]).unwrap(), vec![9]);
+/// ```
+#[derive(Default)]
+pub struct Dispatch {
+    handlers: HashMap<u32, Handler>,
+}
+
+impl Dispatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register the handler for `method` (last registration wins).
+    pub fn on<F>(mut self, method: u32, f: F) -> Self
+    where
+        F: Fn(&Message) -> Result<Vec<u8>> + Send + Sync + 'static,
+    {
+        self.handlers.insert(method, Arc::new(f));
+        self
+    }
+
+    /// Spawn the endpoint serving this method table.
+    pub fn serve(self) -> Endpoint {
+        Endpoint::serve(self.handlers)
+    }
+}
+
+/// One queued request: an encoded frame with an optional reply channel
+/// (`None` marks a one-way `cast`), or the shutdown sentinel that
+/// `Endpoint`'s `Drop` enqueues. The sentinel is what lets an endpoint
+/// shut down even while other endpoints' handler state still holds
+/// `Client` senders to it — without it, a mesh of endpoints whose
+/// handlers hold clients to each other (the coordinator's topology)
+/// could never disconnect and every drop would deadlock on the join.
+enum Request {
+    Frame(Vec<u8>, Option<Sender<Vec<u8>>>),
+    Shutdown,
+}
 
 /// A served endpoint: spawn with handlers, then create [`Client`]s.
 pub struct Endpoint {
-    tx: Sender<(Vec<u8>, Sender<Vec<u8>>)>,
+    tx: Sender<Request>,
     server: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -63,27 +123,41 @@ impl Endpoint {
     /// Start a single-threaded server (one dispatch core — deliberately,
     /// to measure per-core capacity like the paper's experiment).
     pub fn serve(handlers: HashMap<u32, Handler>) -> Self {
-        let (tx, rx): (Sender<(Vec<u8>, Sender<Vec<u8>>)>, Receiver<_>) = channel();
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
         let server = std::thread::Builder::new()
             .name("rpc-server".into())
             .spawn(move || {
-                while let Ok((frame, reply_tx)) = rx.recv() {
+                // Exits on the shutdown sentinel or full disconnect,
+                // after draining everything queued before it.
+                while let Ok(Request::Frame(frame, reply_tx)) = rx.recv() {
                     let resp = match Message::decode(&frame) {
                         Ok(msg) => match handlers.get(&msg.method) {
-                            Some(h) => {
-                                let payload = h(&msg);
-                                Message { method: msg.method, id: msg.id, payload }.encode()
-                            }
+                            Some(h) => match h(&msg) {
+                                Ok(payload) => {
+                                    Message { method: msg.method, id: msg.id, payload }.encode()
+                                }
+                                Err(e) => Message {
+                                    method: METHOD_ERR,
+                                    id: msg.id,
+                                    payload: e.to_string().into_bytes(),
+                                }
+                                .encode(),
+                            },
                             None => {
                                 let payload = b"no such method".to_vec();
-                                Message { method: u32::MAX, id: msg.id, payload }.encode()
+                                Message { method: METHOD_ERR, id: msg.id, payload }.encode()
                             }
                         },
-                        Err(e) => {
-                            Message { method: u32::MAX, id: 0, payload: e.into_bytes() }.encode()
+                        Err(e) => Message {
+                            method: METHOD_ERR,
+                            id: 0,
+                            payload: e.to_string().into_bytes(),
                         }
+                        .encode(),
                     };
-                    let _ = reply_tx.send(resp);
+                    if let Some(reply_tx) = reply_tx {
+                        let _ = reply_tx.send(resp);
+                    }
                 }
             })
             .expect("spawn rpc server");
@@ -97,9 +171,12 @@ impl Endpoint {
 
 impl Drop for Endpoint {
     fn drop(&mut self) {
-        // Close the request channel, then join the server thread.
-        let (dead_tx, _) = channel();
-        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        // Enqueue the shutdown sentinel, then join: the server drains
+        // every frame queued before the sentinel and exits — even if
+        // outstanding `Client` clones (possibly held by other endpoints'
+        // handlers, possibly by this endpoint's own) never drop. Their
+        // later sends fail with "endpoint closed".
+        let _ = self.tx.send(Request::Shutdown);
         if let Some(h) = self.server.take() {
             let _ = h.join();
         }
@@ -109,30 +186,47 @@ impl Drop for Endpoint {
 /// Client handle (cheaply cloneable).
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<(Vec<u8>, Sender<Vec<u8>>)>,
+    tx: Sender<Request>,
     next_id: Arc<Mutex<u64>>,
 }
 
 impl Client {
+    fn fresh_id(&self) -> u64 {
+        let mut g = self.next_id.lock().unwrap();
+        *g += 1;
+        *g
+    }
+
     /// Synchronous call; returns the response payload.
-    pub fn call(&self, method: u32, payload: Vec<u8>) -> Result<Vec<u8>, String> {
-        let id = {
-            let mut g = self.next_id.lock().unwrap();
-            *g += 1;
-            *g
-        };
+    pub fn call(&self, method: u32, payload: Vec<u8>) -> Result<Vec<u8>> {
+        let id = self.fresh_id();
         let frame = Message { method, id, payload }.encode();
         let (rtx, rrx) = channel();
-        self.tx.send((frame, rtx)).map_err(|_| "endpoint closed".to_string())?;
-        let resp = rrx.recv().map_err(|_| "endpoint closed".to_string())?;
+        self.tx
+            .send(Request::Frame(frame, Some(rtx)))
+            .map_err(|_| crate::err!("endpoint closed"))?;
+        let resp = rrx.recv().map_err(|_| crate::err!("endpoint closed"))?;
         let msg = Message::decode(&resp)?;
-        if msg.method == u32::MAX {
-            return Err(String::from_utf8_lossy(&msg.payload).into_owned());
+        if msg.method == METHOD_ERR {
+            crate::bail!("{}", String::from_utf8_lossy(&msg.payload));
         }
-        if msg.id != id {
-            return Err(format!("response id mismatch: {} vs {}", msg.id, id));
-        }
+        crate::ensure!(msg.id == id, "response id mismatch: {} vs {}", msg.id, id);
         Ok(msg.payload)
+    }
+
+    /// One-way send: enqueue the frame and return immediately with the
+    /// number of bytes that crossed the wire. The handler's return value
+    /// is discarded; delivery is in-order per endpoint. This is the verb
+    /// the coordinator's protocol state machines use — a handler may
+    /// `cast` to a peer that is itself mid-handler without deadlock.
+    pub fn cast(&self, method: u32, payload: Vec<u8>) -> Result<usize> {
+        let id = self.fresh_id();
+        let frame = Message { method, id, payload }.encode();
+        let bytes = frame.len();
+        self.tx
+            .send(Request::Frame(frame, None))
+            .map_err(|_| crate::err!("endpoint closed"))?;
+        Ok(bytes)
     }
 }
 
@@ -194,6 +288,7 @@ impl RpcModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn close(a: f64, b: f64, tol: f64) -> bool {
         (a - b).abs() <= tol
@@ -216,17 +311,14 @@ mod tests {
 
     #[test]
     fn endpoint_dispatches() {
-        let mut handlers: HashMap<u32, Handler> = HashMap::new();
-        handlers.insert(
-            1,
-            Arc::new(|m: &Message| {
+        let ep = Dispatch::new()
+            .on(1, |m: &Message| {
                 let mut v = m.payload.clone();
                 v.reverse();
-                v
-            }),
-        );
-        handlers.insert(2, Arc::new(|_m: &Message| b"pong".to_vec()));
-        let ep = Endpoint::serve(handlers);
+                Ok(v)
+            })
+            .on(2, |_m: &Message| Ok(b"pong".to_vec()))
+            .serve();
         let c = ep.client();
         assert_eq!(c.call(1, vec![1, 2, 3]).unwrap(), vec![3, 2, 1]);
         assert_eq!(c.call(2, vec![]).unwrap(), b"pong".to_vec());
@@ -236,14 +328,60 @@ mod tests {
     fn unknown_method_errors() {
         let ep = Endpoint::serve(HashMap::new());
         let c = ep.client();
-        assert!(c.call(42, vec![]).is_err());
+        let err = c.call(42, vec![]).unwrap_err();
+        assert!(err.to_string().contains("no such method"));
+    }
+
+    #[test]
+    fn handler_error_reaches_caller_as_error() {
+        let ep = Dispatch::new()
+            .on(3, |_m: &Message| Err(crate::err!("handler exploded")))
+            .serve();
+        let err = ep.client().call(3, vec![]).unwrap_err();
+        assert!(err.to_string().contains("handler exploded"), "{err}");
+    }
+
+    #[test]
+    fn cast_is_one_way_and_ordered() {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = log.clone();
+        let ep = Dispatch::new()
+            .on(1, move |m: &Message| {
+                log2.lock().unwrap().push(m.payload[0]);
+                Ok(vec![])
+            })
+            .serve();
+        let c = ep.client();
+        for i in 0..10u8 {
+            let bytes = c.cast(1, vec![i]).unwrap();
+            assert_eq!(bytes, 17, "16B header + 1B payload");
+        }
+        // A closing call flushes the queue (the server is in-order).
+        c.call(1, vec![99]).unwrap();
+        let seen = log.lock().unwrap().clone();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 99]);
+    }
+
+    #[test]
+    fn cast_errors_are_dropped_not_fatal() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let hits2 = hits.clone();
+        let ep = Dispatch::new()
+            .on(1, move |_m: &Message| {
+                hits2.fetch_add(1, Ordering::SeqCst);
+                Err(crate::err!("boom"))
+            })
+            .on(2, |_m| Ok(vec![]))
+            .serve();
+        let c = ep.client();
+        c.cast(1, vec![]).unwrap(); // handler errors, nothing to report to
+        c.call(2, vec![]).unwrap(); // endpoint still serves
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
     }
 
     #[test]
     fn concurrent_clients() {
-        let mut handlers: HashMap<u32, Handler> = HashMap::new();
-        handlers.insert(1, Arc::new(|m: &Message| m.payload.clone()));
-        let ep = Endpoint::serve(handlers);
+        let ep = Dispatch::new().on(1, |m: &Message| Ok(m.payload.clone())).serve();
         let threads: Vec<_> = (0..8)
             .map(|t| {
                 let c = ep.client();

@@ -1,18 +1,21 @@
 //! Integration: coordinator × cluster × simnet × analytics — distributed
 //! queries on simulated traditional vs Lovelock clusters, validating the
-//! §5.2 argument inside the repo (not just the Fig. 4 arithmetic).
+//! §5.2 argument inside the repo (not just the Fig. 4 arithmetic), plus
+//! the message-native `QueryService` session API under concurrency.
 
 use lovelock::analytics::{queries, TpchConfig, TpchDb};
 use lovelock::bigquery::{project, Breakdown};
 use lovelock::cluster::{ClusterSpec, Role};
-use lovelock::coordinator::{Backpressure, DistributedQuery, Scheduler, Task, TaskKind};
+use lovelock::coordinator::{
+    Backpressure, DistributedQuery, QueryService, QueryStatus, Scheduler, ServiceConfig, Task,
+    TaskKind,
+};
 use lovelock::platform::{ipu_e2000, n2d_milan};
-use lovelock::rpc::{Endpoint, Handler};
-use std::collections::HashMap;
+use lovelock::rpc::Dispatch;
 use std::sync::Arc;
 
-fn db() -> TpchDb {
-    TpchDb::generate(TpchConfig::new(0.01, 777))
+fn db() -> Arc<TpchDb> {
+    Arc::new(TpchDb::generate(TpchConfig::new(0.01, 777)))
 }
 
 fn traditional(n: usize) -> ClusterSpec {
@@ -56,6 +59,59 @@ fn morsel_path_matches_distributed_path() {
 }
 
 #[test]
+fn concurrent_sessions_match_serial_regardless_of_wait_order() {
+    // The acceptance bar of the QueryService redesign: ≥4 simultaneous
+    // TPC-H queries interleaving over one service's shared scheduler,
+    // credits, and endpoints, each reproducing its serial rows no matter
+    // the completion order.
+    let db = db();
+    let svc = QueryService::with_config(
+        traditional(4),
+        ServiceConfig { threads: 2, ..ServiceConfig::default() },
+    );
+    let names = ["q1", "q6", "q18", "q5", "q12", "q14"];
+    let ids: Vec<_> = names.iter().map(|q| svc.submit(&db, q).unwrap()).collect();
+    // Interrogate the lifecycle while queries are in flight.
+    for id in &ids {
+        match svc.poll(*id) {
+            QueryStatus::Mapping { .. }
+            | QueryStatus::Reducing { .. }
+            | QueryStatus::Done => {}
+            other => panic!("{id}: unexpected status {other:?}"),
+        }
+    }
+    // Wait in reverse submit order.
+    for (q, id) in names.iter().zip(ids.iter()).rev() {
+        let (rows, report) = svc.wait(*id).unwrap();
+        let serial = queries::run_query(&db, q).unwrap();
+        assert!(serial.approx_eq_rows(&rows), "{q} ({id}) diverged under concurrency");
+        assert_eq!(report.workers, 4);
+        assert!(report.control_bytes > 0, "{q}: no control frames charged");
+    }
+}
+
+#[test]
+fn service_reuse_across_batches_is_deterministic() {
+    // The same service object serves successive batches; a query's rows
+    // do not depend on what ran before it.
+    let db = db();
+    let svc = QueryService::new(traditional(3));
+    let first = {
+        let id = svc.submit(&db, "q3").unwrap();
+        svc.wait(id).unwrap().0
+    };
+    for _ in 0..3 {
+        let noise = svc.submit(&db, "q18").unwrap();
+        let again = svc.submit(&db, "q3").unwrap();
+        let rows = svc.wait(again).unwrap().0;
+        let serial = queries::run_query(&db, "q3").unwrap();
+        assert!(serial.approx_eq_rows(&rows));
+        assert_eq!(rows.len(), first.len());
+        svc.wait(noise).unwrap();
+    }
+}
+
+#[test]
 fn lovelock_phi_reduces_network_phase() {
     // The §5.2 mechanism observed end-to-end: with φ=2 E2000s per Milan
     // server (200G vs 100G ports and twice the nodes), the simulated
@@ -87,15 +143,12 @@ fn breakdown_feeds_fig4_model() {
 fn scheduler_with_backpressure_executes_all_tasks() {
     // Leader/worker control plane over the real RPC endpoint with a
     // credit gate: all tasks complete, concurrency never exceeds credits.
-    let mut handlers: HashMap<u32, Handler> = HashMap::new();
-    handlers.insert(
-        1,
-        Arc::new(|m: &lovelock::rpc::Message| {
+    let ep = Dispatch::new()
+        .on(1, |m: &lovelock::rpc::Message| {
             // Worker: "execute" the task by echoing its id.
-            m.payload.clone()
-        }),
-    );
-    let ep = Endpoint::serve(handlers);
+            Ok(m.payload.clone())
+        })
+        .serve();
     let bp = Arc::new(Backpressure::new(4));
     let cluster = traditional(4);
     let mut sched = Scheduler::new(&cluster);

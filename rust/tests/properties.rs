@@ -1,5 +1,6 @@
 //! Property-based tests (via `proptest_mini`) on coordinator, simulator,
-//! and model invariants.
+//! and model invariants — including the exact-inverse property of every
+//! frame codec in the leader↔worker wire protocol.
 
 use lovelock::analytics::{TpchConfig, TpchDb};
 use lovelock::cluster::{ClusterSpec, Role};
@@ -175,7 +176,7 @@ fn prop_dbgen_deterministic_and_fk_closed() {
 fn prop_distributed_q6_invariant_to_worker_count() {
     // Routing/partitioning invariance: any worker count gives the same
     // answer (the shuffle-conservation property).
-    let db = TpchDb::generate(TpchConfig::new(0.002, 99));
+    let db = std::sync::Arc::new(TpchDb::generate(TpchConfig::new(0.002, 99)));
     let reference = lovelock::analytics::run_query(&db, "q6").unwrap();
     let strat = int_range(1, 12);
     check("dist_q6_workers", &strat, |w| {
@@ -233,6 +234,86 @@ fn prop_partial_codec_roundtrip() {
         if d.width != p.width || d.keys != p.keys || d.accs != p.accs || d.counts != p.counts {
             return Err(format!("roundtrip mismatch at width {w}, {} groups", p.len()));
         }
+        Ok(())
+    });
+}
+
+/// Build a short printable string from a generated integer (the
+/// mini-framework has no string strategy; shrinking the int shrinks the
+/// string toward empty).
+fn int_to_name(v: i64) -> String {
+    let n = (v.unsigned_abs() % 1000) as usize;
+    format!("q{n}")
+}
+
+#[test]
+fn prop_protocol_frame_codecs_roundtrip() {
+    // Every frame codec of the query-service wire protocol is an exact
+    // inverse: encode → decode is the identity on any field values, and
+    // decode rejects one-byte truncations of any encoding.
+    use lovelock::coordinator::protocol::{
+        Ack, CancelQuery, ExecuteRange, PartialFrame, PlanFragment, QueryId, ReduceCmd,
+    };
+    let strat = pair_of(
+        pair_of(int_range(0, i64::MAX / 2), int_range(0, 5000)),
+        vec_of(int_range(0, 1 << 30), 0, 24),
+    );
+    check("protocol_codecs", &strat, |((qid, small), list)| {
+        let qid = QueryId(*qid as u64);
+        let small_u = *small as u32;
+        let u64s: Vec<u64> = list.iter().map(|&v| v as u64).collect();
+        let u32s: Vec<u32> = list.iter().map(|&v| (v % (1 << 20)) as u32).collect();
+        let bytes: Vec<u8> = list.iter().map(|&v| (v % 256) as u8).collect();
+
+        let plan = PlanFragment {
+            query_id: qid,
+            query: int_to_name(*small),
+            width: small_u % 64,
+            workers: small_u % 128,
+            morsel_rows: *small as u64,
+        };
+        let exec = ExecuteRange {
+            query_id: qid,
+            worker: small_u,
+            lo: u64s.first().copied().unwrap_or(0),
+            hi: u64s.last().copied().unwrap_or(0),
+        };
+        let ack = Ack {
+            query_id: qid,
+            worker: small_u,
+            map_ns: *small as u64 * 7,
+            ht_bytes: *small as u64 * 31,
+            part_bytes: u64s.clone(),
+            error: if small % 2 == 0 { String::new() } else { int_to_name(*small) },
+        };
+        let red = ReduceCmd { query_id: qid, partition: small_u, expect: u32s };
+        let part = PartialFrame {
+            query_id: qid,
+            partition: small_u,
+            from_worker: small_u / 2,
+            reduce_ns: *small as u64,
+            body: bytes,
+        };
+        let cancel = CancelQuery { query_id: qid };
+
+        macro_rules! roundtrip {
+            ($ty:ident, $v:expr) => {{
+                let enc = $v.encode();
+                let dec = $ty::decode(&enc).map_err(|e| format!("{}: {e}", stringify!($ty)))?;
+                if dec != $v {
+                    return Err(format!("{} roundtrip mismatch", stringify!($ty)));
+                }
+                if !enc.is_empty() && $ty::decode(&enc[..enc.len() - 1]).is_ok() {
+                    return Err(format!("{} accepted truncated frame", stringify!($ty)));
+                }
+            }};
+        }
+        roundtrip!(PlanFragment, plan);
+        roundtrip!(ExecuteRange, exec);
+        roundtrip!(Ack, ack);
+        roundtrip!(ReduceCmd, red);
+        roundtrip!(PartialFrame, part);
+        roundtrip!(CancelQuery, cancel);
         Ok(())
     });
 }
