@@ -34,6 +34,16 @@ fi
 echo "==> cargo test -q"
 cargo test -q
 
+# Alloc-count gate: a per-row allocation sneaking back into the batch
+# kernels must fail CI, not wait for someone to read bench output. The
+# `cargo test -q` above already ran the alloc_regression test in debug
+# (quick mode's coverage); the full gate re-runs it in release, where
+# the optimized code that ships is what gets measured.
+if [ "${1:-}" != "quick" ]; then
+    echo "==> alloc-count regression (release)"
+    cargo test --release -q --test alloc_regression
+fi
+
 if [ "${1:-}" != "quick" ]; then
     # Bench smoke: run every bench once with the short measurement loop
     # (LOVELOCK_BENCH_QUICK), so a bench that panics (or drifts from a

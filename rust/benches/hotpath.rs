@@ -3,14 +3,19 @@
 //!
 //! Emits `BENCH_hotpath.json` next to the working directory so the
 //! speedup tables in EXPERIMENTS.md can be regenerated mechanically.
+//!
+//! The bench binary installs [`CountingAlloc`] as its global allocator
+//! and reports **allocations per morsel** for the steady-state fold of
+//! q6 and q1 — the zero-allocation contract of the batch kernels,
+//! measured, not asserted (the `alloc_regression` test asserts it).
 
-use lovelock::analytics::engine::{self, HashAgg, HashJoinTable, Merger};
+use lovelock::analytics::engine::{self, HashAgg, HashJoinTable, Merger, Sel, TaskScratch};
 use lovelock::analytics::morsel::run_query_morsel;
 use lovelock::analytics::ops::{
     all_rows, filter_i32_range, hash_join, par_filter_i32_range, ExecStats,
 };
 use lovelock::analytics::{run_query, TpchConfig, TpchDb, QUERY_NAMES};
-use lovelock::benchkit::{black_box, Bench};
+use lovelock::benchkit::{black_box, Bench, CountingAlloc};
 use lovelock::cluster::{ClusterSpec, Role};
 use lovelock::coordinator::{DistributedQuery, QueryService, ServiceConfig};
 use lovelock::platform::n2d_milan;
@@ -18,10 +23,40 @@ use lovelock::prng::Pcg64;
 use lovelock::simnet::{Simulation, Topology};
 use std::sync::Arc;
 
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
 /// Scale-factor override for CI smoke runs (`LOVELOCK_BENCH_SF`,
 /// `LOVELOCK_BENCH_SF_BIG`).
 fn env_sf(var: &str, default: f64) -> f64 {
     std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Steady-state allocations per morsel of a query's fold: warm one full
+/// pass (scratch + groups reach high water), then count allocation
+/// events across a second identical pass.
+fn allocs_per_morsel(db: &TpchDb, q: &str, morsel_rows: usize) -> (f64, usize) {
+    let spec = engine::spec(q).unwrap();
+    let (c, _prep) = (spec.compile)(db);
+    let n = db.lineitem.len();
+    let mut agg = engine::agg_for(&c, spec.width, n);
+    let mut scr = TaskScratch::new();
+    let mut fold = |agg: &mut HashAgg, scr: &mut TaskScratch| {
+        let mut stats = ExecStats::default();
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + morsel_rows).min(n);
+            engine::fold_range(&c, spec.width, lo, hi, agg, scr, &mut stats);
+            lo = hi;
+        }
+        stats.rows_in
+    };
+    fold(&mut agg, &mut scr); // warm-up pass
+    let before = CountingAlloc::allocations();
+    fold(&mut agg, &mut scr); // measured pass
+    let allocs = CountingAlloc::allocations() - before;
+    let morsels = n.div_ceil(morsel_rows).max(1);
+    (allocs as f64 / morsels as f64, morsels)
 }
 
 fn main() {
@@ -29,11 +64,33 @@ fn main() {
     let db = Arc::new(TpchDb::generate(TpchConfig::new(env_sf("LOVELOCK_BENCH_SF", 0.02), 9)));
     let li_rows = db.lineitem.len() as u64;
 
-    // Full single-node queries (engine end to end).
+    // Allocations per morsel, steady state (the tentpole metric of the
+    // zero-allocation kernels; 0.00 is the contract).
+    for q in ["q6", "q1", "q18"] {
+        let (apm, morsels) = allocs_per_morsel(&db, q, 16_384);
+        b.row(
+            &format!("{q} allocs/morsel steady-state"),
+            format!("{apm:.2}"),
+            format!("counting allocator over {morsels} warm morsels"),
+        );
+    }
+
+    // Full single-node queries (engine end to end), keeping each
+    // query's scanned-bytes figure for the morsel rows below.
+    let mut query_bytes = Vec::with_capacity(QUERY_NAMES.len());
     for q in QUERY_NAMES {
         let bytes = run_query(&db, q).unwrap().stats.bytes_scanned;
+        query_bytes.push((q, bytes));
         b.measure_throughput(&format!("query {q}"), bytes, || {
             black_box(run_query(&db, q).unwrap());
+        });
+    }
+
+    // Per-query morsel throughput at the default morsel size — the
+    // batched-kernel rows the perf loop tracks query by query.
+    for &(q, bytes) in &query_bytes {
+        b.measure_throughput(&format!("{q} morsel x4"), bytes, || {
+            black_box(run_query_morsel(&db, q, 4, 16_384).unwrap());
         });
     }
 
@@ -53,17 +110,20 @@ fn main() {
         }
     }
 
-    // Engine kernels: predicate eval, compile+kernel, partition exchange.
+    // Engine kernels: predicate eval (ping-pong scratch, branchless
+    // leaves), compile+kernel, partition exchange.
     let q6 = engine::spec("q6").unwrap();
     let (c6, _) = (q6.compile)(&db);
+    let mut scr6 = engine::SelScratch::new();
     b.measure_throughput("q6 eval_predicate", li_rows * 4, || {
         let mut st = ExecStats::default();
-        black_box(c6.pred.eval(0, db.lineitem.len(), &mut st));
+        black_box(c6.pred.eval_into(0, db.lineitem.len(), &mut scr6, &mut st).len());
     });
     let q18 = engine::spec("q18").unwrap();
     let (c18, _) = (q18.compile)(&db);
+    let mut scr18 = TaskScratch::new();
     b.measure_throughput("q18 kernel (full range)", li_rows * 16, || {
-        black_box(engine::run_range(&c18, q18.width, 0, db.lineitem.len()));
+        black_box(engine::run_range_scratch(&c18, q18.width, 0, db.lineitem.len(), &mut scr18));
     });
     let p18 = engine::run_range(&c18, q18.width, 0, db.lineitem.len());
     b.measure("q18 partition_by_key x8", || {
@@ -105,12 +165,22 @@ fn main() {
         },
     );
 
+    // Row-at-a-time vs batched aggregation over the same key stream.
     let agg_keys: Vec<i64> = (0..500_000).map(|_| rng.gen_range_i64(0, 4096)).collect();
-    b.measure_throughput("hashagg 500k/4096g", (agg_keys.len() * 8) as u64, || {
+    let agg_c0: Vec<f64> = vec![1.0; agg_keys.len()];
+    let agg_c1: Vec<f64> = vec![2.0; agg_keys.len()];
+    b.measure_throughput("hashagg 500k/4096g row-at-a-time", (agg_keys.len() * 8) as u64, || {
         let mut g = HashAgg::with_capacity(2, 4096);
         for &k in &agg_keys {
             g.update(k, &[1.0, 2.0]);
         }
+        black_box(g.len());
+    });
+    let mut gids = Vec::new();
+    b.measure_throughput("hashagg 500k/4096g update_sel", (agg_keys.len() * 8) as u64, || {
+        let mut g = HashAgg::with_capacity(2, 4096);
+        let cols = [agg_c0.as_slice(), agg_c1.as_slice()];
+        g.update_sel(&agg_keys, Sel::Range(0, agg_keys.len()), &cols, &mut gids);
         black_box(g.len());
     });
 

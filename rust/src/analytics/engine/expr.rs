@@ -2,18 +2,123 @@
 //!
 //! A [`Predicate`] is a small expression tree the query plans build once
 //! at compile time and the shared kernel evaluates per morsel into a
-//! *selection vector* (`Vec<u32>` of surviving row ids). Conjunctions
-//! evaluate left to right: the first conjunct scans the raw row range,
-//! every later conjunct narrows the previous selection — exactly the
-//! cascading-filter shape the hand-written query paths used to spell out
-//! per query, with per-conjunct [`ExecStats`] accounting (each leaf
-//! charges its column bytes on the rows it actually examined).
+//! *selection* ([`Sel`]). Conjunctions evaluate left to right: the first
+//! conjunct scans the raw row range, every later conjunct narrows the
+//! previous selection — exactly the cascading-filter shape the
+//! hand-written query paths used to spell out per query, with
+//! per-conjunct [`ExecStats`] accounting (each leaf charges its column
+//! bytes on the rows it actually examined).
+//!
+//! The hot entry point is [`Predicate::eval_into`]: it writes into the
+//! caller's reusable [`SelScratch`] ping-pong buffers (zero allocations
+//! in steady state), the leaves run branchless
+//! ([`crate::analytics::ops::select_into`] /
+//! [`crate::analytics::ops::refine_into`]), and an all-pass predicate
+//! ([`Predicate::True`], empty conjunction) returns [`Sel::Range`]
+//! without materializing a single row id — on *every* execution path,
+//! serial, morsel, and distributed alike.
 
 use crate::analytics::column::Column;
-use crate::analytics::ops::{filter_f64_lt, filter_f64_range, filter_i32_range, ExecStats};
+use crate::analytics::ops::{self, ExecStats};
 
-/// A predicate over lineitem rows, evaluated vectorized into selection
-/// vectors. Leaves borrow the columns they test for `'a`.
+/// A set of surviving row ids: either a dense range (the all-pass fast
+/// path — nothing materialized) or explicit ids in a scratch buffer.
+#[derive(Clone, Copy, Debug)]
+pub enum Sel<'a> {
+    /// Every row in `[lo, hi)` passes.
+    Range(usize, usize),
+    /// Explicit surviving row ids, ascending.
+    Ids(&'a [u32]),
+}
+
+impl<'a> Sel<'a> {
+    /// Number of selected rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            Sel::Range(lo, hi) => hi - lo,
+            Sel::Ids(ids) => ids.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Visit every selected row id, in order.
+    #[inline]
+    pub fn for_each<F: FnMut(usize)>(self, mut f: F) {
+        match self {
+            Sel::Range(lo, hi) => {
+                for i in lo..hi {
+                    f(i);
+                }
+            }
+            Sel::Ids(ids) => {
+                for &i in ids {
+                    f(i as usize);
+                }
+            }
+        }
+    }
+
+    /// Materialize an owned id vector (drivers off the hot path, tests).
+    pub fn to_vec(self) -> Vec<u32> {
+        match self {
+            Sel::Range(lo, hi) => (lo as u32..hi as u32).collect(),
+            Sel::Ids(ids) => ids.to_vec(),
+        }
+    }
+}
+
+/// Reusable ping-pong selection buffers for predicate cascades: the
+/// first conjunct writes buffer `a`, every later conjunct narrows into
+/// the other buffer and the roles swap. Buffers are held at their
+/// high-water length (never truncated), so a task that evaluates
+/// same-sized morsels forever allocates on the first morsel only and
+/// never re-zeroes grown regions.
+#[derive(Default)]
+pub struct SelScratch {
+    a: Vec<u32>,
+    b: Vec<u32>,
+}
+
+impl SelScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes currently held (both buffers) — capacity telemetry.
+    pub fn bytes(&self) -> usize {
+        (self.a.capacity() + self.b.capacity()) * 4
+    }
+
+    fn ensure(buf: &mut Vec<u32>, n: usize) {
+        if buf.len() < n {
+            buf.resize(n, 0);
+        }
+    }
+
+    /// Source slice + destination buffer for one narrowing step, with
+    /// the destination grown to `need` first.
+    fn pair(&mut self, src_is_a: bool, need: usize) -> (&[u32], &mut [u32]) {
+        if src_is_a {
+            Self::ensure(&mut self.b, need);
+        } else {
+            Self::ensure(&mut self.a, need);
+        }
+        let Self { a, b } = self;
+        if src_is_a {
+            (a.as_slice(), b.as_mut_slice())
+        } else {
+            (b.as_slice(), a.as_mut_slice())
+        }
+    }
+}
+
+/// A predicate over lineitem rows, evaluated vectorized into selections.
+/// Leaves borrow the columns they test for `'a`.
 pub enum Predicate<'a> {
     /// Every row passes (pure-scan queries: Q5, Q9, Q18).
     True,
@@ -61,6 +166,15 @@ impl<'a> Predicate<'a> {
         Predicate::And(preds)
     }
 
+    /// True iff no row can be rejected (the dense-range fast path).
+    pub fn is_all_pass(&self) -> bool {
+        match self {
+            Predicate::True => true,
+            Predicate::And(ps) => ps.iter().all(|p| p.is_all_pass()),
+            _ => false,
+        }
+    }
+
     /// Column bytes per examined row a leaf charges to [`ExecStats`].
     fn leaf_bytes(&self) -> usize {
         match self {
@@ -71,67 +185,107 @@ impl<'a> Predicate<'a> {
         }
     }
 
-    /// Evaluate over the raw row range `[lo, hi)`, producing the ids of
-    /// surviving rows in row order and charging per-conjunct scan stats.
-    pub fn eval(&self, lo: usize, hi: usize, stats: &mut ExecStats) -> Vec<u32> {
+    /// Branchless dense-range evaluation of a leaf into `out[..hi - lo]`;
+    /// ids are absolute. Returns the survivor count.
+    fn select_range(&self, lo: usize, hi: usize, out: &mut [u32]) -> usize {
         match self {
-            Predicate::True => (lo as u32..hi as u32).collect(),
-            Predicate::And(ps) => {
-                let mut sel: Option<Vec<u32>> = None;
-                for p in ps {
-                    sel = Some(match sel {
-                        None => p.eval(lo, hi, stats),
-                        Some(s) => p.filter(&s, stats),
-                    });
-                }
-                sel.unwrap_or_else(|| (lo as u32..hi as u32).collect())
+            Predicate::I32Range { col, lo: a, hi: b } => ops::select_into(lo, hi, out, |i| {
+                let v = col[i];
+                v >= *a && v < *b
+            }),
+            Predicate::I32ColLt { a, b } => ops::select_into(lo, hi, out, |i| a[i] < b[i]),
+            Predicate::F64Range { col, lo: a, hi: b } => ops::select_into(lo, hi, out, |i| {
+                let v = col[i];
+                v >= *a && v < *b
+            }),
+            Predicate::F64Lt { col, x } => ops::select_into(lo, hi, out, |i| col[i] < *x),
+            Predicate::CodeSet { codes, ok } => {
+                ops::select_into(lo, hi, out, |i| ok[codes[i] as usize])
             }
-            leaf => {
-                stats.scan(hi - lo, leaf.leaf_bytes());
-                let mut out = Vec::with_capacity(hi - lo);
-                match leaf {
-                    Predicate::I32Range { col, lo: a, hi: b } => {
-                        for i in lo..hi {
-                            let v = col[i];
-                            if v >= *a && v < *b {
-                                out.push(i as u32);
-                            }
-                        }
-                    }
-                    Predicate::I32ColLt { a, b } => {
-                        for i in lo..hi {
-                            if a[i] < b[i] {
-                                out.push(i as u32);
-                            }
-                        }
-                    }
-                    Predicate::F64Range { col, lo: a, hi: b } => {
-                        for i in lo..hi {
-                            let v = col[i];
-                            if v >= *a && v < *b {
-                                out.push(i as u32);
-                            }
-                        }
-                    }
-                    Predicate::F64Lt { col, x } => {
-                        for i in lo..hi {
-                            if col[i] < *x {
-                                out.push(i as u32);
-                            }
-                        }
-                    }
-                    Predicate::CodeSet { codes, ok } => {
-                        for i in lo..hi {
-                            if ok[codes[i] as usize] {
-                                out.push(i as u32);
-                            }
-                        }
-                    }
-                    Predicate::True | Predicate::And(_) => unreachable!(),
-                }
-                out
-            }
+            Predicate::True | Predicate::And(_) => unreachable!("not a leaf"),
         }
+    }
+
+    /// Branchless narrowing of `sel` into `out[..sel.len()]`.
+    fn refine(&self, sel: &[u32], out: &mut [u32]) -> usize {
+        match self {
+            Predicate::I32Range { col, lo: a, hi: b } => ops::refine_into(sel, out, |i| {
+                let v = col[i];
+                v >= *a && v < *b
+            }),
+            Predicate::I32ColLt { a, b } => ops::refine_into(sel, out, |i| a[i] < b[i]),
+            Predicate::F64Range { col, lo: a, hi: b } => ops::refine_into(sel, out, |i| {
+                let v = col[i];
+                v >= *a && v < *b
+            }),
+            Predicate::F64Lt { col, x } => ops::refine_into(sel, out, |i| col[i] < *x),
+            Predicate::CodeSet { codes, ok } => {
+                ops::refine_into(sel, out, |i| ok[codes[i] as usize])
+            }
+            Predicate::True | Predicate::And(_) => unreachable!("not a leaf"),
+        }
+    }
+
+    /// Evaluate over the raw row range `[lo, hi)` into the caller's
+    /// ping-pong scratch, producing surviving rows in row order and
+    /// charging per-conjunct scan stats. All-pass predicates return
+    /// [`Sel::Range`] — no ids are materialized on any path. Allocates
+    /// only while the scratch grows to its high-water morsel size.
+    pub fn eval_into<'s>(
+        &self,
+        lo: usize,
+        hi: usize,
+        scr: &'s mut SelScratch,
+        stats: &mut ExecStats,
+    ) -> Sel<'s> {
+        let mut cur: Option<(bool, usize)> = None; // (selection is in `a`, live length)
+        self.apply_into(lo, hi, scr, &mut cur, stats);
+        match cur {
+            None => Sel::Range(lo, hi),
+            Some((in_a, n)) => Sel::Ids(if in_a { &scr.a[..n] } else { &scr.b[..n] }),
+        }
+    }
+
+    /// One cascade step: leaves evaluate (dense) or narrow (ping-pong);
+    /// conjunctions recurse; `True` is a no-op.
+    fn apply_into(
+        &self,
+        lo: usize,
+        hi: usize,
+        scr: &mut SelScratch,
+        cur: &mut Option<(bool, usize)>,
+        stats: &mut ExecStats,
+    ) {
+        match self {
+            Predicate::True => {}
+            Predicate::And(ps) => {
+                for p in ps {
+                    p.apply_into(lo, hi, scr, cur, stats);
+                }
+            }
+            leaf => match *cur {
+                None => {
+                    stats.scan(hi - lo, leaf.leaf_bytes());
+                    SelScratch::ensure(&mut scr.a, hi - lo);
+                    let k = leaf.select_range(lo, hi, &mut scr.a);
+                    *cur = Some((true, k));
+                }
+                Some((in_a, n)) => {
+                    stats.scan(n, leaf.leaf_bytes());
+                    let (src, dst) = scr.pair(in_a, n);
+                    let k = leaf.refine(&src[..n], dst);
+                    *cur = Some((!in_a, k));
+                }
+            },
+        }
+    }
+
+    /// Evaluate over `[lo, hi)` into a fresh vector — the allocating
+    /// convenience form of [`Predicate::eval_into`] (tests, one-shot
+    /// callers off the hot path).
+    pub fn eval(&self, lo: usize, hi: usize, stats: &mut ExecStats) -> Vec<u32> {
+        let mut scr = SelScratch::new();
+        self.eval_into(lo, hi, &mut scr, stats).to_vec()
     }
 
     /// Narrow an existing selection vector (the cascaded-conjunct path),
@@ -148,26 +302,10 @@ impl<'a> Predicate<'a> {
             }
             leaf => {
                 stats.scan(sel.len(), leaf.leaf_bytes());
-                match leaf {
-                    Predicate::I32Range { col, lo, hi } => filter_i32_range(sel, col, *lo, *hi),
-                    Predicate::I32ColLt { a, b } => sel
-                        .iter()
-                        .copied()
-                        .filter(|&i| a[i as usize] < b[i as usize])
-                        .collect(),
-                    Predicate::F64Range { col, lo, hi } => filter_f64_range(sel, col, *lo, *hi),
-                    Predicate::F64Lt { col, x } => filter_f64_lt(sel, col, *x),
-                    Predicate::CodeSet { codes, ok } => {
-                        let mut out = Vec::with_capacity(sel.len());
-                        for &i in sel {
-                            if ok[codes[i as usize] as usize] {
-                                out.push(i);
-                            }
-                        }
-                        out
-                    }
-                    Predicate::True | Predicate::And(_) => unreachable!(),
-                }
+                let mut out = vec![0u32; sel.len()];
+                let n = leaf.refine(sel, &mut out);
+                out.truncate(n);
+                out
             }
         }
     }
@@ -270,5 +408,60 @@ mod tests {
         let mut st = ExecStats::default();
         assert_eq!(p.filter(&[0, 2, 4], &mut st), vec![2]);
         assert_eq!(st.rows_in, 3);
+    }
+
+    #[test]
+    fn all_pass_predicates_stay_dense() {
+        // The satellite fix: no path materializes `(lo..hi).collect()`
+        // for an all-pass predicate — eval_into returns Sel::Range and
+        // the scratch buffers are never touched.
+        let mut scr = SelScratch::new();
+        let mut st = ExecStats::default();
+        for p in [Predicate::True, Predicate::and(vec![]), Predicate::and(vec![Predicate::True])] {
+            assert!(p.is_all_pass());
+            match p.eval_into(5, 905, &mut scr, &mut st) {
+                Sel::Range(5, 905) => {}
+                other => panic!("all-pass predicate materialized: {other:?}"),
+            }
+        }
+        assert_eq!(scr.bytes(), 0, "dense path touched the scratch");
+        assert_eq!(st.bytes_scanned, 0);
+    }
+
+    #[test]
+    fn eval_into_reuses_scratch_across_morsels() {
+        let col: Vec<i32> = (0..1000).map(|i| i % 100).collect();
+        let vals: Vec<f64> = (0..1000).map(|i| (i % 7) as f64).collect();
+        let p = Predicate::and(vec![
+            Predicate::i32_range(&col, 10, 60),
+            Predicate::f64_lt(&vals, 4.0),
+        ]);
+        let mut scr = SelScratch::new();
+        let mut st = ExecStats::default();
+        // Warm the scratch, note its footprint…
+        let first = p.eval_into(0, 500, &mut scr, &mut st).to_vec();
+        let high_water = scr.bytes();
+        assert!(high_water > 0);
+        // …then re-evaluate same-sized morsels: footprint must not move.
+        for (lo, hi) in [(0, 500), (500, 1000), (250, 750)] {
+            let got = p.eval_into(lo, hi, &mut scr, &mut st).to_vec();
+            let want = p.eval(lo, hi, &mut ExecStats::default());
+            assert_eq!(got, want, "morsel {lo}..{hi} diverged");
+        }
+        assert_eq!(scr.bytes(), high_water, "steady-state morsels grew the scratch");
+        assert_eq!(first, p.eval(0, 500, &mut ExecStats::default()));
+    }
+
+    #[test]
+    fn nested_and_with_true_skips_charges() {
+        let col = vec![1, 5, 9, 13];
+        let p = Predicate::and(vec![
+            Predicate::True,
+            Predicate::and(vec![Predicate::i32_range(&col, 4, 10), Predicate::True]),
+        ]);
+        let mut st = ExecStats::default();
+        assert_eq!(p.eval(0, 4, &mut st), vec![1, 2]);
+        // Only the one real leaf charges: 4 rows × 4 B.
+        assert_eq!(st.bytes_scanned, 16);
     }
 }

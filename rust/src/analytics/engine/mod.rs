@@ -9,11 +9,13 @@
 //!
 //! * `compile` — runs once per executor over the *broadcast* tables and
 //!   returns a [`Compiled`] context: a [`Predicate`] expression over
-//!   lineitem, the dimension [`HashJoinTable`]s captured by a per-row
+//!   lineitem, the dimension [`HashJoinTable`]s captured by a batched
 //!   evaluator, and the aggregate slot layout;
-//! * the shared kernel ([`run_range`]) evaluates the predicate into a
-//!   selection vector and folds surviving rows through [`HashAgg`] into a
-//!   mergeable [`Partial`];
+//! * the shared kernel ([`fold_range`]) evaluates the predicate into the
+//!   task's reusable [`SelScratch`] ping-pong buffers, runs the plan's
+//!   [`BatchEval`] over the surviving rows into reusable key/value
+//!   columns ([`EvalBatch`]), and folds them through one batched
+//!   [`HashAgg::update_sel`] call — allocation-free in steady state;
 //! * `finalize` — merged partial → result rows (sorts, top-k, dimension
 //!   lookups on the leader).
 //!
@@ -44,37 +46,87 @@ pub mod join;
 pub mod partial;
 
 pub use agg::HashAgg;
-pub use expr::Predicate;
+pub use expr::{Predicate, Sel, SelScratch};
 pub use join::{HashJoinTable, ProbeIter};
 pub use partial::{Merger, Partial};
 
 use super::ops::ExecStats;
 use super::queries::{self, QueryOutput, Row};
 use super::tpch::TpchDb;
-use crate::exec::{parallel_map_chunks, parallel_map_sel_chunks};
+use crate::exec::{parallel_map_chunks_with, parallel_map_sel_chunks_with};
 
 /// Maximum aggregate slots per group across the query set (Q1 uses 5).
 pub const MAX_ACCS: usize = 5;
 
-/// Fixed-size accumulator block a row evaluator returns; only the first
-/// `PlanSpec::width` slots are used.
-pub type Accs = [f64; MAX_ACCS];
+/// Batched row evaluator: visit the rows in `sel` and, for each row that
+/// survives its dimension probes, append the row's group key to
+/// `out.keys` and one value to each of the first `width` columns of
+/// `out.cols` (probe misses append nothing — the output is compacted).
+/// The engine then folds the batch through [`HashAgg::update_sel`].
+/// Borrows the database columns and the compiled dimension tables for
+/// `'a`.
+pub type BatchEval<'a> = Box<dyn Fn(Sel<'_>, &mut EvalBatch) + Send + Sync + 'a>;
 
-/// Per-row evaluator: row id → `Some((group key, accumulator values))`,
-/// or `None` when a dimension probe misses. Borrows the database columns
-/// and the compiled dimension tables for `'a`.
-pub type RowEval<'a> = Box<dyn Fn(usize) -> Option<(i64, Accs)> + Send + Sync + 'a>;
-
-/// Pad a single accumulator value to an [`Accs`] block.
-#[inline]
-pub fn acc1(a: f64) -> Accs {
-    [a, 0.0, 0.0, 0.0, 0.0]
+/// Reusable output of one [`BatchEval`] call: per-row group keys plus
+/// one value column per accumulator slot (only the plan's first `width`
+/// columns are used). Cleared-and-reserved per morsel, so capacity
+/// sticks at the high-water morsel size and steady-state evaluation
+/// allocates nothing.
+pub struct EvalBatch {
+    /// Group key per surviving row.
+    pub keys: Vec<i64>,
+    /// Accumulator value columns, index-aligned with `keys`.
+    pub cols: [Vec<f64>; MAX_ACCS],
 }
 
-/// Pad two accumulator values to an [`Accs`] block.
-#[inline]
-pub fn acc2(a: f64, b: f64) -> Accs {
-    [a, b, 0.0, 0.0, 0.0]
+impl Default for EvalBatch {
+    fn default() -> Self {
+        Self { keys: Vec::new(), cols: std::array::from_fn(|_| Vec::new()) }
+    }
+}
+
+impl EvalBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear and pre-size for a morsel of up to `n` rows at `width`.
+    #[inline]
+    fn begin(&mut self, width: usize, n: usize) {
+        self.keys.clear();
+        self.keys.reserve(n);
+        for col in &mut self.cols[..] {
+            col.clear();
+        }
+        for col in &mut self.cols[..width] {
+            col.reserve(n);
+        }
+    }
+
+    /// The columns as slices (for [`HashAgg::update_sel`]).
+    #[inline]
+    fn col_refs(&self) -> [&[f64]; MAX_ACCS] {
+        std::array::from_fn(|i| self.cols[i].as_slice())
+    }
+}
+
+/// Everything one executor task reuses across morsels: the predicate's
+/// ping-pong selection buffers, the batch evaluator's key/value columns,
+/// and the aggregation's group-index scratch. Create once per task (per
+/// worker fold, per pool thread), fold forever — after the first few
+/// morsels size the buffers, the kernel performs zero allocations per
+/// morsel (asserted by the counting-allocator regression test).
+#[derive(Default)]
+pub struct TaskScratch {
+    pub sel: SelScratch,
+    pub batch: EvalBatch,
+    pub gids: Vec<u32>,
+}
+
+impl TaskScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
 /// Fibonacci/multiply-xorshift hash over i64 keys: adequate spread for
@@ -104,14 +156,15 @@ pub struct PlanSpec {
 
 /// The compiled per-executor context [`PlanSpec::compile`] returns.
 pub struct Compiled<'a> {
-    /// Predicate over lineitem, evaluated per morsel into a selection
-    /// vector (charges its own per-conjunct scan stats).
+    /// Predicate over lineitem, evaluated per morsel into the task's
+    /// selection scratch (charges its own per-conjunct scan stats).
     pub pred: Predicate<'a>,
     /// Bytes per *selected* row charged for the payload columns the
     /// evaluator reads.
     pub payload_bytes: usize,
-    /// Row → group key + accumulator values (dimension probes inside).
-    pub eval: RowEval<'a>,
+    /// Batched selection → group keys + accumulator columns (dimension
+    /// probes inside).
+    pub eval: BatchEval<'a>,
     /// Expected distinct groups (aggregation-table capacity hint).
     pub groups_hint: usize,
 }
@@ -133,23 +186,60 @@ pub fn spec(name: &str) -> Option<PlanSpec> {
     }
 }
 
-/// Shared aggregation loop over any row-id stream: charges payload
-/// bytes, folds rows through the evaluator into a [`HashAgg`], and
-/// stamps the table footprint + produced group count onto `stats`.
-fn aggregate_rows<I: Iterator<Item = usize>>(
+/// A right-sized aggregation table for folding up to `n_rows` rows of a
+/// compiled plan.
+pub fn agg_for(c: &Compiled<'_>, width: usize, n_rows: usize) -> HashAgg {
+    HashAgg::with_capacity(width, c.groups_hint.min(n_rows + 16))
+}
+
+/// Fold an already-selected row set into `agg`: charge payload bytes,
+/// run the batch evaluator into the scratch columns, one batched
+/// aggregation update. Zero allocations in steady state.
+#[inline]
+fn fold_sel(
     c: &Compiled<'_>,
     width: usize,
-    rows: I,
-    n_rows: usize,
-    mut stats: ExecStats,
-) -> Partial {
-    stats.scan(n_rows, c.payload_bytes);
-    let mut agg = HashAgg::with_capacity(width, c.groups_hint.min(n_rows + 16));
-    for i in rows {
-        if let Some((key, accs)) = (c.eval)(i) {
-            agg.update(key, &accs[..width]);
-        }
-    }
+    rows: Sel<'_>,
+    agg: &mut HashAgg,
+    batch: &mut EvalBatch,
+    gids: &mut Vec<u32>,
+    stats: &mut ExecStats,
+) {
+    stats.scan(rows.len(), c.payload_bytes);
+    batch.begin(width, rows.len());
+    (c.eval)(rows, batch);
+    let n = batch.keys.len();
+    debug_assert!(
+        batch.cols[..width].iter().all(|col| col.len() == n),
+        "batch evaluator produced ragged columns"
+    );
+    let cols = batch.col_refs();
+    agg.update_sel(&batch.keys, Sel::Range(0, n), &cols[..width], gids);
+}
+
+/// THE morsel kernel, shared by all three paths: evaluate the plan over
+/// lineitem rows `[lo, hi)` into `agg`, reusing `scr` across calls. An
+/// all-pass predicate folds the row range directly — no materialized
+/// identity selection vector on any path (q5/q9/q18 take this on every
+/// executor). The workers' map loop calls this once per morsel with one
+/// long-lived `agg`; in steady state the call allocates nothing.
+pub fn fold_range(
+    c: &Compiled<'_>,
+    width: usize,
+    lo: usize,
+    hi: usize,
+    agg: &mut HashAgg,
+    scr: &mut TaskScratch,
+    stats: &mut ExecStats,
+) {
+    let TaskScratch { sel, batch, gids } = scr;
+    let rows = c.pred.eval_into(lo, hi, sel, stats);
+    fold_sel(c, width, rows, agg, batch, gids, stats);
+}
+
+/// Seal a fold: stamp the table footprint and produced group count onto
+/// `stats`, and attach them to the finished [`Partial`].
+pub fn finish_fold(agg: HashAgg, mut stats: ExecStats) -> Partial {
     stats.ht_bytes += agg.bytes();
     stats.rows_out += agg.len() as u64;
     let mut p = agg.into_partial();
@@ -157,26 +247,47 @@ fn aggregate_rows<I: Iterator<Item = usize>>(
     p
 }
 
-/// Aggregate an already-computed selection slice into a [`Partial`],
-/// folding `stats` (typically the predicate-phase scan stats) into the
-/// result and charging the payload bytes, aggregation-table footprint,
-/// and produced group count on top.
-pub fn aggregate_sel(c: &Compiled<'_>, width: usize, sel: &[u32], stats: ExecStats) -> Partial {
-    aggregate_rows(c, width, sel.iter().map(|&i| i as usize), sel.len(), stats)
+/// One-shot kernel call over `[lo, hi)` with caller-reused scratch.
+pub fn run_range_scratch(
+    c: &Compiled<'_>,
+    width: usize,
+    lo: usize,
+    hi: usize,
+    scr: &mut TaskScratch,
+) -> Partial {
+    let mut stats = ExecStats::default();
+    let mut agg = agg_for(c, width, hi - lo);
+    fold_range(c, width, lo, hi, &mut agg, scr, &mut stats);
+    finish_fold(agg, stats)
 }
 
-/// THE morsel kernel, shared by all three paths: evaluate the plan over
-/// lineitem rows `[lo, hi)` into a mergeable [`Partial`]. An all-pass
-/// predicate aggregates the row range directly — no materialized
-/// identity selection vector (q5/q9/q18 take this path on every
-/// executor).
+/// One-shot kernel call over `[lo, hi)` (allocating convenience form).
 pub fn run_range(c: &Compiled<'_>, width: usize, lo: usize, hi: usize) -> Partial {
-    let mut stats = ExecStats::default();
-    if matches!(c.pred, Predicate::True) {
-        return aggregate_rows(c, width, lo..hi, hi - lo, stats);
-    }
-    let sel = c.pred.eval(lo, hi, &mut stats);
-    aggregate_sel(c, width, &sel, stats)
+    let mut scr = TaskScratch::new();
+    run_range_scratch(c, width, lo, hi, &mut scr)
+}
+
+/// Aggregate an already-computed selection slice into a [`Partial`] with
+/// caller-reused scratch, folding `stats` (typically the predicate-phase
+/// scan stats) into the result.
+pub fn aggregate_sel_scratch(
+    c: &Compiled<'_>,
+    width: usize,
+    sel: &[u32],
+    stats: ExecStats,
+    scr: &mut TaskScratch,
+) -> Partial {
+    let mut stats = stats;
+    let mut agg = agg_for(c, width, sel.len());
+    let TaskScratch { batch, gids, .. } = scr;
+    fold_sel(c, width, Sel::Ids(sel), &mut agg, batch, gids, &mut stats);
+    finish_fold(agg, stats)
+}
+
+/// [`aggregate_sel_scratch`] with throwaway scratch.
+pub fn aggregate_sel(c: &Compiled<'_>, width: usize, sel: &[u32], stats: ExecStats) -> Partial {
+    let mut scr = TaskScratch::new();
+    aggregate_sel_scratch(c, width, sel, stats, &mut scr)
 }
 
 /// Run a compiled plan single-threaded over the whole of lineitem —
@@ -204,13 +315,14 @@ pub fn run_serial(db: &TpchDb, spec: &PlanSpec) -> QueryOutput {
 /// Run a query morsel-parallel on `threads` threads (0 = all cores),
 /// `morsel_rows` rows per unit of scheduling.
 ///
-/// Two phases, both selection-vector aware: the predicate is evaluated
-/// over fixed-size *row* morsels in parallel and the surviving row ids
+/// Two phases, both selection-aware and both reusing per-thread scratch:
+/// the predicate is evaluated over fixed-size *row* morsels in parallel
+/// (ping-pong buffers per pool thread) and the surviving row ids
 /// concatenated in row order; the aggregation then runs over fixed-size
 /// slices of that *selection* (via
-/// [`crate::exec::parallel_map_sel_chunks`]), so a selective predicate
-/// whose survivors cluster in a few row ranges still spreads its
-/// aggregation work evenly. Per-slice partials merge in slice order —
+/// [`crate::exec::parallel_map_sel_chunks_with`]), so a selective
+/// predicate whose survivors cluster in a few row ranges still spreads
+/// its aggregation work evenly. Per-slice partials merge in slice order —
 /// deterministic regardless of thread scheduling.
 pub fn run_parallel(
     db: &TpchDb,
@@ -222,21 +334,22 @@ pub fn run_parallel(
     let (c, prep) = (spec.compile)(db);
     let n = db.lineitem.len();
 
-    let (pre_stats, partials): (ExecStats, Vec<Partial>) = if matches!(c.pred, Predicate::True) {
+    let (pre_stats, partials): (ExecStats, Vec<Partial>) = if c.pred.is_all_pass() {
         // Fast path: with an all-pass predicate every selection slice is
-        // a row range, so aggregate row morsels directly — no
-        // materialized n-element selection vector, no inter-phase
-        // barrier (q5/q9/q18 take this path).
-        let partials = parallel_map_chunks(n, morsel_rows, threads, |lo, hi| {
-            run_range(&c, spec.width, lo, hi)
-        });
+        // a row range, so fold row morsels directly — no materialized
+        // n-element selection vector, no inter-phase barrier (q5/q9/q18
+        // take this path).
+        let partials =
+            parallel_map_chunks_with(n, morsel_rows, threads, TaskScratch::new, |scr, lo, hi| {
+                run_range_scratch(&c, spec.width, lo, hi, scr)
+            });
         (prep, partials)
     } else {
         // Phase 1: predicate → per-morsel selection vectors, row order.
         let parts: Vec<(Vec<u32>, ExecStats)> =
-            parallel_map_chunks(n, morsel_rows, threads, |lo, hi| {
+            parallel_map_chunks_with(n, morsel_rows, threads, SelScratch::new, |scr, lo, hi| {
                 let mut st = ExecStats::default();
-                (c.pred.eval(lo, hi, &mut st), st)
+                (c.pred.eval_into(lo, hi, scr, &mut st).to_vec(), st)
             });
         let mut pre_stats = prep;
         let mut sel = Vec::with_capacity(parts.iter().map(|(s, _)| s.len()).sum());
@@ -246,9 +359,13 @@ pub fn run_parallel(
         }
 
         // Phase 2: aggregate balanced selection slices in parallel.
-        let partials = parallel_map_sel_chunks(&sel, morsel_rows, threads, |slice| {
-            aggregate_sel(&c, spec.width, slice, ExecStats::default())
-        });
+        let partials = parallel_map_sel_chunks_with(
+            &sel,
+            morsel_rows,
+            threads,
+            TaskScratch::new,
+            |scr, slice| aggregate_sel_scratch(&c, spec.width, slice, ExecStats::default(), scr),
+        );
         (pre_stats, partials)
     };
 
@@ -323,6 +440,39 @@ mod tests {
         let rows_merged = (s.finalize)(&db, &merged);
         let out = QueryOutput { rows: rows_merged, stats: ExecStats::default() };
         assert!(out.approx_eq_rows(&rows_full));
+    }
+
+    #[test]
+    fn fold_range_accumulates_like_one_call() {
+        // The workers' shape: one long-lived agg + scratch folded morsel
+        // by morsel must equal a single full-range kernel call exactly
+        // (identical association — both fold rows in row order).
+        let db = TpchDb::generate(TpchConfig::new(0.002, 19));
+        for q in ["q1", "q6", "q12"] {
+            let s = spec(q).unwrap();
+            let (c, _) = (s.compile)(&db);
+            let n = db.lineitem.len();
+            let full = run_range(&c, s.width, 0, n);
+            let mut agg = agg_for(&c, s.width, n);
+            let mut scr = TaskScratch::new();
+            let mut stats = ExecStats::default();
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + 777).min(n);
+                fold_range(&c, s.width, lo, hi, &mut agg, &mut scr, &mut stats);
+                lo = hi;
+            }
+            let folded = finish_fold(agg, stats);
+            assert_eq!(folded.keys, full.keys, "{q}: group order diverged");
+            assert_eq!(folded.counts, full.counts, "{q}: counts diverged");
+            assert_eq!(folded.stats.rows_in, full.stats.rows_in, "{q}: rows_in diverged");
+            let close = folded
+                .accs
+                .iter()
+                .zip(&full.accs)
+                .all(|(a, b)| (a - b).abs() <= 1e-6 * (1.0 + b.abs()));
+            assert!(close, "{q}: accumulators diverged");
+        }
     }
 
     #[test]

@@ -68,6 +68,15 @@ impl Partial {
     /// `i64 key, width × f64 accs, u64 count`, all little-endian.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(8 + self.len() * Self::group_bytes(self.width));
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` — the pooled-buffer path: the
+    /// query service encodes every exchange body into a recycled
+    /// [`crate::rpc::BufPool`] buffer instead of a fresh vector.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.reserve(8 + self.len() * Self::group_bytes(self.width));
         out.extend_from_slice(&(self.width as u32).to_le_bytes());
         out.extend_from_slice(&(self.len() as u32).to_le_bytes());
         for i in 0..self.len() {
@@ -77,7 +86,6 @@ impl Partial {
             }
             out.extend_from_slice(&self.counts[i].to_le_bytes());
         }
-        out
     }
 
     /// Inverse of [`Partial::encode`]. The decoded partial carries empty

@@ -49,17 +49,50 @@ pub fn filter<F: Fn(u32) -> bool>(sel: &[u32], pred: F) -> Vec<u32> {
     sel.iter().copied().filter(|&i| pred(i)).collect()
 }
 
+// ------------------------------------------------ branchless into-kernels
+//
+// The engine's hot path evaluates predicates into *caller-provided*
+// buffers (the ping-pong pair of
+// [`crate::analytics::engine::expr::SelScratch`]), so the per-morsel
+// steady state allocates nothing. The two primitives below are the leaf
+// shape every filter compiles to: write the candidate id unconditionally,
+// advance the cursor by the predicate cast to 0/1 — no per-row branch to
+// mispredict at the 1-99% selectivities TPC-H predicates actually have.
+
+/// Append the ids in `[lo, hi)` satisfying `pred` to `out[0..]`,
+/// branchless; returns the number written. `out` must hold `hi - lo`.
+#[inline]
+pub fn select_into<F: Fn(usize) -> bool>(lo: usize, hi: usize, out: &mut [u32], pred: F) -> usize {
+    debug_assert!(out.len() >= hi - lo);
+    let mut k = 0;
+    for i in lo..hi {
+        out[k] = i as u32;
+        k += pred(i) as usize;
+    }
+    k
+}
+
+/// Narrow an existing selection into `out[0..]`, branchless; returns the
+/// number of survivors. `out` must hold `sel.len()` and may not alias it.
+#[inline]
+pub fn refine_into<F: Fn(usize) -> bool>(sel: &[u32], out: &mut [u32], pred: F) -> usize {
+    debug_assert!(out.len() >= sel.len());
+    let mut k = 0;
+    for &i in sel {
+        out[k] = i;
+        k += pred(i as usize) as usize;
+    }
+    k
+}
+
 /// `lo <= col[i] < hi` over f64 (e.g. discount windows in Q6).
 pub fn filter_f64_range(sel: &[u32], col: &[f64], lo: f64, hi: f64) -> Vec<u32> {
-    let mut out = Vec::with_capacity(sel.len());
-    for &i in sel {
-        let v = col[i as usize];
-        // Branch-free push: extend then truncate via boolean arithmetic is
-        // not faster in Rust; a predictable branch on sorted-ish data is.
-        if v >= lo && v < hi {
-            out.push(i);
-        }
-    }
+    let mut out = vec![0u32; sel.len()];
+    let n = refine_into(sel, &mut out, |i| {
+        let v = col[i];
+        v >= lo && v < hi
+    });
+    out.truncate(n);
     out
 }
 
@@ -75,13 +108,12 @@ pub fn par_filter_i32_range(
     morsel_rows: usize,
 ) -> Vec<u32> {
     crate::exec::parallel_map_chunks(col.len(), morsel_rows, threads, |s, e| {
-        let mut v = Vec::with_capacity(e - s);
-        for i in s..e {
+        let mut v = vec![0u32; e - s];
+        let n = select_into(s, e, &mut v, |i| {
             let x = col[i];
-            if x >= lo && x < hi {
-                v.push(i as u32);
-            }
-        }
+            x >= lo && x < hi
+        });
+        v.truncate(n);
         v
     })
     .concat()
@@ -89,35 +121,28 @@ pub fn par_filter_i32_range(
 
 /// `lo <= col[i] < hi` over i32 (date windows).
 pub fn filter_i32_range(sel: &[u32], col: &[i32], lo: i32, hi: i32) -> Vec<u32> {
-    let mut out = Vec::with_capacity(sel.len());
-    for &i in sel {
-        let v = col[i as usize];
-        if v >= lo && v < hi {
-            out.push(i);
-        }
-    }
+    let mut out = vec![0u32; sel.len()];
+    let n = refine_into(sel, &mut out, |i| {
+        let v = col[i];
+        v >= lo && v < hi
+    });
+    out.truncate(n);
     out
 }
 
 /// `col[i] < x` over f64.
 pub fn filter_f64_lt(sel: &[u32], col: &[f64], x: f64) -> Vec<u32> {
-    let mut out = Vec::with_capacity(sel.len());
-    for &i in sel {
-        if col[i as usize] < x {
-            out.push(i);
-        }
-    }
+    let mut out = vec![0u32; sel.len()];
+    let n = refine_into(sel, &mut out, |i| col[i] < x);
+    out.truncate(n);
     out
 }
 
 /// Keep rows whose dictionary code equals `code`.
 pub fn filter_code_eq(sel: &[u32], codes: &[u32], code: u32) -> Vec<u32> {
-    let mut out = Vec::with_capacity(sel.len());
-    for &i in sel {
-        if codes[i as usize] == code {
-            out.push(i);
-        }
-    }
+    let mut out = vec![0u32; sel.len()];
+    let n = refine_into(sel, &mut out, |i| codes[i] == code);
+    out.truncate(n);
     out
 }
 
@@ -274,5 +299,27 @@ mod tests {
     fn generic_filter() {
         let sel = all_rows(6);
         assert_eq!(filter(&sel, |i| i % 2 == 0), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn select_into_is_branchless_select() {
+        let col = [5, 1, 7, 3, 9];
+        let mut out = [0u32; 5];
+        let n = select_into(0, 5, &mut out, |i| col[i] >= 5);
+        assert_eq!(&out[..n], &[0, 2, 4]);
+        // Sub-range: ids stay absolute.
+        let n = select_into(2, 5, &mut out, |i| col[i] >= 5);
+        assert_eq!(&out[..n], &[2, 4]);
+        assert_eq!(select_into(3, 3, &mut out, |_| true), 0);
+    }
+
+    #[test]
+    fn refine_into_matches_filter() {
+        let col = [1.0, 4.0, 2.0, 8.0];
+        let sel = [0u32, 1, 3];
+        let mut out = [0u32; 3];
+        let n = refine_into(&sel, &mut out, |i| col[i] > 1.5);
+        assert_eq!(&out[..n], &[1, 3]);
+        assert_eq!(refine_into(&[], &mut out, |_| true), 0);
     }
 }

@@ -5,7 +5,7 @@
 //! the set: it touches seven wide columns end to end.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{self, Compiled, PlanSpec, Predicate, RowEval};
+use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
 use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -32,10 +32,16 @@ fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let rf = li.col("l_returnflag").as_u8();
     let ls = li.col("l_linestatus").as_u8();
     let pred = Predicate::i32_range(ship, i32::MIN, cutoff() + 1);
-    let eval: RowEval<'a> = Box::new(move |i| {
-        let dp = price[i] * (1.0 - disc[i]);
-        let key = ((rf[i] as i64) << 8) | ls[i] as i64;
-        Some((key, [qty[i], price[i], dp, dp * (1.0 + tax[i]), disc[i]]))
+    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+        rows.for_each(|i| {
+            let dp = price[i] * (1.0 - disc[i]);
+            out.keys.push(((rf[i] as i64) << 8) | ls[i] as i64);
+            out.cols[0].push(qty[i]);
+            out.cols[1].push(price[i]);
+            out.cols[2].push(dp);
+            out.cols[3].push(dp * (1.0 + tax[i]));
+            out.cols[4].push(disc[i]);
+        });
     });
     (Compiled { pred, payload_bytes: 8 * 4 + 2, eval, groups_hint: 8 }, ExecStats::default())
 }

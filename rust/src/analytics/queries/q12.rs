@@ -4,7 +4,7 @@
 //! counting high/low-priority orders per mode.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{self, acc2, Compiled, PlanSpec, Predicate, RowEval};
+use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
 use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -48,13 +48,14 @@ fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let high_code: Vec<bool> = prio_dict.iter().map(|p| is_high(p)).collect();
     stats.scan(db.orders.len(), 4);
 
-    let eval: RowEval<'a> = Box::new(move |i| {
-        let orow = (lok[i] - 1) as usize;
-        let high = high_code[prio_codes[orow] as usize];
-        Some((
-            mode_codes[i] as i64,
-            acc2(if high { 1.0 } else { 0.0 }, if high { 0.0 } else { 1.0 }),
-        ))
+    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+        rows.for_each(|i| {
+            let orow = (lok[i] - 1) as usize;
+            let high = high_code[prio_codes[orow] as usize] as u8 as f64;
+            out.keys.push(mode_codes[i] as i64);
+            out.cols[0].push(high);
+            out.cols[1].push(1.0 - high);
+        });
     });
     (Compiled { pred, payload_bytes: 12, eval, groups_hint: 8 }, stats)
 }

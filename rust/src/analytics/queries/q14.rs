@@ -2,7 +2,7 @@
 //! one-month shipping window.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{self, acc2, Compiled, PlanSpec, Predicate, RowEval};
+use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
 use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -33,12 +33,16 @@ fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     stats.scan(part.len(), 4);
 
     let pred = Predicate::i32_range(ship, lo_d, hi_d);
-    let eval: RowEval<'a> = Box::new(move |i| {
-        let rev = price[i] * (1.0 - disc[i]);
-        // partkey is dense 1..=N → direct index instead of a hash join.
-        let prow = (lpk[i] - 1) as usize;
-        let promo_rev = if promo[type_codes[prow] as usize] { rev } else { 0.0 };
-        Some((0, acc2(promo_rev, rev)))
+    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+        rows.for_each(|i| {
+            let rev = price[i] * (1.0 - disc[i]);
+            // partkey is dense 1..=N → direct index instead of a hash join.
+            let prow = (lpk[i] - 1) as usize;
+            let is_promo = promo[type_codes[prow] as usize] as u8 as f64;
+            out.keys.push(0);
+            out.cols[0].push(is_promo * rev);
+            out.cols[1].push(rev);
+        });
     });
     (Compiled { pred, payload_bytes: 24, eval, groups_hint: 1 }, stats)
 }

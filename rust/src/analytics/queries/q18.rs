@@ -4,7 +4,7 @@
 //! The big-aggregation query: a full group-by over every order key —
 //! the shuffle-dominant partial of the Fig. 4 analysis.
 
-use crate::analytics::engine::{self, acc1, Compiled, PlanSpec, Predicate, RowEval};
+use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
 use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -26,7 +26,15 @@ fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let qty = li.col("l_quantity").as_f64();
     // The finalize side reads custkey/date/totalprice for the survivors.
     stats.scan(db.orders.len(), 20);
-    let eval: RowEval<'a> = Box::new(move |i| Some((lok[i], acc1(qty[i]))));
+    // Pure gather: keys and values come straight off the lineitem
+    // columns; the batched HashAgg's last-key memo then collapses the
+    // per-order runs (lineitem is clustered by order key).
+    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+        rows.for_each(|i| {
+            out.keys.push(lok[i]);
+            out.cols[0].push(qty[i]);
+        });
+    });
     let hint = db.orders.len();
     (Compiled { pred: Predicate::True, payload_bytes: 16, eval, groups_hint: hint }, stats)
 }

@@ -4,7 +4,7 @@
 //! Exercises complex disjunctive predicates with part-side attribute
 //! lookups (brand + container + size) fused into the probe loop.
 
-use crate::analytics::engine::{self, acc1, Compiled, PlanSpec, Predicate, RowEval};
+use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
 use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -90,17 +90,18 @@ fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let qty = li.col("l_quantity").as_f64();
     let price = li.col("l_extendedprice").as_f64();
     let disc = li.col("l_discount").as_f64();
-    let eval: RowEval<'a> = Box::new(move |i| {
-        let bi = part_branch[(lpk[i] - 1) as usize];
-        if bi < 0 {
-            return None;
-        }
-        let br = &brs[bi as usize];
-        if qty[i] >= br.qty_lo && qty[i] <= br.qty_hi {
-            Some((0, acc1(price[i] * (1.0 - disc[i]))))
-        } else {
-            None
-        }
+    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+        rows.for_each(|i| {
+            let bi = part_branch[(lpk[i] - 1) as usize];
+            if bi < 0 {
+                return;
+            }
+            let br = &brs[bi as usize];
+            if qty[i] >= br.qty_lo && qty[i] <= br.qty_hi {
+                out.keys.push(0);
+                out.cols[0].push(price[i] * (1.0 - disc[i]));
+            }
+        });
     });
     (Compiled { pred, payload_bytes: 8 * 4, eval, groups_hint: 1 }, stats)
 }

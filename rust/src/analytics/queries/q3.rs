@@ -4,7 +4,9 @@
 //! revenue grouped by order. Exercises two hash joins and a top-k.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{self, acc1, Compiled, HashJoinTable, PlanSpec, Predicate, RowEval};
+use crate::analytics::engine::{
+    self, BatchEval, Compiled, EvalBatch, HashJoinTable, PlanSpec, Predicate, Sel,
+};
 use crate::analytics::ops::{all_rows, filter_code_eq, filter_i32_range, top_k_desc, ExecStats};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -57,12 +59,13 @@ fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let price = li.col("l_extendedprice").as_f64();
     let disc = li.col("l_discount").as_f64();
     let pred = Predicate::i32_range(ship, pivot + 1, i32::MAX);
-    let eval: RowEval<'a> = Box::new(move |i| {
-        if ord_map.probe_first(lok[i]).is_some() {
-            Some((lok[i], acc1(price[i] * (1.0 - disc[i]))))
-        } else {
-            None
-        }
+    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+        rows.for_each(|i| {
+            if ord_map.probe_first(lok[i]).is_some() {
+                out.keys.push(lok[i]);
+                out.cols[0].push(price[i] * (1.0 - disc[i]));
+            }
+        });
     });
     (Compiled { pred, payload_bytes: 8 * 3, eval, groups_hint: 256 }, stats)
 }

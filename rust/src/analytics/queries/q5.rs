@@ -5,7 +5,9 @@
 //! co-nationality constraint makes it the join-heaviest query in the set.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{self, acc1, Compiled, HashJoinTable, PlanSpec, Predicate, RowEval};
+use crate::analytics::engine::{
+    self, BatchEval, Compiled, EvalBatch, HashJoinTable, PlanSpec, Predicate, Sel,
+};
 use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::{TpchDb, NATIONS, REGIONS};
@@ -82,14 +84,17 @@ fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let lsk = li.col("l_suppkey").as_i64();
     let price = li.col("l_extendedprice").as_f64();
     let disc = li.col("l_discount").as_f64();
-    let eval: RowEval<'a> = Box::new(move |i| {
-        let orow = ord_map.probe_first(lok[i])?;
-        let c_nat = orow_nation[orow as usize];
-        let srow = sup_map.probe_first(lsk[i])?;
-        if snat[srow as usize] != c_nat {
-            return None;
-        }
-        Some((c_nat as i64, acc1(price[i] * (1.0 - disc[i]))))
+    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+        rows.for_each(|i| {
+            let Some(orow) = ord_map.probe_first(lok[i]) else { return };
+            let c_nat = orow_nation[orow as usize];
+            let Some(srow) = sup_map.probe_first(lsk[i]) else { return };
+            if snat[srow as usize] != c_nat {
+                return;
+            }
+            out.keys.push(c_nat as i64);
+            out.cols[0].push(price[i] * (1.0 - disc[i]));
+        });
     });
     (Compiled { pred: Predicate::True, payload_bytes: 8 * 4, eval, groups_hint: 32 }, stats)
 }

@@ -11,7 +11,7 @@
 //! `python/compile/kernels/q6_scan.py` and `runtime::q6`.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{self, acc1, Compiled, PlanSpec, Predicate, RowEval};
+use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
 use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
@@ -63,7 +63,12 @@ fn compile_params<'a>(db: &'a TpchDb, p: &Q6Params) -> (Compiled<'a>, ExecStats)
         Predicate::f64_range(disc, p.disc_lo, p.disc_hi),
         Predicate::f64_lt(qty, p.qty_lt),
     ]);
-    let eval: RowEval<'a> = Box::new(move |i| Some((0, acc1(price[i] * disc[i]))));
+    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+        rows.for_each(|i| {
+            out.keys.push(0);
+            out.cols[0].push(price[i] * disc[i]);
+        });
+    });
     (Compiled { pred, payload_bytes: 8, eval, groups_hint: 1 }, ExecStats::default())
 }
 

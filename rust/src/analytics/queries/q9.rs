@@ -6,7 +6,9 @@
 //! substring filter on part names.
 
 use crate::analytics::column::days_to_date;
-use crate::analytics::engine::{self, acc1, Compiled, HashJoinTable, PlanSpec, Predicate, RowEval};
+use crate::analytics::engine::{
+    self, BatchEval, Compiled, EvalBatch, HashJoinTable, PlanSpec, Predicate, Sel,
+};
 use crate::analytics::ops::{all_rows, ExecStats};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::{TpchDb, NATIONS};
@@ -69,14 +71,19 @@ fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
     let qty = li.col("l_quantity").as_f64();
     let price = li.col("l_extendedprice").as_f64();
     let disc = li.col("l_discount").as_f64();
-    let eval: RowEval<'a> = Box::new(move |i| {
-        part_map.probe_first(lpk[i])?;
-        let ps_row = ps_map.probe_first(ps_key(lpk[i], lsk[i]))?;
-        let srow = sup_map.probe_first(lsk[i])?;
-        let nation = snat[srow as usize] as i64;
-        let (year, _, _) = days_to_date(odate[(lok[i] - 1) as usize]);
-        let profit = price[i] * (1.0 - disc[i]) - ps_cost[ps_row as usize] * qty[i];
-        Some(((nation << 16) | year as i64, acc1(profit)))
+    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+        rows.for_each(|i| {
+            if part_map.probe_first(lpk[i]).is_none() {
+                return;
+            }
+            let Some(ps_row) = ps_map.probe_first(ps_key(lpk[i], lsk[i])) else { return };
+            let Some(srow) = sup_map.probe_first(lsk[i]) else { return };
+            let nation = snat[srow as usize] as i64;
+            let (year, _, _) = days_to_date(odate[(lok[i] - 1) as usize]);
+            let profit = price[i] * (1.0 - disc[i]) - ps_cost[ps_row as usize] * qty[i];
+            out.keys.push((nation << 16) | year as i64);
+            out.cols[0].push(profit);
+        });
     });
     (Compiled { pred: Predicate::True, payload_bytes: 8 * 6, eval, groups_hint: 256 }, stats)
 }

@@ -8,8 +8,69 @@
 //! Benches are plain binaries with `harness = false`; each calls
 //! [`Bench::new`] and registers measurements or model-derived rows.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
+
+/// A counting wrapper over the system allocator, installable as
+/// `#[global_allocator]` in a bench or test binary:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: lovelock::benchkit::CountingAlloc =
+///     lovelock::benchkit::CountingAlloc::new();
+/// ```
+///
+/// [`CountingAlloc::allocations`] reads the number of allocation events
+/// (alloc + realloc + alloc_zeroed; frees are not counted) since process
+/// start. The hotpath bench uses it to report allocations per morsel,
+/// and the `alloc_regression` test pins the engine's steady-state fold
+/// at exactly zero. Process-wide: measure on a single thread with no
+/// concurrent work, or the count includes everyone else's allocations.
+pub struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc
+    }
+
+    /// Allocation events since process start.
+    pub fn allocations() -> u64 {
+        ALLOC_EVENTS.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// SAFETY: delegates verbatim to `System`; the only addition is a relaxed
+// atomic increment, which allocates nothing and cannot unwind.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
 
 /// Robust summary statistics over a set of per-iteration timings.
 #[derive(Clone, Copy, Debug)]
@@ -263,6 +324,23 @@ pub fn black_box<T>(x: T) -> T {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn counting_alloc_counts_alloc_events_only() {
+        let a = CountingAlloc::new();
+        let before = CountingAlloc::allocations();
+        unsafe {
+            let layout = Layout::from_size_align(64, 8).unwrap();
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            let p = a.realloc(p, layout, 128);
+            assert!(!p.is_null());
+            let grown = Layout::from_size_align(128, 8).unwrap();
+            a.dealloc(p, grown);
+        }
+        // alloc + realloc counted; dealloc not.
+        assert_eq!(CountingAlloc::allocations(), before + 2);
+    }
 
     #[test]
     fn stats_basic() {

@@ -167,12 +167,17 @@ pub struct PlanFragment {
 impl PlanFragment {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(32 + self.query.len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` (the pooled-buffer path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.query_id.0.to_le_bytes());
-        put_str(&mut out, &self.query);
+        put_str(out, &self.query);
         out.extend_from_slice(&self.width.to_le_bytes());
         out.extend_from_slice(&self.workers.to_le_bytes());
         out.extend_from_slice(&self.morsel_rows.to_le_bytes());
-        out
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self> {
@@ -202,11 +207,16 @@ pub struct ExecuteRange {
 impl ExecuteRange {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(28);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` (the pooled-buffer path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.query_id.0.to_le_bytes());
         out.extend_from_slice(&self.worker.to_le_bytes());
         out.extend_from_slice(&self.lo.to_le_bytes());
         out.extend_from_slice(&self.hi.to_le_bytes());
-        out
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self> {
@@ -244,13 +254,18 @@ pub struct Ack {
 impl Ack {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(40 + 8 * self.part_bytes.len() + self.error.len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` (the pooled-buffer path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.query_id.0.to_le_bytes());
         out.extend_from_slice(&self.worker.to_le_bytes());
         out.extend_from_slice(&self.map_ns.to_le_bytes());
         out.extend_from_slice(&self.ht_bytes.to_le_bytes());
-        put_vec_u64(&mut out, &self.part_bytes);
-        put_str(&mut out, &self.error);
-        out
+        put_vec_u64(out, &self.part_bytes);
+        put_str(out, &self.error);
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self> {
@@ -282,10 +297,15 @@ pub struct ReduceCmd {
 impl ReduceCmd {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(20 + 4 * self.expect.len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` (the pooled-buffer path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.query_id.0.to_le_bytes());
         out.extend_from_slice(&self.partition.to_le_bytes());
-        put_vec_u32(&mut out, &self.expect);
-        out
+        put_vec_u32(out, &self.expect);
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self> {
@@ -319,12 +339,36 @@ pub struct PartialFrame {
 impl PartialFrame {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(28 + self.body.len());
-        out.extend_from_slice(&self.query_id.0.to_le_bytes());
-        out.extend_from_slice(&self.partition.to_le_bytes());
-        out.extend_from_slice(&self.from_worker.to_le_bytes());
-        out.extend_from_slice(&self.reduce_ns.to_le_bytes());
-        put_bytes(&mut out, &self.body);
+        Self::encode_parts_into(
+            self.query_id,
+            self.partition,
+            self.from_worker,
+            self.reduce_ns,
+            &self.body,
+            &mut out,
+        );
         out
+    }
+
+    /// Append a frame's wire encoding built straight from its parts, the
+    /// body supplied as a slice — the pooled-buffer path: the query
+    /// service encodes exchange frames without ever materializing a
+    /// `PartialFrame` struct (whose `body` field would force an owned
+    /// copy of the partial bytes).
+    pub fn encode_parts_into(
+        query_id: QueryId,
+        partition: u32,
+        from_worker: u32,
+        reduce_ns: u64,
+        body: &[u8],
+        out: &mut Vec<u8>,
+    ) {
+        out.reserve(28 + body.len());
+        out.extend_from_slice(&query_id.0.to_le_bytes());
+        out.extend_from_slice(&partition.to_le_bytes());
+        out.extend_from_slice(&from_worker.to_le_bytes());
+        out.extend_from_slice(&reduce_ns.to_le_bytes());
+        put_bytes(out, body);
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self> {
@@ -352,6 +396,11 @@ pub struct CancelQuery {
 impl CancelQuery {
     pub fn encode(&self) -> Vec<u8> {
         self.query_id.0.to_le_bytes().to_vec()
+    }
+
+    /// Append the wire encoding to `out` (the pooled-buffer path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.query_id.0.to_le_bytes());
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self> {
@@ -453,6 +502,46 @@ mod tests {
             body: vec![1, 2, 3, 4, 5, 6, 7],
         };
         assert_eq!(PartialFrame::decode(&f.encode()).unwrap(), f);
+    }
+
+    #[test]
+    fn encode_into_appends_identically() {
+        // The pooled-buffer forms must be byte-identical to `encode`,
+        // and append (never clobber a partially written frame buffer).
+        let pf = PartialFrame {
+            query_id: QueryId(2),
+            partition: 5,
+            from_worker: 1,
+            reduce_ns: 88,
+            body: vec![1, 2, 3],
+        };
+        let mut out = vec![0xAB];
+        PartialFrame::encode_parts_into(
+            pf.query_id,
+            pf.partition,
+            pf.from_worker,
+            pf.reduce_ns,
+            &pf.body,
+            &mut out,
+        );
+        assert_eq!(out[0], 0xAB);
+        assert_eq!(&out[1..], pf.encode().as_slice());
+
+        let ack = Ack {
+            query_id: QueryId(9),
+            worker: 2,
+            map_ns: 1,
+            ht_bytes: 2,
+            part_bytes: vec![0, 64],
+            error: "e".into(),
+        };
+        let mut out = Vec::new();
+        ack.encode_into(&mut out);
+        assert_eq!(out, ack.encode());
+        let rc = ReduceCmd { query_id: QueryId(4), partition: 1, expect: vec![0, 2, 5] };
+        let mut out = Vec::new();
+        rc.encode_into(&mut out);
+        assert_eq!(out, rc.encode());
     }
 
     #[test]

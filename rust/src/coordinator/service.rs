@@ -49,8 +49,9 @@
 //! storage attach of §5.2, whose read cost is charged by the IO phase of
 //! the simulation). Everything derived from the data crosses as frames.
 
-use crate::analytics::engine::{self, Merger, Partial};
+use crate::analytics::engine::{self, Merger, Partial, TaskScratch};
 use crate::analytics::morsel::DEFAULT_MORSEL_ROWS;
+use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::Row;
 use crate::analytics::tpch::TpchDb;
 use crate::cluster::ClusterSpec;
@@ -63,7 +64,7 @@ use crate::coordinator::scheduler::{Scheduler, Task, TaskKind};
 use crate::error::Result;
 use crate::exec::{JoinHandle, ThreadPool};
 use crate::memsim::{simulate, WorkloadProfile};
-use crate::rpc::{Client, Dispatch, Endpoint};
+use crate::rpc::{BufPool, Client, Dispatch, Endpoint};
 use crate::simnet::Simulation;
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -175,6 +176,11 @@ struct WorkerShared {
     /// after all endpoints exist.
     peers: OnceLock<Vec<Client>>,
     leader: OnceLock<Client>,
+    /// Body-buffer free list: partial encodings are built in recycled
+    /// buffers before being framed into the destination endpoint's own
+    /// pool, so a worker serving a query stream stops allocating
+    /// exchange bodies after warm-up.
+    bufs: BufPool,
 }
 
 impl WorkerShared {
@@ -200,7 +206,7 @@ impl WorkerShared {
             part_bytes: Vec::new(),
             error: msg,
         };
-        let _ = self.leader().cast(METHOD_ACK, ack.encode());
+        let _ = self.leader().cast_frame(METHOD_ACK, |out| ack.encode_into(out));
     }
 
     fn on_plan(&self, pf: PlanFragment) {
@@ -239,55 +245,54 @@ impl WorkerShared {
         };
         match self.map_fold(&plan, qid, ex.lo as usize, ex.hi as usize) {
             Ok(ack) => {
-                let _ = self.leader().cast(METHOD_ACK, ack.encode());
+                let _ = self.leader().cast_frame(METHOD_ACK, |out| ack.encode_into(out));
             }
             Err(e) => self.ack_error(qid, e.to_string()),
         }
     }
 
     /// The map phase: fold the assigned range morsel by morsel through
-    /// the shared engine kernel, hash-partition the merged partial, cast
-    /// the non-empty partitions to their reducers, and report to the
-    /// leader (partition frame bytes, map time, table footprint).
+    /// the shared engine kernel into ONE long-lived aggregation table
+    /// (no per-morsel table + merge — the allocation-free steady state
+    /// the counting-allocator regression test pins down), hash-partition
+    /// the result, cast the non-empty partitions to their reducers from
+    /// pooled frame buffers, and report to the leader (partition frame
+    /// bytes, map time, table footprint).
     fn map_fold(&self, plan: &PlanState, qid: QueryId, lo: usize, hi: usize) -> Result<Ack> {
         let t = Instant::now();
         let spec = engine::spec(&plan.query)
             .ok_or_else(|| crate::err!("{qid}: query {} has no plan", plan.query))?;
         let (c, _prep) = (spec.compile)(&plan.db);
-        let mut merger = Merger::new(spec.width);
-        let mut morsel_ht_peak = 0u64;
+        let mut agg = engine::agg_for(&c, spec.width, hi - lo);
+        let mut scr = TaskScratch::new();
+        let mut stats = ExecStats::default();
         let mut s = lo;
         while s < hi {
             let e = (s + plan.morsel_rows).min(hi);
-            let p = engine::run_range(&c, spec.width, s, e);
-            // Morsels run sequentially within a worker, so the live
-            // working set is one morsel's hash table plus the
-            // accumulated merge state.
-            morsel_ht_peak = morsel_ht_peak.max(p.stats.ht_bytes);
-            merger.absorb(&p)?;
+            engine::fold_range(&c, spec.width, s, e, &mut agg, &mut scr, &mut stats);
             s = e;
         }
-        let partial = merger.into_partial();
-        let ht_bytes =
-            morsel_ht_peak + partial.len() as u64 * Partial::group_bytes(spec.width) as u64;
+        let partial = engine::finish_fold(agg, stats);
+        // One live table for the whole fold: its footprint IS the
+        // worker's aggregation working set.
+        let ht_bytes = partial.stats.ht_bytes;
         // Empty partitions (single-group queries leave w-1 of them) are
         // never encoded or shipped — no real system sends header-only
         // frames. The Ack's zero tells the leader not to expect them.
         let w = plan.workers;
         let mut part_bytes = vec![0u64; w];
+        let mut body = self.bufs.get(0);
         for (p_idx, part) in partial.partition_by_key(w).iter().enumerate() {
             if part.is_empty() {
                 continue;
             }
-            let frame = PartialFrame {
-                query_id: qid,
-                partition: p_idx as u32,
-                from_worker: self.wi,
-                reduce_ns: 0,
-                body: part.encode(),
-            };
-            part_bytes[p_idx] = self.peers()[p_idx].cast(METHOD_PARTIAL, frame.encode())? as u64;
+            body.clear();
+            part.encode_into(&mut body);
+            part_bytes[p_idx] = self.peers()[p_idx].cast_frame(METHOD_PARTIAL, |out| {
+                PartialFrame::encode_parts_into(qid, p_idx as u32, self.wi, 0, &body, out);
+            })? as u64;
         }
+        self.bufs.put(body);
         Ok(Ack {
             query_id: qid,
             worker: self.wi,
@@ -366,14 +371,13 @@ impl WorkerShared {
             Some(m) => m.into_partial(),
             None => return Ok(()), // nothing expected: nothing to ship
         };
-        let frame = PartialFrame {
-            query_id: qid,
-            partition: self.wi,
-            from_worker: self.wi,
-            reduce_ns: (t.elapsed().as_nanos() as u64).max(1),
-            body: merged.encode(),
-        };
-        self.leader().cast(METHOD_PARTIAL, frame.encode())?;
+        let mut body = self.bufs.get(0);
+        merged.encode_into(&mut body);
+        let reduce_ns = (t.elapsed().as_nanos() as u64).max(1);
+        self.leader().cast_frame(METHOD_PARTIAL, |out| {
+            PartialFrame::encode_parts_into(qid, self.wi, self.wi, reduce_ns, &body, out);
+        })?;
+        self.bufs.put(body);
         Ok(())
     }
 
@@ -487,8 +491,9 @@ impl LeaderShared {
         // Clean the workers' per-query state (pending plans, buffered
         // exchange partials) so a failed query cannot leak buffers.
         if let Some(clients) = self.worker_clients.get() {
+            let cq = CancelQuery { query_id: qid };
             for c in clients {
-                let _ = c.cast(METHOD_CANCEL, CancelQuery { query_id: qid }.encode());
+                let _ = c.cast_frame(METHOD_CANCEL, |out| cq.encode_into(out));
             }
         }
         st.trace.push(format!("failed: {msg}"));
@@ -559,7 +564,7 @@ impl LeaderShared {
             }
             st.trace.push(format!("send Reduce p{p} expect={}", expect.len()));
             let cmd = ReduceCmd { query_id: qid, partition: p as u32, expect };
-            match clients[p].cast(METHOD_REDUCE, cmd.encode()) {
+            match clients[p].cast_frame(METHOD_REDUCE, |out| cmd.encode_into(out)) {
                 Ok(b) => st.control_to[p] += b as u64,
                 Err(e) => {
                     // An unreachable reducer would leave the query in
@@ -726,6 +731,7 @@ impl QueryService {
                     cancelled: Mutex::new((HashSet::new(), VecDeque::new())),
                     peers: OnceLock::new(),
                     leader: OnceLock::new(),
+                    bufs: BufPool::new(),
                 })
             })
             .collect();
@@ -889,8 +895,9 @@ impl QueryService {
                     morsel_rows: self.morsel_rows as u64,
                 };
                 st.trace.push(format!("send Plan w{wi}"));
-                st.control_to[wi] +=
-                    self.worker_clients[wi].cast(METHOD_PLAN, plan.encode())? as u64;
+                st.control_to[wi] += self.worker_clients[wi]
+                    .cast_frame(METHOD_PLAN, |out| plan.encode_into(out))?
+                    as u64;
                 let ex = ExecuteRange {
                     query_id: qid,
                     worker: wi as u32,
@@ -898,8 +905,9 @@ impl QueryService {
                     hi: hi as u64,
                 };
                 st.trace.push(format!("send Execute w{wi} rows={lo}..{hi}"));
-                st.control_to[wi] +=
-                    self.worker_clients[wi].cast(METHOD_EXECUTE, ex.encode())? as u64;
+                st.control_to[wi] += self.worker_clients[wi]
+                    .cast_frame(METHOD_EXECUTE, |out| ex.encode_into(out))?
+                    as u64;
             }
             Ok(())
         })();
@@ -909,8 +917,9 @@ impl QueryService {
             // load, and tell the live workers to drop what they got.
             let st = g.remove(&qid).expect("just inserted");
             self.leader.release(qid, &st);
+            let cq = CancelQuery { query_id: qid };
             for c in &self.worker_clients {
-                let _ = c.cast(METHOD_CANCEL, CancelQuery { query_id: qid }.encode());
+                let _ = c.cast_frame(METHOD_CANCEL, |out| cq.encode_into(out));
             }
             return Err(e);
         }
@@ -959,8 +968,9 @@ impl QueryService {
         st.reducer_frames = Vec::new();
         st.phase = Phase::Cancelled;
         st.trace.push("cancelled".to_string());
+        let cq = CancelQuery { query_id: id };
         for (wi, c) in self.worker_clients.iter().enumerate() {
-            if let Ok(b) = c.cast(METHOD_CANCEL, CancelQuery { query_id: id }.encode()) {
+            if let Ok(b) = c.cast_frame(METHOD_CANCEL, |out| cq.encode_into(out)) {
                 st.control_to[wi] += b as u64;
             }
         }

@@ -23,11 +23,78 @@
 
 use crate::error::Result;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 /// Method id reserved for error responses.
 pub const METHOD_ERR: u32 = u32::MAX;
+
+/// Retained buffers per [`BufPool`]: enough for every in-flight frame of
+/// a busy endpoint plus slack; beyond it, returned buffers are dropped so
+/// a burst cannot pin memory forever.
+const POOL_MAX_BUFS: usize = 64;
+
+/// Bounded free-list of wire buffers, shared by an [`Endpoint`]'s server
+/// loop and every [`Client`] cloned from it. Frames are encoded into
+/// recycled buffers on send and returned to the pool after dispatch, so
+/// a steady message stream (the query service's map/exchange/reduce
+/// loop) allocates no frame memory after the first few round trips.
+/// Buffers keep their capacity across cycles; the pool converges on
+/// buffers sized to the endpoint's largest frames.
+#[derive(Default)]
+pub struct BufPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl BufPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty buffer with at least `cap` capacity — recycled when the
+    /// free list has one, freshly allocated otherwise.
+    pub fn get(&self, cap: usize) -> Vec<u8> {
+        let recycled = self.free.lock().unwrap().pop();
+        match recycled {
+            Some(mut b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b.clear();
+                b.reserve(cap);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(cap)
+            }
+        }
+    }
+
+    /// Return a buffer for reuse (dropped if the pool is full or the
+    /// buffer never allocated).
+    pub fn put(&self, mut b: Vec<u8>) {
+        if b.capacity() == 0 {
+            return;
+        }
+        let mut g = self.free.lock().unwrap();
+        if g.len() < POOL_MAX_BUFS {
+            b.clear();
+            g.push(b);
+        }
+    }
+
+    /// Buffers served from the free list (steady-state sends).
+    pub fn recycled(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Buffers that had to be freshly allocated (cold starts, bursts).
+    pub fn allocated(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
 
 /// Wire format: 16-byte header (method, len, id) + payload.
 #[derive(Clone, Debug, PartialEq)]
@@ -40,14 +107,22 @@ pub struct Message {
 impl Message {
     pub fn encode(&self) -> Vec<u8> {
         let mut buf = Vec::with_capacity(16 + self.payload.len());
+        self.encode_into(&mut buf);
+        buf
+    }
+
+    /// Append the wire encoding to `buf` (the pooled-buffer path).
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        buf.reserve(16 + self.payload.len());
         buf.extend_from_slice(&self.method.to_le_bytes());
         buf.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         buf.extend_from_slice(&self.id.to_le_bytes());
         buf.extend_from_slice(&self.payload);
-        buf
     }
 
-    pub fn decode(buf: &[u8]) -> Result<Self> {
+    /// Parse and validate the 16-byte header; returns (method, id,
+    /// payload length).
+    fn decode_header(buf: &[u8]) -> Result<(u32, u64, usize)> {
         crate::ensure!(buf.len() >= 16, "short frame: {} bytes", buf.len());
         let method = u32::from_le_bytes(buf[0..4].try_into()?);
         let len = u32::from_le_bytes(buf[4..8].try_into()?) as usize;
@@ -57,7 +132,21 @@ impl Message {
             "bad frame length: header says {len}, have {}",
             buf.len() - 16
         );
+        Ok((method, id, len))
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let (method, id, _) = Self::decode_header(buf)?;
         Ok(Self { method, id, payload: buf[16..].to_vec() })
+    }
+
+    /// [`Message::decode`] with the payload copied into a pooled buffer
+    /// — the server loop recycles it after dispatch.
+    fn decode_pooled(buf: &[u8], pool: &BufPool) -> Result<Self> {
+        let (method, id, len) = Self::decode_header(buf)?;
+        let mut payload = pool.get(len);
+        payload.extend_from_slice(&buf[16..]);
+        Ok(Self { method, id, payload })
     }
 }
 
@@ -116,56 +205,91 @@ enum Request {
 /// A served endpoint: spawn with handlers, then create [`Client`]s.
 pub struct Endpoint {
     tx: Sender<Request>,
+    pool: Arc<BufPool>,
     server: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Endpoint {
     /// Start a single-threaded server (one dispatch core — deliberately,
     /// to measure per-core capacity like the paper's experiment).
+    ///
+    /// The endpoint owns a [`BufPool`] shared with every client: request
+    /// frames are encoded into recycled buffers, and the server returns
+    /// both the frame and the decoded payload buffer to the pool after
+    /// dispatch. One-way casts skip building a response entirely.
     pub fn serve(handlers: HashMap<u32, Handler>) -> Self {
         let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        let pool = Arc::new(BufPool::new());
+        let server_pool = Arc::clone(&pool);
         let server = std::thread::Builder::new()
             .name("rpc-server".into())
             .spawn(move || {
+                let pool = server_pool;
                 // Exits on the shutdown sentinel or full disconnect,
                 // after draining everything queued before it.
                 while let Ok(Request::Frame(frame, reply_tx)) = rx.recv() {
-                    let resp = match Message::decode(&frame) {
-                        Ok(msg) => match handlers.get(&msg.method) {
-                            Some(h) => match h(&msg) {
-                                Ok(payload) => {
-                                    Message { method: msg.method, id: msg.id, payload }.encode()
+                    match reply_tx {
+                        None => {
+                            // One-way cast: dispatch, recycle, no response.
+                            if let Ok(msg) = Message::decode_pooled(&frame, &pool) {
+                                if let Some(h) = handlers.get(&msg.method) {
+                                    let _ = h(&msg);
+                                }
+                                pool.put(msg.payload);
+                            }
+                        }
+                        Some(reply_tx) => {
+                            let resp = match Message::decode_pooled(&frame, &pool) {
+                                Ok(msg) => {
+                                    let out = match handlers.get(&msg.method) {
+                                        Some(h) => match h(&msg) {
+                                            Ok(payload) => {
+                                                Message { method: msg.method, id: msg.id, payload }
+                                            }
+                                            Err(e) => Message {
+                                                method: METHOD_ERR,
+                                                id: msg.id,
+                                                payload: e.to_string().into_bytes(),
+                                            },
+                                        },
+                                        None => Message {
+                                            method: METHOD_ERR,
+                                            id: msg.id,
+                                            payload: b"no such method".to_vec(),
+                                        },
+                                    };
+                                    pool.put(msg.payload);
+                                    out
                                 }
                                 Err(e) => Message {
                                     method: METHOD_ERR,
-                                    id: msg.id,
+                                    id: 0,
                                     payload: e.to_string().into_bytes(),
-                                }
-                                .encode(),
-                            },
-                            None => {
-                                let payload = b"no such method".to_vec();
-                                Message { method: METHOD_ERR, id: msg.id, payload }.encode()
-                            }
-                        },
-                        Err(e) => Message {
-                            method: METHOD_ERR,
-                            id: 0,
-                            payload: e.to_string().into_bytes(),
+                                },
+                            };
+                            let mut buf = pool.get(16 + resp.payload.len());
+                            resp.encode_into(&mut buf);
+                            let _ = reply_tx.send(buf);
                         }
-                        .encode(),
-                    };
-                    if let Some(reply_tx) = reply_tx {
-                        let _ = reply_tx.send(resp);
                     }
+                    pool.put(frame);
                 }
             })
             .expect("spawn rpc server");
-        Self { tx, server: Some(server) }
+        Self { tx, pool, server: Some(server) }
     }
 
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.clone(), next_id: Arc::new(Mutex::new(0)) }
+        Client {
+            tx: self.tx.clone(),
+            pool: Arc::clone(&self.pool),
+            next_id: Arc::new(Mutex::new(0)),
+        }
+    }
+
+    /// The endpoint's shared frame-buffer pool (telemetry, tests).
+    pub fn buf_pool(&self) -> &BufPool {
+        &self.pool
     }
 }
 
@@ -183,10 +307,11 @@ impl Drop for Endpoint {
     }
 }
 
-/// Client handle (cheaply cloneable).
+/// Client handle (cheaply cloneable; shares the endpoint's [`BufPool`]).
 #[derive(Clone)]
 pub struct Client {
     tx: Sender<Request>,
+    pool: Arc<BufPool>,
     next_id: Arc<Mutex<u64>>,
 }
 
@@ -197,21 +322,50 @@ impl Client {
         *g
     }
 
+    /// Encode a frame header + `write`-produced payload into a pooled
+    /// buffer; returns the sealed frame (length field patched) and the
+    /// request id it carries.
+    fn frame_with<F: FnOnce(&mut Vec<u8>)>(&self, method: u32, write: F) -> (Vec<u8>, u64) {
+        let id = self.fresh_id();
+        let mut buf = self.pool.get(64);
+        buf.extend_from_slice(&method.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 4]); // length, patched below
+        buf.extend_from_slice(&id.to_le_bytes());
+        write(&mut buf);
+        let len = (buf.len() - 16) as u32;
+        buf[4..8].copy_from_slice(&len.to_le_bytes());
+        (buf, id)
+    }
+
     /// Synchronous call; returns the response payload.
     pub fn call(&self, method: u32, payload: Vec<u8>) -> Result<Vec<u8>> {
-        let id = self.fresh_id();
-        let frame = Message { method, id, payload }.encode();
+        let (frame, id) = self.frame_with(method, |b| b.extend_from_slice(&payload));
         let (rtx, rrx) = channel();
         self.tx
             .send(Request::Frame(frame, Some(rtx)))
             .map_err(|_| crate::err!("endpoint closed"))?;
-        let resp = rrx.recv().map_err(|_| crate::err!("endpoint closed"))?;
-        let msg = Message::decode(&resp)?;
-        if msg.method == METHOD_ERR {
-            crate::bail!("{}", String::from_utf8_lossy(&msg.payload));
+        let mut resp = rrx.recv().map_err(|_| crate::err!("endpoint closed"))?;
+        // Parse the header in place; on success the pooled response
+        // buffer itself, drained of its header, becomes the payload —
+        // no copy. Error paths hand the buffer back to the pool.
+        let (rmethod, rid) = match Message::decode_header(&resp) {
+            Ok((m, rid, _len)) => (m, rid),
+            Err(e) => {
+                self.pool.put(resp);
+                return Err(e);
+            }
+        };
+        if rmethod == METHOD_ERR {
+            let msg = String::from_utf8_lossy(&resp[16..]).into_owned();
+            self.pool.put(resp);
+            crate::bail!("{msg}");
         }
-        crate::ensure!(msg.id == id, "response id mismatch: {} vs {}", msg.id, id);
-        Ok(msg.payload)
+        if rid != id {
+            self.pool.put(resp);
+            crate::bail!("response id mismatch: {rid} vs {id}");
+        }
+        resp.drain(..16);
+        Ok(resp)
     }
 
     /// One-way send: enqueue the frame and return immediately with the
@@ -220,8 +374,15 @@ impl Client {
     /// the coordinator's protocol state machines use — a handler may
     /// `cast` to a peer that is itself mid-handler without deadlock.
     pub fn cast(&self, method: u32, payload: Vec<u8>) -> Result<usize> {
-        let id = self.fresh_id();
-        let frame = Message { method, id, payload }.encode();
+        self.cast_frame(method, |b| b.extend_from_slice(&payload))
+    }
+
+    /// One-way send with the payload written in place by `write` into a
+    /// pooled frame buffer — no intermediate payload vector. The query
+    /// service's state machines encode every protocol frame through
+    /// this, so a steady exchange stream allocates no frame memory.
+    pub fn cast_frame<F: FnOnce(&mut Vec<u8>)>(&self, method: u32, write: F) -> Result<usize> {
+        let (frame, _id) = self.frame_with(method, write);
         let bytes = frame.len();
         self.tx
             .send(Request::Frame(frame, None))
@@ -377,6 +538,45 @@ mod tests {
         c.cast(1, vec![]).unwrap(); // handler errors, nothing to report to
         c.call(2, vec![]).unwrap(); // endpoint still serves
         assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn buf_pool_recycles_and_bounds() {
+        let pool = BufPool::new();
+        let mut b = pool.get(100);
+        assert!(b.capacity() >= 100);
+        assert_eq!(pool.allocated(), 1);
+        b.extend_from_slice(&[1, 2, 3]);
+        pool.put(b);
+        let b2 = pool.get(10);
+        assert!(b2.is_empty(), "recycled buffer must come back cleared");
+        assert!(b2.capacity() >= 100, "capacity survives the cycle");
+        assert_eq!(pool.recycled(), 1);
+        // Zero-capacity buffers are not worth keeping.
+        pool.put(Vec::new());
+        assert!(pool.free.lock().unwrap().is_empty());
+        // The free list is bounded.
+        for _ in 0..(super::POOL_MAX_BUFS + 10) {
+            pool.put(Vec::with_capacity(8));
+        }
+        assert!(pool.free.lock().unwrap().len() <= super::POOL_MAX_BUFS);
+    }
+
+    #[test]
+    fn steady_state_casts_reuse_pooled_frames() {
+        let ep = Dispatch::new().on(1, |_m: &Message| Ok(vec![])).serve();
+        let c = ep.client();
+        // Warm up: the first frames allocate, then the server recycles
+        // them and later casts draw from the free list.
+        for _ in 0..50 {
+            c.cast(1, vec![7; 32]).unwrap();
+        }
+        c.call(1, vec![]).unwrap(); // flush the in-order queue
+        assert!(
+            ep.buf_pool().recycled() > 0,
+            "no frame buffer was ever recycled (allocated={})",
+            ep.buf_pool().allocated()
+        );
     }
 
     #[test]

@@ -1,0 +1,84 @@
+//! Allocation regression gate for the engine's hot path.
+//!
+//! The zero-allocation contract of the batch kernels: after warm-up
+//! (scratch buffers at their high-water size, every group discovered),
+//! folding a morsel through predicate evaluation ([`SelScratch`]
+//! ping-pong), batched evaluation ([`EvalBatch`] columns), and the
+//! batched `HashAgg::update_sel` performs **zero** heap allocations.
+//! This is the property that lets wimpy smart-NIC cores spend their
+//! cycles on column data instead of the allocator — and it is exactly
+//! what a stray `Vec::new()` in a kernel would silently regress, so CI
+//! runs this file in quick mode too (see `ci.sh`).
+//!
+//! This file deliberately contains a single `#[test]`: the counting
+//! allocator is process-wide, and a sibling test allocating concurrently
+//! would make the measured window noisy. Cargo gives each integration
+//! test file its own process, so the single-test-per-file rule is what
+//! guarantees a quiet measurement.
+
+use lovelock::analytics::engine::{self, TaskScratch};
+use lovelock::analytics::ops::ExecStats;
+use lovelock::analytics::{TpchConfig, TpchDb};
+use lovelock::benchkit::CountingAlloc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+const MORSEL_ROWS: usize = 4096;
+
+/// Fold `[0, n)` morsel-by-morsel into `agg`, returning rows folded.
+fn fold_all(
+    c: &engine::Compiled<'_>,
+    width: usize,
+    n: usize,
+    agg: &mut engine::HashAgg,
+    scr: &mut TaskScratch,
+) -> ExecStats {
+    let mut stats = ExecStats::default();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + MORSEL_ROWS).min(n);
+        engine::fold_range(c, width, lo, hi, agg, scr, &mut stats);
+        lo = hi;
+    }
+    stats
+}
+
+#[test]
+fn steady_state_fold_allocates_nothing_per_morsel() {
+    let db = TpchDb::generate(TpchConfig::new(0.01, 5));
+    let n = db.lineitem.len();
+    assert!(n > 4 * MORSEL_ROWS, "need several morsels for a meaningful steady state");
+
+    // q6: selective three-conjunct predicate cascade, single group.
+    // q1: near-full scan, 5 accumulator columns, 4 groups.
+    for q in ["q6", "q1"] {
+        let spec = engine::spec(q).unwrap();
+        let (c, _prep) = (spec.compile)(&db);
+        let mut agg = engine::agg_for(&c, spec.width, n);
+        let mut scr = TaskScratch::new();
+
+        // Warm-up pass: sizes every scratch buffer to its high-water
+        // mark and discovers every group this data set produces.
+        let warm = fold_all(&c, spec.width, n, &mut agg, &mut scr);
+        assert!(warm.rows_in > 0, "{q}: warm-up folded nothing");
+
+        // Measured pass over the same rows: the same morsels, the same
+        // groups — by the zero-allocation contract, not one allocation.
+        let before = CountingAlloc::allocations();
+        let stats = fold_all(&c, spec.width, n, &mut agg, &mut scr);
+        let allocs = CountingAlloc::allocations() - before;
+        let morsels = n.div_ceil(MORSEL_ROWS);
+        assert_eq!(
+            allocs, 0,
+            "{q}: steady-state fold allocated {allocs} times over {morsels} morsels \
+             ({} rows in)",
+            stats.rows_in
+        );
+
+        // The fold still did real work (both passes folded every row).
+        assert_eq!(stats.rows_in, warm.rows_in, "{q}: measured pass degenerated");
+        let p = engine::finish_fold(agg, stats);
+        assert!(!p.is_empty(), "{q}: fold produced no groups");
+    }
+}
