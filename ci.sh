@@ -34,6 +34,14 @@ fi
 echo "==> cargo test -q"
 cargo test -q
 
+# Wire-format stability gate: decode and RUN the golden encoded plan
+# fixture (rust/tests/fixtures/q6_plan.bin). `cargo test` above already
+# ran it; this explicit stage keeps the gate visible and names the fix:
+# an intentional codec change regenerates the fixture with
+# LOVELOCK_BLESS=1 and commits it alongside.
+echo "==> golden plan fixture (LogicalPlan wire format pinned)"
+cargo test -q --test plan_fixture
+
 # Alloc-count gate: a per-row allocation sneaking back into the batch
 # kernels must fail CI, not wait for someone to read bench output. The
 # `cargo test -q` above already ran the alloc_regression test in debug

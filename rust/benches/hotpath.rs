@@ -9,7 +9,10 @@
 //! q6 and q1 — the zero-allocation contract of the batch kernels,
 //! measured, not asserted (the `alloc_regression` test asserts it).
 
-use lovelock::analytics::engine::{self, HashAgg, HashJoinTable, Merger, Sel, TaskScratch};
+use lovelock::analytics::engine::{
+    self, BatchEval, Compiled, EvalBatch, HashAgg, HashJoinTable, Merger, Predicate, Sel,
+    TaskScratch,
+};
 use lovelock::analytics::morsel::run_query_morsel;
 use lovelock::analytics::ops::{
     all_rows, filter_i32_range, hash_join, par_filter_i32_range, ExecStats,
@@ -36,17 +39,18 @@ fn env_sf(var: &str, default: f64) -> f64 {
 /// pass (scratch + groups reach high water), then count allocation
 /// events across a second identical pass.
 fn allocs_per_morsel(db: &TpchDb, q: &str, morsel_rows: usize) -> (f64, usize) {
-    let spec = engine::spec(q).unwrap();
-    let (c, _prep) = (spec.compile)(db);
+    let plan = engine::spec(q).unwrap();
+    let (c, _prep) = engine::plan::compile(db, &plan).unwrap();
+    let width = plan.width();
     let n = db.lineitem.len();
-    let mut agg = engine::agg_for(&c, spec.width, n);
+    let mut agg = engine::agg_for(&c, width, n);
     let mut scr = TaskScratch::new();
     let mut fold = |agg: &mut HashAgg, scr: &mut TaskScratch| {
         let mut stats = ExecStats::default();
         let mut lo = 0;
         while lo < n {
             let hi = (lo + morsel_rows).min(n);
-            engine::fold_range(&c, spec.width, lo, hi, agg, scr, &mut stats);
+            engine::fold_range(&c, width, lo, hi, agg, scr, &mut stats);
             lo = hi;
         }
         stats.rows_in
@@ -113,25 +117,88 @@ fn main() {
     // Engine kernels: predicate eval (ping-pong scratch, branchless
     // leaves), compile+kernel, partition exchange.
     let q6 = engine::spec("q6").unwrap();
-    let (c6, _) = (q6.compile)(&db);
+    let (c6, _) = engine::plan::compile(&db, &q6).unwrap();
     let mut scr6 = engine::SelScratch::new();
     b.measure_throughput("q6 eval_predicate", li_rows * 4, || {
         let mut st = ExecStats::default();
         black_box(c6.pred.eval_into(0, db.lineitem.len(), &mut scr6, &mut st).len());
     });
     let q18 = engine::spec("q18").unwrap();
-    let (c18, _) = (q18.compile)(&db);
+    let (c18, _) = engine::plan::compile(&db, &q18).unwrap();
     let mut scr18 = TaskScratch::new();
     b.measure_throughput("q18 kernel (full range)", li_rows * 16, || {
-        black_box(engine::run_range_scratch(&c18, q18.width, 0, db.lineitem.len(), &mut scr18));
+        black_box(engine::run_range_scratch(&c18, q18.width(), 0, db.lineitem.len(), &mut scr18));
     });
-    let p18 = engine::run_range(&c18, q18.width, 0, db.lineitem.len());
+
+    // Plan-IR overhead: the IR-generated BatchEval vs a hand-written
+    // closure over the same predicate + kernel (the pre-IR shape of
+    // q6/q1) — the rows EXPERIMENTS.md §Morsel tracks to pin "plans as
+    // data" at closure-speed. Only the evaluator differs: predicate,
+    // fold, and aggregation are shared engine code on both sides.
+    {
+        let li = &db.lineitem;
+        let n = li.len();
+        let ship = li.col("l_shipdate").as_i32();
+        let disc = li.col("l_discount").as_f64();
+        let qty = li.col("l_quantity").as_f64();
+        let price = li.col("l_extendedprice").as_f64();
+        let q6p = lovelock::analytics::queries::q6::Q6Params::default();
+        let pred = Predicate::and(vec![
+            Predicate::i32_range(ship, q6p.date_lo, q6p.date_hi),
+            Predicate::f64_range(disc, q6p.disc_lo, q6p.disc_hi),
+            Predicate::f64_lt(qty, q6p.qty_lt),
+        ]);
+        let eval: BatchEval<'_> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+            rows.for_each(|i| {
+                out.keys.push(0);
+                out.cols[0].push(price[i] * disc[i]);
+            });
+        });
+        let hand6 = Compiled { pred, payload_bytes: 8, eval, groups_hint: 1 };
+        let bytes6 = run_query(&db, "q6").unwrap().stats.bytes_scanned;
+        let mut scr = TaskScratch::new();
+        b.measure_throughput("q6 fold hand-written", bytes6, || {
+            black_box(engine::run_range_scratch(&hand6, 1, 0, n, &mut scr));
+        });
+        b.measure_throughput("q6 fold plan-ir", bytes6, || {
+            black_box(engine::run_range_scratch(&c6, 1, 0, n, &mut scr));
+        });
+
+        let tax = li.col("l_tax").as_f64();
+        let rf = li.col("l_returnflag").as_u8();
+        let ls = li.col("l_linestatus").as_u8();
+        let cutoff = lovelock::analytics::column::date_to_days(1998, 12, 1) - 90;
+        let pred1 = Predicate::i32_range(ship, i32::MIN, cutoff + 1);
+        let eval1: BatchEval<'_> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+            rows.for_each(|i| {
+                let dp = price[i] * (1.0 - disc[i]);
+                out.keys.push(((rf[i] as i64) << 8) | ls[i] as i64);
+                out.cols[0].push(qty[i]);
+                out.cols[1].push(price[i]);
+                out.cols[2].push(dp);
+                out.cols[3].push(dp * (1.0 + tax[i]));
+                out.cols[4].push(disc[i]);
+            });
+        });
+        let hand1 = Compiled { pred: pred1, payload_bytes: 8 * 4 + 2, eval: eval1, groups_hint: 8 };
+        let q1 = engine::spec("q1").unwrap();
+        let (c1, _) = engine::plan::compile(&db, &q1).unwrap();
+        let bytes1 = run_query(&db, "q1").unwrap().stats.bytes_scanned;
+        b.measure_throughput("q1 fold hand-written", bytes1, || {
+            black_box(engine::run_range_scratch(&hand1, 5, 0, n, &mut scr));
+        });
+        b.measure_throughput("q1 fold plan-ir", bytes1, || {
+            black_box(engine::run_range_scratch(&c1, 5, 0, n, &mut scr));
+        });
+    }
+
+    let p18 = engine::run_range(&c18, q18.width(), 0, db.lineitem.len());
     b.measure("q18 partition_by_key x8", || {
         black_box(p18.partition_by_key(8));
     });
     b.measure("q18 partition+merge x8", || {
         let parts = p18.partition_by_key(8);
-        let mut m = Merger::new(q18.width);
+        let mut m = Merger::new(q18.width());
         for p in &parts {
             m.absorb(p).unwrap();
         }

@@ -1,23 +1,25 @@
-//! The unified vectorized execution layer: one [`PlanSpec`] per query,
-//! one kernel for every path.
+//! The unified vectorized execution layer: one [`LogicalPlan`] per
+//! query, one kernel for every path.
 //!
 //! Before this layer existed, each TPC-H query carried three hand-written
 //! implementations — a serial `run()`, a morsel `prepare`/kernel pair,
 //! and the distributed worker fold — that duplicated every predicate and
 //! dimension-join build (a drift risk the cross-path equality tests only
-//! papered over). Now a query is a single [`PlanSpec`]:
+//! papered over). Now a query is a single declarative, wire-serializable
+//! [`LogicalPlan`] (see [`plan`]):
 //!
-//! * `compile` — runs once per executor over the *broadcast* tables and
-//!   returns a [`Compiled`] context: a [`Predicate`] expression over
-//!   lineitem, the dimension [`HashJoinTable`]s captured by a batched
-//!   evaluator, and the aggregate slot layout;
+//! * [`plan::compile`] — runs once per executor over the *broadcast*
+//!   tables and returns a [`Compiled`] context: a [`Predicate`]
+//!   expression over lineitem, the dimension [`HashJoinTable`]s captured
+//!   by a generated batched evaluator, and the aggregate slot layout;
 //! * the shared kernel ([`fold_range`]) evaluates the predicate into the
 //!   task's reusable [`SelScratch`] ping-pong buffers, runs the plan's
 //!   [`BatchEval`] over the surviving rows into reusable key/value
 //!   columns ([`EvalBatch`]), and folds them through one batched
 //!   [`HashAgg::update_sel`] call — allocation-free in steady state;
-//! * `finalize` — merged partial → result rows (sorts, top-k, dimension
-//!   lookups on the leader).
+//! * [`plan::finalize`] — merged partial → result rows, interpreting the
+//!   plan's [`plan::FinalizeSpec`] (sorts, top-k, having, dimension
+//!   decoration on the leader).
 //!
 //! The three execution paths are thin drivers over those pieces:
 //! [`run_serial`] is `compile` + one full-range kernel call;
@@ -44,15 +46,18 @@ pub mod agg;
 pub mod expr;
 pub mod join;
 pub mod partial;
+pub mod plan;
 
 pub use agg::HashAgg;
 pub use expr::{Predicate, Sel, SelScratch};
 pub use join::{HashJoinTable, ProbeIter};
 pub use partial::{Merger, Partial};
+pub use plan::{LogicalPlan, PlanParams};
 
 use super::ops::ExecStats;
-use super::queries::{self, QueryOutput, Row};
+use super::queries::{self, QueryOutput};
 use super::tpch::TpchDb;
+use crate::error::Result;
 use crate::exec::{parallel_map_chunks_with, parallel_map_sel_chunks_with};
 
 /// Maximum aggregate slots per group across the query set (Q1 uses 5).
@@ -141,20 +146,7 @@ pub(crate) fn hash64(k: i64) -> u64 {
     h ^ (h >> 32)
 }
 
-/// A query's execution plan — the one description all three paths drive.
-pub struct PlanSpec {
-    /// Query name ("q1" … "q19").
-    pub name: &'static str,
-    /// Aggregate accumulator slots per group (≤ [`MAX_ACCS`]).
-    pub width: usize,
-    /// Build the broadcast-side state (dimension hash tables, dictionary
-    /// lookups, predicate) and return it with its one-time build stats.
-    pub compile: for<'a> fn(&'a TpchDb) -> (Compiled<'a>, ExecStats),
-    /// Merged partial → final result rows (leader-side).
-    pub finalize: fn(&TpchDb, &Partial) -> Vec<Row>,
-}
-
-/// The compiled per-executor context [`PlanSpec::compile`] returns.
+/// The compiled per-executor context [`plan::compile`] returns.
 pub struct Compiled<'a> {
     /// Predicate over lineitem, evaluated per morsel into the task's
     /// selection scratch (charges its own per-conjunct scan stats).
@@ -169,21 +161,15 @@ pub struct Compiled<'a> {
     pub groups_hint: usize,
 }
 
-/// Look up the plan for a query. Every query in
-/// [`super::queries::QUERY_NAMES`] has exactly one.
-pub fn spec(name: &str) -> Option<PlanSpec> {
-    match name {
-        "q1" => Some(queries::q1::plan_spec()),
-        "q3" => Some(queries::q3::plan_spec()),
-        "q5" => Some(queries::q5::plan_spec()),
-        "q6" => Some(queries::q6::plan_spec()),
-        "q9" => Some(queries::q9::plan_spec()),
-        "q12" => Some(queries::q12::plan_spec()),
-        "q14" => Some(queries::q14::plan_spec()),
-        "q18" => Some(queries::q18::plan_spec()),
-        "q19" => Some(queries::q19::plan_spec()),
-        _ => None,
-    }
+/// Look up the default-parameter plan for a registered query. Every
+/// query in [`super::queries::QUERY_NAMES`] has exactly one entry in
+/// [`super::queries::REGISTRY`] — this is a thin view over that one
+/// table, not a second name list.
+pub fn spec(name: &str) -> Option<LogicalPlan> {
+    queries::REGISTRY
+        .iter()
+        .find(|d| d.name == name)
+        .map(|d| (d.logical)(&PlanParams::default()).expect("default registry plan must build"))
 }
 
 /// A right-sized aggregation table for folding up to `n_rows` rows of a
@@ -290,26 +276,22 @@ pub fn aggregate_sel(c: &Compiled<'_>, width: usize, sel: &[u32], stats: ExecSta
     aggregate_sel_scratch(c, width, sel, stats, &mut scr)
 }
 
-/// Run a compiled plan single-threaded over the whole of lineitem —
-/// the serial path as one full-range kernel call.
-pub fn run_serial_compiled(
-    db: &TpchDb,
-    width: usize,
-    c: &Compiled<'_>,
-    prep: ExecStats,
-    finalize: fn(&TpchDb, &Partial) -> Vec<Row>,
-) -> QueryOutput {
-    let p = run_range(c, width, 0, db.lineitem.len());
+/// Run a plan single-threaded over the whole of its scan table — the
+/// serial path as one full-range kernel call. Fails (never panics) on a
+/// malformed plan, so ad-hoc wire plans can be rejected gracefully.
+pub fn try_run_serial(db: &TpchDb, p: &LogicalPlan) -> Result<QueryOutput> {
+    let (c, prep) = plan::compile(db, p)?;
+    let part = run_range(&c, p.width(), 0, plan::table(db, p.scan).len());
     let mut stats = prep;
-    stats.merge(&p.stats);
-    QueryOutput { rows: finalize(db, &p), stats }
+    stats.merge(&part.stats);
+    Ok(QueryOutput { rows: plan::finalize(db, &p.finalize, &part)?, stats })
 }
 
 /// Run a query single-threaded (the reference path behind
-/// [`super::queries::run_query`]).
-pub fn run_serial(db: &TpchDb, spec: &PlanSpec) -> QueryOutput {
-    let (c, prep) = (spec.compile)(db);
-    run_serial_compiled(db, spec.width, &c, prep, spec.finalize)
+/// [`super::queries::run_query`]). Panics on a malformed plan — registry
+/// plans always compile; use [`try_run_serial`] for ad-hoc IR.
+pub fn run_serial(db: &TpchDb, p: &LogicalPlan) -> QueryOutput {
+    try_run_serial(db, p).expect("logical plan failed to compile")
 }
 
 /// Run a query morsel-parallel on `threads` threads (0 = all cores),
@@ -326,13 +308,24 @@ pub fn run_serial(db: &TpchDb, spec: &PlanSpec) -> QueryOutput {
 /// deterministic regardless of thread scheduling.
 pub fn run_parallel(
     db: &TpchDb,
-    spec: &PlanSpec,
+    plan: &LogicalPlan,
     threads: usize,
     morsel_rows: usize,
 ) -> QueryOutput {
+    try_run_parallel(db, plan, threads, morsel_rows).expect("logical plan failed to compile")
+}
+
+/// Fallible form of [`run_parallel`] for ad-hoc wire plans.
+pub fn try_run_parallel(
+    db: &TpchDb,
+    spec: &LogicalPlan,
+    threads: usize,
+    morsel_rows: usize,
+) -> Result<QueryOutput> {
     let morsel_rows = morsel_rows.max(1);
-    let (c, prep) = (spec.compile)(db);
-    let n = db.lineitem.len();
+    let (c, prep) = plan::compile(db, spec)?;
+    let width = spec.width();
+    let n = plan::table(db, spec.scan).len();
 
     let (pre_stats, partials): (ExecStats, Vec<Partial>) = if c.pred.is_all_pass() {
         // Fast path: with an all-pass predicate every selection slice is
@@ -341,7 +334,7 @@ pub fn run_parallel(
         // take this path).
         let partials =
             parallel_map_chunks_with(n, morsel_rows, threads, TaskScratch::new, |scr, lo, hi| {
-                run_range_scratch(&c, spec.width, lo, hi, scr)
+                run_range_scratch(&c, width, lo, hi, scr)
             });
         (prep, partials)
     } else {
@@ -364,13 +357,13 @@ pub fn run_parallel(
             morsel_rows,
             threads,
             TaskScratch::new,
-            |scr, slice| aggregate_sel_scratch(&c, spec.width, slice, ExecStats::default(), scr),
+            |scr, slice| aggregate_sel_scratch(&c, width, slice, ExecStats::default(), scr),
         );
         (pre_stats, partials)
     };
 
     // Merge in slice order; fold in the compile + predicate stats.
-    let mut merger = Merger::new(spec.width);
+    let mut merger = Merger::new(width);
     *merger.stats_mut() = pre_stats;
     let mut slice_ht_peak = 0u64;
     for p in &partials {
@@ -384,9 +377,9 @@ pub fn run_parallel(
     // documented "live at once" meaning.
     merged.stats.ht_bytes = pre_stats.ht_bytes
         + slice_ht_peak
-        + merged.len() as u64 * Partial::group_bytes(spec.width) as u64;
-    let rows = (spec.finalize)(db, &merged);
-    QueryOutput { rows, stats: merged.stats }
+        + merged.len() as u64 * Partial::group_bytes(width) as u64;
+    let rows = plan::finalize(db, &spec.finalize, &merged)?;
+    Ok(QueryOutput { rows, stats: merged.stats })
 }
 
 #[cfg(test)]
@@ -398,9 +391,10 @@ mod tests {
     #[test]
     fn every_query_has_exactly_one_spec() {
         for q in QUERY_NAMES {
-            let s = spec(q).unwrap_or_else(|| panic!("{q} has no PlanSpec"));
+            let s = spec(q).unwrap_or_else(|| panic!("{q} has no LogicalPlan"));
             assert_eq!(s.name, q);
-            assert!(s.width >= 1 && s.width <= MAX_ACCS, "{q} width {}", s.width);
+            let w = s.width();
+            assert!(w >= 1 && w <= MAX_ACCS, "{q} width {w}");
         }
         assert!(spec("q99").is_none());
     }
@@ -410,9 +404,9 @@ mod tests {
         let db = TpchDb::generate(TpchConfig::new(0.002, 7));
         for q in ["q1", "q6", "q18"] {
             let s = spec(q).unwrap();
-            let (c, prep) = (s.compile)(&db);
-            let p = run_range(&c, s.width, 0, db.lineitem.len());
-            let direct = (s.finalize)(&db, &p);
+            let (c, prep) = plan::compile(&db, &s).unwrap();
+            let p = run_range(&c, s.width(), 0, db.lineitem.len());
+            let direct = plan::finalize(&db, &s.finalize, &p).unwrap();
             let driver = run_serial(&db, &s);
             assert!(driver.approx_eq_rows(&direct), "{q}: driver != direct kernel");
             assert!(driver.stats.bytes_scanned >= p.stats.bytes_scanned);
@@ -427,17 +421,17 @@ mod tests {
         // identical association is not guaranteed — compare via rows).
         let db = TpchDb::generate(TpchConfig::new(0.002, 11));
         let s = spec("q1").unwrap();
-        let (c, _) = (s.compile)(&db);
+        let (c, _) = plan::compile(&db, &s).unwrap();
         let n = db.lineitem.len();
-        let full = run_range(&c, s.width, 0, n);
-        let mut m = Merger::new(s.width);
+        let full = run_range(&c, s.width(), 0, n);
+        let mut m = Merger::new(s.width());
         let mid = n / 3;
         for (lo, hi) in [(0, mid), (mid, n)] {
-            m.absorb(&run_range(&c, s.width, lo, hi)).unwrap();
+            m.absorb(&run_range(&c, s.width(), lo, hi)).unwrap();
         }
         let merged = m.into_partial();
-        let rows_full = (s.finalize)(&db, &full);
-        let rows_merged = (s.finalize)(&db, &merged);
+        let rows_full = plan::finalize(&db, &s.finalize, &full).unwrap();
+        let rows_merged = plan::finalize(&db, &s.finalize, &merged).unwrap();
         let out = QueryOutput { rows: rows_merged, stats: ExecStats::default() };
         assert!(out.approx_eq_rows(&rows_full));
     }
@@ -450,16 +444,16 @@ mod tests {
         let db = TpchDb::generate(TpchConfig::new(0.002, 19));
         for q in ["q1", "q6", "q12"] {
             let s = spec(q).unwrap();
-            let (c, _) = (s.compile)(&db);
+            let (c, _) = plan::compile(&db, &s).unwrap();
             let n = db.lineitem.len();
-            let full = run_range(&c, s.width, 0, n);
-            let mut agg = agg_for(&c, s.width, n);
+            let full = run_range(&c, s.width(), 0, n);
+            let mut agg = agg_for(&c, s.width(), n);
             let mut scr = TaskScratch::new();
             let mut stats = ExecStats::default();
             let mut lo = 0;
             while lo < n {
                 let hi = (lo + 777).min(n);
-                fold_range(&c, s.width, lo, hi, &mut agg, &mut scr, &mut stats);
+                fold_range(&c, s.width(), lo, hi, &mut agg, &mut scr, &mut stats);
                 lo = hi;
             }
             let folded = finish_fold(agg, stats);
@@ -480,13 +474,13 @@ mod tests {
         let db = TpchDb::generate(TpchConfig::new(0.001, 13));
         for q in QUERY_NAMES {
             let s = spec(q).unwrap();
-            let (c, _) = (s.compile)(&db);
-            let p = run_range(&c, s.width, 0, 0);
+            let (c, _) = plan::compile(&db, &s).unwrap();
+            let p = run_range(&c, s.width(), 0, 0);
             assert!(p.is_empty(), "{q}: non-empty partial from empty range");
-            assert_eq!(p.width, s.width, "{q}: width mismatch");
+            assert_eq!(p.width, s.width(), "{q}: width mismatch");
             // Finalize must tolerate an empty partial (scalar queries
             // return their zero row, grouped queries no rows).
-            let _ = (s.finalize)(&db, &p);
+            let _ = plan::finalize(&db, &s.finalize, &p).unwrap();
         }
     }
 

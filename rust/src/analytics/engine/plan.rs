@@ -1,0 +1,2602 @@
+//! Plans as data: the serializable logical-plan IR.
+//!
+//! Lovelock workers are headless smart NICs — the control plane hands
+//! them *computation over the fabric*. Before this module, a
+//! [`crate::coordinator::protocol::PlanFragment`] shipped only a query
+//! **name** and every worker had to contain the matching hand-written
+//! Rust closures: a closed world of nine frozen programs. A
+//! [`LogicalPlan`] is the open replacement — a declarative,
+//! wire-serializable description of a query:
+//!
+//! * `scan` — the probe-side table (lineitem for the TPC-H set);
+//! * `pred` — a [`PredExpr`] tree over scan columns, lowered onto the
+//!   vectorized [`Predicate`] cascade (ping-pong selection buffers);
+//! * `joins` — up to [`MAX_JOINS`] dimension [`JoinStep`]s: a build key,
+//!   an optional dim-side filter, an optional [`LinkRef`] into an
+//!   earlier step's build (Q3/Q5 chain orders→customer this way), and
+//!   [`Payload`] extractions that flow dim values to the probe row;
+//! * `cmps` — post-join [`CmpExpr`] conjuncts over scan columns and
+//!   payloads (Q5's co-nationality test, Q19's per-branch quantity
+//!   window);
+//! * `key` / `slots` — the group-[`KeyExpr`] and one arithmetic
+//!   [`ValExpr`] per aggregate accumulator;
+//! * `finalize` — a [`FinalizeSpec`]: output columns, having, sort keys,
+//!   top-k limit, and leader-side dimension decoration.
+//!
+//! [`compile`] lowers a plan onto the engine's hot path *unchanged*: it
+//! builds the dimension hash tables and payload arrays once, generates
+//! the plan's [`BatchEval`] closure, and returns the same [`Compiled`]
+//! context the hand-written queries used to produce — the zero-alloc
+//! [`crate::analytics::engine::fold_range`] kernel and
+//! [`crate::analytics::engine::HashAgg`] never see the IR. What stays
+//! closure-land is exactly the per-morsel inner loop; everything the
+//! closure *captures* is now data.
+//!
+//! The codec ([`LogicalPlan::encode`]/[`LogicalPlan::decode`]) is an
+//! exact inverse with truncation and trailing-garbage rejection, like
+//! the protocol frames (property-tested in `rust/tests/properties.rs`;
+//! wire-format stability is pinned by the golden fixture test
+//! `rust/tests/plan_fixture.rs`).
+//!
+//! ```
+//! use lovelock::analytics::engine::{self, plan};
+//! use lovelock::analytics::{TpchConfig, TpchDb};
+//!
+//! let db = TpchDb::generate(TpchConfig::new(0.001, 42));
+//! // An ad-hoc plan no registry has heard of: 1994 revenue by ship mode.
+//! let adhoc = plan::LogicalPlan {
+//!     name: "mode-revenue".into(),
+//!     scan: plan::TableRef::Lineitem,
+//!     pred: plan::i32_range("l_shipdate", 8766, 9131),
+//!     joins: vec![],
+//!     cmps: vec![],
+//!     key: plan::kcol("l_shipmode"),
+//!     slots: vec![plan::vmul(
+//!         plan::vcol("l_extendedprice"),
+//!         plan::vsub(plan::vconst(1.0), plan::vcol("l_discount")),
+//!     )],
+//!     groups_hint: plan::GroupsHint::Const(8),
+//!     finalize: plan::FinalizeSpec {
+//!         scalar: false,
+//!         columns: vec![
+//!             plan::OutCol::KeyDict { table: plan::TableRef::Lineitem, col: "l_shipmode".into() },
+//!             plan::OutCol::Acc(0),
+//!         ],
+//!         having_gt: None,
+//!         sort: vec![(0, plan::SortDir::Asc)],
+//!         limit: 0,
+//!     },
+//! };
+//! let decoded = plan::LogicalPlan::decode(&adhoc.encode()).unwrap();
+//! assert_eq!(decoded, adhoc);
+//! let out = engine::try_run_serial(&db, &decoded).unwrap();
+//! assert!(!out.rows.is_empty() && out.rows.len() <= 7); // ≤ one row per mode
+//! ```
+
+use super::expr::{Predicate, Sel};
+use super::join::HashJoinTable;
+use super::partial::Partial;
+use super::{BatchEval, Compiled, EvalBatch, MAX_ACCS};
+use crate::analytics::column::{date_to_days, days_to_date, Column, Table};
+use crate::analytics::ops::ExecStats;
+use crate::analytics::queries::{Row, Value};
+use crate::analytics::tpch::{TpchDb, NATIONS};
+use crate::error::Result;
+use crate::wirefmt::{put_str, Reader};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Maximum dimension-join steps per plan.
+pub const MAX_JOINS: usize = 4;
+/// Maximum total payload slots across all probed join steps (the size of
+/// the per-row payload environment, a stack array in the generated
+/// evaluator).
+pub const MAX_ENV: usize = 8;
+/// Recursion cap for decoded expression trees (a hostile frame cannot
+/// blow the stack).
+const MAX_DEPTH: usize = 12;
+
+// ------------------------------------------------------------- IR types
+
+/// A table of the TPC-H catalog, by position in [`TpchDb`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TableRef {
+    Lineitem,
+    Orders,
+    Customer,
+    Supplier,
+    Part,
+    Partsupp,
+}
+
+impl TableRef {
+    fn tag(self) -> u8 {
+        match self {
+            TableRef::Lineitem => 0,
+            TableRef::Orders => 1,
+            TableRef::Customer => 2,
+            TableRef::Supplier => 3,
+            TableRef::Part => 4,
+            TableRef::Partsupp => 5,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => TableRef::Lineitem,
+            1 => TableRef::Orders,
+            2 => TableRef::Customer,
+            3 => TableRef::Supplier,
+            4 => TableRef::Part,
+            5 => TableRef::Partsupp,
+            t => crate::bail!("unknown table tag {t}"),
+        })
+    }
+}
+
+/// Resolve a [`TableRef`] against the attached database.
+pub fn table(db: &TpchDb, t: TableRef) -> &Table {
+    match t {
+        TableRef::Lineitem => &db.lineitem,
+        TableRef::Orders => &db.orders,
+        TableRef::Customer => &db.customer,
+        TableRef::Supplier => &db.supplier,
+        TableRef::Part => &db.part,
+        TableRef::Partsupp => &db.partsupp,
+    }
+}
+
+/// How a string (dictionary-encoded) column is matched. The test runs
+/// once per dictionary entry at compile time, never per row.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StrMatch {
+    Eq(String),
+    Prefix(String),
+    Contains(String),
+    OneOf(Vec<String>),
+}
+
+impl StrMatch {
+    /// Does `s` satisfy this matcher?
+    pub fn matches(&self, s: &str) -> bool {
+        match self {
+            StrMatch::Eq(v) => s == v,
+            StrMatch::Prefix(v) => s.starts_with(v.as_str()),
+            StrMatch::Contains(v) => s.contains(v.as_str()),
+            StrMatch::OneOf(vs) => vs.iter().any(|v| v == s),
+        }
+    }
+}
+
+/// Declarative predicate tree over one table's columns.
+///
+/// In **scan** position ([`LogicalPlan::pred`]) only the conjunctive
+/// subset lowers (no `Or`/`I32InSet`) — the vectorized cascade narrows a
+/// selection conjunct by conjunct. Dimension-side filters
+/// ([`JoinStep::filter`], [`Payload::CaseConst`]) accept the full tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PredExpr {
+    True,
+    /// `lo <= col[i] < hi` over an i32 column (date windows).
+    I32Range { col: String, lo: i32, hi: i32 },
+    /// `a[i] < b[i]` between two i32 columns.
+    I32ColLt { a: String, b: String },
+    /// `col[i] ∈ values` over an i32 column (dimension-side only).
+    I32InSet { col: String, values: Vec<i32> },
+    /// `lo <= col[i] < hi` over an f64 column.
+    F64Range { col: String, lo: f64, hi: f64 },
+    /// `col[i] < x` over an f64 column.
+    F64Lt { col: String, x: f64 },
+    /// String match against a dictionary-encoded column.
+    Str { col: String, m: StrMatch },
+    /// Conjunction.
+    And(Vec<PredExpr>),
+    /// Disjunction (dimension-side only).
+    Or(Vec<PredExpr>),
+}
+
+/// Key columns on the build or probe side of a join: one integral
+/// column, or two packed as `(a << shift) | b` (Q9's composite
+/// partsupp key).
+#[derive(Clone, Debug, PartialEq)]
+pub enum KeyCols {
+    Col(String),
+    Packed { a: String, shift: u8, b: String },
+}
+
+/// A dim-side value extracted into the probe row's payload environment.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Numeric dim column as f64 (i64/i32/u8/f64; str columns yield
+    /// their dictionary code).
+    Col(String),
+    /// 1.0/0.0 from a string match on a dim column (Q12's priority
+    /// class, Q14's PROMO test).
+    Flag { col: String, m: StrMatch },
+    /// The constant of the first matching case; dim rows matching **no**
+    /// case are excluded from the join build (Q19's per-branch quantity
+    /// bounds).
+    CaseConst { cases: Vec<(PredExpr, f64)> },
+    /// Payload slot `k` of the step this step links to, resolved through
+    /// the link match at build time (Q5 carries the customer's nation
+    /// through the orders build this way).
+    FromLink(u8),
+}
+
+/// A dim-side probe from one join step into an **earlier** step's build:
+/// this dim's `via` column must match, or the row is excluded.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkRef {
+    pub step: u8,
+    pub via: String,
+}
+
+/// One dimension-join step (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JoinStep {
+    pub table: TableRef,
+    /// Dense surrogate access: `probe key − 1` indexes the dim table
+    /// directly, no hash table (orders/part have dense 1..=N keys).
+    pub dense: bool,
+    /// Build-side key (hash steps; must be `None` when `dense`).
+    pub build_key: Option<KeyCols>,
+    /// Probe key over scan columns; `None` = compile-time-only step that
+    /// a later step links into (never probed per row).
+    pub probe_key: Option<KeyCols>,
+    /// Dim-side filter; rows failing it are excluded from the build.
+    pub filter: PredExpr,
+    /// Optional dim-side probe into an earlier step.
+    pub link: Option<LinkRef>,
+    /// Values extracted from the matched dim row.
+    pub payloads: Vec<Payload>,
+}
+
+/// Arithmetic over the probe row: scan columns and join payloads.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ValExpr {
+    Const(f64),
+    /// Numeric scan column as f64.
+    Col(String),
+    /// Payload `slot` of join step `step` (the step must be probed).
+    Payload { step: u8, slot: u8 },
+    Add(Box<ValExpr>, Box<ValExpr>),
+    Sub(Box<ValExpr>, Box<ValExpr>),
+    Mul(Box<ValExpr>, Box<ValExpr>),
+}
+
+/// Comparison operator of a [`CmpExpr`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    Eq,
+    Lt,
+    Le,
+    Ge,
+    Gt,
+}
+
+/// One post-join conjunct: `lhs op rhs` over the probe row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CmpExpr {
+    pub lhs: ValExpr,
+    pub op: CmpOp,
+    pub rhs: ValExpr,
+}
+
+/// Integral group-key expression over the probe row.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KeyExpr {
+    Const(i64),
+    /// Integral scan column (str columns yield their dictionary code).
+    Col(String),
+    /// Payload value truncated to i64.
+    Payload { step: u8, slot: u8 },
+    /// Calendar year of a day-count expression.
+    Year(Box<KeyExpr>),
+    /// `(hi << shift) | lo`.
+    Pack { hi: Box<KeyExpr>, shift: u8, lo: Box<KeyExpr> },
+}
+
+/// Expected distinct groups — the aggregation-table capacity hint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupsHint {
+    Const(u32),
+    /// One group per row of a dimension table (Q18 groups by order key).
+    TableRows(TableRef),
+}
+
+/// Sort direction of one finalize sort key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SortDir {
+    Asc,
+    Desc,
+}
+
+/// One output column of the finalized result.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OutCol {
+    /// `Int((key >> shift) & mask(bits))`; `bits == 0` keeps all bits.
+    KeyInt { shift: u8, bits: u8 },
+    /// `Str` of the byte at `key >> shift` as a char (Q1's flag pair).
+    KeyChar { shift: u8 },
+    /// `Str(NATIONS[(key >> shift) & mask(bits)])`.
+    KeyNation { shift: u8, bits: u8 },
+    /// `Str(dict[key])` through a table's string column dictionary.
+    KeyDict { table: TableRef, col: String },
+    /// `Float(acc[k])`.
+    Acc(u8),
+    /// `Int(acc[k] as i64)` (Q12's counts ride f64 accumulators).
+    AccInt(u8),
+    /// `Int(count)`.
+    Count,
+    /// `Float(acc[k] / count)` (Q1's averages).
+    AccOverCount(u8),
+    /// `Float(100 · acc[a] / acc[b])`, 0 when the denominator is 0.
+    AccRatioPct(u8, u8),
+    /// Dense dimension decoration: `Int(table.col[key − 1])`.
+    DimInt { table: TableRef, col: String },
+    /// Dense dimension decoration: `Float(table.col[key − 1])`.
+    DimFloat { table: TableRef, col: String },
+}
+
+/// Leader-side finalization: merged partial → result rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FinalizeSpec {
+    /// Emit exactly one row even from an empty partial (scalar
+    /// aggregates: Q6/Q14/Q19).
+    pub scalar: bool,
+    pub columns: Vec<OutCol>,
+    /// Keep groups whose `acc[i]` exceeds the threshold (Q18).
+    pub having_gt: Option<(u8, f64)>,
+    /// Lexicographic sort over output columns.
+    pub sort: Vec<(u8, SortDir)>,
+    /// Keep the first `limit` rows after sorting (0 = unlimited).
+    pub limit: u32,
+}
+
+/// The serializable logical plan (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogicalPlan {
+    /// Display name — carried on the wire for reports/traces only; no
+    /// executor consults a registry with it.
+    pub name: String,
+    pub scan: TableRef,
+    pub pred: PredExpr,
+    pub joins: Vec<JoinStep>,
+    pub cmps: Vec<CmpExpr>,
+    pub key: KeyExpr,
+    pub slots: Vec<ValExpr>,
+    pub groups_hint: GroupsHint,
+    pub finalize: FinalizeSpec,
+}
+
+impl LogicalPlan {
+    /// Aggregate accumulator slots per group.
+    pub fn width(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+// ------------------------------------------------------ builder helpers
+
+pub fn i32_range(col: &str, lo: i32, hi: i32) -> PredExpr {
+    PredExpr::I32Range { col: col.into(), lo, hi }
+}
+
+pub fn i32_col_lt(a: &str, b: &str) -> PredExpr {
+    PredExpr::I32ColLt { a: a.into(), b: b.into() }
+}
+
+pub fn i32_in(col: &str, values: Vec<i32>) -> PredExpr {
+    PredExpr::I32InSet { col: col.into(), values }
+}
+
+pub fn f64_range(col: &str, lo: f64, hi: f64) -> PredExpr {
+    PredExpr::F64Range { col: col.into(), lo, hi }
+}
+
+pub fn f64_lt(col: &str, x: f64) -> PredExpr {
+    PredExpr::F64Lt { col: col.into(), x }
+}
+
+pub fn str_eq(col: &str, v: &str) -> PredExpr {
+    PredExpr::Str { col: col.into(), m: StrMatch::Eq(v.into()) }
+}
+
+pub fn str_prefix(col: &str, v: &str) -> PredExpr {
+    PredExpr::Str { col: col.into(), m: StrMatch::Prefix(v.into()) }
+}
+
+pub fn str_contains(col: &str, v: &str) -> PredExpr {
+    PredExpr::Str { col: col.into(), m: StrMatch::Contains(v.into()) }
+}
+
+pub fn str_in(col: &str, vs: &[String]) -> PredExpr {
+    PredExpr::Str { col: col.into(), m: StrMatch::OneOf(vs.to_vec()) }
+}
+
+pub fn pand(ps: Vec<PredExpr>) -> PredExpr {
+    PredExpr::And(ps)
+}
+
+pub fn por(ps: Vec<PredExpr>) -> PredExpr {
+    PredExpr::Or(ps)
+}
+
+pub fn vcol(n: &str) -> ValExpr {
+    ValExpr::Col(n.into())
+}
+
+pub fn vconst(x: f64) -> ValExpr {
+    ValExpr::Const(x)
+}
+
+pub fn vpay(step: u8, slot: u8) -> ValExpr {
+    ValExpr::Payload { step, slot }
+}
+
+pub fn vadd(a: ValExpr, b: ValExpr) -> ValExpr {
+    ValExpr::Add(Box::new(a), Box::new(b))
+}
+
+pub fn vsub(a: ValExpr, b: ValExpr) -> ValExpr {
+    ValExpr::Sub(Box::new(a), Box::new(b))
+}
+
+pub fn vmul(a: ValExpr, b: ValExpr) -> ValExpr {
+    ValExpr::Mul(Box::new(a), Box::new(b))
+}
+
+/// `price · (1 − discount)` — the revenue expression most queries share.
+pub fn vrevenue() -> ValExpr {
+    vmul(vcol("l_extendedprice"), vsub(vconst(1.0), vcol("l_discount")))
+}
+
+pub fn kconst(k: i64) -> KeyExpr {
+    KeyExpr::Const(k)
+}
+
+pub fn kcol(n: &str) -> KeyExpr {
+    KeyExpr::Col(n.into())
+}
+
+pub fn kpay(step: u8, slot: u8) -> KeyExpr {
+    KeyExpr::Payload { step, slot }
+}
+
+pub fn kyear(e: KeyExpr) -> KeyExpr {
+    KeyExpr::Year(Box::new(e))
+}
+
+pub fn kpack(hi: KeyExpr, shift: u8, lo: KeyExpr) -> KeyExpr {
+    KeyExpr::Pack { hi: Box::new(hi), shift, lo: Box::new(lo) }
+}
+
+pub fn cmp(lhs: ValExpr, op: CmpOp, rhs: ValExpr) -> CmpExpr {
+    CmpExpr { lhs, op, rhs }
+}
+
+// ------------------------------------------------------------ parameters
+
+/// A typed parameter value parsed from `--param key=value`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamValue {
+    I64(i64),
+    F64(f64),
+    Str(String),
+}
+
+/// The parameter bag the IR constructors read: `--param` overrides flow
+/// leader → worker *through the plan* (the worker never sees the bag,
+/// only the parameterized IR). Reads are tracked so
+/// [`crate::analytics::queries::build`] can reject unknown keys.
+#[derive(Clone, Debug, Default)]
+pub struct PlanParams {
+    vals: BTreeMap<String, ParamValue>,
+    used: RefCell<BTreeSet<String>>,
+}
+
+impl PlanParams {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a raw `key=value` pair, inferring the type: i64, then f64,
+    /// then string.
+    pub fn set(&mut self, key: &str, raw: &str) {
+        let v = if let Ok(i) = raw.parse::<i64>() {
+            ParamValue::I64(i)
+        } else if let Ok(f) = raw.parse::<f64>() {
+            ParamValue::F64(f)
+        } else {
+            ParamValue::Str(raw.to_string())
+        };
+        self.vals.insert(key.to_string(), v);
+    }
+
+    pub fn set_value(&mut self, key: &str, v: ParamValue) {
+        self.vals.insert(key.to_string(), v);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    fn touch(&self, key: &str) -> Option<&ParamValue> {
+        let v = self.vals.get(key);
+        if v.is_some() {
+            self.used.borrow_mut().insert(key.to_string());
+        }
+        v
+    }
+
+    pub fn get_i64(&self, key: &str, default: i64) -> Result<i64> {
+        match self.touch(key) {
+            None => Ok(default),
+            Some(ParamValue::I64(i)) => Ok(*i),
+            Some(v) => crate::bail!("param {key} expects an integer, got {v:?}"),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.touch(key) {
+            None => Ok(default),
+            Some(ParamValue::F64(f)) => Ok(*f),
+            Some(ParamValue::I64(i)) => Ok(*i as f64),
+            Some(v) => crate::bail!("param {key} expects a number, got {v:?}"),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> Result<String> {
+        match self.touch(key) {
+            None => Ok(default.to_string()),
+            Some(ParamValue::Str(s)) => Ok(s.clone()),
+            Some(v) => crate::bail!("param {key} expects a string, got {v:?}"),
+        }
+    }
+
+    /// A date parameter: `"YYYY-MM-DD"` or a raw day count. Raw counts
+    /// are range-checked (±4M days ≈ years −9000..13000) so plan
+    /// builders can safely do `date ± 1` arithmetic on the result — an
+    /// unchecked `as i32` would silently wrap a fat-fingered value into
+    /// a valid-looking window.
+    pub fn get_date(&self, key: &str, default_days: i32) -> Result<i32> {
+        match self.touch(key) {
+            None => Ok(default_days),
+            Some(ParamValue::I64(i)) => {
+                crate::ensure!(
+                    (-4_000_000..=4_000_000).contains(i),
+                    "param {key}: day count {i} out of range"
+                );
+                Ok(*i as i32)
+            }
+            Some(ParamValue::Str(s)) => parse_date(s),
+            Some(v) => crate::bail!("param {key} expects a date, got {v:?}"),
+        }
+    }
+
+    /// A top-k limit parameter: non-negative and `u32`-ranged (the wire
+    /// `FinalizeSpec.limit` is u32 and 0 means "unlimited", so an
+    /// unchecked narrowing cast would turn 2^32 into no limit at all).
+    pub fn get_limit(&self, key: &str, default: u32) -> Result<u32> {
+        let v = self.get_i64(key, default as i64)?;
+        crate::ensure!(
+            (0..=u32::MAX as i64).contains(&v),
+            "param {key} must be in 0..={}, got {v}",
+            u32::MAX
+        );
+        Ok(v as u32)
+    }
+
+    /// A comma-separated string list parameter.
+    pub fn get_list(&self, key: &str, default: &[&str]) -> Result<Vec<String>> {
+        match self.touch(key) {
+            None => Ok(default.iter().map(|s| s.to_string()).collect()),
+            Some(ParamValue::Str(s)) => {
+                Ok(s.split(',').map(|p| p.trim().to_string()).collect())
+            }
+            Some(v) => crate::bail!("param {key} expects a comma list, got {v:?}"),
+        }
+    }
+
+    /// Keys that were set but never read by the plan builder.
+    pub fn unused(&self) -> Vec<String> {
+        let used = self.used.borrow();
+        self.vals.keys().filter(|k| !used.contains(*k)).cloned().collect()
+    }
+
+    /// Forget which keys have been read — called at the top of
+    /// [`crate::analytics::queries::build`] so reusing one bag across
+    /// plans cannot let a key read by an *earlier* build defeat the
+    /// stray-key check of a later one.
+    pub fn reset_used(&self) {
+        self.used.borrow_mut().clear();
+    }
+}
+
+/// Parse `"YYYY-MM-DD"` into days since the unix epoch.
+pub fn parse_date(s: &str) -> Result<i32> {
+    let parts: Vec<&str> = s.split('-').collect();
+    crate::ensure!(parts.len() == 3, "bad date {s:?}: want YYYY-MM-DD");
+    let bad = |_| crate::err!("bad date {s:?}: want YYYY-MM-DD");
+    let y: i32 = parts[0].parse().map_err(bad)?;
+    let m: u32 = parts[1].parse().map_err(bad)?;
+    let d: u32 = parts[2].parse().map_err(bad)?;
+    crate::ensure!(
+        (0..=9999).contains(&y) && (1..=12).contains(&m) && (1..=31).contains(&d),
+        "bad date {s:?}"
+    );
+    Ok(date_to_days(y, m, d))
+}
+
+// ---------------------------------------------------------------- codec
+//
+// Wire layout (little-endian; strings are u32-length-prefixed UTF-8):
+//
+//   Plan     := str name, u8 scan, Pred, u8 nj Join*, u8 nc Cmp*,
+//               Key, u8 ns Val*, Hint, Fin
+//   Pred     := u8 tag: 0 True | 1 I32Range(str,i32,i32)
+//             | 2 I32ColLt(str,str) | 3 I32InSet(str, u16 n, i32*n)
+//             | 4 F64Range(str,f64,f64) | 5 F64Lt(str,f64)
+//             | 6 Str(str, Match) | 7 And(u8 n, Pred*n) | 8 Or(...)
+//   Match    := u8 tag: 0 Eq(str) | 1 Prefix | 2 Contains
+//             | 3 OneOf(u8 n, str*n)
+//   KeyCols  := u8 tag: 0 Col(str) | 1 Packed(str, u8, str)
+//   Join     := u8 table, u8 dense, Opt<KeyCols> build, Opt<KeyCols>
+//               probe, Pred filter, Opt<(u8 step, str via)> link,
+//               u8 np Payload*np
+//   Payload  := u8 tag: 0 Col(str) | 1 Flag(str, Match)
+//             | 2 CaseConst(u8 n, (Pred, f64)*n) | 3 FromLink(u8)
+//   Val      := u8 tag: 0 Const(f64) | 1 Col(str) | 2 Payload(u8,u8)
+//             | 3 Add(Val,Val) | 4 Sub | 5 Mul
+//   Cmp      := Val, u8 op (0 Eq 1 Lt 2 Le 3 Ge 4 Gt), Val
+//   Key      := u8 tag: 0 Const(i64) | 1 Col(str) | 2 Payload(u8,u8)
+//             | 3 Year(Key) | 4 Pack(Key, u8, Key)
+//   Hint     := u8 tag: 0 Const(u32) | 1 TableRows(u8)
+//   Fin      := u8 scalar, u8 n OutCol*n, Opt<(u8, f64)> having,
+//               u8 n (u8 col, u8 desc)*n, u32 limit
+//   OutCol   := u8 tag: 0 KeyInt(u8,u8) | 1 KeyChar(u8)
+//             | 2 KeyNation(u8,u8) | 3 KeyDict(u8, str) | 4 Acc(u8)
+//             | 5 AccInt(u8) | 6 Count | 7 AccOverCount(u8)
+//             | 8 AccRatioPct(u8,u8) | 9 DimInt(u8, str)
+//             | 10 DimFloat(u8, str)
+//   Opt<T>   := u8 0 | u8 1, T
+//
+// `rust/tests/fixtures/q6_plan.bin` pins this layout across PRs.
+
+fn enc_pred(p: &PredExpr, out: &mut Vec<u8>) {
+    match p {
+        PredExpr::True => out.push(0),
+        PredExpr::I32Range { col, lo, hi } => {
+            out.push(1);
+            put_str(out, col);
+            out.extend_from_slice(&lo.to_le_bytes());
+            out.extend_from_slice(&hi.to_le_bytes());
+        }
+        PredExpr::I32ColLt { a, b } => {
+            out.push(2);
+            put_str(out, a);
+            put_str(out, b);
+        }
+        PredExpr::I32InSet { col, values } => {
+            out.push(3);
+            put_str(out, col);
+            out.extend_from_slice(&(values.len() as u16).to_le_bytes());
+            for v in values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        PredExpr::F64Range { col, lo, hi } => {
+            out.push(4);
+            put_str(out, col);
+            out.extend_from_slice(&lo.to_le_bytes());
+            out.extend_from_slice(&hi.to_le_bytes());
+        }
+        PredExpr::F64Lt { col, x } => {
+            out.push(5);
+            put_str(out, col);
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        PredExpr::Str { col, m } => {
+            out.push(6);
+            put_str(out, col);
+            enc_match(m, out);
+        }
+        PredExpr::And(ps) => {
+            out.push(7);
+            out.push(ps.len() as u8);
+            for p in ps {
+                enc_pred(p, out);
+            }
+        }
+        PredExpr::Or(ps) => {
+            out.push(8);
+            out.push(ps.len() as u8);
+            for p in ps {
+                enc_pred(p, out);
+            }
+        }
+    }
+}
+
+fn dec_pred(r: &mut Reader<'_>, depth: usize) -> Result<PredExpr> {
+    crate::ensure!(depth < MAX_DEPTH, "predicate tree too deep");
+    Ok(match r.u8()? {
+        0 => PredExpr::True,
+        1 => PredExpr::I32Range { col: r.str()?, lo: r.i32()?, hi: r.i32()? },
+        2 => PredExpr::I32ColLt { a: r.str()?, b: r.str()? },
+        3 => {
+            let col = r.str()?;
+            let n = r.u16()? as usize;
+            let values = (0..n).map(|_| r.i32()).collect::<Result<_>>()?;
+            PredExpr::I32InSet { col, values }
+        }
+        4 => PredExpr::F64Range { col: r.str()?, lo: r.f64()?, hi: r.f64()? },
+        5 => PredExpr::F64Lt { col: r.str()?, x: r.f64()? },
+        6 => PredExpr::Str { col: r.str()?, m: dec_match(r)? },
+        7 => {
+            let n = r.u8()? as usize;
+            PredExpr::And((0..n).map(|_| dec_pred(r, depth + 1)).collect::<Result<_>>()?)
+        }
+        8 => {
+            let n = r.u8()? as usize;
+            PredExpr::Or((0..n).map(|_| dec_pred(r, depth + 1)).collect::<Result<_>>()?)
+        }
+        t => crate::bail!("unknown predicate tag {t}"),
+    })
+}
+
+fn enc_match(m: &StrMatch, out: &mut Vec<u8>) {
+    match m {
+        StrMatch::Eq(v) => {
+            out.push(0);
+            put_str(out, v);
+        }
+        StrMatch::Prefix(v) => {
+            out.push(1);
+            put_str(out, v);
+        }
+        StrMatch::Contains(v) => {
+            out.push(2);
+            put_str(out, v);
+        }
+        StrMatch::OneOf(vs) => {
+            out.push(3);
+            out.push(vs.len() as u8);
+            for v in vs {
+                put_str(out, v);
+            }
+        }
+    }
+}
+
+fn dec_match(r: &mut Reader<'_>) -> Result<StrMatch> {
+    Ok(match r.u8()? {
+        0 => StrMatch::Eq(r.str()?),
+        1 => StrMatch::Prefix(r.str()?),
+        2 => StrMatch::Contains(r.str()?),
+        3 => {
+            let n = r.u8()? as usize;
+            StrMatch::OneOf((0..n).map(|_| r.str()).collect::<Result<_>>()?)
+        }
+        t => crate::bail!("unknown string-match tag {t}"),
+    })
+}
+
+fn enc_keycols(k: &KeyCols, out: &mut Vec<u8>) {
+    match k {
+        KeyCols::Col(c) => {
+            out.push(0);
+            put_str(out, c);
+        }
+        KeyCols::Packed { a, shift, b } => {
+            out.push(1);
+            put_str(out, a);
+            out.push(*shift);
+            put_str(out, b);
+        }
+    }
+}
+
+fn dec_keycols(r: &mut Reader<'_>) -> Result<KeyCols> {
+    Ok(match r.u8()? {
+        0 => KeyCols::Col(r.str()?),
+        1 => KeyCols::Packed { a: r.str()?, shift: r.u8()?, b: r.str()? },
+        t => crate::bail!("unknown key-cols tag {t}"),
+    })
+}
+
+fn enc_opt<T, F: Fn(&T, &mut Vec<u8>)>(o: &Option<T>, out: &mut Vec<u8>, f: F) {
+    match o {
+        None => out.push(0),
+        Some(v) => {
+            out.push(1);
+            f(v, out);
+        }
+    }
+}
+
+fn dec_opt<T, F: FnMut(&mut Reader<'_>) -> Result<T>>(
+    r: &mut Reader<'_>,
+    mut f: F,
+) -> Result<Option<T>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(f(r)?)),
+        t => crate::bail!("bad option tag {t}"),
+    }
+}
+
+fn enc_payload(p: &Payload, out: &mut Vec<u8>) {
+    match p {
+        Payload::Col(c) => {
+            out.push(0);
+            put_str(out, c);
+        }
+        Payload::Flag { col, m } => {
+            out.push(1);
+            put_str(out, col);
+            enc_match(m, out);
+        }
+        Payload::CaseConst { cases } => {
+            out.push(2);
+            out.push(cases.len() as u8);
+            for (p, v) in cases {
+                enc_pred(p, out);
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Payload::FromLink(k) => {
+            out.push(3);
+            out.push(*k);
+        }
+    }
+}
+
+fn dec_payload(r: &mut Reader<'_>) -> Result<Payload> {
+    Ok(match r.u8()? {
+        0 => Payload::Col(r.str()?),
+        1 => Payload::Flag { col: r.str()?, m: dec_match(r)? },
+        2 => {
+            let n = r.u8()? as usize;
+            let cases = (0..n)
+                .map(|_| Ok((dec_pred(r, 0)?, r.f64()?)))
+                .collect::<Result<_>>()?;
+            Payload::CaseConst { cases }
+        }
+        3 => Payload::FromLink(r.u8()?),
+        t => crate::bail!("unknown payload tag {t}"),
+    })
+}
+
+fn enc_join(j: &JoinStep, out: &mut Vec<u8>) {
+    out.push(j.table.tag());
+    out.push(j.dense as u8);
+    enc_opt(&j.build_key, out, enc_keycols);
+    enc_opt(&j.probe_key, out, enc_keycols);
+    enc_pred(&j.filter, out);
+    enc_opt(&j.link, out, |l, out| {
+        out.push(l.step);
+        put_str(out, &l.via);
+    });
+    out.push(j.payloads.len() as u8);
+    for p in &j.payloads {
+        enc_payload(p, out);
+    }
+}
+
+fn dec_join(r: &mut Reader<'_>) -> Result<JoinStep> {
+    let table = TableRef::from_tag(r.u8()?)?;
+    let dense = match r.u8()? {
+        0 => false,
+        1 => true,
+        t => crate::bail!("bad dense flag {t}"),
+    };
+    let build_key = dec_opt(r, dec_keycols)?;
+    let probe_key = dec_opt(r, dec_keycols)?;
+    let filter = dec_pred(r, 0)?;
+    let link = dec_opt(r, |r| Ok(LinkRef { step: r.u8()?, via: r.str()? }))?;
+    let n = r.u8()? as usize;
+    let payloads = (0..n).map(|_| dec_payload(r)).collect::<Result<_>>()?;
+    Ok(JoinStep { table, dense, build_key, probe_key, filter, link, payloads })
+}
+
+fn enc_val(v: &ValExpr, out: &mut Vec<u8>) {
+    match v {
+        ValExpr::Const(x) => {
+            out.push(0);
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        ValExpr::Col(c) => {
+            out.push(1);
+            put_str(out, c);
+        }
+        ValExpr::Payload { step, slot } => {
+            out.push(2);
+            out.push(*step);
+            out.push(*slot);
+        }
+        ValExpr::Add(a, b) => {
+            out.push(3);
+            enc_val(a, out);
+            enc_val(b, out);
+        }
+        ValExpr::Sub(a, b) => {
+            out.push(4);
+            enc_val(a, out);
+            enc_val(b, out);
+        }
+        ValExpr::Mul(a, b) => {
+            out.push(5);
+            enc_val(a, out);
+            enc_val(b, out);
+        }
+    }
+}
+
+fn dec_val(r: &mut Reader<'_>, depth: usize) -> Result<ValExpr> {
+    crate::ensure!(depth < MAX_DEPTH, "value tree too deep");
+    Ok(match r.u8()? {
+        0 => ValExpr::Const(r.f64()?),
+        1 => ValExpr::Col(r.str()?),
+        2 => ValExpr::Payload { step: r.u8()?, slot: r.u8()? },
+        3 => ValExpr::Add(
+            Box::new(dec_val(r, depth + 1)?),
+            Box::new(dec_val(r, depth + 1)?),
+        ),
+        4 => ValExpr::Sub(
+            Box::new(dec_val(r, depth + 1)?),
+            Box::new(dec_val(r, depth + 1)?),
+        ),
+        5 => ValExpr::Mul(
+            Box::new(dec_val(r, depth + 1)?),
+            Box::new(dec_val(r, depth + 1)?),
+        ),
+        t => crate::bail!("unknown value tag {t}"),
+    })
+}
+
+fn enc_key(k: &KeyExpr, out: &mut Vec<u8>) {
+    match k {
+        KeyExpr::Const(v) => {
+            out.push(0);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        KeyExpr::Col(c) => {
+            out.push(1);
+            put_str(out, c);
+        }
+        KeyExpr::Payload { step, slot } => {
+            out.push(2);
+            out.push(*step);
+            out.push(*slot);
+        }
+        KeyExpr::Year(e) => {
+            out.push(3);
+            enc_key(e, out);
+        }
+        KeyExpr::Pack { hi, shift, lo } => {
+            out.push(4);
+            enc_key(hi, out);
+            out.push(*shift);
+            enc_key(lo, out);
+        }
+    }
+}
+
+fn dec_key(r: &mut Reader<'_>, depth: usize) -> Result<KeyExpr> {
+    crate::ensure!(depth < MAX_DEPTH, "key tree too deep");
+    Ok(match r.u8()? {
+        0 => KeyExpr::Const(r.i64()?),
+        1 => KeyExpr::Col(r.str()?),
+        2 => KeyExpr::Payload { step: r.u8()?, slot: r.u8()? },
+        3 => KeyExpr::Year(Box::new(dec_key(r, depth + 1)?)),
+        4 => {
+            let hi = Box::new(dec_key(r, depth + 1)?);
+            let shift = r.u8()?;
+            let lo = Box::new(dec_key(r, depth + 1)?);
+            KeyExpr::Pack { hi, shift, lo }
+        }
+        t => crate::bail!("unknown key tag {t}"),
+    })
+}
+
+fn enc_outcol(c: &OutCol, out: &mut Vec<u8>) {
+    match c {
+        OutCol::KeyInt { shift, bits } => {
+            out.push(0);
+            out.push(*shift);
+            out.push(*bits);
+        }
+        OutCol::KeyChar { shift } => {
+            out.push(1);
+            out.push(*shift);
+        }
+        OutCol::KeyNation { shift, bits } => {
+            out.push(2);
+            out.push(*shift);
+            out.push(*bits);
+        }
+        OutCol::KeyDict { table, col } => {
+            out.push(3);
+            out.push(table.tag());
+            put_str(out, col);
+        }
+        OutCol::Acc(k) => {
+            out.push(4);
+            out.push(*k);
+        }
+        OutCol::AccInt(k) => {
+            out.push(5);
+            out.push(*k);
+        }
+        OutCol::Count => out.push(6),
+        OutCol::AccOverCount(k) => {
+            out.push(7);
+            out.push(*k);
+        }
+        OutCol::AccRatioPct(a, b) => {
+            out.push(8);
+            out.push(*a);
+            out.push(*b);
+        }
+        OutCol::DimInt { table, col } => {
+            out.push(9);
+            out.push(table.tag());
+            put_str(out, col);
+        }
+        OutCol::DimFloat { table, col } => {
+            out.push(10);
+            out.push(table.tag());
+            put_str(out, col);
+        }
+    }
+}
+
+fn dec_outcol(r: &mut Reader<'_>) -> Result<OutCol> {
+    Ok(match r.u8()? {
+        0 => OutCol::KeyInt { shift: r.u8()?, bits: r.u8()? },
+        1 => OutCol::KeyChar { shift: r.u8()? },
+        2 => OutCol::KeyNation { shift: r.u8()?, bits: r.u8()? },
+        3 => OutCol::KeyDict { table: TableRef::from_tag(r.u8()?)?, col: r.str()? },
+        4 => OutCol::Acc(r.u8()?),
+        5 => OutCol::AccInt(r.u8()?),
+        6 => OutCol::Count,
+        7 => OutCol::AccOverCount(r.u8()?),
+        8 => OutCol::AccRatioPct(r.u8()?, r.u8()?),
+        9 => OutCol::DimInt { table: TableRef::from_tag(r.u8()?)?, col: r.str()? },
+        10 => OutCol::DimFloat { table: TableRef::from_tag(r.u8()?)?, col: r.str()? },
+        t => crate::bail!("unknown output-column tag {t}"),
+    })
+}
+
+impl LogicalPlan {
+    /// Encode for the wire — the exact inverse of [`LogicalPlan::decode`]
+    /// **for plans within wire bounds** ([`LogicalPlan::check_wire_bounds`]):
+    /// collection counts narrow to u8/u16 on the wire, so an
+    /// out-of-bounds plan would truncate silently. Callers that accept
+    /// untrusted plan structures must check first (the one fabric entry
+    /// point, `QueryService::submit_plan`, does); debug builds assert it.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(128);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` (see [`LogicalPlan::encode`]).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        debug_assert!(
+            self.check_wire_bounds().is_ok(),
+            "encoding a plan outside wire bounds: {:?}",
+            self.check_wire_bounds().err()
+        );
+        put_str(out, &self.name);
+        out.push(self.scan.tag());
+        enc_pred(&self.pred, out);
+        out.push(self.joins.len() as u8);
+        for j in &self.joins {
+            enc_join(j, out);
+        }
+        out.push(self.cmps.len() as u8);
+        for c in &self.cmps {
+            enc_val(&c.lhs, out);
+            out.push(match c.op {
+                CmpOp::Eq => 0,
+                CmpOp::Lt => 1,
+                CmpOp::Le => 2,
+                CmpOp::Ge => 3,
+                CmpOp::Gt => 4,
+            });
+            enc_val(&c.rhs, out);
+        }
+        enc_key(&self.key, out);
+        out.push(self.slots.len() as u8);
+        for s in &self.slots {
+            enc_val(s, out);
+        }
+        match self.groups_hint {
+            GroupsHint::Const(n) => {
+                out.push(0);
+                out.extend_from_slice(&n.to_le_bytes());
+            }
+            GroupsHint::TableRows(t) => {
+                out.push(1);
+                out.push(t.tag());
+            }
+        }
+        let f = &self.finalize;
+        out.push(f.scalar as u8);
+        out.push(f.columns.len() as u8);
+        for c in &f.columns {
+            enc_outcol(c, out);
+        }
+        enc_opt(&f.having_gt, out, |(a, x), out| {
+            out.push(*a);
+            out.extend_from_slice(&x.to_le_bytes());
+        });
+        out.push(f.sort.len() as u8);
+        for (c, d) in &f.sort {
+            out.push(*c);
+            out.push(matches!(d, SortDir::Desc) as u8);
+        }
+        out.extend_from_slice(&f.limit.to_le_bytes());
+    }
+
+    /// Everything `encode` writes with a `u8`/`u16` count or
+    /// depth-bounded recursion, checked **before** the bytes hit the
+    /// wire: the encoder uses narrowing casts, so an out-of-bounds
+    /// structure (258 IN-list entries, a 13-deep expression tree) would
+    /// truncate silently and decode to a different — or undecodable —
+    /// plan. [`crate::coordinator::service::QueryService::submit_plan`]
+    /// rejects such plans up front instead.
+    pub fn check_wire_bounds(&self) -> Result<()> {
+        fn match_ok(m: &StrMatch) -> Result<()> {
+            if let StrMatch::OneOf(vs) = m {
+                crate::ensure!(
+                    vs.len() <= u8::MAX as usize,
+                    "string IN-list has {} entries (wire max {})",
+                    vs.len(),
+                    u8::MAX
+                );
+            }
+            Ok(())
+        }
+        fn pred_ok(p: &PredExpr, depth: usize) -> Result<()> {
+            crate::ensure!(depth < MAX_DEPTH, "predicate tree too deep to encode");
+            match p {
+                PredExpr::I32InSet { values, .. } => crate::ensure!(
+                    values.len() <= u16::MAX as usize,
+                    "i32 IN-set has {} entries (wire max {})",
+                    values.len(),
+                    u16::MAX
+                ),
+                PredExpr::Str { m, .. } => match_ok(m)?,
+                PredExpr::And(ps) | PredExpr::Or(ps) => {
+                    crate::ensure!(
+                        ps.len() <= u8::MAX as usize,
+                        "conjunct list has {} entries (wire max {})",
+                        ps.len(),
+                        u8::MAX
+                    );
+                    for p in ps {
+                        pred_ok(p, depth + 1)?;
+                    }
+                }
+                _ => {}
+            }
+            Ok(())
+        }
+        fn val_ok(v: &ValExpr, depth: usize) -> Result<()> {
+            crate::ensure!(depth < MAX_DEPTH, "value tree too deep to encode");
+            if let ValExpr::Add(a, b) | ValExpr::Sub(a, b) | ValExpr::Mul(a, b) = v {
+                val_ok(a, depth + 1)?;
+                val_ok(b, depth + 1)?;
+            }
+            Ok(())
+        }
+        fn key_ok(k: &KeyExpr, depth: usize) -> Result<()> {
+            crate::ensure!(depth < MAX_DEPTH, "key tree too deep to encode");
+            match k {
+                KeyExpr::Year(e) => key_ok(e, depth + 1),
+                KeyExpr::Pack { hi, lo, .. } => {
+                    key_ok(hi, depth + 1)?;
+                    key_ok(lo, depth + 1)
+                }
+                _ => Ok(()),
+            }
+        }
+        crate::ensure!(
+            self.joins.len() <= MAX_JOINS,
+            "plan has {} joins (max {MAX_JOINS})",
+            self.joins.len()
+        );
+        crate::ensure!(
+            (1..=MAX_ACCS).contains(&self.slots.len()),
+            "plan width {} outside 1..={MAX_ACCS}",
+            self.slots.len()
+        );
+        crate::ensure!(
+            self.cmps.len() <= u8::MAX as usize,
+            "plan has {} compares (wire max {})",
+            self.cmps.len(),
+            u8::MAX
+        );
+        pred_ok(&self.pred, 0)?;
+        for j in &self.joins {
+            pred_ok(&j.filter, 0)?;
+            crate::ensure!(
+                j.payloads.len() <= MAX_ENV,
+                "join step has {} payloads (max {MAX_ENV})",
+                j.payloads.len()
+            );
+            for p in &j.payloads {
+                match p {
+                    Payload::Flag { m, .. } => match_ok(m)?,
+                    Payload::CaseConst { cases } => {
+                        crate::ensure!(
+                            cases.len() <= u8::MAX as usize,
+                            "payload has {} cases (wire max {})",
+                            cases.len(),
+                            u8::MAX
+                        );
+                        for (cp, _) in cases {
+                            pred_ok(cp, 0)?;
+                        }
+                    }
+                    Payload::Col(_) | Payload::FromLink(_) => {}
+                }
+            }
+        }
+        for c in &self.cmps {
+            val_ok(&c.lhs, 0)?;
+            val_ok(&c.rhs, 0)?;
+        }
+        key_ok(&self.key, 0)?;
+        for s in &self.slots {
+            val_ok(s, 0)?;
+        }
+        crate::ensure!(
+            self.finalize.columns.len() <= u8::MAX as usize,
+            "finalize has {} output columns (wire max {})",
+            self.finalize.columns.len(),
+            u8::MAX
+        );
+        crate::ensure!(
+            self.finalize.sort.len() <= u8::MAX as usize,
+            "finalize has {} sort keys (wire max {})",
+            self.finalize.sort.len(),
+            u8::MAX
+        );
+        Ok(())
+    }
+
+    /// Exact inverse of [`LogicalPlan::encode`]; rejects truncation,
+    /// trailing garbage, unknown tags, and implausible shapes. Decoding
+    /// validates *structure* only — name resolution against the attached
+    /// database happens in [`compile`].
+    pub fn decode(buf: &[u8]) -> Result<LogicalPlan> {
+        let mut r = Reader::new(buf);
+        let name = r.str()?;
+        let scan = TableRef::from_tag(r.u8()?)?;
+        let pred = dec_pred(&mut r, 0)?;
+        let nj = r.u8()? as usize;
+        crate::ensure!(nj <= MAX_JOINS, "implausible join count {nj}");
+        let joins = (0..nj).map(|_| dec_join(&mut r)).collect::<Result<Vec<_>>>()?;
+        let nc = r.u8()? as usize;
+        let cmps = (0..nc)
+            .map(|_| {
+                let lhs = dec_val(&mut r, 0)?;
+                let op = match r.u8()? {
+                    0 => CmpOp::Eq,
+                    1 => CmpOp::Lt,
+                    2 => CmpOp::Le,
+                    3 => CmpOp::Ge,
+                    4 => CmpOp::Gt,
+                    t => crate::bail!("unknown compare op {t}"),
+                };
+                Ok(CmpExpr { lhs, op, rhs: dec_val(&mut r, 0)? })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let key = dec_key(&mut r, 0)?;
+        let ns = r.u8()? as usize;
+        crate::ensure!(
+            (1..=MAX_ACCS).contains(&ns),
+            "plan width {ns} outside 1..={MAX_ACCS}"
+        );
+        let slots = (0..ns).map(|_| dec_val(&mut r, 0)).collect::<Result<Vec<_>>>()?;
+        let groups_hint = match r.u8()? {
+            0 => GroupsHint::Const(r.u32()?),
+            1 => GroupsHint::TableRows(TableRef::from_tag(r.u8()?)?),
+            t => crate::bail!("unknown groups-hint tag {t}"),
+        };
+        let scalar = match r.u8()? {
+            0 => false,
+            1 => true,
+            t => crate::bail!("bad scalar flag {t}"),
+        };
+        let ncols = r.u8()? as usize;
+        let columns = (0..ncols).map(|_| dec_outcol(&mut r)).collect::<Result<Vec<_>>>()?;
+        let having_gt = dec_opt(&mut r, |r| Ok((r.u8()?, r.f64()?)))?;
+        let nsort = r.u8()? as usize;
+        let sort = (0..nsort)
+            .map(|_| {
+                let c = r.u8()?;
+                let d = if r.u8()? == 0 { SortDir::Asc } else { SortDir::Desc };
+                Ok((c, d))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let limit = r.u32()?;
+        r.finish()?;
+        Ok(LogicalPlan {
+            name,
+            scan,
+            pred,
+            joins,
+            cmps,
+            key,
+            slots,
+            groups_hint,
+            finalize: FinalizeSpec { scalar, columns, having_gt, sort, limit },
+        })
+    }
+}
+
+// ------------------------------------------------------ column resolvers
+
+fn column<'a>(t: &'a Table, name: &str) -> Result<&'a Column> {
+    crate::ensure!(t.has_col(name), "no column {name} in table {}", t.name);
+    Ok(t.col(name))
+}
+
+fn i32s<'a>(t: &'a Table, name: &str) -> Result<&'a [i32]> {
+    match column(t, name)? {
+        Column::I32(v) => Ok(v),
+        _ => crate::bail!("column {name} in {} is not i32", t.name),
+    }
+}
+
+fn f64s<'a>(t: &'a Table, name: &str) -> Result<&'a [f64]> {
+    match column(t, name)? {
+        Column::F64(v) => Ok(v),
+        _ => crate::bail!("column {name} in {} is not f64", t.name),
+    }
+}
+
+fn str_col<'a>(t: &'a Table, name: &str) -> Result<&'a Column> {
+    let c = column(t, name)?;
+    crate::ensure!(
+        matches!(c, Column::Str { .. }),
+        "column {name} in {} is not a string column",
+        t.name
+    );
+    Ok(c)
+}
+
+/// Bytes per row one column charges to scan statistics.
+fn col_width(c: &Column) -> usize {
+    match c {
+        Column::I64(_) | Column::F64(_) => 8,
+        Column::I32(_) | Column::Str { .. } => 4,
+        Column::U8(_) => 1,
+    }
+}
+
+/// Per-row i64 view of an integral column (group/probe keys).
+fn key_leaf<'a>(t: &'a Table, name: &str) -> Result<CKey<'a>> {
+    Ok(match column(t, name)? {
+        Column::I64(v) => CKey::I64(v),
+        Column::I32(v) => CKey::I32(v),
+        Column::U8(v) => CKey::U8(v),
+        Column::Str { codes, .. } => CKey::Code(codes),
+        Column::F64(_) => crate::bail!("column {name} is f64; keys must be integral"),
+    })
+}
+
+/// Per-row f64 view of a numeric column (aggregate slots, payloads).
+fn val_leaf<'a>(t: &'a Table, name: &str) -> Result<CVal<'a>> {
+    Ok(match column(t, name)? {
+        Column::F64(v) => CVal::F64(v),
+        Column::I64(v) => CVal::I64(v),
+        Column::I32(v) => CVal::I32(v),
+        Column::U8(v) => CVal::U8(v),
+        Column::Str { codes, .. } => CVal::Code(codes),
+    })
+}
+
+/// Materialize an integral column as owned i64 values (hash-build keys;
+/// compile-time only).
+fn i64_values(t: &Table, name: &str) -> Result<Vec<i64>> {
+    Ok(match column(t, name)? {
+        Column::I64(v) => v.clone(),
+        Column::I32(v) => v.iter().map(|&x| x as i64).collect(),
+        Column::U8(v) => v.iter().map(|&x| x as i64).collect(),
+        Column::Str { codes, .. } => codes.iter().map(|&x| x as i64).collect(),
+        Column::F64(_) => crate::bail!("column {name} is f64; keys must be integral"),
+    })
+}
+
+/// Materialized build-key values for a [`KeyCols`] over a dim table.
+fn build_keys(t: &Table, k: &KeyCols) -> Result<Vec<i64>> {
+    match k {
+        KeyCols::Col(c) => i64_values(t, c),
+        KeyCols::Packed { a, shift, b } => {
+            let (av, bv) = (i64_values(t, a)?, i64_values(t, b)?);
+            crate::ensure!(*shift < 63, "pack shift {shift} too large");
+            Ok(av.iter().zip(&bv).map(|(x, y)| (x << shift) | y).collect())
+        }
+    }
+}
+
+/// Scan-side probe-key evaluator for a [`KeyCols`].
+fn probe_key<'a>(t: &'a Table, k: &KeyCols) -> Result<CKey<'a>> {
+    match k {
+        KeyCols::Col(c) => key_leaf(t, c),
+        KeyCols::Packed { a, shift, b } => {
+            crate::ensure!(*shift < 63, "pack shift {shift} too large");
+            Ok(CKey::Pack {
+                hi: Box::new(key_leaf(t, a)?),
+                shift: *shift,
+                lo: Box::new(key_leaf(t, b)?),
+            })
+        }
+    }
+}
+
+/// Column names a [`KeyCols`] reads.
+fn keycols_names(k: &KeyCols, out: &mut BTreeSet<String>) {
+    match k {
+        KeyCols::Col(c) => {
+            out.insert(c.clone());
+        }
+        KeyCols::Packed { a, b, .. } => {
+            out.insert(a.clone());
+            out.insert(b.clone());
+        }
+    }
+}
+
+fn val_names(v: &ValExpr, out: &mut BTreeSet<String>) {
+    match v {
+        ValExpr::Col(c) => {
+            out.insert(c.clone());
+        }
+        ValExpr::Add(a, b) | ValExpr::Sub(a, b) | ValExpr::Mul(a, b) => {
+            val_names(a, out);
+            val_names(b, out);
+        }
+        ValExpr::Const(_) | ValExpr::Payload { .. } => {}
+    }
+}
+
+fn key_names(k: &KeyExpr, out: &mut BTreeSet<String>) {
+    match k {
+        KeyExpr::Col(c) => {
+            out.insert(c.clone());
+        }
+        KeyExpr::Year(e) => key_names(e, out),
+        KeyExpr::Pack { hi, lo, .. } => {
+            key_names(hi, out);
+            key_names(lo, out);
+        }
+        KeyExpr::Const(_) | KeyExpr::Payload { .. } => {}
+    }
+}
+
+fn pred_names(p: &PredExpr, out: &mut BTreeSet<String>) {
+    match p {
+        PredExpr::True => {}
+        PredExpr::I32Range { col, .. }
+        | PredExpr::I32InSet { col, .. }
+        | PredExpr::F64Range { col, .. }
+        | PredExpr::F64Lt { col, .. }
+        | PredExpr::Str { col, .. } => {
+            out.insert(col.clone());
+        }
+        PredExpr::I32ColLt { a, b } => {
+            out.insert(a.clone());
+            out.insert(b.clone());
+        }
+        PredExpr::And(ps) | PredExpr::Or(ps) => {
+            for p in ps {
+                pred_names(p, out);
+            }
+        }
+    }
+}
+
+// --------------------------------------------------- compiled evaluators
+
+/// Compiled group/probe-key expression: column leaves resolved to typed
+/// slices, payload leaves to environment indices.
+enum CKey<'a> {
+    Const(i64),
+    I64(&'a [i64]),
+    I32(&'a [i32]),
+    U8(&'a [u8]),
+    Code(&'a [u32]),
+    Env(usize),
+    Year(Box<CKey<'a>>),
+    Pack { hi: Box<CKey<'a>>, shift: u8, lo: Box<CKey<'a>> },
+}
+
+impl CKey<'_> {
+    fn eval(&self, i: usize, env: &[f64; MAX_ENV]) -> i64 {
+        match self {
+            CKey::Const(v) => *v,
+            CKey::I64(s) => s[i],
+            CKey::I32(s) => s[i] as i64,
+            CKey::U8(s) => s[i] as i64,
+            CKey::Code(s) => s[i] as i64,
+            CKey::Env(k) => env[*k] as i64,
+            CKey::Year(e) => days_to_date(e.eval(i, env) as i32).0 as i64,
+            CKey::Pack { hi, shift, lo } => (hi.eval(i, env) << shift) | lo.eval(i, env),
+        }
+    }
+}
+
+/// Compiled arithmetic expression.
+enum CVal<'a> {
+    Const(f64),
+    F64(&'a [f64]),
+    I64(&'a [i64]),
+    I32(&'a [i32]),
+    U8(&'a [u8]),
+    Code(&'a [u32]),
+    Env(usize),
+    Add(Box<CVal<'a>>, Box<CVal<'a>>),
+    Sub(Box<CVal<'a>>, Box<CVal<'a>>),
+    Mul(Box<CVal<'a>>, Box<CVal<'a>>),
+    /// Peephole for `a · (1 − b)` — the revenue shape every query hits.
+    MulOneMinus(&'a [f64], &'a [f64]),
+}
+
+impl CVal<'_> {
+    fn eval(&self, i: usize, env: &[f64; MAX_ENV]) -> f64 {
+        match self {
+            CVal::Const(x) => *x,
+            CVal::F64(s) => s[i],
+            CVal::I64(s) => s[i] as f64,
+            CVal::I32(s) => s[i] as f64,
+            CVal::U8(s) => s[i] as f64,
+            CVal::Code(s) => s[i] as f64,
+            CVal::Env(k) => env[*k],
+            CVal::Add(a, b) => a.eval(i, env) + b.eval(i, env),
+            CVal::Sub(a, b) => a.eval(i, env) - b.eval(i, env),
+            CVal::Mul(a, b) => a.eval(i, env) * b.eval(i, env),
+            CVal::MulOneMinus(a, b) => a[i] * (1.0 - b[i]),
+        }
+    }
+}
+
+/// Compiled post-join conjunct.
+struct CCmp<'a> {
+    lhs: CVal<'a>,
+    op: CmpOp,
+    rhs: CVal<'a>,
+}
+
+impl CCmp<'_> {
+    #[inline]
+    fn pass(&self, i: usize, env: &[f64; MAX_ENV]) -> bool {
+        let (a, b) = (self.lhs.eval(i, env), self.rhs.eval(i, env));
+        match self.op {
+            CmpOp::Eq => a == b,
+            CmpOp::Lt => a < b,
+            CmpOp::Le => a <= b,
+            CmpOp::Ge => a >= b,
+            CmpOp::Gt => a > b,
+        }
+    }
+}
+
+/// One probe-side join step after compilation: the per-row state the
+/// generated [`BatchEval`] walks.
+struct CStep<'a> {
+    key: CKey<'a>,
+    /// `Some` = hash probe; `None` = dense (`key − 1` indexes the dim).
+    hash: Option<HashJoinTable>,
+    /// Dense-side exclusion bitmap (rows failing filter/case/link).
+    pass: Option<Vec<bool>>,
+    /// Payload value arrays indexed by dim row.
+    vals: Vec<Vec<f64>>,
+    env_base: usize,
+    dim_len: usize,
+}
+
+/// Per-step bookkeeping carried through the build phase.
+struct Built {
+    hash: Option<HashJoinTable>,
+    pass: Option<Vec<bool>>,
+    vals: Vec<Vec<f64>>,
+    dim_len: usize,
+    /// `Some(env_base)` when the step is probed per row.
+    env_base: Option<usize>,
+}
+
+/// Dim-side per-row predicate, compiled once (columns resolved, string
+/// matches precomputed per dictionary entry).
+fn dim_pred<'a>(p: &PredExpr, t: &'a Table) -> Result<Box<dyn Fn(usize) -> bool + 'a>> {
+    Ok(match p {
+        PredExpr::True => Box::new(|_| true),
+        PredExpr::I32Range { col, lo, hi } => {
+            let c = i32s(t, col)?;
+            let (lo, hi) = (*lo, *hi);
+            Box::new(move |i| {
+                let v = c[i];
+                v >= lo && v < hi
+            })
+        }
+        PredExpr::I32ColLt { a, b } => {
+            let (a, b) = (i32s(t, a)?, i32s(t, b)?);
+            Box::new(move |i| a[i] < b[i])
+        }
+        PredExpr::I32InSet { col, values } => {
+            let c = i32s(t, col)?;
+            let vs = values.clone();
+            Box::new(move |i| vs.contains(&c[i]))
+        }
+        PredExpr::F64Range { col, lo, hi } => {
+            let c = f64s(t, col)?;
+            let (lo, hi) = (*lo, *hi);
+            Box::new(move |i| {
+                let v = c[i];
+                v >= lo && v < hi
+            })
+        }
+        PredExpr::F64Lt { col, x } => {
+            let c = f64s(t, col)?;
+            let x = *x;
+            Box::new(move |i| c[i] < x)
+        }
+        PredExpr::Str { col, m } => {
+            let (dict, codes) = str_col(t, col)?.as_str_codes();
+            let ok: Vec<bool> = dict.iter().map(|s| m.matches(s)).collect();
+            Box::new(move |i| ok[codes[i] as usize])
+        }
+        PredExpr::And(ps) => {
+            let fs: Vec<_> = ps.iter().map(|p| dim_pred(p, t)).collect::<Result<_>>()?;
+            Box::new(move |i| fs.iter().all(|f| f(i)))
+        }
+        PredExpr::Or(ps) => {
+            let fs: Vec<_> = ps.iter().map(|p| dim_pred(p, t)).collect::<Result<_>>()?;
+            Box::new(move |i| fs.iter().any(|f| f(i)))
+        }
+    })
+}
+
+/// Lower a scan predicate onto the engine's vectorized [`Predicate`]
+/// cascade. Conjunctive subset only: `Or` and `I32InSet` are
+/// dimension-side constructs.
+fn lower_scan_pred<'a>(p: &PredExpr, t: &'a Table) -> Result<Predicate<'a>> {
+    Ok(match p {
+        PredExpr::True => Predicate::True,
+        PredExpr::I32Range { col, lo, hi } => Predicate::i32_range(i32s(t, col)?, *lo, *hi),
+        PredExpr::I32ColLt { a, b } => Predicate::i32_col_lt(i32s(t, a)?, i32s(t, b)?),
+        PredExpr::F64Range { col, lo, hi } => Predicate::f64_range(f64s(t, col)?, *lo, *hi),
+        PredExpr::F64Lt { col, x } => Predicate::f64_lt(f64s(t, col)?, *x),
+        PredExpr::Str { col, m } => Predicate::code_matches(str_col(t, col)?, |s| m.matches(s)),
+        PredExpr::And(ps) => Predicate::and(
+            ps.iter().map(|p| lower_scan_pred(p, t)).collect::<Result<Vec<_>>>()?,
+        ),
+        PredExpr::I32InSet { .. } | PredExpr::Or(_) => {
+            crate::bail!(
+                "IN-set/OR predicates are dimension-side only (the scan cascade is conjunctive)"
+            )
+        }
+    })
+}
+
+/// A payload slot's per-dim-row source during the build loop.
+enum PaySrc<'a> {
+    Val(Box<dyn Fn(usize) -> f64 + 'a>),
+    /// First matching case's constant; no match excludes the row.
+    Case(Vec<(Box<dyn Fn(usize) -> bool + 'a>, f64)>),
+    /// Payload slot of the linked step, read through the link match.
+    Link(usize),
+}
+
+/// Payload environment layout across probed steps.
+struct EnvMap {
+    /// Per join step: `Some((env_base, n_payloads))` when probed.
+    slots: Vec<Option<(usize, usize)>>,
+}
+
+impl EnvMap {
+    fn index(&self, step: u8, slot: u8) -> Result<usize> {
+        let (base, n) = self
+            .slots
+            .get(step as usize)
+            .and_then(|s| *s)
+            .ok_or_else(|| {
+                crate::err!("payload reference to step {step}, which is not probed")
+            })?;
+        crate::ensure!(
+            (slot as usize) < n,
+            "payload slot {slot} out of range for step {step} ({n} payloads)"
+        );
+        Ok(base + slot as usize)
+    }
+}
+
+fn compile_val<'a>(e: &ValExpr, scan: &'a Table, env: &EnvMap) -> Result<CVal<'a>> {
+    // Peephole: Col(a) * (Const(1) - Col(b)) over f64 columns.
+    if let ValExpr::Mul(a, b) = e {
+        if let (ValExpr::Col(ca), ValExpr::Sub(s1, s2)) = (&**a, &**b) {
+            if let (ValExpr::Const(one), ValExpr::Col(cb)) = (&**s1, &**s2) {
+                if *one == 1.0 {
+                    if let (Ok(av), Ok(bv)) = (f64s(scan, ca), f64s(scan, cb)) {
+                        return Ok(CVal::MulOneMinus(av, bv));
+                    }
+                }
+            }
+        }
+    }
+    Ok(match e {
+        ValExpr::Const(x) => CVal::Const(*x),
+        ValExpr::Col(c) => val_leaf(scan, c)?,
+        ValExpr::Payload { step, slot } => CVal::Env(env.index(*step, *slot)?),
+        ValExpr::Add(a, b) => CVal::Add(
+            Box::new(compile_val(a, scan, env)?),
+            Box::new(compile_val(b, scan, env)?),
+        ),
+        ValExpr::Sub(a, b) => CVal::Sub(
+            Box::new(compile_val(a, scan, env)?),
+            Box::new(compile_val(b, scan, env)?),
+        ),
+        ValExpr::Mul(a, b) => CVal::Mul(
+            Box::new(compile_val(a, scan, env)?),
+            Box::new(compile_val(b, scan, env)?),
+        ),
+    })
+}
+
+fn compile_key<'a>(e: &KeyExpr, scan: &'a Table, env: &EnvMap) -> Result<CKey<'a>> {
+    Ok(match e {
+        KeyExpr::Const(v) => CKey::Const(*v),
+        KeyExpr::Col(c) => key_leaf(scan, c)?,
+        KeyExpr::Payload { step, slot } => CKey::Env(env.index(*step, *slot)?),
+        KeyExpr::Year(e) => CKey::Year(Box::new(compile_key(e, scan, env)?)),
+        KeyExpr::Pack { hi, shift, lo } => {
+            crate::ensure!(*shift < 63, "pack shift {shift} too large");
+            CKey::Pack {
+                hi: Box::new(compile_key(hi, scan, env)?),
+                shift: *shift,
+                lo: Box::new(compile_key(lo, scan, env)?),
+            }
+        }
+    })
+}
+
+/// Build one join step's dim-side state: filter + link + payload arrays,
+/// and (for hash steps) the probe table over passing rows.
+fn build_step(db: &TpchDb, j: &JoinStep, built: &[Built], stats: &mut ExecStats) -> Result<Built> {
+    let t = table(db, j.table);
+    let dim_len = t.len();
+    // Per-step bound, checked BEFORE the build loop writes its MAX_ENV
+    // scratch (the whole-plan env budget is re-checked across steps in
+    // `compile`).
+    crate::ensure!(
+        j.payloads.len() <= MAX_ENV,
+        "join step has {} payloads (max {MAX_ENV})",
+        j.payloads.len()
+    );
+    if j.dense {
+        crate::ensure!(j.build_key.is_none(), "dense steps take no build key");
+        crate::ensure!(j.link.is_none(), "dense steps cannot link");
+        crate::ensure!(j.probe_key.is_some(), "dense steps must be probed");
+    } else {
+        crate::ensure!(j.build_key.is_some(), "hash steps need a build key");
+    }
+    let filter = dim_pred(&j.filter, t)?;
+
+    // Link resolution: the target must be an earlier hash step.
+    let link = match &j.link {
+        None => None,
+        Some(l) => {
+            let target = built.get(l.step as usize).ok_or_else(|| {
+                crate::err!("link to step {}, which is not earlier in the chain", l.step)
+            })?;
+            let hash = target
+                .hash
+                .as_ref()
+                .ok_or_else(|| crate::err!("link target step {} is dense", l.step))?;
+            let via = i64_values(t, &l.via)?;
+            Some((hash, &target.vals, via))
+        }
+    };
+
+    // Payload sources.
+    let mut srcs: Vec<PaySrc<'_>> = Vec::with_capacity(j.payloads.len());
+    for p in &j.payloads {
+        srcs.push(match p {
+            Payload::Col(c) => {
+                let leaf = val_leaf(t, c)?;
+                PaySrc::Val(Box::new(move |i| leaf.eval(i, &[0.0; MAX_ENV])))
+            }
+            Payload::Flag { col, m } => {
+                let (dict, codes) = str_col(t, col)?.as_str_codes();
+                let ok: Vec<bool> = dict.iter().map(|s| m.matches(s)).collect();
+                PaySrc::Val(Box::new(move |i| ok[codes[i] as usize] as u8 as f64))
+            }
+            Payload::CaseConst { cases } => {
+                let compiled = cases
+                    .iter()
+                    .map(|(p, v)| Ok((dim_pred(p, t)?, *v)))
+                    .collect::<Result<Vec<_>>>()?;
+                PaySrc::Case(compiled)
+            }
+            Payload::FromLink(k) => {
+                let (_, vals, _) = link
+                    .as_ref()
+                    .ok_or_else(|| crate::err!("FromLink payload without a link"))?;
+                crate::ensure!(
+                    (*k as usize) < vals.len(),
+                    "FromLink slot {k} out of range ({} link payloads)",
+                    vals.len()
+                );
+                PaySrc::Link(*k as usize)
+            }
+        });
+    }
+
+    // Charge the filter scan. CaseConst case predicates run for every
+    // row that reaches them, so their columns are part of this pass
+    // (the hand-written Q19 charged its brand/container/size read the
+    // same way).
+    let mut filter_cols = BTreeSet::new();
+    pred_names(&j.filter, &mut filter_cols);
+    for p in &j.payloads {
+        if let Payload::CaseConst { cases } = p {
+            for (cp, _) in cases {
+                pred_names(cp, &mut filter_cols);
+            }
+        }
+    }
+    if let Some(l) = &j.link {
+        filter_cols.insert(l.via.clone());
+    }
+    let filter_bytes: usize =
+        filter_cols.iter().map(|c| column(t, c).map(col_width).unwrap_or(0)).sum();
+    stats.scan(dim_len, filter_bytes);
+
+    // The build loop: decide pass/exclusion per dim row, fill payloads.
+    let mut vals: Vec<Vec<f64>> = (0..j.payloads.len()).map(|_| vec![0.0; dim_len]).collect();
+    let mut pass = vec![false; dim_len];
+    let mut sel: Vec<u32> = Vec::new();
+    'rows: for r in 0..dim_len {
+        if !filter(r) {
+            continue;
+        }
+        let link_row = match &link {
+            None => usize::MAX,
+            Some((hash, _, via)) => match hash.probe_first(via[r]) {
+                Some(r2) => r2 as usize,
+                None => continue,
+            },
+        };
+        // Compute payloads into a scratch first: a CaseConst miss must
+        // exclude the row without partially writing it.
+        let mut tmp = [0.0f64; MAX_ENV];
+        for (k, s) in srcs.iter().enumerate() {
+            tmp[k] = match s {
+                PaySrc::Val(f) => f(r),
+                PaySrc::Case(cases) => match cases.iter().find(|(p, _)| p(r)) {
+                    Some((_, v)) => *v,
+                    None => continue 'rows,
+                },
+                PaySrc::Link(k2) => link.as_ref().expect("validated").1[*k2][link_row],
+            };
+        }
+        pass[r] = true;
+        sel.push(r as u32);
+        for (k, v) in vals.iter_mut().enumerate() {
+            v[r] = tmp[k];
+        }
+    }
+
+    // Charge the build-side scan over passing rows: key + payload cols.
+    let mut build_cols = BTreeSet::new();
+    if let Some(k) = &j.build_key {
+        keycols_names(k, &mut build_cols);
+    }
+    for p in &j.payloads {
+        match p {
+            Payload::Col(c) | Payload::Flag { col: c, .. } => {
+                build_cols.insert(c.clone());
+            }
+            Payload::CaseConst { .. } | Payload::FromLink(_) => {}
+        }
+    }
+    let build_bytes: usize =
+        build_cols.iter().map(|c| column(t, c).map(col_width).unwrap_or(0)).sum();
+    stats.scan(sel.len(), build_bytes);
+
+    let excluded_any = sel.len() < dim_len;
+    let hash = match &j.build_key {
+        None => None,
+        Some(k) => {
+            let keys = build_keys(t, k)?;
+            Some(HashJoinTable::build_dim(&keys, &sel, stats))
+        }
+    };
+    Ok(Built {
+        hash,
+        pass: if j.dense && excluded_any { Some(pass) } else { None },
+        vals,
+        dim_len,
+        env_base: None,
+    })
+}
+
+/// Distinct scan columns the probe phase reads beyond the predicate:
+/// probe keys, group key, aggregate slots, compare conjuncts — the
+/// `payload_bytes` charged per selected row.
+fn payload_bytes(plan: &LogicalPlan, scan: &Table) -> usize {
+    let mut cols = BTreeSet::new();
+    for j in &plan.joins {
+        if let Some(k) = &j.probe_key {
+            keycols_names(k, &mut cols);
+        }
+    }
+    key_names(&plan.key, &mut cols);
+    for s in &plan.slots {
+        val_names(s, &mut cols);
+    }
+    for c in &plan.cmps {
+        val_names(&c.lhs, &mut cols);
+        val_names(&c.rhs, &mut cols);
+    }
+    let mut pred_cols = BTreeSet::new();
+    pred_names(&plan.pred, &mut pred_cols);
+    cols.iter()
+        .filter(|c| !pred_cols.contains(*c))
+        .map(|c| column(scan, c).map(col_width).unwrap_or(0))
+        .sum()
+}
+
+/// Lower a [`LogicalPlan`] onto the engine's hot path: build the
+/// dimension state once, generate the plan's [`BatchEval`], return the
+/// same [`Compiled`] context hand-written queries used to produce. Fails
+/// (never panics) on malformed plans — unknown columns, type mismatches,
+/// dangling payload references — so a worker can reject a bad wire plan
+/// with an error frame.
+pub fn compile<'a>(db: &'a TpchDb, plan: &LogicalPlan) -> Result<(Compiled<'a>, ExecStats)> {
+    let scan = table(db, plan.scan);
+    let width = plan.slots.len();
+    crate::ensure!(
+        (1..=MAX_ACCS).contains(&width),
+        "plan width {width} outside 1..={MAX_ACCS}"
+    );
+    crate::ensure!(
+        plan.joins.len() <= MAX_JOINS,
+        "plan has {} joins (max {MAX_JOINS})",
+        plan.joins.len()
+    );
+
+    let mut stats = ExecStats::default();
+    let pred = lower_scan_pred(&plan.pred, scan)?;
+
+    // Build the dimension chain, assigning env space to probed steps.
+    let mut built: Vec<Built> = Vec::with_capacity(plan.joins.len());
+    let mut env_off = 0usize;
+    for j in &plan.joins {
+        let mut b = build_step(db, j, &built, &mut stats)?;
+        if j.probe_key.is_some() {
+            b.env_base = Some(env_off);
+            env_off += j.payloads.len();
+        }
+        built.push(b);
+    }
+    crate::ensure!(
+        env_off <= MAX_ENV,
+        "plan needs {env_off} payload slots (max {MAX_ENV})"
+    );
+    let env = EnvMap {
+        slots: built
+            .iter()
+            .map(|b| b.env_base.map(|base| (base, b.vals.len())))
+            .collect(),
+    };
+
+    // Probe-side steps, in chain order.
+    let mut steps: Vec<CStep<'a>> = Vec::new();
+    for (j, b) in plan.joins.iter().zip(built) {
+        let Some(pk) = &j.probe_key else { continue };
+        steps.push(CStep {
+            key: probe_key(scan, pk)?,
+            hash: b.hash,
+            pass: b.pass,
+            vals: b.vals,
+            env_base: b.env_base.expect("probed step has env"),
+            dim_len: b.dim_len,
+        });
+    }
+
+    let cmps: Vec<CCmp<'a>> = plan
+        .cmps
+        .iter()
+        .map(|c| {
+            Ok(CCmp {
+                lhs: compile_val(&c.lhs, scan, &env)?,
+                op: c.op,
+                rhs: compile_val(&c.rhs, scan, &env)?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let key = compile_key(&plan.key, scan, &env)?;
+    let slots: Vec<CVal<'a>> = plan
+        .slots
+        .iter()
+        .map(|s| compile_val(s, scan, &env))
+        .collect::<Result<_>>()?;
+
+    // Finalize references are leader-side, but validate accumulator
+    // indexes here so a bad plan fails at compile, not mid-query — and
+    // charge the dense decoration columns finalize will read (Q18's
+    // custkey/date/totalprice gathers are real scans the contention
+    // model must see).
+    validate_finalize(&plan.finalize, width)?;
+    for c in &plan.finalize.columns {
+        if let OutCol::DimInt { table: tr, col } | OutCol::DimFloat { table: tr, col } = c {
+            let t = table(db, *tr);
+            stats.scan(t.len(), column(t, col).map(col_width).unwrap_or(0));
+        }
+    }
+
+    let pb = payload_bytes(plan, scan);
+    let groups_hint = match plan.groups_hint {
+        GroupsHint::Const(n) => (n as usize).max(1),
+        GroupsHint::TableRows(t) => table(db, t).len().max(1),
+    };
+
+    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
+        rows.for_each(|i| {
+            let mut penv = [0.0f64; MAX_ENV];
+            for s in &steps {
+                let k = s.key.eval(i, &penv);
+                let row = match &s.hash {
+                    Some(t) => match t.probe_first(k) {
+                        Some(r) => r as usize,
+                        None => return,
+                    },
+                    None => {
+                        if k < 1 || k as usize > s.dim_len {
+                            return;
+                        }
+                        let r = (k - 1) as usize;
+                        if let Some(p) = &s.pass {
+                            if !p[r] {
+                                return;
+                            }
+                        }
+                        r
+                    }
+                };
+                for (j, v) in s.vals.iter().enumerate() {
+                    penv[s.env_base + j] = v[row];
+                }
+            }
+            for c in &cmps {
+                if !c.pass(i, &penv) {
+                    return;
+                }
+            }
+            out.keys.push(key.eval(i, &penv));
+            for (w, slot) in slots.iter().enumerate() {
+                out.cols[w].push(slot.eval(i, &penv));
+            }
+        });
+    });
+
+    Ok((Compiled { pred, payload_bytes: pb, eval, groups_hint }, stats))
+}
+
+/// Validate a finalize spec against the plan's accumulator width.
+fn validate_finalize(f: &FinalizeSpec, width: usize) -> Result<()> {
+    let acc_ok = |k: u8| -> Result<()> {
+        crate::ensure!((k as usize) < width, "finalize references acc {k}, width is {width}");
+        Ok(())
+    };
+    for c in &f.columns {
+        match c {
+            OutCol::Acc(k) | OutCol::AccInt(k) | OutCol::AccOverCount(k) => acc_ok(*k)?,
+            OutCol::AccRatioPct(a, b) => {
+                acc_ok(*a)?;
+                acc_ok(*b)?;
+            }
+            _ => {}
+        }
+    }
+    if let Some((a, _)) = f.having_gt {
+        acc_ok(a)?;
+    }
+    for (c, _) in &f.sort {
+        crate::ensure!(
+            (*c as usize) < f.columns.len(),
+            "sort key {c} out of range ({} output columns)",
+            f.columns.len()
+        );
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- finalize
+
+/// Interpret a [`FinalizeSpec`] over the merged partial: emit output
+/// columns per group (with dense dimension decoration through the
+/// leader's attached tables), apply having, sort, and top-k. Scalar
+/// specs emit exactly one row even from an empty partial. Fails (never
+/// panics) on malformed specs or out-of-range keys.
+pub fn finalize(db: &TpchDb, f: &FinalizeSpec, p: &Partial) -> Result<Vec<Row>> {
+    validate_finalize(f, p.width.max(1))?;
+    let mut rows: Vec<Row> = Vec::new();
+    if f.scalar {
+        // One row, from the single group or zeros: Q6/Q14/Q19 report 0
+        // revenue on an empty window rather than no rows. More than one
+        // group means the plan's key expression was not scalar-shaped —
+        // picking group 0 would return a merge-order-dependent answer,
+        // so reject the plan instead.
+        crate::ensure!(
+            p.len() <= 1,
+            "scalar finalize over {} groups (the group key is not constant)",
+            p.len()
+        );
+        let zeros = [0.0; MAX_ACCS];
+        let (key, accs, cnt) = if p.is_empty() {
+            (0, zeros.as_slice(), 0)
+        } else {
+            (p.keys[0], p.acc(0), p.counts[0])
+        };
+        rows.push(emit_row(db, f, key, accs, cnt)?);
+        return Ok(rows);
+    }
+    for gi in 0..p.len() {
+        if let Some((a, x)) = f.having_gt {
+            if p.acc(gi)[a as usize] <= x {
+                continue;
+            }
+        }
+        rows.push(emit_row(db, f, p.keys[gi], p.acc(gi), p.counts[gi])?);
+    }
+    sort_rows(&mut rows, &f.sort);
+    if f.limit > 0 {
+        rows.truncate(f.limit as usize);
+    }
+    Ok(rows)
+}
+
+/// `(key >> shift) & mask(bits)`; `bits == 0` keeps every bit.
+fn key_field(key: i64, shift: u8, bits: u8) -> i64 {
+    let s = key >> shift.min(63);
+    if bits == 0 || bits >= 63 {
+        s
+    } else {
+        s & ((1i64 << bits) - 1)
+    }
+}
+
+fn emit_row(db: &TpchDb, f: &FinalizeSpec, key: i64, accs: &[f64], cnt: u64) -> Result<Row> {
+    f.columns.iter().map(|c| out_cell(db, c, key, accs, cnt)).collect()
+}
+
+fn out_cell(db: &TpchDb, c: &OutCol, key: i64, accs: &[f64], cnt: u64) -> Result<Value> {
+    Ok(match c {
+        OutCol::KeyInt { shift, bits } => Value::Int(key_field(key, *shift, *bits)),
+        OutCol::KeyChar { shift } => {
+            Value::Str(((key_field(key, *shift, 8) as u8) as char).to_string())
+        }
+        OutCol::KeyNation { shift, bits } => {
+            let idx = key_field(key, *shift, *bits);
+            crate::ensure!(
+                (0..NATIONS.len() as i64).contains(&idx),
+                "nation index {idx} out of range"
+            );
+            Value::Str(NATIONS[idx as usize].0.to_string())
+        }
+        OutCol::KeyDict { table: tr, col } => {
+            let (dict, _) = str_col(table(db, *tr), col)?.as_str_codes();
+            crate::ensure!(
+                (0..dict.len() as i64).contains(&key),
+                "dictionary key {key} out of range for {col}"
+            );
+            Value::Str(dict[key as usize].clone())
+        }
+        OutCol::Acc(k) => Value::Float(accs[*k as usize]),
+        OutCol::AccInt(k) => Value::Int(accs[*k as usize] as i64),
+        OutCol::Count => Value::Int(cnt as i64),
+        OutCol::AccOverCount(k) => Value::Float(if cnt == 0 {
+            0.0
+        } else {
+            accs[*k as usize] / cnt as f64
+        }),
+        OutCol::AccRatioPct(a, b) => {
+            let (x, y) = (accs[*a as usize], accs[*b as usize]);
+            Value::Float(if y > 0.0 { 100.0 * x / y } else { 0.0 })
+        }
+        OutCol::DimInt { table: tr, col } => {
+            let t = table(db, *tr);
+            let row = dim_row(key, t.len())?;
+            match column(t, col)? {
+                Column::I64(v) => Value::Int(v[row]),
+                Column::I32(v) => Value::Int(v[row] as i64),
+                Column::U8(v) => Value::Int(v[row] as i64),
+                _ => crate::bail!("column {col} is not integral"),
+            }
+        }
+        OutCol::DimFloat { table: tr, col } => {
+            let t = table(db, *tr);
+            let row = dim_row(key, t.len())?;
+            Value::Float(f64s(t, col)?[row])
+        }
+    })
+}
+
+/// Dense decoration row: `key − 1`, bounds-checked.
+fn dim_row(key: i64, len: usize) -> Result<usize> {
+    crate::ensure!(
+        key >= 1 && (key as usize) <= len,
+        "group key {key} outside dense table of {len} rows"
+    );
+    Ok((key - 1) as usize)
+}
+
+/// Lexicographic stable sort over output cells. Cells in one column
+/// share a type by construction; mixed comparisons order arbitrarily
+/// (but deterministically) rather than erroring.
+fn sort_rows(rows: &mut [Row], sort: &[(u8, SortDir)]) {
+    if sort.is_empty() {
+        return;
+    }
+    rows.sort_by(|a, b| {
+        for &(c, dir) in sort {
+            let ord = cmp_cell(&a[c as usize], &b[c as usize]);
+            let ord = if dir == SortDir::Desc { ord.reverse() } else { ord };
+            if ord != std::cmp::Ordering::Equal {
+                return ord;
+            }
+        }
+        std::cmp::Ordering::Equal
+    });
+}
+
+fn cmp_cell(a: &Value, b: &Value) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a, b) {
+        (Value::Int(x), Value::Int(y)) => x.cmp(y),
+        (Value::Str(x), Value::Str(y)) => x.cmp(y),
+        (Value::Str(_), _) | (_, Value::Str(_)) => Ordering::Equal,
+        (x, y) => x.as_f64().partial_cmp(&y.as_f64()).unwrap_or(Ordering::Equal),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::tpch::TpchConfig;
+
+    fn small_db() -> TpchDb {
+        TpchDb::generate(TpchConfig::new(0.001, 7))
+    }
+
+    /// A plan exercising every IR construct at once: all predicate
+    /// leaves, a hash join with link + payloads, a dense join, cases,
+    /// compares, packed keys, and a decorated finalize.
+    fn kitchen_sink() -> LogicalPlan {
+        LogicalPlan {
+            name: "sink".into(),
+            scan: TableRef::Lineitem,
+            pred: pand(vec![
+                i32_range("l_shipdate", 8000, 10000),
+                f64_range("l_discount", 0.0, 0.2),
+                f64_lt("l_quantity", 60.0),
+                i32_col_lt("l_shipdate", "l_receiptdate"),
+                str_in("l_shipmode", &["MAIL".into(), "SHIP".into(), "AIR".into()]),
+            ]),
+            joins: vec![
+                JoinStep {
+                    table: TableRef::Customer,
+                    dense: false,
+                    build_key: Some(KeyCols::Col("c_custkey".into())),
+                    probe_key: None,
+                    filter: por(vec![
+                        str_eq("c_mktsegment", "BUILDING"),
+                        i32_in("c_nationkey", vec![1, 2, 3]),
+                    ]),
+                    link: None,
+                    payloads: vec![Payload::Col("c_nationkey".into())],
+                },
+                JoinStep {
+                    table: TableRef::Orders,
+                    dense: false,
+                    build_key: Some(KeyCols::Col("o_orderkey".into())),
+                    probe_key: Some(KeyCols::Col("l_orderkey".into())),
+                    filter: PredExpr::True,
+                    link: Some(LinkRef { step: 0, via: "o_custkey".into() }),
+                    payloads: vec![
+                        Payload::FromLink(0),
+                        Payload::Col("o_orderdate".into()),
+                        Payload::Flag {
+                            col: "o_orderpriority".into(),
+                            m: StrMatch::Prefix("1".into()),
+                        },
+                    ],
+                },
+                JoinStep {
+                    table: TableRef::Part,
+                    dense: true,
+                    build_key: None,
+                    probe_key: Some(KeyCols::Col("l_partkey".into())),
+                    filter: str_contains("p_name", "a"),
+                    link: None,
+                    payloads: vec![Payload::CaseConst {
+                        cases: vec![
+                            (i32_range("p_size", 1, 20), 5.0),
+                            (i32_range("p_size", 20, 60), 9.0),
+                        ],
+                    }],
+                },
+            ],
+            cmps: vec![cmp(vpay(2, 0), CmpOp::Ge, vconst(5.0))],
+            key: kpack(kpay(1, 0), 16, kyear(kpay(1, 1))),
+            slots: vec![vrevenue(), vadd(vpay(1, 2), vconst(0.0))],
+            groups_hint: GroupsHint::Const(64),
+            finalize: FinalizeSpec {
+                scalar: false,
+                columns: vec![
+                    OutCol::KeyNation { shift: 16, bits: 0 },
+                    OutCol::KeyInt { shift: 0, bits: 16 },
+                    OutCol::Acc(0),
+                    OutCol::AccInt(1),
+                    OutCol::Count,
+                ],
+                having_gt: None,
+                sort: vec![(0, SortDir::Asc), (2, SortDir::Desc)],
+                limit: 20,
+            },
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip_kitchen_sink() {
+        let p = kitchen_sink();
+        let enc = p.encode();
+        let dec = LogicalPlan::decode(&enc).unwrap();
+        assert_eq!(dec, p);
+    }
+
+    #[test]
+    fn codec_rejects_truncation_and_garbage() {
+        let enc = kitchen_sink().encode();
+        for cut in [1usize, 2, 7, enc.len() / 2, enc.len() - 1] {
+            assert!(
+                LogicalPlan::decode(&enc[..enc.len() - cut]).is_err(),
+                "accepted {cut}-byte truncation"
+            );
+        }
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(LogicalPlan::decode(&padded).is_err(), "accepted trailing garbage");
+        assert!(LogicalPlan::decode(&[]).is_err());
+        assert!(LogicalPlan::decode(&[0xFF; 40]).is_err());
+    }
+
+    #[test]
+    fn kitchen_sink_compiles_and_runs() {
+        let db = small_db();
+        let (c, stats) = compile(&db, &kitchen_sink()).unwrap();
+        assert!(stats.ht_bytes > 0, "dimension builds must charge table bytes");
+        let p = super::super::run_range(&c, 2, 0, db.lineitem.len());
+        // The plan is selective but the data is generated; just demand
+        // structural sanity and that finalize interprets it.
+        let rows = finalize(&db, &kitchen_sink().finalize, &p).unwrap();
+        assert!(rows.len() <= 20);
+        for r in &rows {
+            assert_eq!(r.len(), 5);
+            assert!(matches!(r[0], Value::Str(_)));
+            assert!(matches!(r[1], Value::Int(_)));
+        }
+    }
+
+    #[test]
+    fn compile_rejects_malformed_plans() {
+        let db = small_db();
+        let base = kitchen_sink();
+
+        let mut bad = base.clone();
+        bad.pred = por(vec![PredExpr::True]);
+        assert!(compile(&db, &bad).is_err(), "OR in scan position");
+
+        let mut bad = base.clone();
+        bad.slots = vec![vcol("no_such_column")];
+        assert!(compile(&db, &bad).is_err(), "unknown column");
+
+        let mut bad = base.clone();
+        bad.slots = vec![vcol("l_shipmode"); 1];
+        assert!(compile(&db, &bad).is_ok(), "str code as value is allowed");
+
+        let mut bad = base.clone();
+        bad.key = kcol("l_extendedprice");
+        assert!(compile(&db, &bad).is_err(), "f64 key column");
+
+        let mut bad = base.clone();
+        bad.cmps = vec![cmp(vpay(0, 0), CmpOp::Eq, vconst(0.0))];
+        assert!(compile(&db, &bad).is_err(), "payload ref to unprobed step");
+
+        let mut bad = base.clone();
+        bad.cmps = vec![cmp(vpay(1, 9), CmpOp::Eq, vconst(0.0))];
+        assert!(compile(&db, &bad).is_err(), "payload slot out of range");
+
+        let mut bad = base.clone();
+        bad.finalize.having_gt = Some((4, 0.0));
+        assert!(compile(&db, &bad).is_err(), "having acc out of width");
+
+        let mut bad = base.clone();
+        bad.finalize.sort = vec![(9, SortDir::Asc)];
+        assert!(compile(&db, &bad).is_err(), "sort key out of range");
+
+        let mut bad = base.clone();
+        bad.joins[1].link = Some(LinkRef { step: 2, via: "o_custkey".into() });
+        assert!(compile(&db, &bad).is_err(), "link to a later step");
+    }
+
+    #[test]
+    fn wire_bounds_catch_what_encode_would_truncate() {
+        let base = kitchen_sink();
+        base.check_wire_bounds().unwrap();
+
+        // 258-entry IN-list: enc_match would write the count as 2.
+        let mut bad = base.clone();
+        let many: Vec<String> = (0..258).map(|i| format!("M{i}")).collect();
+        bad.pred = str_in("l_shipmode", &many);
+        assert!(bad.check_wire_bounds().is_err(), "oversized OneOf must be rejected");
+
+        // Expression tree deeper than the decoder's recursion cap: it
+        // would encode fine and then never decode.
+        let mut bad = base.clone();
+        let mut deep = vconst(1.0);
+        for _ in 0..MAX_DEPTH + 1 {
+            deep = vadd(deep, vconst(1.0));
+        }
+        bad.slots = vec![deep];
+        assert!(bad.check_wire_bounds().is_err(), "too-deep tree must be rejected");
+
+        // Every registry default is encodable by construction.
+        for d in &crate::analytics::queries::REGISTRY {
+            (d.logical)(&PlanParams::default()).unwrap().check_wire_bounds().unwrap();
+        }
+    }
+
+    #[test]
+    fn scalar_finalize_survives_empty_partial() {
+        let db = small_db();
+        let f = FinalizeSpec {
+            scalar: true,
+            columns: vec![OutCol::Acc(0), OutCol::AccRatioPct(0, 0), OutCol::Count],
+            having_gt: None,
+            sort: vec![],
+            limit: 0,
+        };
+        let rows = finalize(&db, &f, &Partial::new(1)).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0][0].as_f64(), 0.0);
+        assert_eq!(rows[0][1].as_f64(), 0.0);
+    }
+
+    #[test]
+    fn finalize_having_sort_limit_and_decoration() {
+        let db = small_db();
+        // Build a partial keyed by order keys 1..=6 with rising sums.
+        let mut p = Partial::new(1);
+        for k in 1..=6i64 {
+            p.keys.push(k);
+            p.accs.push(k as f64 * 10.0);
+            p.counts.push(1);
+        }
+        let f = FinalizeSpec {
+            scalar: false,
+            columns: vec![
+                OutCol::KeyInt { shift: 0, bits: 0 },
+                OutCol::Acc(0),
+                OutCol::DimInt { table: TableRef::Orders, col: "o_orderdate".into() },
+                OutCol::DimFloat { table: TableRef::Orders, col: "o_totalprice".into() },
+            ],
+            having_gt: Some((0, 25.0)),
+            sort: vec![(1, SortDir::Desc)],
+            limit: 3,
+        };
+        let rows = finalize(&db, &f, &p).unwrap();
+        // Groups 3..=6 pass having; top-3 by acc desc = keys 6, 5, 4.
+        assert_eq!(rows.len(), 3);
+        let keys: Vec<i64> = rows
+            .iter()
+            .map(|r| match r[0] {
+                Value::Int(k) => k,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(keys, vec![6, 5, 4]);
+        let odate = db.orders.col("o_orderdate").as_i32();
+        assert!(rows[0][2].approx_eq(&Value::Int(odate[5] as i64)));
+        // A key outside the dense table errors instead of panicking.
+        let mut far = Partial::new(1);
+        far.keys.push(10_000_000);
+        far.accs.push(99.0);
+        far.counts.push(1);
+        assert!(finalize(&db, &f, &far).is_err());
+    }
+
+    #[test]
+    fn dense_step_out_of_range_key_drops_row_not_panics() {
+        let db = small_db();
+        let plan = LogicalPlan {
+            name: "dense-oob".into(),
+            scan: TableRef::Lineitem,
+            pred: PredExpr::True,
+            joins: vec![JoinStep {
+                // Probing part with *orderkey* runs off the part table
+                // for most rows; those rows must be dropped silently.
+                table: TableRef::Part,
+                dense: true,
+                build_key: None,
+                probe_key: Some(KeyCols::Col("l_orderkey".into())),
+                filter: PredExpr::True,
+                link: None,
+                payloads: vec![Payload::Col("p_size".into())],
+            }],
+            cmps: vec![],
+            key: kconst(0),
+            slots: vec![vpay(0, 0)],
+            groups_hint: GroupsHint::Const(1),
+            finalize: FinalizeSpec {
+                scalar: true,
+                columns: vec![OutCol::Acc(0)],
+                having_gt: None,
+                sort: vec![],
+                limit: 0,
+            },
+        };
+        let (c, _) = compile(&db, &plan).unwrap();
+        let p = super::super::run_range(&c, 1, 0, db.lineitem.len());
+        let _ = finalize(&db, &plan.finalize, &p).unwrap();
+    }
+
+    #[test]
+    fn params_track_usage_and_types() {
+        let mut p = PlanParams::new();
+        p.set("days", "90");
+        p.set("rate", "0.5");
+        p.set("who", "BUILDING");
+        p.set("when", "1994-03-01");
+        p.set("stray", "1");
+        assert_eq!(p.get_i64("days", 0).unwrap(), 90);
+        assert_eq!(p.get_f64("rate", 0.0).unwrap(), 0.5);
+        assert_eq!(p.get_f64("days", 0.0).unwrap(), 90.0);
+        assert_eq!(p.get_str("who", "x").unwrap(), "BUILDING");
+        assert_eq!(p.get_date("when", 0).unwrap(), date_to_days(1994, 3, 1));
+        assert_eq!(p.get_date("absent", 123).unwrap(), 123);
+        assert!(p.get_i64("who", 0).is_err(), "type mismatch must error");
+        assert_eq!(p.unused(), vec!["stray".to_string()]);
+        let mut lists = PlanParams::new();
+        lists.set("modes", "MAIL, SHIP");
+        assert_eq!(lists.get_list("modes", &[]).unwrap(), vec!["MAIL", "SHIP"]);
+        assert_eq!(
+            lists.get_list("other", &["AIR"]).unwrap(),
+            vec!["AIR".to_string()]
+        );
+    }
+
+    #[test]
+    fn parse_date_rejects_junk() {
+        assert!(parse_date("1994-1-1").is_ok());
+        assert!(parse_date("not-a-date").is_err());
+        assert!(parse_date("1994-13-01").is_err());
+        assert!(parse_date("1994-01").is_err());
+    }
+
+    #[test]
+    fn key_field_masks_and_shifts() {
+        assert_eq!(key_field(0x1234_5678, 16, 0), 0x1234);
+        assert_eq!(key_field(0x1234_5678, 0, 16), 0x5678);
+        assert_eq!(key_field(-1, 0, 0), -1);
+        assert_eq!(key_field(0xAB, 0, 8), 0xAB);
+    }
+}

@@ -3,8 +3,9 @@
 //!
 //! The engine's columns are split into fixed-size **morsels** (contiguous
 //! row ranges of `lineitem`, the probe side of every query). The shared
-//! engine kernel evaluates each query's [`crate::analytics::engine::PlanSpec`]
-//! predicate per morsel, and the surviving rows are aggregated over
+//! engine kernel evaluates each query's
+//! [`crate::analytics::engine::LogicalPlan`] predicate per morsel, and
+//! the surviving rows are aggregated over
 //! balanced selection slices into [`Partial`]s — mergeable grouped
 //! aggregates combined in slice order, so results are deterministic
 //! regardless of how threads were scheduled. The same [`Partial`] is the

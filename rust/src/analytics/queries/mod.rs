@@ -1,13 +1,19 @@
 //! TPC-H query implementations — the analytics workloads of Figure 3.
 //!
-//! Each query module defines exactly one
-//! [`crate::analytics::engine::PlanSpec`] (predicate expression,
-//! dimension hash-join builds, group key + aggregate slots, finalizer)
-//! plus an independent row-at-a-time *oracle* (`naive`), and the test
-//! compares the two on generated data. Every run returns a
-//! [`QueryOutput`] with [`ExecStats`] feeding the memory-contention
-//! model. The serial, morsel-parallel, and distributed paths all drive
-//! the same plan.
+//! Each query module is a parameterized IR constructor: one `logical`
+//! function producing the query's
+//! [`crate::analytics::engine::LogicalPlan`] (predicate tree, dimension
+//! joins, group key + aggregate slots, finalize spec) plus an
+//! independent row-at-a-time *oracle* (`naive`), and the test compares
+//! the two on generated data. Every run returns a [`QueryOutput`] with
+//! [`ExecStats`] feeding the memory-contention model. The serial,
+//! morsel-parallel, and distributed paths all drive the same plan — and
+//! a worker compiles whatever IR arrives on the wire; nothing here is
+//! baked into the executor.
+//!
+//! [`REGISTRY`] is the **single** query table: adding a query means one
+//! module plus one row here — [`QUERY_NAMES`],
+//! [`crate::analytics::engine::spec`], and [`build`] all derive from it.
 
 pub mod q1;
 pub mod q12;
@@ -19,8 +25,10 @@ pub mod q5;
 pub mod q6;
 pub mod q9;
 
+use super::engine::plan::{LogicalPlan, PlanParams};
 use super::ops::ExecStats;
 use super::tpch::TpchDb;
+use crate::error::Result;
 
 /// A result cell.
 #[derive(Clone, Debug)]
@@ -72,8 +80,55 @@ impl QueryOutput {
     }
 }
 
-/// Names of all implemented queries, Figure-3 order.
-pub const QUERY_NAMES: [&str; 9] = ["q1", "q3", "q5", "q6", "q9", "q12", "q14", "q18", "q19"];
+/// One registered query: its name and its IR constructor.
+pub struct QueryDef {
+    pub name: &'static str,
+    /// Build the query's [`LogicalPlan`] from a parameter bag.
+    pub logical: fn(&PlanParams) -> Result<LogicalPlan>,
+}
+
+/// THE query table, Figure-3 order — the one place a query is wired in.
+/// [`QUERY_NAMES`], [`crate::analytics::engine::spec`], and [`build`]
+/// are all views over this array.
+pub const REGISTRY: [QueryDef; 9] = [
+    QueryDef { name: "q1", logical: q1::logical },
+    QueryDef { name: "q3", logical: q3::logical },
+    QueryDef { name: "q5", logical: q5::logical },
+    QueryDef { name: "q6", logical: q6::logical },
+    QueryDef { name: "q9", logical: q9::logical },
+    QueryDef { name: "q12", logical: q12::logical },
+    QueryDef { name: "q14", logical: q14::logical },
+    QueryDef { name: "q18", logical: q18::logical },
+    QueryDef { name: "q19", logical: q19::logical },
+];
+
+/// Names of all implemented queries, Figure-3 order — derived from
+/// [`REGISTRY`] at compile time, never a second list to keep in sync.
+pub const QUERY_NAMES: [&str; REGISTRY.len()] = {
+    let mut names = [""; REGISTRY.len()];
+    let mut i = 0;
+    while i < names.len() {
+        names[i] = REGISTRY[i].name;
+        i += 1;
+    }
+    names
+};
+
+/// Build a query's plan with `--param` overrides. Rejects unknown query
+/// names and parameter keys the builder never read (typo protection).
+pub fn build(name: &str, p: &PlanParams) -> Result<LogicalPlan> {
+    let def = REGISTRY
+        .iter()
+        .find(|d| d.name == name)
+        .ok_or_else(|| crate::err!("unknown query {name}"))?;
+    // Per-build read tracking: a key consumed by an earlier build of a
+    // reused bag must not slip past this build's stray-key check.
+    p.reset_used();
+    let plan = (def.logical)(p)?;
+    let stray = p.unused();
+    crate::ensure!(stray.is_empty(), "unknown parameter(s) for {name}: {stray:?}");
+    Ok(plan)
+}
 
 /// Run a query by name, single-threaded, through the unified engine.
 pub fn run_query(db: &TpchDb, name: &str) -> Option<QueryOutput> {
@@ -94,6 +149,23 @@ mod tests {
             assert!(out.stats.bytes_scanned > 0, "{name} reported no scan bytes");
         }
         assert!(run_query(&db, "q99").is_none());
+    }
+
+    #[test]
+    fn registry_is_the_single_name_source() {
+        assert_eq!(QUERY_NAMES.len(), REGISTRY.len());
+        for (n, d) in QUERY_NAMES.iter().zip(REGISTRY.iter()) {
+            assert_eq!(*n, d.name);
+        }
+        // Every registered builder accepts the empty parameter bag.
+        for d in &REGISTRY {
+            let plan = (d.logical)(&PlanParams::default()).unwrap();
+            assert_eq!(plan.name, d.name);
+        }
+        assert!(build("q99", &PlanParams::default()).is_err());
+        let mut stray = PlanParams::default();
+        stray.set("not-a-knob", "1");
+        assert!(build("q6", &stray).is_err(), "stray parameter must be rejected");
     }
 
     #[test]

@@ -5,86 +5,65 @@
 //! the set: it touches seven wide columns end to end.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
-use crate::analytics::ops::ExecStats;
+use crate::analytics::engine::plan::{
+    i32_range, kcol, kpack, vadd, vcol, vconst, vmul, vrevenue, FinalizeSpec, GroupsHint,
+    LogicalPlan, OutCol, SortDir, TableRef,
+};
+use crate::analytics::engine::{self, PlanParams};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
+use crate::error::Result;
 
 /// Cutoff: shipdate <= 1998-12-01 - 90 days = 1998-09-02.
 fn cutoff() -> i32 {
     date_to_days(1998, 12, 1) - 90
 }
 
-/// The one Q1 plan all three execution paths drive: shipdate-window
-/// predicate, (returnflag × linestatus) group key, five running sums;
+/// The one Q1 IR constructor: shipdate-window predicate,
+/// (returnflag × linestatus) packed group key, five running sums;
 /// finalize computes the averages and sorts by the flag pair.
-pub(crate) fn plan_spec() -> PlanSpec {
-    PlanSpec { name: "q1", width: 5, compile, finalize }
-}
-
-fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
-    let li = &db.lineitem;
-    let ship = li.col("l_shipdate").as_i32();
-    let qty = li.col("l_quantity").as_f64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-    let tax = li.col("l_tax").as_f64();
-    let rf = li.col("l_returnflag").as_u8();
-    let ls = li.col("l_linestatus").as_u8();
-    let pred = Predicate::i32_range(ship, i32::MIN, cutoff() + 1);
-    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
-        rows.for_each(|i| {
-            let dp = price[i] * (1.0 - disc[i]);
-            out.keys.push(((rf[i] as i64) << 8) | ls[i] as i64);
-            out.cols[0].push(qty[i]);
-            out.cols[1].push(price[i]);
-            out.cols[2].push(dp);
-            out.cols[3].push(dp * (1.0 + tax[i]));
-            out.cols[4].push(disc[i]);
-        });
-    });
-    (Compiled { pred, payload_bytes: 8 * 4 + 2, eval, groups_hint: 8 }, ExecStats::default())
-}
-
-fn finalize(_db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
-    let mut rows: Vec<Row> = (0..p.len())
-        .map(|gi| {
-            let key = p.keys[gi];
-            let s = p.acc(gi);
-            let cnt = p.counts[gi];
-            let c = cnt as f64;
-            vec![
-                Value::Str(((key >> 8) as u8 as char).to_string()),
-                Value::Str(((key & 0xff) as u8 as char).to_string()),
-                Value::Float(s[0]),
-                Value::Float(s[1]),
-                Value::Float(s[2]),
-                Value::Float(s[3]),
-                Value::Float(s[0] / c),
-                Value::Float(s[1] / c),
-                Value::Float(s[4] / c),
-                Value::Int(cnt as i64),
-            ]
-        })
-        .collect();
-    rows.sort_by(|a, b| {
-        let ka = (str_of(&a[0]), str_of(&a[1]));
-        let kb = (str_of(&b[0]), str_of(&b[1]));
-        ka.cmp(&kb)
-    });
-    rows
-}
-
-fn str_of(v: &Value) -> String {
-    match v {
-        Value::Str(s) => s.clone(),
-        _ => unreachable!(),
-    }
+/// Parameter key: `cutoff` (latest shipdate, inclusive).
+pub fn logical(p: &PlanParams) -> Result<LogicalPlan> {
+    let cut = p.get_date("cutoff", cutoff())?;
+    Ok(LogicalPlan {
+        name: "q1".into(),
+        scan: TableRef::Lineitem,
+        pred: i32_range("l_shipdate", i32::MIN, cut + 1),
+        joins: vec![],
+        cmps: vec![],
+        key: kpack(kcol("l_returnflag"), 8, kcol("l_linestatus")),
+        slots: vec![
+            vcol("l_quantity"),
+            vcol("l_extendedprice"),
+            vrevenue(),
+            vmul(vrevenue(), vadd(vconst(1.0), vcol("l_tax"))),
+            vcol("l_discount"),
+        ],
+        groups_hint: GroupsHint::Const(8),
+        finalize: FinalizeSpec {
+            scalar: false,
+            columns: vec![
+                OutCol::KeyChar { shift: 8 },
+                OutCol::KeyChar { shift: 0 },
+                OutCol::Acc(0),
+                OutCol::Acc(1),
+                OutCol::Acc(2),
+                OutCol::Acc(3),
+                OutCol::AccOverCount(0),
+                OutCol::AccOverCount(1),
+                OutCol::AccOverCount(4),
+                OutCol::Count,
+            ],
+            having_gt: None,
+            sort: vec![(0, SortDir::Asc), (1, SortDir::Asc)],
+            limit: 0,
+        },
+    })
 }
 
 /// Single-threaded reference execution (engine-driven).
 pub fn run(db: &TpchDb) -> QueryOutput {
-    engine::run_serial(db, &plan_spec())
+    engine::run_serial(db, &logical(&PlanParams::default()).expect("default q1 plan"))
 }
 
 /// Row-at-a-time oracle.
@@ -164,6 +143,25 @@ mod tests {
             _ => 0,
         }).sum();
         assert!(total > 0 && (total as usize) <= db.lineitem.len());
+    }
+
+    #[test]
+    fn cutoff_param_narrows_the_scan() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 5));
+        let full = run(&db);
+        let mut bag = PlanParams::new();
+        bag.set("cutoff", "1994-01-01");
+        let narrowed = engine::run_serial(&db, &logical(&bag).unwrap());
+        let count = |o: &QueryOutput| -> i64 {
+            o.rows
+                .iter()
+                .map(|r| match r[9] {
+                    Value::Int(n) => n,
+                    _ => 0,
+                })
+                .sum()
+        };
+        assert!(count(&narrowed) < count(&full), "earlier cutoff must drop rows");
     }
 
     #[test]

@@ -1,87 +1,82 @@
 //! TPC-H Q12 — shipping modes and order priority.
 //!
-//! Lineitem date-consistency filters + shipmode IN-list, joined to orders,
-//! counting high/low-priority orders per mode.
+//! Lineitem date-consistency filters + shipmode IN-list, joined to orders
+//! (dense, with a priority-class Flag payload), counting high/low-priority
+//! orders per mode.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
-use crate::analytics::ops::ExecStats;
+use crate::analytics::engine::plan::{
+    i32_col_lt, i32_range, kcol, pand, str_in, vconst, vpay, vsub, FinalizeSpec, GroupsHint,
+    JoinStep, KeyCols, LogicalPlan, OutCol, Payload, PredExpr, SortDir, StrMatch, TableRef,
+};
+use crate::analytics::engine::{self, PlanParams};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
+use crate::error::Result;
 
 const MODES: [&str; 2] = ["MAIL", "SHIP"];
+const HIGH: [&str; 2] = ["1-URGENT", "2-HIGH"];
 
 fn window() -> (i32, i32) {
     (date_to_days(1994, 1, 1), date_to_days(1995, 1, 1))
 }
 
 fn is_high(priority: &str) -> bool {
-    priority == "1-URGENT" || priority == "2-HIGH"
+    HIGH.contains(&priority)
 }
 
-/// The one Q12 plan: mode IN-list + receipt window + date-consistency
-/// predicate cascade, counting high/low-priority lines per ship-mode
-/// dictionary code; finalize resolves codes to mode strings and sorts.
-pub(crate) fn plan_spec() -> PlanSpec {
-    PlanSpec { name: "q12", width: 2, compile, finalize }
-}
-
-fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
-    let mut stats = ExecStats::default();
+/// The one Q12 IR constructor: mode IN-list + receipt window +
+/// date-consistency predicate cascade; the dense orders step flows a
+/// high-priority flag payload; finalize resolves mode codes through the
+/// lineitem dictionary. Parameter keys: `modes` (comma list),
+/// `date-lo`/`date-hi` (receipt window).
+pub fn logical(p: &PlanParams) -> Result<LogicalPlan> {
+    let modes = p.get_list("modes", &MODES)?;
     let (lo_d, hi_d) = window();
-    let li = &db.lineitem;
-
-    let (_, mode_codes) = li.col("l_shipmode").as_str_codes();
-    let ship = li.col("l_shipdate").as_i32();
-    let commit = li.col("l_commitdate").as_i32();
-    let receipt = li.col("l_receiptdate").as_i32();
-    let lok = li.col("l_orderkey").as_i64();
-    let pred = Predicate::and(vec![
-        Predicate::code_matches(li.col("l_shipmode"), |m| MODES.contains(&m)),
-        Predicate::i32_range(receipt, lo_d, hi_d),
-        Predicate::i32_col_lt(commit, receipt),
-        Predicate::i32_col_lt(ship, commit),
-    ]);
-
-    // orders side: priority via dense orderkey index.
-    let (prio_dict, prio_codes) = db.orders.col("o_orderpriority").as_str_codes();
-    let high_code: Vec<bool> = prio_dict.iter().map(|p| is_high(p)).collect();
-    stats.scan(db.orders.len(), 4);
-
-    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
-        rows.for_each(|i| {
-            let orow = (lok[i] - 1) as usize;
-            let high = high_code[prio_codes[orow] as usize] as u8 as f64;
-            out.keys.push(mode_codes[i] as i64);
-            out.cols[0].push(high);
-            out.cols[1].push(1.0 - high);
-        });
-    });
-    (Compiled { pred, payload_bytes: 12, eval, groups_hint: 8 }, stats)
-}
-
-fn finalize(db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
-    let (mode_dict, _) = db.lineitem.col("l_shipmode").as_str_codes();
-    let mut rows: Vec<Row> = (0..p.len())
-        .map(|i| {
-            let a = p.acc(i);
-            vec![
-                Value::Str(mode_dict[p.keys[i] as usize].clone()),
-                Value::Int(a[0] as i64),
-                Value::Int(a[1] as i64),
-            ]
-        })
-        .collect();
-    rows.sort_by(|a, b| match (&a[0], &b[0]) {
-        (Value::Str(x), Value::Str(y)) => x.cmp(y),
-        _ => unreachable!(),
-    });
-    rows
+    let lo_d = p.get_date("date-lo", lo_d)?;
+    let hi_d = p.get_date("date-hi", hi_d)?;
+    Ok(LogicalPlan {
+        name: "q12".into(),
+        scan: TableRef::Lineitem,
+        pred: pand(vec![
+            str_in("l_shipmode", &modes),
+            i32_range("l_receiptdate", lo_d, hi_d),
+            i32_col_lt("l_commitdate", "l_receiptdate"),
+            i32_col_lt("l_shipdate", "l_commitdate"),
+        ]),
+        joins: vec![JoinStep {
+            table: TableRef::Orders,
+            dense: true,
+            build_key: None,
+            probe_key: Some(KeyCols::Col("l_orderkey".into())),
+            filter: PredExpr::True,
+            link: None,
+            payloads: vec![Payload::Flag {
+                col: "o_orderpriority".into(),
+                m: StrMatch::OneOf(HIGH.iter().map(|s| s.to_string()).collect()),
+            }],
+        }],
+        cmps: vec![],
+        key: kcol("l_shipmode"),
+        slots: vec![vpay(0, 0), vsub(vconst(1.0), vpay(0, 0))],
+        groups_hint: GroupsHint::Const(8),
+        finalize: FinalizeSpec {
+            scalar: false,
+            columns: vec![
+                OutCol::KeyDict { table: TableRef::Lineitem, col: "l_shipmode".into() },
+                OutCol::AccInt(0),
+                OutCol::AccInt(1),
+            ],
+            having_gt: None,
+            sort: vec![(0, SortDir::Asc)],
+            limit: 0,
+        },
+    })
 }
 
 /// Single-threaded reference execution (engine-driven).
 pub fn run(db: &TpchDb) -> QueryOutput {
-    engine::run_serial(db, &plan_spec())
+    engine::run_serial(db, &logical(&PlanParams::default()).expect("default q12 plan"))
 }
 
 /// Row-at-a-time oracle.
@@ -136,6 +131,24 @@ mod tests {
         for r in run(&db).rows {
             match &r[0] {
                 Value::Str(m) => assert!(MODES.contains(&m.as_str())),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn modes_param_widens_the_in_list() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 53));
+        let mut bag = PlanParams::new();
+        bag.set("modes", "MAIL,SHIP,AIR,RAIL");
+        let out = engine::run_serial(&db, &logical(&bag).unwrap());
+        assert!(out.rows.len() >= run(&db).rows.len());
+        for r in &out.rows {
+            match &r[0] {
+                Value::Str(m) => assert!(
+                    ["MAIL", "SHIP", "AIR", "RAIL"].contains(&m.as_str()),
+                    "unexpected mode {m}"
+                ),
                 _ => panic!(),
             }
         }

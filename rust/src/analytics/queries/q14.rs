@@ -2,65 +2,62 @@
 //! one-month shipping window.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
-use crate::analytics::ops::ExecStats;
+use crate::analytics::engine::plan::{
+    i32_range, kconst, vmul, vpay, vrevenue, FinalizeSpec, GroupsHint, JoinStep, KeyCols,
+    LogicalPlan, OutCol, Payload, PredExpr, StrMatch, TableRef,
+};
+use crate::analytics::engine::{self, PlanParams};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
+use crate::error::Result;
 
 fn window() -> (i32, i32) {
     (date_to_days(1995, 9, 1), date_to_days(1995, 10, 1))
 }
 
-/// The one Q14 plan: ship-window predicate, promo and total revenue
+/// The one Q14 IR constructor: ship-window predicate; the dense part
+/// step flows a PROMO flag payload into promo and total revenue
 /// accumulators; finalize computes the percentage from the two merged
-/// sums.
-pub(crate) fn plan_spec() -> PlanSpec {
-    PlanSpec { name: "q14", width: 2, compile, finalize }
-}
-
-fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
-    let mut stats = ExecStats::default();
+/// sums. Parameter keys: `date-lo`/`date-hi` (ship window).
+pub fn logical(p: &PlanParams) -> Result<LogicalPlan> {
     let (lo_d, hi_d) = window();
-    let li = &db.lineitem;
-    let ship = li.col("l_shipdate").as_i32();
-    let lpk = li.col("l_partkey").as_i64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-
-    let part = &db.part;
-    let (type_dict, type_codes) = part.col("p_type").as_str_codes();
-    let promo: Vec<bool> = type_dict.iter().map(|t| t.starts_with("PROMO")).collect();
-    stats.scan(part.len(), 4);
-
-    let pred = Predicate::i32_range(ship, lo_d, hi_d);
-    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
-        rows.for_each(|i| {
-            let rev = price[i] * (1.0 - disc[i]);
-            // partkey is dense 1..=N → direct index instead of a hash join.
-            let prow = (lpk[i] - 1) as usize;
-            let is_promo = promo[type_codes[prow] as usize] as u8 as f64;
-            out.keys.push(0);
-            out.cols[0].push(is_promo * rev);
-            out.cols[1].push(rev);
-        });
-    });
-    (Compiled { pred, payload_bytes: 24, eval, groups_hint: 1 }, stats)
-}
-
-fn finalize(_db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
-    let (promo_rev, total_rev) = if p.is_empty() {
-        (0.0, 0.0)
-    } else {
-        let a = p.acc(0);
-        (a[0], a[1])
-    };
-    let pct = if total_rev > 0.0 { 100.0 * promo_rev / total_rev } else { 0.0 };
-    vec![vec![Value::Float(pct)]]
+    let lo_d = p.get_date("date-lo", lo_d)?;
+    let hi_d = p.get_date("date-hi", hi_d)?;
+    Ok(LogicalPlan {
+        name: "q14".into(),
+        scan: TableRef::Lineitem,
+        pred: i32_range("l_shipdate", lo_d, hi_d),
+        joins: vec![JoinStep {
+            // partkey is dense 1..=N → direct index instead of a hash
+            // join.
+            table: TableRef::Part,
+            dense: true,
+            build_key: None,
+            probe_key: Some(KeyCols::Col("l_partkey".into())),
+            filter: PredExpr::True,
+            link: None,
+            payloads: vec![Payload::Flag {
+                col: "p_type".into(),
+                m: StrMatch::Prefix("PROMO".into()),
+            }],
+        }],
+        cmps: vec![],
+        key: kconst(0),
+        slots: vec![vmul(vpay(0, 0), vrevenue()), vrevenue()],
+        groups_hint: GroupsHint::Const(1),
+        finalize: FinalizeSpec {
+            scalar: true,
+            columns: vec![OutCol::AccRatioPct(0, 1)],
+            having_gt: None,
+            sort: vec![],
+            limit: 0,
+        },
+    })
 }
 
 /// Single-threaded reference execution (engine-driven).
 pub fn run(db: &TpchDb) -> QueryOutput {
-    engine::run_serial(db, &plan_spec())
+    engine::run_serial(db, &logical(&PlanParams::default()).expect("default q14 plan"))
 }
 
 /// Row-at-a-time oracle.
@@ -104,5 +101,15 @@ mod tests {
         assert!((0.0..=100.0).contains(&pct), "pct={pct}");
         // PROMO is 1 of 6 type prefixes → expect roughly 1/6 ± slack.
         assert!(pct > 5.0 && pct < 35.0, "pct={pct}");
+    }
+
+    #[test]
+    fn window_param_moves_the_month() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 67));
+        let mut bag = PlanParams::new();
+        bag.set("date-lo", "1994-03-01");
+        bag.set("date-hi", "1994-04-01");
+        let pct = engine::run_serial(&db, &logical(&bag).unwrap()).rows[0][0].as_f64();
+        assert!((0.0..=100.0).contains(&pct), "pct={pct}");
     }
 }

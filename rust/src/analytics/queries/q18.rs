@@ -2,76 +2,60 @@
 //! exceeds a threshold, top-100 by order total price.
 //!
 //! The big-aggregation query: a full group-by over every order key —
-//! the shuffle-dominant partial of the Fig. 4 analysis.
+//! the shuffle-dominant partial of the Fig. 4 analysis. In the IR it is
+//! a pure gather (no predicate, no joins) whose finalize does all the
+//! work: having-threshold, dense order decoration, top-k.
 
-use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
-use crate::analytics::ops::ExecStats;
+use crate::analytics::engine::plan::{
+    kcol, vcol, FinalizeSpec, GroupsHint, LogicalPlan, OutCol, PredExpr, SortDir, TableRef,
+};
+use crate::analytics::engine::{self, PlanParams};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
+use crate::error::Result;
 
 const QTY_THRESHOLD: f64 = 300.0;
-const TOP: usize = 100;
+const TOP: u32 = 100;
 
-/// The one Q18 plan: no predicate, sum(quantity) grouped by order key;
-/// finalize applies the quantity threshold and the top-100 by order
-/// total price.
-pub(crate) fn plan_spec() -> PlanSpec {
-    PlanSpec { name: "q18", width: 1, compile, finalize }
-}
-
-fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
-    let mut stats = ExecStats::default();
-    let li = &db.lineitem;
-    let lok = li.col("l_orderkey").as_i64();
-    let qty = li.col("l_quantity").as_f64();
-    // The finalize side reads custkey/date/totalprice for the survivors.
-    stats.scan(db.orders.len(), 20);
-    // Pure gather: keys and values come straight off the lineitem
-    // columns; the batched HashAgg's last-key memo then collapses the
-    // per-order runs (lineitem is clustered by order key).
-    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
-        rows.for_each(|i| {
-            out.keys.push(lok[i]);
-            out.cols[0].push(qty[i]);
-        });
-    });
-    let hint = db.orders.len();
-    (Compiled { pred: Predicate::True, payload_bytes: 16, eval, groups_hint: hint }, stats)
-}
-
-fn finalize(db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
-    let orders = &db.orders;
-    let ocust = orders.col("o_custkey").as_i64();
-    let odate = orders.col("o_orderdate").as_i32();
-    let ototal = orders.col("o_totalprice").as_f64();
-    let mut big: Vec<(i64, f64)> = Vec::new(); // (orderkey, totalprice)
-    let mut qty_of: std::collections::HashMap<i64, f64> = Default::default();
-    for i in 0..p.len() {
-        let q = p.acc(i)[0];
-        if q > QTY_THRESHOLD {
-            let ok = p.keys[i];
-            big.push((ok, ototal[(ok - 1) as usize]));
-            qty_of.insert(ok, q);
-        }
-    }
-    crate::analytics::ops::top_k_desc(&mut big, TOP);
-    big.into_iter()
-        .map(|(ok, total)| {
-            let orow = (ok - 1) as usize;
-            vec![
-                Value::Int(ocust[orow]),
-                Value::Int(ok),
-                Value::Int(odate[orow] as i64),
-                Value::Float(total),
-                Value::Float(qty_of[&ok]),
-            ]
-        })
-        .collect()
+/// The one Q18 IR constructor: no predicate, sum(quantity) grouped by
+/// order key; finalize applies the quantity threshold and the top-k by
+/// order total price (dense decoration through the orders table).
+/// Parameter keys: `qty-threshold`, `top`.
+pub fn logical(p: &PlanParams) -> Result<LogicalPlan> {
+    let threshold = p.get_f64("qty-threshold", QTY_THRESHOLD)?;
+    let top = p.get_limit("top", TOP)?;
+    Ok(LogicalPlan {
+        name: "q18".into(),
+        scan: TableRef::Lineitem,
+        // Pure gather: keys and values come straight off the lineitem
+        // columns; the batched HashAgg's last-key memo then collapses
+        // the per-order runs (lineitem is clustered by order key).
+        pred: PredExpr::True,
+        joins: vec![],
+        cmps: vec![],
+        key: kcol("l_orderkey"),
+        slots: vec![vcol("l_quantity")],
+        groups_hint: GroupsHint::TableRows(TableRef::Orders),
+        finalize: FinalizeSpec {
+            scalar: false,
+            columns: vec![
+                OutCol::DimInt { table: TableRef::Orders, col: "o_custkey".into() },
+                OutCol::KeyInt { shift: 0, bits: 0 },
+                OutCol::DimInt { table: TableRef::Orders, col: "o_orderdate".into() },
+                OutCol::DimFloat { table: TableRef::Orders, col: "o_totalprice".into() },
+                OutCol::Acc(0),
+            ],
+            having_gt: Some((0, threshold)),
+            // top_k_desc semantics: totalprice desc, orderkey asc ties.
+            sort: vec![(3, SortDir::Desc), (1, SortDir::Asc)],
+            limit: top,
+        },
+    })
 }
 
 /// Single-threaded reference execution (engine-driven).
 pub fn run(db: &TpchDb) -> QueryOutput {
-    engine::run_serial(db, &plan_spec())
+    engine::run_serial(db, &logical(&PlanParams::default()).expect("default q18 plan"))
 }
 
 /// Row-at-a-time oracle.
@@ -89,7 +73,7 @@ pub fn naive(db: &TpchDb) -> Vec<Row> {
         .filter(|(_, q)| **q > QTY_THRESHOLD)
         .map(|(ok, _)| (*ok, orders.col("o_totalprice").as_f64()[(*ok - 1) as usize]))
         .collect();
-    crate::analytics::ops::top_k_desc(&mut big, TOP);
+    crate::analytics::ops::top_k_desc(&mut big, TOP as usize);
     big.into_iter()
         .map(|(ok, total)| {
             let orow = (ok - 1) as usize;
@@ -123,6 +107,19 @@ mod tests {
         let db = TpchDb::generate(TpchConfig::new(0.01, 73));
         for r in run(&db).rows {
             assert!(r[4].as_f64() > QTY_THRESHOLD);
+        }
+    }
+
+    #[test]
+    fn threshold_param_is_a_having_knob() {
+        let db = TpchDb::generate(TpchConfig::new(0.01, 73));
+        let strict = run(&db).rows.len();
+        let mut bag = PlanParams::new();
+        bag.set("qty-threshold", "250");
+        let loose = engine::run_serial(&db, &logical(&bag).unwrap());
+        assert!(loose.rows.len() >= strict, "lower threshold must admit more orders");
+        for r in &loose.rows {
+            assert!(r[4].as_f64() > 250.0);
         }
     }
 

@@ -1,13 +1,19 @@
 //! TPC-H Q19 — discounted revenue: three OR'd brand/container/quantity
 //! predicate branches over lineitem ⋈ part.
 //!
-//! Exercises complex disjunctive predicates with part-side attribute
-//! lookups (brand + container + size) fused into the probe loop.
+//! Exercises disjunctive dimension predicates in the IR: the part step's
+//! `CaseConst` payloads classify each part into a branch (no match →
+//! excluded from the join), flowing that branch's quantity bounds to the
+//! probe row, where two post-join compares apply the window.
 
-use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
-use crate::analytics::ops::ExecStats;
+use crate::analytics::engine::plan::{
+    cmp, i32_range, kconst, pand, str_eq, str_in, vcol, vpay, vrevenue, CmpOp, FinalizeSpec,
+    GroupsHint, JoinStep, KeyCols, LogicalPlan, OutCol, Payload, PredExpr, StrMatch, TableRef,
+};
+use crate::analytics::engine::{self, PlanParams};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
+use crate::error::Result;
 
 struct Branch {
     brand: &'static str,
@@ -46,74 +52,67 @@ fn branches() -> [Branch; 3] {
 const MODES: [&str; 2] = ["AIR", "REG AIR"];
 const INSTRUCT: &str = "DELIVER IN PERSON";
 
-/// The one Q19 plan: the per-part branch ids are precomputed once at
-/// compile time (broadcast side); the mode/instruct dictionary tests run
-/// as the predicate cascade and the kernel fuses the per-branch quantity
-/// window into the revenue sum.
-pub(crate) fn plan_spec() -> PlanSpec {
-    PlanSpec { name: "q19", width: 1, compile, finalize }
+/// A branch's part-side predicate: brand equality, container IN-list,
+/// size window.
+fn branch_pred(b: &Branch) -> PredExpr {
+    let containers: Vec<String> = b.containers.iter().map(|c| c.to_string()).collect();
+    pand(vec![
+        str_eq("p_brand", b.brand),
+        PredExpr::Str { col: "p_container".into(), m: StrMatch::OneOf(containers) },
+        i32_range("p_size", 1, b.size_max + 1),
+    ])
 }
 
-fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
-    let mut stats = ExecStats::default();
-    let part = &db.part;
-    let (brand_dict, brand_codes) = part.col("p_brand").as_str_codes();
-    let (cont_dict, cont_codes) = part.col("p_container").as_str_codes();
-    let size = part.col("p_size").as_i32();
-    stats.scan(part.len(), 12);
-
-    // Per-part branch id (0-2) or -1: precomputed once, probed per line.
+/// The one Q19 IR constructor: the mode/instruct dictionary tests run as
+/// the scan cascade; the dense part step's `CaseConst` payloads carry
+/// each matching branch's quantity bounds (non-matching parts never
+/// join); two compares fuse the per-branch window into the revenue sum.
+/// Parameter keys: `modes` (comma list), `instruct`.
+pub fn logical(p: &PlanParams) -> Result<LogicalPlan> {
+    let modes = p.get_list("modes", &MODES)?;
+    let instruct = p.get_str("instruct", INSTRUCT)?;
     let brs = branches();
-    let part_branch: Vec<i8> = (0..part.len())
-        .map(|i| {
-            let b = &brand_dict[brand_codes[i] as usize];
-            let c = &cont_dict[cont_codes[i] as usize];
-            for (bi, br) in brs.iter().enumerate() {
-                if b == br.brand
-                    && br.containers.contains(&c.as_str())
-                    && size[i] >= 1
-                    && size[i] <= br.size_max
-                {
-                    return bi as i8;
-                }
-            }
-            -1
-        })
-        .collect();
-
-    let li = &db.lineitem;
-    let pred = Predicate::and(vec![
-        Predicate::code_matches(li.col("l_shipmode"), |m| MODES.contains(&m)),
-        Predicate::code_matches(li.col("l_shipinstruct"), |s| s == INSTRUCT),
-    ]);
-    let lpk = li.col("l_partkey").as_i64();
-    let qty = li.col("l_quantity").as_f64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
-        rows.for_each(|i| {
-            let bi = part_branch[(lpk[i] - 1) as usize];
-            if bi < 0 {
-                return;
-            }
-            let br = &brs[bi as usize];
-            if qty[i] >= br.qty_lo && qty[i] <= br.qty_hi {
-                out.keys.push(0);
-                out.cols[0].push(price[i] * (1.0 - disc[i]));
-            }
-        });
-    });
-    (Compiled { pred, payload_bytes: 8 * 4, eval, groups_hint: 1 }, stats)
-}
-
-fn finalize(_db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
-    let rev = if p.is_empty() { 0.0 } else { p.acc(0)[0] };
-    vec![vec![Value::Float(rev)]]
+    let lo_cases = brs.iter().map(|b| (branch_pred(b), b.qty_lo)).collect();
+    let hi_cases = brs.iter().map(|b| (branch_pred(b), b.qty_hi)).collect();
+    Ok(LogicalPlan {
+        name: "q19".into(),
+        scan: TableRef::Lineitem,
+        pred: pand(vec![
+            str_in("l_shipmode", &modes),
+            str_eq("l_shipinstruct", &instruct),
+        ]),
+        joins: vec![JoinStep {
+            table: TableRef::Part,
+            dense: true,
+            build_key: None,
+            probe_key: Some(KeyCols::Col("l_partkey".into())),
+            filter: PredExpr::True,
+            link: None,
+            payloads: vec![
+                Payload::CaseConst { cases: lo_cases },
+                Payload::CaseConst { cases: hi_cases },
+            ],
+        }],
+        cmps: vec![
+            cmp(vcol("l_quantity"), CmpOp::Ge, vpay(0, 0)),
+            cmp(vcol("l_quantity"), CmpOp::Le, vpay(0, 1)),
+        ],
+        key: kconst(0),
+        slots: vec![vrevenue()],
+        groups_hint: GroupsHint::Const(1),
+        finalize: FinalizeSpec {
+            scalar: true,
+            columns: vec![OutCol::Acc(0)],
+            having_gt: None,
+            sort: vec![],
+            limit: 0,
+        },
+    })
 }
 
 /// Single-threaded reference execution (engine-driven).
 pub fn run(db: &TpchDb) -> QueryOutput {
-    engine::run_serial(db, &plan_spec())
+    engine::run_serial(db, &logical(&PlanParams::default()).expect("default q19 plan"))
 }
 
 /// Row-at-a-time oracle.
@@ -170,5 +169,15 @@ mod tests {
         // Very selective: the aggregate collapses to at most one group.
         assert!(out.stats.rows_out <= 1);
         assert!(out.stats.bytes_scanned > 0);
+    }
+
+    #[test]
+    fn modes_param_can_only_grow_revenue() {
+        let db = TpchDb::generate(TpchConfig::new(0.01, 89));
+        let base = run(&db).rows[0][0].as_f64();
+        let mut bag = PlanParams::new();
+        bag.set("modes", "AIR,REG AIR,TRUCK,RAIL,SHIP,MAIL,FOB");
+        let all = engine::run_serial(&db, &logical(&bag).unwrap()).rows[0][0].as_f64();
+        assert!(all >= base, "a superset of modes must not lose revenue");
     }
 }

@@ -1,91 +1,83 @@
 //! TPC-H Q3 — shipping priority: top-10 unshipped orders by revenue.
 //!
-//! customer(BUILDING) ⋈ orders(before date) ⋈ lineitem(after date),
-//! revenue grouped by order. Exercises two hash joins and a top-k.
+//! customer(segment) ⋈ orders(before date) ⋈ lineitem(after date),
+//! revenue grouped by order. Exercises the IR's chained dimension
+//! builds (orders link into the customer semi-join) and a top-k with
+//! dense date decoration.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{
-    self, BatchEval, Compiled, EvalBatch, HashJoinTable, PlanSpec, Predicate, Sel,
+use crate::analytics::engine::plan::{
+    i32_range, kcol, str_eq, vrevenue, FinalizeSpec, GroupsHint, JoinStep, KeyCols, LinkRef,
+    LogicalPlan, OutCol, SortDir, TableRef,
 };
-use crate::analytics::ops::{all_rows, filter_code_eq, filter_i32_range, top_k_desc, ExecStats};
+use crate::analytics::engine::{self, PlanParams};
+use crate::analytics::ops::top_k_desc;
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
+use crate::error::Result;
 
 fn pivot() -> i32 {
     date_to_days(1995, 3, 15)
 }
 
-/// The one Q3 plan: the customer semi-join and the order hash table are
-/// built once at compile time (broadcast side); the kernel probes orders
-/// per lineitem and sums revenue per order key. Finalize takes the
-/// top-10 and resolves order dates through the dense orderkey index.
-pub(crate) fn plan_spec() -> PlanSpec {
-    PlanSpec { name: "q3", width: 1, compile, finalize }
-}
+const SEGMENT: &str = "BUILDING";
+const TOP: u32 = 10;
 
-fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
-    let mut stats = ExecStats::default();
-    let pivot = pivot();
-
-    // customer: mktsegment = 'BUILDING'.
-    let cust = &db.customer;
-    let (_, seg_codes) = cust.col("c_mktsegment").as_str_codes();
-    stats.scan(cust.len(), 4);
-    let cust_sel = match cust.col("c_mktsegment").dict_code("BUILDING") {
-        Some(c) => filter_code_eq(&all_rows(cust.len()), seg_codes, c),
-        None => Vec::new(),
-    };
-    let custkeys = cust.col("c_custkey").as_i64();
-    stats.scan(cust_sel.len(), 8);
-    let cust_map = HashJoinTable::build_dim(custkeys, &cust_sel, &mut stats);
-
-    // orders: o_orderdate < pivot, semi-joined to BUILDING customers.
-    let orders = &db.orders;
-    let odate = orders.col("o_orderdate").as_i32();
-    let ocust = orders.col("o_custkey").as_i64();
-    stats.scan(orders.len(), 4);
-    let ord_sel: Vec<u32> = filter_i32_range(&all_rows(orders.len()), odate, i32::MIN, pivot)
-        .into_iter()
-        .filter(|&o| cust_map.probe_first(ocust[o as usize]).is_some())
-        .collect();
-    stats.scan(ord_sel.len(), 8);
-    let okeys = orders.col("o_orderkey").as_i64();
-    let ord_map = HashJoinTable::build_dim(okeys, &ord_sel, &mut stats);
-
-    // lineitem: l_shipdate > pivot, joined to surviving orders.
-    let li = &db.lineitem;
-    let ship = li.col("l_shipdate").as_i32();
-    let lok = li.col("l_orderkey").as_i64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-    let pred = Predicate::i32_range(ship, pivot + 1, i32::MAX);
-    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
-        rows.for_each(|i| {
-            if ord_map.probe_first(lok[i]).is_some() {
-                out.keys.push(lok[i]);
-                out.cols[0].push(price[i] * (1.0 - disc[i]));
-            }
-        });
-    });
-    (Compiled { pred, payload_bytes: 8 * 3, eval, groups_hint: 256 }, stats)
-}
-
-fn finalize(db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
-    let odate = db.orders.col("o_orderdate").as_i32();
-    let mut items: Vec<(i64, f64)> = (0..p.len()).map(|i| (p.keys[i], p.acc(i)[0])).collect();
-    top_k_desc(&mut items, 10);
-    items
-        .into_iter()
-        .map(|(k, rev)| {
-            // orderkey is dense 1..=N → direct date lookup.
-            vec![Value::Int(k), Value::Float(rev), Value::Int(odate[(k - 1) as usize] as i64)]
-        })
-        .collect()
+/// The one Q3 IR constructor: the customer semi-join is a link-only
+/// step; orders build over it; the kernel probes orders per lineitem and
+/// sums revenue per order key. Finalize takes the top-k and resolves
+/// order dates through the dense orderkey index. Parameter keys:
+/// `segment` (market segment), `pivot` (date), `top` (result rows).
+pub fn logical(p: &PlanParams) -> Result<LogicalPlan> {
+    let segment = p.get_str("segment", SEGMENT)?;
+    let pivot = p.get_date("pivot", pivot())?;
+    let top = p.get_limit("top", TOP)?;
+    Ok(LogicalPlan {
+        name: "q3".into(),
+        scan: TableRef::Lineitem,
+        pred: i32_range("l_shipdate", pivot + 1, i32::MAX),
+        joins: vec![
+            JoinStep {
+                table: TableRef::Customer,
+                dense: false,
+                build_key: Some(KeyCols::Col("c_custkey".into())),
+                probe_key: None,
+                filter: str_eq("c_mktsegment", &segment),
+                link: None,
+                payloads: vec![],
+            },
+            JoinStep {
+                table: TableRef::Orders,
+                dense: false,
+                build_key: Some(KeyCols::Col("o_orderkey".into())),
+                probe_key: Some(KeyCols::Col("l_orderkey".into())),
+                filter: i32_range("o_orderdate", i32::MIN, pivot),
+                link: Some(LinkRef { step: 0, via: "o_custkey".into() }),
+                payloads: vec![],
+            },
+        ],
+        cmps: vec![],
+        key: kcol("l_orderkey"),
+        slots: vec![vrevenue()],
+        groups_hint: GroupsHint::Const(256),
+        finalize: FinalizeSpec {
+            scalar: false,
+            columns: vec![
+                OutCol::KeyInt { shift: 0, bits: 0 },
+                OutCol::Acc(0),
+                OutCol::DimInt { table: TableRef::Orders, col: "o_orderdate".into() },
+            ],
+            having_gt: None,
+            // top_k_desc semantics: revenue desc, orderkey asc on ties.
+            sort: vec![(1, SortDir::Desc), (0, SortDir::Asc)],
+            limit: top,
+        },
+    })
 }
 
 /// Single-threaded reference execution (engine-driven).
 pub fn run(db: &TpchDb) -> QueryOutput {
-    engine::run_serial(db, &plan_spec())
+    engine::run_serial(db, &logical(&PlanParams::default()).expect("default q3 plan"))
 }
 
 /// Row-at-a-time oracle.
@@ -95,7 +87,7 @@ pub fn naive(db: &TpchDb) -> Vec<Row> {
     let cust = &db.customer;
     let mut building: HashSet<i64> = HashSet::new();
     for i in 0..cust.len() {
-        if cust.col("c_mktsegment").str_at(i) == "BUILDING" {
+        if cust.col("c_mktsegment").str_at(i) == SEGMENT {
             building.insert(cust.col("c_custkey").as_i64()[i]);
         }
     }
@@ -119,7 +111,7 @@ pub fn naive(db: &TpchDb) -> Vec<Row> {
         }
     }
     let mut items: Vec<(i64, f64)> = revenue.into_iter().collect();
-    top_k_desc(&mut items, 10);
+    top_k_desc(&mut items, TOP as usize);
     items
         .into_iter()
         .map(|(k, r)| vec![Value::Int(k), Value::Float(r), Value::Int(valid_orders[&k] as i64)])
@@ -154,6 +146,16 @@ mod tests {
         for w in revs.windows(2) {
             assert!(w[0] >= w[1]);
         }
+    }
+
+    #[test]
+    fn segment_and_top_params() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 19));
+        let mut bag = PlanParams::new();
+        bag.set("top", "3");
+        bag.set("segment", "MACHINERY");
+        let out = engine::run_serial(&db, &logical(&bag).unwrap());
+        assert!(out.rows.len() <= 3);
     }
 
     #[test]

@@ -2,15 +2,18 @@
 //! where the customer and supplier share the nation.
 //!
 //! Five-way join (region→nation→customer→orders→lineitem→supplier); the
-//! co-nationality constraint makes it the join-heaviest query in the set.
+//! co-nationality constraint — expressed in the IR as a post-join
+//! payload equality — makes it the join-heaviest query in the set.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{
-    self, BatchEval, Compiled, EvalBatch, HashJoinTable, PlanSpec, Predicate, Sel,
+use crate::analytics::engine::plan::{
+    cmp, i32_in, i32_range, kpay, vpay, vrevenue, CmpOp, FinalizeSpec, GroupsHint, JoinStep,
+    KeyCols, LinkRef, LogicalPlan, OutCol, Payload, PredExpr, SortDir, TableRef,
 };
-use crate::analytics::ops::{all_rows, filter_i32_range, ExecStats};
+use crate::analytics::engine::{self, PlanParams};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::{TpchDb, NATIONS, REGIONS};
+use crate::error::Result;
 
 const REGION: &str = "ASIA";
 
@@ -18,110 +21,90 @@ fn window() -> (i32, i32) {
     (date_to_days(1994, 1, 1), date_to_days(1995, 1, 1))
 }
 
-/// Nation keys belonging to the target region.
-fn region_nations() -> Vec<i64> {
-    let region_idx = REGIONS.iter().position(|r| *r == REGION).unwrap() as u32;
-    NATIONS
+/// Nation keys belonging to `region`.
+fn region_nations(region: &str) -> Result<Vec<i32>> {
+    let idx = REGIONS
+        .iter()
+        .position(|r| *r == region)
+        .ok_or_else(|| crate::err!("unknown region {region:?}"))?
+        as u32;
+    Ok(NATIONS
         .iter()
         .enumerate()
-        .filter(|(_, (_, r))| *r == region_idx)
-        .map(|(i, _)| i as i64)
-        .collect()
+        .filter(|(_, (_, r))| *r == idx)
+        .map(|(i, _)| i as i32)
+        .collect())
 }
 
-/// The one Q5 plan: customer/order/supplier hash tables built once at
-/// compile time; the kernel probes both sides per lineitem and sums
-/// revenue per nation where customer and supplier nations agree.
-pub(crate) fn plan_spec() -> PlanSpec {
-    PlanSpec { name: "q5", width: 1, compile, finalize }
-}
-
-fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
-    let mut stats = ExecStats::default();
+/// The one Q5 IR constructor: customers of the region carry their
+/// nation; orders in the window link into them (FromLink flows the
+/// nation through); suppliers carry theirs; a post-join equality keeps
+/// co-national rows and revenue groups by that nation. Parameter keys:
+/// `region`, `date-lo`, `date-hi`.
+pub fn logical(p: &PlanParams) -> Result<LogicalPlan> {
+    let region = p.get_str("region", REGION)?;
     let (lo_d, hi_d) = window();
-    let asia = region_nations();
-    let in_asia = |nk: i64| asia.contains(&nk);
-
-    // customer nation lookup (custkey → nationkey) for ASIA customers.
-    let cust = &db.customer;
-    let ckeys = cust.col("c_custkey").as_i64();
-    let cnat = cust.col("c_nationkey").as_i32();
-    stats.scan(cust.len(), 12);
-    let cust_sel: Vec<u32> = all_rows(cust.len())
-        .into_iter()
-        .filter(|&i| in_asia(cnat[i as usize] as i64))
-        .collect();
-    let cust_map = HashJoinTable::build_dim(ckeys, &cust_sel, &mut stats);
-
-    // orders in window with ASIA customers; record order row → nation.
-    let orders = &db.orders;
-    let odate = orders.col("o_orderdate").as_i32();
-    let ocust = orders.col("o_custkey").as_i64();
-    let okeys = orders.col("o_orderkey").as_i64();
-    stats.scan(orders.len(), 4);
-    let ord_sel = filter_i32_range(&all_rows(orders.len()), odate, lo_d, hi_d);
-    stats.scan(ord_sel.len(), 16);
-    let mut ord_rows: Vec<u32> = Vec::new();
-    let mut orow_nation = vec![-1i32; orders.len()];
-    for &o in &ord_sel {
-        if let Some(crow) = cust_map.probe_first(ocust[o as usize]) {
-            ord_rows.push(o);
-            orow_nation[o as usize] = cnat[crow as usize];
-        }
-    }
-    let ord_map = HashJoinTable::build_dim(okeys, &ord_rows, &mut stats);
-
-    // supplier nation lookup.
-    let sup = &db.supplier;
-    let skeys = sup.col("s_suppkey").as_i64();
-    let snat = sup.col("s_nationkey").as_i32();
-    stats.scan(sup.len(), 12);
-    let sup_map = HashJoinTable::build_dim(skeys, &all_rows(sup.len()), &mut stats);
-
-    // lineitem probe.
-    let li = &db.lineitem;
-    let lok = li.col("l_orderkey").as_i64();
-    let lsk = li.col("l_suppkey").as_i64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
-        rows.for_each(|i| {
-            let Some(orow) = ord_map.probe_first(lok[i]) else { return };
-            let c_nat = orow_nation[orow as usize];
-            let Some(srow) = sup_map.probe_first(lsk[i]) else { return };
-            if snat[srow as usize] != c_nat {
-                return;
-            }
-            out.keys.push(c_nat as i64);
-            out.cols[0].push(price[i] * (1.0 - disc[i]));
-        });
-    });
-    (Compiled { pred: Predicate::True, payload_bytes: 8 * 4, eval, groups_hint: 32 }, stats)
-}
-
-fn finalize(_db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
-    let mut rows: Vec<Row> = (0..p.len())
-        .map(|i| {
-            vec![
-                Value::Str(NATIONS[p.keys[i] as usize].0.to_string()),
-                Value::Float(p.acc(i)[0]),
-            ]
-        })
-        .collect();
-    rows.sort_by(|a, b| b[1].as_f64().partial_cmp(&a[1].as_f64()).unwrap());
-    rows
+    let lo_d = p.get_date("date-lo", lo_d)?;
+    let hi_d = p.get_date("date-hi", hi_d)?;
+    let nations = region_nations(&region)?;
+    Ok(LogicalPlan {
+        name: "q5".into(),
+        scan: TableRef::Lineitem,
+        pred: PredExpr::True,
+        joins: vec![
+            JoinStep {
+                table: TableRef::Customer,
+                dense: false,
+                build_key: Some(KeyCols::Col("c_custkey".into())),
+                probe_key: None,
+                filter: i32_in("c_nationkey", nations),
+                link: None,
+                payloads: vec![Payload::Col("c_nationkey".into())],
+            },
+            JoinStep {
+                table: TableRef::Orders,
+                dense: false,
+                build_key: Some(KeyCols::Col("o_orderkey".into())),
+                probe_key: Some(KeyCols::Col("l_orderkey".into())),
+                filter: i32_range("o_orderdate", lo_d, hi_d),
+                link: Some(LinkRef { step: 0, via: "o_custkey".into() }),
+                payloads: vec![Payload::FromLink(0)],
+            },
+            JoinStep {
+                table: TableRef::Supplier,
+                dense: false,
+                build_key: Some(KeyCols::Col("s_suppkey".into())),
+                probe_key: Some(KeyCols::Col("l_suppkey".into())),
+                filter: PredExpr::True,
+                link: None,
+                payloads: vec![Payload::Col("s_nationkey".into())],
+            },
+        ],
+        // Customer nation == supplier nation.
+        cmps: vec![cmp(vpay(1, 0), CmpOp::Eq, vpay(2, 0))],
+        key: kpay(1, 0),
+        slots: vec![vrevenue()],
+        groups_hint: GroupsHint::Const(32),
+        finalize: FinalizeSpec {
+            scalar: false,
+            columns: vec![OutCol::KeyNation { shift: 0, bits: 0 }, OutCol::Acc(0)],
+            having_gt: None,
+            sort: vec![(1, SortDir::Desc)],
+            limit: 0,
+        },
+    })
 }
 
 /// Single-threaded reference execution (engine-driven).
 pub fn run(db: &TpchDb) -> QueryOutput {
-    engine::run_serial(db, &plan_spec())
+    engine::run_serial(db, &logical(&PlanParams::default()).expect("default q5 plan"))
 }
 
 /// Row-at-a-time oracle.
 pub fn naive(db: &TpchDb) -> Vec<Row> {
     use std::collections::HashMap;
     let (lo, hi) = window();
-    let asia = region_nations();
+    let asia: Vec<i64> = region_nations(REGION).unwrap().iter().map(|&n| n as i64).collect();
     let cust = &db.customer;
     let mut cust_nat: HashMap<i64, i64> = HashMap::new();
     for i in 0..cust.len() {
@@ -187,7 +170,8 @@ mod tests {
     fn only_asia_nations_appear() {
         let db = TpchDb::generate(TpchConfig::new(0.004, 29));
         let out = run(&db);
-        let asia_names: Vec<&str> = region_nations()
+        let asia_names: Vec<&str> = region_nations(REGION)
+            .unwrap()
             .iter()
             .map(|&nk| NATIONS[nk as usize].0)
             .collect();
@@ -198,6 +182,28 @@ mod tests {
             }
         }
         assert!(out.rows.len() <= asia_names.len());
+    }
+
+    #[test]
+    fn region_param_switches_the_build() {
+        let db = TpchDb::generate(TpchConfig::new(0.004, 29));
+        let mut bag = PlanParams::new();
+        bag.set("region", "EUROPE");
+        let out = engine::run_serial(&db, &logical(&bag).unwrap());
+        let europe: Vec<&str> = region_nations("EUROPE")
+            .unwrap()
+            .iter()
+            .map(|&nk| NATIONS[nk as usize].0)
+            .collect();
+        for r in &out.rows {
+            match &r[0] {
+                Value::Str(n) => assert!(europe.contains(&n.as_str()), "{n} not in EUROPE"),
+                _ => panic!(),
+            }
+        }
+        let mut bad = PlanParams::new();
+        bad.set("region", "ATLANTIS");
+        assert!(logical(&bad).is_err());
     }
 
     #[test]

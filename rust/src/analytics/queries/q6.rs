@@ -11,10 +11,14 @@
 //! `python/compile/kernels/q6_scan.py` and `runtime::q6`.
 
 use crate::analytics::column::date_to_days;
-use crate::analytics::engine::{self, BatchEval, Compiled, EvalBatch, PlanSpec, Predicate, Sel};
-use crate::analytics::ops::ExecStats;
+use crate::analytics::engine::plan::{
+    f64_lt, f64_range, i32_range, kconst, pand, vcol, vmul, FinalizeSpec, GroupsHint,
+    LogicalPlan, OutCol, TableRef,
+};
+use crate::analytics::engine::{self, PlanParams};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::TpchDb;
+use crate::error::Result;
 
 pub struct Q6Params {
     pub date_lo: i32,
@@ -38,55 +42,56 @@ impl Default for Q6Params {
     }
 }
 
-/// Aggregate slots per group — shared by `plan_spec` and `run_params`
-/// so the two entry points cannot drift.
-const WIDTH: usize = 1;
-
-/// The one Q6 plan: a three-conjunct predicate cascade and a single
-/// revenue accumulator; finalize reads the one merged slot.
-pub(crate) fn plan_spec() -> PlanSpec {
-    PlanSpec { name: "q6", width: WIDTH, compile, finalize }
+/// The one Q6 IR constructor. Parameter keys: `date-lo`/`date-hi`
+/// (shipdate window), `disc-lo`/`disc-hi` (discount band), `qty-lt`
+/// (quantity cap).
+pub fn logical(p: &PlanParams) -> Result<LogicalPlan> {
+    let d = Q6Params::default();
+    Ok(logical_params(&Q6Params {
+        date_lo: p.get_date("date-lo", d.date_lo)?,
+        date_hi: p.get_date("date-hi", d.date_hi)?,
+        disc_lo: p.get_f64("disc-lo", d.disc_lo)?,
+        disc_hi: p.get_f64("disc-hi", d.disc_hi)?,
+        qty_lt: p.get_f64("qty-lt", d.qty_lt)?,
+    }))
 }
 
-fn compile(db: &TpchDb) -> (Compiled<'_>, ExecStats) {
-    compile_params(db, &Q6Params::default())
-}
-
-fn compile_params<'a>(db: &'a TpchDb, p: &Q6Params) -> (Compiled<'a>, ExecStats) {
-    let li = &db.lineitem;
-    let ship = li.col("l_shipdate").as_i32();
-    let disc = li.col("l_discount").as_f64();
-    let qty = li.col("l_quantity").as_f64();
-    let price = li.col("l_extendedprice").as_f64();
-    let pred = Predicate::and(vec![
-        Predicate::i32_range(ship, p.date_lo, p.date_hi),
-        Predicate::f64_range(disc, p.disc_lo, p.disc_hi),
-        Predicate::f64_lt(qty, p.qty_lt),
-    ]);
-    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
-        rows.for_each(|i| {
-            out.keys.push(0);
-            out.cols[0].push(price[i] * disc[i]);
-        });
-    });
-    (Compiled { pred, payload_bytes: 8, eval, groups_hint: 1 }, ExecStats::default())
-}
-
-fn finalize(_db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
-    let rev = if p.is_empty() { 0.0 } else { p.acc(0)[0] };
-    vec![vec![Value::Float(rev)]]
+/// The Q6 plan for explicit parameters: a three-conjunct predicate
+/// cascade and a single `price · discount` accumulator; finalize reads
+/// the one merged slot (scalar — an empty window reports 0 revenue).
+pub fn logical_params(p: &Q6Params) -> LogicalPlan {
+    LogicalPlan {
+        name: "q6".into(),
+        scan: TableRef::Lineitem,
+        pred: pand(vec![
+            i32_range("l_shipdate", p.date_lo, p.date_hi),
+            f64_range("l_discount", p.disc_lo, p.disc_hi),
+            f64_lt("l_quantity", p.qty_lt),
+        ]),
+        joins: vec![],
+        cmps: vec![],
+        key: kconst(0),
+        slots: vec![vmul(vcol("l_extendedprice"), vcol("l_discount"))],
+        groups_hint: GroupsHint::Const(1),
+        finalize: FinalizeSpec {
+            scalar: true,
+            columns: vec![OutCol::Acc(0)],
+            having_gt: None,
+            sort: vec![],
+            limit: 0,
+        },
+    }
 }
 
 /// Single-threaded reference execution (engine-driven).
 pub fn run(db: &TpchDb) -> QueryOutput {
-    engine::run_serial(db, &plan_spec())
+    engine::run_serial(db, &logical(&PlanParams::default()).expect("default q6 plan"))
 }
 
 /// Run with explicit parameters (used by the PJRT-offload comparisons
 /// and the parameter-sweep tests) — same engine kernel, custom window.
 pub fn run_params(db: &TpchDb, p: &Q6Params) -> QueryOutput {
-    let (c, prep) = compile_params(db, p);
-    engine::run_serial_compiled(db, WIDTH, &c, prep, finalize)
+    engine::run_serial(db, &logical_params(p))
 }
 
 /// Row-at-a-time oracle.
@@ -156,6 +161,27 @@ mod tests {
         let p = Q6Params { date_lo: 0, date_hi: 1, ..Default::default() };
         let out = run_params(&db, &p);
         assert_eq!(out.rows[0][0].as_f64(), 0.0);
+    }
+
+    #[test]
+    fn params_flow_through_the_ir() {
+        // `--param` overrides must produce the same plan as the typed
+        // Q6Params form — the CLI path and the library path agree.
+        let db = TpchDb::generate(TpchConfig::new(0.002, 13));
+        let mut bag = PlanParams::new();
+        bag.set("date-lo", "1995-01-01");
+        bag.set("date-hi", "1996-01-01");
+        bag.set("qty-lt", "30");
+        let from_bag = logical(&bag).unwrap();
+        let typed = logical_params(&Q6Params {
+            date_lo: date_to_days(1995, 1, 1),
+            date_hi: date_to_days(1996, 1, 1),
+            qty_lt: 30.0,
+            ..Q6Params::default()
+        });
+        assert_eq!(from_bag, typed);
+        let out = engine::run_serial(&db, &from_bag);
+        assert!(out.rows[0][0].as_f64() > 0.0);
     }
 
     #[test]

@@ -2,120 +2,112 @@
 //! parts whose name contains a color word.
 //!
 //! The widest join tree we implement (part ⋈ partsupp ⋈ lineitem ⋈
-//! supplier ⋈ orders) with a composite-key lookup into partsupp and a
-//! substring filter on part names.
+//! supplier ⋈ orders) — in the IR: a part semi-join, a packed-composite
+//! partsupp probe, a supplier payload, and a dense orders step whose
+//! date payload feeds a `Year` group-key expression.
 
 use crate::analytics::column::days_to_date;
-use crate::analytics::engine::{
-    self, BatchEval, Compiled, EvalBatch, HashJoinTable, PlanSpec, Predicate, Sel,
+use crate::analytics::engine::plan::{
+    kpack, kpay, kyear, str_contains, vcol, vmul, vpay, vrevenue, vsub, FinalizeSpec,
+    GroupsHint, JoinStep, KeyCols, LogicalPlan, OutCol, Payload, PredExpr, SortDir, TableRef,
 };
-use crate::analytics::ops::{all_rows, ExecStats};
+use crate::analytics::engine::{self, PlanParams};
 use crate::analytics::queries::{QueryOutput, Row, Value};
 use crate::analytics::tpch::{TpchDb, NATIONS};
+use crate::error::Result;
 
 const COLOR: &str = "green";
 
-/// Composite (partkey, suppkey) → i64 key. Safe while suppkey < 2^21.
+/// Bits of the composite (partkey, suppkey) key reserved for suppkey.
+/// Safe while suppkey < 2^21 (asserted at generated scale in tests).
+const PS_SHIFT: u8 = 21;
+
+/// Composite (partkey, suppkey) → i64 key, mirroring the IR's
+/// `KeyCols::Packed { shift: PS_SHIFT }` (oracle-side).
 #[inline]
 fn ps_key(partkey: i64, suppkey: i64) -> i64 {
-    (partkey << 21) | suppkey
+    (partkey << PS_SHIFT) | suppkey
 }
 
-/// The one Q9 plan: part/partsupp/supplier hash tables built once at
-/// compile time; the kernel runs the full probe chain per lineitem and
-/// sums profit per (nation, year).
-pub(crate) fn plan_spec() -> PlanSpec {
-    PlanSpec { name: "q9", width: 1, compile, finalize }
-}
-
-fn compile<'a>(db: &'a TpchDb) -> (Compiled<'a>, ExecStats) {
-    let mut stats = ExecStats::default();
-
-    // parts with COLOR in the name.
-    let part = &db.part;
-    let (dict, codes) = part.col("p_name").as_str_codes();
-    stats.scan(part.len(), 4);
-    let color_code: Vec<bool> = dict.iter().map(|s| s.contains(COLOR)).collect();
-    let pkeys = part.col("p_partkey").as_i64();
-    let part_sel: Vec<u32> = all_rows(part.len())
-        .into_iter()
-        .filter(|&i| color_code[codes[i as usize] as usize])
-        .collect();
-    let part_map = HashJoinTable::build_dim(pkeys, &part_sel, &mut stats);
-
-    // partsupp composite index → supplycost.
-    let ps = &db.partsupp;
-    let ps_pk = ps.col("ps_partkey").as_i64();
-    let ps_sk = ps.col("ps_suppkey").as_i64();
-    let ps_cost = ps.col("ps_supplycost").as_f64();
-    stats.scan(ps.len(), 24);
-    let ps_keys: Vec<i64> = (0..ps.len()).map(|i| ps_key(ps_pk[i], ps_sk[i])).collect();
-    let ps_map = HashJoinTable::build_dim(&ps_keys, &all_rows(ps.len()), &mut stats);
-
-    // supplier → nation.
-    let sup = &db.supplier;
-    let skeys = sup.col("s_suppkey").as_i64();
-    let snat = sup.col("s_nationkey").as_i32();
-    stats.scan(sup.len(), 12);
-    let sup_map = HashJoinTable::build_dim(skeys, &all_rows(sup.len()), &mut stats);
-
-    // orders → year (dense array: orderkey is 1..=N).
-    let odate = db.orders.col("o_orderdate").as_i32();
-    stats.scan(db.orders.len(), 4);
-
-    // lineitem probe chain.
-    let li = &db.lineitem;
-    let lok = li.col("l_orderkey").as_i64();
-    let lpk = li.col("l_partkey").as_i64();
-    let lsk = li.col("l_suppkey").as_i64();
-    let qty = li.col("l_quantity").as_f64();
-    let price = li.col("l_extendedprice").as_f64();
-    let disc = li.col("l_discount").as_f64();
-    let eval: BatchEval<'a> = Box::new(move |rows: Sel<'_>, out: &mut EvalBatch| {
-        rows.for_each(|i| {
-            if part_map.probe_first(lpk[i]).is_none() {
-                return;
-            }
-            let Some(ps_row) = ps_map.probe_first(ps_key(lpk[i], lsk[i])) else { return };
-            let Some(srow) = sup_map.probe_first(lsk[i]) else { return };
-            let nation = snat[srow as usize] as i64;
-            let (year, _, _) = days_to_date(odate[(lok[i] - 1) as usize]);
-            let profit = price[i] * (1.0 - disc[i]) - ps_cost[ps_row as usize] * qty[i];
-            out.keys.push((nation << 16) | year as i64);
-            out.cols[0].push(profit);
-        });
-    });
-    (Compiled { pred: Predicate::True, payload_bytes: 8 * 6, eval, groups_hint: 256 }, stats)
-}
-
-fn finalize(_db: &TpchDb, p: &engine::Partial) -> Vec<Row> {
-    let mut rows: Vec<Row> = (0..p.len())
-        .map(|i| {
-            let key = p.keys[i];
-            vec![
-                Value::Str(NATIONS[(key >> 16) as usize].0.to_string()),
-                Value::Int(key & 0xffff),
-                Value::Float(p.acc(i)[0]),
-            ]
-        })
-        .collect();
-    rows.sort_by(|a, b| {
-        let na = match &a[0] {
-            Value::Str(s) => s.clone(),
-            _ => unreachable!(),
-        };
-        let nb = match &b[0] {
-            Value::Str(s) => s.clone(),
-            _ => unreachable!(),
-        };
-        na.cmp(&nb).then(b[1].as_f64().partial_cmp(&a[1].as_f64()).unwrap())
-    });
-    rows
+/// The one Q9 IR constructor. Parameter key: `color` (part-name
+/// substring).
+pub fn logical(p: &PlanParams) -> Result<LogicalPlan> {
+    let color = p.get_str("color", COLOR)?;
+    Ok(LogicalPlan {
+        name: "q9".into(),
+        scan: TableRef::Lineitem,
+        pred: PredExpr::True,
+        joins: vec![
+            // Parts with the color word: existence-only semi-join.
+            JoinStep {
+                table: TableRef::Part,
+                dense: false,
+                build_key: Some(KeyCols::Col("p_partkey".into())),
+                probe_key: Some(KeyCols::Col("l_partkey".into())),
+                filter: str_contains("p_name", &color),
+                link: None,
+                payloads: vec![],
+            },
+            // Composite partsupp index → supplycost.
+            JoinStep {
+                table: TableRef::Partsupp,
+                dense: false,
+                build_key: Some(KeyCols::Packed {
+                    a: "ps_partkey".into(),
+                    shift: PS_SHIFT,
+                    b: "ps_suppkey".into(),
+                }),
+                probe_key: Some(KeyCols::Packed {
+                    a: "l_partkey".into(),
+                    shift: PS_SHIFT,
+                    b: "l_suppkey".into(),
+                }),
+                filter: PredExpr::True,
+                link: None,
+                payloads: vec![Payload::Col("ps_supplycost".into())],
+            },
+            // Supplier → nation.
+            JoinStep {
+                table: TableRef::Supplier,
+                dense: false,
+                build_key: Some(KeyCols::Col("s_suppkey".into())),
+                probe_key: Some(KeyCols::Col("l_suppkey".into())),
+                filter: PredExpr::True,
+                link: None,
+                payloads: vec![Payload::Col("s_nationkey".into())],
+            },
+            // Orders → order date (dense: orderkey is 1..=N).
+            JoinStep {
+                table: TableRef::Orders,
+                dense: true,
+                build_key: None,
+                probe_key: Some(KeyCols::Col("l_orderkey".into())),
+                filter: PredExpr::True,
+                link: None,
+                payloads: vec![Payload::Col("o_orderdate".into())],
+            },
+        ],
+        cmps: vec![],
+        key: kpack(kpay(2, 0), 16, kyear(kpay(3, 0))),
+        slots: vec![vsub(vrevenue(), vmul(vpay(1, 0), vcol("l_quantity")))],
+        groups_hint: GroupsHint::Const(256),
+        finalize: FinalizeSpec {
+            scalar: false,
+            columns: vec![
+                OutCol::KeyNation { shift: 16, bits: 0 },
+                OutCol::KeyInt { shift: 0, bits: 16 },
+                OutCol::Acc(0),
+            ],
+            having_gt: None,
+            sort: vec![(0, SortDir::Asc), (1, SortDir::Desc)],
+            limit: 0,
+        },
+    })
 }
 
 /// Single-threaded reference execution (engine-driven).
 pub fn run(db: &TpchDb) -> QueryOutput {
-    engine::run_serial(db, &plan_spec())
+    engine::run_serial(db, &logical(&PlanParams::default()).expect("default q9 plan"))
 }
 
 /// Row-at-a-time oracle.
@@ -211,11 +203,26 @@ mod tests {
     }
 
     #[test]
+    fn color_param_changes_the_part_set() {
+        let db = TpchDb::generate(TpchConfig::new(0.002, 41));
+        let mut bag = PlanParams::new();
+        bag.set("color", "azure");
+        let out = engine::run_serial(&db, &logical(&bag).unwrap());
+        // A different color selects a different (non-identical) result.
+        let green = run(&db);
+        let sum = |o: &QueryOutput| -> f64 { o.rows.iter().map(|r| r[2].as_f64()).sum() };
+        assert!(
+            (sum(&out) - sum(&green)).abs() > 1e-9 || out.rows.len() != green.rows.len(),
+            "azure and green selected identical profit sets"
+        );
+    }
+
+    #[test]
     fn composite_key_injective_at_scale() {
         // suppkey < 2^21 must hold for the packing.
         let db = TpchDb::generate(TpchConfig::new(0.002, 43));
         let max_sk = *db.partsupp.col("ps_suppkey").as_i64().iter().max().unwrap();
-        assert!(max_sk < (1 << 21));
+        assert!(max_sk < (1 << PS_SHIFT));
         assert_ne!(ps_key(1, 2), ps_key(2, 1));
     }
 }

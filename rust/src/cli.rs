@@ -1,8 +1,9 @@
 //! Command-line argument parsing (clap is unavailable offline).
 //!
 //! Supports the subset the `lovelock` binary and examples need:
-//! subcommands, `--flag`, `--key value`, `--key=value`, positional
-//! arguments, typed accessors with defaults, and generated `--help` text.
+//! subcommands, `--flag`, `--key value`, `--key=value`, repeatable
+//! options (`--param a=1 --param b=2`), positional arguments, typed
+//! accessors with defaults, and generated `--help` text.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -14,6 +15,8 @@ pub struct OptSpec {
     pub help: &'static str,
     pub default: Option<&'static str>,
     pub is_flag: bool,
+    /// Repeatable: every occurrence is collected (see [`Args::get_all`]).
+    pub is_multi: bool,
 }
 
 /// A parsed command line.
@@ -23,6 +26,7 @@ pub struct Args {
     pub positional: Vec<String>,
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    multi: BTreeMap<String, Vec<String>>,
 }
 
 impl Args {
@@ -55,6 +59,11 @@ impl Args {
     pub fn get_flag(&self, key: &str) -> bool {
         self.flags.get(key).copied().unwrap_or(false)
     }
+
+    /// Every occurrence of a repeatable option, in command-line order.
+    pub fn get_all(&self, key: &str) -> Vec<String> {
+        self.multi.get(key).cloned().unwrap_or_default()
+    }
 }
 
 /// A command parser: knows its options and its subcommands.
@@ -77,13 +86,20 @@ impl Command {
         default: Option<&'static str>,
         help: &'static str,
     ) -> Self {
-        self.opts.push(OptSpec { name, help, default, is_flag: false });
+        self.opts.push(OptSpec { name, help, default, is_flag: false, is_multi: false });
         self
     }
 
     /// Register a boolean `--flag`.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
-        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true, is_multi: false });
+        self
+    }
+
+    /// Register a repeatable `--key value` option: every occurrence is
+    /// collected in order (`Args::get_all`).
+    pub fn multi(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false, is_multi: true });
         self
     }
 
@@ -161,7 +177,11 @@ impl Command {
                                 .ok_or_else(|| format!("--{key} expects a value"))?
                         }
                     };
-                    args.values.insert(key, val);
+                    if spec.is_multi {
+                        args.multi.entry(key).or_default().push(val);
+                    } else {
+                        args.values.insert(key, val);
+                    }
                 }
             } else if args.subcommand.is_none() && !self.subs.is_empty() {
                 if !self.subs.iter().any(|(n, _)| n == t) {
@@ -188,6 +208,7 @@ mod tests {
             .opt("phi", Some("1"), "NIC multiplier")
             .opt("seed", Some("42"), "rng seed")
             .opt("name", None, "a name")
+            .multi("param", "key=value override")
             .flag("verbose", "chatty")
     }
 
@@ -243,6 +264,18 @@ mod tests {
     #[test]
     fn flag_with_value_errors() {
         assert!(cmd().parse(s(&["cost", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn multi_option_collects_in_order() {
+        let a = cmd()
+            .parse(s(&["tpch", "--param", "a=1", "--seed", "7", "--param=b=2"]))
+            .unwrap();
+        assert_eq!(a.get_all("param"), vec!["a=1", "b=2"]);
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.get_all("nothing").is_empty());
+        // A repeatable option still requires a value.
+        assert!(cmd().parse(s(&["tpch", "--param"])).is_err());
     }
 
     #[test]

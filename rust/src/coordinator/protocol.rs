@@ -10,7 +10,7 @@
 //! One query's conversation (see `DESIGN.md §3b` for the state machines):
 //!
 //! ```text
-//! leader → worker  : PlanFragment   announce query, width, morsel size
+//! leader → worker  : PlanFragment   announce query: the encoded LogicalPlan
 //! leader → worker  : ExecuteRange   assign the lineitem row range
 //! worker → worker  : PartialFrame   hash-partitioned partial, partition p
 //!                                   goes to the reducer co-located with
@@ -29,6 +29,7 @@
 //! property-tested in `rust/tests/properties.rs`.
 
 use crate::error::Result;
+use crate::wirefmt::{put_bytes, put_str, put_vec_u32, put_vec_u64, Reader};
 use std::fmt;
 
 /// Method id of [`PlanFragment`] frames.
@@ -58,106 +59,23 @@ impl fmt::Display for QueryId {
     }
 }
 
-// ----------------------------------------------------------- wire reader
-
-/// Little-endian payload reader with bounds-checked accessors.
-struct Reader<'a> {
-    buf: &'a [u8],
-    off: usize,
-}
-
-impl<'a> Reader<'a> {
-    fn new(buf: &'a [u8]) -> Self {
-        Self { buf, off: 0 }
-    }
-
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        crate::ensure!(
-            self.off + n <= self.buf.len(),
-            "truncated frame: need {n} bytes at offset {}, have {}",
-            self.off,
-            self.buf.len() - self.off
-        );
-        let s = &self.buf[self.off..self.off + n];
-        self.off += n;
-        Ok(s)
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into()?))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into()?))
-    }
-
-    fn str(&mut self) -> Result<String> {
-        let len = self.u32()? as usize;
-        let raw = self.take(len)?;
-        String::from_utf8(raw.to_vec()).map_err(crate::error::Error::msg)
-    }
-
-    fn bytes(&mut self) -> Result<Vec<u8>> {
-        let len = self.u32()? as usize;
-        Ok(self.take(len)?.to_vec())
-    }
-
-    fn vec_u64(&mut self) -> Result<Vec<u64>> {
-        let len = self.u32()? as usize;
-        (0..len).map(|_| self.u64()).collect()
-    }
-
-    fn vec_u32(&mut self) -> Result<Vec<u32>> {
-        let len = self.u32()? as usize;
-        (0..len).map(|_| self.u32()).collect()
-    }
-
-    fn finish(self) -> Result<()> {
-        crate::ensure!(
-            self.off == self.buf.len(),
-            "trailing garbage: {} bytes past end of frame",
-            self.buf.len() - self.off
-        );
-        Ok(())
-    }
-}
-
-fn put_str(out: &mut Vec<u8>, s: &str) {
-    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
-    out.extend_from_slice(s.as_bytes());
-}
-
-fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
-    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
-    out.extend_from_slice(b);
-}
-
-fn put_vec_u64(out: &mut Vec<u8>, v: &[u64]) {
-    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
-    for x in v {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
-}
-
-fn put_vec_u32(out: &mut Vec<u8>, v: &[u32]) {
-    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
-    for x in v {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
-}
-
-// ----------------------------------------------------------------- frames
+// ---------------------------------------------------------------- frames
 
 /// Leader → worker: announce a query before any range executes. The
-/// worker stores the fragment and compiles its broadcast context
-/// (dimension hash tables) lazily when the [`ExecuteRange`] arrives.
+/// frame carries the **encoded
+/// [`crate::analytics::engine::LogicalPlan`]** — the computation itself
+/// crosses the fabric; the worker compiles whatever IR arrives and never
+/// consults a query registry. The worker stores the fragment and
+/// compiles its broadcast context (dimension hash tables) lazily when
+/// the [`ExecuteRange`] arrives. `name` is display-only (reports,
+/// traces).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PlanFragment {
     pub query_id: QueryId,
-    /// Query name in [`crate::analytics::queries::QUERY_NAMES`].
-    pub query: String,
-    /// Aggregate accumulator slots per group.
-    pub width: u32,
+    /// Display name of the plan (not an executable reference).
+    pub name: String,
+    /// `LogicalPlan::encode` bytes — the query, as data.
+    pub plan: Vec<u8>,
     /// Worker count `w` — the fan-out of the partition exchange.
     pub workers: u32,
     /// Rows per morsel inside the worker's fold.
@@ -166,7 +84,7 @@ pub struct PlanFragment {
 
 impl PlanFragment {
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(32 + self.query.len());
+        let mut out = Vec::with_capacity(32 + self.name.len() + self.plan.len());
         self.encode_into(&mut out);
         out
     }
@@ -174,8 +92,8 @@ impl PlanFragment {
     /// Append the wire encoding to `out` (the pooled-buffer path).
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.query_id.0.to_le_bytes());
-        put_str(out, &self.query);
-        out.extend_from_slice(&self.width.to_le_bytes());
+        put_str(out, &self.name);
+        put_bytes(out, &self.plan);
         out.extend_from_slice(&self.workers.to_le_bytes());
         out.extend_from_slice(&self.morsel_rows.to_le_bytes());
     }
@@ -184,8 +102,8 @@ impl PlanFragment {
         let mut r = Reader::new(buf);
         let v = Self {
             query_id: QueryId(r.u64()?),
-            query: r.str()?,
-            width: r.u32()?,
+            name: r.str()?,
+            plan: r.bytes()?,
             workers: r.u32()?,
             morsel_rows: r.u64()?,
         };
@@ -457,8 +375,8 @@ mod tests {
     fn plan_fragment_roundtrip() {
         let f = PlanFragment {
             query_id: QueryId(7),
-            query: "q18".into(),
-            width: 2,
+            name: "q18".into(),
+            plan: vec![9, 8, 7, 6],
             workers: 8,
             morsel_rows: 16_384,
         };
@@ -564,8 +482,8 @@ mod tests {
     fn frame_decodes_by_method() {
         let pf = PlanFragment {
             query_id: QueryId(3),
-            query: "q1".into(),
-            width: 5,
+            name: "q1".into(),
+            plan: vec![1, 2, 3],
             workers: 2,
             morsel_rows: 64,
         };

@@ -8,7 +8,11 @@
 //! through the typed frames of [`super::protocol`]; every partial
 //! aggregate that crosses the leader/worker or worker/worker boundary is
 //! a real encoded [`crate::rpc::Message`], and the observed frame bytes
-//! are what the fabric simulator charges.
+//! are what the fabric simulator charges. The *computation itself* is
+//! data too: a [`PlanFragment`] carries an encoded
+//! [`LogicalPlan`] and the worker compiles whatever IR arrives —
+//! [`QueryService::submit_plan`] runs a plan no registry has ever heard
+//! of exactly like a TPC-H classic.
 //!
 //! The API is submit/poll/wait/cancel rather than one blocking call, so
 //! any number of queries interleave over the shared [`Scheduler`],
@@ -49,7 +53,8 @@
 //! storage attach of §5.2, whose read cost is charged by the IO phase of
 //! the simulation). Everything derived from the data crosses as frames.
 
-use crate::analytics::engine::{self, Merger, Partial, TaskScratch};
+use crate::analytics::engine::plan::{self as planir, FinalizeSpec};
+use crate::analytics::engine::{self, LogicalPlan, Merger, Partial, TaskScratch};
 use crate::analytics::morsel::DEFAULT_MORSEL_ROWS;
 use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::Row;
@@ -145,9 +150,11 @@ impl Default for ServiceConfig {
 
 // --------------------------------------------------------------- worker
 
-/// Per-query state a worker holds between PlanFragment and ExecuteRange.
+/// Per-query state a worker holds between PlanFragment and ExecuteRange:
+/// the **decoded logical plan** — computation that arrived over the
+/// fabric, not code baked into the worker.
 struct PlanState {
-    query: String,
+    plan: LogicalPlan,
     morsel_rows: usize,
     workers: usize,
     db: Arc<TpchDb>,
@@ -220,10 +227,19 @@ impl WorkerShared {
                 return;
             }
         };
+        // Decode the wire IR here, at frame-arrival time: a malformed
+        // plan is an error Ack, never a worker panic.
+        let plan = match LogicalPlan::decode(&pf.plan) {
+            Ok(p) => p,
+            Err(e) => {
+                self.ack_error(pf.query_id, format!("{}: bad plan frame: {e}", pf.query_id));
+                return;
+            }
+        };
         self.plans.lock().unwrap().insert(
             pf.query_id,
             PlanState {
-                query: pf.query,
+                plan,
                 morsel_rows: (pf.morsel_rows as usize).max(1),
                 workers: pf.workers as usize,
                 db,
@@ -260,16 +276,19 @@ impl WorkerShared {
     /// bytes, map time, table footprint).
     fn map_fold(&self, plan: &PlanState, qid: QueryId, lo: usize, hi: usize) -> Result<Ack> {
         let t = Instant::now();
-        let spec = engine::spec(&plan.query)
-            .ok_or_else(|| crate::err!("{qid}: query {} has no plan", plan.query))?;
-        let (c, _prep) = (spec.compile)(&plan.db);
-        let mut agg = engine::agg_for(&c, spec.width, hi - lo);
+        // Compile whatever IR arrived — the worker has no query registry
+        // to consult, exactly as a headless NIC receiving its program
+        // over the fabric. A plan the leader invented five seconds ago
+        // runs the same as a TPC-H classic.
+        let (c, _prep) = planir::compile(&plan.db, &plan.plan)?;
+        let width = plan.plan.width();
+        let mut agg = engine::agg_for(&c, width, hi - lo);
         let mut scr = TaskScratch::new();
         let mut stats = ExecStats::default();
         let mut s = lo;
         while s < hi {
             let e = (s + plan.morsel_rows).min(hi);
-            engine::fold_range(&c, spec.width, s, e, &mut agg, &mut scr, &mut stats);
+            engine::fold_range(&c, width, s, e, &mut agg, &mut scr, &mut stats);
             s = e;
         }
         let partial = engine::finish_fold(agg, stats);
@@ -421,7 +440,7 @@ struct AckInfo {
 struct QueryState {
     query: String,
     width: usize,
-    finalize: fn(&TpchDb, &Partial) -> Vec<Row>,
+    finalize: FinalizeSpec,
     /// Dropped at completion so a long-lived service does not pin dbs.
     db: Option<Arc<TpchDb>>,
     phase: Phase,
@@ -632,7 +651,13 @@ impl LeaderShared {
         }
         let merged = merger.into_partial();
         let db = st.db.take().expect("completed twice");
-        let rows: Vec<Row> = (st.finalize)(&db, &merged);
+        let rows: Vec<Row> = match planir::finalize(&db, &st.finalize, &merged) {
+            Ok(rows) => rows,
+            Err(e) => {
+                self.fail(qid, st, format!("finalize: {e}"));
+                return;
+            }
+        };
         self.release(qid, st);
 
         let worker_secs: Vec<f64> = acks
@@ -820,21 +845,37 @@ impl QueryService {
             .collect()
     }
 
-    /// Submit a query: attach the input tables, place the worker tasks
-    /// on cluster nodes, and cast the PlanFragment + ExecuteRange frames.
-    /// Returns immediately — the query runs on the endpoint threads.
+    /// Submit a registered query by name: build its default-parameter
+    /// plan and hand it to [`QueryService::submit_plan`].
     pub fn submit(&self, db: &Arc<TpchDb>, query: &str) -> Result<QueryId> {
         let spec = engine::spec(query)
             .ok_or_else(|| crate::err!("query {query} has no distributed plan"))?;
+        self.submit_plan(db, &spec)
+    }
+
+    /// Submit a logical plan: attach the input tables, place the worker
+    /// tasks on cluster nodes, and cast the PlanFragment (carrying the
+    /// **encoded plan** — workers compile it; no registry is consulted)
+    /// + ExecuteRange frames. Returns immediately — the query runs on
+    /// the endpoint threads. The plan needs no name the service has
+    /// ever heard of: ad-hoc IR runs exactly like the TPC-H set.
+    pub fn submit_plan(&self, db: &Arc<TpchDb>, plan: &LogicalPlan) -> Result<QueryId> {
+        // The encoder narrows collection counts; an out-of-bounds plan
+        // would truncate silently on the wire and decode to a different
+        // (or undecodable) plan on every worker — reject it here, at the
+        // one place plans are put on the fabric.
+        plan.check_wire_bounds()?;
+        let width = plan.width();
         crate::ensure!(self.w >= 1, "cluster has no nodes");
         let qid = QueryId(self.next_query.fetch_add(1, Ordering::SeqCst) + 1);
-        let n = db.lineitem.len();
+        let scan = planir::table(db, plan.scan);
+        let n = scan.len();
         let ranges = Self::ranges(n, self.w);
         let rows_each = ranges.first().map(|(s, e)| e - s).unwrap_or(0);
         let input_bytes_each = if n == 0 {
             0
         } else {
-            (db.lineitem.bytes() as f64 * rows_each as f64 / n as f64) as u64
+            (scan.bytes() as f64 * rows_each as f64 / n as f64) as u64
         };
         // Place the worker tasks up front (estimate: rows at a nominal
         // per-row rate — only relative load matters) so concurrent
@@ -861,9 +902,9 @@ impl QueryService {
         g.insert(
             qid,
             QueryState {
-                query: query.to_string(),
-                width: spec.width,
-                finalize: spec.finalize,
+                query: plan.name.clone(),
+                width,
+                finalize: plan.finalize.clone(),
                 db: Some(Arc::clone(db)),
                 phase: Phase::Mapping,
                 w: self.w,
@@ -884,19 +925,19 @@ impl QueryService {
         // Cast the plan + range to every worker while holding the state
         // lock: acks cannot race past the insert, and the trace stays
         // ordered (casts are non-blocking sends).
+        let frag = PlanFragment {
+            query_id: qid,
+            name: plan.name.clone(),
+            plan: plan.encode(),
+            workers: self.w as u32,
+            morsel_rows: self.morsel_rows as u64,
+        };
         let cast_all = (|| -> Result<()> {
             let st = g.get_mut(&qid).expect("just inserted");
             for (wi, &(lo, hi)) in ranges.iter().enumerate() {
-                let plan = PlanFragment {
-                    query_id: qid,
-                    query: query.to_string(),
-                    width: spec.width as u32,
-                    workers: self.w as u32,
-                    morsel_rows: self.morsel_rows as u64,
-                };
                 st.trace.push(format!("send Plan w{wi}"));
                 st.control_to[wi] += self.worker_clients[wi]
-                    .cast_frame(METHOD_PLAN, |out| plan.encode_into(out))?
+                    .cast_frame(METHOD_PLAN, |out| frag.encode_into(out))?
                     as u64;
                 let ex = ExecuteRange {
                     query_id: qid,
@@ -1301,6 +1342,46 @@ mod tests {
             }
             std::thread::yield_now();
         }
+    }
+
+    #[test]
+    fn adhoc_plan_executes_without_registry() {
+        // The acceptance bar of the plans-as-data redesign: a plan built
+        // at the leader, encoded into the PlanFragment, decoded and
+        // compiled by workers that never consult engine::spec — under a
+        // name the registry has never heard of.
+        let db = db(0.002, 61);
+        let svc = QueryService::new(cluster(3));
+        let mut bag = engine::PlanParams::new();
+        bag.set("date-lo", "1995-06-01");
+        bag.set("date-hi", "1996-06-01");
+        bag.set("qty-lt", "30");
+        let mut plan = crate::analytics::queries::build("q6", &bag).unwrap();
+        plan.name = "adhoc-revenue".into();
+        assert!(engine::spec("adhoc-revenue").is_none(), "name must be unregistered");
+        let id = svc.submit_plan(&db, &plan).unwrap();
+        let (rows, report) = svc.wait(id).unwrap();
+        assert_eq!(report.query, "adhoc-revenue");
+        let serial = engine::try_run_serial(&db, &plan).unwrap();
+        assert!(serial.approx_eq_rows(&rows), "ad-hoc wire plan diverged from serial");
+        assert!(rows[0][0].as_f64() > 0.0, "shifted window should still find revenue");
+    }
+
+    #[test]
+    fn malformed_wire_plan_fails_the_query_not_the_worker() {
+        // A plan referencing a column no table has must come back as a
+        // Failed query (worker acks the compile error); the service
+        // stays usable afterwards.
+        let db = db(0.001, 67);
+        let svc = QueryService::new(cluster(2));
+        let mut plan = engine::spec("q6").unwrap();
+        plan.slots = vec![crate::analytics::engine::plan::vcol("no_such_column")];
+        let id = svc.submit_plan(&db, &plan).unwrap();
+        let err = svc.wait(id).unwrap_err();
+        assert!(err.to_string().contains("no_such_column"), "{err}");
+        let ok = svc.submit(&db, "q1").unwrap();
+        let (rows, _) = svc.wait(ok).unwrap();
+        assert!(queries::run_query(&db, "q1").unwrap().approx_eq_rows(&rows));
     }
 
     // ------------------------------------------- credit-leak regression

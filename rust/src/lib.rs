@@ -28,7 +28,9 @@
 //! pool / parallel loops, in lieu of tokio/rayon), [`cli`] (argument
 //! parsing, in lieu of clap), [`benchkit`] (measurement harness, in lieu
 //! of criterion), [`proptest_mini`] (property testing, in lieu of
-//! proptest), [`configfmt`] (TOML-subset + JSON, in lieu of serde).
+//! proptest), [`configfmt`] (TOML-subset + JSON, in lieu of serde),
+//! [`wirefmt`] (little-endian wire codec primitives shared by the
+//! protocol frames and the serializable logical plans).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -60,5 +62,6 @@ pub mod runtime;
 pub mod simnet;
 pub mod storage;
 pub mod training;
+pub mod wirefmt;
 
 pub use error::{Error, Result};

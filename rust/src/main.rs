@@ -4,8 +4,9 @@
 //! same tables with measurement loops): `lovelock fig3`, `lovelock cost`,
 //! `lovelock train --model tiny --steps 50`, …
 
+use lovelock::analytics::engine::{self, PlanParams};
 use lovelock::analytics::morsel::{run_query_morsel, DEFAULT_MORSEL_ROWS};
-use lovelock::analytics::{profile, run_query, TpchConfig, TpchDb, QUERY_NAMES};
+use lovelock::analytics::{profile, queries, run_query, TpchConfig, TpchDb, QUERY_NAMES};
 use lovelock::bigquery::{self, Breakdown};
 use lovelock::cli::Command;
 use lovelock::cluster::{ClusterSpec, Role};
@@ -42,6 +43,7 @@ fn main() {
         .opt("steps", Some("50"), "training steps")
         .opt("log-every", Some("10"), "loss log interval")
         .opt("query", Some("q1"), "query name for dist")
+        .multi("param", "plan parameter key=value (repeatable; needs an explicit query)")
         .opt("concurrency", Some("1"), "simultaneous queries for dist (submit/poll/wait)")
         .flag("lovelock", "use a Lovelock (E2000) cluster for dist")
         .flag("serial", "run tpch single-threaded instead of morsel-driven")
@@ -72,6 +74,18 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Collect `--param key=value` occurrences into a plan parameter bag.
+fn plan_params(args: &lovelock::cli::Args) -> lovelock::Result<PlanParams> {
+    let mut p = PlanParams::new();
+    for kv in args.get_all("param") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| lovelock::err!("--param expects key=value, got {kv:?}"))?;
+        p.set(k, v);
+    }
+    Ok(p)
 }
 
 fn cmd_table1() -> lovelock::Result<()> {
@@ -224,17 +238,38 @@ fn cmd_tpch(args: &lovelock::cli::Args) -> lovelock::Result<()> {
     let threads = args.get_usize("threads", 0);
     let morsel_rows = args.get_usize("morsel-rows", DEFAULT_MORSEL_ROWS);
     let db = TpchDb::generate(TpchConfig::new(sf, seed));
-    let queries: Vec<String> = if args.positional.is_empty() {
+    let params = plan_params(args)?;
+    // Parameter keys are per-query knobs and unknown keys are rejected
+    // per plan — an all-queries sweep would abort on the first query
+    // that doesn't read them, so require naming the target query.
+    if !params.is_empty() && args.positional.is_empty() {
+        return Err(lovelock::err!(
+            "--param needs an explicit query (e.g. `tpch q6 --param date-lo=1995-01-01`); \
+             each query's keys are documented on its `logical` constructor"
+        ));
+    }
+    let names: Vec<String> = if args.positional.is_empty() {
         QUERY_NAMES.iter().map(|s| s.to_string()).collect()
     } else {
         args.positional.clone()
     };
-    for q in queries {
+    for q in names {
         let t = std::time::Instant::now();
-        let out = if serial {
-            run_query(&db, &q)
+        // --param overrides flow through the query's IR constructor; a
+        // fresh bag per query keeps used-key tracking per plan.
+        let out = if params.is_empty() {
+            if serial {
+                run_query(&db, &q)
+            } else {
+                run_query_morsel(&db, &q, threads, morsel_rows)
+            }
         } else {
-            run_query_morsel(&db, &q, threads, morsel_rows)
+            let plan = queries::build(&q, &params.clone())?;
+            Some(if serial {
+                engine::try_run_serial(&db, &plan)?
+            } else {
+                engine::try_run_parallel(&db, &plan, threads, morsel_rows)?
+            })
         };
         match out {
             Some(out) => println!(
@@ -258,6 +293,9 @@ fn cmd_dist(args: &lovelock::cli::Args) -> lovelock::Result<()> {
     let morsel_rows = args.get_usize("morsel-rows", DEFAULT_MORSEL_ROWS);
     let query = args.get_str("query", "q1");
     let concurrency = args.get_usize("concurrency", 1).max(1);
+    // --param overrides ride the encoded plan: every worker compiles
+    // the parameterized IR the leader casts, never a registry entry.
+    let plan = queries::build(&query, &plan_params(args)?)?;
     let db = Arc::new(TpchDb::generate(TpchConfig::new(sf, seed)));
     let trad = ClusterSpec::traditional(workers, platform::n2d_milan(), Role::LiteCompute);
     let cluster = if args.get_flag("lovelock") {
@@ -275,7 +313,7 @@ fn cmd_dist(args: &lovelock::cli::Args) -> lovelock::Result<()> {
     );
     let t0 = std::time::Instant::now();
     let ids: Vec<_> = (0..concurrency)
-        .map(|_| svc.submit(&db, &query))
+        .map(|_| svc.submit_plan(&db, &plan))
         .collect::<lovelock::Result<_>>()?;
     for id in &ids {
         let (_rows, r) = svc.wait(*id)?;

@@ -1,0 +1,197 @@
+//! Little-endian wire-format primitives shared by every codec in the
+//! repo: the protocol frames ([`crate::coordinator::protocol`]) and the
+//! serializable logical plans ([`crate::analytics::engine::plan`]).
+//!
+//! Every codec built on this module is an **exact inverse**: `encode`
+//! then `decode` is the identity, decode rejects truncated input at the
+//! field that runs short, and [`Reader::finish`] rejects trailing
+//! garbage. Integers are little-endian; strings and byte blobs are
+//! length-prefixed with a `u32`.
+
+use crate::error::Result;
+
+/// Bounds-checked little-endian payload reader.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, off: 0 }
+    }
+
+    /// Take the next `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        crate::ensure!(
+            n <= self.buf.len() - self.off,
+            "truncated frame: need {n} bytes at offset {}, have {}",
+            self.off,
+            self.buf.len() - self.off
+        );
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into()?))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into()?))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into()?))
+    }
+
+    /// `u32` length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec()).map_err(crate::error::Error::msg)
+    }
+
+    /// `u32` length-prefixed byte blob.
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let len = self.u32()? as usize;
+        Ok(self.take(len)?.to_vec())
+    }
+
+    /// `u32` count-prefixed vector of `u64`.
+    pub fn vec_u64(&mut self) -> Result<Vec<u64>> {
+        let len = self.u32()? as usize;
+        (0..len).map(|_| self.u64()).collect()
+    }
+
+    /// `u32` count-prefixed vector of `u32`.
+    pub fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let len = self.u32()? as usize;
+        (0..len).map(|_| self.u32()).collect()
+    }
+
+    /// Reject trailing garbage: every byte must have been consumed.
+    pub fn finish(self) -> Result<()> {
+        crate::ensure!(
+            self.off == self.buf.len(),
+            "trailing garbage: {} bytes past end of frame",
+            self.buf.len() - self.off
+        );
+        Ok(())
+    }
+}
+
+/// Append a `u32` length-prefixed UTF-8 string.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append a `u32` length-prefixed byte blob.
+pub fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+/// Append a `u32` count-prefixed vector of `u64`.
+pub fn put_vec_u64(out: &mut Vec<u8>, v: &[u64]) {
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append a `u32` count-prefixed vector of `u32`.
+pub fn put_vec_u32(out: &mut Vec<u8>, v: &[u32]) {
+    out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrips() {
+        let mut out = Vec::new();
+        out.push(7u8);
+        out.extend_from_slice(&0xBEEFu16.to_le_bytes());
+        out.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        out.extend_from_slice(&u64::MAX.to_le_bytes());
+        out.extend_from_slice(&(-5i32).to_le_bytes());
+        out.extend_from_slice(&i64::MIN.to_le_bytes());
+        out.extend_from_slice(&1.5f64.to_le_bytes());
+        let mut r = Reader::new(&out);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.i32().unwrap(), -5);
+        assert_eq!(r.i64().unwrap(), i64::MIN);
+        assert_eq!(r.f64().unwrap(), 1.5);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn string_bytes_and_vecs_roundtrip() {
+        let mut out = Vec::new();
+        put_str(&mut out, "hello");
+        put_bytes(&mut out, &[1, 2, 3]);
+        put_vec_u64(&mut out, &[9, 10]);
+        put_vec_u32(&mut out, &[7]);
+        let mut r = Reader::new(&out);
+        assert_eq!(r.str().unwrap(), "hello");
+        assert_eq!(r.bytes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.vec_u64().unwrap(), vec![9, 10]);
+        assert_eq!(r.vec_u32().unwrap(), vec![7]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_trailing_garbage_rejected() {
+        let mut out = Vec::new();
+        put_str(&mut out, "abc");
+        assert!(Reader::new(&out[..out.len() - 1]).str().is_err());
+        let mut r = Reader::new(&out);
+        r.str().unwrap();
+        // finish on fully-consumed input passes; an extra byte fails.
+        let mut padded = out.clone();
+        padded.push(0);
+        let mut r2 = Reader::new(&padded);
+        r2.str().unwrap();
+        assert!(r2.finish().is_err());
+        r.finish().unwrap();
+        // A length prefix larger than the buffer is a truncation error,
+        // not a huge allocation.
+        let bad = u32::MAX.to_le_bytes().to_vec();
+        assert!(Reader::new(&bad).bytes().is_err());
+        assert!(Reader::new(&bad).vec_u64().is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_rejected() {
+        let mut out = Vec::new();
+        out.extend_from_slice(&2u32.to_le_bytes());
+        out.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(Reader::new(&out).str().is_err());
+    }
+}

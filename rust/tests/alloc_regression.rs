@@ -8,7 +8,10 @@
 //! This is the property that lets wimpy smart-NIC cores spend their
 //! cycles on column data instead of the allocator — and it is exactly
 //! what a stray `Vec::new()` in a kernel would silently regress, so CI
-//! runs this file in quick mode too (see `ci.sh`).
+//! runs this file in quick mode too (see `ci.sh`). The evaluators under
+//! test are the ones [`lovelock::analytics::engine::plan::compile`]
+//! generates from the serializable IR — the zero-allocation contract
+//! holds for *plans as data*, not just hand-written closures.
 //!
 //! This file deliberately contains a single `#[test]`: the counting
 //! allocator is process-wide, and a sibling test allocating concurrently
@@ -53,20 +56,21 @@ fn steady_state_fold_allocates_nothing_per_morsel() {
     // q6: selective three-conjunct predicate cascade, single group.
     // q1: near-full scan, 5 accumulator columns, 4 groups.
     for q in ["q6", "q1"] {
-        let spec = engine::spec(q).unwrap();
-        let (c, _prep) = (spec.compile)(&db);
-        let mut agg = engine::agg_for(&c, spec.width, n);
+        let plan = engine::spec(q).unwrap();
+        let (c, _prep) = engine::plan::compile(&db, &plan).unwrap();
+        let width = plan.width();
+        let mut agg = engine::agg_for(&c, width, n);
         let mut scr = TaskScratch::new();
 
         // Warm-up pass: sizes every scratch buffer to its high-water
         // mark and discovers every group this data set produces.
-        let warm = fold_all(&c, spec.width, n, &mut agg, &mut scr);
+        let warm = fold_all(&c, width, n, &mut agg, &mut scr);
         assert!(warm.rows_in > 0, "{q}: warm-up folded nothing");
 
         // Measured pass over the same rows: the same morsels, the same
         // groups — by the zero-allocation contract, not one allocation.
         let before = CountingAlloc::allocations();
-        let stats = fold_all(&c, spec.width, n, &mut agg, &mut scr);
+        let stats = fold_all(&c, width, n, &mut agg, &mut scr);
         let allocs = CountingAlloc::allocations() - before;
         let morsels = n.div_ceil(MORSEL_ROWS);
         assert_eq!(

@@ -3,6 +3,7 @@
 //! §5.2 argument inside the repo (not just the Fig. 4 arithmetic), plus
 //! the message-native `QueryService` session API under concurrency.
 
+use lovelock::analytics::engine::{self, LogicalPlan, PlanParams};
 use lovelock::analytics::{queries, TpchConfig, TpchDb};
 use lovelock::bigquery::{project, Breakdown};
 use lovelock::cluster::{ClusterSpec, Role};
@@ -108,6 +109,61 @@ fn service_reuse_across_batches_is_deterministic() {
         assert!(serial.approx_eq_rows(&rows));
         assert_eq!(rows.len(), first.len());
         svc.wait(noise).unwrap();
+    }
+}
+
+#[test]
+fn parameterized_ir_plans_match_serial_across_the_wire() {
+    // The acceptance bar of the plans-as-data redesign, parameterized:
+    // a LogicalPlan built at the leader with NON-default parameters,
+    // encoded into the PlanFragment, decoded and compiled by workers
+    // that never consult the registry, produces rows equal (within
+    // approx_eq_rows) to the serial run of the same plan — for every
+    // parameterized query.
+    let db = db();
+    let svc = QueryService::new(traditional(3));
+    let overrides: &[(&str, &[(&str, &str)])] = &[
+        ("q1", &[("cutoff", "1995-06-01")]),
+        ("q3", &[("segment", "MACHINERY"), ("top", "5")]),
+        ("q5", &[("region", "EUROPE"), ("date-lo", "1995-01-01"), ("date-hi", "1996-01-01")]),
+        ("q6", &[("date-lo", "1995-01-01"), ("date-hi", "1996-01-01"), ("qty-lt", "30")]),
+        ("q9", &[("color", "azure")]),
+        ("q12", &[("modes", "AIR,RAIL")]),
+        ("q14", &[("date-lo", "1994-03-01"), ("date-hi", "1994-04-01")]),
+        ("q18", &[("qty-threshold", "250"), ("top", "50")]),
+        ("q19", &[("modes", "AIR,REG AIR,TRUCK")]),
+    ];
+    assert_eq!(overrides.len(), lovelock::analytics::QUERY_NAMES.len());
+    for (q, kvs) in overrides {
+        let mut bag = PlanParams::new();
+        for (k, v) in *kvs {
+            bag.set(k, v);
+        }
+        let plan = queries::build(q, &bag).unwrap();
+        let serial = engine::try_run_serial(&db, &plan).unwrap();
+        let id = svc.submit_plan(&db, &plan).unwrap();
+        let (rows, _) = svc.wait(id).unwrap();
+        assert!(serial.approx_eq_rows(&rows), "{q}: parameterized wire plan diverged");
+    }
+}
+
+#[test]
+fn default_ir_plans_cross_path_equal() {
+    // serial == morsel == distributed, all three driven from the same
+    // encode→decode'd IR (the bytes that cross the fabric), for every
+    // registered query.
+    let db = db();
+    let svc = QueryService::new(traditional(4));
+    for q in lovelock::analytics::QUERY_NAMES {
+        let plan = engine::spec(q).unwrap();
+        let wire = LogicalPlan::decode(&plan.encode()).unwrap();
+        assert_eq!(wire, plan, "{q}: codec not an exact inverse");
+        let serial = engine::try_run_serial(&db, &wire).unwrap();
+        let morsel = engine::try_run_parallel(&db, &wire, 4, 8192).unwrap();
+        assert!(morsel.approx_eq_rows(&serial.rows), "{q}: morsel-from-IR diverged");
+        let id = svc.submit_plan(&db, &wire).unwrap();
+        let (rows, _) = svc.wait(id).unwrap();
+        assert!(serial.approx_eq_rows(&rows), "{q}: dist-from-IR diverged");
     }
 }
 

@@ -1,0 +1,52 @@
+//! Golden wire-format fixture: pins the [`LogicalPlan`] codec across
+//! PRs.
+//!
+//! `fixtures/q6_plan.bin` holds the encoded default-parameter Q6 plan as
+//! some past commit produced it. This test decodes it, checks it is
+//! byte- and structure-identical to what the registry builds today, and
+//! **runs** it against the serial reference — so an accidental codec
+//! change (reordered field, changed tag, new mandatory byte) fails CI
+//! before it strands a mixed-version cluster whose leader and workers
+//! disagree on the wire layout.
+//!
+//! Intentional format migrations regenerate the fixture with
+//! `LOVELOCK_BLESS=1 cargo test --test plan_fixture` and commit the new
+//! bytes alongside the codec change.
+
+use lovelock::analytics::engine::{self, LogicalPlan, PlanParams};
+use lovelock::analytics::{queries, TpchConfig, TpchDb};
+
+const FIXTURE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/fixtures/q6_plan.bin");
+
+#[test]
+fn golden_q6_plan_decodes_and_runs() {
+    let current = queries::build("q6", &PlanParams::default()).unwrap();
+    if std::env::var("LOVELOCK_BLESS").is_ok() {
+        std::fs::write(FIXTURE, current.encode()).expect("bless: cannot write fixture");
+    }
+    let bytes = std::fs::read(FIXTURE)
+        .unwrap_or_else(|e| panic!("missing golden fixture {FIXTURE}: {e}"));
+
+    // Stability gate 1: the frozen bytes still decode.
+    let golden = LogicalPlan::decode(&bytes)
+        .expect("golden plan no longer decodes — the wire format broke");
+
+    // Stability gate 2: they decode to exactly today's q6, and today's
+    // q6 encodes to exactly the frozen bytes (exact-inverse both ways).
+    assert_eq!(
+        golden, current,
+        "fixture decodes to a different q6 than the registry builds; if the format \
+         change is intentional, regenerate with LOVELOCK_BLESS=1 and commit the fixture"
+    );
+    assert_eq!(current.encode(), bytes, "encoder drifted from the frozen bytes");
+
+    // Stability gate 3: decode-and-RUN — the golden plan executes and
+    // reproduces the reference rows.
+    let db = TpchDb::generate(TpchConfig::new(0.002, 2026));
+    let out = engine::try_run_serial(&db, &golden).expect("golden plan failed to compile");
+    let reference = queries::run_query(&db, "q6").unwrap();
+    assert!(
+        reference.approx_eq_rows(&out.rows),
+        "golden plan rows diverged from the registry's q6"
+    );
+}

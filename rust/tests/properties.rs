@@ -267,8 +267,8 @@ fn prop_protocol_frame_codecs_roundtrip() {
 
         let plan = PlanFragment {
             query_id: qid,
-            query: int_to_name(*small),
-            width: small_u % 64,
+            name: int_to_name(*small),
+            plan: bytes.clone(),
             workers: small_u % 128,
             morsel_rows: *small as u64,
         };
@@ -378,6 +378,179 @@ fn prop_partition_then_merge_equals_merge_all() {
                 exchanged.len()
             ));
         }
+        Ok(())
+    });
+}
+
+// --------------------------------------------------- logical-plan codec
+
+/// Build a structurally rich [`LogicalPlan`] from a generated integer
+/// vector: every predicate leaf kind, 0–3 joins (hash with link +
+/// payloads, dense with cases), packed/year/payload keys, all compare
+/// ops and output columns rotate in as the ints vary. The plan need not
+/// *compile* — this drives the codec, whose domain is structure.
+fn arb_plan(ints: &[i64]) -> lovelock::analytics::engine::LogicalPlan {
+    use lovelock::analytics::engine::plan::*;
+    let get = |i: usize| ints.get(i).copied().unwrap_or(0);
+    let name = |i: usize| format!("c{}", get(i).unsigned_abs() % 40);
+    let leaf = |k: i64, salt: i64| -> PredExpr {
+        match k.rem_euclid(8) {
+            0 => PredExpr::True,
+            1 => i32_range("l_shipdate", salt as i32, salt as i32 ^ 77),
+            2 => i32_col_lt("l_commitdate", "l_receiptdate"),
+            3 => f64_range("l_discount", salt as f64 * 0.5, salt as f64),
+            4 => f64_lt("l_quantity", salt as f64),
+            5 => str_eq("l_shipmode", "MAIL"),
+            6 => i32_in("c_nationkey", vec![salt as i32, 1, 2]),
+            _ => por(vec![
+                str_prefix("p_type", "PROMO"),
+                str_contains("p_name", "gre"),
+                str_in("p_container", &["SM BOX".to_string(), "LG BOX".to_string()]),
+            ]),
+        }
+    };
+    let width = (get(0).unsigned_abs() as usize % 5) + 1;
+    let n_joins = get(1).unsigned_abs() as usize % 4;
+    let joins: Vec<JoinStep> = (0..n_joins)
+        .map(|j| {
+            let salt = get(10 + j);
+            let dense = salt.rem_euclid(3) == 0;
+            JoinStep {
+                table: match salt.rem_euclid(5) {
+                    0 => TableRef::Orders,
+                    1 => TableRef::Customer,
+                    2 => TableRef::Supplier,
+                    3 => TableRef::Part,
+                    _ => TableRef::Partsupp,
+                },
+                dense,
+                build_key: if dense {
+                    None
+                } else if salt.rem_euclid(2) == 0 {
+                    Some(KeyCols::Col(name(11 + j)))
+                } else {
+                    Some(KeyCols::Packed {
+                        a: name(11 + j),
+                        shift: (salt.unsigned_abs() % 40) as u8,
+                        b: name(12 + j),
+                    })
+                },
+                probe_key: if dense || salt.rem_euclid(4) != 1 {
+                    Some(KeyCols::Col("l_orderkey".into()))
+                } else {
+                    None
+                },
+                filter: leaf(salt, salt ^ 13),
+                link: if !dense && j > 0 && salt.rem_euclid(5) == 2 {
+                    Some(LinkRef { step: (j - 1) as u8, via: name(13 + j) })
+                } else {
+                    None
+                },
+                payloads: match salt.rem_euclid(4) {
+                    0 => vec![],
+                    1 => vec![Payload::Col(name(14 + j))],
+                    2 => vec![
+                        Payload::Flag { col: name(14 + j), m: StrMatch::Eq("X".into()) },
+                        Payload::CaseConst {
+                            cases: vec![(leaf(salt ^ 3, salt), salt as f64)],
+                        },
+                    ],
+                    _ => vec![Payload::FromLink((salt.unsigned_abs() % 3) as u8)],
+                },
+            }
+        })
+        .collect();
+    let v = |i: usize| -> ValExpr {
+        match get(i).rem_euclid(4) {
+            0 => vconst(get(i) as f64 * 0.25),
+            1 => vcol("l_extendedprice"),
+            2 => vpay((get(i).unsigned_abs() % 4) as u8, (get(i).unsigned_abs() % 3) as u8),
+            _ => vmul(vcol("l_quantity"), vsub(vconst(1.0), vcol("l_discount"))),
+        }
+    };
+    let ops = [CmpOp::Eq, CmpOp::Lt, CmpOp::Le, CmpOp::Ge, CmpOp::Gt];
+    let cmps: Vec<CmpExpr> = (0..get(2).unsigned_abs() as usize % 3)
+        .map(|i| cmp(v(20 + i), ops[(get(3).unsigned_abs() as usize + i) % 5], v(23 + i)))
+        .collect();
+    let key = match get(4).rem_euclid(4) {
+        0 => kconst(get(4)),
+        1 => kcol("l_orderkey"),
+        2 => kyear(kpay(0, 0)),
+        _ => kpack(kcol("l_returnflag"), (get(4).unsigned_abs() % 30) as u8, kcol("l_linestatus")),
+    };
+    let outcols = [
+        OutCol::KeyInt { shift: 3, bits: 16 },
+        OutCol::KeyChar { shift: 8 },
+        OutCol::KeyNation { shift: 16, bits: 0 },
+        OutCol::KeyDict { table: TableRef::Lineitem, col: "l_shipmode".into() },
+        OutCol::Acc(0),
+        OutCol::AccInt(0),
+        OutCol::Count,
+        OutCol::AccOverCount(0),
+        OutCol::AccRatioPct(0, 0),
+        OutCol::DimInt { table: TableRef::Orders, col: "o_custkey".into() },
+        OutCol::DimFloat { table: TableRef::Orders, col: "o_totalprice".into() },
+    ];
+    let start = get(5).unsigned_abs() as usize % outcols.len();
+    let ncols = get(6).unsigned_abs() as usize % 4 + 1;
+    lovelock::analytics::engine::LogicalPlan {
+        name: name(7),
+        scan: TableRef::Lineitem,
+        pred: pand(vec![leaf(get(8), get(8) ^ 5), leaf(get(9), get(9))]),
+        joins,
+        cmps,
+        key,
+        slots: (0..width).map(|i| v(30 + i)).collect(),
+        groups_hint: if get(7).rem_euclid(2) == 0 {
+            GroupsHint::Const(get(7).unsigned_abs() as u32)
+        } else {
+            GroupsHint::TableRows(TableRef::Orders)
+        },
+        finalize: FinalizeSpec {
+            scalar: get(0).rem_euclid(2) == 0,
+            columns: (0..ncols).map(|i| outcols[(start + i) % outcols.len()].clone()).collect(),
+            having_gt: if get(1).rem_euclid(2) == 0 { None } else { Some((0, get(1) as f64)) },
+            sort: vec![(0, if get(2).rem_euclid(2) == 0 { SortDir::Asc } else { SortDir::Desc })],
+            limit: get(3).unsigned_abs() as u32 % 1000,
+        },
+    }
+}
+
+#[test]
+fn prop_logical_plan_codec_roundtrip() {
+    // The plans-as-data codec is an exact inverse over the randomized IR
+    // space (all predicate leaves, 0–3 joins, widths 1..=MAX_ACCS), and
+    // decode rejects every one-byte truncation.
+    use lovelock::analytics::engine::LogicalPlan;
+    let strat = vec_of(int_range(i64::MIN / 2, i64::MAX / 2), 0, 40);
+    check("logical_plan_codec", &strat, |ints| {
+        let plan = arb_plan(ints);
+        let enc = plan.encode();
+        let dec = LogicalPlan::decode(&enc).map_err(|e| e.to_string())?;
+        if dec != plan {
+            return Err("roundtrip mismatch".into());
+        }
+        if LogicalPlan::decode(&enc[..enc.len() - 1]).is_ok() {
+            return Err("accepted truncated plan".into());
+        }
+        let mut padded = enc.clone();
+        padded.push(0);
+        if LogicalPlan::decode(&padded).is_ok() {
+            return Err("accepted trailing garbage".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_decode_never_panics_on_garbage() {
+    // Hostile frames: whatever bytes arrive, decode returns (Ok or Err),
+    // never panics, never recurses unboundedly.
+    use lovelock::analytics::engine::LogicalPlan;
+    let strat = vec_of(int_range(0, 255), 0, 200);
+    check("plan_decode_garbage", &strat, |bytes| {
+        let buf: Vec<u8> = bytes.iter().map(|&b| b as u8).collect();
+        let _ = LogicalPlan::decode(&buf);
         Ok(())
     });
 }
