@@ -42,6 +42,19 @@ cargo test -q
 echo "==> golden plan fixture (LogicalPlan wire format pinned)"
 cargo test -q --test plan_fixture
 
+# Chaos gate: the deterministic fault-injection suite (seeded drops /
+# duplicates / delays + worker kills mid-map and mid-reduce; fixed
+# seeds 0xC0FFEE and 0x5EED inside rust/tests/chaos.rs, so a failure
+# here replays locally with the same schedule). `cargo test -q` above
+# already ran it in debug; the full gate re-runs it in release, where
+# different timing widens the interleavings the monitor races against.
+echo "==> chaos suite (fault-injected QueryService, debug)"
+cargo test -q --test chaos
+if [ "${1:-}" != "quick" ]; then
+    echo "==> chaos suite (release)"
+    cargo test --release -q --test chaos
+fi
+
 # Alloc-count gate: a per-row allocation sneaking back into the batch
 # kernels must fail CI, not wait for someone to read bench output. The
 # `cargo test -q` above already ran the alloc_regression test in debug

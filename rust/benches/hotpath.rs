@@ -20,7 +20,9 @@ use lovelock::analytics::ops::{
 use lovelock::analytics::{run_query, TpchConfig, TpchDb, QUERY_NAMES};
 use lovelock::benchkit::{black_box, Bench, CountingAlloc};
 use lovelock::cluster::{ClusterSpec, Role};
-use lovelock::coordinator::{DistributedQuery, QueryService, ServiceConfig};
+use lovelock::coordinator::{
+    ChaosConfig, DistributedQuery, KillPhase, QueryService, ServiceConfig,
+};
 use lovelock::platform::n2d_milan;
 use lovelock::prng::Pcg64;
 use lovelock::simnet::{Simulation, Topology};
@@ -291,6 +293,35 @@ fn main() {
             format!("median batch {:.2} ms", st.median_ns / 1e6),
         );
     }
+
+    // Fault-tolerance recovery: q6 on a fresh 4-worker service whose
+    // worker 1 is killed by its first ExecuteRange. The measured time
+    // is lease expiry + repair + re-execution on a survivor — the
+    // §Failure re-execution-overhead row of EXPERIMENTS.md (compare
+    // against the clean distributed rows above). A tight lease keeps
+    // the row about repair cost, not detection patience.
+    let chaos_cluster = ClusterSpec::traditional(4, n2d_milan(), Role::LiteCompute);
+    let st = b.measure("q6 recover after mid-map kill", || {
+        let svc = QueryService::with_config(
+            chaos_cluster.clone(),
+            ServiceConfig {
+                threads: 2,
+                heartbeat_ms: 5,
+                lease_ms: 60,
+                chaos: Some(ChaosConfig { seed: 0, kill: Some((1, KillPhase::MidMap)) }),
+                ..ServiceConfig::default()
+            },
+        );
+        let id = svc.submit(&db, "q6").unwrap();
+        let (rows, report) = svc.wait(id).unwrap();
+        assert!(report.repairs > 0, "kill bench ran clean");
+        black_box(rows.len());
+    });
+    b.row(
+        "q6 mid-map kill detect+repair ms",
+        format!("{:.1}", st.median_ns / 1e6),
+        "fresh 4-worker service per run; 60 ms lease; includes re-execution".to_string(),
+    );
 
     // dbgen throughput.
     b.measure("dbgen sf=0.01", || {

@@ -86,6 +86,16 @@ impl Backpressure {
     pub fn max_in_flight(&self) -> usize {
         self.state.lock().unwrap().max_in_flight
     }
+
+    /// True when every credit is back home — the invariant each query
+    /// must restore on *every* exit path (done, failed, cancelled,
+    /// repaired). The chaos suite asserts this after each fault
+    /// schedule; a `false` here on an idle gate means a failure path
+    /// leaked a credit.
+    pub fn balanced(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        st.available == st.capacity
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +164,17 @@ mod tests {
         }
         assert!(peak.load(Ordering::SeqCst) <= 4);
         assert_eq!(bp.in_flight(), 0);
+        assert!(bp.balanced());
+    }
+
+    #[test]
+    fn balanced_tracks_outstanding_credits() {
+        let bp = Backpressure::new(2);
+        assert!(bp.balanced());
+        assert!(bp.acquire());
+        assert!(!bp.balanced());
+        bp.release();
+        assert!(bp.balanced());
     }
 
     #[test]

@@ -12,6 +12,13 @@
 //!   real encoded message dispatched through [`crate::rpc::Endpoint`]
 //!   handlers, and any number of queries interleave over the shared
 //!   scheduler, backpressure credits, and decode pool;
+//! * fault tolerance — the service survives worker death and packet
+//!   loss: a lease monitor pings workers, declares silent ones dead,
+//!   and re-executes their fragments on survivors under a bumped epoch
+//!   (deterministic folds make re-execution idempotent; reducers dedup
+//!   frames on `(query, worker, partition, epoch)`). Chaos runs are
+//!   replayable: [`ChaosConfig`] seeds a [`crate::rpc::FaultPlan`] on
+//!   every endpoint. See DESIGN.md §3d for the failure model;
 //! * [`backpressure`] — credit-based admission so lite-compute nodes with
 //!   16 cores and 48 GB are never overrun (the leader gates partial
 //!   decoding on it);
@@ -48,5 +55,7 @@ pub mod shuffle;
 pub use backpressure::Backpressure;
 pub use protocol::QueryId;
 pub use scheduler::{Placement, Scheduler, Task, TaskKind};
-pub use service::{DistQueryReport, QueryService, QueryStatus, ServiceConfig};
+pub use service::{
+    ChaosConfig, DistQueryReport, KillPhase, QueryService, QueryStatus, ServiceConfig,
+};
 pub use shuffle::DistributedQuery;

@@ -45,6 +45,30 @@ pub const METHOD_ACK: u32 = 0x53;
 pub const METHOD_REDUCE: u32 = 0x54;
 /// Method id of [`CancelQuery`] frames.
 pub const METHOD_CANCEL: u32 = 0x55;
+/// Method id of [`Ping`] frames (leader → worker lease probe).
+pub const METHOD_PING: u32 = 0x56;
+/// Method id of [`Heartbeat`] frames (worker → leader lease renewal).
+pub const METHOD_HEARTBEAT: u32 = 0x57;
+/// Method id of [`ResendPartition`] frames (repair: re-ship a retained
+/// map output to a re-homed reducer).
+pub const METHOD_RESEND: u32 = 0x58;
+/// Method id of [`ReleaseQuery`] frames (leader → worker: the query is
+/// finalized, drop its retained state).
+pub const METHOD_RELEASE: u32 = 0x59;
+
+/// Every query-protocol method a chaos [`crate::rpc::FaultPlan`] may
+/// target. Lease traffic (`Ping`/`Heartbeat`) is deliberately excluded:
+/// faulting the failure detector itself only changes *when* a worker is
+/// declared dead, not whether the query recovers, and leaving it clean
+/// keeps chaos schedules aligned with the query conversation.
+pub const CHAOS_METHODS: &[u32] = &[
+    METHOD_PLAN,
+    METHOD_PARTIAL,
+    METHOD_EXECUTE,
+    METHOD_ACK,
+    METHOD_REDUCE,
+    METHOD_RESEND,
+];
 
 /// Identifier of one submitted query, unique within a
 /// [`crate::coordinator::service::QueryService`]. Frames of concurrent
@@ -113,18 +137,30 @@ impl PlanFragment {
 }
 
 /// Leader → worker: execute the query over lineitem rows `[lo, hi)`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+///
+/// `worker` is the **logical** fragment index — under repair a fragment
+/// may be re-executed on a different endpoint, but its partition hashing
+/// and sender identity stay the logical index, so re-execution produces
+/// byte-identical partials. `route[p]` names the endpoint currently
+/// hosting reducer partition `p` (the identity map until a reducer is
+/// re-homed). `epoch` counts repair rounds; every frame derived from
+/// this execute carries it so stale deliveries are recognizable.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ExecuteRange {
     pub query_id: QueryId,
-    /// Receiving worker's index (also its reducer partition).
+    /// Logical fragment index (also its reducer partition).
     pub worker: u32,
     pub lo: u64,
     pub hi: u64,
+    /// Repair epoch this assignment belongs to (0 = first attempt).
+    pub epoch: u32,
+    /// Partition → endpoint routing table, length `w`.
+    pub route: Vec<u32>,
 }
 
 impl ExecuteRange {
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(28);
+        let mut out = Vec::with_capacity(36 + 4 * self.route.len());
         self.encode_into(&mut out);
         out
     }
@@ -135,6 +171,8 @@ impl ExecuteRange {
         out.extend_from_slice(&self.worker.to_le_bytes());
         out.extend_from_slice(&self.lo.to_le_bytes());
         out.extend_from_slice(&self.hi.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        put_vec_u32(out, &self.route);
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self> {
@@ -144,6 +182,8 @@ impl ExecuteRange {
             worker: r.u32()?,
             lo: r.u64()?,
             hi: r.u64()?,
+            epoch: r.u32()?,
+            route: r.vec_u32()?,
         };
         r.finish()?;
         Ok(v)
@@ -158,6 +198,9 @@ impl ExecuteRange {
 pub struct Ack {
     pub query_id: QueryId,
     pub worker: u32,
+    /// Repair epoch of the [`ExecuteRange`] being acknowledged — the
+    /// leader discards acks from superseded epochs.
+    pub epoch: u32,
     /// Nanoseconds of host compute the map fold took (≥ 1: a
     /// measured phase never reports zero).
     pub map_ns: u64,
@@ -180,6 +223,7 @@ impl Ack {
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.query_id.0.to_le_bytes());
         out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
         out.extend_from_slice(&self.map_ns.to_le_bytes());
         out.extend_from_slice(&self.ht_bytes.to_le_bytes());
         put_vec_u64(out, &self.part_bytes);
@@ -191,6 +235,7 @@ impl Ack {
         let v = Self {
             query_id: QueryId(r.u64()?),
             worker: r.u32()?,
+            epoch: r.u32()?,
             map_ns: r.u64()?,
             ht_bytes: r.u64()?,
             part_bytes: r.vec_u64()?,
@@ -202,19 +247,24 @@ impl Ack {
 }
 
 /// Leader → reducer `partition`: every map ack is in; merge the
-/// [`PartialFrame`]s from exactly the workers in `expect` (the ones
-/// whose partition was non-empty) and ship the result to the leader.
+/// [`PartialFrame`]s from exactly the `(worker, epoch)` pairs in
+/// `expect` (the workers whose partition was non-empty, each pinned to
+/// the epoch whose ack the leader accepted) and ship the result to the
+/// leader. Naming the epoch is what makes the reduce idempotent under
+/// repair: a partial from a superseded execution attempt is simply never
+/// in the expected set.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ReduceCmd {
     pub query_id: QueryId,
     pub partition: u32,
-    /// Worker indices whose partition frames to await, ascending.
-    pub expect: Vec<u32>,
+    /// `(logical worker, epoch)` pairs whose frames to await, ascending
+    /// by worker.
+    pub expect: Vec<(u32, u32)>,
 }
 
 impl ReduceCmd {
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(20 + 4 * self.expect.len());
+        let mut out = Vec::with_capacity(24 + 8 * self.expect.len());
         self.encode_into(&mut out);
         out
     }
@@ -223,18 +273,30 @@ impl ReduceCmd {
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.query_id.0.to_le_bytes());
         out.extend_from_slice(&self.partition.to_le_bytes());
-        put_vec_u32(out, &self.expect);
+        let workers: Vec<u32> = self.expect.iter().map(|&(w, _)| w).collect();
+        let epochs: Vec<u32> = self.expect.iter().map(|&(_, e)| e).collect();
+        put_vec_u32(out, &workers);
+        put_vec_u32(out, &epochs);
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self> {
         let mut r = Reader::new(buf);
-        let v = Self {
-            query_id: QueryId(r.u64()?),
-            partition: r.u32()?,
-            expect: r.vec_u32()?,
-        };
+        let query_id = QueryId(r.u64()?);
+        let partition = r.u32()?;
+        let workers = r.vec_u32()?;
+        let epochs = r.vec_u32()?;
         r.finish()?;
-        Ok(v)
+        crate::ensure!(
+            workers.len() == epochs.len(),
+            "reduce expect: {} workers vs {} epochs",
+            workers.len(),
+            epochs.len()
+        );
+        Ok(Self {
+            query_id,
+            partition,
+            expect: workers.into_iter().zip(epochs).collect(),
+        })
     }
 }
 
@@ -246,8 +308,13 @@ pub struct PartialFrame {
     pub query_id: QueryId,
     /// Reducer partition this partial belongs to.
     pub partition: u32,
-    /// Sender: worker index (exchange hop) or reducer index (leader hop).
+    /// Sender: logical worker index (exchange hop) or reducer partition
+    /// (leader hop).
     pub from_worker: u32,
+    /// Repair epoch of the execution attempt that produced this partial
+    /// — reducers merge one frame per expected `(worker, epoch)` and
+    /// drop the rest (duplicates, superseded attempts).
+    pub epoch: u32,
     /// Reducer → leader only: nanoseconds the pre-merge took.
     pub reduce_ns: u64,
     /// Encoded [`crate::analytics::engine::Partial`].
@@ -256,11 +323,12 @@ pub struct PartialFrame {
 
 impl PartialFrame {
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(28 + self.body.len());
+        let mut out = Vec::with_capacity(32 + self.body.len());
         Self::encode_parts_into(
             self.query_id,
             self.partition,
             self.from_worker,
+            self.epoch,
             self.reduce_ns,
             &self.body,
             &mut out,
@@ -277,14 +345,16 @@ impl PartialFrame {
         query_id: QueryId,
         partition: u32,
         from_worker: u32,
+        epoch: u32,
         reduce_ns: u64,
         body: &[u8],
         out: &mut Vec<u8>,
     ) {
-        out.reserve(28 + body.len());
+        out.reserve(32 + body.len());
         out.extend_from_slice(&query_id.0.to_le_bytes());
         out.extend_from_slice(&partition.to_le_bytes());
         out.extend_from_slice(&from_worker.to_le_bytes());
+        out.extend_from_slice(&epoch.to_le_bytes());
         out.extend_from_slice(&reduce_ns.to_le_bytes());
         put_bytes(out, body);
     }
@@ -295,6 +365,7 @@ impl PartialFrame {
             query_id: QueryId(r.u64()?),
             partition: r.u32()?,
             from_worker: r.u32()?,
+            epoch: r.u32()?,
             reduce_ns: r.u64()?,
             body: r.bytes()?,
         };
@@ -329,6 +400,134 @@ impl CancelQuery {
     }
 }
 
+/// Leader → worker: lease probe. Carries only a nonce; the worker
+/// answers with a [`Heartbeat`] echoing it. Ping/heartbeat traffic is
+/// the failure detector's only signal — a worker whose heartbeats stop
+/// arriving for a lease interval is declared dead (see DESIGN.md §3d).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ping {
+    pub nonce: u64,
+}
+
+impl Ping {
+    pub fn encode(&self) -> Vec<u8> {
+        self.nonce.to_le_bytes().to_vec()
+    }
+
+    /// Append the wire encoding to `out` (the pooled-buffer path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.nonce.to_le_bytes());
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self { nonce: r.u64()? };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// Worker → leader: lease renewal, answering a [`Ping`]. `worker` is the
+/// sender's endpoint index; `nonce` echoes the ping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Heartbeat {
+    pub worker: u32,
+    pub nonce: u64,
+}
+
+impl Heartbeat {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` (the pooled-buffer path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.nonce.to_le_bytes());
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self { worker: r.u32()?, nonce: r.u64()? };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// Leader → surviving worker (repair): re-cast the retained map output
+/// of logical fragment `worker` for reducer `partition` to endpoint
+/// `to` — the reducer that partition was re-homed to. A worker that no
+/// longer retains that output ignores the frame; the leader's stall
+/// detector will then escalate to re-executing the fragment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResendPartition {
+    pub query_id: QueryId,
+    /// Logical fragment whose output to re-ship.
+    pub worker: u32,
+    /// Reducer partition wanted.
+    pub partition: u32,
+    /// Destination endpoint index.
+    pub to: u32,
+}
+
+impl ResendPartition {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` (the pooled-buffer path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.query_id.0.to_le_bytes());
+        out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.partition.to_le_bytes());
+        out.extend_from_slice(&self.to.to_le_bytes());
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self {
+            query_id: QueryId(r.u64()?),
+            worker: r.u32()?,
+            partition: r.u32()?,
+            to: r.u32()?,
+        };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// Leader → worker: the query is finalized (done or abandoned); drop all
+/// retained state for it (plan, materialized map outputs, reduce
+/// buffers). What `CancelQuery` is to an in-flight query, this is to a
+/// finished one — without it, state retained for repair would outlive
+/// every query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReleaseQuery {
+    pub query_id: QueryId,
+}
+
+impl ReleaseQuery {
+    pub fn encode(&self) -> Vec<u8> {
+        self.query_id.0.to_le_bytes().to_vec()
+    }
+
+    /// Append the wire encoding to `out` (the pooled-buffer path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.query_id.0.to_le_bytes());
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self { query_id: QueryId(r.u64()?) };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
 /// Any protocol frame, decoded from a raw [`crate::rpc::Message`] by
 /// method id — the tracing/debugging view of a conversation.
 #[derive(Clone, Debug, PartialEq)]
@@ -339,6 +538,10 @@ pub enum Frame {
     Reduce(ReduceCmd),
     Partial(PartialFrame),
     Cancel(CancelQuery),
+    Ping(Ping),
+    Heartbeat(Heartbeat),
+    Resend(ResendPartition),
+    Release(ReleaseQuery),
 }
 
 impl Frame {
@@ -350,18 +553,28 @@ impl Frame {
             METHOD_REDUCE => Ok(Frame::Reduce(ReduceCmd::decode(&msg.payload)?)),
             METHOD_PARTIAL => Ok(Frame::Partial(PartialFrame::decode(&msg.payload)?)),
             METHOD_CANCEL => Ok(Frame::Cancel(CancelQuery::decode(&msg.payload)?)),
+            METHOD_PING => Ok(Frame::Ping(Ping::decode(&msg.payload)?)),
+            METHOD_HEARTBEAT => Ok(Frame::Heartbeat(Heartbeat::decode(&msg.payload)?)),
+            METHOD_RESEND => Ok(Frame::Resend(ResendPartition::decode(&msg.payload)?)),
+            METHOD_RELEASE => Ok(Frame::Release(ReleaseQuery::decode(&msg.payload)?)),
             m => crate::bail!("unknown protocol method {m:#x}"),
         }
     }
 
-    pub fn query_id(&self) -> QueryId {
+    /// The query this frame belongs to — `None` for lease traffic
+    /// (ping/heartbeat), which is a property of the fabric, not of any
+    /// one query.
+    pub fn query_id(&self) -> Option<QueryId> {
         match self {
-            Frame::Plan(f) => f.query_id,
-            Frame::Execute(f) => f.query_id,
-            Frame::Ack(f) => f.query_id,
-            Frame::Reduce(f) => f.query_id,
-            Frame::Partial(f) => f.query_id,
-            Frame::Cancel(f) => f.query_id,
+            Frame::Plan(f) => Some(f.query_id),
+            Frame::Execute(f) => Some(f.query_id),
+            Frame::Ack(f) => Some(f.query_id),
+            Frame::Reduce(f) => Some(f.query_id),
+            Frame::Partial(f) => Some(f.query_id),
+            Frame::Cancel(f) => Some(f.query_id),
+            Frame::Ping(_) | Frame::Heartbeat(_) => None,
+            Frame::Resend(f) => Some(f.query_id),
+            Frame::Release(f) => Some(f.query_id),
         }
     }
 }
@@ -385,7 +598,14 @@ mod tests {
 
     #[test]
     fn execute_range_roundtrip() {
-        let f = ExecuteRange { query_id: QueryId(1), worker: 3, lo: 1000, hi: 2000 };
+        let f = ExecuteRange {
+            query_id: QueryId(1),
+            worker: 3,
+            lo: 1000,
+            hi: 2000,
+            epoch: 2,
+            route: vec![0, 1, 2, 3],
+        };
         assert_eq!(ExecuteRange::decode(&f.encode()).unwrap(), f);
     }
 
@@ -394,6 +614,7 @@ mod tests {
         let f = Ack {
             query_id: QueryId(9),
             worker: 2,
+            epoch: 1,
             map_ns: 12345,
             ht_bytes: 1 << 20,
             part_bytes: vec![0, 64, 0, 1024],
@@ -406,7 +627,8 @@ mod tests {
 
     #[test]
     fn reduce_cmd_roundtrip() {
-        let f = ReduceCmd { query_id: QueryId(4), partition: 1, expect: vec![0, 2, 5] };
+        let f =
+            ReduceCmd { query_id: QueryId(4), partition: 1, expect: vec![(0, 0), (2, 1), (5, 0)] };
         assert_eq!(ReduceCmd::decode(&f.encode()).unwrap(), f);
     }
 
@@ -416,10 +638,39 @@ mod tests {
             query_id: QueryId(2),
             partition: 5,
             from_worker: 1,
+            epoch: 3,
             reduce_ns: 88,
             body: vec![1, 2, 3, 4, 5, 6, 7],
         };
         assert_eq!(PartialFrame::decode(&f.encode()).unwrap(), f);
+    }
+
+    #[test]
+    fn lease_and_repair_frames_roundtrip() {
+        let p = Ping { nonce: 0xABCD };
+        assert_eq!(Ping::decode(&p.encode()).unwrap(), p);
+        let h = Heartbeat { worker: 3, nonce: 0xABCD };
+        assert_eq!(Heartbeat::decode(&h.encode()).unwrap(), h);
+        let rs = ResendPartition { query_id: QueryId(5), worker: 1, partition: 2, to: 3 };
+        assert_eq!(ResendPartition::decode(&rs.encode()).unwrap(), rs);
+        let rl = ReleaseQuery { query_id: QueryId(6) };
+        assert_eq!(ReleaseQuery::decode(&rl.encode()).unwrap(), rl);
+        // Lease frames carry no query id; repair frames do.
+        let msg = Message { method: METHOD_PING, id: 1, payload: p.encode() };
+        assert_eq!(Frame::decode(&msg).unwrap().query_id(), None);
+        let msg = Message { method: METHOD_RESEND, id: 1, payload: rs.encode() };
+        assert_eq!(Frame::decode(&msg).unwrap().query_id(), Some(QueryId(5)));
+    }
+
+    #[test]
+    fn reduce_cmd_rejects_mismatched_expect_vectors() {
+        // Hand-build a payload whose worker and epoch vectors disagree.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&4u64.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        put_vec_u32(&mut buf, &[0, 2]);
+        put_vec_u32(&mut buf, &[0]);
+        assert!(ReduceCmd::decode(&buf).is_err());
     }
 
     #[test]
@@ -430,6 +681,7 @@ mod tests {
             query_id: QueryId(2),
             partition: 5,
             from_worker: 1,
+            epoch: 2,
             reduce_ns: 88,
             body: vec![1, 2, 3],
         };
@@ -438,6 +690,7 @@ mod tests {
             pf.query_id,
             pf.partition,
             pf.from_worker,
+            pf.epoch,
             pf.reduce_ns,
             &pf.body,
             &mut out,
@@ -448,6 +701,7 @@ mod tests {
         let ack = Ack {
             query_id: QueryId(9),
             worker: 2,
+            epoch: 0,
             map_ns: 1,
             ht_bytes: 2,
             part_bytes: vec![0, 64],
@@ -456,7 +710,8 @@ mod tests {
         let mut out = Vec::new();
         ack.encode_into(&mut out);
         assert_eq!(out, ack.encode());
-        let rc = ReduceCmd { query_id: QueryId(4), partition: 1, expect: vec![0, 2, 5] };
+        let rc =
+            ReduceCmd { query_id: QueryId(4), partition: 1, expect: vec![(0, 0), (2, 1), (5, 0)] };
         let mut out = Vec::new();
         rc.encode_into(&mut out);
         assert_eq!(out, rc.encode());
@@ -470,7 +725,8 @@ mod tests {
 
     #[test]
     fn decode_rejects_truncation_and_trailing_garbage() {
-        let enc = ReduceCmd { query_id: QueryId(4), partition: 1, expect: vec![0, 2] }.encode();
+        let enc =
+            ReduceCmd { query_id: QueryId(4), partition: 1, expect: vec![(0, 0), (2, 0)] }.encode();
         assert!(ReduceCmd::decode(&enc[..enc.len() - 1]).is_err());
         let mut padded = enc.clone();
         padded.push(0);
@@ -492,7 +748,7 @@ mod tests {
             Frame::Plan(got) => assert_eq!(got, pf),
             other => panic!("wrong variant: {other:?}"),
         }
-        assert_eq!(Frame::decode(&msg).unwrap().query_id(), QueryId(3));
+        assert_eq!(Frame::decode(&msg).unwrap().query_id(), Some(QueryId(3)));
         let bad = Message { method: 0x99, id: 1, payload: vec![] };
         assert!(Frame::decode(&bad).is_err());
     }

@@ -106,8 +106,22 @@ impl Scheduler {
         self.load[node_id].1 = self.load[node_id].1.saturating_sub(1);
     }
 
+    /// The failure path in one step: release a dead (or abandoned)
+    /// node's load for the task and place its substitute on the
+    /// least-loaded eligible node — the re-placement half of fragment
+    /// re-execution. Returns None if no node is eligible.
+    pub fn replace(&mut self, node_id: usize, est_secs: f64, task: &Task) -> Option<Placement> {
+        self.complete(node_id, est_secs);
+        self.place(task)
+    }
+
     pub fn queue_depth(&self, node_id: usize) -> usize {
         self.load[node_id].1
+    }
+
+    /// Outstanding estimated seconds on one node.
+    pub fn load_secs(&self, node_id: usize) -> f64 {
+        self.load[node_id].0
     }
 
     /// Max/min load ratio across nodes that got any work (balance metric).
@@ -204,6 +218,35 @@ mod tests {
         s.complete(p.node_id, 2.0);
         assert_eq!(s.queue_depth(p.node_id), 0);
         assert_eq!(s.makespan(), 0.0);
+    }
+
+    #[test]
+    fn replace_moves_load_to_least_loaded_survivor() {
+        let c = ClusterSpec::traditional(3, n2d_milan(), Role::LiteCompute);
+        let mut s = Scheduler::new(&c);
+        // Load node 0 with the task to be replaced, node 1 heavily.
+        let t0 = Task { id: 0, kind: TaskKind::Compute, est_secs: 1.0 };
+        let p0 = s.place(&t0).unwrap();
+        s.place(&Task { id: 1, kind: TaskKind::Compute, est_secs: 5.0 }).unwrap();
+        s.place(&Task { id: 2, kind: TaskKind::Compute, est_secs: 5.0 }).unwrap();
+        let before = s.queue_depth(p0.node_id);
+        let sub = s.replace(p0.node_id, t0.est_secs, &t0).unwrap();
+        // The dead node's load was released...
+        assert_eq!(
+            s.queue_depth(p0.node_id) + if sub.node_id == p0.node_id { 0 } else { 1 },
+            before,
+            "replace must release the old placement's queue slot"
+        );
+        // ...and the substitute landed on the emptiest node.
+        for n in 0..3 {
+            assert!(
+                s.load_secs(sub.node_id) <= s.load_secs(n) + 1e-9,
+                "substitute on node {} (load {}) but node {n} has {}",
+                sub.node_id,
+                s.load_secs(sub.node_id),
+                s.load_secs(n)
+            );
+        }
     }
 
     #[test]

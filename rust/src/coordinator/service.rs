@@ -62,19 +62,21 @@ use crate::analytics::tpch::TpchDb;
 use crate::cluster::ClusterSpec;
 use crate::coordinator::backpressure::Backpressure;
 use crate::coordinator::protocol::{
-    Ack, CancelQuery, ExecuteRange, PartialFrame, PlanFragment, QueryId, ReduceCmd, METHOD_ACK,
-    METHOD_CANCEL, METHOD_EXECUTE, METHOD_PARTIAL, METHOD_PLAN, METHOD_REDUCE,
+    Ack, CancelQuery, ExecuteRange, Heartbeat, PartialFrame, Ping, PlanFragment, QueryId,
+    ReduceCmd, ReleaseQuery, ResendPartition, CHAOS_METHODS, METHOD_ACK, METHOD_CANCEL,
+    METHOD_EXECUTE, METHOD_HEARTBEAT, METHOD_PARTIAL, METHOD_PING, METHOD_PLAN, METHOD_REDUCE,
+    METHOD_RELEASE, METHOD_RESEND,
 };
 use crate::coordinator::scheduler::{Scheduler, Task, TaskKind};
 use crate::error::Result;
 use crate::exec::{JoinHandle, ThreadPool};
 use crate::memsim::{simulate, WorkloadProfile};
-use crate::rpc::{BufPool, Client, Dispatch, Endpoint};
+use crate::rpc::{BufPool, Client, Dispatch, Endpoint, FaultPlan, KillSpec};
 use crate::simnet::Simulation;
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Distributed execution report: result rows + the simulated breakdown.
 #[derive(Clone, Debug)]
@@ -102,6 +104,10 @@ pub struct DistQueryReport {
     /// Host seconds spent computing partials: slowest map + slowest
     /// reduce, i.e. the critical path through this process's fold work.
     pub host_compute_secs: f64,
+    /// Repair rounds the leader ran to finish this query (0 = clean
+    /// run; each round bumps the execution epoch and re-executes the
+    /// fragments whose valid ack is missing).
+    pub repairs: u32,
 }
 
 impl DistQueryReport {
@@ -140,12 +146,53 @@ pub struct ServiceConfig {
     pub threads: usize,
     /// Rows per morsel inside each worker's fold.
     pub morsel_rows: usize,
+    /// Monitor ping interval in milliseconds (0 = 20ms). The lease
+    /// monitor only runs at all when `chaos` is set or one of
+    /// `heartbeat_ms`/`lease_ms` is non-zero, so a default-config
+    /// service behaves byte-for-byte as before.
+    pub heartbeat_ms: u64,
+    /// A worker that has not been heard from for this long is declared
+    /// dead and its fragments re-executed (0 = 8 × heartbeat).
+    pub lease_ms: u64,
+    /// Deterministic fault injection (see [`ChaosConfig`]); also turns
+    /// on the lease monitor and worker-side partition-body retention.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { workers: 0, threads: 0, morsel_rows: DEFAULT_MORSEL_ROWS }
+        Self {
+            workers: 0,
+            threads: 0,
+            morsel_rows: DEFAULT_MORSEL_ROWS,
+            heartbeat_ms: 0,
+            lease_ms: 0,
+            chaos: None,
+        }
     }
+}
+
+/// Where a chaos kill fires inside a worker's per-query state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillPhase {
+    /// The endpoint dies on its first `ExecuteRange` — before the map
+    /// fold runs, so neither partials nor the ack ever leave it.
+    MidMap,
+    /// The endpoint dies on its first `ReduceCmd` — after it acked its
+    /// map, so the leader must invalidate a *successful* ack and
+    /// re-home the partition.
+    MidReduce,
+}
+
+/// Deterministic chaos: every run with the same seed and kill spec
+/// replays the same fault schedule (see [`crate::rpc::FaultPlan`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Seeds a random drop/duplicate/delay schedule on every endpoint
+    /// (each derives its own stream). 0 = no random faults (kill only).
+    pub seed: u64,
+    /// Kill worker `.0`'s endpoint at the given phase.
+    pub kill: Option<(u32, KillPhase)>,
 }
 
 // --------------------------------------------------------------- worker
@@ -160,12 +207,29 @@ struct PlanState {
     db: Arc<TpchDb>,
 }
 
-/// Per-query state a worker holds in its reducer role.
+/// Per-partition state a worker holds in its reducer role. Keyed by
+/// `(QueryId, partition)` — after a repair re-homes partitions, one
+/// endpoint can reduce several of them.
 struct ReduceState {
-    /// Worker indices to await (set by ReduceCmd; None until it arrives).
-    expect: Option<Vec<u32>>,
-    /// Buffered partition bodies by sending worker.
-    got: HashMap<u32, Vec<u8>>,
+    /// `(worker, epoch)` pairs to await (set by ReduceCmd; None until
+    /// it arrives). A repair round's ReduceCmd overwrites this with the
+    /// substitute senders' epochs.
+    expect: Option<Vec<(u32, u32)>>,
+    /// Buffered partition bodies keyed by `(sending worker, epoch)`:
+    /// the idempotence point of the failure model. Duplicate frames
+    /// (chaos, resends) land on the same key; superseded attempts land
+    /// on keys no expectation names.
+    got: HashMap<(u32, u32), Vec<u8>>,
+}
+
+/// A finished map execution a worker retains: the epoch dedups repeated
+/// `ExecuteRange`s, and (fault-tolerant services only) the encoded
+/// partition bodies let [`ResendPartition`] re-route the exchange to a
+/// substitute reducer without re-running the fold.
+struct Executed {
+    epoch: u32,
+    /// Indexed by partition; empty when retention is off.
+    part_bodies: Vec<Vec<u8>>,
 }
 
 /// One worker node's endpoint state — everything its handlers touch.
@@ -174,10 +238,17 @@ struct WorkerShared {
     /// Query → attached input tables (the storage layer; see module docs).
     catalog: Arc<Mutex<HashMap<QueryId, Arc<TpchDb>>>>,
     plans: Mutex<HashMap<QueryId, PlanState>>,
-    reduces: Mutex<HashMap<QueryId, ReduceState>>,
-    /// Cancelled ids (set + insertion order, oldest evicted first so the
-    /// bound never wipes a *recently* cancelled id whose frames are
-    /// still in flight).
+    reduces: Mutex<HashMap<(QueryId, u32), ReduceState>>,
+    /// Completed map executions by `(query, logical fragment)`, bounded
+    /// FIFO (same eviction discipline as `cancelled`).
+    executed: Mutex<(HashMap<(QueryId, u32), Executed>, VecDeque<(QueryId, u32)>)>,
+    /// Retain partition bodies in `executed` for resend. Off for
+    /// default-config services, preserving the allocation-free map
+    /// steady state.
+    retain: bool,
+    /// Cancelled/released ids (set + insertion order, oldest evicted
+    /// first so the bound never wipes a *recently* closed id whose
+    /// frames are still in flight).
     cancelled: Mutex<(HashSet<QueryId>, VecDeque<QueryId>)>,
     /// Clients to every worker endpoint (self included), leader-wired
     /// after all endpoints exist.
@@ -203,11 +274,15 @@ impl WorkerShared {
         self.cancelled.lock().unwrap().0.contains(&qid)
     }
 
-    /// Report a worker-side failure to the leader as an error Ack.
+    /// Report a worker-side failure to the leader as an error Ack
+    /// (epoch 0: the leader fails the query on *any* error ack while it
+    /// is in flight — worker-side errors are deterministic, so a stale
+    /// epoch would fail identically re-executed).
     fn ack_error(&self, qid: QueryId, msg: String) {
         let ack = Ack {
             query_id: qid,
             worker: self.wi,
+            epoch: 0,
             map_ns: 0,
             ht_bytes: 0,
             part_bytes: Vec::new(),
@@ -252,18 +327,45 @@ impl WorkerShared {
         if self.is_cancelled(qid) {
             return;
         }
-        let plan = match self.plans.lock().unwrap().remove(&qid) {
-            Some(p) => p,
-            None => {
-                self.ack_error(qid, format!("{qid}: ExecuteRange without PlanFragment"));
+        {
+            // Idempotence: the leader bumps the epoch on every repair,
+            // so an ExecuteRange at an epoch we already ran is a
+            // duplicate (chaos) or a superseded re-send — drop it.
+            let g = self.executed.lock().unwrap();
+            if g.0.get(&(qid, ex.worker)).is_some_and(|d| d.epoch >= ex.epoch) {
                 return;
             }
+        }
+        // Holding `plans` across the fold is safe: every handler of this
+        // endpoint runs on its single serve thread, so the lock is
+        // uncontended and the plan stays put for repeat executions.
+        let plans = self.plans.lock().unwrap();
+        let Some(plan) = plans.get(&qid) else {
+            // The PlanFragment was lost in flight (chaos): stay silent —
+            // the leader's lease repair re-sends plan + range together.
+            return;
         };
-        match self.map_fold(&plan, qid, ex.lo as usize, ex.hi as usize) {
-            Ok(ack) => {
+        match self.map_fold(plan, &ex) {
+            Ok((ack, done)) => {
+                drop(plans);
+                {
+                    let mut g = self.executed.lock().unwrap();
+                    let (map, order) = &mut *g;
+                    if map.insert((qid, ex.worker), done).is_none() {
+                        order.push_back((qid, ex.worker));
+                    }
+                    while order.len() > 1024 {
+                        if let Some(old) = order.pop_front() {
+                            map.remove(&old);
+                        }
+                    }
+                }
                 let _ = self.leader().cast_frame(METHOD_ACK, |out| ack.encode_into(out));
             }
-            Err(e) => self.ack_error(qid, e.to_string()),
+            Err(e) => {
+                drop(plans);
+                self.ack_error(qid, e.to_string());
+            }
         }
     }
 
@@ -274,7 +376,9 @@ impl WorkerShared {
     /// the result, cast the non-empty partitions to their reducers from
     /// pooled frame buffers, and report to the leader (partition frame
     /// bytes, map time, table footprint).
-    fn map_fold(&self, plan: &PlanState, qid: QueryId, lo: usize, hi: usize) -> Result<Ack> {
+    fn map_fold(&self, plan: &PlanState, ex: &ExecuteRange) -> Result<(Ack, Executed)> {
+        let qid = ex.query_id;
+        let (lo, hi) = (ex.lo as usize, ex.hi as usize);
         let t = Instant::now();
         // Compile whatever IR arrived — the worker has no query registry
         // to consult, exactly as a headless NIC receiving its program
@@ -300,6 +404,7 @@ impl WorkerShared {
         // frames. The Ack's zero tells the leader not to expect them.
         let w = plan.workers;
         let mut part_bytes = vec![0u64; w];
+        let mut part_bodies = vec![Vec::new(); if self.retain { w } else { 0 }];
         let mut body = self.bufs.get(0);
         for (p_idx, part) in partial.partition_by_key(w).iter().enumerate() {
             if part.is_empty() {
@@ -307,21 +412,35 @@ impl WorkerShared {
             }
             body.clear();
             part.encode_into(&mut body);
-            part_bytes[p_idx] = self.peers()[p_idx].cast_frame(METHOD_PARTIAL, |out| {
-                PartialFrame::encode_parts_into(qid, p_idx as u32, self.wi, 0, &body, out);
+            // The leader's routing table sends partition p to its
+            // (possibly re-homed) reducer endpoint; frames carry the
+            // *logical* fragment index + epoch so reducers match them
+            // against the leader's expectations wherever they execute.
+            let dest = ex.route.get(p_idx).map(|&d| d as usize).unwrap_or(p_idx);
+            let peers = self.peers();
+            crate::ensure!(dest < peers.len(), "partition {p_idx} routed to unknown w{dest}");
+            part_bytes[p_idx] = peers[dest].cast_frame(METHOD_PARTIAL, |out| {
+                PartialFrame::encode_parts_into(qid, p_idx as u32, ex.worker, ex.epoch, 0, &body, out);
             })? as u64;
+            if self.retain {
+                part_bodies[p_idx] = body.clone();
+            }
         }
         self.bufs.put(body);
-        Ok(Ack {
-            query_id: qid,
-            worker: self.wi,
-            // Clamped ≥ 1 ns: a measured phase never reports zero, so
-            // the simulated compute share cannot vanish on fast hosts.
-            map_ns: (t.elapsed().as_nanos() as u64).max(1),
-            ht_bytes,
-            part_bytes,
-            error: String::new(),
-        })
+        Ok((
+            Ack {
+                query_id: qid,
+                worker: ex.worker,
+                epoch: ex.epoch,
+                // Clamped ≥ 1 ns: a measured phase never reports zero, so
+                // the simulated compute share cannot vanish on fast hosts.
+                map_ns: (t.elapsed().as_nanos() as u64).max(1),
+                ht_bytes,
+                part_bytes,
+                error: String::new(),
+            },
+            Executed { epoch: ex.epoch, part_bodies },
+        ))
     }
 
     fn on_partial(&self, pf: PartialFrame) {
@@ -329,14 +448,15 @@ impl WorkerShared {
         if self.is_cancelled(qid) {
             return;
         }
+        let key = (qid, pf.partition);
         {
             let mut g = self.reduces.lock().unwrap();
             let st = g
-                .entry(qid)
+                .entry(key)
                 .or_insert_with(|| ReduceState { expect: None, got: HashMap::new() });
-            st.got.insert(pf.from_worker, pf.body);
+            st.got.insert((pf.from_worker, pf.epoch), pf.body);
         }
-        self.try_reduce(qid);
+        self.try_reduce(key);
     }
 
     fn on_reduce(&self, rc: ReduceCmd) {
@@ -344,25 +464,50 @@ impl WorkerShared {
         if self.is_cancelled(qid) {
             return;
         }
+        let key = (qid, rc.partition);
         {
             let mut g = self.reduces.lock().unwrap();
             let st = g
-                .entry(qid)
+                .entry(key)
                 .or_insert_with(|| ReduceState { expect: None, got: HashMap::new() });
             st.expect = Some(rc.expect);
         }
-        self.try_reduce(qid);
+        self.try_reduce(key);
+    }
+
+    /// A repair re-routes the exchange: re-ship the retained body of one
+    /// partition to a substitute reducer. A worker that never executed
+    /// the fragment (or retained nothing) stays silent — the leader's
+    /// next repair round escalates to re-execution.
+    fn on_resend(&self, rs: ResendPartition) {
+        if self.is_cancelled(rs.query_id) {
+            return;
+        }
+        let (body, epoch) = {
+            let g = self.executed.lock().unwrap();
+            match g.0.get(&(rs.query_id, rs.worker)) {
+                Some(done) => match done.part_bodies.get(rs.partition as usize) {
+                    Some(b) if !b.is_empty() => (b.clone(), done.epoch),
+                    _ => return,
+                },
+                None => return,
+            }
+        };
+        let Some(peer) = self.peers().get(rs.to as usize) else { return };
+        let _ = peer.cast_frame(METHOD_PARTIAL, |out| {
+            PartialFrame::encode_parts_into(rs.query_id, rs.partition, rs.worker, epoch, 0, &body, out);
+        });
     }
 
     /// If every expected partition frame is buffered, pre-merge them in
     /// worker order (deterministic) and ship one key-deduplicated
     /// partial to the leader.
-    fn try_reduce(&self, qid: QueryId) {
+    fn try_reduce(&self, key: (QueryId, u32)) {
         let st = {
             let mut g = self.reduces.lock().unwrap();
-            let complete = match g.get(&qid) {
+            let complete = match g.get(&key) {
                 Some(st) => match &st.expect {
-                    Some(e) => e.iter().all(|w| st.got.contains_key(w)),
+                    Some(e) => e.iter().all(|k| st.got.contains_key(k)),
                     None => false,
                 },
                 None => false,
@@ -370,20 +515,20 @@ impl WorkerShared {
             if !complete {
                 return;
             }
-            g.remove(&qid).unwrap()
+            g.remove(&key).unwrap()
         };
-        if let Err(e) = self.pre_merge(qid, st) {
-            self.ack_error(qid, e.to_string());
+        if let Err(e) = self.pre_merge(key.0, key.1, st) {
+            self.ack_error(key.0, e.to_string());
         }
     }
 
-    fn pre_merge(&self, qid: QueryId, st: ReduceState) -> Result<()> {
+    fn pre_merge(&self, qid: QueryId, partition: u32, st: ReduceState) -> Result<()> {
         let t = Instant::now();
         let mut expect = st.expect.expect("checked complete");
         expect.sort_unstable();
         let mut merger: Option<Merger> = None;
-        for wi in &expect {
-            let p = Partial::decode(&st.got[wi])?;
+        for k in &expect {
+            let p = Partial::decode(&st.got[k])?;
             merger.get_or_insert_with(|| Merger::new(p.width)).absorb(&p)?;
         }
         let merged = match merger {
@@ -394,29 +539,59 @@ impl WorkerShared {
         merged.encode_into(&mut body);
         let reduce_ns = (t.elapsed().as_nanos() as u64).max(1);
         self.leader().cast_frame(METHOD_PARTIAL, |out| {
-            PartialFrame::encode_parts_into(qid, self.wi, self.wi, reduce_ns, &body, out);
+            PartialFrame::encode_parts_into(qid, partition, self.wi, 0, reduce_ns, &body, out);
         })?;
         self.bufs.put(body);
         Ok(())
     }
 
-    fn on_cancel(&self, c: CancelQuery) {
-        self.plans.lock().unwrap().remove(&c.query_id);
-        self.reduces.lock().unwrap().remove(&c.query_id);
+    /// A ping from the leader's monitor: answer with a heartbeat. The
+    /// answer rides the same single-threaded dispatch as real work, so
+    /// a dead (or wedged) endpoint stops heartbeating — that silence IS
+    /// the failure signal.
+    fn on_ping(&self, p: Ping) {
+        let hb = Heartbeat { worker: self.wi, nonce: p.nonce };
+        let _ = self.leader().cast_frame(METHOD_HEARTBEAT, |out| hb.encode_into(out));
+    }
+
+    /// Drop every per-query thing this endpoint holds.
+    fn close(&self, qid: QueryId) {
+        self.plans.lock().unwrap().remove(&qid);
+        self.reduces.lock().unwrap().retain(|(q, _), _| *q != qid);
+        let mut g = self.executed.lock().unwrap();
+        let (map, order) = &mut *g;
+        map.retain(|(q, _), _| *q != qid);
+        order.retain(|(q, _)| *q != qid);
+    }
+
+    /// Mark an id closed so its late frames are discarded. Bounded
+    /// memory: evict the *oldest* ids only — their frames have long
+    /// drained; a stray late frame for an evicted id would merely
+    /// recreate a plans/reduces entry that the next close (or nothing)
+    /// cleans, never corrupt a live query (ids are never reused).
+    fn mark_closed(&self, qid: QueryId) {
         let mut cc = self.cancelled.lock().unwrap();
         let (set, order) = &mut *cc;
-        if set.insert(c.query_id) {
-            order.push_back(c.query_id);
+        if set.insert(qid) {
+            order.push_back(qid);
         }
-        // Bounded memory: evict the *oldest* ids only — their frames
-        // have long drained; a stray late frame for an evicted id would
-        // merely recreate a plans/reduces entry that the next CancelQuery
-        // (or nothing) cleans, never corrupt a live query.
         while order.len() > 4096 {
             if let Some(old) = order.pop_front() {
                 set.remove(&old);
             }
         }
+    }
+
+    fn on_cancel(&self, c: CancelQuery) {
+        self.close(c.query_id);
+        self.mark_closed(c.query_id);
+    }
+
+    /// The leader finished the query: retention and straggler frames
+    /// (duplicates, delayed resends) are dead weight — drop them all.
+    fn on_release(&self, r: ReleaseQuery) {
+        self.close(r.query_id);
+        self.mark_closed(r.query_id);
     }
 }
 
@@ -431,10 +606,18 @@ enum Phase {
 }
 
 struct AckInfo {
+    /// Epoch of the execution attempt this ack reports — reducers are
+    /// told to expect frames carrying exactly this `(worker, epoch)`.
+    epoch: u32,
     map_ns: u64,
     ht_bytes: u64,
     part_bytes: Vec<u64>,
 }
+
+/// Repair rounds before the leader gives up on a query. Bounds every
+/// `wait()` under arbitrary fault schedules: each round either finishes
+/// the query or burns one of these.
+const MAX_REPAIRS: u32 = 32;
 
 /// Leader-side protocol state of one query.
 struct QueryState {
@@ -448,6 +631,24 @@ struct QueryState {
     worker_nodes: Vec<usize>,
     est_secs: Vec<f64>,
     input_bytes_each: u64,
+    /// Current execution epoch: bumped on every repair round so stale
+    /// acks and partials from superseded attempts are recognizable.
+    epoch: u32,
+    /// Physical endpoint currently executing logical fragment `l`
+    /// (identity until a repair re-homes a dead worker's fragment).
+    assign: Vec<usize>,
+    /// Physical endpoint currently reducing partition `p` — the routing
+    /// table shipped inside every ExecuteRange.
+    red_assign: Vec<u32>,
+    /// Epoch each fragment's next valid ack must carry.
+    want_epoch: Vec<u32>,
+    repairs: u32,
+    /// Last ack/partial arrival (or repair) — the stall detector's clock.
+    last_progress: Instant,
+    /// Retained so repair can re-cast PlanFragment + ExecuteRange.
+    plan_bytes: Vec<u8>,
+    ranges: Vec<(u64, u64)>,
+    morsel_rows: u64,
     acks: Vec<Option<AckInfo>>,
     acked: usize,
     expected_reducers: usize,
@@ -489,7 +690,17 @@ struct LeaderShared {
     sched: Mutex<Scheduler>,
     catalog: Arc<Mutex<HashMap<QueryId, Arc<TpchDb>>>>,
     worker_clients: OnceLock<Vec<Client>>,
+    /// Per-endpoint instant of the last heartbeat (index = worker).
+    last_heard: Mutex<Vec<Instant>>,
+    /// Endpoints whose lease expired. Monotone: a declared-dead
+    /// endpoint never rejoins (rejoin is an elasticity problem, not a
+    /// fault-tolerance one — see DESIGN §3d).
+    dead: Mutex<HashSet<usize>>,
 }
+
+// Lock-order discipline (deadlock freedom): `queries` before `dead`
+// before `sched`; `last_heard` is leaf-only. Casts are non-blocking
+// sends, safe under any of them.
 
 impl LeaderShared {
     /// Release the resources a live query holds (storage attach,
@@ -535,8 +746,8 @@ impl LeaderShared {
             return;
         }
         let wi = ack.worker as usize;
-        if wi >= st.w || st.acks[wi].is_some() {
-            return;
+        if wi >= st.w || ack.epoch != st.want_epoch[wi] || st.acks[wi].is_some() {
+            return; // stale epoch or duplicate: already superseded
         }
         if ack.part_bytes.len() != st.w {
             let msg = format!(
@@ -551,51 +762,76 @@ impl LeaderShared {
         st.control_from[wi] += wire_bytes;
         st.trace.push(format!("recv Ack w{wi}"));
         st.acks[wi] = Some(AckInfo {
+            epoch: ack.epoch,
             map_ns: ack.map_ns,
             ht_bytes: ack.ht_bytes,
             part_bytes: ack.part_bytes,
         });
         st.acked += 1;
+        st.last_progress = Instant::now();
         if st.acked == st.w {
-            self.start_reduce(qid, st);
+            self.push_reduce(qid, st);
         }
         self.cv.notify_all();
     }
 
     /// All map acks are in: assemble the exchange expectations and
-    /// command the engaged reducers.
-    fn start_reduce(&self, qid: QueryId, st: &mut QueryState) {
-        let mut expect_per_p: Vec<Vec<u32>> = vec![Vec::new(); st.w];
+    /// command the engaged reducers. Safe to call again after a repair
+    /// round: partitions whose pre-merged frame already arrived are
+    /// skipped, and surviving senders are asked to re-cast their
+    /// retained partition bodies to the (possibly re-homed) reducers —
+    /// the originals may have been lost with a dead endpoint.
+    fn push_reduce(&self, qid: QueryId, st: &mut QueryState) {
+        let mut expect_per_p: Vec<Vec<(u32, u32)>> = vec![Vec::new(); st.w];
         for (wi, info) in st.acks.iter().enumerate() {
             let info = info.as_ref().expect("acked == w");
             for (p, &b) in info.part_bytes.iter().enumerate() {
                 if b > 0 {
-                    expect_per_p[p].push(wi as u32);
+                    expect_per_p[p].push((wi as u32, info.epoch));
                 }
             }
         }
         st.expected_reducers = expect_per_p.iter().filter(|e| !e.is_empty()).count();
         st.phase = Phase::Reducing;
+        let resend = st.repairs > 0;
         let clients = self.worker_clients.get().expect("worker clients not wired");
         for (p, expect) in expect_per_p.into_iter().enumerate() {
-            if expect.is_empty() {
+            if expect.is_empty() || st.reducer_frames[p].is_some() {
                 continue;
             }
+            let dest = st.red_assign[p] as usize;
             st.trace.push(format!("send Reduce p{p} expect={}", expect.len()));
+            if resend {
+                for &(wi, _) in &expect {
+                    let rs = ResendPartition {
+                        query_id: qid,
+                        worker: wi,
+                        partition: p as u32,
+                        to: st.red_assign[p],
+                    };
+                    let sender = st.assign[wi as usize];
+                    if let Ok(b) =
+                        clients[sender].cast_frame(METHOD_RESEND, |out| rs.encode_into(out))
+                    {
+                        st.control_to[sender] += b as u64;
+                    }
+                }
+            }
             let cmd = ReduceCmd { query_id: qid, partition: p as u32, expect };
-            match clients[p].cast_frame(METHOD_REDUCE, |out| cmd.encode_into(out)) {
-                Ok(b) => st.control_to[p] += b as u64,
+            match clients[dest].cast_frame(METHOD_REDUCE, |out| cmd.encode_into(out)) {
+                Ok(b) => st.control_to[dest] += b as u64,
                 Err(e) => {
                     // An unreachable reducer would leave the query in
                     // Reducing forever (its frame can never arrive) and
                     // wait() blocked — fail it instead.
-                    self.fail(qid, st, format!("reduce command to w{p}: {e}"));
+                    self.fail(qid, st, format!("reduce command to w{dest}: {e}"));
                     return;
                 }
             }
         }
-        if st.expected_reducers == 0 {
-            // Empty input or zero groups everywhere: complete now.
+        if st.reducer_got >= st.expected_reducers {
+            // Empty input (zero groups everywhere), or every engaged
+            // partition already delivered before the repair: complete.
             self.complete(qid, st);
         }
     }
@@ -614,8 +850,111 @@ impl LeaderShared {
         st.trace.push(format!("recv Partial p{p}"));
         st.reducer_frames[p] = Some((pf.body, pf.reduce_ns, wire_bytes));
         st.reducer_got += 1;
+        st.last_progress = Instant::now();
         if st.reducer_got == st.expected_reducers {
             self.complete(qid, st);
+        }
+        self.cv.notify_all();
+    }
+
+    fn on_heartbeat(&self, hb: Heartbeat) {
+        if let Some(slot) = self.last_heard.lock().unwrap().get_mut(hb.worker as usize) {
+            *slot = Instant::now();
+        }
+    }
+
+    /// One repair round for a stuck or bereaved query: bump the epoch,
+    /// re-home partitions off dead reducers, re-place and re-execute
+    /// every fragment lacking a valid ack (dead executor, or frames
+    /// lost in flight). Deterministic folds make this idempotent — a
+    /// re-run fragment produces byte-identical partitions, so whatever
+    /// frames the first attempt did deliver collapse with the re-sent
+    /// ones at the reducers.
+    fn repair(&self, qid: QueryId, st: &mut QueryState) {
+        if !matches!(st.phase, Phase::Mapping | Phase::Reducing) {
+            return;
+        }
+        if st.repairs >= MAX_REPAIRS {
+            self.fail(qid, st, format!("unrecoverable after {MAX_REPAIRS} repair rounds"));
+            self.cv.notify_all();
+            return;
+        }
+        st.repairs += 1;
+        st.epoch += 1;
+        let dead = self.dead.lock().unwrap().clone();
+        let live: Vec<usize> = (0..st.w).filter(|i| !dead.contains(i)).collect();
+        if live.is_empty() {
+            self.fail(qid, st, "no live workers left".into());
+            self.cv.notify_all();
+            return;
+        }
+        st.trace.push(format!("repair #{} epoch={}", st.repairs, st.epoch));
+        for p in 0..st.w {
+            if dead.contains(&(st.red_assign[p] as usize)) {
+                st.red_assign[p] = live[p % live.len()] as u32;
+            }
+        }
+        for l in 0..st.w {
+            if !dead.contains(&st.assign[l]) {
+                continue;
+            }
+            // The fragment's executor died: invalidate its ack (the
+            // partials it casted may be lost with it) and re-place its
+            // task — release the dead node's scheduler load, charge a
+            // surviving one.
+            if st.acks[l].take().is_some() {
+                st.acked -= 1;
+            }
+            {
+                let mut s = self.sched.lock().unwrap();
+                let task = Task { id: l, kind: TaskKind::Compute, est_secs: st.est_secs[l] };
+                if let Some(pl) = s.replace(st.worker_nodes[l], st.est_secs[l], &task) {
+                    st.worker_nodes[l] = pl.node_id;
+                }
+            }
+            st.assign[l] = live[l % live.len()];
+        }
+        // Re-cast plan + range for every fragment lacking a valid ack.
+        let clients = self.worker_clients.get().expect("worker clients not wired");
+        for l in 0..st.w {
+            if st.acks[l].is_some() {
+                continue;
+            }
+            st.want_epoch[l] = st.epoch;
+            let dest = st.assign[l];
+            let frag = PlanFragment {
+                query_id: qid,
+                name: st.query.clone(),
+                plan: st.plan_bytes.clone(),
+                workers: st.w as u32,
+                morsel_rows: st.morsel_rows,
+            };
+            st.trace.push(format!("send Plan w{l} (repair)"));
+            if let Ok(b) = clients[dest].cast_frame(METHOD_PLAN, |out| frag.encode_into(out)) {
+                st.control_to[dest] += b as u64;
+            }
+            let (lo, hi) = st.ranges[l];
+            let ex = ExecuteRange {
+                query_id: qid,
+                worker: l as u32,
+                lo,
+                hi,
+                epoch: st.epoch,
+                route: st.red_assign.clone(),
+            };
+            st.trace.push(format!("send Execute w{l} rows={lo}..{hi} (repair)"));
+            if let Ok(b) = clients[dest].cast_frame(METHOD_EXECUTE, |out| ex.encode_into(out)) {
+                st.control_to[dest] += b as u64;
+            }
+        }
+        st.last_progress = Instant::now();
+        if st.acked == st.w {
+            // Only reducers were lost (or frames past the map phase):
+            // every ack is still valid — go straight to re-commanding
+            // the reduce with resent exchange bodies.
+            self.push_reduce(qid, st);
+        } else {
+            st.phase = Phase::Mapping;
         }
         self.cv.notify_all();
     }
@@ -659,6 +998,17 @@ impl LeaderShared {
             }
         };
         self.release(qid, st);
+        // Tell every worker the query is over: drop retained partition
+        // bodies, buffered partials, plans — and suppress stragglers
+        // (late duplicates of a finished query must not accrete state).
+        if let Some(clients) = self.worker_clients.get() {
+            let rq = ReleaseQuery { query_id: qid };
+            for (i, c) in clients.iter().enumerate() {
+                if let Ok(b) = c.cast_frame(METHOD_RELEASE, |out| rq.encode_into(out)) {
+                    st.control_to[i] += b as u64;
+                }
+            }
+        }
 
         let worker_secs: Vec<f64> = acks
             .iter()
@@ -707,6 +1057,7 @@ impl LeaderShared {
             control_bytes,
             input_bytes: st.input_bytes_each * st.w as u64,
             host_compute_secs: max(&worker_secs) + max(&reduce_secs),
+            repairs: st.repairs,
         };
         st.trace.push(format!("done rows={}", report.rows.len()));
         st.result = Some(report);
@@ -725,11 +1076,24 @@ pub struct QueryService {
     catalog: Arc<Mutex<HashMap<QueryId, Arc<TpchDb>>>>,
     worker_clients: Vec<Client>,
     leader: Arc<LeaderShared>,
+    /// Signals the monitor thread (if any) to exit; joined in Drop
+    /// before the endpoints drain.
+    stop: Arc<AtomicBool>,
+    monitor: Option<std::thread::JoinHandle<()>>,
     // Declaration order is drop order: worker endpoints drain first
     // (their final casts still find the leader endpoint alive), the
     // leader endpoint drains last.
     _worker_eps: Vec<Endpoint>,
     _leader_ep: Endpoint,
+}
+
+impl Drop for QueryService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 impl QueryService {
@@ -744,6 +1108,33 @@ impl QueryService {
     pub fn with_config(cluster: ClusterSpec, cfg: ServiceConfig) -> Self {
         let n = cluster.num_nodes();
         let w = if cfg.workers == 0 { n } else { cfg.workers.min(n) };
+        // The lease monitor (and the worker-side body retention that
+        // resend depends on) runs only when the caller opted into fault
+        // tolerance; default-config services keep the exact pre-chaos
+        // behavior and allocation profile.
+        let fault_tolerant = cfg.chaos.is_some() || cfg.heartbeat_ms > 0 || cfg.lease_ms > 0;
+        // Deterministic per-endpoint fault schedule: each endpoint
+        // derives its own stream from the one chaos seed, so a run is
+        // replayable end to end from `(seed, kill)` alone.
+        let fault_for = |wi: usize| -> FaultPlan {
+            let Some(ch) = cfg.chaos else { return FaultPlan::none() };
+            let mut plan = if ch.seed != 0 {
+                let derived = ch.seed ^ (wi as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                FaultPlan::from_seed(derived, CHAOS_METHODS)
+            } else {
+                FaultPlan::none()
+            };
+            if let Some((kw, phase)) = ch.kill {
+                if kw as usize == wi {
+                    let method = match phase {
+                        KillPhase::MidMap => METHOD_EXECUTE,
+                        KillPhase::MidReduce => METHOD_REDUCE,
+                    };
+                    plan = plan.with_kill(Some(KillSpec { method: Some(method), nth: 1 }));
+                }
+            }
+            plan
+        };
         let catalog: Arc<Mutex<HashMap<QueryId, Arc<TpchDb>>>> =
             Arc::new(Mutex::new(HashMap::new()));
         let shareds: Vec<Arc<WorkerShared>> = (0..w)
@@ -753,6 +1144,8 @@ impl QueryService {
                     catalog: Arc::clone(&catalog),
                     plans: Mutex::new(HashMap::new()),
                     reduces: Mutex::new(HashMap::new()),
+                    executed: Mutex::new((HashMap::new(), VecDeque::new())),
+                    retain: fault_tolerant,
                     cancelled: Mutex::new((HashSet::new(), VecDeque::new())),
                     peers: OnceLock::new(),
                     leader: OnceLock::new(),
@@ -762,9 +1155,11 @@ impl QueryService {
             .collect();
         let worker_eps: Vec<Endpoint> = shareds
             .iter()
-            .map(|ws| {
+            .enumerate()
+            .map(|(wi, ws)| {
                 let (p, e, x, r, c) =
                     (ws.clone(), ws.clone(), ws.clone(), ws.clone(), ws.clone());
+                let (rs, pg, rl) = (ws.clone(), ws.clone(), ws.clone());
                 Dispatch::new()
                     .on(METHOD_PLAN, move |m| {
                         p.on_plan(PlanFragment::decode(&m.payload)?);
@@ -786,7 +1181,19 @@ impl QueryService {
                         c.on_cancel(CancelQuery::decode(&m.payload)?);
                         Ok(Vec::new())
                     })
-                    .serve()
+                    .on(METHOD_RESEND, move |m| {
+                        rs.on_resend(ResendPartition::decode(&m.payload)?);
+                        Ok(Vec::new())
+                    })
+                    .on(METHOD_PING, move |m| {
+                        pg.on_ping(Ping::decode(&m.payload)?);
+                        Ok(Vec::new())
+                    })
+                    .on(METHOD_RELEASE, move |m| {
+                        rl.on_release(ReleaseQuery::decode(&m.payload)?);
+                        Ok(Vec::new())
+                    })
+                    .serve_with_faults(fault_for(wi))
             })
             .collect();
         let worker_clients: Vec<Client> = worker_eps.iter().map(|e| e.client()).collect();
@@ -802,8 +1209,19 @@ impl QueryService {
             sched,
             catalog: Arc::clone(&catalog),
             worker_clients: OnceLock::new(),
+            last_heard: Mutex::new(vec![Instant::now(); w]),
+            dead: Mutex::new(HashSet::new()),
         });
-        let (la, lp) = (Arc::clone(&leader), Arc::clone(&leader));
+        let (la, lp, lh) = (Arc::clone(&leader), Arc::clone(&leader), Arc::clone(&leader));
+        // The leader endpoint gets its own fault stream (drops/delays of
+        // acks and partials are recoverable via the stall repair) but
+        // never a kill: leader death is explicitly out of scope.
+        let leader_plan = match cfg.chaos {
+            Some(ch) if ch.seed != 0 => {
+                FaultPlan::from_seed(ch.seed ^ 0xD1B5_4A32_D192_ED03, CHAOS_METHODS)
+            }
+            _ => FaultPlan::none(),
+        };
         let leader_ep = Dispatch::new()
             .on(METHOD_ACK, move |m| {
                 la.on_ack(Ack::decode(&m.payload)?, 16 + m.payload.len() as u64);
@@ -813,13 +1231,32 @@ impl QueryService {
                 lp.on_partial(PartialFrame::decode(&m.payload)?, 16 + m.payload.len() as u64);
                 Ok(Vec::new())
             })
-            .serve();
+            .on(METHOD_HEARTBEAT, move |m| {
+                lh.on_heartbeat(Heartbeat::decode(&m.payload)?);
+                Ok(Vec::new())
+            })
+            .serve_with_faults(leader_plan);
         let leader_client = leader_ep.client();
         let _ = leader.worker_clients.set(worker_clients.clone());
         for ws in &shareds {
             let _ = ws.peers.set(worker_clients.clone());
             let _ = ws.leader.set(leader_client.clone());
         }
+        let stop = Arc::new(AtomicBool::new(false));
+        let monitor = fault_tolerant.then(|| {
+            let heartbeat =
+                Duration::from_millis(if cfg.heartbeat_ms == 0 { 20 } else { cfg.heartbeat_ms });
+            let lease = if cfg.lease_ms == 0 { heartbeat * 8 } else {
+                Duration::from_millis(cfg.lease_ms)
+            };
+            let chaos_enabled = cfg.chaos.is_some();
+            let leader = Arc::clone(&leader);
+            let stop = Arc::clone(&stop);
+            let clients = worker_clients.clone();
+            std::thread::spawn(move || {
+                Self::monitor_loop(&leader, &clients, heartbeat, lease, chaos_enabled, &stop)
+            })
+        });
         Self {
             w,
             morsel_rows: cfg.morsel_rows.max(1),
@@ -827,14 +1264,88 @@ impl QueryService {
             catalog,
             worker_clients,
             leader,
+            stop,
+            monitor,
             _worker_eps: worker_eps,
             _leader_ep: leader_ep,
+        }
+    }
+
+    /// The leader's failure detector: ping every live endpoint, expire
+    /// leases of silent ones, and run a repair pass over in-flight
+    /// queries that either touch a dead endpoint or (chaos runs only —
+    /// a loaded CI machine must not fail a merely-slow clean query)
+    /// have made no progress for a full lease.
+    fn monitor_loop(
+        leader: &LeaderShared,
+        clients: &[Client],
+        heartbeat: Duration,
+        lease: Duration,
+        chaos_enabled: bool,
+        stop: &AtomicBool,
+    ) {
+        let mut nonce = 0u64;
+        while !stop.load(Ordering::Relaxed) {
+            nonce += 1;
+            let ping = Ping { nonce };
+            {
+                let dead = leader.dead.lock().unwrap().clone();
+                for (i, c) in clients.iter().enumerate() {
+                    if !dead.contains(&i) {
+                        let _ = c.cast_frame(METHOD_PING, |out| ping.encode_into(out));
+                    }
+                }
+            }
+            let now = Instant::now();
+            {
+                let heard = leader.last_heard.lock().unwrap();
+                let mut dead = leader.dead.lock().unwrap();
+                for (i, t) in heard.iter().enumerate() {
+                    if !dead.contains(&i) && now.duration_since(*t) > lease {
+                        dead.insert(i);
+                    }
+                }
+            }
+            {
+                let mut g = leader.queries.lock().unwrap();
+                let qids: Vec<QueryId> = g.keys().copied().collect();
+                for qid in qids {
+                    let Some(st) = g.get_mut(&qid) else { continue };
+                    if !matches!(st.phase, Phase::Mapping | Phase::Reducing) {
+                        continue;
+                    }
+                    let touches_dead = {
+                        let dead = leader.dead.lock().unwrap();
+                        st.assign.iter().any(|a| dead.contains(a))
+                            || st.red_assign.iter().any(|r| dead.contains(&(*r as usize)))
+                    };
+                    let stalled =
+                        chaos_enabled && now.duration_since(st.last_progress) > lease;
+                    if touches_dead || stalled {
+                        leader.repair(qid, st);
+                    }
+                }
+            }
+            std::thread::sleep(heartbeat);
         }
     }
 
     /// Worker endpoints this service runs.
     pub fn workers(&self) -> usize {
         self.w
+    }
+
+    /// Backpressure credits currently held by in-flight decodes. Zero
+    /// whenever no query is completing — the chaos suite asserts this
+    /// after every fault schedule (failure paths must not leak).
+    pub fn credits_in_flight(&self) -> usize {
+        self.leader.credits.in_flight()
+    }
+
+    /// Endpoints the lease monitor has declared dead (0 without chaos
+    /// or when every worker heartbeats within its lease).
+    pub fn dead_workers(&self) -> usize {
+        self.leader.dead.lock().unwrap().len()
     }
 
     /// Contiguous row ranges of `len` over `w` workers.
@@ -898,6 +1409,8 @@ impl QueryService {
                 .collect()
         };
         self.catalog.lock().unwrap().insert(qid, Arc::clone(db));
+        let plan_bytes = plan.encode();
+        let identity_route: Vec<u32> = (0..self.w as u32).collect();
         let mut g = self.leader.queries.lock().unwrap();
         g.insert(
             qid,
@@ -911,6 +1424,15 @@ impl QueryService {
                 worker_nodes,
                 est_secs,
                 input_bytes_each,
+                epoch: 0,
+                assign: (0..self.w).collect(),
+                red_assign: identity_route.clone(),
+                want_epoch: vec![0; self.w],
+                repairs: 0,
+                last_progress: Instant::now(),
+                plan_bytes: plan_bytes.clone(),
+                ranges: ranges.iter().map(|&(s, e)| (s as u64, e as u64)).collect(),
+                morsel_rows: self.morsel_rows as u64,
                 acks: (0..self.w).map(|_| None).collect(),
                 acked: 0,
                 expected_reducers: 0,
@@ -928,7 +1450,7 @@ impl QueryService {
         let frag = PlanFragment {
             query_id: qid,
             name: plan.name.clone(),
-            plan: plan.encode(),
+            plan: plan_bytes,
             workers: self.w as u32,
             morsel_rows: self.morsel_rows as u64,
         };
@@ -944,6 +1466,8 @@ impl QueryService {
                     worker: wi as u32,
                     lo: lo as u64,
                     hi: hi as u64,
+                    epoch: 0,
+                    route: identity_route.clone(),
                 };
                 st.trace.push(format!("send Execute w{wi} rows={lo}..{hi}"));
                 st.control_to[wi] += self.worker_clients[wi]

@@ -13,7 +13,7 @@
 use crate::analytics::morsel::DEFAULT_MORSEL_ROWS;
 use crate::analytics::tpch::TpchDb;
 use crate::cluster::ClusterSpec;
-use crate::coordinator::service::{QueryService, ServiceConfig};
+use crate::coordinator::service::{ChaosConfig, QueryService, ServiceConfig};
 use crate::error::Result;
 use std::sync::Arc;
 
@@ -30,11 +30,14 @@ pub struct DistributedQuery {
     pub threads: usize,
     /// Rows per morsel inside each worker's partition.
     pub morsel_rows: usize,
+    /// Deterministic fault injection for this run (also enables the
+    /// lease monitor — see [`ServiceConfig::chaos`]).
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl DistributedQuery {
     pub fn new(cluster: ClusterSpec) -> Self {
-        Self { cluster, workers: 0, threads: 0, morsel_rows: DEFAULT_MORSEL_ROWS }
+        Self { cluster, workers: 0, threads: 0, morsel_rows: DEFAULT_MORSEL_ROWS, chaos: None }
     }
 
     pub fn with_workers(mut self, w: usize) -> Self {
@@ -52,6 +55,11 @@ impl DistributedQuery {
         self
     }
 
+    pub fn with_chaos(mut self, chaos: ChaosConfig) -> Self {
+        self.chaos = Some(chaos);
+        self
+    }
+
     /// Run any query from the Figure-3 set distributed across the
     /// cluster's workers: `submit` + `wait` on a call-scoped
     /// [`QueryService`]. Result rows `approx_eq_rows` the single-node
@@ -63,6 +71,8 @@ impl DistributedQuery {
                 workers: self.workers,
                 threads: self.threads,
                 morsel_rows: self.morsel_rows,
+                chaos: self.chaos,
+                ..ServiceConfig::default()
             },
         );
         let id = svc.submit(db, query)?;
@@ -175,6 +185,19 @@ mod tests {
                 "q5 diverged at morsel_rows={rows}"
             );
         }
+    }
+
+    #[test]
+    fn one_shot_run_survives_a_seeded_kill() {
+        use crate::coordinator::service::KillPhase;
+        let db = db(0.001, 137);
+        let single = queries::q6::run(&db);
+        let dist = DistributedQuery::new(cluster(3))
+            .with_chaos(ChaosConfig { seed: 0, kill: Some((1, KillPhase::MidMap)) })
+            .run(&db, "q6")
+            .unwrap();
+        assert!(single.approx_eq_rows(&dist.rows), "q6 diverged across a worker kill");
+        assert!(dist.repairs > 0, "the kill must have forced a repair round");
     }
 
     #[test]

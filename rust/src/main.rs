@@ -10,7 +10,7 @@ use lovelock::analytics::{profile, queries, run_query, TpchConfig, TpchDb, QUERY
 use lovelock::bigquery::{self, Breakdown};
 use lovelock::cli::Command;
 use lovelock::cluster::{ClusterSpec, Role};
-use lovelock::coordinator::{QueryService, ServiceConfig};
+use lovelock::coordinator::{ChaosConfig, KillPhase, QueryService, ServiceConfig};
 use lovelock::costmodel::CostModel;
 use lovelock::gnn::{GnnHost, LovelockGnn};
 use lovelock::memsim;
@@ -45,6 +45,8 @@ fn main() {
         .opt("query", Some("q1"), "query name for dist")
         .multi("param", "plan parameter key=value (repeatable; needs an explicit query)")
         .opt("concurrency", Some("1"), "simultaneous queries for dist (submit/poll/wait)")
+        .opt("chaos-seed", None, "seed a deterministic fault schedule on every dist endpoint")
+        .opt("kill-worker", None, "kill worker W at a phase: W, W@mid-map, or W@mid-reduce")
         .flag("lovelock", "use a Lovelock (E2000) cluster for dist")
         .flag("serial", "run tpch single-threaded instead of morsel-driven")
         .flag("chunked", "use chunked-stream checkpointing");
@@ -304,12 +306,37 @@ fn cmd_dist(args: &lovelock::cli::Args) -> lovelock::Result<()> {
         trad
     };
     let name = cluster.name.clone();
+    // --chaos-seed / --kill-worker wire a deterministic FaultPlan onto
+    // every endpoint: the same flags replay the same drops, duplicates,
+    // delays, and kill — and the repair rounds that survive them.
+    let chaos_seed = args.get_u64("chaos-seed", 0);
+    let kill = match args.get_str("kill-worker", "").as_str() {
+        "" => None,
+        spec => {
+            let (w, phase) = match spec.split_once('@') {
+                None => (spec, KillPhase::MidMap),
+                Some((w, "mid-map")) => (w, KillPhase::MidMap),
+                Some((w, "mid-reduce")) => (w, KillPhase::MidReduce),
+                Some((_, p)) => {
+                    return Err(lovelock::err!(
+                        "--kill-worker phase {p:?} (want mid-map or mid-reduce)"
+                    ))
+                }
+            };
+            let w: u32 = w
+                .parse()
+                .map_err(|_| lovelock::err!("--kill-worker expects W or W@phase, got {spec:?}"))?;
+            Some((w, phase))
+        }
+    };
+    let chaos = (chaos_seed != 0 || kill.is_some())
+        .then_some(ChaosConfig { seed: chaos_seed, kill });
     // workers sizes the traditional cluster; a Lovelock replacement uses
     // all φ·workers NIC nodes. The service hosts one worker endpoint per
     // node; --concurrency queries interleave over them.
     let svc = QueryService::with_config(
         cluster,
-        ServiceConfig { workers: 0, threads, morsel_rows },
+        ServiceConfig { workers: 0, threads, morsel_rows, chaos, ..ServiceConfig::default() },
     );
     let t0 = std::time::Instant::now();
     let ids: Vec<_> = (0..concurrency)
@@ -329,6 +356,13 @@ fn cmd_dist(args: &lovelock::cli::Args) -> lovelock::Result<()> {
             r.shuffle_bytes / 1000,
             r.control_bytes
         );
+        if chaos.is_some() {
+            println!(
+                "  chaos: {} repair round(s), {} endpoint(s) declared dead",
+                r.repairs,
+                svc.dead_workers()
+            );
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     if concurrency > 1 {

@@ -188,6 +188,210 @@ impl Dispatch {
     pub fn serve(self) -> Endpoint {
         Endpoint::serve(self.handlers)
     }
+
+    /// Spawn the endpoint with a deterministic [`FaultPlan`] applied to
+    /// every arriving frame (chaos testing).
+    pub fn serve_with_faults(self, plan: FaultPlan) -> Endpoint {
+        Endpoint::serve_with_faults(self.handlers, plan)
+    }
+}
+
+// ---------------------------------------------------------- fault layer
+
+/// What to do to the Nth frame of a given method arriving at an endpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Discard the frame silently (a lost packet). `call`ers observe a
+    /// closed reply channel; `cast`s simply vanish.
+    Drop,
+    /// Deliver the frame twice (a retransmitted packet). The duplicate is
+    /// dispatched as a one-way frame so a `call` still gets one reply.
+    Duplicate,
+    /// Hold the frame until `k` more frames have arrived (reordering).
+    /// Heartbeat traffic keeps the arrival sequence advancing, so a
+    /// delayed frame is never starved forever on a live fabric.
+    Delay(u64),
+}
+
+/// Kill trigger: the endpoint dies immediately *before* dispatching the
+/// `nth` (1-based) frame of `method` — or the `nth` frame of any method
+/// when `method` is `None`. After death the serve loop keeps draining its
+/// queue but drops every frame: casts to a dead endpoint still "succeed"
+/// at the sender (the bytes left), exactly like a dead NIC, so failure
+/// detection must be lease-based rather than send-error-based.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KillSpec {
+    pub method: Option<u32>,
+    pub nth: u64,
+}
+
+/// A deterministic schedule of faults for one endpoint, keyed by
+/// `(method, per-method ordinal)`. Ordinals count frames of the *same*
+/// method, not global arrivals, so background traffic (heartbeats) that
+/// interleaves nondeterministically with the query protocol cannot change
+/// which protocol frame a fault lands on — the same seed always faults
+/// the same frame, which is what makes chaos runs replayable.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    actions: HashMap<(u32, u64), FaultAction>,
+    kill: Option<KillSpec>,
+}
+
+impl FaultPlan {
+    /// No faults: `serve_with_faults` with this plan behaves like `serve`.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Kill the endpoint just before the `nth` (1-based) frame of `method`.
+    pub fn kill_on(method: u32, nth: u64) -> Self {
+        Self { actions: HashMap::new(), kill: Some(KillSpec { method: Some(method), nth }) }
+    }
+
+    /// Add one action for the `nth` (1-based) frame of `method`.
+    pub fn with_action(mut self, method: u32, nth: u64, action: FaultAction) -> Self {
+        self.actions.insert((method, nth), action);
+        self
+    }
+
+    /// Set (or clear) the kill trigger.
+    pub fn with_kill(mut self, kill: Option<KillSpec>) -> Self {
+        self.kill = kill;
+        self
+    }
+
+    /// A random drop/duplicate/delay schedule over `methods`, fully
+    /// determined by `seed`. Each method's first [`Self::SEED_HORIZON`]
+    /// frames independently draw a fault with small probability, so the
+    /// schedule is finite and every run with the same seed is identical.
+    /// No kill is scheduled here — kills are an explicit, separately
+    /// targeted decision (see [`FaultPlan::kill_on`]).
+    pub fn from_seed(seed: u64, methods: &[u32]) -> Self {
+        let mut rng = crate::prng::Pcg64::seed_from_u64(seed);
+        let mut actions = HashMap::new();
+        for &m in methods {
+            for nth in 1..=Self::SEED_HORIZON {
+                if rng.gen_bool(0.06) {
+                    let action = match rng.gen_range_u64(5) {
+                        0 | 1 => FaultAction::Drop,
+                        2 | 3 => FaultAction::Duplicate,
+                        _ => FaultAction::Delay(1 + rng.gen_range_u64(3)),
+                    };
+                    actions.insert((m, nth), action);
+                }
+            }
+        }
+        Self { actions, kill: None }
+    }
+
+    /// Per-method ordinal horizon considered by [`FaultPlan::from_seed`].
+    pub const SEED_HORIZON: u64 = 24;
+
+    /// True when the plan injects nothing (the zero-overhead fast path).
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty() && self.kill.is_none()
+    }
+
+    /// The scheduled actions, sorted by (method, ordinal) — for tests and
+    /// for printing a replayable chaos schedule.
+    pub fn schedule(&self) -> Vec<(u32, u64, FaultAction)> {
+        let mut v: Vec<_> =
+            self.actions.iter().map(|(&(m, n), &a)| (m, n, a)).collect();
+        v.sort_unstable_by_key(|&(m, n, _)| (m, n));
+        v
+    }
+}
+
+/// Serve-loop side of [`FaultPlan`]: per-method counters, the delayed
+/// frame buffer, and the dead flag.
+struct FaultState {
+    plan: FaultPlan,
+    live: bool, // plan has anything to do (fast-path gate)
+    seq: u64,
+    per_method: HashMap<u32, u64>,
+    delayed: Vec<(u64, Vec<u8>, Option<Sender<Vec<u8>>>)>,
+    dead: bool,
+}
+
+impl FaultState {
+    fn new(plan: FaultPlan) -> Self {
+        let live = !plan.is_empty();
+        Self { plan, live, seq: 0, per_method: HashMap::new(), delayed: Vec::new(), dead: false }
+    }
+
+    /// Run one arriving frame through the plan. Returns the frames to
+    /// dispatch now, in order (delayed frames whose release point was
+    /// reached come before the new arrival).
+    #[allow(clippy::type_complexity)]
+    fn admit(
+        &mut self,
+        frame: Vec<u8>,
+        reply: Option<Sender<Vec<u8>>>,
+        pool: &BufPool,
+    ) -> Vec<(Vec<u8>, Option<Sender<Vec<u8>>>)> {
+        if !self.live && self.delayed.is_empty() && !self.dead {
+            return vec![(frame, reply)];
+        }
+        self.seq += 1;
+        let mut ready = Vec::new();
+        // Release delayed frames that have waited long enough; they
+        // arrived earlier, so they dispatch before the new arrival.
+        let mut i = 0;
+        while i < self.delayed.len() {
+            if self.delayed[i].0 <= self.seq {
+                let (_, f, r) = self.delayed.remove(i);
+                ready.push((f, r));
+            } else {
+                i += 1;
+            }
+        }
+        if self.dead {
+            pool.put(frame);
+            for (f, _) in ready.drain(..) {
+                pool.put(f);
+            }
+            return ready;
+        }
+        let method = if frame.len() >= 4 {
+            u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]])
+        } else {
+            METHOD_ERR
+        };
+        let nth = {
+            let c = self.per_method.entry(method).or_insert(0);
+            *c += 1;
+            *c
+        };
+        if let Some(k) = self.plan.kill {
+            let fire = match k.method {
+                Some(m) => m == method && nth == k.nth,
+                None => self.seq == k.nth,
+            };
+            if fire {
+                self.dead = true;
+                pool.put(frame);
+                for (f, _) in ready.drain(..) {
+                    pool.put(f);
+                }
+                for (_, f, _) in self.delayed.drain(..) {
+                    pool.put(f);
+                }
+                return ready;
+            }
+        }
+        match self.plan.actions.get(&(method, nth)) {
+            None => ready.push((frame, reply)),
+            Some(FaultAction::Drop) => pool.put(frame),
+            Some(FaultAction::Duplicate) => {
+                ready.push((frame.clone(), None));
+                ready.push((frame, reply));
+            }
+            Some(FaultAction::Delay(k)) => {
+                self.delayed.push((self.seq + (*k).max(1), frame, reply));
+            }
+        }
+        ready
+    }
 }
 
 /// One queued request: an encoded frame with an optional reply channel
@@ -218,6 +422,13 @@ impl Endpoint {
     /// both the frame and the decoded payload buffer to the pool after
     /// dispatch. One-way casts skip building a response entirely.
     pub fn serve(handlers: HashMap<u32, Handler>) -> Self {
+        Self::serve_with_faults(handlers, FaultPlan::none())
+    }
+
+    /// [`Endpoint::serve`] with a [`FaultPlan`] interposed between the
+    /// receive queue and dispatch. An empty plan takes a zero-overhead
+    /// fast path, so the faultless endpoint is unchanged.
+    pub fn serve_with_faults(handlers: HashMap<u32, Handler>, plan: FaultPlan) -> Self {
         let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
         let pool = Arc::new(BufPool::new());
         let server_pool = Arc::clone(&pool);
@@ -225,58 +436,72 @@ impl Endpoint {
             .name("rpc-server".into())
             .spawn(move || {
                 let pool = server_pool;
+                let mut faults = FaultState::new(plan);
                 // Exits on the shutdown sentinel or full disconnect,
                 // after draining everything queued before it.
                 while let Ok(Request::Frame(frame, reply_tx)) = rx.recv() {
-                    match reply_tx {
-                        None => {
-                            // One-way cast: dispatch, recycle, no response.
-                            if let Ok(msg) = Message::decode_pooled(&frame, &pool) {
-                                if let Some(h) = handlers.get(&msg.method) {
-                                    let _ = h(&msg);
-                                }
-                                pool.put(msg.payload);
-                            }
-                        }
-                        Some(reply_tx) => {
-                            let resp = match Message::decode_pooled(&frame, &pool) {
-                                Ok(msg) => {
-                                    let out = match handlers.get(&msg.method) {
-                                        Some(h) => match h(&msg) {
-                                            Ok(payload) => {
-                                                Message { method: msg.method, id: msg.id, payload }
-                                            }
-                                            Err(e) => Message {
-                                                method: METHOD_ERR,
-                                                id: msg.id,
-                                                payload: e.to_string().into_bytes(),
-                                            },
-                                        },
-                                        None => Message {
-                                            method: METHOD_ERR,
-                                            id: msg.id,
-                                            payload: b"no such method".to_vec(),
-                                        },
-                                    };
-                                    pool.put(msg.payload);
-                                    out
-                                }
-                                Err(e) => Message {
-                                    method: METHOD_ERR,
-                                    id: 0,
-                                    payload: e.to_string().into_bytes(),
-                                },
-                            };
-                            let mut buf = pool.get(16 + resp.payload.len());
-                            resp.encode_into(&mut buf);
-                            let _ = reply_tx.send(buf);
-                        }
+                    for (frame, reply_tx) in faults.admit(frame, reply_tx, &pool) {
+                        Self::dispatch_one(&handlers, &pool, frame, reply_tx);
                     }
-                    pool.put(frame);
                 }
             })
             .expect("spawn rpc server");
         Self { tx, pool, server: Some(server) }
+    }
+
+    /// Decode, dispatch, and (for calls) answer one frame, recycling the
+    /// frame and payload buffers through the pool.
+    fn dispatch_one(
+        handlers: &HashMap<u32, Handler>,
+        pool: &BufPool,
+        frame: Vec<u8>,
+        reply_tx: Option<Sender<Vec<u8>>>,
+    ) {
+        match reply_tx {
+            None => {
+                // One-way cast: dispatch, recycle, no response.
+                if let Ok(msg) = Message::decode_pooled(&frame, pool) {
+                    if let Some(h) = handlers.get(&msg.method) {
+                        let _ = h(&msg);
+                    }
+                    pool.put(msg.payload);
+                }
+            }
+            Some(reply_tx) => {
+                let resp = match Message::decode_pooled(&frame, pool) {
+                    Ok(msg) => {
+                        let out = match handlers.get(&msg.method) {
+                            Some(h) => match h(&msg) {
+                                Ok(payload) => {
+                                    Message { method: msg.method, id: msg.id, payload }
+                                }
+                                Err(e) => Message {
+                                    method: METHOD_ERR,
+                                    id: msg.id,
+                                    payload: e.to_string().into_bytes(),
+                                },
+                            },
+                            None => Message {
+                                method: METHOD_ERR,
+                                id: msg.id,
+                                payload: b"no such method".to_vec(),
+                            },
+                        };
+                        pool.put(msg.payload);
+                        out
+                    }
+                    Err(e) => Message {
+                        method: METHOD_ERR,
+                        id: 0,
+                        payload: e.to_string().into_bytes(),
+                    },
+                };
+                let mut buf = pool.get(16 + resp.payload.len());
+                resp.encode_into(&mut buf);
+                let _ = reply_tx.send(buf);
+            }
+        }
+        pool.put(frame);
     }
 
     pub fn client(&self) -> Client {
@@ -596,6 +821,93 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+    }
+
+    fn logging_endpoint(plan: FaultPlan) -> (Endpoint, Arc<Mutex<Vec<u8>>>) {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = log.clone();
+        let ep = Dispatch::new()
+            .on(1, move |m: &Message| {
+                log2.lock().unwrap().push(m.payload[0]);
+                Ok(vec![])
+            })
+            .serve_with_faults(plan);
+        (ep, log)
+    }
+
+    #[test]
+    fn fault_drop_loses_exactly_the_nth_frame() {
+        let plan = FaultPlan::none().with_action(1, 2, FaultAction::Drop);
+        let (ep, log) = logging_endpoint(plan);
+        let c = ep.client();
+        for i in 10..14u8 {
+            c.cast(1, vec![i]).unwrap(); // ordinals 1..=4
+        }
+        c.call(1, vec![99]).unwrap(); // ordinal 5 flushes the queue
+        assert_eq!(*log.lock().unwrap(), vec![10, 12, 13, 99]);
+    }
+
+    #[test]
+    fn fault_duplicate_delivers_twice_but_replies_once() {
+        let plan = FaultPlan::none().with_action(1, 1, FaultAction::Duplicate);
+        let (ep, log) = logging_endpoint(plan);
+        let c = ep.client();
+        c.cast(1, vec![7]).unwrap();
+        c.call(1, vec![99]).unwrap();
+        assert_eq!(*log.lock().unwrap(), vec![7, 7, 99]);
+    }
+
+    #[test]
+    fn fault_delay_reorders_but_never_loses() {
+        // Frame 1 is held for 2 arrivals: delivery order becomes 2, 1, 3.
+        let plan = FaultPlan::none().with_action(1, 1, FaultAction::Delay(2));
+        let (ep, log) = logging_endpoint(plan);
+        let c = ep.client();
+        for i in [1u8, 2, 3] {
+            c.cast(1, vec![i]).unwrap();
+        }
+        c.call(1, vec![99]).unwrap();
+        assert_eq!(*log.lock().unwrap(), vec![2, 1, 3, 99]);
+    }
+
+    #[test]
+    fn killed_endpoint_drains_but_drops_everything() {
+        let plan = FaultPlan::kill_on(1, 2);
+        let (ep, log) = logging_endpoint(plan);
+        let c = ep.client();
+        c.cast(1, vec![1]).unwrap(); // survives
+        c.cast(1, vec![2]).unwrap(); // the kill frame — never dispatched
+        c.cast(1, vec![3]).unwrap(); // cast to the dead endpoint "succeeds"
+        // A call to a dead endpoint observes a dropped reply channel.
+        let err = c.call(1, vec![4]).unwrap_err();
+        assert!(err.to_string().contains("endpoint closed"), "{err}");
+        assert_eq!(*log.lock().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn fault_plan_from_seed_is_deterministic_and_seed_sensitive() {
+        let methods = [0x50u32, 0x51, 0x52, 0x54];
+        let a = FaultPlan::from_seed(42, &methods);
+        let b = FaultPlan::from_seed(42, &methods);
+        assert_eq!(a.schedule(), b.schedule());
+        // Across a handful of seeds, the schedules are not all identical
+        // and at least one is non-empty (p(all-empty) < 1e-40).
+        let schedules: Vec<_> =
+            (0..16u64).map(|s| FaultPlan::from_seed(s, &methods).schedule()).collect();
+        assert!(schedules.iter().any(|s| !s.is_empty()));
+        assert!(schedules.iter().any(|s| *s != schedules[0]));
+    }
+
+    #[test]
+    fn empty_fault_plan_is_transparent() {
+        assert!(FaultPlan::none().is_empty());
+        let (ep, log) = logging_endpoint(FaultPlan::none());
+        let c = ep.client();
+        for i in 0..5u8 {
+            c.cast(1, vec![i]).unwrap();
+        }
+        c.call(1, vec![99]).unwrap();
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3, 4, 99]);
     }
 
     /// eRPC calibration: ~10M msgs/s at tiny payloads, ~75 Gbps at 1 MB.

@@ -1,0 +1,244 @@
+//! Chaos: deterministic fault-injection suite for the query service.
+//!
+//! Every test here is replayable: faults come from a seeded
+//! [`FaultPlan`](lovelock::rpc::FaultPlan) (drop/duplicate/delay of the
+//! Nth frame per method, per endpoint) plus explicit worker kills at a
+//! named phase — no timing randomness decides *which* frames are
+//! faulted. The invariants under test (DESIGN.md §3d):
+//!
+//! * **Correctness across kills** — killing a worker mid-map or
+//!   mid-reduce, every registry query still returns serial-identical
+//!   rows after re-execution on survivors.
+//! * **Liveness** — random fault schedules never hang `wait()`: the
+//!   query terminates Done or Failed within the repair bound.
+//! * **No leaks** — backpressure credits balance to zero on every exit
+//!   path (done, failed, cancelled, repaired).
+//! * **Cancel vs. failure** — a cancel racing an in-flight repair
+//!   settles to exactly one terminal state and the service stays
+//!   usable.
+//!
+//! Seeds are fixed (0xC0FFEE for the acceptance runs, proptest_mini's
+//! name-derived seed for the property) so CI failures reproduce locally
+//! with a plain `cargo test --test chaos`.
+
+use lovelock::analytics::{queries, TpchConfig, TpchDb, QUERY_NAMES};
+use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::coordinator::{ChaosConfig, KillPhase, QueryService, QueryStatus, ServiceConfig};
+use lovelock::platform::n2d_milan;
+use lovelock::proptest_mini::{check_with_seed, int_range, PropResult};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn db(sf: f64, seed: u64) -> Arc<TpchDb> {
+    Arc::new(TpchDb::generate(TpchConfig::new(sf, seed)))
+}
+
+fn cluster(n: usize) -> ClusterSpec {
+    ClusterSpec::traditional(n, n2d_milan(), Role::LiteCompute)
+}
+
+/// Chaos-run config: a generous lease so a fold (or a loaded CI
+/// machine) can never outlive it and livelock the epoch counter, and a
+/// fast heartbeat so kill detection stays cheap relative to the suite.
+fn chaos_config(chaos: ChaosConfig) -> ServiceConfig {
+    ServiceConfig {
+        threads: 2,
+        heartbeat_ms: 25,
+        lease_ms: 600,
+        chaos: Some(chaos),
+        ..ServiceConfig::default()
+    }
+}
+
+/// The acceptance bar: one service, worker 1 killed at `phase` by the
+/// first triggering frame it receives, all nine registry queries run
+/// through the survivors — each must reproduce its serial rows, and no
+/// query may leak a backpressure credit.
+///
+/// All queries share the service on purpose: the kill lands during the
+/// first query that sends the trigger frame, and every later query must
+/// still run correctly against a cluster that *starts* with a dead
+/// member (the `touches_dead` repair path, not just the stall path).
+fn kill_survival_suite(phase: KillPhase) {
+    let db = db(0.002, 4242);
+    let svc = QueryService::with_config(
+        cluster(4),
+        chaos_config(ChaosConfig { seed: 0xC0FFEE, kill: Some((1, phase)) }),
+    );
+    let mut total_repairs = 0u32;
+    for q in QUERY_NAMES {
+        let serial = queries::run_query(&db, q).unwrap();
+        let id = svc.submit(&db, q).unwrap();
+        let (rows, report) = svc
+            .wait(id)
+            .unwrap_or_else(|e| panic!("{q} did not survive the {phase:?} kill: {e}"));
+        assert!(
+            serial.approx_eq_rows(&rows),
+            "{q} diverged from serial rows across a {phase:?} kill"
+        );
+        total_repairs += report.repairs;
+        assert_eq!(svc.credits_in_flight(), 0, "{q} leaked a backpressure credit");
+    }
+    assert!(total_repairs > 0, "the {phase:?} kill never forced a repair round");
+    assert!(svc.dead_workers() >= 1, "the killed endpoint was never declared dead");
+}
+
+#[test]
+fn all_queries_survive_a_mid_map_kill() {
+    kill_survival_suite(KillPhase::MidMap);
+}
+
+#[test]
+fn all_queries_survive_a_mid_reduce_kill() {
+    kill_survival_suite(KillPhase::MidReduce);
+}
+
+/// Liveness property: for random chaos seeds (drops, duplicates, and
+/// delays on every data-plane method of every endpoint, leader
+/// included — no kill), `wait()` always terminates within the repair
+/// bound: Done with serial-identical rows, or Failed. Afterward the
+/// credit gate must be balanced. Polls with a wall-clock deadline far
+/// above MAX_REPAIRS × lease so a hang is reported as a property
+/// failure (with the shrunk seed), not a test timeout.
+#[test]
+fn prop_random_fault_schedules_never_hang_wait() {
+    let db = db(0.001, 999);
+    let serial = queries::run_query(&db, "q6").unwrap();
+    // Each case spins a full service and may ride out several
+    // lease-long stalls; cap the case count well below the
+    // framework-default 128 (LOVELOCK_PROP_CASES still raises it).
+    let cases = lovelock::proptest_mini::default_cases().clamp(4, 12);
+    let result = check_with_seed(0x5EED, cases, &int_range(1, 1 << 48), |&seed| {
+        let svc = QueryService::with_config(
+            cluster(3),
+            ServiceConfig {
+                threads: 2,
+                heartbeat_ms: 10,
+                lease_ms: 150,
+                chaos: Some(ChaosConfig { seed: seed as u64, kill: None }),
+                ..ServiceConfig::default()
+            },
+        );
+        let id = svc.submit(&db, "q6").map_err(|e| e.to_string())?;
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            match svc.poll(id) {
+                QueryStatus::Done => {
+                    let (rows, _) = svc.wait(id).map_err(|e| e.to_string())?;
+                    if !serial.approx_eq_rows(&rows) {
+                        return Err(format!("seed {seed}: rows diverged from serial"));
+                    }
+                    break;
+                }
+                // An unrecoverable schedule may legitimately fail after
+                // MAX_REPAIRS rounds; the property is that it *settles*.
+                QueryStatus::Failed(_) => break,
+                QueryStatus::Unknown | QueryStatus::Cancelled => {
+                    return Err(format!("seed {seed}: impossible status"));
+                }
+                QueryStatus::Mapping { .. } | QueryStatus::Reducing { .. } => {
+                    if Instant::now() > deadline {
+                        return Err(format!("seed {seed}: wait() hung past the repair bound"));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+        if svc.credits_in_flight() != 0 {
+            return Err(format!("seed {seed}: backpressure credits leaked"));
+        }
+        Ok(())
+    });
+    if let PropResult::Failed { original, shrunk, message } = result {
+        panic!(
+            "chaos liveness failed: {message}\n  original seed: {original:?}\n  \
+             shrunk seed: {shrunk:?}"
+        );
+    }
+}
+
+/// Cancel racing an in-flight re-execution: a worker is killed mid-map,
+/// and while the monitor is detecting/repairing we cancel. Whichever
+/// side wins, the query settles to exactly one terminal state, `wait()`
+/// returns promptly, no credit leaks, and the service keeps serving.
+#[test]
+fn cancel_during_reexecution_settles_cleanly() {
+    let db = db(0.002, 555);
+    let svc = QueryService::with_config(
+        cluster(3),
+        ServiceConfig {
+            threads: 2,
+            heartbeat_ms: 10,
+            lease_ms: 120,
+            chaos: Some(ChaosConfig { seed: 0, kill: Some((1, KillPhase::MidMap)) }),
+            ..ServiceConfig::default()
+        },
+    );
+    let id = svc.submit(&db, "q1").unwrap();
+    // Sleep past the lease so the kill has been detected and the repair
+    // is (likely) in flight when the cancel lands. Both race outcomes
+    // are legal; each is asserted below.
+    std::thread::sleep(Duration::from_millis(160));
+    let cancelled = svc.cancel(id);
+    let res = svc.wait(id);
+    if cancelled {
+        assert!(res.is_err(), "cancelled query returned rows");
+        assert_eq!(svc.poll(id), QueryStatus::Cancelled);
+        // A second cancel of a terminal query is a no-op, not a
+        // double-finalize.
+        assert!(!svc.cancel(id));
+    } else {
+        // The repair finished (or failed) before the cancel: terminal
+        // either way, and stays terminal.
+        assert!(matches!(svc.poll(id), QueryStatus::Done | QueryStatus::Failed(_)));
+    }
+    assert_eq!(svc.credits_in_flight(), 0, "cancel/failure race leaked a credit");
+    // The service survives the race: a fresh query on the remaining
+    // live workers still reproduces serial rows.
+    let serial = queries::run_query(&db, "q6").unwrap();
+    let id2 = svc.submit(&db, "q6").unwrap();
+    let (rows, _) = svc.wait(id2).unwrap();
+    assert!(serial.approx_eq_rows(&rows), "service unusable after cancel/failure race");
+}
+
+/// Regression guard for the clean path: a default-config service (no
+/// chaos, no lease tuning) must not engage any fault-tolerance
+/// machinery — no monitor, no repairs, no dead endpoints, no "repair"
+/// lines in the conversation trace.
+#[test]
+fn default_config_runs_without_fault_machinery() {
+    let db = db(0.002, 777);
+    let svc = QueryService::with_config(cluster(3), ServiceConfig::default());
+    let id = svc.submit(&db, "q6").unwrap();
+    let (rows, report) = svc.wait(id).unwrap();
+    let serial = queries::run_query(&db, "q6").unwrap();
+    assert!(serial.approx_eq_rows(&rows));
+    assert_eq!(report.repairs, 0);
+    assert_eq!(svc.dead_workers(), 0);
+    assert!(
+        svc.conversation(id).iter().all(|l| !l.contains("repair")),
+        "clean run traced a repair"
+    );
+}
+
+/// Lease monitor without chaos: heartbeats keep every worker's lease
+/// fresh, so a clean query under an armed monitor completes with zero
+/// repairs and zero dead endpoints (the stall repair is chaos-gated so
+/// a slow CI box can't fail a healthy query).
+#[test]
+fn heartbeats_keep_live_workers_out_of_the_dead_set() {
+    let db = db(0.002, 888);
+    let svc = QueryService::with_config(
+        cluster(3),
+        ServiceConfig { threads: 2, heartbeat_ms: 10, lease_ms: 100, ..ServiceConfig::default() },
+    );
+    // Outlive several leases so expiry would have fired if heartbeats
+    // were not refreshing `last_heard`.
+    std::thread::sleep(Duration::from_millis(350));
+    let id = svc.submit(&db, "q1").unwrap();
+    let (rows, report) = svc.wait(id).unwrap();
+    let serial = queries::run_query(&db, "q1").unwrap();
+    assert!(serial.approx_eq_rows(&rows));
+    assert_eq!(report.repairs, 0, "a healthy cluster repaired");
+    assert_eq!(svc.dead_workers(), 0, "a heartbeating worker was declared dead");
+}

@@ -252,7 +252,8 @@ fn prop_protocol_frame_codecs_roundtrip() {
     // inverse: encode → decode is the identity on any field values, and
     // decode rejects one-byte truncations of any encoding.
     use lovelock::coordinator::protocol::{
-        Ack, CancelQuery, ExecuteRange, PartialFrame, PlanFragment, QueryId, ReduceCmd,
+        Ack, CancelQuery, ExecuteRange, Heartbeat, PartialFrame, Ping, PlanFragment, QueryId,
+        ReduceCmd, ReleaseQuery, ResendPartition,
     };
     let strat = pair_of(
         pair_of(int_range(0, i64::MAX / 2), int_range(0, 5000)),
@@ -277,24 +278,40 @@ fn prop_protocol_frame_codecs_roundtrip() {
             worker: small_u,
             lo: u64s.first().copied().unwrap_or(0),
             hi: u64s.last().copied().unwrap_or(0),
+            epoch: small_u % 97,
+            route: u32s.clone(),
         };
         let ack = Ack {
             query_id: qid,
             worker: small_u,
+            epoch: small_u % 89,
             map_ns: *small as u64 * 7,
             ht_bytes: *small as u64 * 31,
             part_bytes: u64s.clone(),
             error: if small % 2 == 0 { String::new() } else { int_to_name(*small) },
         };
-        let red = ReduceCmd { query_id: qid, partition: small_u, expect: u32s };
+        // The reduce expectation carries (sender, epoch) pairs — the
+        // reducer's dedup key against re-executed duplicates.
+        let expect: Vec<(u32, u32)> = u32s.iter().map(|&w| (w, w % 53)).collect();
+        let red = ReduceCmd { query_id: qid, partition: small_u, expect };
         let part = PartialFrame {
             query_id: qid,
             partition: small_u,
             from_worker: small_u / 2,
+            epoch: small_u % 61,
             reduce_ns: *small as u64,
             body: bytes,
         };
         let cancel = CancelQuery { query_id: qid };
+        let ping = Ping { nonce: *small as u64 * 13 };
+        let hb = Heartbeat { worker: small_u % 128, nonce: *small as u64 * 17 };
+        let resend = ResendPartition {
+            query_id: qid,
+            worker: small_u % 128,
+            partition: small_u % 127,
+            to: small_u % 125,
+        };
+        let release = ReleaseQuery { query_id: qid };
 
         macro_rules! roundtrip {
             ($ty:ident, $v:expr) => {{
@@ -314,6 +331,10 @@ fn prop_protocol_frame_codecs_roundtrip() {
         roundtrip!(ReduceCmd, red);
         roundtrip!(PartialFrame, part);
         roundtrip!(CancelQuery, cancel);
+        roundtrip!(Ping, ping);
+        roundtrip!(Heartbeat, hb);
+        roundtrip!(ResendPartition, resend);
+        roundtrip!(ReleaseQuery, release);
         Ok(())
     });
 }
