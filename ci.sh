@@ -65,6 +65,23 @@ if [ "${1:-}" != "quick" ]; then
     cargo test --release -q --test alloc_regression
 fi
 
+# Zone-map pruning gate: pruned and unpruned compilations of randomized
+# window predicates must produce bit-identical partials (the property
+# test), and all three execution paths must agree on every registry
+# query over chunked, zone-mapped storage. `cargo test -q` above already
+# ran these; this stage keeps the invariant visible by name.
+echo "==> zone-map pruning equality (pruned == unpruned, all paths agree)"
+cargo test -q --test properties -- prop_zone_pruning_is_invisible_in_results \
+    three_paths_agree_for_every_registry_query \
+    distributed_q6_and_q19_prune_morsels
+
+# Streaming-generation gate: a full lineitem pass through the chunk
+# stream must hold only one reused buffer — the peak-tracking allocator
+# in rust/tests/gen_stream.rs asserts the high-water mark stays a small
+# constant far below a materialized table (SF-bounded-memory smoke).
+echo "==> streaming generator bounded-memory smoke"
+cargo test -q --test gen_stream
+
 if [ "${1:-}" != "quick" ]; then
     # Bench smoke: run every bench once with the short measurement loop
     # (LOVELOCK_BENCH_QUICK), so a bench that panics (or drifts from a

@@ -10,10 +10,11 @@
 //! measured, not asserted (the `alloc_regression` test asserts it).
 
 use lovelock::analytics::engine::{
-    self, BatchEval, Compiled, EvalBatch, HashAgg, HashJoinTable, Merger, Predicate, Sel,
-    TaskScratch,
+    self, BatchEval, Compiled, EvalBatch, HashAgg, HashJoinTable, Merger, Predicate, PrunePlan,
+    Sel, TaskScratch,
 };
 use lovelock::analytics::morsel::run_query_morsel;
+use lovelock::analytics::tpch::{for_each_lineitem_chunk, lineitem_rows};
 use lovelock::analytics::ops::{
     all_rows, filter_i32_range, hash_join, par_filter_i32_range, ExecStats,
 };
@@ -132,6 +133,48 @@ fn main() {
         black_box(engine::run_range_scratch(&c18, q18.width(), 0, db.lineitem.len(), &mut scr18));
     });
 
+    // Zone-map pruning: the same q6 fold with chunk skipping armed
+    // (generated lineitem carries per-chunk min-max zones; q6's date
+    // window rules most chunks out wholesale) vs the unpruned baseline.
+    let (c6u, _) = engine::plan::compile_unpruned(&db, &q6).unwrap();
+    {
+        let mut scr = TaskScratch::new();
+        let n = db.lineitem.len();
+        let pruned = engine::run_range_scratch(&c6, q6.width(), 0, n, &mut scr);
+        b.row(
+            "q6 chunks pruned",
+            format!(
+                "{}/{}",
+                pruned.stats.morsels_pruned,
+                n.div_ceil(lovelock::analytics::CHUNK_ROWS)
+            ),
+            format!("{} scan bytes charged after pruning", pruned.stats.bytes_scanned),
+        );
+        b.measure("q6 scan pruned (zone maps)", || {
+            black_box(engine::run_range_scratch(&c6, q6.width(), 0, n, &mut scr));
+        });
+        b.measure("q6 scan unpruned baseline", || {
+            black_box(engine::run_range_scratch(&c6u, q6.width(), 0, n, &mut scr));
+        });
+    }
+
+    // Streaming generator: lineitem rows/s through the bounded-memory
+    // chunk stream (the worker shard path — no table materialization).
+    {
+        let total = lineitem_rows(&db.config);
+        let mut rows = 0usize;
+        b.measure("gen lineitem streaming (full pass)", || {
+            rows = 0;
+            for_each_lineitem_chunk(&db.config, 0, total, 4096, |c| rows += c.len());
+            black_box(rows);
+        });
+        b.row(
+            "gen lineitem streamed rows",
+            format!("{rows}"),
+            "4096-row chunks, one reused buffer".to_string(),
+        );
+    }
+
     // Plan-IR overhead: the IR-generated BatchEval vs a hand-written
     // closure over the same predicate + kernel (the pre-IR shape of
     // q6/q1) — the rows EXPERIMENTS.md §Morsel tracks to pin "plans as
@@ -156,14 +199,17 @@ fn main() {
                 out.cols[0].push(price[i] * disc[i]);
             });
         });
-        let hand6 = Compiled { pred, payload_bytes: 8, eval, groups_hint: 1 };
+        let hand6 =
+            Compiled { pred, payload_bytes: 8, eval, groups_hint: 1, prune: PrunePlan::none() };
         let bytes6 = run_query(&db, "q6").unwrap().stats.bytes_scanned;
         let mut scr = TaskScratch::new();
         b.measure_throughput("q6 fold hand-written", bytes6, || {
             black_box(engine::run_range_scratch(&hand6, 1, 0, n, &mut scr));
         });
+        // Unpruned on both sides: this row pins IR overhead against the
+        // hand-written closure, not the zone-map win measured above.
         b.measure_throughput("q6 fold plan-ir", bytes6, || {
-            black_box(engine::run_range_scratch(&c6, 1, 0, n, &mut scr));
+            black_box(engine::run_range_scratch(&c6u, 1, 0, n, &mut scr));
         });
 
         let tax = li.col("l_tax").as_f64();
@@ -182,9 +228,15 @@ fn main() {
                 out.cols[4].push(disc[i]);
             });
         });
-        let hand1 = Compiled { pred: pred1, payload_bytes: 8 * 4 + 2, eval: eval1, groups_hint: 8 };
+        let hand1 = Compiled {
+            pred: pred1,
+            payload_bytes: 8 * 4 + 2,
+            eval: eval1,
+            groups_hint: 8,
+            prune: PrunePlan::none(),
+        };
         let q1 = engine::spec("q1").unwrap();
-        let (c1, _) = engine::plan::compile(&db, &q1).unwrap();
+        let (c1, _) = engine::plan::compile_unpruned(&db, &q1).unwrap();
         let bytes1 = run_query(&db, "q1").unwrap().stats.bytes_scanned;
         b.measure_throughput("q1 fold hand-written", bytes1, || {
             black_box(engine::run_range_scratch(&hand1, 5, 0, n, &mut scr));

@@ -1,0 +1,199 @@
+//! Chunked column storage: fixed-size row chunks with per-column
+//! min-max *zone maps*.
+//!
+//! A [`ZoneMap`] summarises a table as consecutive chunks of
+//! [`CHUNK_ROWS`] rows (the last chunk may be short). For every `i32`
+//! and `f64` column it records the min and max value inside each chunk,
+//! computed by the data *producer* (the TPC-H generator builds zones as
+//! it appends chunks — no separate whole-table pass at query time).
+//! Scans consult the map through [`crate::analytics::engine`]'s
+//! `PrunePlan`: a chunk whose `[min, max]` interval cannot intersect the
+//! predicate's derived interval is skipped without touching a byte.
+//!
+//! Zone maps are advisory: a table without one (or a column missing
+//! from one) simply never prunes. Row-subset views ([`Table::take`])
+//! drop the map, because selection breaks chunk alignment.
+//!
+//! [`Table::take`]: crate::analytics::column::Table::take
+
+use crate::analytics::column::{Column, Table};
+
+/// Rows per zone-map chunk. A divisor of the default morsel size
+/// (16 384), so morsel boundaries land on chunk boundaries and a pruned
+/// chunk is skipped by exactly one morsel.
+pub const CHUNK_ROWS: usize = 4096;
+
+/// Closed min-max interval of one chunk of one column.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Zone<T> {
+    pub min: T,
+    pub max: T,
+}
+
+/// Per-chunk zones for one column.
+#[derive(Clone, Debug)]
+pub enum ColZones {
+    I32(Vec<Zone<i32>>),
+    F64(Vec<Zone<f64>>),
+}
+
+impl ColZones {
+    pub fn len(&self) -> usize {
+        match self {
+            ColZones::I32(v) => v.len(),
+            ColZones::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Min-max zone map over a table's chunks.
+#[derive(Clone, Debug, Default)]
+pub struct ZoneMap {
+    chunk_rows: usize,
+    cols: Vec<(String, ColZones)>,
+}
+
+impl ZoneMap {
+    pub fn new(chunk_rows: usize) -> Self {
+        assert!(chunk_rows > 0, "zone map chunk size must be positive");
+        Self { chunk_rows, cols: Vec::new() }
+    }
+
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// Number of chunks summarised (0 for an empty map).
+    pub fn chunks(&self) -> usize {
+        self.cols.iter().map(|(_, z)| z.len()).max().unwrap_or(0)
+    }
+
+    pub fn add_col(&mut self, name: &str, zones: ColZones) {
+        self.cols.push((name.to_string(), zones));
+    }
+
+    /// Zones for a column, if summarised.
+    pub fn col(&self, name: &str) -> Option<&ColZones> {
+        self.cols.iter().find(|(n, _)| n == name).map(|(_, z)| z)
+    }
+
+    /// Build a zone map by scanning every `i32`/`f64` column of `t`.
+    ///
+    /// This is the path for tables whose producer did not build zones
+    /// incrementally (dimension tables, test fixtures). Other column
+    /// types carry no zones: predicate leaves are i32/f64 only, so
+    /// nothing could consult them.
+    pub fn build_from(t: &Table, chunk_rows: usize) -> ZoneMap {
+        let mut zm = ZoneMap::new(chunk_rows);
+        for name in t.column_names() {
+            match t.col(name) {
+                Column::I32(v) => zm.add_col(name, ColZones::I32(zones_i32(v, chunk_rows))),
+                Column::F64(v) => zm.add_col(name, ColZones::F64(zones_f64(v, chunk_rows))),
+                _ => {}
+            }
+        }
+        zm
+    }
+}
+
+/// Per-chunk min/max over an `i32` slice. Chunk `c` covers rows
+/// `[c * chunk_rows, (c + 1) * chunk_rows)` of `vals`; a chunk-aligned
+/// slice of a larger column therefore yields exactly the global map's
+/// entries for those chunks, which is what lets parallel generator
+/// shards concatenate their zones.
+pub fn zones_i32(vals: &[i32], chunk_rows: usize) -> Vec<Zone<i32>> {
+    vals.chunks(chunk_rows)
+        .map(|c| {
+            let mut z = Zone { min: c[0], max: c[0] };
+            for &v in &c[1..] {
+                z.min = z.min.min(v);
+                z.max = z.max.max(v);
+            }
+            z
+        })
+        .collect()
+}
+
+/// Per-chunk min/max over an `f64` slice (see [`zones_i32`]). NaN never
+/// occurs in generated data; if it did, min/max would absorb it and the
+/// pruning comparisons (all strict, NaN-false) would simply never prune
+/// that chunk — conservative, not wrong.
+pub fn zones_f64(vals: &[f64], chunk_rows: usize) -> Vec<Zone<f64>> {
+    vals.chunks(chunk_rows)
+        .map(|c| {
+            let mut z = Zone { min: c[0], max: c[0] };
+            for &v in &c[1..] {
+                z.min = z.min.min(v);
+                z.max = z.max.max(v);
+            }
+            z
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zones_cover_chunks_including_short_tail() {
+        let vals: Vec<i32> = (0..10).collect();
+        let z = zones_i32(&vals, 4);
+        assert_eq!(z.len(), 3);
+        assert_eq!(z[0], Zone { min: 0, max: 3 });
+        assert_eq!(z[1], Zone { min: 4, max: 7 });
+        assert_eq!(z[2], Zone { min: 8, max: 9 });
+    }
+
+    #[test]
+    fn f64_zones_track_min_and_max() {
+        let z = zones_f64(&[1.5, -2.0, 0.0, 7.25, 3.0], 3);
+        assert_eq!(z.len(), 2);
+        assert_eq!(z[0], Zone { min: -2.0, max: 1.5 });
+        assert_eq!(z[1], Zone { min: 3.0, max: 7.25 });
+    }
+
+    #[test]
+    fn aligned_slices_concatenate_to_the_global_map() {
+        let vals: Vec<i32> = (0..100).map(|i| (i * 37) % 91).collect();
+        let whole = zones_i32(&vals, 8);
+        let mut parts = zones_i32(&vals[..48], 8);
+        parts.extend(zones_i32(&vals[48..], 8));
+        assert_eq!(whole, parts);
+    }
+
+    #[test]
+    fn build_from_covers_numeric_columns_only() {
+        let mut t = Table::new("t");
+        t.add("k", Column::I64(vec![1, 2, 3, 4, 5]));
+        t.add("d", Column::I32(vec![10, 20, 30, 40, 50]));
+        t.add("x", Column::F64(vec![0.1, 0.2, 0.3, 0.4, 0.5]));
+        let zm = ZoneMap::build_from(&t, 2);
+        assert_eq!(zm.chunk_rows(), 2);
+        assert_eq!(zm.chunks(), 3);
+        assert!(zm.col("k").is_none(), "i64 key columns carry no zones");
+        match zm.col("d").unwrap() {
+            ColZones::I32(z) => {
+                assert_eq!(z.len(), 3);
+                assert_eq!(z[2], Zone { min: 50, max: 50 });
+            }
+            _ => panic!("d must be i32 zones"),
+        }
+        match zm.col("x").unwrap() {
+            ColZones::F64(z) => assert_eq!(z[0], Zone { min: 0.1, max: 0.2 }),
+            _ => panic!("x must be f64 zones"),
+        }
+        assert!(zm.col("missing").is_none());
+    }
+
+    #[test]
+    fn empty_map_reports_zero_chunks() {
+        let zm = ZoneMap::new(4096);
+        assert_eq!(zm.chunks(), 0);
+        assert_eq!(ZoneMap::default().chunk_rows(), 0);
+    }
+}

@@ -5,6 +5,7 @@
 //! MonetDB/X100 design. Column accessors are `#[inline]` and bounds-checked
 //! only in debug builds on the hot paths that matter.
 
+use crate::analytics::chunkstore::ZoneMap;
 use std::collections::HashMap;
 
 /// A typed column.
@@ -125,17 +126,30 @@ impl StrColumnBuilder {
     }
 }
 
-/// A named table of equal-length columns.
+/// A named table of equal-length columns, optionally summarised by a
+/// min-max [`ZoneMap`] over fixed-size row chunks.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
     pub name: String,
     columns: Vec<(String, Column)>,
     len: usize,
+    zones: Option<ZoneMap>,
 }
 
 impl Table {
     pub fn new(name: &str) -> Self {
-        Self { name: name.to_string(), columns: Vec::new(), len: 0 }
+        Self { name: name.to_string(), columns: Vec::new(), len: 0, zones: None }
+    }
+
+    /// Attach a zone map (built by the producer or via
+    /// [`ZoneMap::build_from`]). Scans use it to skip chunks; absence
+    /// only disables pruning, never correctness.
+    pub fn set_zones(&mut self, zones: ZoneMap) {
+        self.zones = Some(zones);
+    }
+
+    pub fn zones(&self) -> Option<&ZoneMap> {
+        self.zones.as_ref()
     }
 
     pub fn add(&mut self, name: &str, col: Column) -> &mut Self {
@@ -178,7 +192,8 @@ impl Table {
     }
 
     /// Extract the subset of rows in `sel` (used to partition tables for
-    /// distributed execution).
+    /// distributed execution). The result carries no zone map: an
+    /// arbitrary row subset breaks chunk alignment.
     pub fn take(&self, sel: &[u32]) -> Table {
         let mut out = Table::new(&self.name);
         for (name, col) in &self.columns {

@@ -18,6 +18,7 @@
 //! without materializing a single row id — on *every* execution path,
 //! serial, morsel, and distributed alike.
 
+use crate::analytics::chunkstore::{ColZones, Zone};
 use crate::analytics::column::Column;
 use crate::analytics::ops::{self, ExecStats};
 
@@ -311,6 +312,91 @@ impl<'a> Predicate<'a> {
     }
 }
 
+// ---------------------------------------------------------- zone pruning
+
+/// Borrowed per-chunk zones of one scan column.
+enum ZoneCol<'a> {
+    I32(&'a [Zone<i32>]),
+    F64(&'a [Zone<f64>]),
+}
+
+/// One zone-map consultation: a scan column's per-chunk min-max zones
+/// plus the closed interval `[lo, hi]` the predicate tree admits for
+/// that column (±∞ for one-sided constraints). Bounds are `f64`; i32
+/// zone values convert losslessly.
+pub struct PruneCheck<'a> {
+    zones: ZoneCol<'a>,
+    lo: f64,
+    hi: f64,
+}
+
+impl<'a> PruneCheck<'a> {
+    pub fn new(zones: &'a ColZones, lo: f64, hi: f64) -> Self {
+        let zones = match zones {
+            ColZones::I32(v) => ZoneCol::I32(v),
+            ColZones::F64(v) => ZoneCol::F64(v),
+        };
+        Self { zones, lo, hi }
+    }
+
+    /// Could chunk `ci` hold a value inside `[lo, hi]`? A chunk index
+    /// past the zone slice answers yes (conservative), and so does any
+    /// NaN bound (comparisons with NaN are false).
+    #[inline]
+    fn may_contain(&self, ci: usize) -> bool {
+        match &self.zones {
+            ZoneCol::I32(z) => match z.get(ci) {
+                Some(z) => !((z.max as f64) < self.lo || (z.min as f64) > self.hi),
+                None => true,
+            },
+            ZoneCol::F64(z) => match z.get(ci) {
+                Some(z) => !(z.max < self.lo || z.min > self.hi),
+                None => true,
+            },
+        }
+    }
+}
+
+/// Chunk-skipping plan built at compile time: the scan table's zone
+/// maps crossed with the per-column intervals derived from the plan's
+/// predicate tree. An inactive plan ([`PrunePlan::none`], or one with
+/// no derivable checks) leaves every execution path byte-identical to
+/// the pre-pruning engine.
+pub struct PrunePlan<'a> {
+    chunk_rows: usize,
+    checks: Vec<PruneCheck<'a>>,
+}
+
+impl<'a> PrunePlan<'a> {
+    /// Pruning disabled (no zone map, no derivable intervals, or the
+    /// caller opted out).
+    pub fn none() -> Self {
+        Self { chunk_rows: 0, checks: Vec::new() }
+    }
+
+    pub fn new(chunk_rows: usize, checks: Vec<PruneCheck<'a>>) -> Self {
+        assert!(chunk_rows > 0, "active prune plans need a chunk size");
+        Self { chunk_rows, checks }
+    }
+
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.chunk_rows > 0 && !self.checks.is_empty()
+    }
+
+    #[inline]
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// True iff chunk `ci` provably cannot satisfy the predicate —
+    /// some check's admitted interval misses the chunk's zone entirely.
+    #[inline]
+    pub fn chunk_pruned(&self, ci: usize) -> bool {
+        self.checks.iter().any(|c| !c.may_contain(ci))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -450,6 +536,50 @@ mod tests {
         }
         assert_eq!(scr.bytes(), high_water, "steady-state morsels grew the scratch");
         assert_eq!(first, p.eval(0, 500, &mut ExecStats::default()));
+    }
+
+    #[test]
+    fn prune_plan_skips_only_disjoint_zones() {
+        let z = ColZones::I32(vec![
+            Zone { min: 0, max: 9 },
+            Zone { min: 10, max: 19 },
+            Zone { min: 20, max: 29 },
+        ]);
+        // Predicate admits [12, 15]: only the middle chunk may match.
+        let p = PrunePlan::new(4, vec![PruneCheck::new(&z, 12.0, 15.0)]);
+        assert!(p.is_active());
+        assert_eq!(p.chunk_rows(), 4);
+        assert!(p.chunk_pruned(0));
+        assert!(!p.chunk_pruned(1));
+        assert!(p.chunk_pruned(2));
+        // Chunks beyond the zone slice are conservatively kept.
+        assert!(!p.chunk_pruned(3));
+        // Interval edges touching a zone boundary keep the chunk.
+        let edge = PrunePlan::new(4, vec![PruneCheck::new(&z, 9.0, 9.5)]);
+        assert!(!edge.chunk_pruned(0));
+        assert!(edge.chunk_pruned(1));
+    }
+
+    #[test]
+    fn prune_plan_f64_and_one_sided_bounds() {
+        let z = ColZones::F64(vec![Zone { min: 0.0, max: 0.04 }, Zone { min: 0.05, max: 0.09 }]);
+        let below = PrunePlan::new(2, vec![PruneCheck::new(&z, f64::NEG_INFINITY, 0.045)]);
+        assert!(!below.chunk_pruned(0));
+        assert!(below.chunk_pruned(1));
+        let above = PrunePlan::new(2, vec![PruneCheck::new(&z, 0.05, f64::INFINITY)]);
+        assert!(above.chunk_pruned(0));
+        assert!(!above.chunk_pruned(1));
+    }
+
+    #[test]
+    fn inactive_prune_plan_never_prunes() {
+        let p = PrunePlan::none();
+        assert!(!p.is_active());
+        assert!(!p.chunk_pruned(0));
+        // Active chunking but no checks: also inactive.
+        let q = PrunePlan::new(8, Vec::new());
+        assert!(!q.is_active());
+        assert!(!q.chunk_pruned(5));
     }
 
     #[test]

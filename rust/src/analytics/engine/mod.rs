@@ -49,7 +49,7 @@ pub mod partial;
 pub mod plan;
 
 pub use agg::HashAgg;
-pub use expr::{Predicate, Sel, SelScratch};
+pub use expr::{Predicate, PruneCheck, PrunePlan, Sel, SelScratch};
 pub use join::{HashJoinTable, ProbeIter};
 pub use partial::{Merger, Partial};
 pub use plan::{LogicalPlan, PlanParams};
@@ -159,6 +159,10 @@ pub struct Compiled<'a> {
     pub eval: BatchEval<'a>,
     /// Expected distinct groups (aggregation-table capacity hint).
     pub groups_hint: usize,
+    /// Zone-map pruning plan over the scan table's chunks. Inactive when
+    /// the table carries no zone map or the plan derives no usable
+    /// column intervals; then every path behaves exactly as before.
+    pub prune: PrunePlan<'a>,
 }
 
 /// Look up the default-parameter plan for a registered query. Every
@@ -207,8 +211,11 @@ fn fold_sel(
 /// lineitem rows `[lo, hi)` into `agg`, reusing `scr` across calls. An
 /// all-pass predicate folds the row range directly — no materialized
 /// identity selection vector on any path (q5/q9/q18 take this on every
-/// executor). The workers' map loop calls this once per morsel with one
-/// long-lived `agg`; in steady state the call allocates nothing.
+/// executor). When the compiled plan carries an active [`PrunePlan`],
+/// zone-map-disjoint chunks are skipped wholesale: their rows are never
+/// evaluated and charge no scan bytes, only a `morsels_pruned` tick. The
+/// workers' map loop calls this once per morsel with one long-lived
+/// `agg`; in steady state the call allocates nothing.
 pub fn fold_range(
     c: &Compiled<'_>,
     width: usize,
@@ -219,8 +226,78 @@ pub fn fold_range(
     stats: &mut ExecStats,
 ) {
     let TaskScratch { sel, batch, gids } = scr;
-    let rows = c.pred.eval_into(lo, hi, sel, stats);
-    fold_sel(c, width, rows, agg, batch, gids, stats);
+    if !c.prune.is_active() {
+        let rows = c.pred.eval_into(lo, hi, sel, stats);
+        fold_sel(c, width, rows, agg, batch, gids, stats);
+        return;
+    }
+    // Chunk walk: fold maximal runs of unpruned chunks, skip the rest. A
+    // pruned chunk ticks `morsels_pruned` only from the call covering
+    // its first row, so morsel splits mid-chunk never double-count it.
+    let cr = c.prune.chunk_rows();
+    let mut run_lo = lo;
+    let mut s = lo;
+    while s < hi {
+        let ci = s / cr;
+        let ce = ((ci + 1) * cr).min(hi);
+        if c.prune.chunk_pruned(ci) {
+            if s == ci * cr {
+                stats.morsels_pruned += 1;
+            }
+            if run_lo < s {
+                let rows = c.pred.eval_into(run_lo, s, sel, stats);
+                fold_sel(c, width, rows, agg, batch, gids, stats);
+            }
+            run_lo = ce;
+        }
+        s = ce;
+    }
+    if run_lo < hi {
+        let rows = c.pred.eval_into(run_lo, hi, sel, stats);
+        fold_sel(c, width, rows, agg, batch, gids, stats);
+    }
+}
+
+/// Phase-1 selection with zone-map pruning: evaluate the predicate over
+/// the unpruned runs of `[lo, hi)`, appending survivors to `out` in row
+/// order. Mirrors [`fold_range`]'s chunk walk, including the
+/// first-row-only `morsels_pruned` counting rule.
+fn select_pruned(
+    c: &Compiled<'_>,
+    lo: usize,
+    hi: usize,
+    scr: &mut SelScratch,
+    stats: &mut ExecStats,
+    out: &mut Vec<u32>,
+) {
+    let cr = c.prune.chunk_rows();
+    let mut run_lo = lo;
+    let mut s = lo;
+    while s < hi {
+        let ci = s / cr;
+        let ce = ((ci + 1) * cr).min(hi);
+        if c.prune.chunk_pruned(ci) {
+            if s == ci * cr {
+                stats.morsels_pruned += 1;
+            }
+            if run_lo < s {
+                append_sel(c.pred.eval_into(run_lo, s, scr, stats), out);
+            }
+            run_lo = ce;
+        }
+        s = ce;
+    }
+    if run_lo < hi {
+        append_sel(c.pred.eval_into(run_lo, hi, scr, stats), out);
+    }
+}
+
+#[inline]
+fn append_sel(rows: Sel<'_>, out: &mut Vec<u32>) {
+    match rows {
+        Sel::Range(a, b) => out.extend(a as u32..b as u32),
+        Sel::Ids(ids) => out.extend_from_slice(ids),
+    }
 }
 
 /// Seal a fold: stamp the table footprint and produced group count onto
@@ -327,7 +404,9 @@ pub fn try_run_parallel(
     let width = spec.width();
     let n = plan::table(db, spec.scan).len();
 
-    let (pre_stats, partials): (ExecStats, Vec<Partial>) = if c.pred.is_all_pass() {
+    let (pre_stats, partials): (ExecStats, Vec<Partial>) = if c.pred.is_all_pass()
+        && !c.prune.is_active()
+    {
         // Fast path: with an all-pass predicate every selection slice is
         // a row range, so fold row morsels directly — no materialized
         // n-element selection vector, no inter-phase barrier (q5/q9/q18
@@ -338,11 +417,18 @@ pub fn try_run_parallel(
             });
         (prep, partials)
     } else {
-        // Phase 1: predicate → per-morsel selection vectors, row order.
+        // Phase 1: predicate → per-morsel selection vectors, row order
+        // (zone-map pruning skips disjoint chunks before evaluation).
         let parts: Vec<(Vec<u32>, ExecStats)> =
             parallel_map_chunks_with(n, morsel_rows, threads, SelScratch::new, |scr, lo, hi| {
                 let mut st = ExecStats::default();
-                (c.pred.eval_into(lo, hi, scr, &mut st).to_vec(), st)
+                if c.prune.is_active() {
+                    let mut out = Vec::new();
+                    select_pruned(&c, lo, hi, scr, &mut st, &mut out);
+                    (out, st)
+                } else {
+                    (c.pred.eval_into(lo, hi, scr, &mut st).to_vec(), st)
+                }
             });
         let mut pre_stats = prep;
         let mut sel = Vec::with_capacity(parts.iter().map(|(s, _)| s.len()).sum());

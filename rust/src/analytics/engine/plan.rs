@@ -73,7 +73,7 @@
 //! assert!(!out.rows.is_empty() && out.rows.len() <= 7); // ≤ one row per mode
 //! ```
 
-use super::expr::{Predicate, Sel};
+use super::expr::{Predicate, PruneCheck, PrunePlan, Sel};
 use super::join::HashJoinTable;
 use super::partial::Partial;
 use super::{BatchEval, Compiled, EvalBatch, MAX_ACCS};
@@ -1960,7 +1960,30 @@ fn payload_bytes(plan: &LogicalPlan, scan: &Table) -> usize {
 /// dangling payload references — so a worker can reject a bad wire plan
 /// with an error frame.
 pub fn compile<'a>(db: &'a TpchDb, plan: &LogicalPlan) -> Result<(Compiled<'a>, ExecStats)> {
-    let scan = table(db, plan.scan);
+    compile_scan(db, plan, table(db, plan.scan), true)
+}
+
+/// [`compile`] with zone-map pruning disabled: the equality baseline for
+/// the pruning property tests and a hatch for debugging a suspect map.
+pub fn compile_unpruned<'a>(
+    db: &'a TpchDb,
+    plan: &LogicalPlan,
+) -> Result<(Compiled<'a>, ExecStats)> {
+    compile_scan(db, plan, table(db, plan.scan), false)
+}
+
+/// [`compile`] against an explicit scan table: distributed workers hand
+/// in a locally *generated* lineitem shard here instead of a table
+/// resolved from `db`, so the scan side never has to exist in `db` at
+/// full size. Dimension builds still resolve against `db`. With `prune`
+/// set, a zone map on `scan` becomes a [`PrunePlan`] over the intervals
+/// the plan's predicate and compare conjuncts imply.
+pub fn compile_scan<'a>(
+    db: &'a TpchDb,
+    plan: &LogicalPlan,
+    scan: &'a Table,
+    prune: bool,
+) -> Result<(Compiled<'a>, ExecStats)> {
     let width = plan.slots.len();
     crate::ensure!(
         (1..=MAX_ACCS).contains(&width),
@@ -2087,7 +2110,131 @@ pub fn compile<'a>(db: &'a TpchDb, plan: &LogicalPlan) -> Result<(Compiled<'a>, 
         });
     });
 
-    Ok((Compiled { pred, payload_bytes: pb, eval, groups_hint }, stats))
+    let prune = if prune { prune_plan(plan, scan) } else { PrunePlan::none() };
+    Ok((Compiled { pred, payload_bytes: pb, eval, groups_hint, prune }, stats))
+}
+
+// ------------------------------------------------- zone-map derivation
+
+/// Intersect `[lo, hi]` into the interval recorded for `col`.
+fn narrow(iv: &mut Vec<(String, f64, f64)>, col: &str, lo: f64, hi: f64) {
+    match iv.iter_mut().find(|(c, _, _)| c == col) {
+        Some((_, l, h)) => {
+            *l = l.max(lo);
+            *h = h.min(hi);
+        }
+        None => iv.push((col.to_string(), lo, hi)),
+    }
+}
+
+/// Per-column closed intervals implied by a scan predicate tree.
+/// Conservative: only conjunctive range/less-than leaves contribute;
+/// `Or`, `I32InSet`, string matches and column-column comparisons
+/// contribute nothing (never prune on them).
+fn pred_intervals(p: &PredExpr, iv: &mut Vec<(String, f64, f64)>) {
+    match p {
+        PredExpr::I32Range { col, lo, hi } => {
+            // Half-open int window: the largest admissible value is hi-1.
+            narrow(iv, col, *lo as f64, (*hi - 1) as f64);
+        }
+        PredExpr::F64Range { col, lo, hi } => narrow(iv, col, *lo, *hi),
+        PredExpr::F64Lt { col, x } => narrow(iv, col, f64::NEG_INFINITY, *x),
+        PredExpr::And(cs) => {
+            for c in cs {
+                pred_intervals(c, iv);
+            }
+        }
+        PredExpr::True
+        | PredExpr::I32ColLt { .. }
+        | PredExpr::I32InSet { .. }
+        | PredExpr::Str { .. }
+        | PredExpr::Or(_) => {}
+    }
+}
+
+/// Closed-interval hull of a [`ValExpr`]'s possible values, when it is
+/// independent of the scan row: a constant, or a payload slot fed by a
+/// [`Payload::CaseConst`] (whose value is always one of the case
+/// constants — a no-match excludes the row entirely).
+fn val_hull(v: &ValExpr, plan: &LogicalPlan) -> Option<(f64, f64)> {
+    match v {
+        ValExpr::Const(x) => Some((*x, *x)),
+        ValExpr::Payload { step, slot } => {
+            let j = plan.joins.get(*step as usize)?;
+            match j.payloads.get(*slot as usize)? {
+                Payload::CaseConst { cases } if !cases.is_empty() => {
+                    let mut lo = f64::INFINITY;
+                    let mut hi = f64::NEG_INFINITY;
+                    for (_, x) in cases {
+                        lo = lo.min(*x);
+                        hi = hi.max(*x);
+                    }
+                    Some((lo, hi))
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Interval a compare conjunct implies for a bare scan column on one
+/// side, given the hull of the other side. `Lt`/`Gt` keep the closed
+/// bound — sound (never prunes a satisfying chunk), merely not tight.
+fn cmp_intervals(c: &CmpExpr, plan: &LogicalPlan, iv: &mut Vec<(String, f64, f64)>) {
+    let (col, op, hull) = match (&c.lhs, &c.rhs) {
+        (ValExpr::Col(col), _) => match val_hull(&c.rhs, plan) {
+            Some(h) => (col, c.op, h),
+            None => return,
+        },
+        (_, ValExpr::Col(col)) => match val_hull(&c.lhs, plan) {
+            // Mirror: `hull op col` reads as `col op' hull`.
+            Some(h) => {
+                let op = match c.op {
+                    CmpOp::Eq => CmpOp::Eq,
+                    CmpOp::Lt => CmpOp::Gt,
+                    CmpOp::Le => CmpOp::Ge,
+                    CmpOp::Ge => CmpOp::Le,
+                    CmpOp::Gt => CmpOp::Lt,
+                };
+                (col, op, h)
+            }
+            None => return,
+        },
+        _ => return,
+    };
+    let (rlo, rhi) = hull;
+    match op {
+        CmpOp::Eq => narrow(iv, col, rlo, rhi),
+        CmpOp::Lt | CmpOp::Le => narrow(iv, col, f64::NEG_INFINITY, rhi),
+        CmpOp::Ge | CmpOp::Gt => narrow(iv, col, rlo, f64::INFINITY),
+    }
+}
+
+/// Build the scan's [`PrunePlan`]: derive column intervals from the
+/// plan, keep the ones the table's zone map actually covers. Returns an
+/// inactive plan when the table has no zone map or nothing derives.
+fn prune_plan<'a>(plan: &LogicalPlan, scan: &'a Table) -> PrunePlan<'a> {
+    let Some(zm) = scan.zones() else {
+        return PrunePlan::none();
+    };
+    if zm.chunk_rows() == 0 {
+        return PrunePlan::none();
+    }
+    let mut iv: Vec<(String, f64, f64)> = Vec::new();
+    pred_intervals(&plan.pred, &mut iv);
+    for c in &plan.cmps {
+        cmp_intervals(c, plan, &mut iv);
+    }
+    let checks: Vec<PruneCheck<'a>> = iv
+        .iter()
+        .filter_map(|(col, lo, hi)| zm.col(col).map(|z| PruneCheck::new(z, *lo, *hi)))
+        .collect();
+    if checks.is_empty() {
+        PrunePlan::none()
+    } else {
+        PrunePlan::new(zm.chunk_rows(), checks)
+    }
 }
 
 /// Validate a finalize spec against the plan's accumulator width.

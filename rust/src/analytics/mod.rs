@@ -23,6 +23,7 @@
 //! assert!(parallel.approx_eq_rows(&serial.rows));
 //! ```
 
+pub mod chunkstore;
 pub mod column;
 pub mod engine;
 pub mod morsel;
@@ -31,6 +32,7 @@ pub mod profile;
 pub mod queries;
 pub mod tpch;
 
+pub use chunkstore::{ZoneMap, CHUNK_ROWS};
 pub use column::{Column, Table};
 pub use morsel::run_query_morsel;
 pub use profile::{profile_query, QueryProfile};

@@ -22,6 +22,9 @@ pub struct ExecStats {
     pub rows_out: u64,
     /// Peak bytes of hash tables live at once (approximated by sum).
     pub ht_bytes: u64,
+    /// Scan chunks skipped wholesale by zone-map pruning (their rows are
+    /// never touched and charge no `bytes_scanned`).
+    pub morsels_pruned: u64,
 }
 
 impl ExecStats {
@@ -30,6 +33,7 @@ impl ExecStats {
         self.rows_in += o.rows_in;
         self.rows_out += o.rows_out;
         self.ht_bytes += o.ht_bytes;
+        self.morsels_pruned += o.morsels_pruned;
     }
 
     pub fn scan(&mut self, rows: usize, bytes_per_row: usize) {

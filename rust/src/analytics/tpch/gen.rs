@@ -1,14 +1,33 @@
-//! Deterministic TPC-H data generator (`dbgen` replacement).
+//! Deterministic TPC-H data generator (`dbgen` replacement), streaming
+//! and embarrassingly parallel.
 //!
-//! Generates the eight TPC-H tables at an arbitrary scale factor with the
-//! distributions the benchmark queries depend on (date ranges, discount
-//! and quantity ranges, 1–7 lines per order, segment/mode/priority value
-//! sets, color-word part names). Everything is derived from a single seed
-//! via per-table PRNG streams, so two calls with the same `(sf, seed)`
-//! produce identical data — a property the distributed coordinator relies
-//! on (workers regenerate their partition instead of shipping it).
+//! Every value is a pure function of `(seed, table, row)`: each table
+//! has a PRNG *stream seed*, and each row draws from its own generator,
+//! `Pcg64::seed_from_u64(stream ^ mix64(row))`. Any slice of any table
+//! can therefore be produced independently, in any order, on any
+//! thread, with no central materialization. Three consumers share one
+//! chunk-producing core ([`for_each_lineitem_chunk`]):
+//!
+//! * [`TpchDb::generate`] — the full database, generated in parallel
+//!   (each thread fills a chunk-aligned row range) with per-chunk
+//!   min-max zone maps built as chunks are appended;
+//! * [`lineitem_shard`] — a worker's partition `[lo, hi)`, bitwise
+//!   identical to the same rows of the full table *by construction*
+//!   (the distributed coordinator regenerates partitions in place
+//!   instead of shipping table bytes);
+//! * streaming consumers (benches, the SF-1 bounded-memory smoke),
+//!   which observe one buffer of at most `chunk_rows` rows at a time
+//!   and never hold a full column, so SF 10+ fits in constant memory.
+//!
+//! Order dates ramp monotonically over 1992–1998 (with bounded jitter)
+//! and line quantities drift upward along that ramp. Both are mild,
+//! realistic correlations — ledgers are append-mostly in time — and
+//! they are what give the zone maps pruning power: a chunk's
+//! `l_shipdate`/`l_quantity` min-max stays narrow instead of spanning
+//! the whole domain.
 
 use super::*;
+use crate::analytics::chunkstore::{zones_f64, zones_i32, ColZones, Zone, ZoneMap, CHUNK_ROWS};
 use crate::analytics::column::{date_to_days, Column, StrColumnBuilder, Table};
 use crate::prng::Pcg64;
 
@@ -70,15 +89,23 @@ impl Dates {
 }
 
 impl TpchDb {
-    /// Generate the full database.
+    /// Generate the full database (lineitem and orders in parallel,
+    /// all tables carrying zone maps).
     pub fn generate(config: TpchConfig) -> Self {
-        let root = Pcg64::seed_from_u64(config.seed);
-        let part = gen_part(&config, &mut root.derive("part"));
-        let supplier = gen_supplier(&config, &mut root.derive("supplier"));
-        let partsupp = gen_partsupp(&config, &mut root.derive("partsupp"));
-        let customer = gen_customer(&config, &mut root.derive("customer"));
-        let (orders, lineitem) =
-            gen_orders_lineitem(&config, &mut root.derive("orders"), &part);
+        let streams = Streams::new(config.seed);
+        let dims = Dims::new(&config);
+        let mut part = gen_part(&config, &streams);
+        part.set_zones(ZoneMap::build_from(&part, CHUNK_ROWS));
+        let mut supplier = gen_supplier(&config, &streams);
+        supplier.set_zones(ZoneMap::build_from(&supplier, CHUNK_ROWS));
+        let mut partsupp = gen_partsupp(&config, &streams);
+        partsupp.set_zones(ZoneMap::build_from(&partsupp, CHUNK_ROWS));
+        let mut customer = gen_customer(&config, &streams);
+        customer.set_zones(ZoneMap::build_from(&customer, CHUNK_ROWS));
+        let total = count_lineitem_rows(&streams, dims.n_orders);
+        let lineitem = gen_lineitem_parallel(&config, total);
+        let mut orders = gen_orders_parallel(&config, &streams, &dims);
+        orders.set_zones(ZoneMap::build_from(&orders, CHUNK_ROWS));
         let (nation, region) = gen_nation_region();
         Self { config, lineitem, orders, customer, part, supplier, partsupp, nation, region }
     }
@@ -96,53 +123,693 @@ impl TpchDb {
     }
 }
 
-fn gen_part(cfg: &TpchConfig, rng: &mut Pcg64) -> Table {
+// ------------------------------------------------------------- seeding
+
+/// SplitMix64 finalizer: a cheap stateless hash that turns a row index
+/// into a well-mixed 64-bit value. Used both to give every row its own
+/// PRNG seed and to make per-order draws (line count, order date)
+/// O(1) to recompute during prefix scans.
+#[inline]
+fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-table stream seeds, all derived from the config seed.
+struct Streams {
+    part: u64,
+    supplier: u64,
+    partsupp: u64,
+    customer: u64,
+    order: u64,
+    line: u64,
+    lines: u64,
+    odate: u64,
+}
+
+impl Streams {
+    fn new(seed: u64) -> Self {
+        let root = Pcg64::seed_from_u64(seed);
+        let s = |tag: &str| {
+            let mut r = root.derive(tag);
+            r.next_u64()
+        };
+        Self {
+            part: s("part"),
+            supplier: s("supplier"),
+            partsupp: s("partsupp"),
+            customer: s("customer"),
+            order: s("orders"),
+            line: s("lineitem"),
+            lines: s("lines"),
+            odate: s("odate"),
+        }
+    }
+}
+
+/// The row's private generator: every draw sequence below starts here.
+#[inline]
+fn row_rng(stream: u64, row: usize) -> Pcg64 {
+    Pcg64::seed_from_u64(stream ^ mix64(row as u64))
+}
+
+/// Cardinalities and date constants captured once per generation.
+#[derive(Clone, Copy)]
+struct Dims {
+    n_cust: i64,
+    n_parts: i64,
+    n_sups: i64,
+    n_orders: usize,
+    start: i32,
+    date_span: i32,
+}
+
+impl Dims {
+    fn new(cfg: &TpchConfig) -> Self {
+        Self {
+            n_cust: cfg.customers() as i64,
+            n_parts: cfg.parts() as i64,
+            n_sups: cfg.suppliers() as i64,
+            n_orders: cfg.orders(),
+            start: Dates::start(),
+            date_span: Dates::end_orders() - Dates::start(),
+        }
+    }
+
+    /// Position of order `oi` along the generation ramp, in `[0, 1]`.
+    #[inline]
+    fn order_frac(&self, oi: usize) -> f64 {
+        oi as f64 / (self.n_orders - 1).max(1) as f64
+    }
+}
+
+/// Lines in order `oi` (1–7, mean 4). O(1) — a prefix scan over these
+/// is how any consumer maps a global lineitem row to its order.
+#[inline]
+fn lines_in_order(streams: &Streams, oi: usize) -> usize {
+    1 + (mix64(streams.lines ^ oi as u64) % 7) as usize
+}
+
+/// Order date for `oi`: a monotone ramp over 1992–1998 plus up to 30
+/// days of jitter. Stays within `[start, end_orders]`.
+#[inline]
+fn order_date(streams: &Streams, d: &Dims, oi: usize) -> i32 {
+    let ramp = (d.date_span - 31) as i64 * oi as i64 / (d.n_orders - 1).max(1) as i64;
+    d.start + ramp as i32 + (mix64(streams.odate ^ oi as u64) % 31) as i32
+}
+
+/// Closed-form p_retailprice (the spec's formula shape). Being closed
+/// form lets lineitem pricing run without the part table in scope.
+#[inline]
+fn retail_price(part_index: usize) -> f64 {
+    900.0 + (part_index as f64 % 1000.0) / 10.0 + (part_index % 100) as f64
+}
+
+// ------------------------------------------------------- lineitem core
+
+/// All generated values of one lineitem row.
+struct LineVals {
+    partkey: i64,
+    suppkey: i64,
+    quantity: f64,
+    price: f64,
+    discount: f64,
+    tax: f64,
+    ship: i32,
+    commit: i32,
+    receipt: i32,
+    rflag: u8,
+    lstatus: u8,
+    mode: u32,
+    instr: u32,
+}
+
+/// Lineitem row `r` (line of order `oi`, which has date `odate`) — a
+/// pure function of the seed and the row coordinates. Shared by the
+/// chunk producer and the orders pass (which re-derives its lines to
+/// compute o_totalprice / o_orderstatus), so worker shards are bitwise
+/// identical to the full table by construction.
+fn line_vals(streams: &Streams, d: &Dims, r: usize, oi: usize, odate: i32) -> LineVals {
+    let mut rng = row_rng(streams.line, r);
+    let partkey = rng.gen_range_i64(1, d.n_parts);
+    let suppkey = rng.gen_range_i64(1, d.n_sups);
+    let qjit = rng.gen_range_i64(-8, 8);
+    let discount = rng.gen_range_i64(0, 10) as f64 / 100.0;
+    let tax = rng.gen_range_i64(0, 8) as f64 / 100.0;
+    let ship = odate + rng.gen_range_i64(1, 121) as i32;
+    let commit = odate + rng.gen_range_i64(30, 90) as i32;
+    let receipt = ship + rng.gen_range_i64(1, 30) as i32;
+    let mode = rng.gen_range_u64(SHIP_MODES.len() as u64) as u32;
+    let instr = rng.gen_range_u64(SHIP_INSTRUCTS.len() as u64) as u32;
+    let returned = rng.gen_bool(0.5);
+    // Quantity drifts upward along the order-date ramp (±8 jitter,
+    // clamped to the spec's [1, 50]); chunk-local min/max stay narrow,
+    // which is what lets q6's `< 24` and q19's `<= 30` prune chunks.
+    let quantity = ((6.0 + 42.0 * d.order_frac(oi)).round() as i64 + qjit).clamp(1, 50) as f64;
+    let price = retail_price((partkey - 1) as usize) * quantity / 10.0;
+    let current = Dates::current();
+    let rflag = if receipt <= current {
+        if returned {
+            b'R'
+        } else {
+            b'A'
+        }
+    } else {
+        b'N'
+    };
+    let lstatus = if ship > current { b'O' } else { b'F' };
+    LineVals {
+        partkey,
+        suppkey,
+        quantity,
+        price,
+        discount,
+        tax,
+        ship,
+        commit,
+        receipt,
+        rflag,
+        lstatus,
+        mode,
+        instr,
+    }
+}
+
+fn count_lineitem_rows(streams: &Streams, n_orders: usize) -> usize {
+    (0..n_orders).map(|oi| lines_in_order(streams, oi)).sum()
+}
+
+/// Total lineitem rows at this config — an O(orders) prefix scan over
+/// the per-order line counts; no table needed.
+pub fn lineitem_rows(cfg: &TpchConfig) -> usize {
+    let streams = Streams::new(cfg.seed);
+    count_lineitem_rows(&streams, cfg.orders())
+}
+
+/// Order containing global lineitem row `row`, and that order's first
+/// row. `row` must be < the total row count.
+fn locate_order(streams: &Streams, row: usize) -> (usize, usize) {
+    let (mut oi, mut start) = (0usize, 0usize);
+    loop {
+        let l = lines_in_order(streams, oi);
+        if start + l > row {
+            return (oi, start);
+        }
+        start += l;
+        oi += 1;
+    }
+}
+
+/// One buffer of lineitem rows in column-major form, reused across
+/// chunk callbacks. String columns are carried as canonical dictionary
+/// codes (see [`SHIP_MODES`] / [`SHIP_INSTRUCTS`] order).
+#[derive(Default)]
+pub struct LineitemChunk {
+    /// Global row index of the first row in the buffer.
+    pub lo: usize,
+    pub orderkey: Vec<i64>,
+    pub partkey: Vec<i64>,
+    pub suppkey: Vec<i64>,
+    pub linenumber: Vec<i32>,
+    pub quantity: Vec<f64>,
+    pub extendedprice: Vec<f64>,
+    pub discount: Vec<f64>,
+    pub tax: Vec<f64>,
+    pub returnflag: Vec<u8>,
+    pub linestatus: Vec<u8>,
+    pub shipdate: Vec<i32>,
+    pub commitdate: Vec<i32>,
+    pub receiptdate: Vec<i32>,
+    pub shipmode: Vec<u32>,
+    pub shipinstruct: Vec<u32>,
+}
+
+impl LineitemChunk {
+    fn with_capacity(n: usize) -> Self {
+        Self {
+            lo: 0,
+            orderkey: Vec::with_capacity(n),
+            partkey: Vec::with_capacity(n),
+            suppkey: Vec::with_capacity(n),
+            linenumber: Vec::with_capacity(n),
+            quantity: Vec::with_capacity(n),
+            extendedprice: Vec::with_capacity(n),
+            discount: Vec::with_capacity(n),
+            tax: Vec::with_capacity(n),
+            returnflag: Vec::with_capacity(n),
+            linestatus: Vec::with_capacity(n),
+            shipdate: Vec::with_capacity(n),
+            commitdate: Vec::with_capacity(n),
+            receiptdate: Vec::with_capacity(n),
+            shipmode: Vec::with_capacity(n),
+            shipinstruct: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.orderkey.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.orderkey.is_empty()
+    }
+
+    fn clear(&mut self) {
+        self.orderkey.clear();
+        self.partkey.clear();
+        self.suppkey.clear();
+        self.linenumber.clear();
+        self.quantity.clear();
+        self.extendedprice.clear();
+        self.discount.clear();
+        self.tax.clear();
+        self.returnflag.clear();
+        self.linestatus.clear();
+        self.shipdate.clear();
+        self.commitdate.clear();
+        self.receiptdate.clear();
+        self.shipmode.clear();
+        self.shipinstruct.clear();
+    }
+}
+
+/// Produce lineitem rows `[lo, hi)` as successive buffers of at most
+/// `chunk_rows` rows (only the last may be short), calling `f` after
+/// each buffer fills. The one chunk buffer is the only live storage:
+/// memory is bounded by `chunk_rows` regardless of scale factor. This
+/// is the single chunk-producing core behind [`TpchDb::generate`],
+/// [`lineitem_shard`], and streaming consumers.
+pub fn for_each_lineitem_chunk<F: FnMut(&LineitemChunk)>(
+    cfg: &TpchConfig,
+    lo: usize,
+    hi: usize,
+    chunk_rows: usize,
+    mut f: F,
+) {
+    assert!(chunk_rows > 0, "chunk_rows must be positive");
+    if lo >= hi {
+        return;
+    }
+    let streams = Streams::new(cfg.seed);
+    let d = Dims::new(cfg);
+    let (mut oi, mut order_start) = locate_order(&streams, lo);
+    let mut nl = lines_in_order(&streams, oi);
+    let mut odate = order_date(&streams, &d, oi);
+    let mut chunk = LineitemChunk::with_capacity(chunk_rows.min(hi - lo));
+    chunk.lo = lo;
+    for r in lo..hi {
+        while r >= order_start + nl {
+            order_start += nl;
+            oi += 1;
+            nl = lines_in_order(&streams, oi);
+            odate = order_date(&streams, &d, oi);
+        }
+        let v = line_vals(&streams, &d, r, oi, odate);
+        chunk.orderkey.push(oi as i64 + 1);
+        chunk.partkey.push(v.partkey);
+        chunk.suppkey.push(v.suppkey);
+        chunk.linenumber.push((r - order_start) as i32 + 1);
+        chunk.quantity.push(v.quantity);
+        chunk.extendedprice.push(v.price);
+        chunk.discount.push(v.discount);
+        chunk.tax.push(v.tax);
+        chunk.returnflag.push(v.rflag);
+        chunk.linestatus.push(v.lstatus);
+        chunk.shipdate.push(v.ship);
+        chunk.commitdate.push(v.commit);
+        chunk.receiptdate.push(v.receipt);
+        chunk.shipmode.push(v.mode);
+        chunk.shipinstruct.push(v.instr);
+        if chunk.len() == chunk_rows {
+            f(&chunk);
+            chunk.clear();
+            chunk.lo = r + 1;
+        }
+    }
+    if !chunk.is_empty() {
+        f(&chunk);
+    }
+}
+
+/// Column accumulator for lineitem ranges: appends whole chunks and
+/// records each chunk's min-max zones as it lands (append-time zone
+/// build — no separate whole-column pass).
+struct LiCols {
+    chunk_rows: usize,
+    orderkey: Vec<i64>,
+    partkey: Vec<i64>,
+    suppkey: Vec<i64>,
+    linenumber: Vec<i32>,
+    quantity: Vec<f64>,
+    extendedprice: Vec<f64>,
+    discount: Vec<f64>,
+    tax: Vec<f64>,
+    returnflag: Vec<u8>,
+    linestatus: Vec<u8>,
+    shipdate: Vec<i32>,
+    commitdate: Vec<i32>,
+    receiptdate: Vec<i32>,
+    shipmode: Vec<u32>,
+    shipinstruct: Vec<u32>,
+    z_quantity: Vec<Zone<f64>>,
+    z_extendedprice: Vec<Zone<f64>>,
+    z_discount: Vec<Zone<f64>>,
+    z_tax: Vec<Zone<f64>>,
+    z_shipdate: Vec<Zone<i32>>,
+    z_commitdate: Vec<Zone<i32>>,
+    z_receiptdate: Vec<Zone<i32>>,
+}
+
+impl LiCols {
+    fn with_capacity(chunk_rows: usize, rows: usize) -> Self {
+        let z = rows.div_ceil(chunk_rows.max(1));
+        Self {
+            chunk_rows,
+            orderkey: Vec::with_capacity(rows),
+            partkey: Vec::with_capacity(rows),
+            suppkey: Vec::with_capacity(rows),
+            linenumber: Vec::with_capacity(rows),
+            quantity: Vec::with_capacity(rows),
+            extendedprice: Vec::with_capacity(rows),
+            discount: Vec::with_capacity(rows),
+            tax: Vec::with_capacity(rows),
+            returnflag: Vec::with_capacity(rows),
+            linestatus: Vec::with_capacity(rows),
+            shipdate: Vec::with_capacity(rows),
+            commitdate: Vec::with_capacity(rows),
+            receiptdate: Vec::with_capacity(rows),
+            shipmode: Vec::with_capacity(rows),
+            shipinstruct: Vec::with_capacity(rows),
+            z_quantity: Vec::with_capacity(z),
+            z_extendedprice: Vec::with_capacity(z),
+            z_discount: Vec::with_capacity(z),
+            z_tax: Vec::with_capacity(z),
+            z_shipdate: Vec::with_capacity(z),
+            z_commitdate: Vec::with_capacity(z),
+            z_receiptdate: Vec::with_capacity(z),
+        }
+    }
+
+    /// Append one produced chunk (at most `chunk_rows` rows) and its
+    /// zone entries.
+    fn append(&mut self, c: &LineitemChunk) {
+        self.orderkey.extend_from_slice(&c.orderkey);
+        self.partkey.extend_from_slice(&c.partkey);
+        self.suppkey.extend_from_slice(&c.suppkey);
+        self.linenumber.extend_from_slice(&c.linenumber);
+        self.quantity.extend_from_slice(&c.quantity);
+        self.extendedprice.extend_from_slice(&c.extendedprice);
+        self.discount.extend_from_slice(&c.discount);
+        self.tax.extend_from_slice(&c.tax);
+        self.returnflag.extend_from_slice(&c.returnflag);
+        self.linestatus.extend_from_slice(&c.linestatus);
+        self.shipdate.extend_from_slice(&c.shipdate);
+        self.commitdate.extend_from_slice(&c.commitdate);
+        self.receiptdate.extend_from_slice(&c.receiptdate);
+        self.shipmode.extend_from_slice(&c.shipmode);
+        self.shipinstruct.extend_from_slice(&c.shipinstruct);
+        self.z_quantity.extend(zones_f64(&c.quantity, self.chunk_rows));
+        self.z_extendedprice.extend(zones_f64(&c.extendedprice, self.chunk_rows));
+        self.z_discount.extend(zones_f64(&c.discount, self.chunk_rows));
+        self.z_tax.extend(zones_f64(&c.tax, self.chunk_rows));
+        self.z_shipdate.extend(zones_i32(&c.shipdate, self.chunk_rows));
+        self.z_commitdate.extend(zones_i32(&c.commitdate, self.chunk_rows));
+        self.z_receiptdate.extend(zones_i32(&c.receiptdate, self.chunk_rows));
+    }
+
+    /// Concatenate another accumulator produced for the immediately
+    /// following chunk-aligned row range (parallel generation joins
+    /// its per-thread parts in order).
+    fn merge(&mut self, o: LiCols) {
+        self.orderkey.extend(o.orderkey);
+        self.partkey.extend(o.partkey);
+        self.suppkey.extend(o.suppkey);
+        self.linenumber.extend(o.linenumber);
+        self.quantity.extend(o.quantity);
+        self.extendedprice.extend(o.extendedprice);
+        self.discount.extend(o.discount);
+        self.tax.extend(o.tax);
+        self.returnflag.extend(o.returnflag);
+        self.linestatus.extend(o.linestatus);
+        self.shipdate.extend(o.shipdate);
+        self.commitdate.extend(o.commitdate);
+        self.receiptdate.extend(o.receiptdate);
+        self.shipmode.extend(o.shipmode);
+        self.shipinstruct.extend(o.shipinstruct);
+        self.z_quantity.extend(o.z_quantity);
+        self.z_extendedprice.extend(o.z_extendedprice);
+        self.z_discount.extend(o.z_discount);
+        self.z_tax.extend(o.z_tax);
+        self.z_shipdate.extend(o.z_shipdate);
+        self.z_commitdate.extend(o.z_commitdate);
+        self.z_receiptdate.extend(o.z_receiptdate);
+    }
+
+    fn into_table(self) -> Table {
+        let mut zm = ZoneMap::new(self.chunk_rows);
+        zm.add_col("l_quantity", ColZones::F64(self.z_quantity));
+        zm.add_col("l_extendedprice", ColZones::F64(self.z_extendedprice));
+        zm.add_col("l_discount", ColZones::F64(self.z_discount));
+        zm.add_col("l_tax", ColZones::F64(self.z_tax));
+        zm.add_col("l_shipdate", ColZones::I32(self.z_shipdate));
+        zm.add_col("l_commitdate", ColZones::I32(self.z_commitdate));
+        zm.add_col("l_receiptdate", ColZones::I32(self.z_receiptdate));
+        let mut li = Table::new("lineitem");
+        li.add("l_orderkey", Column::I64(self.orderkey));
+        li.add("l_partkey", Column::I64(self.partkey));
+        li.add("l_suppkey", Column::I64(self.suppkey));
+        li.add("l_linenumber", Column::I32(self.linenumber));
+        li.add("l_quantity", Column::F64(self.quantity));
+        li.add("l_extendedprice", Column::F64(self.extendedprice));
+        li.add("l_discount", Column::F64(self.discount));
+        li.add("l_tax", Column::F64(self.tax));
+        li.add("l_returnflag", Column::U8(self.returnflag));
+        li.add("l_linestatus", Column::U8(self.linestatus));
+        li.add("l_shipdate", Column::I32(self.shipdate));
+        li.add("l_commitdate", Column::I32(self.commitdate));
+        li.add("l_receiptdate", Column::I32(self.receiptdate));
+        li.add("l_shipmode", Column::Str { dict: dict_strings(&SHIP_MODES), codes: self.shipmode });
+        li.add(
+            "l_shipinstruct",
+            Column::Str { dict: dict_strings(&SHIP_INSTRUCTS), codes: self.shipinstruct },
+        );
+        li.set_zones(zm);
+        li
+    }
+}
+
+/// Generate lineitem rows `[lo, hi)` as a table with a local zone map
+/// (chunked from the shard's row 0). This is the worker path: the
+/// distributed coordinator generates each partition in place instead
+/// of shipping table bytes, and the result is bitwise identical to
+/// rows `[lo, hi)` of [`TpchDb::generate`]'s lineitem.
+pub fn lineitem_shard(cfg: &TpchConfig, lo: usize, hi: usize) -> Table {
+    let mut cols = LiCols::with_capacity(CHUNK_ROWS, hi.saturating_sub(lo));
+    for_each_lineitem_chunk(cfg, lo, hi, CHUNK_ROWS, |c| cols.append(c));
+    cols.into_table()
+}
+
+/// Full lineitem, generated in parallel: each thread produces a
+/// chunk-aligned contiguous row range through the same chunk core,
+/// and the parts concatenate in order (so thread count never changes
+/// the data, and per-thread zones concatenate to the global map).
+fn gen_lineitem_parallel(cfg: &TpchConfig, total: usize) -> Table {
+    let chunks = total.div_ceil(CHUNK_ROWS).max(1);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(chunks);
+    let chunks_per = chunks.div_ceil(threads);
+    let parts: Vec<LiCols> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let lo = (t * chunks_per * CHUNK_ROWS).min(total);
+                let hi = ((t + 1) * chunks_per * CHUNK_ROWS).min(total);
+                s.spawn(move || {
+                    let mut cols = LiCols::with_capacity(CHUNK_ROWS, hi - lo);
+                    for_each_lineitem_chunk(cfg, lo, hi, CHUNK_ROWS, |c| cols.append(c));
+                    cols
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("generator thread panicked")).collect()
+    });
+    let mut all = LiCols::with_capacity(CHUNK_ROWS, total);
+    for p in parts {
+        all.merge(p);
+    }
+    all.into_table()
+}
+
+// --------------------------------------------------------- other tables
+
+fn dict_strings(words: &[&str]) -> Vec<String> {
+    words.iter().map(|s| s.to_string()).collect()
+}
+
+/// Orders, generated in parallel over order ranges. o_totalprice and
+/// o_orderstatus re-derive the order's lines through [`line_vals`], so
+/// they stay consistent with lineitem without materializing it.
+fn gen_orders_parallel(cfg: &TpchConfig, streams: &Streams, d: &Dims) -> Table {
+    let n = d.n_orders;
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(n);
+    let per = n.div_ceil(threads);
+    struct OCols {
+        orderkey: Vec<i64>,
+        custkey: Vec<i64>,
+        orderdate: Vec<i32>,
+        totalprice: Vec<f64>,
+        priority: Vec<u32>,
+        status: Vec<u8>,
+    }
+    let parts: Vec<OCols> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let alo = (t * per).min(n);
+                let ahi = ((t + 1) * per).min(n);
+                s.spawn(move || {
+                    let m = ahi - alo;
+                    let mut o = OCols {
+                        orderkey: Vec::with_capacity(m),
+                        custkey: Vec::with_capacity(m),
+                        orderdate: Vec::with_capacity(m),
+                        totalprice: Vec::with_capacity(m),
+                        priority: Vec::with_capacity(m),
+                        status: Vec::with_capacity(m),
+                    };
+                    // First global lineitem row of order `alo`.
+                    let mut row = (0..alo).map(|oi| lines_in_order(streams, oi)).sum::<usize>();
+                    for oi in alo..ahi {
+                        let mut rng = row_rng(streams.order, oi);
+                        let custkey = rng.gen_range_i64(1, d.n_cust);
+                        let prio = rng.gen_range_u64(PRIORITIES.len() as u64) as u32;
+                        let odate = order_date(streams, d, oi);
+                        let nl = lines_in_order(streams, oi);
+                        let mut total = 0.0;
+                        let mut all_f = true;
+                        for ln in 0..nl {
+                            let v = line_vals(streams, d, row + ln, oi, odate);
+                            total += v.price * (1.0 - v.discount) * (1.0 + v.tax);
+                            if v.lstatus == b'O' {
+                                all_f = false;
+                            }
+                        }
+                        row += nl;
+                        o.orderkey.push(oi as i64 + 1);
+                        o.custkey.push(custkey);
+                        o.orderdate.push(odate);
+                        o.totalprice.push(total);
+                        o.priority.push(prio);
+                        o.status.push(if all_f { b'F' } else { b'O' });
+                    }
+                    o
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("generator thread panicked")).collect()
+    });
+    let mut orderkey = Vec::with_capacity(n);
+    let mut custkey = Vec::with_capacity(n);
+    let mut orderdate = Vec::with_capacity(n);
+    let mut totalprice = Vec::with_capacity(n);
+    let mut priority = Vec::with_capacity(n);
+    let mut status = Vec::with_capacity(n);
+    for p in parts {
+        orderkey.extend(p.orderkey);
+        custkey.extend(p.custkey);
+        orderdate.extend(p.orderdate);
+        totalprice.extend(p.totalprice);
+        priority.extend(p.priority);
+        status.extend(p.status);
+    }
+    let mut t = Table::new("orders");
+    t.add("o_orderkey", Column::I64(orderkey));
+    t.add("o_custkey", Column::I64(custkey));
+    t.add("o_orderdate", Column::I32(orderdate));
+    t.add("o_totalprice", Column::F64(totalprice));
+    t.add("o_orderpriority", Column::Str { dict: dict_strings(&PRIORITIES), codes: priority });
+    t.add("o_orderstatus", Column::U8(status));
+    t
+}
+
+fn part_name_dict() -> Vec<String> {
+    let mut d = Vec::with_capacity(COLORS.len() * COLORS.len());
+    for a in COLORS {
+        for b in COLORS {
+            d.push(format!("{a} {b}"));
+        }
+    }
+    d
+}
+
+fn brand_dict() -> Vec<String> {
+    let mut d = Vec::with_capacity(25);
+    for m in 1..=5 {
+        for nn in 1..=5 {
+            d.push(format!("Brand#{m}{nn}"));
+        }
+    }
+    d
+}
+
+fn type_dict() -> Vec<String> {
+    let mut d = Vec::with_capacity(TYPE_SYLL1.len() * TYPE_SYLL2.len() * TYPE_SYLL3.len());
+    for a in TYPE_SYLL1 {
+        for b in TYPE_SYLL2 {
+            for c in TYPE_SYLL3 {
+                d.push(format!("{a} {b} {c}"));
+            }
+        }
+    }
+    d
+}
+
+fn gen_part(cfg: &TpchConfig, streams: &Streams) -> Table {
     let n = cfg.parts();
     let mut partkey = Vec::with_capacity(n);
-    let mut name = StrColumnBuilder::new();
-    let mut brand = StrColumnBuilder::new();
-    let mut ptype = StrColumnBuilder::new();
-    let mut container = StrColumnBuilder::new();
+    let mut name = Vec::with_capacity(n);
+    let mut brand = Vec::with_capacity(n);
+    let mut ptype = Vec::with_capacity(n);
+    let mut container = Vec::with_capacity(n);
     let mut size = Vec::with_capacity(n);
     let mut retail = Vec::with_capacity(n);
     for i in 0..n {
+        let mut rng = row_rng(streams.part, i);
         partkey.push(i as i64 + 1);
-        // Name: two distinct color words (Q9 greps a color substring).
-        let c1 = COLORS[rng.gen_range_u64(COLORS.len() as u64) as usize];
-        let c2 = COLORS[rng.gen_range_u64(COLORS.len() as u64) as usize];
-        name.push(&format!("{c1} {c2}"));
-        let m = rng.gen_range_u64(5) + 1;
-        let nn = rng.gen_range_u64(5) + 1;
-        brand.push(&format!("Brand#{m}{nn}"));
-        let t = format!(
-            "{} {} {}",
-            TYPE_SYLL1[rng.gen_range_u64(TYPE_SYLL1.len() as u64) as usize],
-            TYPE_SYLL2[rng.gen_range_u64(TYPE_SYLL2.len() as u64) as usize],
-            TYPE_SYLL3[rng.gen_range_u64(TYPE_SYLL3.len() as u64) as usize],
-        );
-        ptype.push(&t);
-        container.push(CONTAINERS[rng.gen_range_u64(CONTAINERS.len() as u64) as usize]);
+        // Name: two color words (Q9 greps a color substring). Codes
+        // index the canonical COLORS×COLORS dictionary directly.
+        let c1 = rng.gen_range_u64(COLORS.len() as u64) as u32;
+        let c2 = rng.gen_range_u64(COLORS.len() as u64) as u32;
+        name.push(c1 * COLORS.len() as u32 + c2);
+        let m = rng.gen_range_u64(5) as u32;
+        let nn = rng.gen_range_u64(5) as u32;
+        brand.push(m * 5 + nn);
+        let t1 = rng.gen_range_u64(TYPE_SYLL1.len() as u64) as u32;
+        let t2 = rng.gen_range_u64(TYPE_SYLL2.len() as u64) as u32;
+        let t3 = rng.gen_range_u64(TYPE_SYLL3.len() as u64) as u32;
+        let syl23 = (TYPE_SYLL2.len() * TYPE_SYLL3.len()) as u32;
+        ptype.push(t1 * syl23 + t2 * TYPE_SYLL3.len() as u32 + t3);
+        container.push(rng.gen_range_u64(CONTAINERS.len() as u64) as u32);
         size.push(rng.gen_range_i64(1, 50) as i32);
-        // retailprice formula shape from the spec.
-        retail.push(900.0 + (i as f64 % 1000.0) / 10.0 + (i % 100) as f64);
+        retail.push(retail_price(i));
     }
     let mut t = Table::new("part");
     t.add("p_partkey", Column::I64(partkey));
-    t.add("p_name", name.finish());
-    t.add("p_brand", brand.finish());
-    t.add("p_type", ptype.finish());
-    t.add("p_container", container.finish());
+    t.add("p_name", Column::Str { dict: part_name_dict(), codes: name });
+    t.add("p_brand", Column::Str { dict: brand_dict(), codes: brand });
+    t.add("p_type", Column::Str { dict: type_dict(), codes: ptype });
+    t.add("p_container", Column::Str { dict: dict_strings(&CONTAINERS), codes: container });
     t.add("p_size", Column::I32(size));
     t.add("p_retailprice", Column::F64(retail));
     t
 }
 
-fn gen_supplier(cfg: &TpchConfig, rng: &mut Pcg64) -> Table {
+fn gen_supplier(cfg: &TpchConfig, streams: &Streams) -> Table {
     let n = cfg.suppliers();
     let mut suppkey = Vec::with_capacity(n);
     let mut nationkey = Vec::with_capacity(n);
     let mut acctbal = Vec::with_capacity(n);
     for i in 0..n {
+        let mut rng = row_rng(streams.supplier, i);
         suppkey.push(i as i64 + 1);
         nationkey.push(rng.gen_range_u64(25) as i32);
         acctbal.push(rng.gen_range_f64(-999.99, 9999.99));
@@ -154,7 +821,7 @@ fn gen_supplier(cfg: &TpchConfig, rng: &mut Pcg64) -> Table {
     t
 }
 
-fn gen_partsupp(cfg: &TpchConfig, rng: &mut Pcg64) -> Table {
+fn gen_partsupp(cfg: &TpchConfig, streams: &Streams) -> Table {
     let parts = cfg.parts();
     let sups = cfg.suppliers() as i64;
     // min() guards tiny scale factors where fewer than 4 suppliers exist.
@@ -169,6 +836,8 @@ fn gen_partsupp(cfg: &TpchConfig, rng: &mut Pcg64) -> Table {
     let mut supplycost = Vec::with_capacity(n);
     for p in 0..parts {
         for j in 0..per_part {
+            let r = p * per_part + j;
+            let mut rng = row_rng(streams.partsupp, r);
             partkey.push(p as i64 + 1);
             let s = (p as i64 + j as i64 * step) % sups + 1;
             suppkey.push(s);
@@ -184,144 +853,25 @@ fn gen_partsupp(cfg: &TpchConfig, rng: &mut Pcg64) -> Table {
     t
 }
 
-fn gen_customer(cfg: &TpchConfig, rng: &mut Pcg64) -> Table {
+fn gen_customer(cfg: &TpchConfig, streams: &Streams) -> Table {
     let n = cfg.customers();
     let mut custkey = Vec::with_capacity(n);
     let mut nationkey = Vec::with_capacity(n);
     let mut acctbal = Vec::with_capacity(n);
-    let mut segment = StrColumnBuilder::new();
+    let mut segment = Vec::with_capacity(n);
     for i in 0..n {
+        let mut rng = row_rng(streams.customer, i);
         custkey.push(i as i64 + 1);
         nationkey.push(rng.gen_range_u64(25) as i32);
         acctbal.push(rng.gen_range_f64(-999.99, 9999.99));
-        segment.push(SEGMENTS[rng.gen_range_u64(SEGMENTS.len() as u64) as usize]);
+        segment.push(rng.gen_range_u64(SEGMENTS.len() as u64) as u32);
     }
     let mut t = Table::new("customer");
     t.add("c_custkey", Column::I64(custkey));
     t.add("c_nationkey", Column::I32(nationkey));
     t.add("c_acctbal", Column::F64(acctbal));
-    t.add("c_mktsegment", segment.finish());
+    t.add("c_mktsegment", Column::Str { dict: dict_strings(&SEGMENTS), codes: segment });
     t
-}
-
-fn gen_orders_lineitem(cfg: &TpchConfig, rng: &mut Pcg64, part: &Table) -> (Table, Table) {
-    let n_orders = cfg.orders();
-    let n_cust = cfg.customers() as i64;
-    let n_parts = cfg.parts() as i64;
-    let n_sups = cfg.suppliers() as i64;
-    let retail = part.col("p_retailprice").as_f64();
-
-    let start = Dates::start();
-    let end = Dates::end_orders();
-    let current = Dates::current();
-
-    // orders columns
-    let mut o_orderkey = Vec::with_capacity(n_orders);
-    let mut o_custkey = Vec::with_capacity(n_orders);
-    let mut o_orderdate = Vec::with_capacity(n_orders);
-    let mut o_totalprice = Vec::with_capacity(n_orders);
-    let mut o_priority = StrColumnBuilder::new();
-    let mut o_status = Vec::with_capacity(n_orders);
-
-    // lineitem columns (≈ 4 lines/order average)
-    let est = n_orders * 4;
-    let mut l_orderkey = Vec::with_capacity(est);
-    let mut l_partkey = Vec::with_capacity(est);
-    let mut l_suppkey = Vec::with_capacity(est);
-    let mut l_linenumber = Vec::with_capacity(est);
-    let mut l_quantity = Vec::with_capacity(est);
-    let mut l_extendedprice = Vec::with_capacity(est);
-    let mut l_discount = Vec::with_capacity(est);
-    let mut l_tax = Vec::with_capacity(est);
-    let mut l_returnflag = Vec::with_capacity(est);
-    let mut l_linestatus = Vec::with_capacity(est);
-    let mut l_shipdate = Vec::with_capacity(est);
-    let mut l_commitdate = Vec::with_capacity(est);
-    let mut l_receiptdate = Vec::with_capacity(est);
-    let mut l_shipmode = StrColumnBuilder::new();
-    let mut l_shipinstruct = StrColumnBuilder::new();
-
-    for i in 0..n_orders {
-        let orderkey = i as i64 + 1;
-        let orderdate = rng.gen_range_i64(start as i64, end as i64) as i32;
-        o_orderkey.push(orderkey);
-        o_custkey.push(rng.gen_range_i64(1, n_cust));
-        o_orderdate.push(orderdate);
-        o_priority.push(PRIORITIES[rng.gen_range_u64(PRIORITIES.len() as u64) as usize]);
-
-        let lines = rng.gen_range_i64(1, 7);
-        let mut total = 0.0;
-        let mut all_f = true;
-        for ln in 0..lines {
-            let partkey = rng.gen_range_i64(1, n_parts);
-            let suppkey = rng.gen_range_i64(1, n_sups);
-            let quantity = rng.gen_range_i64(1, 50) as f64;
-            let price = retail[(partkey - 1) as usize] * quantity / 10.0;
-            let discount = rng.gen_range_i64(0, 10) as f64 / 100.0;
-            let tax = rng.gen_range_i64(0, 8) as f64 / 100.0;
-            let shipdate = orderdate + rng.gen_range_i64(1, 121) as i32;
-            let commitdate = orderdate + rng.gen_range_i64(30, 90) as i32;
-            let receiptdate = shipdate + rng.gen_range_i64(1, 30) as i32;
-            let returnflag = if receiptdate <= current {
-                if rng.gen_bool(0.5) {
-                    b'R'
-                } else {
-                    b'A'
-                }
-            } else {
-                b'N'
-            };
-            let linestatus = if shipdate > current { b'O' } else { b'F' };
-            if linestatus == b'O' {
-                all_f = false;
-            }
-            l_orderkey.push(orderkey);
-            l_partkey.push(partkey);
-            l_suppkey.push(suppkey);
-            l_linenumber.push(ln as i32 + 1);
-            l_quantity.push(quantity);
-            l_extendedprice.push(price);
-            l_discount.push(discount);
-            l_tax.push(tax);
-            l_returnflag.push(returnflag);
-            l_linestatus.push(linestatus);
-            l_shipdate.push(shipdate);
-            l_commitdate.push(commitdate);
-            l_receiptdate.push(receiptdate);
-            l_shipmode.push(SHIP_MODES[rng.gen_range_u64(SHIP_MODES.len() as u64) as usize]);
-            l_shipinstruct
-                .push(SHIP_INSTRUCTS[rng.gen_range_u64(SHIP_INSTRUCTS.len() as u64) as usize]);
-            total += price * (1.0 - discount) * (1.0 + tax);
-        }
-        o_totalprice.push(total);
-        o_status.push(if all_f { b'F' } else { b'O' });
-    }
-
-    let mut orders = Table::new("orders");
-    orders.add("o_orderkey", Column::I64(o_orderkey));
-    orders.add("o_custkey", Column::I64(o_custkey));
-    orders.add("o_orderdate", Column::I32(o_orderdate));
-    orders.add("o_totalprice", Column::F64(o_totalprice));
-    orders.add("o_orderpriority", o_priority.finish());
-    orders.add("o_orderstatus", Column::U8(o_status));
-
-    let mut li = Table::new("lineitem");
-    li.add("l_orderkey", Column::I64(l_orderkey));
-    li.add("l_partkey", Column::I64(l_partkey));
-    li.add("l_suppkey", Column::I64(l_suppkey));
-    li.add("l_linenumber", Column::I32(l_linenumber));
-    li.add("l_quantity", Column::F64(l_quantity));
-    li.add("l_extendedprice", Column::F64(l_extendedprice));
-    li.add("l_discount", Column::F64(l_discount));
-    li.add("l_tax", Column::F64(l_tax));
-    li.add("l_returnflag", Column::U8(l_returnflag));
-    li.add("l_linestatus", Column::U8(l_linestatus));
-    li.add("l_shipdate", Column::I32(l_shipdate));
-    li.add("l_commitdate", Column::I32(l_commitdate));
-    li.add("l_receiptdate", Column::I32(l_receiptdate));
-    li.add("l_shipmode", l_shipmode.finish());
-    li.add("l_shipinstruct", l_shipinstruct.finish());
-    (orders, li)
 }
 
 fn gen_nation_region() -> (Table, Table) {
@@ -503,5 +1053,106 @@ mod tests {
         for i in 0..db.partsupp.len() {
             assert!(seen.insert((pk[i], sk[i])), "dup pair ({}, {})", pk[i], sk[i]);
         }
+    }
+
+    // ----------------------------------------- streaming / shard tests
+
+    /// Shard rows must be bitwise identical to the same rows of the
+    /// full generation — the property the coordinator's generate-in-
+    /// place worker path rests on.
+    fn assert_is_slice(full: &Table, shard: &Table, lo: usize) {
+        for name in full.column_names() {
+            let hi = lo + shard.len();
+            match (full.col(name), shard.col(name)) {
+                (Column::I64(a), Column::I64(b)) => assert_eq!(&a[lo..hi], &b[..], "{name}"),
+                (Column::I32(a), Column::I32(b)) => assert_eq!(&a[lo..hi], &b[..], "{name}"),
+                (Column::F64(a), Column::F64(b)) => assert_eq!(&a[lo..hi], &b[..], "{name}"),
+                (Column::U8(a), Column::U8(b)) => assert_eq!(&a[lo..hi], &b[..], "{name}"),
+                (
+                    Column::Str { dict: da, codes: ca },
+                    Column::Str { dict: db, codes: cb },
+                ) => {
+                    assert_eq!(da, db, "{name} dictionaries diverge");
+                    assert_eq!(&ca[lo..hi], &cb[..], "{name}");
+                }
+                _ => panic!("column {name} type mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn shard_matches_slice_of_full_generation() {
+        let cfg = TpchConfig::new(0.001, 42);
+        let db = TpchDb::generate(cfg);
+        let n = db.lineitem.len();
+        assert_eq!(n, lineitem_rows(&cfg));
+        for (lo, hi) in
+            [(0, n), (0, 1), (1, 1000), (n / 3, 2 * n / 3), (n - 7, n), (4096 - 13, 4096 + 13)]
+        {
+            let shard = lineitem_shard(&cfg, lo, hi);
+            assert_eq!(shard.len(), hi - lo);
+            assert_is_slice(&db.lineitem, &shard, lo);
+            assert!(shard.zones().is_some(), "shards carry local zone maps");
+        }
+    }
+
+    #[test]
+    fn lineitem_zone_map_bounds_every_chunk() {
+        let db = small();
+        let zm = db.lineitem.zones().expect("lineitem must carry zones");
+        assert_eq!(zm.chunk_rows(), CHUNK_ROWS);
+        assert_eq!(zm.chunks(), db.lineitem.len().div_ceil(CHUNK_ROWS));
+        let ship = db.lineitem.col("l_shipdate").as_i32();
+        match zm.col("l_shipdate").expect("shipdate zones") {
+            ColZones::I32(zs) => {
+                for (ci, z) in zs.iter().enumerate() {
+                    let s = ci * CHUNK_ROWS;
+                    let e = (s + CHUNK_ROWS).min(ship.len());
+                    for &v in &ship[s..e] {
+                        assert!(z.min <= v && v <= z.max);
+                    }
+                }
+            }
+            _ => panic!("shipdate zones must be i32"),
+        }
+        match zm.col("l_quantity").expect("quantity zones") {
+            ColZones::F64(zs) => assert_eq!(zs.len(), zm.chunks()),
+            _ => panic!("quantity zones must be f64"),
+        }
+    }
+
+    #[test]
+    fn streaming_chunks_are_bounded_and_complete() {
+        let cfg = TpchConfig::new(0.001, 42);
+        let total = lineitem_rows(&cfg);
+        let mut rows = 0;
+        let mut next_lo = 0;
+        for_each_lineitem_chunk(&cfg, 0, total, 1000, |c| {
+            assert!(!c.is_empty() && c.len() <= 1000);
+            assert_eq!(c.lo, next_lo);
+            next_lo += c.len();
+            rows += c.len();
+        });
+        assert_eq!(rows, total);
+    }
+
+    #[test]
+    fn order_dates_ramp_with_bounded_jitter() {
+        let db = small();
+        let od = db.orders.col("o_orderdate").as_i32();
+        for w in od.windows(2) {
+            assert!(w[1] >= w[0] - 31, "jitter exceeded the ramp bound");
+        }
+        assert!(od[od.len() - 1] - od[0] > 2000, "dates must span the full range");
+    }
+
+    #[test]
+    fn quantity_drifts_with_order_position() {
+        let db = small();
+        let q = db.lineitem.col("l_quantity").as_f64();
+        let k = q.len() / 10;
+        let head: f64 = q[..k].iter().sum::<f64>() / k as f64;
+        let tail: f64 = q[q.len() - k..].iter().sum::<f64>() / k as f64;
+        assert!(tail > head + 20.0, "quantity drift too weak: head={head} tail={tail}");
     }
 }

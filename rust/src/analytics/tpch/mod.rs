@@ -2,7 +2,9 @@
 
 pub mod gen;
 
-pub use gen::{TpchDb, TpchConfig};
+pub use gen::{
+    for_each_lineitem_chunk, lineitem_rows, lineitem_shard, LineitemChunk, TpchConfig, TpchDb,
+};
 
 /// Scale-factor-1 base cardinalities (TPC-H spec §4.2.5).
 pub const SF1_ORDERS: usize = 1_500_000;

@@ -206,6 +206,8 @@ pub struct Ack {
     pub map_ns: u64,
     /// Peak live hash-table footprint of the fold (bytes).
     pub ht_bytes: u64,
+    /// Scan chunks this worker skipped wholesale via zone-map pruning.
+    pub morsels_pruned: u64,
     /// Exchange frame bytes per reducer partition (length `w`).
     pub part_bytes: Vec<u64>,
     /// Empty on success; a failed worker reports why here.
@@ -226,6 +228,7 @@ impl Ack {
         out.extend_from_slice(&self.epoch.to_le_bytes());
         out.extend_from_slice(&self.map_ns.to_le_bytes());
         out.extend_from_slice(&self.ht_bytes.to_le_bytes());
+        out.extend_from_slice(&self.morsels_pruned.to_le_bytes());
         put_vec_u64(out, &self.part_bytes);
         put_str(out, &self.error);
     }
@@ -238,6 +241,7 @@ impl Ack {
             epoch: r.u32()?,
             map_ns: r.u64()?,
             ht_bytes: r.u64()?,
+            morsels_pruned: r.u64()?,
             part_bytes: r.vec_u64()?,
             error: r.str()?,
         };
@@ -617,6 +621,7 @@ mod tests {
             epoch: 1,
             map_ns: 12345,
             ht_bytes: 1 << 20,
+            morsels_pruned: 7,
             part_bytes: vec![0, 64, 0, 1024],
             error: "".into(),
         };
@@ -704,6 +709,7 @@ mod tests {
             epoch: 0,
             map_ns: 1,
             ht_bytes: 2,
+            morsels_pruned: 3,
             part_bytes: vec![0, 64],
             error: "e".into(),
         };

@@ -58,7 +58,7 @@ use crate::analytics::engine::{self, LogicalPlan, Merger, Partial, TaskScratch};
 use crate::analytics::morsel::DEFAULT_MORSEL_ROWS;
 use crate::analytics::ops::ExecStats;
 use crate::analytics::queries::Row;
-use crate::analytics::tpch::TpchDb;
+use crate::analytics::tpch::{gen as tpchgen, TpchDb};
 use crate::cluster::ClusterSpec;
 use crate::coordinator::backpressure::Backpressure;
 use crate::coordinator::protocol::{
@@ -108,6 +108,9 @@ pub struct DistQueryReport {
     /// run; each round bumps the execution epoch and re-executes the
     /// fragments whose valid ack is missing).
     pub repairs: u32,
+    /// Scan chunks skipped wholesale across all workers via zone-map
+    /// pruning (summed from the map acks).
+    pub morsels_pruned: u64,
 }
 
 impl DistQueryReport {
@@ -285,6 +288,7 @@ impl WorkerShared {
             epoch: 0,
             map_ns: 0,
             ht_bytes: 0,
+            morsels_pruned: 0,
             part_bytes: Vec::new(),
             error: msg,
         };
@@ -384,14 +388,28 @@ impl WorkerShared {
         // to consult, exactly as a headless NIC receiving its program
         // over the fabric. A plan the leader invented five seconds ago
         // runs the same as a TPC-H classic.
-        let (c, _prep) = planir::compile(&plan.db, &plan.plan)?;
+        //
+        // Lineitem scans never receive table bytes: the worker *streams
+        // its own shard into existence* from the deterministic
+        // per-shard generator (bitwise-identical to the same rows of a
+        // full generation) and folds it locally, zone maps included.
+        // Dimension builds still resolve against the attached catalog.
+        let shard;
+        let (c, fold_lo, fold_hi) = if plan.plan.scan == planir::TableRef::Lineitem {
+            shard = tpchgen::lineitem_shard(&plan.db.config, lo, hi);
+            let (c, _prep) = planir::compile_scan(&plan.db, &plan.plan, &shard, true)?;
+            (c, 0, shard.len())
+        } else {
+            let (c, _prep) = planir::compile(&plan.db, &plan.plan)?;
+            (c, lo, hi)
+        };
         let width = plan.plan.width();
-        let mut agg = engine::agg_for(&c, width, hi - lo);
+        let mut agg = engine::agg_for(&c, width, fold_hi - fold_lo);
         let mut scr = TaskScratch::new();
         let mut stats = ExecStats::default();
-        let mut s = lo;
-        while s < hi {
-            let e = (s + plan.morsel_rows).min(hi);
+        let mut s = fold_lo;
+        while s < fold_hi {
+            let e = (s + plan.morsel_rows).min(fold_hi);
             engine::fold_range(&c, width, s, e, &mut agg, &mut scr, &mut stats);
             s = e;
         }
@@ -436,6 +454,7 @@ impl WorkerShared {
                 // the simulated compute share cannot vanish on fast hosts.
                 map_ns: (t.elapsed().as_nanos() as u64).max(1),
                 ht_bytes,
+                morsels_pruned: partial.stats.morsels_pruned,
                 part_bytes,
                 error: String::new(),
             },
@@ -611,6 +630,7 @@ struct AckInfo {
     epoch: u32,
     map_ns: u64,
     ht_bytes: u64,
+    morsels_pruned: u64,
     part_bytes: Vec<u64>,
 }
 
@@ -765,6 +785,7 @@ impl LeaderShared {
             epoch: ack.epoch,
             map_ns: ack.map_ns,
             ht_bytes: ack.ht_bytes,
+            morsels_pruned: ack.morsels_pruned,
             part_bytes: ack.part_bytes,
         });
         st.acked += 1;
@@ -1016,6 +1037,8 @@ impl LeaderShared {
             .collect();
         let ht_bytes_each =
             acks.iter().map(|a| a.as_ref().map_or(0, |a| a.ht_bytes)).max().unwrap_or(0);
+        let morsels_pruned: u64 =
+            acks.iter().map(|a| a.as_ref().map_or(0, |a| a.morsels_pruned)).sum();
         let exchange_pair_bytes: Vec<Vec<u64>> = acks
             .into_iter()
             .map(|a| a.map_or_else(|| vec![0; st.w], |a| a.part_bytes))
@@ -1058,6 +1081,7 @@ impl LeaderShared {
             input_bytes: st.input_bytes_each * st.w as u64,
             host_compute_secs: max(&worker_secs) + max(&reduce_secs),
             repairs: st.repairs,
+            morsels_pruned,
         };
         st.trace.push(format!("done rows={}", report.rows.len()));
         st.result = Some(report);

@@ -1,0 +1,112 @@
+//! Bounded-memory regression gate for the streaming TPC-H generator.
+//!
+//! The worker shard path never materializes a table: a full pass over
+//! lineitem through [`for_each_lineitem_chunk`] must hold only one
+//! reused chunk buffer plus O(1) walk state, whatever the scale factor.
+//! This file installs a live-byte-tracking allocator and pins the
+//! high-water mark of a streaming pass to a small constant — the
+//! property that lets a memory-wimpy smart NIC generate (and scan) an
+//! SF10 shard it could never hold as columns.
+//!
+//! Like `alloc_regression.rs`, this file keeps to a single measured
+//! test: the allocator is process-wide, and concurrent sibling tests
+//! would pollute the peak. (The SF1 variant is `#[ignore]`d — minutes
+//! in debug builds — and measures the same way when run alone.)
+
+use lovelock::analytics::tpch::{for_each_lineitem_chunk, lineitem_rows, TpchConfig};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// System allocator wrapper tracking live bytes and their peak.
+struct PeakAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+fn on_grow(grew: usize) {
+    let live = LIVE.fetch_add(grew, Ordering::Relaxed) + grew;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+// SAFETY: delegates verbatim to `System`; the additions are relaxed
+// atomic arithmetic, which allocates nothing and cannot unwind.
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            on_grow(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            on_grow(layout.size());
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                on_grow(new_size - layout.size());
+            } else {
+                LIVE.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+}
+
+#[global_allocator]
+static ALLOC: PeakAlloc = PeakAlloc;
+
+/// Peak live-heap growth (bytes above entry level) across one full
+/// 4096-row-chunk streaming pass at `sf`; also returns the row count.
+fn streaming_peak_delta(sf: f64) -> (usize, usize) {
+    let cfg = TpchConfig::new(sf, 77);
+    let total = lineitem_rows(&cfg);
+    let entry = LIVE.load(Ordering::Relaxed);
+    PEAK.store(entry, Ordering::Relaxed);
+    let mut rows = 0usize;
+    for_each_lineitem_chunk(&cfg, 0, total, 4096, |c| rows += c.len());
+    assert_eq!(rows, total, "stream dropped rows at sf {sf}");
+    let peak = PEAK.load(Ordering::Relaxed);
+    (peak.saturating_sub(entry), total)
+}
+
+#[test]
+fn streaming_generation_stays_in_bounded_memory() {
+    // SF 0.05 ≈ 300k lineitem rows — tens of MB as materialized
+    // columns. The stream must stay within a budget that is both a
+    // small absolute constant and far below the materialized footprint.
+    let (delta, rows) = streaming_peak_delta(0.05);
+    let materialized = rows * 100; // ~100 B/row across 15 columns
+    let budget = 8 << 20;
+    assert!(
+        delta < budget,
+        "streaming peak grew {delta} B over an {budget} B budget ({rows} rows)"
+    );
+    assert!(
+        delta * 4 < materialized,
+        "streaming peak {delta} B is not clearly below the ~{materialized} B a \
+         materialized table would hold"
+    );
+}
+
+#[test]
+#[ignore = "SF 1 streams ~6M rows; minutes in debug — run with --ignored in release"]
+fn sf1_streaming_generation_stays_in_bounded_memory() {
+    // The same constant budget at SF 1: bounded memory means the peak
+    // does not scale with the row count.
+    let (delta, rows) = streaming_peak_delta(1.0);
+    assert!(rows > 5_000_000, "SF1 should stream millions of rows, got {rows}");
+    assert!(delta < 8 << 20, "SF1 streaming peak grew {delta} B, exceeding 8 MiB");
+}

@@ -287,6 +287,7 @@ fn prop_protocol_frame_codecs_roundtrip() {
             epoch: small_u % 89,
             map_ns: *small as u64 * 7,
             ht_bytes: *small as u64 * 31,
+            morsels_pruned: *small as u64 * 3,
             part_bytes: u64s.clone(),
             error: if small % 2 == 0 { String::new() } else { int_to_name(*small) },
         };
@@ -574,4 +575,102 @@ fn prop_plan_decode_never_panics_on_garbage() {
         let _ = LogicalPlan::decode(&buf);
         Ok(())
     });
+}
+
+// ------------------------------------------------------ zone-map pruning
+
+#[test]
+fn prop_zone_pruning_is_invisible_in_results() {
+    // Chunk pruning must be a pure optimization: for any conjunctive
+    // window predicate over lineitem, the pruned and unpruned
+    // compilations fold the same qualifying rows in the same order, so
+    // the partials are *bit*-identical — and the pruned run never
+    // charges more scan bytes.
+    use lovelock::analytics::engine::{self, plan::*};
+    let db = TpchDb::generate(TpchConfig::new(0.01, 23));
+    let strat = pair_of(
+        pair_of(int_range(8035, 10591), int_range(1, 2200)),
+        pair_of(int_range(1, 55), int_range(0, 10)),
+    );
+    check("zone_pruning_equality", &strat, |((d0, span), (qhi, dhi))| {
+        let plan = LogicalPlan {
+            name: "prune-prop".into(),
+            scan: TableRef::Lineitem,
+            pred: pand(vec![
+                i32_range("l_shipdate", *d0 as i32, (*d0 + *span) as i32),
+                f64_lt("l_quantity", *qhi as f64),
+                f64_range("l_discount", 0.0, *dhi as f64 * 0.01),
+            ]),
+            joins: vec![],
+            cmps: vec![],
+            key: kcol("l_returnflag"),
+            slots: vec![vcol("l_extendedprice")],
+            groups_hint: GroupsHint::Const(4),
+            finalize: FinalizeSpec {
+                scalar: false,
+                columns: vec![OutCol::KeyChar { shift: 0 }, OutCol::Acc(0)],
+                having_gt: None,
+                sort: vec![(0, SortDir::Asc)],
+                limit: 0,
+            },
+        };
+        let (cp, _) = compile(&db, &plan).map_err(|e| e.to_string())?;
+        let (cu, _) = compile_unpruned(&db, &plan).map_err(|e| e.to_string())?;
+        if !cp.prune.is_active() {
+            return Err("generated lineitem carries zones; pruning must arm".into());
+        }
+        if cu.prune.is_active() {
+            return Err("compile_unpruned armed a prune plan".into());
+        }
+        let n = db.lineitem.len();
+        let w = plan.width();
+        let pp = engine::run_range(&cp, w, 0, n);
+        let pu = engine::run_range(&cu, w, 0, n);
+        if pp.keys != pu.keys || pp.counts != pu.counts {
+            return Err(format!(
+                "groups diverged: {} pruned vs {} unpruned",
+                pp.len(),
+                pu.len()
+            ));
+        }
+        let bits = |p: &engine::Partial| -> Vec<u64> { p.accs.iter().map(|a| a.to_bits()).collect() };
+        if bits(&pp) != bits(&pu) {
+            return Err("accumulators diverged bitwise".into());
+        }
+        if pp.stats.bytes_scanned > pu.stats.bytes_scanned {
+            return Err("pruned run charged more scan bytes than unpruned".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn three_paths_agree_for_every_registry_query() {
+    // Serial, morsel-parallel, and distributed (workers generating
+    // their lineitem shards in place, zone maps armed) must return the
+    // same rows for the whole registry.
+    use lovelock::analytics::{run_query, run_query_morsel, QUERY_NAMES};
+    let db = std::sync::Arc::new(TpchDb::generate(TpchConfig::new(0.005, 5)));
+    for q in QUERY_NAMES {
+        let serial = run_query(&db, q).unwrap();
+        let par = run_query_morsel(&db, q, 3, 1024).unwrap();
+        assert!(par.approx_eq_rows(&serial.rows), "{q}: morsel diverged from serial");
+        let cluster = ClusterSpec::traditional(4, n2d_milan(), Role::LiteCompute);
+        let dist = DistributedQuery::new(cluster).run(&db, q).unwrap();
+        assert!(serial.approx_eq_rows(&dist.rows), "{q}: distributed diverged from serial");
+    }
+}
+
+#[test]
+fn distributed_q6_and_q19_prune_morsels() {
+    // The paper-default parameters carry real pruning power: Q6's date
+    // window and Q19's derived quantity hull each rule out whole chunks
+    // of the generator's date-sorted lineitem, and the workers' acks
+    // surface the skip count through the report.
+    let db = std::sync::Arc::new(TpchDb::generate(TpchConfig::new(0.01, 42)));
+    for q in ["q6", "q19"] {
+        let cluster = ClusterSpec::traditional(4, n2d_milan(), Role::LiteCompute);
+        let r = DistributedQuery::new(cluster).run(&db, q).unwrap();
+        assert!(r.morsels_pruned > 0, "{q}: expected pruned chunks, report says 0");
+    }
 }
