@@ -82,6 +82,21 @@ cargo test -q --test properties -- prop_zone_pruning_is_invisible_in_results \
 echo "==> streaming generator bounded-memory smoke"
 cargo test -q --test gen_stream
 
+# SQL front-end gate: every registry query expressed as SQL must plan
+# through parse -> bind -> optimize and return the registry's rows on
+# all three execution paths; the parser must never panic on hostile
+# text; the optimizer must never change results; and fixtures/q6.sql
+# must land on the exact frozen q6 wire bytes. Then an `explain` smoke
+# through the real CLI: plan tree + derived prune intervals + cost rows
+# must render for an ad-hoc query (a front-end regression that only
+# bites the binary fails here, not in a user's hands).
+echo "==> sql front-end (registry equivalence, robustness, golden q6.sql)"
+cargo test -q --test sql_queries
+echo "==> explain smoke (CLI)"
+cargo run -q -- explain "SELECT l_returnflag, COUNT(*) FROM lineitem \
+ WHERE l_shipdate < DATE '1994-06-01' AND l_quantity < 30 \
+ GROUP BY l_returnflag" >/dev/null
+
 if [ "${1:-}" != "quick" ]; then
     # Bench smoke: run every bench once with the short measurement loop
     # (LOVELOCK_BENCH_QUICK), so a bench that panics (or drifts from a

@@ -246,6 +246,19 @@ fn main() {
         });
     }
 
+    // SQL front door: parse + bind + optimize latency for the q6 text —
+    // the per-query planning cost an ad-hoc `sql`/`explain` invocation
+    // pays before the engine ever sees a LogicalPlan. Planning is pure
+    // string/IR work (no db), so this row is scale-factor independent.
+    {
+        let q6_sql = "SELECT SUM(l_extendedprice * l_discount) FROM lineitem \
+             WHERE l_shipdate >= DATE '1994-01-01' AND l_shipdate < DATE '1995-01-01' \
+             AND l_discount >= 0.045 AND l_discount < 0.075 AND l_quantity < 24";
+        b.measure("sql parse+bind+optimize q6", || {
+            black_box(lovelock::analytics::sql::plan_sql(q6_sql).unwrap());
+        });
+    }
+
     let p18 = engine::run_range(&c18, q18.width(), 0, db.lineitem.len());
     b.measure("q18 partition_by_key x8", || {
         black_box(p18.partition_by_key(8));

@@ -34,6 +34,7 @@ pub struct Zone<T> {
 #[derive(Clone, Debug)]
 pub enum ColZones {
     I32(Vec<Zone<i32>>),
+    I64(Vec<Zone<i64>>),
     F64(Vec<Zone<f64>>),
 }
 
@@ -41,6 +42,7 @@ impl ColZones {
     pub fn len(&self) -> usize {
         match self {
             ColZones::I32(v) => v.len(),
+            ColZones::I64(v) => v.len(),
             ColZones::F64(v) => v.len(),
         }
     }
@@ -81,17 +83,21 @@ impl ZoneMap {
         self.cols.iter().find(|(n, _)| n == name).map(|(_, z)| z)
     }
 
-    /// Build a zone map by scanning every `i32`/`f64` column of `t`.
+    /// Build a zone map by scanning every `i32`/`i64`/`f64` column of
+    /// `t`.
     ///
     /// This is the path for tables whose producer did not build zones
-    /// incrementally (dimension tables, test fixtures). Other column
-    /// types carry no zones: predicate leaves are i32/f64 only, so
-    /// nothing could consult them.
+    /// incrementally (dimension tables, test fixtures). `i64` coverage
+    /// is what gives dimension tables zones on their join-key columns
+    /// (`o_orderkey`, `p_partkey`, …), so the SQL planner's `explain`
+    /// can report build-side prune potential. String/u8 columns carry
+    /// no zones: no pruning interval can be derived for them.
     pub fn build_from(t: &Table, chunk_rows: usize) -> ZoneMap {
         let mut zm = ZoneMap::new(chunk_rows);
         for name in t.column_names() {
             match t.col(name) {
                 Column::I32(v) => zm.add_col(name, ColZones::I32(zones_i32(v, chunk_rows))),
+                Column::I64(v) => zm.add_col(name, ColZones::I64(zones_i64(v, chunk_rows))),
                 Column::F64(v) => zm.add_col(name, ColZones::F64(zones_f64(v, chunk_rows))),
                 _ => {}
             }
@@ -106,6 +112,20 @@ impl ZoneMap {
 /// entries for those chunks, which is what lets parallel generator
 /// shards concatenate their zones.
 pub fn zones_i32(vals: &[i32], chunk_rows: usize) -> Vec<Zone<i32>> {
+    vals.chunks(chunk_rows)
+        .map(|c| {
+            let mut z = Zone { min: c[0], max: c[0] };
+            for &v in &c[1..] {
+                z.min = z.min.min(v);
+                z.max = z.max.max(v);
+            }
+            z
+        })
+        .collect()
+}
+
+/// Per-chunk min/max over an `i64` slice (see [`zones_i32`]).
+pub fn zones_i64(vals: &[i64], chunk_rows: usize) -> Vec<Zone<i64>> {
     vals.chunks(chunk_rows)
         .map(|c| {
             let mut z = Zone { min: c[0], max: c[0] };
@@ -172,10 +192,19 @@ mod tests {
         t.add("k", Column::I64(vec![1, 2, 3, 4, 5]));
         t.add("d", Column::I32(vec![10, 20, 30, 40, 50]));
         t.add("x", Column::F64(vec![0.1, 0.2, 0.3, 0.4, 0.5]));
+        t.add("s", Column::U8(vec![b'a', b'b', b'c', b'd', b'e']));
         let zm = ZoneMap::build_from(&t, 2);
         assert_eq!(zm.chunk_rows(), 2);
         assert_eq!(zm.chunks(), 3);
-        assert!(zm.col("k").is_none(), "i64 key columns carry no zones");
+        assert!(zm.col("s").is_none(), "u8 columns carry no zones");
+        match zm.col("k").unwrap() {
+            ColZones::I64(z) => {
+                assert_eq!(z.len(), 3);
+                assert_eq!(z[0], Zone { min: 1, max: 2 });
+                assert_eq!(z[2], Zone { min: 5, max: 5 });
+            }
+            _ => panic!("k must be i64 zones"),
+        }
         match zm.col("d").unwrap() {
             ColZones::I32(z) => {
                 assert_eq!(z.len(), 3);

@@ -127,6 +127,10 @@ pub enum Predicate<'a> {
     I32Range { col: &'a [i32], lo: i32, hi: i32 },
     /// `a[i] < b[i]` between two i32 columns (Q12 date consistency).
     I32ColLt { a: &'a [i32], b: &'a [i32] },
+    /// `col[i] ∈ values` over an i32 column; `values` is sorted and
+    /// deduplicated so each row costs one binary search (IN-lists over
+    /// dates and small int domains).
+    I32InSet { col: &'a [i32], values: Vec<i32> },
     /// `lo <= col[i] < hi` over an f64 column (discount bands).
     F64Range { col: &'a [f64], lo: f64, hi: f64 },
     /// `col[i] < x` over an f64 column (quantity caps).
@@ -146,6 +150,14 @@ impl<'a> Predicate<'a> {
     /// `a[i] < b[i]`.
     pub fn i32_col_lt(a: &'a [i32], b: &'a [i32]) -> Self {
         Predicate::I32ColLt { a, b }
+    }
+
+    /// `col[i] ∈ values` — the set is sorted and deduplicated here so
+    /// the per-row test is a binary search.
+    pub fn i32_in_set(col: &'a [i32], mut values: Vec<i32>) -> Self {
+        values.sort_unstable();
+        values.dedup();
+        Predicate::I32InSet { col, values }
     }
 
     pub fn f64_range(col: &'a [f64], lo: f64, hi: f64) -> Self {
@@ -180,7 +192,9 @@ impl<'a> Predicate<'a> {
     fn leaf_bytes(&self) -> usize {
         match self {
             Predicate::True | Predicate::And(_) => 0,
-            Predicate::I32Range { .. } | Predicate::CodeSet { .. } => 4,
+            Predicate::I32Range { .. } | Predicate::I32InSet { .. } | Predicate::CodeSet { .. } => {
+                4
+            }
             Predicate::I32ColLt { .. } => 8,
             Predicate::F64Range { .. } | Predicate::F64Lt { .. } => 8,
         }
@@ -195,6 +209,9 @@ impl<'a> Predicate<'a> {
                 v >= *a && v < *b
             }),
             Predicate::I32ColLt { a, b } => ops::select_into(lo, hi, out, |i| a[i] < b[i]),
+            Predicate::I32InSet { col, values } => {
+                ops::select_into(lo, hi, out, |i| values.binary_search(&col[i]).is_ok())
+            }
             Predicate::F64Range { col, lo: a, hi: b } => ops::select_into(lo, hi, out, |i| {
                 let v = col[i];
                 v >= *a && v < *b
@@ -215,6 +232,9 @@ impl<'a> Predicate<'a> {
                 v >= *a && v < *b
             }),
             Predicate::I32ColLt { a, b } => ops::refine_into(sel, out, |i| a[i] < b[i]),
+            Predicate::I32InSet { col, values } => {
+                ops::refine_into(sel, out, |i| values.binary_search(&col[i]).is_ok())
+            }
             Predicate::F64Range { col, lo: a, hi: b } => ops::refine_into(sel, out, |i| {
                 let v = col[i];
                 v >= *a && v < *b
@@ -317,6 +337,7 @@ impl<'a> Predicate<'a> {
 /// Borrowed per-chunk zones of one scan column.
 enum ZoneCol<'a> {
     I32(&'a [Zone<i32>]),
+    I64(&'a [Zone<i64>]),
     F64(&'a [Zone<f64>]),
 }
 
@@ -334,6 +355,7 @@ impl<'a> PruneCheck<'a> {
     pub fn new(zones: &'a ColZones, lo: f64, hi: f64) -> Self {
         let zones = match zones {
             ColZones::I32(v) => ZoneCol::I32(v),
+            ColZones::I64(v) => ZoneCol::I64(v),
             ColZones::F64(v) => ZoneCol::F64(v),
         };
         Self { zones, lo, hi }
@@ -346,6 +368,12 @@ impl<'a> PruneCheck<'a> {
     fn may_contain(&self, ci: usize) -> bool {
         match &self.zones {
             ZoneCol::I32(z) => match z.get(ci) {
+                Some(z) => !((z.max as f64) < self.lo || (z.min as f64) > self.hi),
+                None => true,
+            },
+            // Generated keys stay far below 2^53, so the i64→f64
+            // conversion is exact.
+            ZoneCol::I64(z) => match z.get(ci) {
                 Some(z) => !((z.max as f64) < self.lo || (z.min as f64) > self.hi),
                 None => true,
             },
@@ -437,6 +465,21 @@ mod tests {
         let p = Predicate::code_matches(&col, |s| s == "MAIL" || s == "SHIP");
         let mut st = ExecStats::default();
         assert_eq!(p.eval(0, 5, &mut st), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn in_set_leaf_selects_and_refines() {
+        let col = vec![3, 7, 7, 12, 5, 9];
+        // Unsorted with a duplicate: the constructor normalizes.
+        let p = Predicate::i32_in_set(&col, vec![9, 7, 9, 3]);
+        let mut st = ExecStats::default();
+        assert_eq!(p.eval(0, 6, &mut st), vec![0, 1, 2, 5]);
+        assert_eq!(st.bytes_scanned, 24); // 6 rows × 4 B
+        assert_eq!(p.filter(&[1, 3, 4, 5], &mut st), vec![1, 5]);
+        // Empty set admits nothing.
+        let none = Predicate::i32_in_set(&col, vec![]);
+        assert!(none.eval(0, 6, &mut st).is_empty());
+        assert!(!none.is_all_pass());
     }
 
     #[test]

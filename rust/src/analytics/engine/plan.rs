@@ -132,6 +132,18 @@ impl TableRef {
             t => crate::bail!("unknown table tag {t}"),
         })
     }
+
+    /// Catalog name of the table (matches [`Table::name`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            TableRef::Lineitem => "lineitem",
+            TableRef::Orders => "orders",
+            TableRef::Customer => "customer",
+            TableRef::Supplier => "supplier",
+            TableRef::Part => "part",
+            TableRef::Partsupp => "partsupp",
+        }
+    }
 }
 
 /// Resolve a [`TableRef`] against the attached database.
@@ -171,7 +183,7 @@ impl StrMatch {
 /// Declarative predicate tree over one table's columns.
 ///
 /// In **scan** position ([`LogicalPlan::pred`]) only the conjunctive
-/// subset lowers (no `Or`/`I32InSet`) — the vectorized cascade narrows a
+/// subset lowers (no `Or`) — the vectorized cascade narrows a
 /// selection conjunct by conjunct. Dimension-side filters
 /// ([`JoinStep::filter`], [`Payload::CaseConst`]) accept the full tree.
 #[derive(Clone, Debug, PartialEq)]
@@ -181,7 +193,7 @@ pub enum PredExpr {
     I32Range { col: String, lo: i32, hi: i32 },
     /// `a[i] < b[i]` between two i32 columns.
     I32ColLt { a: String, b: String },
-    /// `col[i] ∈ values` over an i32 column (dimension-side only).
+    /// `col[i] ∈ values` over an i32 column.
     I32InSet { col: String, values: Vec<i32> },
     /// `lo <= col[i] < hi` over an f64 column.
     F64Range { col: String, lo: f64, hi: f64 },
@@ -1664,23 +1676,24 @@ fn dim_pred<'a>(p: &PredExpr, t: &'a Table) -> Result<Box<dyn Fn(usize) -> bool 
 }
 
 /// Lower a scan predicate onto the engine's vectorized [`Predicate`]
-/// cascade. Conjunctive subset only: `Or` and `I32InSet` are
-/// dimension-side constructs.
+/// cascade. Conjunctive subset only: `Or` is a dimension-side
+/// construct.
 fn lower_scan_pred<'a>(p: &PredExpr, t: &'a Table) -> Result<Predicate<'a>> {
     Ok(match p {
         PredExpr::True => Predicate::True,
         PredExpr::I32Range { col, lo, hi } => Predicate::i32_range(i32s(t, col)?, *lo, *hi),
         PredExpr::I32ColLt { a, b } => Predicate::i32_col_lt(i32s(t, a)?, i32s(t, b)?),
+        PredExpr::I32InSet { col, values } => {
+            Predicate::i32_in_set(i32s(t, col)?, values.clone())
+        }
         PredExpr::F64Range { col, lo, hi } => Predicate::f64_range(f64s(t, col)?, *lo, *hi),
         PredExpr::F64Lt { col, x } => Predicate::f64_lt(f64s(t, col)?, *x),
         PredExpr::Str { col, m } => Predicate::code_matches(str_col(t, col)?, |s| m.matches(s)),
         PredExpr::And(ps) => Predicate::and(
             ps.iter().map(|p| lower_scan_pred(p, t)).collect::<Result<Vec<_>>>()?,
         ),
-        PredExpr::I32InSet { .. } | PredExpr::Or(_) => {
-            crate::bail!(
-                "IN-set/OR predicates are dimension-side only (the scan cascade is conjunctive)"
-            )
+        PredExpr::Or(_) => {
+            crate::bail!("OR predicates are dimension-side only (the scan cascade is conjunctive)")
         }
     })
 }
@@ -2128,14 +2141,24 @@ fn narrow(iv: &mut Vec<(String, f64, f64)>, col: &str, lo: f64, hi: f64) {
 }
 
 /// Per-column closed intervals implied by a scan predicate tree.
-/// Conservative: only conjunctive range/less-than leaves contribute;
-/// `Or`, `I32InSet`, string matches and column-column comparisons
-/// contribute nothing (never prune on them).
+/// Conservative: conjunctive range/less-than leaves contribute their
+/// window, `I32InSet` its `[min, max]` hull (values between set members
+/// keep a chunk alive — sound, merely not tight); `Or`, string matches
+/// and column-column comparisons contribute nothing (never prune on
+/// them).
 fn pred_intervals(p: &PredExpr, iv: &mut Vec<(String, f64, f64)>) {
     match p {
         PredExpr::I32Range { col, lo, hi } => {
             // Half-open int window: the largest admissible value is hi-1.
             narrow(iv, col, *lo as f64, (*hi - 1) as f64);
+        }
+        PredExpr::I32InSet { col, values } => {
+            // Hull of the set. An empty set admits no row at all, and
+            // the inverted interval [∞, −∞] is disjoint from every
+            // zone — all chunks prune, which is exactly right.
+            let lo = values.iter().copied().min().map_or(f64::INFINITY, |v| v as f64);
+            let hi = values.iter().copied().max().map_or(f64::NEG_INFINITY, |v| v as f64);
+            narrow(iv, col, lo, hi);
         }
         PredExpr::F64Range { col, lo, hi } => narrow(iv, col, *lo, *hi),
         PredExpr::F64Lt { col, x } => narrow(iv, col, f64::NEG_INFINITY, *x),
@@ -2144,11 +2167,7 @@ fn pred_intervals(p: &PredExpr, iv: &mut Vec<(String, f64, f64)>) {
                 pred_intervals(c, iv);
             }
         }
-        PredExpr::True
-        | PredExpr::I32ColLt { .. }
-        | PredExpr::I32InSet { .. }
-        | PredExpr::Str { .. }
-        | PredExpr::Or(_) => {}
+        PredExpr::True | PredExpr::I32ColLt { .. } | PredExpr::Str { .. } | PredExpr::Or(_) => {}
     }
 }
 
@@ -2234,6 +2253,170 @@ fn prune_plan<'a>(plan: &LogicalPlan, scan: &'a Table) -> PrunePlan<'a> {
         PrunePlan::none()
     } else {
         PrunePlan::new(zm.chunk_rows(), checks)
+    }
+}
+
+// ------------------------------------------------- plan introspection
+
+/// Closed per-column intervals the pruning derivation extracts from the
+/// plan's scan predicate and compare conjuncts — exactly what
+/// [`compile`] crosses with the scan table's zone map. Public so the
+/// SQL front-end's `explain` can show which chunks a plan could skip.
+pub fn derived_intervals(plan: &LogicalPlan) -> Vec<(String, f64, f64)> {
+    let mut iv = Vec::new();
+    pred_intervals(&plan.pred, &mut iv);
+    for c in &plan.cmps {
+        cmp_intervals(c, plan, &mut iv);
+    }
+    iv
+}
+
+/// Per-column closed intervals implied by one predicate tree in
+/// isolation (a join step's dimension filter) — build-side prune
+/// potential for `explain`, crossed against the dimension table's zone
+/// map by the caller.
+pub fn filter_intervals(filter: &PredExpr) -> Vec<(String, f64, f64)> {
+    let mut iv = Vec::new();
+    pred_intervals(filter, &mut iv);
+    iv
+}
+
+fn fmt_strmatch(col: &str, m: &StrMatch) -> String {
+    match m {
+        StrMatch::Eq(v) => format!("{col} = '{v}'"),
+        StrMatch::Prefix(v) => format!("{col} like '{v}%'"),
+        StrMatch::Contains(v) => format!("{col} like '%{v}%'"),
+        StrMatch::OneOf(vs) => {
+            let vs: Vec<String> = vs.iter().map(|v| format!("'{v}'")).collect();
+            format!("{col} in ({})", vs.join(", "))
+        }
+    }
+}
+
+/// Render a predicate tree as a compact SQL-ish string (`explain`).
+pub fn fmt_pred(p: &PredExpr) -> String {
+    match p {
+        PredExpr::True => "true".into(),
+        PredExpr::I32Range { col, lo, hi } => format!("{col} in [{lo}, {hi})"),
+        PredExpr::I32ColLt { a, b } => format!("{a} < {b}"),
+        PredExpr::I32InSet { col, values } => {
+            let vs: Vec<String> = values.iter().map(|v| v.to_string()).collect();
+            format!("{col} in ({})", vs.join(", "))
+        }
+        PredExpr::F64Range { col, lo, hi } => format!("{col} in [{lo}, {hi})"),
+        PredExpr::F64Lt { col, x } => format!("{col} < {x}"),
+        PredExpr::Str { col, m } => fmt_strmatch(col, m),
+        PredExpr::And(ps) => {
+            let ps: Vec<String> = ps.iter().map(fmt_pred).collect();
+            format!("({})", ps.join(" and "))
+        }
+        PredExpr::Or(ps) => {
+            let ps: Vec<String> = ps.iter().map(fmt_pred).collect();
+            format!("({})", ps.join(" or "))
+        }
+    }
+}
+
+/// Render an arithmetic expression (`explain`).
+pub fn fmt_val(v: &ValExpr) -> String {
+    match v {
+        ValExpr::Const(x) => format!("{x}"),
+        ValExpr::Col(c) => c.clone(),
+        ValExpr::Payload { step, slot } => format!("join{step}.p{slot}"),
+        ValExpr::Add(a, b) => format!("({} + {})", fmt_val(a), fmt_val(b)),
+        ValExpr::Sub(a, b) => format!("({} - {})", fmt_val(a), fmt_val(b)),
+        ValExpr::Mul(a, b) => format!("({} * {})", fmt_val(a), fmt_val(b)),
+    }
+}
+
+/// Render a group-key expression (`explain`).
+pub fn fmt_key(k: &KeyExpr) -> String {
+    match k {
+        KeyExpr::Const(v) => format!("{v}"),
+        KeyExpr::Col(c) => c.clone(),
+        KeyExpr::Payload { step, slot } => format!("join{step}.p{slot}"),
+        KeyExpr::Year(e) => format!("year({})", fmt_key(e)),
+        KeyExpr::Pack { hi, shift, lo } => {
+            format!("({} << {shift} | {})", fmt_key(hi), fmt_key(lo))
+        }
+    }
+}
+
+fn fmt_keycols(k: &KeyCols) -> String {
+    match k {
+        KeyCols::Col(c) => c.clone(),
+        KeyCols::Packed { a, shift, b } => format!("({a} << {shift} | {b})"),
+    }
+}
+
+impl LogicalPlan {
+    /// Multi-line plan tree for `explain` — every operator the compiled
+    /// evaluator will run, in execution order, one indented line each.
+    pub fn pretty(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "plan {:?} ({} slots)", self.name, self.slots.len());
+        let _ = writeln!(s, "  scan {}", self.scan.name());
+        let _ = writeln!(s, "    pred {}", fmt_pred(&self.pred));
+        for (i, j) in self.joins.iter().enumerate() {
+            let kind = if j.dense { "dense" } else { "hash" };
+            let probe = match (&j.probe_key, &j.link) {
+                (Some(k), _) => format!(" probe {}", fmt_keycols(k)),
+                (None, Some(_)) => String::new(),
+                (None, None) => " probe ?".into(),
+            };
+            let build = j.build_key.as_ref().map(|k| format!(" build {}", fmt_keycols(k)));
+            let _ = writeln!(
+                s,
+                "  join[{i}] {kind} {}{}{}",
+                j.table.name(),
+                probe,
+                build.unwrap_or_default()
+            );
+            if j.filter != PredExpr::True {
+                let _ = writeln!(s, "    filter {}", fmt_pred(&j.filter));
+            }
+            if let Some(l) = &j.link {
+                let _ = writeln!(s, "    link join[{}] via {}", l.step, l.via);
+            }
+            for (k, p) in j.payloads.iter().enumerate() {
+                let desc = match p {
+                    Payload::Col(c) => c.clone(),
+                    Payload::Flag { col, m } => format!("flag({})", fmt_strmatch(col, m)),
+                    Payload::CaseConst { cases } => format!("case({} arms)", cases.len()),
+                    Payload::FromLink(slot) => format!("link.p{slot}"),
+                };
+                let _ = writeln!(s, "    payload p{k} = {desc}");
+            }
+        }
+        for c in &self.cmps {
+            let op = match c.op {
+                CmpOp::Eq => "=",
+                CmpOp::Lt => "<",
+                CmpOp::Le => "<=",
+                CmpOp::Ge => ">=",
+                CmpOp::Gt => ">",
+            };
+            let _ = writeln!(s, "  cmp {} {op} {}", fmt_val(&c.lhs), fmt_val(&c.rhs));
+        }
+        let _ = writeln!(s, "  group by {}", fmt_key(&self.key));
+        for (i, v) in self.slots.iter().enumerate() {
+            let _ = writeln!(s, "    acc[{i}] += {}", fmt_val(v));
+        }
+        let f = &self.finalize;
+        let _ = writeln!(
+            s,
+            "  finalize {} cols{}{}{}{}",
+            f.columns.len(),
+            if f.scalar { ", scalar" } else { "" },
+            match f.having_gt {
+                Some((a, x)) => format!(", having acc[{a}] > {x}"),
+                None => String::new(),
+            },
+            if f.sort.is_empty() { String::new() } else { format!(", sort {} keys", f.sort.len()) },
+            if f.limit > 0 { format!(", limit {}", f.limit) } else { String::new() },
+        );
+        s
     }
 }
 

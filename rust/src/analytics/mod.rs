@@ -30,6 +30,7 @@ pub mod morsel;
 pub mod ops;
 pub mod profile;
 pub mod queries;
+pub mod sql;
 pub mod tpch;
 
 pub use chunkstore::{ZoneMap, CHUNK_ROWS};

@@ -1,0 +1,633 @@
+//! SQL AST and recursive-descent parser.
+//!
+//! The grammar is the TPC-H-shaped subset the binder can lower:
+//!
+//! ```text
+//! query   := SELECT item (',' item)*
+//!            FROM ident join*
+//!            (WHERE expr)? (GROUP BY exprs)? (HAVING expr)?
+//!            (ORDER BY orders)? (LIMIT int)?
+//! item    := expr (AS ident)?
+//! join    := INNER? JOIN ident ON col '=' col (AND col '=' col)*
+//! expr    := or-expr; precedence OR < AND < NOT < comparison/IN/
+//!            BETWEEN/LIKE < add/sub < mul/div < unary < primary
+//! primary := literal | DATE 'y-m-d' | CASE WHEN..THEN.. [ELSE..] END
+//!          | SUM(e) | AVG(e) | COUNT(*) | ident(args) | ident | (expr)
+//! ```
+//!
+//! The parser is fallible end to end: hostile text produces `Err`,
+//! never a panic. Nesting depth is capped (parenthesised expressions,
+//! CASE arms, and function arguments all recurse through the same
+//! guarded entry point), so a parenthesis bomb cannot overflow the
+//! stack.
+
+use super::lex::{lex, Tok};
+use crate::analytics::column::date_to_days;
+use crate::error::Result;
+
+/// Maximum expression nesting depth the parser will follow.
+pub const MAX_PARSE_DEPTH: u32 = 64;
+
+/// Arithmetic operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// Comparison operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpKind {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Aggregate function.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggKind {
+    Sum,
+    Avg,
+    Count,
+}
+
+/// Expression node. `PartialEq` is load-bearing: the binder dedups
+/// aggregate slots and matches ORDER BY / SELECT items by structural
+/// equality.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Col(String),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    /// `DATE 'yyyy-mm-dd'`, already converted to a day count.
+    Date(i32),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+    Cmp(CmpKind, Box<Expr>, Box<Expr>),
+    /// N-ary conjunction (flattened at parse time).
+    And(Vec<Expr>),
+    /// N-ary disjunction (flattened at parse time).
+    Or(Vec<Expr>),
+    Not(Box<Expr>),
+    /// `expr IN (lit, ...)` — members are literals only.
+    InList(Box<Expr>, Vec<Expr>),
+    /// `expr BETWEEN lo AND hi` (closed on both ends, per SQL).
+    Between(Box<Expr>, Box<Expr>, Box<Expr>),
+    /// `expr LIKE 'pattern'` — the binder restricts patterns to
+    /// `prefix%`, `%infix%`, and literal (no wildcard) forms.
+    Like(Box<Expr>, String),
+    Case { whens: Vec<(Expr, Expr)>, else_: Option<Box<Expr>> },
+    /// `SUM(e)` / `AVG(e)` / `COUNT(*)` (`None` operand = `*`).
+    Agg(AggKind, Option<Box<Expr>>),
+    /// Scalar function call: `year(e)`, `nation_name(e)`,
+    /// `region_of(e)`.
+    Func(String, Vec<Expr>),
+}
+
+/// One `INNER JOIN dim ON a = b [AND c = d]` clause. ON sides are bare
+/// column names; the binder resolves which side is the dimension key.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JoinClause {
+    pub table: String,
+    pub on: Vec<(String, String)>,
+}
+
+/// ORDER BY key: 1-based output position or an expression matched
+/// against SELECT items (by alias or structural equality).
+#[derive(Clone, Debug, PartialEq)]
+pub enum OrderKey {
+    Pos(usize),
+    Expr(Expr),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct OrderItem {
+    pub key: OrderKey,
+    pub desc: bool,
+}
+
+/// A parsed SELECT statement.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Query {
+    /// Output expressions with optional `AS` aliases.
+    pub select: Vec<(Expr, Option<String>)>,
+    pub from: String,
+    pub joins: Vec<JoinClause>,
+    pub where_: Option<Expr>,
+    pub group_by: Vec<Expr>,
+    pub having: Option<Expr>,
+    pub order_by: Vec<OrderItem>,
+    pub limit: Option<u32>,
+}
+
+/// Parse one SELECT statement; trailing tokens are an error.
+pub fn parse(text: &str) -> Result<Query> {
+    let toks = lex(text)?;
+    let mut p = Parser { toks, pos: 0, depth: 0 };
+    let q = p.query()?;
+    match p.peek() {
+        None => Ok(q),
+        Some(t) => Err(crate::err!("unexpected trailing {}", t.describe())),
+    }
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+    depth: u32,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        let t = self.toks.get(self.pos).cloned();
+        self.pos += 1;
+        t.ok_or_else(|| crate::err!("unexpected end of query"))
+    }
+
+    fn expect(&mut self, want: &Tok) -> Result<()> {
+        let got = self.next()?;
+        crate::ensure!(&got == want, "expected {}, got {}", want.describe(), got.describe());
+        Ok(())
+    }
+
+    /// True (and consume) if the next token is the keyword `kw`
+    /// (case-insensitive).
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if let Some(Tok::Ident(s)) = self.peek() {
+            if s.eq_ignore_ascii_case(kw) {
+                self.pos += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<()> {
+        crate::ensure!(self.eat_kw(kw), "expected keyword {kw}");
+        Ok(())
+    }
+
+    /// Peek: is the next token the keyword `kw`?
+    fn at_kw(&self, kw: &str) -> bool {
+        matches!(self.peek(), Some(Tok::Ident(s)) if s.eq_ignore_ascii_case(kw))
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            t => Err(crate::err!("expected identifier, got {}", t.describe())),
+        }
+    }
+
+    fn query(&mut self) -> Result<Query> {
+        self.expect_kw("SELECT")?;
+        let mut select = Vec::new();
+        loop {
+            let e = self.expr()?;
+            let alias = if self.eat_kw("AS") { Some(self.ident()?) } else { None };
+            select.push((e, alias));
+            if !matches!(self.peek(), Some(Tok::Comma)) {
+                break;
+            }
+            self.pos += 1;
+        }
+        self.expect_kw("FROM")?;
+        let from = self.ident()?;
+        let mut joins = Vec::new();
+        loop {
+            let inner = self.at_kw("INNER");
+            if inner {
+                self.pos += 1;
+                self.expect_kw("JOIN")?;
+            } else if !self.eat_kw("JOIN") {
+                break;
+            }
+            let table = self.ident()?;
+            self.expect_kw("ON")?;
+            let mut on = Vec::new();
+            loop {
+                let a = self.ident()?;
+                self.expect(&Tok::Eq)?;
+                let b = self.ident()?;
+                on.push((a, b));
+                // An AND here belongs to the ON clause only if another
+                // `col = col` pair follows; WHERE comes via its own
+                // keyword, so plain AND always extends the ON list.
+                if !self.eat_kw("AND") {
+                    break;
+                }
+            }
+            joins.push(JoinClause { table, on });
+        }
+        let where_ = if self.eat_kw("WHERE") { Some(self.expr()?) } else { None };
+        let mut group_by = Vec::new();
+        if self.eat_kw("GROUP") {
+            self.expect_kw("BY")?;
+            loop {
+                group_by.push(self.expr()?);
+                if !matches!(self.peek(), Some(Tok::Comma)) {
+                    break;
+                }
+                self.pos += 1;
+            }
+        }
+        let having = if self.eat_kw("HAVING") { Some(self.expr()?) } else { None };
+        let mut order_by = Vec::new();
+        if self.eat_kw("ORDER") {
+            self.expect_kw("BY")?;
+            loop {
+                let key = match self.peek() {
+                    Some(Tok::Int(n)) => {
+                        let n = *n;
+                        self.pos += 1;
+                        crate::ensure!(n >= 1, "ORDER BY position must be >= 1, got {n}");
+                        OrderKey::Pos(n as usize)
+                    }
+                    _ => OrderKey::Expr(self.expr()?),
+                };
+                let desc = if self.eat_kw("DESC") {
+                    true
+                } else {
+                    self.eat_kw("ASC");
+                    false
+                };
+                order_by.push(OrderItem { key, desc });
+                if !matches!(self.peek(), Some(Tok::Comma)) {
+                    break;
+                }
+                self.pos += 1;
+            }
+        }
+        let limit = if self.eat_kw("LIMIT") {
+            match self.next()? {
+                Tok::Int(n) if (0..=u32::MAX as i64).contains(&n) => Some(n as u32),
+                t => crate::bail!("LIMIT wants a small integer, got {}", t.describe()),
+            }
+        } else {
+            None
+        };
+        Ok(Query { select, from, joins, where_, group_by, having, order_by, limit })
+    }
+
+    /// Expression entry point; every recursion passes through here, so
+    /// this is where depth is bounded.
+    fn expr(&mut self) -> Result<Expr> {
+        self.depth += 1;
+        crate::ensure!(self.depth <= MAX_PARSE_DEPTH, "expression nested deeper than {MAX_PARSE_DEPTH}");
+        let e = self.or_expr();
+        self.depth -= 1;
+        e
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let first = self.and_expr()?;
+        if !self.at_kw("OR") {
+            return Ok(first);
+        }
+        let mut arms = vec![first];
+        while self.eat_kw("OR") {
+            arms.push(self.and_expr()?);
+        }
+        Ok(Expr::Or(arms))
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let first = self.not_expr()?;
+        if !self.at_kw("AND") {
+            return Ok(first);
+        }
+        let mut arms = vec![first];
+        while self.eat_kw("AND") {
+            arms.push(self.not_expr()?);
+        }
+        Ok(Expr::And(arms))
+    }
+
+    fn not_expr(&mut self) -> Result<Expr> {
+        if self.eat_kw("NOT") {
+            self.depth += 1;
+            crate::ensure!(self.depth <= MAX_PARSE_DEPTH, "NOT nested deeper than {MAX_PARSE_DEPTH}");
+            let inner = self.not_expr()?;
+            self.depth -= 1;
+            return Ok(Expr::Not(Box::new(inner)));
+        }
+        self.cmp_expr()
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let lhs = self.add_expr()?;
+        let negate = {
+            let save = self.pos;
+            if self.eat_kw("NOT") {
+                if self.at_kw("IN") || self.at_kw("BETWEEN") || self.at_kw("LIKE") {
+                    true
+                } else {
+                    self.pos = save;
+                    return Ok(lhs);
+                }
+            } else {
+                false
+            }
+        };
+        let kind = match self.peek() {
+            Some(Tok::Eq) => Some(CmpKind::Eq),
+            Some(Tok::Ne) => Some(CmpKind::Ne),
+            Some(Tok::Lt) => Some(CmpKind::Lt),
+            Some(Tok::Le) => Some(CmpKind::Le),
+            Some(Tok::Gt) => Some(CmpKind::Gt),
+            Some(Tok::Ge) => Some(CmpKind::Ge),
+            _ => None,
+        };
+        if let Some(k) = kind {
+            self.pos += 1;
+            let rhs = self.add_expr()?;
+            return Ok(Expr::Cmp(k, Box::new(lhs), Box::new(rhs)));
+        }
+        if self.eat_kw("IN") {
+            self.expect(&Tok::LParen)?;
+            let mut items = Vec::new();
+            loop {
+                items.push(self.literal()?);
+                match self.next()? {
+                    Tok::Comma => {}
+                    Tok::RParen => break,
+                    t => crate::bail!("expected ',' or ')' in IN list, got {}", t.describe()),
+                }
+            }
+            let e = Expr::InList(Box::new(lhs), items);
+            return Ok(if negate { Expr::Not(Box::new(e)) } else { e });
+        }
+        if self.eat_kw("BETWEEN") {
+            let lo = self.add_expr()?;
+            self.expect_kw("AND")?;
+            let hi = self.add_expr()?;
+            let e = Expr::Between(Box::new(lhs), Box::new(lo), Box::new(hi));
+            return Ok(if negate { Expr::Not(Box::new(e)) } else { e });
+        }
+        if self.eat_kw("LIKE") {
+            let pat = match self.next()? {
+                Tok::Str(s) => s,
+                t => crate::bail!("LIKE wants a string pattern, got {}", t.describe()),
+            };
+            let e = Expr::Like(Box::new(lhs), pat);
+            return Ok(if negate { Expr::Not(Box::new(e)) } else { e });
+        }
+        crate::ensure!(!negate, "dangling NOT before {:?}", self.peek().map(Tok::describe));
+        Ok(lhs)
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut e = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Plus) => BinOp::Add,
+                Some(Tok::Minus) => BinOp::Sub,
+                _ => return Ok(e),
+            };
+            self.pos += 1;
+            let rhs = self.mul_expr()?;
+            e = Expr::Bin(op, Box::new(e), Box::new(rhs));
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut e = self.unary()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Star) => BinOp::Mul,
+                Some(Tok::Slash) => BinOp::Div,
+                _ => return Ok(e),
+            };
+            self.pos += 1;
+            let rhs = self.unary()?;
+            e = Expr::Bin(op, Box::new(e), Box::new(rhs));
+        }
+    }
+
+    fn unary(&mut self) -> Result<Expr> {
+        if matches!(self.peek(), Some(Tok::Minus)) {
+            self.pos += 1;
+            // Unary minus folds into the literal; arbitrary negation
+            // has no IR form, so anything else is rejected here.
+            return match self.next()? {
+                Tok::Int(v) => Ok(Expr::Int(-v)),
+                Tok::Float(v) => Ok(Expr::Float(-v)),
+                t => Err(crate::err!("unary '-' applies to literals only, got {}", t.describe())),
+            };
+        }
+        self.primary()
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.next()? {
+            Tok::Int(v) => Ok(Expr::Int(v)),
+            Tok::Float(v) => Ok(Expr::Float(v)),
+            Tok::Str(s) => Ok(Expr::Str(s)),
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(&Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(name) => self.ident_led(name),
+            t => Err(crate::err!("expected expression, got {}", t.describe())),
+        }
+    }
+
+    /// Continue a primary that started with an identifier: keyword
+    /// constructs (DATE, CASE, aggregates), function calls, or a bare
+    /// column reference.
+    fn ident_led(&mut self, name: String) -> Result<Expr> {
+        if name.eq_ignore_ascii_case("DATE") {
+            return match self.next()? {
+                Tok::Str(s) => Ok(Expr::Date(parse_date(&s)?)),
+                t => Err(crate::err!("DATE wants a 'yyyy-mm-dd' string, got {}", t.describe())),
+            };
+        }
+        if name.eq_ignore_ascii_case("CASE") {
+            let mut whens = Vec::new();
+            while self.eat_kw("WHEN") {
+                let cond = self.expr()?;
+                self.expect_kw("THEN")?;
+                let val = self.expr()?;
+                whens.push((cond, val));
+            }
+            crate::ensure!(!whens.is_empty(), "CASE needs at least one WHEN arm");
+            let else_ =
+                if self.eat_kw("ELSE") { Some(Box::new(self.expr()?)) } else { None };
+            self.expect_kw("END")?;
+            return Ok(Expr::Case { whens, else_ });
+        }
+        for (kw, kind) in
+            [("SUM", AggKind::Sum), ("AVG", AggKind::Avg), ("COUNT", AggKind::Count)]
+        {
+            if name.eq_ignore_ascii_case(kw) {
+                self.expect(&Tok::LParen)?;
+                if kind == AggKind::Count && matches!(self.peek(), Some(Tok::Star)) {
+                    self.pos += 1;
+                    self.expect(&Tok::RParen)?;
+                    return Ok(Expr::Agg(AggKind::Count, None));
+                }
+                let arg = self.expr()?;
+                self.expect(&Tok::RParen)?;
+                return Ok(Expr::Agg(kind, Some(Box::new(arg))));
+            }
+        }
+        if matches!(self.peek(), Some(Tok::LParen)) {
+            self.pos += 1;
+            let mut args = Vec::new();
+            if !matches!(self.peek(), Some(Tok::RParen)) {
+                loop {
+                    args.push(self.expr()?);
+                    if !matches!(self.peek(), Some(Tok::Comma)) {
+                        break;
+                    }
+                    self.pos += 1;
+                }
+            }
+            self.expect(&Tok::RParen)?;
+            return Ok(Expr::Func(name.to_ascii_lowercase(), args));
+        }
+        Ok(Expr::Col(name))
+    }
+
+    /// A literal for IN lists: int, float, string, or DATE.
+    fn literal(&mut self) -> Result<Expr> {
+        match self.next()? {
+            Tok::Int(v) => Ok(Expr::Int(v)),
+            Tok::Float(v) => Ok(Expr::Float(v)),
+            Tok::Str(s) => Ok(Expr::Str(s)),
+            Tok::Ident(name) if name.eq_ignore_ascii_case("DATE") => match self.next()? {
+                Tok::Str(s) => Ok(Expr::Date(parse_date(&s)?)),
+                t => Err(crate::err!("DATE wants a 'yyyy-mm-dd' string, got {}", t.describe())),
+            },
+            t => Err(crate::err!("IN list members must be literals, got {}", t.describe())),
+        }
+    }
+}
+
+/// Parse `yyyy-mm-dd` into a day count, validating ranges so
+/// `date_to_days` never sees garbage.
+fn parse_date(s: &str) -> Result<i32> {
+    let parts: Vec<&str> = s.split('-').collect();
+    crate::ensure!(parts.len() == 3, "date {s:?} is not yyyy-mm-dd");
+    let y: i32 = parts[0].parse().map_err(|_| crate::err!("bad year in date {s:?}"))?;
+    let m: u32 = parts[1].parse().map_err(|_| crate::err!("bad month in date {s:?}"))?;
+    let d: u32 = parts[2].parse().map_err(|_| crate::err!("bad day in date {s:?}"))?;
+    crate::ensure!((1000..=9999).contains(&y), "year {y} out of range in {s:?}");
+    crate::ensure!((1..=12).contains(&m), "month {m} out of range in {s:?}");
+    crate::ensure!((1..=31).contains(&d), "day {d} out of range in {s:?}");
+    Ok(date_to_days(y, m, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_q6_shape() {
+        let q = parse(
+            "SELECT SUM(l_extendedprice * l_discount) FROM lineitem \
+             WHERE l_shipdate >= DATE '1994-01-01' AND l_shipdate < DATE '1995-01-01' \
+             AND l_discount BETWEEN 0.05 - 0.01 AND 0.07 + 0.01 AND l_quantity < 24",
+        )
+        .unwrap();
+        assert_eq!(q.from, "lineitem");
+        assert_eq!(q.select.len(), 1);
+        let w = q.where_.unwrap();
+        match w {
+            Expr::And(arms) => assert_eq!(arms.len(), 4),
+            other => panic!("expected top-level AND, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn joins_group_order_limit() {
+        let q = parse(
+            "SELECT l_orderkey, SUM(l_extendedprice) AS rev FROM lineitem \
+             JOIN orders ON o_orderkey = l_orderkey AND o_custkey = o_custkey \
+             GROUP BY l_orderkey ORDER BY rev DESC, 1 ASC LIMIT 10",
+        )
+        .unwrap();
+        assert_eq!(q.joins.len(), 1);
+        assert_eq!(q.joins[0].on.len(), 2);
+        assert_eq!(q.order_by.len(), 2);
+        assert!(q.order_by[0].desc);
+        assert_eq!(q.order_by[1].key, OrderKey::Pos(1));
+        assert_eq!(q.limit, Some(10));
+    }
+
+    #[test]
+    fn precedence_binds_mul_over_add_over_cmp_over_and() {
+        let q = parse("SELECT COUNT(*) FROM lineitem WHERE a + b * 2 < 10 AND c = 1").unwrap();
+        let Expr::And(arms) = q.where_.unwrap() else { panic!("AND expected") };
+        let Expr::Cmp(CmpKind::Lt, lhs, _) = &arms[0] else { panic!("Lt expected") };
+        let Expr::Bin(BinOp::Add, _, rhs) = lhs.as_ref() else { panic!("Add expected") };
+        assert!(matches!(rhs.as_ref(), Expr::Bin(BinOp::Mul, _, _)));
+    }
+
+    #[test]
+    fn case_in_between_like_and_not_variants() {
+        let q = parse(
+            "SELECT SUM(CASE WHEN p_type LIKE 'PROMO%' THEN 1 ELSE 0 END) FROM lineitem \
+             WHERE l_shipmode IN ('MAIL', 'SHIP') AND l_quantity NOT BETWEEN 5 AND 10 \
+             AND p_name NOT LIKE 'x%' AND NOT l_linenumber = 3",
+        )
+        .unwrap();
+        let Expr::And(arms) = q.where_.unwrap() else { panic!("AND expected") };
+        assert!(matches!(&arms[0], Expr::InList(_, items) if items.len() == 2));
+        assert!(matches!(&arms[1], Expr::Not(b) if matches!(b.as_ref(), Expr::Between(..))));
+        assert!(matches!(&arms[2], Expr::Not(b) if matches!(b.as_ref(), Expr::Like(..))));
+        assert!(matches!(&arms[3], Expr::Not(b) if matches!(b.as_ref(), Expr::Cmp(..))));
+    }
+
+    #[test]
+    fn hostile_inputs_error_not_panic() {
+        for bad in [
+            "",
+            "SELECT",
+            "SELECT FROM lineitem",
+            "SELECT 1 FROM",
+            "SELECT 1 FROM lineitem WHERE",
+            "SELECT 1 FROM lineitem trailing junk",
+            "SELECT a b FROM t",
+            "SELECT 1 FROM t LIMIT -3",
+            "SELECT CASE END FROM t",
+            "SELECT COUNT(l) FROM t WHERE x IN (a)",
+            "SELECT 1 FROM t WHERE DATE 'not-a-date' < x",
+            "SELECT - FROM t",
+        ] {
+            assert!(parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn depth_bomb_is_rejected() {
+        let mut q = String::from("SELECT 1 FROM t WHERE ");
+        for _ in 0..200 {
+            q.push('(');
+        }
+        q.push('1');
+        for _ in 0..200 {
+            q.push(')');
+        }
+        q.push_str(" = 1");
+        assert!(parse(&q).is_err());
+    }
+
+    #[test]
+    fn date_literals_convert_and_validate() {
+        let q = parse("SELECT 1 FROM t WHERE d = DATE '1994-01-01'").unwrap();
+        let Expr::Cmp(_, _, rhs) = q.where_.unwrap() else { panic!() };
+        assert_eq!(*rhs, Expr::Date(date_to_days(1994, 1, 1)));
+        assert!(parse("SELECT 1 FROM t WHERE d = DATE '1994-13-01'").is_err());
+    }
+}

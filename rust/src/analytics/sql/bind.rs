@@ -1,0 +1,1340 @@
+//! Binder: lowers a parsed [`Query`] against the TPC-H catalog into the
+//! engine's [`LogicalPlan`] IR.
+//!
+//! Binding rules, in the order they run:
+//!
+//! 1. **Scan selection.** The FROM table must be `lineitem`; every
+//!    other table joins to it (the engine's plans are star-shaped
+//!    probes out of the fact scan).
+//! 2. **Join shaping.** Each `JOIN dim ON ...` clause becomes one
+//!    [`JoinStep`]. An ON pair against a scan column is a probe
+//!    (single or packed, per the catalog's FK shapes); a pair against
+//!    another dimension's column is the dim→dim *link* edge
+//!    (`customer ← orders`), making the keyed side an unprobed link
+//!    target. Link targets are hoisted before their linkers.
+//! 3. **Predicate classification.** WHERE conjuncts that are pure
+//!    single-table string matches, IN lists, integer BETWEENs, or
+//!    `region_of(...)` tests lower directly into the scan predicate or
+//!    the owning step's dim filter. Everything numeric becomes a
+//!    post-join [`CmpExpr`] (dimension columns ride along as `Col`
+//!    payloads) — the optimizer then folds and pushes those down. A
+//!    disjunction of per-dimension branch predicates with scan-column
+//!    bounds becomes `CaseConst` payloads plus range compares (the Q19
+//!    shape); other disjunctions must confine themselves to one
+//!    dimension table.
+//! 4. **Value lowering.** Aggregate arguments lower to [`ValExpr`];
+//!    `CASE WHEN <dim string match> THEN .. ELSE ..` becomes a
+//!    `Flag` payload (optionally scaled by an expression). Slots are
+//!    deduplicated structurally, so `SUM(x)` and `AVG(x)` share one
+//!    accumulator.
+//! 5. **Group keys.** Char columns pack in 8 bits, `year(...)` in 16;
+//!    only the leftmost key part may be unbounded. Grouping by a scan
+//!    FK column turns sibling group-by columns of that dimension into
+//!    dense decorations, and a join step left with no work is elided.
+//! 6. **Finalize.** SELECT items map onto key parts, decorations, and
+//!    accumulator outputs (`AVG` → `AccOverCount`, `COUNT(*)` →
+//!    `Count`, `100 * SUM(a) / SUM(b)` → `AccRatioPct`); HAVING takes
+//!    the `SUM(..) > const` form; ORDER BY accepts 1-based positions,
+//!    aliases, or expressions matched structurally against SELECT.
+//!
+//! Everything is fallible: unknown columns, unsupported shapes, and
+//! capacity overruns (> 4 joins, > 5 accumulators, > 8 payloads per
+//! step) return errors, never panic.
+
+use super::ast::{AggKind, BinOp, CmpKind, Expr, OrderKey, Query};
+use super::catalog::{self, ColType, FkShape};
+use crate::analytics::engine::plan::{
+    cmp, kconst, pand, por, vadd, vcol, vconst, vmul, vsub, CmpExpr, CmpOp, FinalizeSpec,
+    GroupsHint, JoinStep, KeyCols, KeyExpr, LinkRef, LogicalPlan, OutCol, Payload, PredExpr,
+    SortDir, StrMatch, TableRef, ValExpr,
+};
+use crate::error::Result;
+
+const MAX_JOIN_STEPS: usize = 4;
+const MAX_SLOTS: usize = 5;
+const MAX_PAYLOADS_PER_STEP: usize = 8;
+
+/// Lower a parsed query to an executable plan (named `"sql"`; callers
+/// may rename).
+pub fn bind(q: &Query) -> Result<LogicalPlan> {
+    let scan = catalog::table(&q.from)?;
+    crate::ensure!(
+        scan.table == TableRef::Lineitem,
+        "FROM must name lineitem (got {:?}); dimension tables join to it",
+        q.from
+    );
+    let mut b = Binder { steps: build_steps(q)?, pred: Vec::new(), cmps: Vec::new(), slots: Vec::new() };
+    if let Some(w) = &q.where_ {
+        b.classify(w)?;
+    }
+    let groups = b.plan_groups(&q.group_by)?;
+    let scalar = groups.parts.is_empty();
+    let mut columns = Vec::new();
+    for (item, _) in &q.select {
+        if let Some(part) = groups.parts.iter().find(|p| &p.ast == item) {
+            columns.push(part.out.clone());
+        } else {
+            columns.push(b.aggregate_out(item)?);
+        }
+    }
+    if scalar {
+        crate::ensure!(
+            columns.iter().all(is_agg_out),
+            "a query without GROUP BY may select only aggregates"
+        );
+    }
+    let having_gt = match &q.having {
+        None => None,
+        Some(h) => Some(b.lower_having(h)?),
+    };
+    let mut sort = Vec::new();
+    for o in &q.order_by {
+        let idx = match &o.key {
+            OrderKey::Pos(p) => {
+                crate::ensure!(*p <= q.select.len(), "ORDER BY position {p} exceeds select list");
+                p - 1
+            }
+            OrderKey::Expr(e) => select_index(q, e)?,
+        };
+        sort.push((idx as u8, if o.desc { SortDir::Desc } else { SortDir::Asc }));
+    }
+    if b.slots.is_empty() {
+        // COUNT(*)-only queries still need one accumulator lane for the
+        // wire format; a constant keeps the executor happy and cheap.
+        b.slots.push(vconst(1.0));
+    }
+    crate::ensure!(b.slots.len() <= MAX_SLOTS, "more than {MAX_SLOTS} aggregate accumulators");
+    b.elide_idle_steps();
+    let hint = b.groups_hint(&groups, scalar);
+    let Binder { steps, pred, cmps, slots } = b;
+    Ok(LogicalPlan {
+        name: "sql".into(),
+        scan: TableRef::Lineitem,
+        pred: conj(pred),
+        joins: steps.into_iter().map(Step::into_join).collect(),
+        cmps,
+        key: if scalar { kconst(0) } else { groups.key.clone() },
+        slots,
+        groups_hint: hint,
+        finalize: FinalizeSpec {
+            scalar,
+            columns,
+            having_gt,
+            sort,
+            limit: q.limit.unwrap_or(0),
+        },
+    })
+}
+
+fn is_agg_out(o: &OutCol) -> bool {
+    matches!(
+        o,
+        OutCol::Acc(_)
+            | OutCol::AccInt(_)
+            | OutCol::Count
+            | OutCol::AccOverCount(_)
+            | OutCol::AccRatioPct(_, _)
+    )
+}
+
+/// Fold conjunct list to a predicate tree.
+fn conj(mut ps: Vec<PredExpr>) -> PredExpr {
+    match ps.len() {
+        0 => PredExpr::True,
+        1 => ps.remove(0),
+        _ => pand(ps),
+    }
+}
+
+/// Find the SELECT item an ORDER BY expression refers to: alias first,
+/// then structural equality.
+fn select_index(q: &Query, e: &Expr) -> Result<usize> {
+    if let Expr::Col(name) = e {
+        if let Some(i) = q
+            .select
+            .iter()
+            .position(|(_, a)| a.as_deref().is_some_and(|al| al.eq_ignore_ascii_case(name)))
+        {
+            return Ok(i);
+        }
+    }
+    q.select
+        .iter()
+        .position(|(s, _)| s == e)
+        .ok_or_else(|| crate::err!("ORDER BY expression {e:?} is not in the select list"))
+}
+
+// ------------------------------------------------------------ join steps
+
+struct Step {
+    table: TableRef,
+    dense_ok: bool,
+    build_key: Option<KeyCols>,
+    probe_key: Option<KeyCols>,
+    filter: Vec<PredExpr>,
+    link: Option<LinkRef>,
+    is_target: bool,
+    payloads: Vec<Payload>,
+}
+
+impl Step {
+    fn into_join(self) -> JoinStep {
+        let dense = self.dense_ok && self.probe_key.is_some() && self.link.is_none() && !self.is_target;
+        JoinStep {
+            table: self.table,
+            dense,
+            build_key: if dense { None } else { self.build_key },
+            probe_key: self.probe_key,
+            filter: conj(self.filter),
+            link: self.link,
+            payloads: self.payloads,
+        }
+    }
+}
+
+/// Resolve JOIN clauses into ordered steps: probe shapes from the
+/// catalog, the customer←orders link edge, targets hoisted before
+/// linkers.
+fn build_steps(q: &Query) -> Result<Vec<Step>> {
+    crate::ensure!(q.joins.len() <= MAX_JOIN_STEPS, "more than {MAX_JOIN_STEPS} joins");
+    let mut tables = Vec::new();
+    for j in &q.joins {
+        let t = catalog::table(&j.table)?;
+        crate::ensure!(t.table != TableRef::Lineitem, "lineitem cannot join to itself");
+        crate::ensure!(
+            tables.iter().all(|(tr, _)| *tr != t.table),
+            "table {} joined twice",
+            j.table
+        );
+        tables.push((t.table, j));
+    }
+    let find = |name: &str| -> Result<TableRef> {
+        let (td, _) = catalog::resolve(name)?;
+        crate::ensure!(
+            td.table == TableRef::Lineitem || tables.iter().any(|(t, _)| *t == td.table),
+            "column {name} belongs to {}, which is not in FROM/JOIN",
+            td.table.name()
+        );
+        Ok(td.table)
+    };
+    // Pass 1: classify each clause's pairs into probe pairs and link
+    // edges (target table, target key, linker table, via).
+    struct Clause {
+        table: TableRef,
+        probe: Vec<(String, String)>, // (dim key col, scan col)
+    }
+    let mut clauses = Vec::new();
+    let mut links: Vec<(TableRef, String, TableRef, String)> = Vec::new();
+    for (t, j) in &tables {
+        let mut probe = Vec::new();
+        for (a, bcol) in &j.on {
+            let ta = find(a)?;
+            let tb = find(bcol)?;
+            let (dim_col, other, other_t) = if ta == *t {
+                (a.clone(), bcol.clone(), tb)
+            } else if tb == *t {
+                (bcol.clone(), a.clone(), ta)
+            } else {
+                crate::bail!("ON pair {a} = {bcol} does not involve {}", t.name());
+            };
+            if other_t == TableRef::Lineitem {
+                probe.push((dim_col, other));
+            } else {
+                // Dim-dim pair: one orientation must be a known link
+                // edge.
+                if let Some(via) = catalog::link_via(*t, &dim_col, other_t, &other) {
+                    links.push((*t, dim_col.clone(), other_t, via.to_string()));
+                } else if let Some(via) = catalog::link_via(other_t, &other, *t, &dim_col) {
+                    links.push((other_t, other.clone(), *t, via.to_string()));
+                } else {
+                    crate::bail!(
+                        "no link edge joins {} and {} on {a} = {bcol}",
+                        t.name(),
+                        other_t.name()
+                    );
+                }
+            }
+        }
+        clauses.push(Clause { table: *t, probe });
+    }
+    // Pass 2: build steps in declaration order, then hoist link targets
+    // before their linkers.
+    let mut steps = Vec::new();
+    for c in &clauses {
+        let is_target = links.iter().any(|(tgt, ..)| *tgt == c.table);
+        let mut step = Step {
+            table: c.table,
+            dense_ok: false,
+            build_key: None,
+            probe_key: None,
+            filter: Vec::new(),
+            link: None,
+            is_target,
+            payloads: Vec::new(),
+        };
+        if c.probe.is_empty() {
+            crate::ensure!(
+                is_target,
+                "{} has no join path to lineitem (no FK pair and no link edge)",
+                c.table.name()
+            );
+            let (_, key, _, _) =
+                links.iter().find(|(tgt, ..)| *tgt == c.table).expect("checked above");
+            step.build_key = Some(KeyCols::Col(key.clone()));
+        } else {
+            crate::ensure!(
+                !is_target,
+                "{} cannot both probe the scan and be a link target",
+                c.table.name()
+            );
+            let dim_keys: Vec<&str> = c.probe.iter().map(|(d, _)| d.as_str()).collect();
+            let scan_cols: Vec<&str> = c.probe.iter().map(|(_, s)| s.as_str()).collect();
+            match catalog::fk_shape(c.table, &dim_keys, &scan_cols)? {
+                FkShape::Single { scan_col, dense_ok } => {
+                    step.dense_ok = dense_ok;
+                    step.build_key = Some(KeyCols::Col(dim_keys[0].to_string()));
+                    step.probe_key = Some(KeyCols::Col(scan_col.to_string()));
+                }
+                FkShape::Packed { scan_a, scan_b, shift } => {
+                    step.build_key = Some(KeyCols::Packed {
+                        a: "ps_partkey".into(),
+                        shift,
+                        b: "ps_suppkey".into(),
+                    });
+                    step.probe_key = Some(KeyCols::Packed {
+                        a: scan_a.to_string(),
+                        shift,
+                        b: scan_b.to_string(),
+                    });
+                }
+            }
+        }
+        steps.push(step);
+    }
+    // Hoist: every link target must precede its linker.
+    for (tgt, _, linker, _) in &links {
+        let ti = steps.iter().position(|s| s.table == *tgt).expect("target built");
+        let li = steps.iter().position(|s| s.table == *linker).expect("linker built");
+        if ti > li {
+            let s = steps.remove(ti);
+            steps.insert(li, s);
+        }
+    }
+    // Wire the link refs now that indices are final.
+    for (tgt, _, linker, via) in &links {
+        let ti = steps.iter().position(|s| s.table == *tgt).expect("target placed");
+        let li = steps.iter().position(|s| s.table == *linker).expect("linker placed");
+        crate::ensure!(ti < li, "link target {} must precede {}", tgt.name(), linker.name());
+        let step = &mut steps[li];
+        crate::ensure!(step.link.is_none(), "{} links twice", linker.name());
+        step.link = Some(LinkRef { step: ti as u8, via: via.clone() });
+    }
+    Ok(steps)
+}
+
+// ------------------------------------------------------------- the binder
+
+struct Binder {
+    steps: Vec<Step>,
+    pred: Vec<PredExpr>,
+    cmps: Vec<CmpExpr>,
+    slots: Vec<ValExpr>,
+}
+
+/// One GROUP BY item, resolved.
+struct GroupPart {
+    ast: Expr,
+    out: OutCol,
+}
+
+struct Groups {
+    parts: Vec<GroupPart>,
+    key: KeyExpr,
+    /// Scan FK column the single key part reads, when the whole key is
+    /// one bare FK column (drives the `TableRows` hint + decorations).
+    fk_dim: Option<TableRef>,
+}
+
+impl Binder {
+    fn step_idx(&self, t: TableRef) -> Result<usize> {
+        self.steps
+            .iter()
+            .position(|s| s.table == t)
+            .ok_or_else(|| crate::err!("{} is referenced but not joined", t.name()))
+    }
+
+    fn ensure_payload(&mut self, step: usize, p: Payload) -> Result<u8> {
+        if let Some(i) = self.steps[step].payloads.iter().position(|q| *q == p) {
+            return Ok(i as u8);
+        }
+        crate::ensure!(
+            self.steps[step].payloads.len() < MAX_PAYLOADS_PER_STEP,
+            "more than {MAX_PAYLOADS_PER_STEP} payloads on the {} step",
+            self.steps[step].table.name()
+        );
+        self.steps[step].payloads.push(p);
+        Ok((self.steps[step].payloads.len() - 1) as u8)
+    }
+
+    /// Route a dim-side payload to a probed step: directly, or through
+    /// the linker via `FromLink` when the owner is a link target.
+    fn dim_payload(&mut self, t: TableRef, p: Payload) -> Result<(u8, u8)> {
+        let s = self.step_idx(t)?;
+        if self.steps[s].is_target {
+            let k = self.ensure_payload(s, p)?;
+            let linker = self
+                .steps
+                .iter()
+                .position(|st| st.link.as_ref().is_some_and(|l| l.step as usize == s))
+                .ok_or_else(|| crate::err!("{} is a link target with no linker", t.name()))?;
+            let j = self.ensure_payload(linker, Payload::FromLink(k))?;
+            Ok((linker as u8, j))
+        } else {
+            let k = self.ensure_payload(s, p)?;
+            Ok((s as u8, k))
+        }
+    }
+
+    fn ensure_slot(&mut self, v: ValExpr) -> Result<u8> {
+        if let Some(i) = self.slots.iter().position(|s| *s == v) {
+            return Ok(i as u8);
+        }
+        crate::ensure!(self.slots.len() < MAX_SLOTS, "more than {MAX_SLOTS} aggregate accumulators");
+        self.slots.push(v);
+        Ok((self.slots.len() - 1) as u8)
+    }
+
+    // -------------------------------------------------- WHERE lowering
+
+    fn classify(&mut self, e: &Expr) -> Result<()> {
+        match e {
+            Expr::And(arms) => {
+                for a in arms {
+                    self.classify(a)?;
+                }
+                Ok(())
+            }
+            Expr::Or(arms) => self.classify_or(e, arms),
+            _ => {
+                if let Some((t, p)) = self.try_pred(e)? {
+                    self.route_pred(t, p)
+                } else {
+                    match e {
+                        Expr::Cmp(k, a, b) => self.classify_cmp(*k, a, b),
+                        Expr::Between(x, lo, hi) => {
+                            self.classify_cmp(CmpKind::Ge, x, lo)?;
+                            self.classify_cmp(CmpKind::Le, x, hi)
+                        }
+                        Expr::Not(_) => Err(crate::err!("NOT has no plan form here: {e:?}")),
+                        _ => Err(crate::err!("unsupported WHERE term {e:?}")),
+                    }
+                }
+            }
+        }
+    }
+
+    fn route_pred(&mut self, t: TableRef, p: PredExpr) -> Result<()> {
+        if t == TableRef::Lineitem {
+            crate::ensure!(
+                !matches!(p, PredExpr::Or(_)),
+                "OR over scan columns is not lowerable (the scan cascade is conjunctive); \
+                 restrict each disjunct to one dimension table"
+            );
+            self.pred.push(p);
+        } else {
+            let s = self.step_idx(t)?;
+            self.steps[s].filter.push(p);
+        }
+        Ok(())
+    }
+
+    /// Try to read `e` as a directly lowerable single-table predicate.
+    /// `Ok(None)` means "not this shape, try the compare path"; `Err`
+    /// means the shape is recognized but illegal.
+    fn try_pred(&self, e: &Expr) -> Result<Option<(TableRef, PredExpr)>> {
+        Ok(match e {
+            Expr::InList(x, items) => {
+                let Expr::Col(c) = x.as_ref() else {
+                    crate::bail!("IN applies to a column, got {x:?}");
+                };
+                let (td, cd) = catalog::resolve(c)?;
+                match cd.ty {
+                    ColType::Str => {
+                        let mut vs = Vec::new();
+                        for it in items {
+                            match it {
+                                Expr::Str(s) => vs.push(s.clone()),
+                                other => crate::bail!("IN list for {c} wants strings, got {other:?}"),
+                            }
+                        }
+                        Some((td.table, PredExpr::Str { col: c.clone(), m: StrMatch::OneOf(vs) }))
+                    }
+                    ColType::I32 | ColType::Date => {
+                        let mut vs = Vec::new();
+                        for it in items {
+                            vs.push(lit_i32(it).ok_or_else(|| {
+                                crate::err!("IN list for {c} wants integers or dates, got {it:?}")
+                            })?);
+                        }
+                        Some((td.table, PredExpr::I32InSet { col: c.clone(), values: vs }))
+                    }
+                    _ => crate::bail!("IN is not supported on {c} (type {:?})", cd.ty),
+                }
+            }
+            Expr::Like(x, pat) => {
+                let Expr::Col(c) = x.as_ref() else {
+                    crate::bail!("LIKE applies to a column, got {x:?}");
+                };
+                let (td, cd) = catalog::resolve(c)?;
+                crate::ensure!(cd.ty == ColType::Str, "LIKE needs a string column, {c} is {:?}", cd.ty);
+                let m = like_match(pat)?;
+                Some((td.table, PredExpr::Str { col: c.clone(), m }))
+            }
+            Expr::Cmp(CmpKind::Ne, _, _) => crate::bail!("'<>' has no plan form"),
+            Expr::Cmp(CmpKind::Eq, a, b) => {
+                let (x, y) = (a.as_ref(), b.as_ref());
+                // col = 'str' (either orientation)
+                let col_str = match (x, y) {
+                    (Expr::Col(c), Expr::Str(v)) | (Expr::Str(v), Expr::Col(c)) => Some((c, v)),
+                    _ => None,
+                };
+                if let Some((c, v)) = col_str {
+                    let (td, cd) = catalog::resolve(c)?;
+                    crate::ensure!(
+                        cd.ty == ColType::Str,
+                        "string equality needs a string column, {c} is {:?}",
+                        cd.ty
+                    );
+                    return Ok(Some((
+                        td.table,
+                        PredExpr::Str { col: c.clone(), m: StrMatch::Eq(v.clone()) },
+                    )));
+                }
+                // region_of(col) = 'REGION' (either orientation)
+                let region = match (x, y) {
+                    (Expr::Func(f, args), Expr::Str(v)) | (Expr::Str(v), Expr::Func(f, args))
+                        if f == "region_of" =>
+                    {
+                        Some((args, v))
+                    }
+                    _ => None,
+                };
+                if let Some((args, v)) = region {
+                    crate::ensure!(args.len() == 1, "region_of takes one column");
+                    let Expr::Col(c) = &args[0] else {
+                        crate::bail!("region_of applies to a column, got {:?}", args[0]);
+                    };
+                    let (td, cd) = catalog::resolve(c)?;
+                    crate::ensure!(
+                        cd.ty == ColType::I32,
+                        "region_of needs a nation-key column, {c} is {:?}",
+                        cd.ty
+                    );
+                    let nations = catalog::region_nations(v)?;
+                    return Ok(Some((
+                        td.table,
+                        PredExpr::I32InSet { col: c.clone(), values: nations },
+                    )));
+                }
+                None
+            }
+            Expr::Between(x, lo, hi) => {
+                let Expr::Col(c) = x.as_ref() else { return Ok(None) };
+                let (td, cd) = catalog::resolve(c)?;
+                if !matches!(cd.ty, ColType::I32 | ColType::Date) {
+                    return Ok(None); // f64 BETWEEN desugars to compares
+                }
+                let (Some(l), Some(h)) = (lit_i32(lo), lit_i32(hi)) else { return Ok(None) };
+                crate::ensure!(h < i32::MAX, "BETWEEN upper bound too large on {c}");
+                // SQL BETWEEN is closed; I32Range is half-open.
+                Some((td.table, PredExpr::I32Range { col: c.clone(), lo: l, hi: h + 1 }))
+            }
+            Expr::Or(arms) => {
+                let mut table = None;
+                let mut ps = Vec::new();
+                for a in arms {
+                    match self.try_pred(a)? {
+                        Some((t, p)) => {
+                            if *table.get_or_insert(t) != t {
+                                return Ok(None);
+                            }
+                            ps.push(p);
+                        }
+                        None => return Ok(None),
+                    }
+                }
+                table.map(|t| (t, por(ps)))
+            }
+            Expr::And(arms) => {
+                let mut table = None;
+                let mut ps = Vec::new();
+                for a in arms {
+                    match self.try_pred(a)? {
+                        Some((t, p)) => {
+                            if *table.get_or_insert(t) != t {
+                                return Ok(None);
+                            }
+                            ps.push(p);
+                        }
+                        None => return Ok(None),
+                    }
+                }
+                table.map(|t| (t, pand(ps)))
+            }
+            _ => None,
+        })
+    }
+
+    fn classify_cmp(&mut self, k: CmpKind, a: &Expr, b: &Expr) -> Result<()> {
+        let op = match k {
+            CmpKind::Eq => CmpOp::Eq,
+            CmpKind::Lt => CmpOp::Lt,
+            CmpKind::Le => CmpOp::Le,
+            CmpKind::Ge => CmpOp::Ge,
+            CmpKind::Gt => CmpOp::Gt,
+            CmpKind::Ne => crate::bail!("'<>' has no plan form"),
+        };
+        let lhs = self.lower_val(a)?;
+        let rhs = self.lower_val(b)?;
+        self.cmps.push(cmp(lhs, op, rhs));
+        Ok(())
+    }
+
+    /// The Q19 shape: `(dimpred AND scancol BETWEEN lo AND hi) OR ...`
+    /// with provably disjoint branches (a shared dim string column
+    /// equal to a different constant in every arm). Lowers to a pair of
+    /// `CaseConst` payloads plus `Ge`/`Le` compares; falls back to a
+    /// one-dimension OR filter otherwise.
+    fn classify_or(&mut self, whole: &Expr, arms: &[Expr]) -> Result<()> {
+        if self.try_case_bounds(arms)? {
+            return Ok(());
+        }
+        if let Some((t, p)) = self.try_pred(whole)? {
+            return self.route_pred(t, p);
+        }
+        Err(crate::err!(
+            "OR must either confine itself to one dimension table or take the \
+             branch-bounds form (dim predicates plus a shared scan-column range per arm)"
+        ))
+    }
+
+    fn try_case_bounds(&mut self, arms: &[Expr]) -> Result<bool> {
+        struct Arm {
+            pred: PredExpr,
+            eqs: Vec<(String, String)>,
+            lo: f64,
+            hi: f64,
+        }
+        let mut dim: Option<TableRef> = None;
+        let mut bound_col: Option<String> = None;
+        let mut parsed = Vec::new();
+        for arm in arms {
+            let Expr::And(cs) = arm else { return Ok(false) };
+            let mut preds = Vec::new();
+            let mut eqs = Vec::new();
+            let mut lo = None;
+            let mut hi = None;
+            for c in cs {
+                if let Some((t, p)) = self.try_pred(c).ok().flatten() {
+                    if t == TableRef::Lineitem || *dim.get_or_insert(t) != t {
+                        return Ok(false);
+                    }
+                    if let PredExpr::Str { col, m: StrMatch::Eq(v) } = &p {
+                        eqs.push((col.clone(), v.clone()));
+                    }
+                    preds.push(p);
+                    continue;
+                }
+                let (col, which, v) = match c {
+                    Expr::Cmp(CmpKind::Ge, x, lit) => match (x.as_ref(), lit_f64(lit)) {
+                        (Expr::Col(c), Some(v)) => (c, 0, v),
+                        _ => return Ok(false),
+                    },
+                    Expr::Cmp(CmpKind::Le, x, lit) => match (x.as_ref(), lit_f64(lit)) {
+                        (Expr::Col(c), Some(v)) => (c, 1, v),
+                        _ => return Ok(false),
+                    },
+                    Expr::Between(x, l, h) => match (x.as_ref(), lit_f64(l), lit_f64(h)) {
+                        (Expr::Col(c), Some(lv), Some(hv)) => {
+                            let (td, _) = catalog::resolve(c)?;
+                            if td.table != TableRef::Lineitem {
+                                return Ok(false);
+                            }
+                            if *bound_col.get_or_insert(c.clone()) != *c {
+                                return Ok(false);
+                            }
+                            lo = Some(lv);
+                            hi = Some(hv);
+                            continue;
+                        }
+                        _ => return Ok(false),
+                    },
+                    _ => return Ok(false),
+                };
+                let (td, _) = catalog::resolve(col)?;
+                if td.table != TableRef::Lineitem || *bound_col.get_or_insert(col.clone()) != *col {
+                    return Ok(false);
+                }
+                if which == 0 {
+                    lo = Some(v);
+                } else {
+                    hi = Some(v);
+                }
+            }
+            let (Some(lo), Some(hi)) = (lo, hi) else { return Ok(false) };
+            if preds.is_empty() {
+                return Ok(false);
+            }
+            parsed.push(Arm { pred: conj(preds), eqs, lo, hi });
+        }
+        let (Some(dim), Some(bound_col)) = (dim, bound_col) else { return Ok(false) };
+        // Disjointness proof: some dim string column carries a distinct
+        // Eq constant in every arm. Without it the branches could
+        // overlap and the first-match CaseConst would drop rows.
+        let disjoint = parsed[0].eqs.iter().any(|(col, _)| {
+            let vals: Vec<&String> = parsed
+                .iter()
+                .filter_map(|a| a.eqs.iter().find(|(c, _)| c == col).map(|(_, v)| v))
+                .collect();
+            vals.len() == parsed.len()
+                && (0..vals.len()).all(|i| (i + 1..vals.len()).all(|j| vals[i] != vals[j]))
+        });
+        crate::ensure!(
+            disjoint,
+            "OR branches must be provably disjoint (a shared dimension string column \
+             equal to a distinct constant per branch)"
+        );
+        let lo_cases = Payload::CaseConst {
+            cases: parsed.iter().map(|a| (a.pred.clone(), a.lo)).collect(),
+        };
+        let hi_cases = Payload::CaseConst {
+            cases: parsed.iter().map(|a| (a.pred.clone(), a.hi)).collect(),
+        };
+        let (s1, lo_slot) = self.dim_payload(dim, lo_cases)?;
+        let (s2, hi_slot) = self.dim_payload(dim, hi_cases)?;
+        self.cmps.push(cmp(vcol(&bound_col), CmpOp::Ge, ValExpr::Payload { step: s1, slot: lo_slot }));
+        self.cmps.push(cmp(vcol(&bound_col), CmpOp::Le, ValExpr::Payload { step: s2, slot: hi_slot }));
+        Ok(true)
+    }
+
+    // -------------------------------------------------- value lowering
+
+    fn lower_val(&mut self, e: &Expr) -> Result<ValExpr> {
+        match e {
+            Expr::Int(v) => Ok(vconst(*v as f64)),
+            Expr::Float(v) => Ok(vconst(*v)),
+            Expr::Date(d) => Ok(vconst(*d as f64)),
+            Expr::Str(_) => Err(crate::err!("a string literal has no numeric value")),
+            Expr::Col(c) => {
+                let (td, _) = catalog::resolve(c)?;
+                if td.table == TableRef::Lineitem {
+                    Ok(vcol(c))
+                } else {
+                    let (s, k) = self.dim_payload(td.table, Payload::Col(c.clone()))?;
+                    Ok(ValExpr::Payload { step: s, slot: k })
+                }
+            }
+            Expr::Bin(op, a, b) => {
+                let (x, y) = (self.lower_val(a)?, self.lower_val(b)?);
+                Ok(match op {
+                    BinOp::Add => vadd(x, y),
+                    BinOp::Sub => vsub(x, y),
+                    BinOp::Mul => vmul(x, y),
+                    BinOp::Div => crate::bail!(
+                        "division lowers only as 100 * SUM(a) / SUM(b) in the select list"
+                    ),
+                })
+            }
+            Expr::Case { whens, else_ } => self.lower_case(whens, else_.as_deref()),
+            Expr::Agg(..) => Err(crate::err!(
+                "aggregates cannot nest inside expressions (except the ratio form)"
+            )),
+            other => Err(crate::err!("expression has no value form: {other:?}")),
+        }
+    }
+
+    /// CASE lowering: the condition must be a dimension string match
+    /// (it becomes a `Flag` payload); the arms select among three
+    /// shapes — 1/0, 0/1, and expr/0.
+    fn lower_case(&mut self, whens: &[(Expr, Expr)], else_: Option<&Expr>) -> Result<ValExpr> {
+        crate::ensure!(whens.len() == 1, "CASE lowers with exactly one WHEN arm");
+        let (cond, then) = &whens[0];
+        let else_ = else_.ok_or_else(|| crate::err!("CASE needs an ELSE arm"))?;
+        let Some((t, p)) = self.try_pred(cond)? else {
+            crate::bail!("CASE condition must be a single-table predicate, got {cond:?}");
+        };
+        crate::ensure!(
+            t != TableRef::Lineitem,
+            "CASE over scan columns is not supported; move the condition to WHERE"
+        );
+        let PredExpr::Str { col, m } = p else {
+            crate::bail!("CASE condition must be a string match (it lowers to a flag payload)");
+        };
+        let (s, k) = self.dim_payload(t, Payload::Flag { col, m })?;
+        let flag = ValExpr::Payload { step: s, slot: k };
+        let is = |e: &Expr, v: i64| {
+            matches!(e, Expr::Int(x) if *x == v)
+                || matches!(e, Expr::Float(x) if *x == v as f64)
+        };
+        if is(then, 1) && is(else_, 0) {
+            return Ok(flag);
+        }
+        if is(then, 0) && is(else_, 1) {
+            return Ok(vsub(vconst(1.0), flag));
+        }
+        if is(else_, 0) {
+            let scaled = self.lower_val(then)?;
+            return Ok(vmul(flag, scaled));
+        }
+        Err(crate::err!("CASE arms must be 1/0, 0/1, or expr/0"))
+    }
+
+    /// True when the AST value is provably integral, which routes its
+    /// accumulator to `AccInt` output.
+    fn expr_is_int(e: &Expr) -> bool {
+        match e {
+            Expr::Int(_) => true,
+            Expr::Case { whens, else_ } => {
+                whens.iter().all(|(_, v)| Self::expr_is_int(v))
+                    && else_.as_deref().is_some_and(Self::expr_is_int)
+            }
+            Expr::Bin(op, a, b) => {
+                *op != BinOp::Div && Self::expr_is_int(a) && Self::expr_is_int(b)
+            }
+            _ => false,
+        }
+    }
+
+    fn aggregate_out(&mut self, item: &Expr) -> Result<OutCol> {
+        match item {
+            Expr::Agg(AggKind::Count, None) => Ok(OutCol::Count),
+            Expr::Agg(AggKind::Count, Some(_)) => {
+                Err(crate::err!("COUNT(expr) is not supported; use COUNT(*)"))
+            }
+            Expr::Agg(AggKind::Sum, Some(e)) => {
+                let v = self.lower_val(e)?;
+                let s = self.ensure_slot(v)?;
+                Ok(if Self::expr_is_int(e) { OutCol::AccInt(s) } else { OutCol::Acc(s) })
+            }
+            Expr::Agg(AggKind::Avg, Some(e)) => {
+                let v = self.lower_val(e)?;
+                Ok(OutCol::AccOverCount(self.ensure_slot(v)?))
+            }
+            Expr::Agg(_, None) => Err(crate::err!("SUM/AVG need an argument")),
+            // 100 * SUM(a) / SUM(b), as the parser associates it.
+            Expr::Bin(BinOp::Div, num, den) => {
+                let Expr::Bin(BinOp::Mul, hundred, suma) = num.as_ref() else {
+                    crate::bail!("division is only supported as 100 * SUM(a) / SUM(b)");
+                };
+                let is_hundred = matches!(hundred.as_ref(), Expr::Int(100))
+                    || matches!(hundred.as_ref(), Expr::Float(x) if *x == 100.0);
+                let (Expr::Agg(AggKind::Sum, Some(a)), Expr::Agg(AggKind::Sum, Some(b))) =
+                    (suma.as_ref(), den.as_ref())
+                else {
+                    crate::bail!("division is only supported as 100 * SUM(a) / SUM(b)");
+                };
+                crate::ensure!(is_hundred, "the ratio form is 100 * SUM(a) / SUM(b)");
+                let (va, vb) = (self.lower_val(a)?, self.lower_val(b)?);
+                let sa = self.ensure_slot(va)?;
+                let sb = self.ensure_slot(vb)?;
+                Ok(OutCol::AccRatioPct(sa, sb))
+            }
+            other => Err(crate::err!(
+                "select item is neither a GROUP BY key nor a supported aggregate: {other:?}"
+            )),
+        }
+    }
+
+    fn lower_having(&mut self, h: &Expr) -> Result<(u8, f64)> {
+        let Expr::Cmp(CmpKind::Gt, lhs, rhs) = h else {
+            crate::bail!("HAVING takes the form SUM(expr) > constant");
+        };
+        let Expr::Agg(AggKind::Sum, Some(e)) = lhs.as_ref() else {
+            crate::bail!("HAVING takes the form SUM(expr) > constant");
+        };
+        let k = lit_f64(rhs).ok_or_else(|| crate::err!("HAVING threshold must be a constant"))?;
+        let v = self.lower_val(e)?;
+        Ok((self.ensure_slot(v)?, k))
+    }
+
+    // ---------------------------------------------------- group keys
+
+    fn plan_groups(&mut self, group_by: &[Expr]) -> Result<Groups> {
+        if group_by.is_empty() {
+            return Ok(Groups { parts: Vec::new(), key: kconst(0), fk_dim: None });
+        }
+        enum Kind {
+            Key { k: KeyExpr, width: Option<u8>, out: KeyOut },
+            Decor { table: TableRef, col: String, float: bool },
+        }
+        enum KeyOut {
+            Int,
+            Char,
+            Nation,
+            Dict(TableRef, String),
+        }
+        // Pass 1: find the FK anchor, if any — a bare scan FK column
+        // whose dense dimension can decorate.
+        let fk: Option<(usize, TableRef)> = group_by.iter().enumerate().find_map(|(i, g)| {
+            if let Expr::Col(c) = g {
+                catalog::scan_fk_dim(c).map(|d| (i, d))
+            } else {
+                None
+            }
+        });
+        // Pass 2: resolve every item.
+        let mut kinds = Vec::new();
+        for g in group_by {
+            let kind = match g {
+                Expr::Col(c) => {
+                    let (td, cd) = catalog::resolve(c)?;
+                    if td.table == TableRef::Lineitem {
+                        match cd.ty {
+                            ColType::Char => Kind::Key {
+                                k: KeyExpr::Col(c.clone()),
+                                width: Some(8),
+                                out: KeyOut::Char,
+                            },
+                            ColType::Str => Kind::Key {
+                                k: KeyExpr::Col(c.clone()),
+                                width: None,
+                                out: KeyOut::Dict(TableRef::Lineitem, c.clone()),
+                            },
+                            ColType::Key | ColType::I32 | ColType::Date => Kind::Key {
+                                k: KeyExpr::Col(c.clone()),
+                                width: None,
+                                out: KeyOut::Int,
+                            },
+                            ColType::F64 => {
+                                crate::bail!("cannot group by float column {c}")
+                            }
+                        }
+                    } else if fk.is_some_and(|(_, d)| d == td.table) {
+                        match cd.ty {
+                            ColType::F64 => {
+                                Kind::Decor { table: td.table, col: c.clone(), float: true }
+                            }
+                            ColType::Key | ColType::I32 | ColType::Date => {
+                                Kind::Decor { table: td.table, col: c.clone(), float: false }
+                            }
+                            _ => crate::bail!("cannot decorate by string column {c}"),
+                        }
+                    } else {
+                        crate::ensure!(
+                            !matches!(cd.ty, ColType::Str | ColType::Char),
+                            "grouping by dimension string column {c} is not supported \
+                             (group by a key and decorate, or use nation_name)"
+                        );
+                        let (s, k) = self.dim_payload(td.table, Payload::Col(c.clone()))?;
+                        Kind::Key {
+                            k: KeyExpr::Payload { step: s, slot: k },
+                            width: None,
+                            out: KeyOut::Int,
+                        }
+                    }
+                }
+                Expr::Func(f, args) if f == "year" => {
+                    crate::ensure!(args.len() == 1, "year takes one argument");
+                    let Expr::Col(c) = &args[0] else {
+                        crate::bail!("year applies to a date column, got {:?}", args[0]);
+                    };
+                    let (td, cd) = catalog::resolve(c)?;
+                    crate::ensure!(cd.ty == ColType::Date, "year needs a date column, {c} is {:?}", cd.ty);
+                    let inner = if td.table == TableRef::Lineitem {
+                        KeyExpr::Col(c.clone())
+                    } else {
+                        let (s, k) = self.dim_payload(td.table, Payload::Col(c.clone()))?;
+                        KeyExpr::Payload { step: s, slot: k }
+                    };
+                    Kind::Key {
+                        k: KeyExpr::Year(Box::new(inner)),
+                        width: Some(16),
+                        out: KeyOut::Int,
+                    }
+                }
+                Expr::Func(f, args) if f == "nation_name" => {
+                    crate::ensure!(args.len() == 1, "nation_name takes one argument");
+                    let Expr::Col(c) = &args[0] else {
+                        crate::bail!("nation_name applies to a column, got {:?}", args[0]);
+                    };
+                    let (td, cd) = catalog::resolve(c)?;
+                    crate::ensure!(
+                        cd.ty == ColType::I32 && td.table != TableRef::Lineitem,
+                        "nation_name needs a dimension nation-key column, got {c}"
+                    );
+                    let (s, k) = self.dim_payload(td.table, Payload::Col(c.clone()))?;
+                    Kind::Key {
+                        k: KeyExpr::Payload { step: s, slot: k },
+                        width: None,
+                        out: KeyOut::Nation,
+                    }
+                }
+                other => crate::bail!("unsupported GROUP BY item {other:?}"),
+            };
+            kinds.push(kind);
+        }
+        // Decorations require the key to be exactly the bare FK column
+        // (`key − 1` must index the dimension), so with decorations
+        // present there may be only one key part.
+        let n_keys = kinds.iter().filter(|k| matches!(k, Kind::Key { .. })).count();
+        let has_decor = kinds.iter().any(|k| matches!(k, Kind::Decor { .. }));
+        crate::ensure!(
+            !has_decor || n_keys == 1,
+            "grouping by dimension columns requires grouping by exactly one scan \
+             foreign-key column alongside them"
+        );
+        // Widths: every part after the first must be bounded.
+        let key_widths: Vec<Option<u8>> = kinds
+            .iter()
+            .filter_map(|k| match k {
+                Kind::Key { width, .. } => Some(*width),
+                Kind::Decor { .. } => None,
+            })
+            .collect();
+        for (i, w) in key_widths.iter().enumerate() {
+            crate::ensure!(
+                i == 0 || w.is_some(),
+                "only the leftmost GROUP BY key may be unbounded (char packs 8 bits, \
+                 year() 16); reorder the keys"
+            );
+        }
+        // Dict keys output through the whole key, so they must stand alone.
+        let has_dict = kinds.iter().any(
+            |k| matches!(k, Kind::Key { out: KeyOut::Dict(..), .. }),
+        );
+        crate::ensure!(
+            !has_dict || n_keys == 1,
+            "a dictionary-string group key cannot be packed with other keys"
+        );
+        // Assemble key (right-to-left pack) and per-part output shifts.
+        let mut shifts = vec![0u8; key_widths.len()];
+        for i in (0..key_widths.len()).rev() {
+            if i + 1 < key_widths.len() {
+                shifts[i] = shifts[i + 1]
+                    + key_widths[i + 1].expect("non-leftmost widths checked above");
+            }
+        }
+        let mut key: Option<KeyExpr> = None;
+        for (i, kind) in kinds.iter().enumerate().rev() {
+            if let Kind::Key { k, .. } = kind {
+                key = Some(match key {
+                    None => k.clone(),
+                    Some(rest) => {
+                        let shift = {
+                            // Width of everything to the right of this
+                            // key part = its output shift.
+                            let ki = kinds[..i]
+                                .iter()
+                                .filter(|x| matches!(x, Kind::Key { .. }))
+                                .count();
+                            shifts[ki]
+                        };
+                        KeyExpr::Pack { hi: Box::new(k.clone()), shift, lo: Box::new(rest) }
+                    }
+                });
+            }
+        }
+        let key = key.expect("group_by non-empty implies at least one key part");
+        // Build parts with their out columns.
+        let mut parts = Vec::new();
+        let mut ki = 0;
+        let mut fk_dim = None;
+        for (g, kind) in group_by.iter().zip(&kinds) {
+            let out = match kind {
+                Kind::Decor { table, col, float } => {
+                    if *float {
+                        OutCol::DimFloat { table: *table, col: col.clone() }
+                    } else {
+                        OutCol::DimInt { table: *table, col: col.clone() }
+                    }
+                }
+                Kind::Key { out, width, .. } => {
+                    let shift = shifts[ki];
+                    let bits = width.unwrap_or(0);
+                    ki += 1;
+                    match out {
+                        KeyOut::Int => OutCol::KeyInt { shift, bits },
+                        KeyOut::Char => OutCol::KeyChar { shift },
+                        KeyOut::Nation => OutCol::KeyNation { shift, bits },
+                        KeyOut::Dict(t, c) => OutCol::KeyDict { table: *t, col: c.clone() },
+                    }
+                }
+            };
+            parts.push(GroupPart { ast: g.clone(), out });
+        }
+        if n_keys == 1 {
+            if let Some((i, d)) = fk {
+                // The single key is the FK column only if the FK item
+                // itself resolved as a key part.
+                if matches!(kinds[i], Kind::Key { .. }) {
+                    fk_dim = Some(d);
+                }
+            }
+        }
+        Ok(Groups { parts, key, fk_dim })
+    }
+
+    // ------------------------------------------------- plan finishing
+
+    /// Drop probed dense steps that ended up with no filter, no
+    /// payloads, and no link involvement: their probe is a guaranteed
+    /// FK hit, so they contribute nothing (Q18's orders join after
+    /// decoration). Later step indices shift down.
+    fn elide_idle_steps(&mut self) {
+        loop {
+            let idle = self.steps.iter().position(|s| {
+                s.dense_ok
+                    && s.probe_key.is_some()
+                    && s.link.is_none()
+                    && !s.is_target
+                    && s.filter.is_empty()
+                    && s.payloads.is_empty()
+            });
+            let Some(r) = idle else { return };
+            self.steps.remove(r);
+            let shift = |step: &mut u8| {
+                if *step as usize > r {
+                    *step -= 1;
+                }
+            };
+            for s in &mut self.steps {
+                if let Some(l) = &mut s.link {
+                    shift(&mut l.step);
+                }
+            }
+            for c in &mut self.cmps {
+                shift_val_steps(&mut c.lhs, r);
+                shift_val_steps(&mut c.rhs, r);
+            }
+            for v in &mut self.slots {
+                shift_val_steps(v, r);
+            }
+        }
+    }
+
+    fn groups_hint(&self, groups: &Groups, scalar: bool) -> GroupsHint {
+        if scalar {
+            return GroupsHint::Const(1);
+        }
+        let outs: Vec<&OutCol> = groups
+            .parts
+            .iter()
+            .map(|p| &p.out)
+            .filter(|o| !matches!(o, OutCol::DimInt { .. } | OutCol::DimFloat { .. }))
+            .collect();
+        if outs.iter().any(|o| matches!(o, OutCol::KeyDict { .. }))
+            || outs.iter().all(|o| matches!(o, OutCol::KeyChar { .. }))
+        {
+            return GroupsHint::Const(8);
+        }
+        if outs.len() == 1 && matches!(outs[0], OutCol::KeyNation { .. }) {
+            return GroupsHint::Const(32);
+        }
+        if let Some(d) = groups.fk_dim {
+            if self.steps.is_empty() {
+                return GroupsHint::TableRows(d);
+            }
+        }
+        GroupsHint::Const(256)
+    }
+}
+
+/// Decrement join-step references above a removed index inside a value
+/// tree.
+fn shift_val_steps(v: &mut ValExpr, removed: usize) {
+    match v {
+        ValExpr::Payload { step, .. } => {
+            if *step as usize > removed {
+                *step -= 1;
+            }
+        }
+        ValExpr::Add(a, b) | ValExpr::Sub(a, b) | ValExpr::Mul(a, b) => {
+            shift_val_steps(a, removed);
+            shift_val_steps(b, removed);
+        }
+        ValExpr::Const(_) | ValExpr::Col(_) => {}
+    }
+}
+
+fn lit_i32(e: &Expr) -> Option<i32> {
+    match e {
+        Expr::Int(v) => i32::try_from(*v).ok(),
+        Expr::Date(d) => Some(*d),
+        _ => None,
+    }
+}
+
+fn lit_f64(e: &Expr) -> Option<f64> {
+    match e {
+        Expr::Int(v) => Some(*v as f64),
+        Expr::Float(v) => Some(*v),
+        Expr::Date(d) => Some(*d as f64),
+        _ => None,
+    }
+}
+
+/// LIKE patterns the dictionary matcher supports: `prefix%`,
+/// `%infix%`, and wildcard-free equality.
+fn like_match(pat: &str) -> Result<StrMatch> {
+    let pct = pat.matches('%').count();
+    if pct == 0 {
+        return Ok(StrMatch::Eq(pat.to_string()));
+    }
+    if pct == 1 && pat.ends_with('%') {
+        return Ok(StrMatch::Prefix(pat[..pat.len() - 1].to_string()));
+    }
+    if pct == 2 && pat.starts_with('%') && pat.ends_with('%') && pat.len() >= 2 {
+        return Ok(StrMatch::Contains(pat[1..pat.len() - 1].to_string()));
+    }
+    Err(crate::err!(
+        "LIKE pattern {pat:?} unsupported (use 'prefix%', '%infix%', or no wildcard)"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::engine::plan::vrevenue;
+    use crate::analytics::sql::ast::parse;
+
+    fn bind_text(sql: &str) -> Result<LogicalPlan> {
+        bind(&parse(sql)?)
+    }
+
+    #[test]
+    fn q6_binds_to_cmps_before_optimization() {
+        let p = bind_text(
+            "SELECT SUM(l_extendedprice * l_discount) FROM lineitem \
+             WHERE l_shipdate >= DATE '1994-01-01' AND l_shipdate < DATE '1995-01-01' \
+             AND l_discount >= 0.045 AND l_discount < 0.075 AND l_quantity < 24",
+        )
+        .unwrap();
+        assert_eq!(p.pred, PredExpr::True, "numeric conjuncts bind as compares");
+        assert_eq!(p.cmps.len(), 5);
+        assert_eq!(p.slots, vec![vmul(vcol("l_extendedprice"), vcol("l_discount"))]);
+        assert!(p.finalize.scalar);
+        assert_eq!(p.groups_hint, GroupsHint::Const(1));
+    }
+
+    #[test]
+    fn link_target_is_hoisted_and_wired() {
+        let p = bind_text(
+            "SELECT l_orderkey, SUM(l_extendedprice * (1 - l_discount)) AS revenue, o_orderdate \
+             FROM lineitem \
+             JOIN orders ON o_orderkey = l_orderkey \
+             JOIN customer ON c_custkey = o_custkey \
+             WHERE c_mktsegment = 'BUILDING' \
+             GROUP BY l_orderkey, o_orderdate \
+             ORDER BY revenue DESC, l_orderkey LIMIT 10",
+        )
+        .unwrap();
+        assert_eq!(p.joins.len(), 2);
+        assert_eq!(p.joins[0].table, TableRef::Customer, "target hoisted before linker");
+        assert!(p.joins[0].probe_key.is_none());
+        assert_eq!(p.joins[0].filter, PredExpr::Str { col: "c_mktsegment".into(), m: StrMatch::Eq("BUILDING".into()) });
+        assert_eq!(p.joins[1].link, Some(LinkRef { step: 0, via: "o_custkey".into() }));
+        assert!(!p.joins[1].dense, "linked steps cannot be dense");
+        assert_eq!(p.slots, vec![vrevenue()]);
+        assert_eq!(
+            p.finalize.columns,
+            vec![
+                OutCol::KeyInt { shift: 0, bits: 0 },
+                OutCol::Acc(0),
+                OutCol::DimInt { table: TableRef::Orders, col: "o_orderdate".into() },
+            ]
+        );
+        assert_eq!(p.finalize.sort, vec![(1, SortDir::Desc), (0, SortDir::Asc)]);
+        assert_eq!(p.finalize.limit, 10);
+    }
+
+    #[test]
+    fn dense_fk_group_elides_the_join() {
+        let p = bind_text(
+            "SELECT o_custkey, l_orderkey, o_orderdate, o_totalprice, SUM(l_quantity) \
+             FROM lineitem JOIN orders ON o_orderkey = l_orderkey \
+             GROUP BY o_custkey, l_orderkey, o_orderdate, o_totalprice \
+             HAVING SUM(l_quantity) > 300 \
+             ORDER BY o_totalprice DESC, l_orderkey LIMIT 100",
+        )
+        .unwrap();
+        assert!(p.joins.is_empty(), "idle dense join elided");
+        assert_eq!(p.key, KeyExpr::Col("l_orderkey".into()));
+        assert_eq!(p.groups_hint, GroupsHint::TableRows(TableRef::Orders));
+        assert_eq!(p.finalize.having_gt, Some((0, 300.0)));
+        assert_eq!(p.finalize.sort, vec![(3, SortDir::Desc), (1, SortDir::Asc)]);
+    }
+
+    #[test]
+    fn char_keys_pack_and_averages_share_slots() {
+        let p = bind_text(
+            "SELECT l_returnflag, l_linestatus, SUM(l_quantity), AVG(l_quantity), COUNT(*) \
+             FROM lineitem GROUP BY l_returnflag, l_linestatus ORDER BY 1, 2",
+        )
+        .unwrap();
+        assert_eq!(
+            p.key,
+            KeyExpr::Pack {
+                hi: Box::new(KeyExpr::Col("l_returnflag".into())),
+                shift: 8,
+                lo: Box::new(KeyExpr::Col("l_linestatus".into())),
+            }
+        );
+        assert_eq!(p.slots.len(), 1, "SUM and AVG share the accumulator");
+        assert_eq!(
+            p.finalize.columns,
+            vec![
+                OutCol::KeyChar { shift: 8 },
+                OutCol::KeyChar { shift: 0 },
+                OutCol::Acc(0),
+                OutCol::AccOverCount(0),
+                OutCol::Count,
+            ]
+        );
+        assert_eq!(p.groups_hint, GroupsHint::Const(8));
+    }
+
+    #[test]
+    fn q19_branch_bounds_lower_to_case_payloads() {
+        let p = bind_text(
+            "SELECT SUM(l_extendedprice * (1 - l_discount)) FROM lineitem \
+             JOIN part ON p_partkey = l_partkey \
+             WHERE l_shipinstruct = 'DELIVER IN PERSON' AND \
+             ((p_brand = 'Brand#12' AND p_size BETWEEN 1 AND 5 \
+               AND l_quantity >= 1 AND l_quantity <= 11) \
+              OR (p_brand = 'Brand#23' AND p_size BETWEEN 1 AND 10 \
+               AND l_quantity >= 10 AND l_quantity <= 20))",
+        )
+        .unwrap();
+        assert_eq!(p.joins.len(), 1);
+        assert!(p.joins[0].dense);
+        assert_eq!(p.joins[0].payloads.len(), 2, "lo and hi CaseConst payloads");
+        match &p.joins[0].payloads[0] {
+            Payload::CaseConst { cases } => {
+                assert_eq!(cases.len(), 2);
+                assert_eq!(cases[0].1, 1.0);
+                assert_eq!(cases[1].1, 10.0);
+            }
+            other => panic!("expected CaseConst, got {other:?}"),
+        }
+        assert_eq!(p.cmps.len(), 2);
+        assert_eq!(p.cmps[0].op, CmpOp::Ge);
+        assert_eq!(p.cmps[1].op, CmpOp::Le);
+    }
+
+    #[test]
+    fn hostile_queries_error_cleanly() {
+        for bad in [
+            "SELECT SUM(x) FROM orders",                     // scan must be lineitem
+            "SELECT SUM(nope) FROM lineitem",                // unknown column
+            "SELECT l_quantity FROM lineitem",               // bare column, no group
+            "SELECT SUM(l_quantity) FROM lineitem WHERE l_shipmode <> 'AIR'",
+            "SELECT SUM(l_quantity) FROM lineitem WHERE l_quantity < 1 OR l_tax < 1",
+            "SELECT SUM(l_quantity) FROM lineitem GROUP BY l_quantity",
+            "SELECT SUM(l_quantity) FROM lineitem JOIN customer ON c_custkey = l_orderkey",
+            "SELECT SUM(s_acctbal) FROM lineitem",           // supplier not joined
+            "SELECT SUM(l_quantity) FROM lineitem GROUP BY l_orderkey, l_partkey",
+        ] {
+            assert!(bind_text(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+}

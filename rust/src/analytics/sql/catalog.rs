@@ -1,0 +1,347 @@
+//! Static TPC-H catalog for the SQL binder.
+//!
+//! The binder needs four things the plan IR does not carry: which table
+//! a column name belongs to, its storage type, how a dimension table
+//! joins back to the `lineitem` scan (foreign-key shape, dense-PK
+//! eligibility), and which columns carry zone maps (so `explain` can
+//! report prune potential without generating data). All of it is
+//! compile-time constant — column naming follows the TPC-H prefix
+//! convention, so resolution is a flat lookup.
+
+use crate::analytics::engine::plan::TableRef;
+use crate::analytics::tpch::{NATIONS, REGIONS};
+use crate::error::Result;
+
+/// Storage type of a catalog column, as the executor sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ColType {
+    /// `i64` join key (`l_orderkey`, `p_partkey`, …).
+    Key,
+    /// Plain `i32` (sizes, nation keys, line numbers).
+    I32,
+    /// `i32` day count — comparable against `DATE '...'` literals.
+    Date,
+    /// `f64` measure.
+    F64,
+    /// Single-byte code (`l_returnflag`, `o_orderstatus`).
+    Char,
+    /// Dictionary-encoded string.
+    Str,
+}
+
+/// One column of one table.
+#[derive(Clone, Copy, Debug)]
+pub struct ColDef {
+    pub name: &'static str,
+    pub ty: ColType,
+    /// Whether the generated table carries per-chunk zones for this
+    /// column (lineitem zones its measures and dates at append time;
+    /// dimension tables zone every numeric column via
+    /// `ZoneMap::build_from`).
+    pub zoned: bool,
+}
+
+const fn col(name: &'static str, ty: ColType, zoned: bool) -> ColDef {
+    ColDef { name, ty, zoned }
+}
+
+/// One table: its IR tag, columns, and (for dimensions) the dense
+/// primary key — consecutive `1..=n` keys that allow `dense: true`
+/// join steps with direct indexing instead of a hash build.
+#[derive(Clone, Copy, Debug)]
+pub struct TableDef {
+    pub table: TableRef,
+    pub cols: &'static [ColDef],
+    pub dense_pk: Option<&'static str>,
+}
+
+/// Bit width of the packed `(ps_partkey << PS_SHIFT) | ps_suppkey`
+/// composite key — must match `queries::q9`.
+pub const PS_SHIFT: u8 = 21;
+
+static LINEITEM: TableDef = TableDef {
+    table: TableRef::Lineitem,
+    dense_pk: None,
+    cols: &[
+        col("l_orderkey", ColType::Key, false),
+        col("l_partkey", ColType::Key, false),
+        col("l_suppkey", ColType::Key, false),
+        col("l_linenumber", ColType::I32, false),
+        col("l_quantity", ColType::F64, true),
+        col("l_extendedprice", ColType::F64, true),
+        col("l_discount", ColType::F64, true),
+        col("l_tax", ColType::F64, true),
+        col("l_returnflag", ColType::Char, false),
+        col("l_linestatus", ColType::Char, false),
+        col("l_shipdate", ColType::Date, true),
+        col("l_commitdate", ColType::Date, true),
+        col("l_receiptdate", ColType::Date, true),
+        col("l_shipmode", ColType::Str, false),
+        col("l_shipinstruct", ColType::Str, false),
+    ],
+};
+
+static ORDERS: TableDef = TableDef {
+    table: TableRef::Orders,
+    dense_pk: Some("o_orderkey"),
+    cols: &[
+        col("o_orderkey", ColType::Key, true),
+        col("o_custkey", ColType::Key, true),
+        col("o_orderdate", ColType::Date, true),
+        col("o_totalprice", ColType::F64, true),
+        col("o_orderpriority", ColType::Str, false),
+        col("o_orderstatus", ColType::Char, false),
+    ],
+};
+
+static CUSTOMER: TableDef = TableDef {
+    table: TableRef::Customer,
+    dense_pk: Some("c_custkey"),
+    cols: &[
+        col("c_custkey", ColType::Key, true),
+        col("c_nationkey", ColType::I32, true),
+        col("c_acctbal", ColType::F64, true),
+        col("c_mktsegment", ColType::Str, false),
+    ],
+};
+
+static SUPPLIER: TableDef = TableDef {
+    table: TableRef::Supplier,
+    dense_pk: Some("s_suppkey"),
+    cols: &[
+        col("s_suppkey", ColType::Key, true),
+        col("s_nationkey", ColType::I32, true),
+        col("s_acctbal", ColType::F64, true),
+    ],
+};
+
+static PART: TableDef = TableDef {
+    table: TableRef::Part,
+    dense_pk: Some("p_partkey"),
+    cols: &[
+        col("p_partkey", ColType::Key, true),
+        col("p_name", ColType::Str, false),
+        col("p_brand", ColType::Str, false),
+        col("p_type", ColType::Str, false),
+        col("p_container", ColType::Str, false),
+        col("p_size", ColType::I32, true),
+        col("p_retailprice", ColType::F64, true),
+    ],
+};
+
+static PARTSUPP: TableDef = TableDef {
+    table: TableRef::Partsupp,
+    dense_pk: None,
+    cols: &[
+        col("ps_partkey", ColType::Key, true),
+        col("ps_suppkey", ColType::Key, true),
+        col("ps_availqty", ColType::I32, true),
+        col("ps_supplycost", ColType::F64, true),
+    ],
+};
+
+static TABLES: [&TableDef; 6] = [&LINEITEM, &ORDERS, &CUSTOMER, &SUPPLIER, &PART, &PARTSUPP];
+
+/// Look a table up by SQL name (case-insensitive).
+pub fn table(name: &str) -> Result<&'static TableDef> {
+    TABLES
+        .iter()
+        .find(|t| t.table.name().eq_ignore_ascii_case(name))
+        .copied()
+        .ok_or_else(|| crate::err!("unknown table {name:?}"))
+}
+
+/// Definition record for a `TableRef` (infallible: every tag is listed).
+pub fn table_def(t: TableRef) -> &'static TableDef {
+    TABLES.iter().find(|d| d.table == t).copied().unwrap_or(&LINEITEM)
+}
+
+/// Resolve a column name to its owning table and type. Column names are
+/// globally unique in TPC-H (prefix convention), so no qualification is
+/// needed.
+pub fn resolve(col: &str) -> Result<(&'static TableDef, ColDef)> {
+    for t in TABLES {
+        if let Some(c) = t.cols.iter().find(|c| c.name == col) {
+            return Ok((t, *c));
+        }
+    }
+    Err(crate::err!("unknown column {col:?}"))
+}
+
+/// Type of a column, if it exists anywhere in the catalog.
+pub fn col_type(col: &str) -> Option<ColType> {
+    resolve(col).ok().map(|(_, c)| c.ty)
+}
+
+/// How a `JOIN <dim> ON <dim-key> = <scan-col>` equi-pair maps onto a
+/// probe. `Single` joins probe one scan column; `Packed` is the
+/// partsupp composite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FkShape {
+    /// `dim_key = scan_col`, with `dense` legal iff `dim_key` is the
+    /// dense PK.
+    Single { scan_col: &'static str, dense_ok: bool },
+    /// `(ps_partkey, ps_suppkey) = (l_partkey, l_suppkey)` packed with
+    /// [`PS_SHIFT`].
+    Packed { scan_a: &'static str, scan_b: &'static str, shift: u8 },
+}
+
+/// The scan-side probe shape for joining `dim` on `dim_key_cols` (the
+/// dim-side columns named in the ON clause, in appearance order).
+/// Returns an error for key pairings the engine cannot probe.
+pub fn fk_shape(dim: TableRef, dim_keys: &[&str], scan_cols: &[&str]) -> Result<FkShape> {
+    match (dim, dim_keys, scan_cols) {
+        (TableRef::Orders, ["o_orderkey"], ["l_orderkey"]) => {
+            Ok(FkShape::Single { scan_col: "l_orderkey", dense_ok: true })
+        }
+        (TableRef::Part, ["p_partkey"], ["l_partkey"]) => {
+            Ok(FkShape::Single { scan_col: "l_partkey", dense_ok: true })
+        }
+        (TableRef::Supplier, ["s_suppkey"], ["l_suppkey"]) => {
+            Ok(FkShape::Single { scan_col: "l_suppkey", dense_ok: true })
+        }
+        (TableRef::Partsupp, ["ps_partkey", "ps_suppkey"], ["l_partkey", "l_suppkey"])
+        | (TableRef::Partsupp, ["ps_suppkey", "ps_partkey"], ["l_suppkey", "l_partkey"]) => {
+            Ok(FkShape::Packed { scan_a: "l_partkey", scan_b: "l_suppkey", shift: PS_SHIFT })
+        }
+        _ => Err(crate::err!(
+            "no foreign-key path joins {} on ({}) to lineitem ({})",
+            dim.name(),
+            dim_keys.join(", "),
+            scan_cols.join(", ")
+        )),
+    }
+}
+
+/// The dense dimension a lineitem foreign-key column points at, if
+/// any. Grouping by such a column lets sibling group-by columns of
+/// that dimension become dense decorations (`DimInt`/`DimFloat`)
+/// instead of key bits.
+pub fn scan_fk_dim(col: &str) -> Option<TableRef> {
+    match col {
+        "l_orderkey" => Some(TableRef::Orders),
+        "l_partkey" => Some(TableRef::Part),
+        "l_suppkey" => Some(TableRef::Supplier),
+        _ => None,
+    }
+}
+
+/// The dim→dim link edge: `customer.c_custkey = orders.o_custkey`.
+/// Returns the `via` column on the linking step if `(target, target_key,
+/// linker, linker_col)` is that edge.
+pub fn link_via(
+    target: TableRef,
+    target_key: &str,
+    linker: TableRef,
+    linker_col: &str,
+) -> Option<&'static str> {
+    if target == TableRef::Customer
+        && target_key == "c_custkey"
+        && linker == TableRef::Orders
+        && linker_col == "o_custkey"
+    {
+        Some("o_custkey")
+    } else {
+        None
+    }
+}
+
+/// Nation keys belonging to `region` (the `region_of(col) = '...'`
+/// rewrite target, mirroring `queries::q5`).
+pub fn region_nations(region: &str) -> Result<Vec<i32>> {
+    let idx = REGIONS
+        .iter()
+        .position(|r| *r == region)
+        .ok_or_else(|| crate::err!("unknown region {region:?}"))?
+        as u32;
+    Ok(NATIONS
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, r))| *r == idx)
+        .map(|(i, _)| i as i32)
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolves_columns_to_their_tables() {
+        let (t, c) = resolve("l_shipdate").unwrap();
+        assert_eq!(t.table, TableRef::Lineitem);
+        assert_eq!(c.ty, ColType::Date);
+        assert!(c.zoned);
+        let (t, c) = resolve("c_mktsegment").unwrap();
+        assert_eq!(t.table, TableRef::Customer);
+        assert_eq!(c.ty, ColType::Str);
+        assert!(resolve("nonexistent").is_err());
+    }
+
+    #[test]
+    fn catalog_matches_generated_tables() {
+        use crate::analytics::column::Column;
+        use crate::analytics::engine::plan;
+        use crate::analytics::tpch::{TpchConfig, TpchDb};
+        let db = TpchDb::generate(TpchConfig::new(0.001, 7));
+        for def in TABLES {
+            let t = plan::table(&db, def.table);
+            for c in def.cols {
+                let stored = t.col(c.name);
+                let ty_ok = match (c.ty, stored) {
+                    (ColType::Key, Column::I64(_)) => true,
+                    (ColType::I32 | ColType::Date, Column::I32(_)) => true,
+                    (ColType::F64, Column::F64(_)) => true,
+                    (ColType::Char, Column::U8(_)) => true,
+                    (ColType::Str, Column::Str { .. }) => true,
+                    _ => false,
+                };
+                assert!(ty_ok, "{}.{} type mismatch", def.table.name(), c.name);
+                let zm = t.zones().expect("all generated tables carry zone maps");
+                assert_eq!(
+                    zm.col(c.name).is_some(),
+                    c.zoned,
+                    "{}.{} zone coverage mismatch",
+                    def.table.name(),
+                    c.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fk_shapes_cover_the_star_schema() {
+        assert_eq!(
+            fk_shape(TableRef::Orders, &["o_orderkey"], &["l_orderkey"]).unwrap(),
+            FkShape::Single { scan_col: "l_orderkey", dense_ok: true }
+        );
+        match fk_shape(
+            TableRef::Partsupp,
+            &["ps_suppkey", "ps_partkey"],
+            &["l_suppkey", "l_partkey"],
+        )
+        .unwrap()
+        {
+            FkShape::Packed { scan_a, scan_b, shift } => {
+                assert_eq!((scan_a, scan_b, shift), ("l_partkey", "l_suppkey", PS_SHIFT));
+            }
+            other => panic!("expected packed shape, got {other:?}"),
+        }
+        assert!(fk_shape(TableRef::Orders, &["o_custkey"], &["l_orderkey"]).is_err());
+        assert_eq!(
+            link_via(TableRef::Customer, "c_custkey", TableRef::Orders, "o_custkey"),
+            Some("o_custkey")
+        );
+        assert!(link_via(TableRef::Supplier, "s_suppkey", TableRef::Orders, "o_custkey").is_none());
+    }
+
+    #[test]
+    fn asia_nations_match_q5() {
+        let asia = region_nations("ASIA").unwrap();
+        assert!(!asia.is_empty());
+        for n in &asia {
+            assert_eq!(NATIONS[*n as usize].1, 2, "ASIA is region index 2");
+        }
+        assert!(region_nations("ATLANTIS").is_err());
+    }
+}

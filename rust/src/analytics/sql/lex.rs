@@ -1,0 +1,227 @@
+//! SQL lexer — hand-rolled, zero dependencies, never panics.
+//!
+//! Produces a flat token stream for the recursive-descent parser in
+//! [`super::ast`]. Keywords are not distinguished here: the parser
+//! matches identifiers case-insensitively, so `SELECT`, `select`, and
+//! `Select` all work while column names stay verbatim. String literals
+//! use single quotes with `''` as the escape for a literal quote
+//! (standard SQL).
+
+use crate::error::Result;
+
+/// One lexical token.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    /// Bare identifier *or* keyword (the parser decides, ignoring case).
+    Ident(String),
+    /// Integer literal (no sign — `-` is a token of its own).
+    Int(i64),
+    /// Float literal (`digits.digits`).
+    Float(f64),
+    /// `'single-quoted'` string, `''` unescaped to `'`.
+    Str(String),
+    LParen,
+    RParen,
+    Comma,
+    Star,
+    Plus,
+    Minus,
+    Slash,
+    Eq,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    /// `<>` (also accepted: `!=`).
+    Ne,
+}
+
+impl Tok {
+    /// Human-readable form for error messages.
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("{s:?}"),
+            Tok::Int(v) => format!("{v}"),
+            Tok::Float(v) => format!("{v}"),
+            Tok::Str(s) => format!("'{s}'"),
+            Tok::LParen => "(".into(),
+            Tok::RParen => ")".into(),
+            Tok::Comma => ",".into(),
+            Tok::Star => "*".into(),
+            Tok::Plus => "+".into(),
+            Tok::Minus => "-".into(),
+            Tok::Slash => "/".into(),
+            Tok::Eq => "=".into(),
+            Tok::Lt => "<".into(),
+            Tok::Le => "<=".into(),
+            Tok::Gt => ">".into(),
+            Tok::Ge => ">=".into(),
+            Tok::Ne => "<>".into(),
+        }
+    }
+}
+
+/// Tokenize `input`. Errors name the offending byte offset; nothing
+/// here recurses or indexes unchecked, so hostile input cannot panic.
+pub fn lex(input: &str) -> Result<Vec<Tok>> {
+    let b = input.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\r' | b'\n' => i += 1,
+            b'(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            b',' => {
+                toks.push(Tok::Comma);
+                i += 1;
+            }
+            b'*' => {
+                toks.push(Tok::Star);
+                i += 1;
+            }
+            b'+' => {
+                toks.push(Tok::Plus);
+                i += 1;
+            }
+            b'-' => {
+                toks.push(Tok::Minus);
+                i += 1;
+            }
+            b'/' => {
+                toks.push(Tok::Slash);
+                i += 1;
+            }
+            b'=' => {
+                toks.push(Tok::Eq);
+                i += 1;
+            }
+            b'!' => {
+                crate::ensure!(b.get(i + 1) == Some(&b'='), "lone '!' at byte {i}");
+                toks.push(Tok::Ne);
+                i += 2;
+            }
+            b'<' => match b.get(i + 1) {
+                Some(b'=') => {
+                    toks.push(Tok::Le);
+                    i += 2;
+                }
+                Some(b'>') => {
+                    toks.push(Tok::Ne);
+                    i += 2;
+                }
+                _ => {
+                    toks.push(Tok::Lt);
+                    i += 1;
+                }
+            },
+            b'>' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    toks.push(Tok::Ge);
+                    i += 2;
+                } else {
+                    toks.push(Tok::Gt);
+                    i += 1;
+                }
+            }
+            b'\'' => {
+                let mut s = String::new();
+                let mut j = i + 1;
+                loop {
+                    match b.get(j) {
+                        None => crate::bail!("unterminated string starting at byte {i}"),
+                        Some(b'\'') if b.get(j + 1) == Some(&b'\'') => {
+                            s.push('\'');
+                            j += 2;
+                        }
+                        Some(b'\'') => {
+                            j += 1;
+                            break;
+                        }
+                        Some(&ch) => {
+                            // Column data is ASCII throughout; keeping
+                            // the lexer byte-oriented avoids UTF-8
+                            // boundary bookkeeping.
+                            crate::ensure!(ch.is_ascii(), "non-ASCII byte in string at {j}");
+                            s.push(ch as char);
+                            j += 1;
+                        }
+                    }
+                }
+                toks.push(Tok::Str(s));
+                i = j;
+            }
+            b'0'..=b'9' => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let is_float =
+                    i < b.len() && b[i] == b'.' && b.get(i + 1).is_some_and(|d| d.is_ascii_digit());
+                if is_float {
+                    i += 1;
+                    while i < b.len() && b[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                    let text = &input[start..i];
+                    let v = text
+                        .parse::<f64>()
+                        .map_err(|_| crate::err!("bad float literal {text:?}"))?;
+                    toks.push(Tok::Float(v));
+                } else {
+                    let text = &input[start..i];
+                    let v = text
+                        .parse::<i64>()
+                        .map_err(|_| crate::err!("integer literal {text:?} out of range"))?;
+                    toks.push(Tok::Int(v));
+                }
+            }
+            b'a'..=b'z' | b'A'..=b'Z' | b'_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                toks.push(Tok::Ident(input[start..i].to_string()));
+            }
+            _ => crate::bail!("unexpected byte {:?} at offset {i}", c as char),
+        }
+    }
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_a_representative_query() {
+        let toks = lex("SELECT sum(l_extendedprice * 0.5) FROM lineitem WHERE a >= 10").unwrap();
+        assert_eq!(toks[0], Tok::Ident("SELECT".into()));
+        assert!(toks.contains(&Tok::Float(0.5)));
+        assert!(toks.contains(&Tok::Ge));
+        assert!(toks.contains(&Tok::Int(10)));
+    }
+
+    #[test]
+    fn string_escapes_and_operators() {
+        assert_eq!(
+            lex("'it''s' <> '' <=").unwrap(),
+            vec![Tok::Str("it's".into()), Tok::Ne, Tok::Str(String::new()), Tok::Le]
+        );
+    }
+
+    #[test]
+    fn rejects_junk_without_panicking() {
+        assert!(lex("select ; from").is_err());
+        assert!(lex("'unterminated").is_err());
+        assert!(lex("99999999999999999999").is_err());
+        assert!(lex("a ! b").is_err());
+    }
+}

@@ -1,0 +1,750 @@
+//! Rule-based optimizer over the [`LogicalPlan`] IR.
+//!
+//! Works on the IR, not on SQL — registry-built plans benefit exactly
+//! as much as SQL-bound ones. Rules run in a fixed order:
+//!
+//! 1. **Constant folding** — `Add/Sub/Mul` over two constants collapse,
+//!    recursively (the binder lowers `DATE '1994-01-01' + 90` to
+//!    `Add(Const, Const)`; folding it is what makes rule 2 fire).
+//! 2. **Predicate pushdown** — a post-join compare of a scan column
+//!    against a constant becomes a scan-predicate leaf (`I32Range`,
+//!    `F64Range`, `F64Lt`, `I32ColLt`); a compare of a plain `Col`
+//!    payload against a constant moves into that join step's dim-side
+//!    filter, excluding rows from the build instead of testing every
+//!    probe. Pushed scan leaves feed the zone-map prune derivation, so
+//!    this rule is what turns folded date arithmetic into skipped
+//!    morsels.
+//! 3. **Range merging** — `And` trees flatten, `True` leaves drop, and
+//!    per-column intervals intersect into a single half-open leaf
+//!    (anchored where the column first appeared, so registry predicates
+//!    round-trip unchanged).
+//! 4. **Join reordering** — steps sort by estimated build-side rows
+//!    (see [`crate::costmodel::estimate`]), smallest build first; link
+//!    targets stay ahead of their linkers; every step reference
+//!    (payload values, key parts, link edges) is remapped.
+//! 5. **Payload elision** — payloads nothing reads (often orphaned by
+//!    rule 2) are removed and the surviving slots renumbered.
+//!    `CaseConst` payloads always stay: their no-match case *excludes*
+//!    build rows, which is a filter in disguise.
+//!
+//! Exactness notes: integer bounds convert with floor/ceil so
+//! fractional constants tighten correctly (`x < 24.5` ⇒ `hi = 25`);
+//! float `Le`/`Gt`/`Eq` bounds use the next representable double, which
+//! is exact for the finite column data the generator produces (no NaN,
+//! no infinities). A rule that cannot prove its rewrite safe leaves the
+//! compare where it was.
+
+use crate::analytics::engine::plan::{
+    pand, CmpExpr, CmpOp, JoinStep, KeyExpr, LogicalPlan, Payload, PredExpr, TableRef, ValExpr,
+};
+use crate::costmodel;
+use super::catalog::{self, ColType};
+
+/// Run every rule, in order. Pure: the input plan is untouched.
+pub fn optimize(plan: &LogicalPlan) -> LogicalPlan {
+    let mut p = plan.clone();
+    fold_plan(&mut p);
+    push_down(&mut p);
+    p.pred = merge_ranges(std::mem::replace(&mut p.pred, PredExpr::True));
+    for j in &mut p.joins {
+        j.filter = merge_ranges(std::mem::replace(&mut j.filter, PredExpr::True));
+    }
+    reorder_joins(&mut p);
+    elide_payloads(&mut p);
+    p
+}
+
+// ------------------------------------------------------ constant folding
+
+fn fold_plan(p: &mut LogicalPlan) {
+    for c in &mut p.cmps {
+        fold_val(&mut c.lhs);
+        fold_val(&mut c.rhs);
+    }
+    for s in &mut p.slots {
+        fold_val(s);
+    }
+}
+
+fn fold_val(v: &mut ValExpr) {
+    match v {
+        ValExpr::Add(a, b) | ValExpr::Sub(a, b) | ValExpr::Mul(a, b) => {
+            fold_val(a);
+            fold_val(b);
+            if let (ValExpr::Const(x), ValExpr::Const(y)) = (a.as_ref(), b.as_ref()) {
+                *v = ValExpr::Const(match v {
+                    ValExpr::Add(..) => x + y,
+                    ValExpr::Sub(..) => x - y,
+                    _ => x * y,
+                });
+            }
+        }
+        ValExpr::Const(_) | ValExpr::Col(_) | ValExpr::Payload { .. } => {}
+    }
+}
+
+// ---------------------------------------------------- predicate pushdown
+
+/// Where a pushed leaf lands.
+enum Sink {
+    Scan,
+    Step(usize),
+}
+
+fn push_down(p: &mut LogicalPlan) {
+    let mut kept = Vec::new();
+    let mut scan_extra = Vec::new();
+    let mut step_extra: Vec<Vec<PredExpr>> = vec![Vec::new(); p.joins.len()];
+    for c in std::mem::take(&mut p.cmps) {
+        match try_push(&c, &p.joins) {
+            Some((Sink::Scan, leaf)) => scan_extra.push(leaf),
+            Some((Sink::Step(s), leaf)) => step_extra[s].push(leaf),
+            None => kept.push(c),
+        }
+    }
+    p.cmps = kept;
+    if !scan_extra.is_empty() {
+        let mut all = vec![std::mem::replace(&mut p.pred, PredExpr::True)];
+        all.extend(scan_extra);
+        p.pred = pand(all);
+    }
+    for (j, extra) in p.joins.iter_mut().zip(step_extra) {
+        if !extra.is_empty() {
+            let mut all = vec![std::mem::replace(&mut j.filter, PredExpr::True)];
+            all.extend(extra);
+            j.filter = pand(all);
+        }
+    }
+}
+
+/// Try to convert one compare into a predicate leaf plus its sink.
+fn try_push(c: &CmpExpr, joins: &[JoinStep]) -> Option<(Sink, PredExpr)> {
+    // col-vs-col first: `a < b` over two scan date/int columns.
+    if c.op == CmpOp::Lt {
+        if let (ValExpr::Col(a), ValExpr::Col(b)) = (&c.lhs, &c.rhs) {
+            if is_i32_scan(a) && is_i32_scan(b) {
+                return Some((Sink::Scan, PredExpr::I32ColLt { a: a.clone(), b: b.clone() }));
+            }
+        }
+    }
+    if c.op == CmpOp::Gt {
+        if let (ValExpr::Col(a), ValExpr::Col(b)) = (&c.lhs, &c.rhs) {
+            if is_i32_scan(a) && is_i32_scan(b) {
+                return Some((Sink::Scan, PredExpr::I32ColLt { a: b.clone(), b: a.clone() }));
+            }
+        }
+    }
+    // Normalize to (column-ish, op, constant).
+    let (target, op, k) = match (&c.lhs, &c.rhs) {
+        (lhs, ValExpr::Const(k)) => (lhs, c.op, *k),
+        (ValExpr::Const(k), rhs) => (rhs, mirror(c.op), *k),
+        _ => return None,
+    };
+    match target {
+        ValExpr::Col(col) => {
+            let (td, cd) = catalog_entry(col)?;
+            if td != TableRef::Lineitem {
+                return None;
+            }
+            Some((Sink::Scan, leaf_for(col, cd, op, k)?))
+        }
+        ValExpr::Payload { step, slot } => {
+            let j = joins.get(*step as usize)?;
+            // Only a plain column payload is a faithful copy of the dim
+            // value; flags and case constants are computed, and
+            // FromLink values belong to another step's build.
+            let Payload::Col(col) = j.payloads.get(*slot as usize)? else {
+                return None;
+            };
+            let (td, cd) = catalog_entry(col)?;
+            if td != j.table {
+                return None;
+            }
+            Some((Sink::Step(*step as usize), leaf_for(col, cd, op, k)?))
+        }
+        _ => None,
+    }
+}
+
+fn catalog_entry(col: &str) -> Option<(TableRef, ColType)> {
+    let (td, cd) = catalog::resolve(col).ok()?;
+    Some((td.table, cd.ty))
+}
+
+fn is_i32_scan(col: &str) -> bool {
+    matches!(
+        catalog_entry(col),
+        Some((TableRef::Lineitem, ColType::I32 | ColType::Date))
+    )
+}
+
+fn mirror(op: CmpOp) -> CmpOp {
+    match op {
+        CmpOp::Eq => CmpOp::Eq,
+        CmpOp::Lt => CmpOp::Gt,
+        CmpOp::Le => CmpOp::Ge,
+        CmpOp::Ge => CmpOp::Le,
+        CmpOp::Gt => CmpOp::Lt,
+    }
+}
+
+/// Lower `col op k` to a typed predicate leaf, or `None` when the
+/// column type has no exact leaf form (strings, i64 keys).
+fn leaf_for(col: &str, ty: ColType, op: CmpOp, k: f64) -> Option<PredExpr> {
+    match ty {
+        ColType::I32 | ColType::Date => int_leaf(col, op, k),
+        ColType::F64 => f64_leaf(col, op, k),
+        ColType::Key | ColType::Char | ColType::Str => None,
+    }
+}
+
+fn int_leaf(col: &str, op: CmpOp, k: f64) -> Option<PredExpr> {
+    if !k.is_finite() {
+        return None;
+    }
+    let range = |lo: i64, hi: i64| -> Option<PredExpr> {
+        let lo = i32::try_from(lo.max(i32::MIN as i64)).ok()?;
+        let hi = i32::try_from(hi.min(i32::MAX as i64)).ok()?;
+        Some(PredExpr::I32Range { col: col.to_string(), lo, hi })
+    };
+    let is_int = k.fract() == 0.0 && (i32::MIN as f64..=i32::MAX as f64).contains(&k);
+    // `as` saturates, so out-of-range constants clamp — which is exact
+    // here, because the column's values all fit in i32 anyway.
+    let fl = k.floor() as i64;
+    let ce = k.ceil() as i64;
+    // All bounds are half-open [lo, hi).
+    match op {
+        CmpOp::Lt => range(i32::MIN as i64, if is_int { k as i64 } else { fl.saturating_add(1) }),
+        CmpOp::Le => range(i32::MIN as i64, fl.saturating_add(1)),
+        CmpOp::Ge => range(ce, i32::MAX as i64),
+        CmpOp::Gt => range(fl.saturating_add(1), i32::MAX as i64),
+        CmpOp::Eq => {
+            if is_int {
+                range(k as i64, k as i64 + 1)
+            } else {
+                // `int_col = 2.5` holds for no row.
+                range(0, 0)
+            }
+        }
+    }
+}
+
+fn f64_leaf(col: &str, op: CmpOp, k: f64) -> Option<PredExpr> {
+    if !k.is_finite() {
+        return None;
+    }
+    let col = col.to_string();
+    Some(match op {
+        CmpOp::Lt => PredExpr::F64Lt { col, x: k },
+        CmpOp::Le => PredExpr::F64Lt { col, x: next_up(k) },
+        CmpOp::Ge => PredExpr::F64Range { col, lo: k, hi: f64::INFINITY },
+        CmpOp::Gt => PredExpr::F64Range { col, lo: next_up(k), hi: f64::INFINITY },
+        CmpOp::Eq => PredExpr::F64Range { col, lo: k, hi: next_up(k) },
+    })
+}
+
+/// Next representable double above `k` (finite `k` only).
+fn next_up(k: f64) -> f64 {
+    if k == 0.0 {
+        return f64::from_bits(1); // covers -0.0 too
+    }
+    let bits = k.to_bits();
+    if k > 0.0 {
+        f64::from_bits(bits + 1)
+    } else {
+        f64::from_bits(bits - 1)
+    }
+}
+
+// -------------------------------------------------------- range merging
+
+/// Flatten `And` trees, drop `True`, intersect per-column intervals.
+/// Each merged leaf sits where its column first appeared, so an
+/// already-minimal predicate comes back structurally identical.
+fn merge_ranges(p: PredExpr) -> PredExpr {
+    let mut flat = Vec::new();
+    flatten_and(p, &mut flat);
+
+    enum Slot {
+        I32 { col: String, lo: i32, hi: i32 },
+        F64 { col: String, lo: f64, hi: f64 }, // [lo, hi), ±inf sentinels
+        Other(PredExpr),
+    }
+    let mut slots: Vec<Slot> = Vec::new();
+    for leaf in flat {
+        match leaf {
+            PredExpr::True => {}
+            PredExpr::I32Range { col, lo, hi } => {
+                let hit = slots.iter_mut().find_map(|s| match s {
+                    Slot::I32 { col: c, lo: l, hi: h } if *c == col => Some((l, h)),
+                    _ => None,
+                });
+                match hit {
+                    Some((l, h)) => {
+                        *l = (*l).max(lo);
+                        *h = (*h).min(hi);
+                    }
+                    None => slots.push(Slot::I32 { col, lo, hi }),
+                }
+            }
+            PredExpr::F64Range { .. } | PredExpr::F64Lt { .. } => {
+                let (col, lo, hi) = match leaf {
+                    PredExpr::F64Range { col, lo, hi } => (col, lo, hi),
+                    PredExpr::F64Lt { col, x } => (col, f64::NEG_INFINITY, x),
+                    _ => unreachable!(),
+                };
+                let hit = slots.iter_mut().find_map(|s| match s {
+                    Slot::F64 { col: c, lo: l, hi: h } if *c == col => Some((l, h)),
+                    _ => None,
+                });
+                match hit {
+                    Some((l, h)) => {
+                        *l = (*l).max(lo);
+                        *h = (*h).min(hi);
+                    }
+                    None => slots.push(Slot::F64 { col, lo, hi }),
+                }
+            }
+            other => slots.push(Slot::Other(other)),
+        }
+    }
+    let mut out = Vec::new();
+    for s in slots {
+        out.push(match s {
+            Slot::I32 { col, lo, hi } => PredExpr::I32Range { col, lo, hi },
+            Slot::F64 { col, lo, hi } => {
+                if lo == f64::NEG_INFINITY {
+                    PredExpr::F64Lt { col, x: hi }
+                } else {
+                    PredExpr::F64Range { col, lo, hi }
+                }
+            }
+            Slot::Other(p) => p,
+        });
+    }
+    match out.len() {
+        0 => PredExpr::True,
+        1 => out.remove(0),
+        _ => PredExpr::And(out),
+    }
+}
+
+fn flatten_and(p: PredExpr, out: &mut Vec<PredExpr>) {
+    match p {
+        PredExpr::And(parts) => {
+            for part in parts {
+                flatten_and(part, out);
+            }
+        }
+        other => out.push(other),
+    }
+}
+
+// ------------------------------------------------------ join reordering
+
+/// Sort steps ascending by estimated build rows (selection sort for
+/// stability), holding every link target ahead of its linker, then
+/// remap all step references.
+fn reorder_joins(p: &mut LogicalPlan) {
+    if p.joins.len() < 2 {
+        return;
+    }
+    let est = costmodel::estimate(p, 1.0);
+    let n = p.joins.len();
+    // order[new] = old
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    let mut placed = vec![false; n];
+    for _ in 0..n {
+        let mut best: Option<usize> = None;
+        for i in 0..n {
+            if placed[i] {
+                continue;
+            }
+            // A linker cannot move ahead of its unplaced target.
+            if let Some(l) = &p.joins[i].link {
+                if !placed[l.step as usize] {
+                    continue;
+                }
+            }
+            let better = match best {
+                None => true,
+                Some(b) => est.steps[i].build_rows < est.steps[b].build_rows,
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        let i = best.expect("link edges are acyclic (target index < linker index)");
+        placed[i] = true;
+        order.push(i);
+    }
+    if order.iter().enumerate().all(|(new, old)| new == *old) {
+        return;
+    }
+    // remap[old] = new
+    let mut remap = vec![0u8; n];
+    for (new, old) in order.iter().enumerate() {
+        remap[*old] = new as u8;
+    }
+    let mut steps: Vec<Option<JoinStep>> = p.joins.drain(..).map(Some).collect();
+    p.joins = order.iter().map(|old| steps[*old].take().expect("each old index once")).collect();
+    for j in &mut p.joins {
+        if let Some(l) = &mut j.link {
+            l.step = remap[l.step as usize];
+        }
+    }
+    for c in &mut p.cmps {
+        remap_val(&mut c.lhs, &remap);
+        remap_val(&mut c.rhs, &remap);
+    }
+    for s in &mut p.slots {
+        remap_val(s, &remap);
+    }
+    remap_key(&mut p.key, &remap);
+}
+
+fn remap_val(v: &mut ValExpr, remap: &[u8]) {
+    match v {
+        ValExpr::Payload { step, .. } => *step = remap[*step as usize],
+        ValExpr::Add(a, b) | ValExpr::Sub(a, b) | ValExpr::Mul(a, b) => {
+            remap_val(a, remap);
+            remap_val(b, remap);
+        }
+        ValExpr::Const(_) | ValExpr::Col(_) => {}
+    }
+}
+
+fn remap_key(k: &mut KeyExpr, remap: &[u8]) {
+    match k {
+        KeyExpr::Payload { step, .. } => *step = remap[*step as usize],
+        KeyExpr::Year(inner) => remap_key(inner, remap),
+        KeyExpr::Pack { hi, lo, .. } => {
+            remap_key(hi, remap);
+            remap_key(lo, remap);
+        }
+        KeyExpr::Const(_) | KeyExpr::Col(_) => {}
+    }
+}
+
+// ------------------------------------------------------ payload elision
+
+/// Remove payloads nothing references and renumber the survivors.
+/// `CaseConst` never goes: its no-match case excludes build rows.
+/// Dropping a `FromLink` can orphan its target's column payload, so the
+/// pass loops to a fixed point.
+fn elide_payloads(p: &mut LogicalPlan) {
+    loop {
+        let mut used: Vec<Vec<bool>> =
+            p.joins.iter().map(|j| vec![false; j.payloads.len()]).collect();
+        for c in &p.cmps {
+            mark_val(&c.lhs, &mut used);
+            mark_val(&c.rhs, &mut used);
+        }
+        for s in &p.slots {
+            mark_val(s, &mut used);
+        }
+        mark_key(&p.key, &mut used);
+        for (i, j) in p.joins.iter().enumerate() {
+            if let Some(l) = &j.link {
+                let target = l.step as usize;
+                for (slot, pay) in j.payloads.iter().enumerate() {
+                    if let Payload::FromLink(k) = pay {
+                        // The link-through read matters only if someone
+                        // reads the FromLink slot itself.
+                        if used[i][slot] {
+                            if let Some(u) = used[target].get_mut(*k as usize) {
+                                *u = true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Plan the removals first (renumbering touches the whole plan,
+        // so it cannot run while iterating the joins mutably).
+        let mut removals: Vec<(usize, Vec<Option<u8>>)> = Vec::new();
+        for (i, j) in p.joins.iter().enumerate() {
+            let mut newidx: Vec<Option<u8>> = Vec::with_capacity(j.payloads.len());
+            let mut next = 0u8;
+            let mut dropped = false;
+            for (slot, pay) in j.payloads.iter().enumerate() {
+                if used[i][slot] || matches!(pay, Payload::CaseConst { .. }) {
+                    newidx.push(Some(next));
+                    next += 1;
+                } else {
+                    newidx.push(None);
+                    dropped = true;
+                }
+            }
+            if dropped {
+                removals.push((i, newidx));
+            }
+        }
+        if removals.is_empty() {
+            return;
+        }
+        for (i, newidx) in removals {
+            let old = std::mem::take(&mut p.joins[i].payloads);
+            p.joins[i].payloads = old
+                .into_iter()
+                .zip(&newidx)
+                .filter_map(|(pay, keep)| keep.map(|_| pay))
+                .collect();
+            renumber_step_slots(p, i, &newidx);
+        }
+    }
+}
+
+/// Renumber every reference to `step`'s payload slots after an elision
+/// (values, key parts, and linkers' `FromLink` arguments).
+fn renumber_step_slots(p: &mut LogicalPlan, step: usize, newidx: &[Option<u8>]) {
+    fn fix_val(v: &mut ValExpr, step: usize, newidx: &[Option<u8>]) {
+        match v {
+            ValExpr::Payload { step: s, slot } if *s as usize == step => {
+                if let Some(Some(n)) = newidx.get(*slot as usize) {
+                    *slot = *n;
+                }
+            }
+            ValExpr::Add(a, b) | ValExpr::Sub(a, b) | ValExpr::Mul(a, b) => {
+                fix_val(a, step, newidx);
+                fix_val(b, step, newidx);
+            }
+            _ => {}
+        }
+    }
+    fn fix_key(k: &mut KeyExpr, step: usize, newidx: &[Option<u8>]) {
+        match k {
+            KeyExpr::Payload { step: s, slot } if *s as usize == step => {
+                if let Some(Some(n)) = newidx.get(*slot as usize) {
+                    *slot = *n;
+                }
+            }
+            KeyExpr::Year(inner) => fix_key(inner, step, newidx),
+            KeyExpr::Pack { hi, lo, .. } => {
+                fix_key(hi, step, newidx);
+                fix_key(lo, step, newidx);
+            }
+            _ => {}
+        }
+    }
+    for c in &mut p.cmps {
+        fix_val(&mut c.lhs, step, newidx);
+        fix_val(&mut c.rhs, step, newidx);
+    }
+    for s in &mut p.slots {
+        fix_val(s, step, newidx);
+    }
+    fix_key(&mut p.key, step, newidx);
+    for j in &mut p.joins {
+        if j.link.as_ref().is_some_and(|l| l.step as usize == step) {
+            for pay in &mut j.payloads {
+                if let Payload::FromLink(k) = pay {
+                    if let Some(Some(n)) = newidx.get(*k as usize) {
+                        *k = *n;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn mark_val(v: &ValExpr, used: &mut [Vec<bool>]) {
+    match v {
+        ValExpr::Payload { step, slot } => {
+            if let Some(u) = used.get_mut(*step as usize).and_then(|s| s.get_mut(*slot as usize)) {
+                *u = true;
+            }
+        }
+        ValExpr::Add(a, b) | ValExpr::Sub(a, b) | ValExpr::Mul(a, b) => {
+            mark_val(a, used);
+            mark_val(b, used);
+        }
+        ValExpr::Const(_) | ValExpr::Col(_) => {}
+    }
+}
+
+fn mark_key(k: &KeyExpr, used: &mut [Vec<bool>]) {
+    match k {
+        KeyExpr::Payload { step, slot } => {
+            if let Some(u) = used.get_mut(*step as usize).and_then(|s| s.get_mut(*slot as usize)) {
+                *u = true;
+            }
+        }
+        KeyExpr::Year(inner) => mark_key(inner, used),
+        KeyExpr::Pack { hi, lo, .. } => {
+            mark_key(hi, used);
+            mark_key(lo, used);
+        }
+        KeyExpr::Const(_) | KeyExpr::Col(_) => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::column::date_to_days;
+    use crate::analytics::engine::plan::{
+        cmp, f64_lt, f64_range, i32_range, vcol, vconst, vmul, LinkRef,
+    };
+    use crate::analytics::queries::REGISTRY;
+    use crate::analytics::sql::{ast, bind};
+
+    fn sql_plan(text: &str) -> LogicalPlan {
+        bind::bind(&ast::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn q6_pipeline_reaches_the_registry_predicate() {
+        let p = optimize(&sql_plan(
+            "SELECT SUM(l_extendedprice * l_discount) FROM lineitem \
+             WHERE l_shipdate >= DATE '1994-01-01' AND l_shipdate < DATE '1995-01-01' \
+             AND l_discount >= 0.045 AND l_discount < 0.075 AND l_quantity < 24",
+        ));
+        assert!(p.cmps.is_empty(), "every compare pushed into the scan");
+        assert_eq!(
+            p.pred,
+            pand(vec![
+                i32_range("l_shipdate", date_to_days(1994, 1, 1), date_to_days(1995, 1, 1)),
+                f64_range("l_discount", 0.045, 0.075),
+                f64_lt("l_quantity", 24.0),
+            ])
+        );
+        assert_eq!(p.slots, vec![vmul(vcol("l_extendedprice"), vcol("l_discount"))]);
+    }
+
+    #[test]
+    fn folded_date_arithmetic_becomes_a_range() {
+        let p = optimize(&sql_plan(
+            "SELECT SUM(l_quantity) FROM lineitem \
+             WHERE l_shipdate >= DATE '1994-01-01' AND l_shipdate < DATE '1994-01-01' + 90",
+        ));
+        let d = date_to_days(1994, 1, 1);
+        assert_eq!(p.pred, i32_range("l_shipdate", d, d + 90));
+        assert!(p.cmps.is_empty());
+    }
+
+    #[test]
+    fn int_and_float_bound_conversions_are_exact() {
+        // x < 24.5 over an int column keeps 24, excludes 25.
+        assert_eq!(
+            int_leaf("l_linenumber", CmpOp::Lt, 24.5),
+            Some(i32_range("l_linenumber", i32::MIN, 25))
+        );
+        assert_eq!(
+            int_leaf("l_linenumber", CmpOp::Le, 24.0),
+            Some(i32_range("l_linenumber", i32::MIN, 25))
+        );
+        assert_eq!(
+            int_leaf("l_linenumber", CmpOp::Gt, 24.5),
+            Some(i32_range("l_linenumber", 25, i32::MAX))
+        );
+        assert_eq!(
+            int_leaf("l_linenumber", CmpOp::Eq, 2.5),
+            Some(i32_range("l_linenumber", 0, 0)),
+            "fractional equality over ints is the empty range"
+        );
+        // x <= k over floats admits exactly k and nothing above it.
+        let up = next_up(0.07);
+        assert!(up > 0.07 && (up - 0.07) < 1e-15);
+        assert_eq!(f64_leaf("l_tax", CmpOp::Le, 0.07), Some(f64_lt("l_tax", up)));
+        // Ge keeps the bound itself.
+        assert_eq!(
+            f64_leaf("l_quantity", CmpOp::Ge, 10.0),
+            Some(f64_range("l_quantity", 10.0, f64::INFINITY))
+        );
+    }
+
+    #[test]
+    fn payload_compares_push_into_dim_filters() {
+        let p = optimize(&sql_plan(
+            "SELECT SUM(l_extendedprice) FROM lineitem \
+             JOIN part ON p_partkey = l_partkey WHERE p_size < 15",
+        ));
+        assert!(p.cmps.is_empty(), "the payload compare became a dim filter");
+        assert_eq!(p.joins[0].filter, i32_range("p_size", i32::MIN, 15));
+        assert!(p.joins[0].payloads.is_empty(), "the orphaned payload was elided");
+        assert!(p.joins[0].dense, "filtered dense steps stay dense");
+    }
+
+    #[test]
+    fn registry_plans_are_fixed_points_up_to_join_order() {
+        use crate::analytics::engine::plan::PlanParams;
+        for def in &REGISTRY {
+            let plan = (def.logical)(&PlanParams::default()).unwrap();
+            let opt = optimize(&plan);
+            opt.check_wire_bounds()
+                .unwrap_or_else(|e| panic!("{} broke wire bounds: {e}", def.name));
+            if matches!(def.name, "q5" | "q9") {
+                // Join order changes (smaller builds first); same tables.
+                let mut a: Vec<_> = plan.joins.iter().map(|j| j.table).collect();
+                let mut b: Vec<_> = opt.joins.iter().map(|j| j.table).collect();
+                a.sort_by_key(|t| t.name());
+                b.sort_by_key(|t| t.name());
+                assert_eq!(a, b, "{} must keep its join set", def.name);
+                assert_eq!(plan.pred, opt.pred, "{} scan predicate must round-trip", def.name);
+            } else {
+                assert_eq!(plan, opt, "{} must be a fixed point", def.name);
+            }
+        }
+    }
+
+    #[test]
+    fn reordering_remaps_link_and_payload_references() {
+        let p = sql_plan(
+            "SELECT nation_name(s_nationkey), SUM(l_extendedprice * (1 - l_discount)) \
+             FROM lineitem \
+             JOIN customer ON c_custkey = o_custkey \
+             JOIN orders ON o_orderkey = l_orderkey \
+             JOIN supplier ON s_suppkey = l_suppkey \
+             WHERE c_nationkey = s_nationkey \
+               AND o_orderdate >= DATE '1994-01-01' AND o_orderdate < DATE '1995-01-01' \
+               AND region_of(c_nationkey) = 'ASIA' \
+             GROUP BY nation_name(s_nationkey) ORDER BY 2 DESC",
+        );
+        let opt = optimize(&p);
+        // Supplier's build (10k rows) beats customer's (150k): it moves
+        // first, and the customer←orders link stays target-before-linker.
+        assert_eq!(opt.joins[0].table, TableRef::Supplier);
+        let cust = opt.joins.iter().position(|j| j.table == TableRef::Customer).unwrap();
+        let ord = opt.joins.iter().position(|j| j.table == TableRef::Orders).unwrap();
+        assert!(cust < ord);
+        assert_eq!(opt.joins[ord].link, Some(LinkRef { step: cust as u8, via: "o_custkey".into() }));
+        // Every payload reference must resolve in-bounds post-remap.
+        opt.check_wire_bounds().unwrap();
+    }
+
+    #[test]
+    fn merge_anchors_at_first_occurrence_and_drops_true() {
+        let merged = merge_ranges(pand(vec![
+            PredExpr::True,
+            i32_range("a", 0, 100),
+            f64_lt("x", 5.0),
+            i32_range("a", 10, 200),
+            f64_range("x", 1.0, f64::INFINITY),
+        ]));
+        assert_eq!(
+            merged,
+            pand(vec![i32_range("a", 10, 100), f64_range("x", 1.0, 5.0)])
+        );
+        assert_eq!(merge_ranges(PredExpr::True), PredExpr::True);
+        assert_eq!(
+            merge_ranges(pand(vec![PredExpr::True, f64_lt("x", 2.0)])),
+            f64_lt("x", 2.0),
+            "single survivor unwraps"
+        );
+    }
+
+    #[test]
+    fn folding_only_touches_constant_pairs() {
+        let mut v = vmul(vcol("l_quantity"), vconst(2.0));
+        fold_val(&mut v);
+        assert_eq!(v, vmul(vcol("l_quantity"), vconst(2.0)));
+        let mut v = cmp(
+            vcol("l_shipdate"),
+            CmpOp::Lt,
+            crate::analytics::engine::plan::vadd(vconst(100.0), vconst(28.0)),
+        );
+        fold_val(&mut v.rhs);
+        assert_eq!(v.rhs, vconst(128.0));
+    }
+}

@@ -1388,6 +1388,14 @@ impl QueryService {
         self.submit_plan(db, &spec)
     }
 
+    /// Submit an ad-hoc SQL query: parse, bind, and optimize it into a
+    /// [`LogicalPlan`], then hand it to [`QueryService::submit_plan`].
+    /// The workers see only the encoded IR — SQL never crosses the
+    /// fabric.
+    pub fn submit_sql(&self, db: &Arc<TpchDb>, sql: &str) -> Result<QueryId> {
+        self.submit_plan(db, &crate::analytics::sql::plan_sql(sql)?)
+    }
+
     /// Submit a logical plan: attach the input tables, place the worker
     /// tasks on cluster nodes, and cast the PlanFragment (carrying the
     /// **encoded plan** — workers compile it; no registry is consulted)

@@ -81,6 +81,98 @@ impl CostModel {
     }
 }
 
+// ------------------------------------------ plan cardinality estimates
+//
+// A second, unrelated-to-the-paper use of this module: coarse
+// cardinality estimates over the analytics plan IR. The SQL binder
+// orders join steps by estimated build size, and `explain` prints the
+// numbers. Selectivities are fixed per leaf shape (no data statistics
+// are consulted) — good enough to rank hash-build sides, useless for
+// anything finer, and deliberately deterministic so plans never depend
+// on the data they run over.
+
+use crate::analytics::engine::plan::{LogicalPlan, PredExpr, StrMatch, TableRef};
+
+/// TPC-H base cardinality of a table at scale factor 1.
+pub fn table_base_rows(t: TableRef) -> f64 {
+    match t {
+        TableRef::Lineitem => 6_000_000.0,
+        TableRef::Orders => 1_500_000.0,
+        TableRef::Partsupp => 800_000.0,
+        TableRef::Part => 200_000.0,
+        TableRef::Customer => 150_000.0,
+        TableRef::Supplier => 10_000.0,
+    }
+}
+
+/// Fraction of rows a predicate tree is assumed to keep.
+pub fn pred_selectivity(p: &PredExpr) -> f64 {
+    match p {
+        PredExpr::True => 1.0,
+        PredExpr::I32Range { .. } | PredExpr::F64Range { .. } => 0.3,
+        PredExpr::I32ColLt { .. } => 0.5,
+        PredExpr::F64Lt { .. } => 0.4,
+        PredExpr::I32InSet { values, .. } => (0.05 * values.len() as f64).min(0.6),
+        PredExpr::Str { m, .. } => match m {
+            StrMatch::Eq(_) => 0.1,
+            StrMatch::Prefix(_) => 0.15,
+            StrMatch::Contains(_) => 0.5,
+            StrMatch::OneOf(vs) => (0.1 * vs.len() as f64).min(0.6),
+        },
+        PredExpr::And(ps) => ps.iter().map(|p| pred_selectivity(p)).product::<f64>().max(0.001),
+        PredExpr::Or(ps) => ps.iter().map(|p| pred_selectivity(p)).sum::<f64>().min(1.0),
+    }
+}
+
+/// Estimated build side of one join step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepEstimate {
+    pub table: TableRef,
+    /// Dimension rows at this scale factor, before the filter.
+    pub base_rows: f64,
+    /// Assumed fraction surviving the step's dimension filter.
+    pub selectivity: f64,
+    /// `base_rows × selectivity` — what the hash build materializes.
+    pub build_rows: f64,
+}
+
+/// Coarse cardinalities of a whole plan at scale factor `sf`.
+#[derive(Clone, Debug)]
+pub struct PlanEstimate {
+    pub scan_rows: f64,
+    pub scan_selectivity: f64,
+    pub steps: Vec<StepEstimate>,
+    /// Rows reaching the aggregate after scan pred, join filters, and
+    /// compare conjuncts (each compare assumed to halve).
+    pub agg_rows: f64,
+}
+
+/// Estimate a plan's cardinalities (see [`PlanEstimate`]).
+pub fn estimate(plan: &LogicalPlan, sf: f64) -> PlanEstimate {
+    let scan_rows = table_base_rows(plan.scan) * sf;
+    let scan_selectivity = pred_selectivity(&plan.pred);
+    let steps: Vec<StepEstimate> = plan
+        .joins
+        .iter()
+        .map(|j| {
+            let base_rows = table_base_rows(j.table) * sf;
+            let selectivity = pred_selectivity(&j.filter);
+            StepEstimate {
+                table: j.table,
+                base_rows,
+                selectivity,
+                build_rows: base_rows * selectivity,
+            }
+        })
+        .collect();
+    let mut agg_rows = scan_rows * scan_selectivity;
+    for s in &steps {
+        agg_rows *= s.selectivity;
+    }
+    agg_rows *= 0.5f64.powi(plan.cmps.len() as i32);
+    PlanEstimate { scan_rows, scan_selectivity, steps, agg_rows }
+}
+
 /// A named (φ, μ) scenario for sweep tables.
 #[derive(Clone, Copy, Debug)]
 pub struct Scenario {
@@ -206,6 +298,30 @@ mod tests {
     fn fabric_zero_reduces_to_eq1() {
         let m = CostModel::host_only().with_pcie_share(0.75);
         assert!(close(m.cost_ratio_with_fabric(2.0, 0.0), m.cost_ratio(2.0), 1e-12));
+    }
+
+    #[test]
+    fn plan_estimates_rank_build_sides() {
+        use crate::analytics::engine::plan::{i32_range, str_eq};
+        // A filtered customer build must rank below an unfiltered
+        // orders build, and And tightens selectivity multiplicatively.
+        assert!(table_base_rows(TableRef::Orders) > table_base_rows(TableRef::Customer));
+        let filtered = str_eq("c_mktsegment", "BUILDING");
+        assert!(pred_selectivity(&filtered) < pred_selectivity(&PredExpr::True));
+        let both = crate::analytics::engine::plan::pand(vec![
+            str_eq("c_mktsegment", "BUILDING"),
+            i32_range("c_nationkey", 0, 5),
+        ]);
+        assert!(pred_selectivity(&both) < pred_selectivity(&filtered));
+        // Estimates scale linearly with sf and follow the plan shape.
+        let q3 = crate::analytics::queries::build("q3", &Default::default()).unwrap();
+        let e1 = estimate(&q3, 1.0);
+        let e2 = estimate(&q3, 2.0);
+        assert!(close(e2.scan_rows, 2.0 * e1.scan_rows, 1e-6));
+        assert_eq!(e1.steps.len(), q3.joins.len());
+        for s in &e1.steps {
+            assert!(close(s.build_rows, s.base_rows * s.selectivity, 1e-9));
+        }
     }
 
     #[test]

@@ -31,6 +31,8 @@ fn main() {
         .sub("cost", "cost/energy model scenarios (§4, §5.2, §5.3)")
         .sub("gnn", "GNN input-pipeline stall analysis (§5.3)")
         .sub("tpch", "run TPC-H queries on the local engine")
+        .sub("sql", "plan and run an ad-hoc SQL query (serial/morsel/dist)")
+        .sub("explain", "show a SQL query's optimized plan, prune intervals, and costs")
         .sub("dist", "run a distributed query on a simulated cluster")
         .sub("train", "real AOT-compiled training loop via PJRT")
         .opt("sf", Some("0.01"), "TPC-H scale factor")
@@ -49,6 +51,8 @@ fn main() {
         .opt("kill-worker", None, "kill worker W at a phase: W, W@mid-map, or W@mid-reduce")
         .flag("lovelock", "use a Lovelock (E2000) cluster for dist")
         .flag("serial", "run tpch single-threaded instead of morsel-driven")
+        .flag("dist", "run sql on a simulated cluster instead of locally")
+        .flag("no-optimize", "run/show the bound plan without optimizer rewrites")
         .flag("chunked", "use chunked-stream checkpointing");
     let args = match cmd.parse(std::env::args().skip(1)) {
         Ok(a) => a,
@@ -65,6 +69,8 @@ fn main() {
         Some("cost") => cmd_cost(),
         Some("gnn") => cmd_gnn(&args),
         Some("tpch") => cmd_tpch(&args),
+        Some("sql") => cmd_sql(&args),
+        Some("explain") => cmd_explain(&args),
         Some("dist") => cmd_dist(&args),
         Some("train") => cmd_train(&args),
         _ => {
@@ -284,6 +290,93 @@ fn cmd_tpch(args: &lovelock::cli::Args) -> lovelock::Result<()> {
             None => println!("{q}: unknown query"),
         }
     }
+    Ok(())
+}
+
+/// The SQL text of an `sql`/`explain` invocation: the positional
+/// arguments joined, so both `sql "SELECT ..."` and unquoted
+/// multi-token forms work.
+fn sql_text(args: &lovelock::cli::Args) -> lovelock::Result<String> {
+    let text = args.positional.join(" ");
+    if text.trim().is_empty() {
+        return Err(lovelock::err!("expected a SQL query, e.g. sql \"SELECT ... FROM lineitem\""));
+    }
+    Ok(text)
+}
+
+fn fmt_row(row: &[queries::Value]) -> String {
+    row.iter()
+        .map(|v| match v {
+            queries::Value::Int(i) => i.to_string(),
+            queries::Value::Float(f) => format!("{f:.4}"),
+            queries::Value::Str(s) => s.clone(),
+        })
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+fn cmd_sql(args: &lovelock::cli::Args) -> lovelock::Result<()> {
+    let text = sql_text(args)?;
+    let plan = if args.get_flag("no-optimize") {
+        lovelock::analytics::sql::plan_sql_unoptimized(&text)?
+    } else {
+        lovelock::analytics::sql::plan_sql(&text)?
+    };
+    let sf = args.get_f64("sf", 0.01);
+    let seed = args.get_u64("seed", 42);
+    let threads = args.get_usize("threads", 0);
+    let morsel_rows = args.get_usize("morsel-rows", DEFAULT_MORSEL_ROWS);
+    let t = std::time::Instant::now();
+    if args.get_flag("dist") {
+        let workers = args.get_usize("workers", 8);
+        let db = Arc::new(TpchDb::generate(TpchConfig::new(sf, seed)));
+        let cluster =
+            ClusterSpec::traditional(workers, platform::n2d_milan(), Role::LiteCompute);
+        let svc = QueryService::with_config(
+            cluster,
+            ServiceConfig { workers: 0, threads, morsel_rows, ..ServiceConfig::default() },
+        );
+        let id = svc.submit_plan(&db, &plan)?;
+        let (rows, r) = svc.wait(id)?;
+        for row in &rows {
+            println!("{}", fmt_row(row));
+        }
+        println!(
+            "{} rows in {:.1} ms host wall (distributed over {workers} workers, {} morsels pruned)",
+            rows.len(),
+            t.elapsed().as_secs_f64() * 1e3,
+            r.morsels_pruned
+        );
+        return Ok(());
+    }
+    let db = TpchDb::generate(TpchConfig::new(sf, seed));
+    let out = if args.get_flag("serial") {
+        engine::try_run_serial(&db, &plan)?
+    } else {
+        engine::try_run_parallel(&db, &plan, threads, morsel_rows)?
+    };
+    for row in &out.rows {
+        println!("{}", fmt_row(row));
+    }
+    println!(
+        "{} rows in {:.1} ms ({} MB scanned, {} morsels pruned, {})",
+        out.rows.len(),
+        t.elapsed().as_secs_f64() * 1e3,
+        out.stats.bytes_scanned / 1_000_000,
+        out.stats.morsels_pruned,
+        if args.get_flag("serial") { "serial".to_string() } else { format!("morsels of {morsel_rows}") }
+    );
+    Ok(())
+}
+
+fn cmd_explain(args: &lovelock::cli::Args) -> lovelock::Result<()> {
+    let text = sql_text(args)?;
+    if args.get_flag("no-optimize") {
+        let plan = lovelock::analytics::sql::plan_sql_unoptimized(&text)?;
+        println!("{}", plan.pretty());
+        return Ok(());
+    }
+    print!("{}", lovelock::analytics::sql::explain_report(&text)?);
     Ok(())
 }
 

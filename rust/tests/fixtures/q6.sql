@@ -1,0 +1,7 @@
+SELECT SUM(l_extendedprice * l_discount)
+FROM lineitem
+WHERE l_shipdate >= DATE '1994-01-01'
+  AND l_shipdate < DATE '1995-01-01'
+  AND l_discount >= 0.045
+  AND l_discount < 0.075
+  AND l_quantity < 24
