@@ -65,6 +65,19 @@ if [ "${1:-}" != "quick" ]; then
     cargo test --release -q --test alloc_regression
 fi
 
+# Overload gate: admission control, per-query deadlines, and fair
+# scheduling composed with chaos (DESIGN.md §3g). The acceptance test
+# drives a 10x closed loop through a mid-map worker kill and requires
+# explicit shedding, a held buffered-bytes watermark, and serial-
+# identical rows (or typed timeouts) for everything admitted. The churn
+# test is its own binary on purpose: a process-wide live-byte allocator
+# pins the heap high-water mark across thousands of fresh-session
+# submit/wait/retire cycles.
+echo "==> overload suite (admission / deadlines / fairness + kill)"
+cargo test -q --test overload
+echo "==> session-churn heap high-water gate"
+cargo test -q --test service_churn
+
 # Zone-map pruning gate: pruned and unpruned compilations of randomized
 # window predicates must produce bit-identical partials (the property
 # test), and all three execution paths must agree on every registry
@@ -102,9 +115,11 @@ if [ "${1:-}" != "quick" ]; then
     # (LOVELOCK_BENCH_QUICK), so a bench that panics (or drifts from a
     # changed API) fails CI — timings themselves are not checked. The SF
     # overrides apply to hotpath (the only bench that generates large
-    # data); its JSON artifact is redirected so the smoke run's tiny-SF
-    # rows never clobber a real BENCH_hotpath.json measurement.
-    for bench in table1 fig3 fig4 table2 cost gnn rpc hotpath; do
+    # data); JSON artifacts are redirected so the smoke run's tiny-SF
+    # rows never clobber a real BENCH_hotpath.json / BENCH_service.json
+    # measurement (loadgen honors LOVELOCK_BENCH_QUICK with short
+    # windows of its own).
+    for bench in table1 fig3 fig4 table2 cost gnn rpc hotpath loadgen; do
         echo "==> bench smoke: $bench"
         LOVELOCK_BENCH_QUICK=1 LOVELOCK_BENCH_SF=0.004 LOVELOCK_BENCH_SF_BIG=0.01 \
             LOVELOCK_BENCH_JSON=/tmp/BENCH_hotpath_smoke.json \

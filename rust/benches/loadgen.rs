@@ -1,0 +1,146 @@
+//! Bench `loadgen` — the QueryService under offered overload (DESIGN.md
+//! §3g). Three scenarios on the same 4-worker cluster:
+//!
+//! 1. closed loop at a sane multiprogramming level (the baseline the
+//!    overload rows are read against);
+//! 2. closed loop at 10x that level with the admission gates armed —
+//!    the service must shed explicitly and keep p99 for what it admits;
+//! 3. an open-loop Poisson stream with admission + per-query deadlines —
+//!    overload shows up as shed rate and bounded leader buffering,
+//!    never as queue growth.
+//!
+//! Writes `BENCH_service.json` (redirect with `LOVELOCK_BENCH_JSON`;
+//! `LOVELOCK_BENCH_QUICK=1` shrinks scale factor and windows for CI
+//! smoke runs). Numbers here are host-wall measurements of the real
+//! message-driven service, not simulator projections.
+
+use lovelock::analytics::{TpchConfig, TpchDb};
+use lovelock::benchkit::Bench;
+use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::coordinator::loadgen::{run_load, LoadMode, LoadSpec};
+use lovelock::coordinator::{AdmissionConfig, QueryService, ServiceConfig};
+use lovelock::platform::n2d_milan;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::var("LOVELOCK_BENCH_QUICK").is_ok();
+    let mut b = Bench::new("QueryService under overload (§3g load driver)");
+    let sf = if quick { 0.001 } else { 0.01 };
+    let window = Duration::from_millis(if quick { 300 } else { 2000 });
+    let db = Arc::new(TpchDb::generate(TpchConfig::new(sf, 42)));
+    let cluster = || ClusterSpec::traditional(4, n2d_milan(), Role::LiteCompute);
+    let base_conc = 4;
+
+    // 1. Baseline: closed loop the service comfortably sustains.
+    let svc = QueryService::with_config(
+        cluster(),
+        ServiceConfig { threads: 2, ..ServiceConfig::default() },
+    );
+    let rep = run_load(
+        &svc,
+        &db,
+        &LoadSpec {
+            mode: LoadMode::Closed { concurrency: base_conc },
+            duration: window,
+            ..LoadSpec::default()
+        },
+    )
+    .expect("baseline load run");
+    println!("baseline: {}", rep.summary());
+    b.row("closed 1x qps", format!("{:.1}", rep.qps), rep.summary());
+    b.row(
+        "closed 1x p50/p99",
+        format!("{:.2}/{:.2} ms", rep.p50_ms, rep.p99_ms),
+        format!("{} completed, {} sessions", rep.completed, 1000),
+    );
+    let base_qps = rep.qps;
+
+    // 2. 10x closed-loop overload, admission armed: in-flight gate a
+    // little over the baseline level, so most of the extra offered load
+    // is shed at the door instead of queued.
+    let svc = QueryService::with_config(
+        cluster(),
+        ServiceConfig {
+            threads: 2,
+            max_dispatched: base_conc,
+            admission: AdmissionConfig {
+                max_in_flight: base_conc * 2,
+                max_buffered_bytes: 64 << 20,
+                ..Default::default()
+            },
+            ..ServiceConfig::default()
+        },
+    );
+    let rep = run_load(
+        &svc,
+        &db,
+        &LoadSpec {
+            mode: LoadMode::Closed { concurrency: base_conc * 10 },
+            duration: window,
+            ..LoadSpec::default()
+        },
+    )
+    .expect("10x overload run");
+    println!("closed 10x: {}", rep.summary());
+    b.row(
+        "closed 10x qps",
+        format!("{:.1}", rep.qps),
+        format!("vs {base_qps:.1} baseline — goodput must not collapse"),
+    );
+    b.row("closed 10x p99", format!("{:.2} ms", rep.p99_ms), "of admitted queries");
+    b.row(
+        "closed 10x shed rate",
+        format!("{:.1}%", rep.shed_rate * 100.0),
+        format!("{} shed of {} offered, all explicit", rep.shed, rep.submitted),
+    );
+    b.row(
+        "closed 10x peak leader buffer",
+        format!("{} KB", rep.peak_buffered_bytes / 1000),
+        "bounded by the buffered-bytes admission gate",
+    );
+
+    // 3. Open-loop Poisson stream at ~3x the baseline completion rate,
+    // with deadlines: arrivals don't slow down for the service, so the
+    // gap between offered and sustained shows up as shed + timeouts.
+    let svc = QueryService::with_config(
+        cluster(),
+        ServiceConfig {
+            threads: 2,
+            max_dispatched: base_conc,
+            admission: AdmissionConfig {
+                max_in_flight: base_conc * 2,
+                max_buffered_bytes: 64 << 20,
+                ..Default::default()
+            },
+            ..ServiceConfig::default()
+        },
+    );
+    let rep = run_load(
+        &svc,
+        &db,
+        &LoadSpec {
+            mode: LoadMode::Open { qps: (base_qps * 3.0).max(20.0) },
+            duration: window,
+            deadline: Some(Duration::from_secs(5)),
+            ..LoadSpec::default()
+        },
+    )
+    .expect("open-loop run");
+    println!("open 3x: {}", rep.summary());
+    b.row(
+        "open 3x shed rate",
+        format!("{:.1}%", rep.shed_rate * 100.0),
+        format!("{} shed, {} timeout of {} offered", rep.shed, rep.timeouts, rep.submitted),
+    );
+    b.row("open 3x p99", format!("{:.2} ms", rep.p99_ms), "of admitted queries");
+    b.row(
+        "open 3x peak leader buffer",
+        format!("{} KB", rep.peak_buffered_bytes / 1000),
+        "open-loop overload must not grow leader memory",
+    );
+
+    let json_path = std::env::var("LOVELOCK_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_service.json".to_string());
+    b.finish_json(&json_path);
+}

@@ -6,6 +6,7 @@
 //! distributed executor holds one credit per outstanding task per node.
 
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 struct State {
     available: usize,
@@ -52,6 +53,38 @@ impl Backpressure {
         }
     }
 
+    /// Block until a credit is available, but never past `dur`. Returns
+    /// `false` on timeout or if the gate closes while waiting. The
+    /// leader's decode path uses this instead of an unbounded `acquire`:
+    /// if a credit is ever lost (a `release` skipped by a bug or a
+    /// poisoned path), the completing query surfaces a typed error after
+    /// `dur` instead of wedging `wait()` forever.
+    pub fn acquire_timeout(&self, dur: Duration) -> bool {
+        let deadline = Instant::now() + dur;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.available > 0 {
+                st.available -= 1;
+                let in_flight = st.capacity - st.available;
+                st.max_in_flight = st.max_in_flight.max(in_flight);
+                return true;
+            }
+            let now = Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+            else {
+                return false;
+            };
+            let (g, timeout) = self.cv.wait_timeout(st, left).unwrap();
+            st = g;
+            if timeout.timed_out() && st.available == 0 {
+                return false;
+            }
+        }
+    }
+
     /// Non-blocking acquire.
     pub fn try_acquire(&self) -> bool {
         let mut st = self.state.lock().unwrap();
@@ -85,6 +118,18 @@ impl Backpressure {
 
     pub fn max_in_flight(&self) -> usize {
         self.state.lock().unwrap().max_in_flight
+    }
+
+    /// Total credits this gate was built with.
+    pub fn capacity(&self) -> usize {
+        self.state.lock().unwrap().capacity
+    }
+
+    /// Credits currently free (capacity − in flight). The admission
+    /// controller sheds when this drops under its floor — a saturated
+    /// decode gate means the leader is already at its concurrency limit.
+    pub fn free(&self) -> usize {
+        self.state.lock().unwrap().available
     }
 
     /// True when every credit is back home — the invariant each query
@@ -181,5 +226,64 @@ mod tests {
     #[should_panic]
     fn release_without_acquire_panics() {
         Backpressure::new(1).release();
+    }
+
+    #[test]
+    fn acquire_timeout_succeeds_when_credit_free() {
+        let bp = Backpressure::new(1);
+        assert!(bp.acquire_timeout(std::time::Duration::from_millis(1)));
+        assert_eq!(bp.in_flight(), 1);
+        bp.release();
+    }
+
+    #[test]
+    fn acquire_timeout_times_out_on_lost_release() {
+        // Simulate a lost release: the only credit is held and never
+        // returned. The bounded acquire must give up, not wedge.
+        let bp = Backpressure::new(1);
+        assert!(bp.acquire());
+        let t = std::time::Instant::now();
+        assert!(!bp.acquire_timeout(std::time::Duration::from_millis(30)));
+        assert!(t.elapsed() >= std::time::Duration::from_millis(30));
+        // The gate is unharmed: returning the credit re-admits work.
+        bp.release();
+        assert!(bp.acquire_timeout(std::time::Duration::from_millis(1)));
+        bp.release();
+        assert!(bp.balanced());
+    }
+
+    #[test]
+    fn acquire_timeout_woken_by_release() {
+        let bp = Arc::new(Backpressure::new(1));
+        assert!(bp.acquire());
+        let bp2 = bp.clone();
+        let t = std::thread::spawn(move || bp2.acquire_timeout(std::time::Duration::from_secs(10)));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        bp.release();
+        assert!(t.join().unwrap(), "a release while waiting must hand over the credit");
+        bp.release();
+    }
+
+    #[test]
+    fn acquire_timeout_unblocked_by_close() {
+        let bp = Arc::new(Backpressure::new(1));
+        assert!(bp.acquire());
+        let bp2 = bp.clone();
+        let t = std::thread::spawn(move || bp2.acquire_timeout(std::time::Duration::from_secs(10)));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        bp.close();
+        assert!(!t.join().unwrap(), "close while waiting must return false, not time out");
+    }
+
+    #[test]
+    fn capacity_and_free_track_the_gate() {
+        let bp = Backpressure::new(3);
+        assert_eq!(bp.capacity(), 3);
+        assert_eq!(bp.free(), 3);
+        assert!(bp.acquire());
+        assert_eq!(bp.free(), 2);
+        assert_eq!(bp.capacity(), 3);
+        bp.release();
+        assert_eq!(bp.free(), 3);
     }
 }

@@ -1,0 +1,417 @@
+//! Load driver for the overload-hardened [`QueryService`] — the
+//! measurement half of DESIGN.md §3g's overload model.
+//!
+//! Two canonical load shapes, both driven from one pacing loop:
+//!
+//! * **closed loop** — a fixed multiprogramming level: up to
+//!   `concurrency` requests outstanding, each completion (or shed)
+//!   immediately refilled. Models a pool of synchronous clients; the
+//!   offered load self-throttles to what the service sustains, so the
+//!   interesting numbers are qps and the latency percentiles.
+//! * **open loop** — arrivals are a seeded Poisson process at `qps`
+//!   regardless of completions. Models the internet: the service does
+//!   *not* get to slow the clients down, so overload shows up as
+//!   explicit shedding (never as unbounded buffering) and the
+//!   interesting numbers are the shed rate and the peak of the leader's
+//!   buffered-bytes gauge.
+//!
+//! The query mix is Zipf-ranked over [`plan_mix`] — a few parameterized
+//! `q6` variants at the hot head (cheap, high-rate point lookups in
+//! spirit) with the full TPC-H registry in the tail (q18 and friends as
+//! the heavy stragglers) — and every submission carries a session key
+//! drawn from `sessions` distinct tenants, exercising the service's
+//! deficit-round-robin fairness at realistic tenant counts.
+//!
+//! One driver thread paces thousands of outstanding queries: `submit`
+//! is a non-blocking cast and `poll` a non-blocking snapshot, so the
+//! loop interleaves submission with a completion sweep and never holds
+//! a thread per in-flight query. Determinism: everything random (mix
+//! rank, session key, interarrival gap) comes from one seeded
+//! [`Pcg64`], so a run is replayable from `(spec, seed)`.
+
+use crate::analytics::engine::PlanParams;
+use crate::analytics::{queries, TpchDb, QUERY_NAMES};
+use crate::analytics::engine::LogicalPlan;
+use crate::coordinator::protocol::QueryId;
+use crate::coordinator::service::{
+    FailCause, QueryService, QueryStatus, SubmitOpts, Submission,
+};
+use crate::error::Result;
+use crate::prng::Pcg64;
+use std::time::{Duration, Instant};
+
+/// How load is offered (see the module docs for the two shapes).
+#[derive(Clone, Copy, Debug)]
+pub enum LoadMode {
+    /// Fixed multiprogramming level: refill to `concurrency` outstanding.
+    Closed { concurrency: usize },
+    /// Seeded Poisson arrivals at `qps`, independent of completions.
+    Open { qps: f64 },
+}
+
+/// One load-run recipe. `Default` is a 1-second closed loop at
+/// concurrency 8 over 1000 sessions with mild Zipf skew.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    pub mode: LoadMode,
+    /// Submission window. After it closes the driver stops offering
+    /// load and drains what is outstanding (bounded by `drain`).
+    pub duration: Duration,
+    /// Hard cap on the post-window drain before outstanding queries are
+    /// cancelled (counted separately, not as errors).
+    pub drain: Duration,
+    /// Distinct session keys the submissions are spread over.
+    pub sessions: u64,
+    /// Zipf skew of the query mix (0 = uniform).
+    pub zipf_s: f64,
+    /// Per-query deadline attached to every submission (None = none).
+    pub deadline: Option<Duration>,
+    /// PRNG seed: same spec + seed → same offered load.
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        Self {
+            mode: LoadMode::Closed { concurrency: 8 },
+            duration: Duration::from_secs(1),
+            drain: Duration::from_secs(30),
+            sessions: 1000,
+            zipf_s: 1.1,
+            deadline: None,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// What a load run observed. Counts partition `submitted` exactly:
+/// `submitted = completed + shed + timeouts + errors + cancelled`.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Rejected at admission (explicit load shedding).
+    pub shed: u64,
+    /// Expired to `Failed(Timeout)` — a typed deadline, not an error.
+    pub timeouts: u64,
+    pub errors: u64,
+    /// Still outstanding when the drain cap hit; cancelled by the driver.
+    pub cancelled: u64,
+    /// Completed-query throughput over the whole run (incl. drain).
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// shed / submitted.
+    pub shed_rate: f64,
+    /// High water of the leader's buffered partial bytes over the run.
+    pub peak_buffered_bytes: u64,
+    pub elapsed: Duration,
+}
+
+impl LoadReport {
+    /// One-line human rendering (the CLI and bench both print this).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} submitted in {:.2}s: {} ok ({:.1} qps), {} shed ({:.1}%), \
+             {} timeout, {} error, {} cancelled; p50 {:.2} ms p99 {:.2} ms; \
+             peak leader buffer {} KB",
+            self.submitted,
+            self.elapsed.as_secs_f64(),
+            self.completed,
+            self.qps,
+            self.shed,
+            self.shed_rate * 100.0,
+            self.timeouts,
+            self.errors,
+            self.cancelled,
+            self.p50_ms,
+            self.p99_ms,
+            self.peak_buffered_bytes / 1000,
+        )
+    }
+}
+
+/// The Zipf-ranked plan mix: four parameterized `q6` variants (widening
+/// quantity cuts — same plan shape, different selectivity) at the hot
+/// head, then the whole registry at default parameters. Rank 0 is the
+/// hottest; Zipf skew makes the cheap variants dominate and the heavy
+/// registry tail (q18, q9, …) the stragglers — the shape that makes
+/// fair scheduling and admission interesting.
+pub fn plan_mix() -> Result<Vec<LogicalPlan>> {
+    let mut plans = Vec::new();
+    for (i, qty) in [24.0f64, 30.0, 36.0, 45.0].iter().enumerate() {
+        let mut p = PlanParams::new();
+        p.set("qty-lt", &format!("{qty}"));
+        let mut plan = queries::build("q6", &p)?;
+        // Distinct names keep traces and reports tellable apart; the
+        // service treats them as ad-hoc IR either way.
+        plan.name = format!("q6-load{i}");
+        plans.push(plan);
+    }
+    for name in QUERY_NAMES {
+        plans.push(queries::build(name, &PlanParams::new())?);
+    }
+    Ok(plans)
+}
+
+/// Sorted-percentile helper (same interpolation as benchkit's stats).
+fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Drive `svc` with the offered load of `spec` and report what happened.
+/// The driver never buffers on the service's behalf: a shed submission
+/// is retired immediately, a completion is retired as soon as its
+/// latency is recorded, so a long run holds O(outstanding) state.
+pub fn run_load(
+    svc: &QueryService,
+    db: &std::sync::Arc<TpchDb>,
+    spec: &LoadSpec,
+) -> Result<LoadReport> {
+    let plans = plan_mix()?;
+    let mut rng = Pcg64::seed_from_u64(spec.seed);
+    let sessions = spec.sessions.max(1);
+    let mut rep = LoadReport::default();
+    let mut inflight: Vec<(QueryId, Instant)> = Vec::new();
+    let mut lat_ms: Vec<f64> = Vec::new();
+    let t0 = Instant::now();
+    let mut next_arrival = t0;
+    loop {
+        // 1. Offer load while the window is open.
+        let offering = t0.elapsed() < spec.duration;
+        if offering {
+            match spec.mode {
+                LoadMode::Closed { concurrency } => {
+                    while inflight.len() < concurrency.max(1) {
+                        let admitted = submit_one(
+                            svc, db, &plans, &mut rng, sessions, spec, &mut rep, &mut inflight,
+                        )?;
+                        if !admitted {
+                            break; // gates closed: retry next sweep, not in a hot loop
+                        }
+                    }
+                }
+                LoadMode::Open { qps } => {
+                    let gap = 1.0 / qps.max(1e-3);
+                    while Instant::now() >= next_arrival && t0.elapsed() < spec.duration {
+                        // Admitted or shed, the arrival happened: open
+                        // loops never retry, the next arrival is already
+                        // scheduled.
+                        let _ = submit_one(
+                            svc, db, &plans, &mut rng, sessions, spec, &mut rep, &mut inflight,
+                        )?;
+                        next_arrival += Duration::from_secs_f64(rng.gen_exp(1.0 / gap));
+                        // Don't let a stall turn into an unbounded
+                        // catch-up burst: drop any backlog of virtual
+                        // arrivals older than 50ms.
+                        let behind = Instant::now().saturating_duration_since(next_arrival);
+                        if behind > Duration::from_millis(50) {
+                            next_arrival = Instant::now();
+                        }
+                    }
+                }
+            }
+        }
+        // 2. Completion sweep.
+        let mut i = 0;
+        while i < inflight.len() {
+            let (id, submitted_at) = inflight[i];
+            let terminal = match svc.poll(id) {
+                QueryStatus::Done => {
+                    lat_ms.push(submitted_at.elapsed().as_secs_f64() * 1e3);
+                    rep.completed += 1;
+                    true
+                }
+                QueryStatus::Failed(FailCause::Timeout) => {
+                    rep.timeouts += 1;
+                    true
+                }
+                QueryStatus::Failed(FailCause::Error(_)) => {
+                    rep.errors += 1;
+                    true
+                }
+                // The driver never cancels mid-run and ids are retired
+                // only after this sweep saw them terminal — these are
+                // "impossible", counted as errors rather than panicking
+                // a long measurement.
+                QueryStatus::Cancelled | QueryStatus::Rejected | QueryStatus::Unknown => {
+                    rep.errors += 1;
+                    true
+                }
+                QueryStatus::Queued
+                | QueryStatus::Mapping { .. }
+                | QueryStatus::Reducing { .. } => false,
+            };
+            if terminal {
+                svc.retire(id);
+                inflight.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        // 3. Exit: window closed and nothing outstanding — or the drain
+        // cap hit, cancelling the stragglers.
+        if !offering {
+            if inflight.is_empty() {
+                break;
+            }
+            if t0.elapsed() > spec.duration + spec.drain {
+                for (id, _) in inflight.drain(..) {
+                    svc.cancel(id);
+                    svc.retire(id);
+                    rep.cancelled += 1;
+                }
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    rep.elapsed = t0.elapsed();
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    rep.p50_ms = percentile_ms(&lat_ms, 50.0);
+    rep.p99_ms = percentile_ms(&lat_ms, 99.0);
+    rep.qps = rep.completed as f64 / rep.elapsed.as_secs_f64().max(1e-9);
+    rep.shed_rate = if rep.submitted > 0 { rep.shed as f64 / rep.submitted as f64 } else { 0.0 };
+    rep.peak_buffered_bytes = svc.peak_buffered_bytes();
+    Ok(rep)
+}
+
+/// One paced submission. Returns whether it was admitted (a shed or a
+/// synchronous submit error closes the closed-loop refill for this
+/// sweep). Shed ids are retired on the spot so the rejected ring never
+/// accumulates driver garbage.
+#[allow(clippy::too_many_arguments)]
+fn submit_one(
+    svc: &QueryService,
+    db: &std::sync::Arc<TpchDb>,
+    plans: &[LogicalPlan],
+    rng: &mut Pcg64,
+    sessions: u64,
+    spec: &LoadSpec,
+    rep: &mut LoadReport,
+    inflight: &mut Vec<(QueryId, Instant)>,
+) -> Result<bool> {
+    let plan = &plans[rng.gen_zipf(plans.len() as u64, spec.zipf_s) as usize];
+    let opts = SubmitOpts { session: rng.gen_range_u64(sessions), deadline: spec.deadline };
+    rep.submitted += 1;
+    match svc.try_submit_plan(db, plan, opts) {
+        Ok(Submission::Admitted(id)) => {
+            inflight.push((id, Instant::now()));
+            Ok(true)
+        }
+        Ok(Submission::Shed { id, .. }) => {
+            rep.shed += 1;
+            svc.retire(id);
+            Ok(false)
+        }
+        Err(e) => {
+            // A submit error (e.g. a plan failing wire bounds) is a
+            // driver bug, not load: surface it.
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::TpchConfig;
+    use crate::cluster::{ClusterSpec, Role};
+    use crate::coordinator::service::{AdmissionConfig, ServiceConfig};
+    use crate::platform::n2d_milan;
+    use std::sync::Arc;
+
+    fn cluster(n: usize) -> ClusterSpec {
+        ClusterSpec::traditional(n, n2d_milan(), Role::LiteCompute)
+    }
+
+    fn db() -> Arc<TpchDb> {
+        Arc::new(TpchDb::generate(TpchConfig::new(0.001, 12)))
+    }
+
+    #[test]
+    fn percentiles_interpolate_and_degrade() {
+        assert_eq!(percentile_ms(&[], 99.0), 0.0);
+        assert_eq!(percentile_ms(&[7.0], 50.0), 7.0);
+        let v = [0.0, 10.0];
+        assert!((percentile_ms(&v, 50.0) - 5.0).abs() < 1e-9);
+        assert!((percentile_ms(&v, 99.0) - 9.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_mix_builds_and_leads_with_parameterized_q6() {
+        let plans = plan_mix().unwrap();
+        assert_eq!(plans.len(), 4 + QUERY_NAMES.len());
+        assert!(plans[0].name.starts_with("q6-load"));
+        // Every plan must survive the wire-bounds check the service
+        // applies at submit.
+        for p in &plans {
+            p.check_wire_bounds().unwrap();
+        }
+    }
+
+    #[test]
+    fn closed_loop_smoke_completes_and_balances() {
+        let db = db();
+        let svc = QueryService::with_config(
+            cluster(2),
+            ServiceConfig { threads: 2, ..ServiceConfig::default() },
+        );
+        let spec = LoadSpec {
+            mode: LoadMode::Closed { concurrency: 4 },
+            duration: Duration::from_millis(200),
+            sessions: 50,
+            ..LoadSpec::default()
+        };
+        let rep = run_load(&svc, &db, &spec).unwrap();
+        assert!(rep.completed > 0, "no queries completed: {rep:?}");
+        assert_eq!(rep.errors, 0, "{rep:?}");
+        assert_eq!(
+            rep.submitted,
+            rep.completed + rep.shed + rep.timeouts + rep.errors + rep.cancelled,
+            "outcome counts must partition submissions: {rep:?}"
+        );
+        assert!(rep.p50_ms > 0.0 && rep.p99_ms >= rep.p50_ms, "{rep:?}");
+        assert_eq!(svc.credits_in_flight(), 0);
+        assert_eq!(svc.live_queries(), 0, "driver must drain the service");
+    }
+
+    #[test]
+    fn open_loop_sheds_explicitly_when_admission_gates_close() {
+        let db = db();
+        let svc = QueryService::with_config(
+            cluster(2),
+            ServiceConfig {
+                threads: 2,
+                // One query at a time, one more queued: a 200/s open
+                // stream must mostly shed.
+                max_dispatched: 1,
+                admission: AdmissionConfig { max_in_flight: 2, ..Default::default() },
+                ..ServiceConfig::default()
+            },
+        );
+        let spec = LoadSpec {
+            mode: LoadMode::Open { qps: 200.0 },
+            duration: Duration::from_millis(300),
+            sessions: 500,
+            ..LoadSpec::default()
+        };
+        let rep = run_load(&svc, &db, &spec).unwrap();
+        assert!(rep.shed > 0, "admission never engaged: {rep:?}");
+        assert!(rep.shed_rate > 0.0 && rep.shed_rate <= 1.0);
+        assert!(rep.completed > 0, "gates must still admit some load: {rep:?}");
+        assert_eq!(rep.errors, 0, "{rep:?}");
+        assert_eq!(svc.live_queries(), 0);
+        assert_eq!(svc.credits_in_flight(), 0);
+    }
+}

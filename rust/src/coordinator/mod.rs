@@ -47,15 +47,18 @@
 //! ```
 
 pub mod backpressure;
+pub mod loadgen;
 pub mod protocol;
 pub mod scheduler;
 pub mod service;
 pub mod shuffle;
 
 pub use backpressure::Backpressure;
+pub use loadgen::{run_load, LoadMode, LoadReport, LoadSpec};
 pub use protocol::QueryId;
-pub use scheduler::{Placement, Scheduler, Task, TaskKind};
+pub use scheduler::{DrrQueue, Placement, Scheduler, Task, TaskKind};
 pub use service::{
-    ChaosConfig, DistQueryReport, KillPhase, QueryService, QueryStatus, ServiceConfig,
+    AdmissionConfig, ChaosConfig, DistQueryReport, FailCause, KillPhase, QueryService,
+    QueryStatus, ServiceConfig, ShedReason, Submission, SubmitOpts,
 };
 pub use shuffle::DistributedQuery;

@@ -55,12 +55,16 @@ pub const METHOD_RESEND: u32 = 0x58;
 /// Method id of [`ReleaseQuery`] frames (leader → worker: the query is
 /// finalized, drop its retained state).
 pub const METHOD_RELEASE: u32 = 0x59;
+/// Method id of [`Progress`] frames (worker → leader: a long map fold is
+/// alive — sent from *inside* the fold at morsel boundaries, because the
+/// single dispatch core cannot answer pings while folding).
+pub const METHOD_PROGRESS: u32 = 0x5A;
 
 /// Every query-protocol method a chaos [`crate::rpc::FaultPlan`] may
-/// target. Lease traffic (`Ping`/`Heartbeat`) is deliberately excluded:
-/// faulting the failure detector itself only changes *when* a worker is
-/// declared dead, not whether the query recovers, and leaving it clean
-/// keeps chaos schedules aligned with the query conversation.
+/// target. Lease traffic (`Ping`/`Heartbeat`/`Progress`) is deliberately
+/// excluded: faulting the failure detector itself only changes *when* a
+/// worker is declared dead, not whether the query recovers, and leaving
+/// it clean keeps chaos schedules aligned with the query conversation.
 pub const CHAOS_METHODS: &[u32] = &[
     METHOD_PLAN,
     METHOD_PARTIAL,
@@ -104,6 +108,13 @@ pub struct PlanFragment {
     pub workers: u32,
     /// Rows per morsel inside the worker's fold.
     pub morsel_rows: u64,
+    /// Milliseconds the worker may spend before abandoning the fold
+    /// (0 = no deadline). Carried on the wire so a deadline takes effect
+    /// *mid-fold* — a CancelQuery only lands at frame boundaries, and a
+    /// worker grinding a fold for a query the leader already expired is
+    /// exactly the overload behavior the admission controller exists to
+    /// prevent.
+    pub deadline_ms: u64,
 }
 
 impl PlanFragment {
@@ -120,6 +131,7 @@ impl PlanFragment {
         put_bytes(out, &self.plan);
         out.extend_from_slice(&self.workers.to_le_bytes());
         out.extend_from_slice(&self.morsel_rows.to_le_bytes());
+        out.extend_from_slice(&self.deadline_ms.to_le_bytes());
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self> {
@@ -130,6 +142,7 @@ impl PlanFragment {
             plan: r.bytes()?,
             workers: r.u32()?,
             morsel_rows: r.u64()?,
+            deadline_ms: r.u64()?,
         };
         r.finish()?;
         Ok(v)
@@ -504,6 +517,55 @@ impl ResendPartition {
     }
 }
 
+/// Worker → leader: a map fold is *slow, not dead*. Cast from inside
+/// [`ExecuteRange`] handling at morsel boundaries whenever the fold has
+/// run longer than the progress interval. The endpoint's single dispatch
+/// core cannot answer [`Ping`]s while it folds, so without this frame a
+/// fold outliving the lease is indistinguishable from a dead worker: the
+/// monitor expires the lease, re-executes the fragment at a bumped
+/// epoch, the original ack arrives stale — and the cycle repeats
+/// (livelock). A progress frame renews both the endpoint's lease and the
+/// query's stall clock (when `epoch` is current).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Progress {
+    pub query_id: QueryId,
+    /// Physical endpoint index doing the folding (lease renewal key).
+    pub endpoint: u32,
+    /// Logical fragment index being folded.
+    pub worker: u32,
+    /// Repair epoch of the execution attempt — a superseded attempt's
+    /// progress renews the endpoint lease but not the query stall clock.
+    pub epoch: u32,
+}
+
+impl Progress {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the wire encoding to `out` (the pooled-buffer path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.query_id.0.to_le_bytes());
+        out.extend_from_slice(&self.endpoint.to_le_bytes());
+        out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(buf);
+        let v = Self {
+            query_id: QueryId(r.u64()?),
+            endpoint: r.u32()?,
+            worker: r.u32()?,
+            epoch: r.u32()?,
+        };
+        r.finish()?;
+        Ok(v)
+    }
+}
+
 /// Leader → worker: the query is finalized (done or abandoned); drop all
 /// retained state for it (plan, materialized map outputs, reduce
 /// buffers). What `CancelQuery` is to an in-flight query, this is to a
@@ -546,6 +608,7 @@ pub enum Frame {
     Heartbeat(Heartbeat),
     Resend(ResendPartition),
     Release(ReleaseQuery),
+    Progress(Progress),
 }
 
 impl Frame {
@@ -561,6 +624,7 @@ impl Frame {
             METHOD_HEARTBEAT => Ok(Frame::Heartbeat(Heartbeat::decode(&msg.payload)?)),
             METHOD_RESEND => Ok(Frame::Resend(ResendPartition::decode(&msg.payload)?)),
             METHOD_RELEASE => Ok(Frame::Release(ReleaseQuery::decode(&msg.payload)?)),
+            METHOD_PROGRESS => Ok(Frame::Progress(Progress::decode(&msg.payload)?)),
             m => crate::bail!("unknown protocol method {m:#x}"),
         }
     }
@@ -579,6 +643,7 @@ impl Frame {
             Frame::Ping(_) | Frame::Heartbeat(_) => None,
             Frame::Resend(f) => Some(f.query_id),
             Frame::Release(f) => Some(f.query_id),
+            Frame::Progress(f) => Some(f.query_id),
         }
     }
 }
@@ -596,8 +661,11 @@ mod tests {
             plan: vec![9, 8, 7, 6],
             workers: 8,
             morsel_rows: 16_384,
+            deadline_ms: 2_500,
         };
         assert_eq!(PlanFragment::decode(&f.encode()).unwrap(), f);
+        let no_deadline = PlanFragment { deadline_ms: 0, ..f };
+        assert_eq!(PlanFragment::decode(&no_deadline.encode()).unwrap(), no_deadline);
     }
 
     #[test]
@@ -660,6 +728,12 @@ mod tests {
         assert_eq!(ResendPartition::decode(&rs.encode()).unwrap(), rs);
         let rl = ReleaseQuery { query_id: QueryId(6) };
         assert_eq!(ReleaseQuery::decode(&rl.encode()).unwrap(), rl);
+        let pr = Progress { query_id: QueryId(8), endpoint: 2, worker: 1, epoch: 4 };
+        assert_eq!(Progress::decode(&pr.encode()).unwrap(), pr);
+        // A mid-fold progress frame names its query (the stall clock it
+        // renews), unlike ping/heartbeat.
+        let msg = Message { method: METHOD_PROGRESS, id: 1, payload: pr.encode() };
+        assert_eq!(Frame::decode(&msg).unwrap().query_id(), Some(QueryId(8)));
         // Lease frames carry no query id; repair frames do.
         let msg = Message { method: METHOD_PING, id: 1, payload: p.encode() };
         assert_eq!(Frame::decode(&msg).unwrap().query_id(), None);
@@ -748,6 +822,7 @@ mod tests {
             plan: vec![1, 2, 3],
             workers: 2,
             morsel_rows: 64,
+            deadline_ms: 0,
         };
         let msg = Message { method: METHOD_PLAN, id: 1, payload: pf.encode() };
         match Frame::decode(&msg).unwrap() {

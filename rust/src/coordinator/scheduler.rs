@@ -8,7 +8,7 @@
 //! backpressure layer gates on.
 
 use crate::cluster::{ClusterSpec, Role};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 /// What a task needs from its node.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -141,6 +141,152 @@ impl Scheduler {
     }
 }
 
+// ------------------------------------------------ deficit round robin
+
+/// One session's backlog inside a [`DrrQueue`].
+struct SessionQ<T> {
+    /// FIFO of `(item, cost)` — order within a session is preserved.
+    q: VecDeque<(T, f64)>,
+    /// Unspent service credit, in cost units (seconds here).
+    deficit: f64,
+}
+
+/// Deficit-round-robin queue over sessions: the fair-dispatch policy in
+/// front of the QueryService's worker fabric. Items carry a cost (the
+/// query's estimated seconds); each session is served `quantum` worth of
+/// cost per round, with unspent deficit carried over, so a session
+/// drip-feeding thousands of queries gets the *same service rate* as one
+/// submitting a single query — by cost, not by queue position. FIFO
+/// order is preserved within a session.
+///
+/// The quantum auto-scales to the largest cost ever pushed, so every
+/// session can always dispatch its head within one top-up (no starvation
+/// and `pop` is O(sessions) worst case), while deficit carry-over keeps
+/// the per-round service cost-proportional when items are uneven.
+pub struct DrrQueue<T> {
+    /// Sessions awaiting a turn (non-empty sessions live here or in
+    /// `current`; stale ids are skipped lazily).
+    ring: VecDeque<u64>,
+    sessions: HashMap<u64, SessionQ<T>>,
+    /// The session currently being served (spends its deficit across
+    /// consecutive `pop`s before yielding the ring).
+    current: Option<u64>,
+    quantum: f64,
+    len: usize,
+}
+
+impl<T> Default for DrrQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> DrrQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            ring: VecDeque::new(),
+            sessions: HashMap::new(),
+            current: None,
+            quantum: 1e-9,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Enqueue `item` for `session` at the given cost (clamped ≥ 0).
+    pub fn push(&mut self, session: u64, item: T, cost: f64) {
+        let cost = cost.max(0.0);
+        self.quantum = self.quantum.max(cost);
+        let s = self
+            .sessions
+            .entry(session)
+            .or_insert_with(|| SessionQ { q: VecDeque::new(), deficit: 0.0 });
+        let was_empty = s.q.is_empty();
+        s.q.push_back((item, cost));
+        self.len += 1;
+        if was_empty && self.current != Some(session) && !self.ring.contains(&session) {
+            self.ring.push_back(session);
+        }
+    }
+
+    /// Dequeue the next item under the DRR policy. Returns the owning
+    /// session with the item.
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            if let Some(cur) = self.current {
+                let s = self.sessions.get_mut(&cur).expect("current session exists");
+                match s.q.front() {
+                    // Tiny epsilon: deficits are sums/differences of the
+                    // same costs, so exact comparison is off by rounding.
+                    Some(&(_, cost)) if s.deficit + 1e-12 >= cost => {
+                        let (item, cost) = s.q.pop_front().expect("front checked");
+                        s.deficit -= cost;
+                        self.len -= 1;
+                        if s.q.is_empty() {
+                            // Drained: drop the session's entry outright
+                            // (no deficit hoarding across idle gaps, and
+                            // a service seeing ever-fresh session keys
+                            // must not grow this map without bound).
+                            self.sessions.remove(&cur);
+                            self.current = None;
+                        }
+                        return Some((cur, item));
+                    }
+                    Some(_) => {
+                        // Deficit spent: yield the server, keep the rest.
+                        self.ring.push_back(cur);
+                        self.current = None;
+                    }
+                    None => {
+                        self.sessions.remove(&cur);
+                        self.current = None;
+                    }
+                }
+            } else {
+                let next = self.ring.pop_front()?;
+                // Stale ring ids (session drained by pop/remove) have no
+                // map entry anymore — skip them.
+                let Some(s) = self.sessions.get_mut(&next) else { continue };
+                if s.q.is_empty() {
+                    self.sessions.remove(&next);
+                    continue;
+                }
+                // One top-up per turn. quantum ≥ every cost ever pushed,
+                // so the head is always dispatchable this turn.
+                s.deficit += self.quantum;
+                self.current = Some(next);
+            }
+        }
+    }
+
+    /// Remove the first queued item of `session` matching `pred`
+    /// (cancel/deadline-expiry of a still-queued query). Returns it, or
+    /// `None` if no queued item matches.
+    pub fn remove(&mut self, session: u64, mut pred: impl FnMut(&T) -> bool) -> Option<T> {
+        let s = self.sessions.get_mut(&session)?;
+        let idx = s.q.iter().position(|(t, _)| pred(t))?;
+        let (item, _cost) = s.q.remove(idx).expect("position checked");
+        self.len -= 1;
+        // Drop a drained session's entry (bounded map under session
+        // churn) — unless it is the one `pop` is currently serving, whose
+        // entry `pop` itself retires on its next call.
+        if s.q.is_empty() && self.current != Some(session) {
+            self.sessions.remove(&session);
+        }
+        Some(item)
+    }
+}
+
 /// Priority-ordered work queue (longest-task-first improves balance).
 pub fn ltf_order(tasks: &mut Vec<Task>) {
     let mut heap: BinaryHeap<(u64, usize)> = BinaryHeap::new();
@@ -247,6 +393,105 @@ mod tests {
                 s.load_secs(n)
             );
         }
+    }
+
+    #[test]
+    fn drr_is_fifo_within_one_session() {
+        let mut q = DrrQueue::new();
+        for i in 0..5 {
+            q.push(7, i, 1.0);
+        }
+        assert_eq!(q.len(), 5);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, v)| v)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn drr_heavy_session_cannot_starve_a_light_one() {
+        // Session 1 floods 100 queries before session 2 submits one. A
+        // FIFO queue would serve the newcomer 101st; DRR serves it on
+        // the second turn.
+        let mut q = DrrQueue::new();
+        for i in 0..100 {
+            q.push(1, ("heavy", i), 1.0);
+        }
+        q.push(2, ("light", 0), 1.0);
+        let mut light_at = None;
+        for n in 0..q.len() {
+            let (s, _) = q.pop().unwrap();
+            if s == 2 {
+                light_at = Some(n);
+                break;
+            }
+        }
+        assert!(light_at.unwrap() <= 2, "light session served at {light_at:?}");
+    }
+
+    #[test]
+    fn drr_shares_by_cost_not_queue_position() {
+        // A's queries cost 1.0s, B's cost 0.25s: per round A dispatches
+        // one and B four, so both receive the same service *rate*.
+        let mut q = DrrQueue::new();
+        for i in 0..10 {
+            q.push(1, ("a", i), 1.0);
+        }
+        for i in 0..40 {
+            q.push(2, ("b", i), 0.25);
+        }
+        let (mut a_cost, mut b_cost) = (0.0, 0.0);
+        for _ in 0..10 {
+            match q.pop().unwrap() {
+                (1, _) => a_cost += 1.0,
+                (2, _) => b_cost += 0.25,
+                other => panic!("unknown session {other:?}"),
+            }
+        }
+        assert!(
+            (a_cost - b_cost).abs() <= 1.0 + 1e-9,
+            "cost share diverged: a={a_cost} b={b_cost}"
+        );
+    }
+
+    #[test]
+    fn drr_remove_unqueues_and_skips_drained_sessions() {
+        let mut q = DrrQueue::new();
+        q.push(1, 10, 1.0);
+        q.push(1, 11, 1.0);
+        q.push(2, 20, 1.0);
+        assert_eq!(q.remove(1, |&v| v == 10), Some(10));
+        assert_eq!(q.remove(1, |&v| v == 99), None);
+        assert_eq!(q.len(), 2);
+        let mut got: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, v)| v)).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![11, 20]);
+        // Drain session 2 entirely via remove: its stale ring entry must
+        // not wedge or duplicate later pops.
+        q.push(2, 21, 1.0);
+        assert_eq!(q.remove(2, |_| true), Some(21));
+        assert!(q.pop().is_none());
+        q.push(3, 30, 1.0);
+        assert_eq!(q.pop(), Some((3, 30)));
+    }
+
+    #[test]
+    fn drr_drops_drained_session_entries() {
+        // A long-lived service sees ever-fresh session keys; the map
+        // behind the queue must stay bounded by the *live* sessions, not
+        // grow with every key ever seen.
+        let mut q = DrrQueue::new();
+        for s in 0..10_000u64 {
+            q.push(s, s, 1.0);
+            assert_eq!(q.pop(), Some((s, s)));
+        }
+        assert!(q.is_empty());
+        assert!(q.sessions.is_empty(), "{} drained sessions retained", q.sessions.len());
+        // Draining via remove() drops the entry too.
+        q.push(1, 10, 1.0);
+        assert_eq!(q.remove(1, |&v| v == 10), Some(10));
+        assert!(q.sessions.is_empty());
+        assert!(q.pop().is_none());
     }
 
     #[test]

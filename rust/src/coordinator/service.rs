@@ -62,19 +62,20 @@ use crate::analytics::tpch::{gen as tpchgen, TpchDb};
 use crate::cluster::ClusterSpec;
 use crate::coordinator::backpressure::Backpressure;
 use crate::coordinator::protocol::{
-    Ack, CancelQuery, ExecuteRange, Heartbeat, PartialFrame, Ping, PlanFragment, QueryId,
-    ReduceCmd, ReleaseQuery, ResendPartition, CHAOS_METHODS, METHOD_ACK, METHOD_CANCEL,
-    METHOD_EXECUTE, METHOD_HEARTBEAT, METHOD_PARTIAL, METHOD_PING, METHOD_PLAN, METHOD_REDUCE,
-    METHOD_RELEASE, METHOD_RESEND,
+    Ack, CancelQuery, ExecuteRange, Heartbeat, PartialFrame, Ping, PlanFragment, Progress,
+    QueryId, ReduceCmd, ReleaseQuery, ResendPartition, CHAOS_METHODS, METHOD_ACK, METHOD_CANCEL,
+    METHOD_EXECUTE, METHOD_HEARTBEAT, METHOD_PARTIAL, METHOD_PING, METHOD_PLAN, METHOD_PROGRESS,
+    METHOD_REDUCE, METHOD_RELEASE, METHOD_RESEND,
 };
-use crate::coordinator::scheduler::{Scheduler, Task, TaskKind};
+use crate::coordinator::scheduler::{DrrQueue, Scheduler, Task, TaskKind};
 use crate::error::Result;
 use crate::exec::{JoinHandle, ThreadPool};
 use crate::memsim::{simulate, WorkloadProfile};
 use crate::rpc::{BufPool, Client, Dispatch, Endpoint, FaultPlan, KillSpec};
 use crate::simnet::Simulation;
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -125,19 +126,125 @@ impl DistQueryReport {
     }
 }
 
+/// Why a terminal query failed. `wait()` renders this into its error;
+/// callers that need to distinguish a deadline expiry from a real
+/// execution error match on [`QueryStatus::Failed`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FailCause {
+    /// The query's deadline passed before it finished (see
+    /// [`SubmitOpts::deadline`] / [`ServiceConfig::default_deadline_ms`]).
+    Timeout,
+    /// A worker or leader-side execution error.
+    Error(String),
+}
+
+impl fmt::Display for FailCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FailCause::Timeout => write!(f, "timed out (deadline exceeded)"),
+            FailCause::Error(e) => write!(f, "{e}"),
+        }
+    }
+}
+
 /// Lifecycle snapshot of one submitted query (see [`QueryService::poll`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum QueryStatus {
     /// The id was never issued by this service (or predates it).
     Unknown,
+    /// Admitted but not yet dispatched: waiting for a dispatch slot in
+    /// the fair (deficit-round-robin) queue.
+    Queued,
     /// Map phase: `acked` of `workers` map reports are in.
     Mapping { acked: usize, workers: usize },
     /// Exchange/reduce phase: `received` of `expected` pre-merged
     /// partition frames have reached the leader.
     Reducing { received: usize, expected: usize },
     Done,
-    Failed(String),
+    Failed(FailCause),
     Cancelled,
+    /// Shed by the admission controller — the query never ran and holds
+    /// no resources. Remembered in a bounded ring; very old shed ids
+    /// eventually read as `Unknown` again.
+    Rejected,
+}
+
+/// Why the admission controller shed a submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Live (queued + executing) queries at the configured ceiling.
+    InFlight { live: usize, max: usize },
+    /// Leader-side buffered partial bytes over the watermark.
+    BufferedBytes { bytes: u64, max: u64 },
+    /// Decode-gate credits below the floor: the leader is saturated.
+    Credits { free: usize, min: usize },
+}
+
+impl fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShedReason::InFlight { live, max } => {
+                write!(f, "overloaded: {live} queries in flight (max {max})")
+            }
+            ShedReason::BufferedBytes { bytes, max } => {
+                write!(f, "overloaded: {bytes} buffered bytes (max {max})")
+            }
+            ShedReason::Credits { free, min } => {
+                write!(f, "overloaded: {free} decode credits free (min {min})")
+            }
+        }
+    }
+}
+
+/// Outcome of a submission under admission control (see
+/// [`QueryService::try_submit_plan`]). Shedding is **explicit and
+/// load-bounded**: a shed query was never buffered, placed, or cast —
+/// the service holds nothing for it beyond a slot in a bounded
+/// rejected-id ring so `poll` can answer [`QueryStatus::Rejected`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Submission {
+    Admitted(QueryId),
+    Shed { id: QueryId, reason: ShedReason },
+}
+
+impl Submission {
+    /// The id either way (shed ids are real ids: they poll as Rejected).
+    pub fn id(&self) -> QueryId {
+        match self {
+            Submission::Admitted(id) => *id,
+            Submission::Shed { id, .. } => *id,
+        }
+    }
+}
+
+/// Admission-control thresholds. Each gate is independent and `0`
+/// disables it, so the zero default admits everything (the pre-overload
+/// behavior). Gates are checked at submit time, under the leader state
+/// lock — admission is serialized with completion, so the counts it
+/// reads are exact, not racy snapshots.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    /// Max live (queued + executing) queries (0 = unlimited).
+    pub max_in_flight: usize,
+    /// Max leader-side buffered partial bytes (0 = unlimited).
+    pub max_buffered_bytes: u64,
+    /// Min free decode credits required to admit (0 = don't check).
+    pub min_free_credits: usize,
+}
+
+/// Per-submission options (see [`QueryService::submit_opts`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOpts {
+    /// Fair-scheduling key: dispatch slots are shared deficit-round-
+    /// robin across sessions, so one heavy session cannot starve the
+    /// rest. Sessions are caller-defined (0 is a perfectly good default
+    /// for single-tenant use).
+    pub session: u64,
+    /// Per-query deadline, overriding
+    /// [`ServiceConfig::default_deadline_ms`]. Expires the query to
+    /// [`FailCause::Timeout`] with full cleanup wherever it is in its
+    /// lifecycle — queued, mapping, or reducing.
+    pub deadline: Option<Duration>,
 }
 
 /// Service tuning (all fields have sensible zero-ish defaults).
@@ -160,6 +267,16 @@ pub struct ServiceConfig {
     /// Deterministic fault injection (see [`ChaosConfig`]); also turns
     /// on the lease monitor and worker-side partition-body retention.
     pub chaos: Option<ChaosConfig>,
+    /// Load-shedding thresholds (all-zero default = admit everything).
+    pub admission: AdmissionConfig,
+    /// Deadline applied to every query that doesn't carry its own via
+    /// [`SubmitOpts`] (0 = none). A non-zero value arms the monitor
+    /// thread in deadline-only mode even without chaos/lease config.
+    pub default_deadline_ms: u64,
+    /// Max queries dispatched to the fabric at once; further admitted
+    /// queries wait in the fair queue (0 = dispatch immediately on
+    /// submit, the pre-overload behavior).
+    pub max_dispatched: usize,
 }
 
 impl Default for ServiceConfig {
@@ -171,6 +288,9 @@ impl Default for ServiceConfig {
             heartbeat_ms: 0,
             lease_ms: 0,
             chaos: None,
+            admission: AdmissionConfig::default(),
+            default_deadline_ms: 0,
+            max_dispatched: 0,
         }
     }
 }
@@ -200,6 +320,12 @@ pub struct ChaosConfig {
 
 // --------------------------------------------------------------- worker
 
+/// Marker a worker puts in its error ack when it abandons a fold whose
+/// dispatched deadline passed. The leader maps errors carrying it to
+/// [`FailCause::Timeout`] so the caller sees the same typed cause no
+/// matter which side noticed the expiry first.
+const DEADLINE_MSG: &str = "deadline exceeded";
+
 /// Per-query state a worker holds between PlanFragment and ExecuteRange:
 /// the **decoded logical plan** — computation that arrived over the
 /// fabric, not code baked into the worker.
@@ -207,6 +333,10 @@ struct PlanState {
     plan: LogicalPlan,
     morsel_rows: usize,
     workers: usize,
+    /// Remaining time budget the leader computed at dispatch (0 = no
+    /// deadline). Checked at morsel boundaries so an expired query
+    /// stops burning this worker's single dispatch core mid-fold.
+    deadline_ms: u64,
     db: Arc<TpchDb>,
 }
 
@@ -249,6 +379,15 @@ struct WorkerShared {
     /// default-config services, preserving the allocation-free map
     /// steady state.
     retain: bool,
+    /// Mid-fold progress-beat interval in ms (0 = off; set to the
+    /// monitor's heartbeat on fault-tolerant services). A fold is the
+    /// one place a worker's single dispatch core goes silent for longer
+    /// than a lease — pings queue behind it unanswered — so the fold
+    /// itself casts [`Progress`] beats at morsel boundaries to renew
+    /// the lease and the query's stall clock. Without this, any fold
+    /// longer than the lease is declared dead, re-executed, and expires
+    /// again: a livelock that burns every repair round.
+    progress_ms: u64,
     /// Cancelled/released ids (set + insertion order, oldest evicted
     /// first so the bound never wipes a *recently* closed id whose
     /// frames are still in flight).
@@ -321,6 +460,7 @@ impl WorkerShared {
                 plan,
                 morsel_rows: (pf.morsel_rows as usize).max(1),
                 workers: pf.workers as usize,
+                deadline_ms: pf.deadline_ms,
                 db,
             },
         );
@@ -384,6 +524,21 @@ impl WorkerShared {
         let qid = ex.query_id;
         let (lo, hi) = (ex.lo as usize, ex.hi as usize);
         let t = Instant::now();
+        // Lease renewal while this core is occupied (see `progress_ms`).
+        // One beat up front covers shard generation + compile, the rest
+        // fire at morsel boundaries.
+        let beat = || {
+            let pr = Progress {
+                query_id: qid,
+                endpoint: self.wi,
+                worker: ex.worker,
+                epoch: ex.epoch,
+            };
+            let _ = self.leader().cast_frame(METHOD_PROGRESS, |out| pr.encode_into(out));
+        };
+        if self.progress_ms > 0 {
+            beat();
+        }
         // Compile whatever IR arrived — the worker has no query registry
         // to consult, exactly as a headless NIC receiving its program
         // over the fabric. A plan the leader invented five seconds ago
@@ -408,10 +563,27 @@ impl WorkerShared {
         let mut scr = TaskScratch::new();
         let mut stats = ExecStats::default();
         let mut s = fold_lo;
+        let mut last_beat = Instant::now();
         while s < fold_hi {
             let e = (s + plan.morsel_rows).min(fold_hi);
             engine::fold_range(&c, width, s, e, &mut agg, &mut scr, &mut stats);
             s = e;
+            if s < fold_hi {
+                // The morsel boundary is the granularity a fold can
+                // react at: enforce the dispatched deadline (don't burn
+                // the core for a query the leader will discard) and
+                // renew the lease.
+                let elapsed_ms = t.elapsed().as_millis() as u64;
+                if plan.deadline_ms > 0 && elapsed_ms > plan.deadline_ms {
+                    crate::bail!("{DEADLINE_MSG} mid-fold after {} rows", s - fold_lo);
+                }
+                if self.progress_ms > 0
+                    && last_beat.elapsed().as_millis() as u64 >= self.progress_ms
+                {
+                    last_beat = Instant::now();
+                    beat();
+                }
+            }
         }
         let partial = engine::finish_fold(agg, stats);
         // One live table for the whole fold: its footprint IS the
@@ -617,11 +789,21 @@ impl WorkerShared {
 // --------------------------------------------------------------- leader
 
 enum Phase {
+    /// Admitted, waiting in the fair queue for a dispatch slot.
+    Queued,
     Mapping,
     Reducing,
     Done,
-    Failed(String),
+    Failed(FailCause),
     Cancelled,
+}
+
+impl Phase {
+    /// Still consuming resources (storage attach, scheduler load, a
+    /// live/dispatch count)?
+    fn is_live(&self) -> bool {
+        matches!(self, Phase::Queued | Phase::Mapping | Phase::Reducing)
+    }
 }
 
 struct AckInfo {
@@ -647,6 +829,22 @@ struct QueryState {
     /// Dropped at completion so a long-lived service does not pin dbs.
     db: Option<Arc<TpchDb>>,
     phase: Phase,
+    /// Fair-scheduling key this query was submitted under.
+    session: u64,
+    /// DRR cost: total estimated fold seconds across fragments.
+    cost: f64,
+    /// Absolute expiry instant (submit time + deadline), if any.
+    deadline: Option<Instant>,
+    /// Holds one of the `max_dispatched` slots (flipped by dispatch,
+    /// cleared by the terminal transition).
+    dispatched: bool,
+    /// Monotone dispatch order, assigned when the query leaves the
+    /// queue (observability; fairness tests assert on it).
+    dispatch_seq: Option<u64>,
+    /// Bytes of pre-merged partial bodies currently buffered for this
+    /// query (counted into the service-wide gauge; drained on every
+    /// terminal path).
+    buf_bytes: u64,
     w: usize,
     worker_nodes: Vec<usize>,
     est_secs: Vec<f64>,
@@ -688,6 +886,7 @@ struct QueryState {
 impl QueryState {
     fn status(&self) -> QueryStatus {
         match &self.phase {
+            Phase::Queued => QueryStatus::Queued,
             Phase::Mapping => QueryStatus::Mapping { acked: self.acked, workers: self.w },
             Phase::Reducing => QueryStatus::Reducing {
                 received: self.reducer_got,
@@ -700,10 +899,43 @@ impl QueryState {
     }
 }
 
+/// Bound on the rejected-id ring: shedding must not itself buffer
+/// unboundedly, so only this many recently shed ids poll as `Rejected`
+/// (older ones age back to `Unknown`). Same discipline as the workers'
+/// cancelled-id ring.
+const REJECTED_RING: usize = 4096;
+
+/// Everything behind the leader's one state lock: the query table plus
+/// the fair dispatch queue. One lock for both means admission, dispatch
+/// and completion serialize — the gates read exact counts.
+struct LeaderState {
+    map: HashMap<QueryId, QueryState>,
+    /// Admitted-but-undispatched ids, deficit-round-robin over sessions.
+    queue: DrrQueue<QueryId>,
+    /// Recently shed ids (set + insertion order, oldest evicted first).
+    rejected: HashSet<QueryId>,
+    rejected_order: VecDeque<QueryId>,
+    /// Monotone dispatch counter (source of `QueryState::dispatch_seq`).
+    next_dispatch_seq: u64,
+}
+
+impl LeaderState {
+    fn note_rejected(&mut self, id: QueryId) {
+        if self.rejected.insert(id) {
+            self.rejected_order.push_back(id);
+        }
+        while self.rejected_order.len() > REJECTED_RING {
+            if let Some(old) = self.rejected_order.pop_front() {
+                self.rejected.remove(&old);
+            }
+        }
+    }
+}
+
 /// Everything the leader endpoint's handlers touch.
 struct LeaderShared {
     cluster: ClusterSpec,
-    queries: Mutex<HashMap<QueryId, QueryState>>,
+    queries: Mutex<LeaderState>,
     cv: Condvar,
     pool: ThreadPool,
     credits: Backpressure,
@@ -716,11 +948,50 @@ struct LeaderShared {
     /// endpoint never rejoins (rejoin is an elasticity problem, not a
     /// fault-tolerance one — see DESIGN §3d).
     dead: Mutex<HashSet<usize>>,
+    admission: AdmissionConfig,
+    /// Dispatch-slot ceiling (0 = unlimited).
+    max_dispatched: usize,
+    /// Gauges. Kept as atomics (not inside the state lock) because the
+    /// terminal transitions (`fail`/`complete`/`cancel`) run with only
+    /// a `&mut QueryState` in hand; all writers do hold the state lock,
+    /// so reads under it are exact.
+    live: AtomicUsize,
+    dispatched: AtomicUsize,
+    buffered: AtomicU64,
+    peak_buffered: AtomicU64,
+    shed: AtomicU64,
 }
 
 // Lock-order discipline (deadlock freedom): `queries` before `dead`
 // before `sched`; `last_heard` is leaf-only. Casts are non-blocking
-// sends, safe under any of them.
+// sends, safe under any of them. `pump` (dispatch) runs under
+// `queries` — every caller that retires a dispatch slot pumps before
+// unlocking, so the queue drains without a dedicated thread.
+
+/// Bounded exponential backoff for leader→worker control casts: 3
+/// attempts, 1/2 ms between them. Casts fail only when the receiving
+/// endpoint is gone; the short retry absorbs a transient (an endpoint
+/// mid-drain under chaos) without stalling the dispatch path — total
+/// worst-case sleep is 3 ms, after which the caller fails the query and
+/// the lease/repair machinery owns the rest.
+fn with_cast_backoff<T>(mut cast: impl FnMut() -> Result<T>) -> Result<T> {
+    const ATTEMPTS: u32 = 3;
+    let mut delay = Duration::from_millis(1);
+    let mut attempt = 0;
+    loop {
+        match cast() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                attempt += 1;
+                if attempt >= ATTEMPTS {
+                    return Err(e);
+                }
+                std::thread::sleep(delay);
+                delay *= 2;
+            }
+        }
+    }
+}
 
 impl LeaderShared {
     /// Release the resources a live query holds (storage attach,
@@ -733,7 +1004,57 @@ impl LeaderShared {
         }
     }
 
-    fn fail(&self, qid: QueryId, st: &mut QueryState, msg: String) {
+    /// Retire the query from the live/dispatched gauges. Every terminal
+    /// transition (done, failed, cancelled) passes through exactly once:
+    /// `fail` and `cancel` guard on a live phase, `complete` only runs
+    /// from Reducing.
+    fn note_terminal(&self, st: &mut QueryState) {
+        self.live.fetch_sub(1, Ordering::SeqCst);
+        if std::mem::take(&mut st.dispatched) {
+            self.dispatched.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Return the query's buffered partial bytes to the service-wide
+    /// gauge (idempotent: `buf_bytes` is taken).
+    fn drain_buf(&self, st: &mut QueryState) {
+        let b = std::mem::take(&mut st.buf_bytes);
+        if b > 0 {
+            self.buffered.fetch_sub(b, Ordering::SeqCst);
+        }
+    }
+
+    /// The admission gates, in check order. `None` = admit. Called with
+    /// the state lock held, so the gauges are exact.
+    fn admission_check(&self) -> Option<ShedReason> {
+        let a = &self.admission;
+        if a.max_in_flight > 0 {
+            let live = self.live.load(Ordering::SeqCst);
+            if live >= a.max_in_flight {
+                return Some(ShedReason::InFlight { live, max: a.max_in_flight });
+            }
+        }
+        if a.max_buffered_bytes > 0 {
+            let bytes = self.buffered.load(Ordering::SeqCst);
+            if bytes >= a.max_buffered_bytes {
+                return Some(ShedReason::BufferedBytes { bytes, max: a.max_buffered_bytes });
+            }
+        }
+        if a.min_free_credits > 0 {
+            let free = self.credits.free();
+            if free < a.min_free_credits {
+                return Some(ShedReason::Credits { free, min: a.min_free_credits });
+            }
+        }
+        None
+    }
+
+    fn fail(&self, qid: QueryId, st: &mut QueryState, cause: FailCause) {
+        if !st.phase.is_live() {
+            return;
+        }
+        self.note_terminal(st);
+        self.drain_buf(st);
         self.release(qid, st);
         st.db = None;
         st.acks = Vec::new();
@@ -746,18 +1067,159 @@ impl LeaderShared {
                 let _ = c.cast_frame(METHOD_CANCEL, |out| cq.encode_into(out));
             }
         }
-        st.trace.push(format!("failed: {msg}"));
-        st.phase = Phase::Failed(msg);
+        st.trace.push(format!("failed: {cause}"));
+        st.phase = Phase::Failed(cause);
+    }
+
+    /// Expire the query if it carries a deadline that has passed.
+    /// Returns whether it fired (callers pump + notify). A queued query
+    /// is unlinked from the fair queue first so the pump never
+    /// dispatches a corpse.
+    fn check_deadline(
+        &self,
+        qid: QueryId,
+        st: &mut QueryState,
+        queue: &mut DrrQueue<QueryId>,
+        now: Instant,
+    ) -> bool {
+        let Some(dl) = st.deadline else { return false };
+        if !st.phase.is_live() || now < dl {
+            return false;
+        }
+        if matches!(st.phase, Phase::Queued) {
+            queue.remove(st.session, |q| *q == qid);
+        }
+        self.fail(qid, st, FailCause::Timeout);
+        true
+    }
+
+    /// Fill free dispatch slots from the fair queue. Runs under the
+    /// state lock; called at submit and by everything that retires a
+    /// slot (completion, failure, cancel, deadline sweep).
+    fn pump(&self, g: &mut LeaderState) {
+        loop {
+            if self.max_dispatched > 0
+                && self.dispatched.load(Ordering::SeqCst) >= self.max_dispatched
+            {
+                return;
+            }
+            let Some((_, qid)) = g.queue.pop() else { return };
+            let seq = g.next_dispatch_seq;
+            g.next_dispatch_seq += 1;
+            let Some(st) = g.map.get_mut(&qid) else { continue };
+            if !matches!(st.phase, Phase::Queued) {
+                continue; // retired/cancelled while queued
+            }
+            self.dispatch(qid, st, seq);
+        }
+    }
+
+    /// Move one query from Queued to Mapping: place its tasks on the
+    /// least-loaded nodes **now** (a queued query holds no scheduler
+    /// load) and cast plan + range to every worker.
+    fn dispatch(&self, qid: QueryId, st: &mut QueryState, seq: u64) {
+        let now = Instant::now();
+        if let Some(dl) = st.deadline {
+            if now >= dl {
+                self.fail(qid, st, FailCause::Timeout);
+                self.cv.notify_all();
+                return;
+            }
+        }
+        let tasks: Vec<Task> = st
+            .est_secs
+            .iter()
+            .enumerate()
+            .map(|(id, &est)| Task { id, kind: TaskKind::Compute, est_secs: est })
+            .collect();
+        let placed = {
+            let mut s = self.sched.lock().unwrap();
+            s.place_all(&tasks)
+        };
+        let Some(placed) = placed else {
+            self.fail(qid, st, FailCause::Error("no eligible compute node".into()));
+            self.cv.notify_all();
+            return;
+        };
+        st.worker_nodes = placed.iter().map(|p| p.node_id).collect();
+        st.dispatched = true;
+        st.dispatch_seq = Some(seq);
+        self.dispatched.fetch_add(1, Ordering::SeqCst);
+        st.phase = Phase::Mapping;
+        st.last_progress = now;
+        // Remaining budget rides the fragment so the deadline takes
+        // effect mid-fold on the workers (0 = none; clamped ≥ 1 since
+        // the not-yet-expired case must not encode as "no deadline").
+        let deadline_ms = st
+            .deadline
+            .map(|dl| (dl.saturating_duration_since(now).as_millis() as u64).max(1))
+            .unwrap_or(0);
+        let frag = PlanFragment {
+            query_id: qid,
+            name: st.query.clone(),
+            plan: st.plan_bytes.clone(),
+            workers: st.w as u32,
+            morsel_rows: st.morsel_rows,
+            deadline_ms,
+        };
+        let clients = self.worker_clients.get().expect("worker clients not wired");
+        for wi in 0..st.w {
+            let (lo, hi) = st.ranges[wi];
+            st.trace.push(format!("send Plan w{wi}"));
+            match with_cast_backoff(|| {
+                clients[wi].cast_frame(METHOD_PLAN, |out| frag.encode_into(out))
+            }) {
+                Ok(b) => st.control_to[wi] += b as u64,
+                Err(e) => {
+                    self.fail(qid, st, FailCause::Error(format!("plan to w{wi}: {e}")));
+                    self.cv.notify_all();
+                    return;
+                }
+            }
+            let ex = ExecuteRange {
+                query_id: qid,
+                worker: wi as u32,
+                lo,
+                hi,
+                epoch: st.epoch,
+                route: st.red_assign.clone(),
+            };
+            st.trace.push(format!("send Execute w{wi} rows={lo}..{hi}"));
+            match with_cast_backoff(|| {
+                clients[wi].cast_frame(METHOD_EXECUTE, |out| ex.encode_into(out))
+            }) {
+                Ok(b) => st.control_to[wi] += b as u64,
+                Err(e) => {
+                    self.fail(qid, st, FailCause::Error(format!("execute to w{wi}: {e}")));
+                    self.cv.notify_all();
+                    return;
+                }
+            }
+        }
     }
 
     fn on_ack(&self, ack: Ack, wire_bytes: u64) {
-        let qid = ack.query_id;
         let mut g = self.queries.lock().unwrap();
-        let Some(st) = g.get_mut(&qid) else { return };
+        self.on_ack_locked(&mut g, ack, wire_bytes);
+        // An error ack or a completion may have retired a dispatch slot.
+        self.pump(&mut g);
+    }
+
+    fn on_ack_locked(&self, g: &mut LeaderState, ack: Ack, wire_bytes: u64) {
+        let qid = ack.query_id;
+        let Some(st) = g.map.get_mut(&qid) else { return };
         if !ack.error.is_empty() {
             if matches!(st.phase, Phase::Mapping | Phase::Reducing) {
                 st.trace.push(format!("recv Ack w{} error", ack.worker));
-                self.fail(qid, st, ack.error);
+                // A worker that abandoned its fold because the dispatched
+                // deadline passed is a timeout, not an execution error —
+                // same cause the leader-side sweep would assign.
+                let cause = if ack.error.contains(DEADLINE_MSG) {
+                    FailCause::Timeout
+                } else {
+                    FailCause::Error(ack.error)
+                };
+                self.fail(qid, st, cause);
                 self.cv.notify_all();
             }
             return;
@@ -775,7 +1237,7 @@ impl LeaderShared {
                 ack.part_bytes.len(),
                 st.w
             );
-            self.fail(qid, st, msg);
+            self.fail(qid, st, FailCause::Error(msg));
             self.cv.notify_all();
             return;
         }
@@ -839,13 +1301,15 @@ impl LeaderShared {
                 }
             }
             let cmd = ReduceCmd { query_id: qid, partition: p as u32, expect };
-            match clients[dest].cast_frame(METHOD_REDUCE, |out| cmd.encode_into(out)) {
+            match with_cast_backoff(|| {
+                clients[dest].cast_frame(METHOD_REDUCE, |out| cmd.encode_into(out))
+            }) {
                 Ok(b) => st.control_to[dest] += b as u64,
                 Err(e) => {
                     // An unreachable reducer would leave the query in
                     // Reducing forever (its frame can never arrive) and
                     // wait() blocked — fail it instead.
-                    self.fail(qid, st, format!("reduce command to w{dest}: {e}"));
+                    self.fail(qid, st, FailCause::Error(format!("reduce command to w{dest}: {e}")));
                     return;
                 }
             }
@@ -858,9 +1322,15 @@ impl LeaderShared {
     }
 
     fn on_partial(&self, pf: PartialFrame, wire_bytes: u64) {
-        let qid = pf.query_id;
         let mut g = self.queries.lock().unwrap();
-        let Some(st) = g.get_mut(&qid) else { return };
+        self.on_partial_locked(&mut g, pf, wire_bytes);
+        // A completion (or completion-path failure) retires a slot.
+        self.pump(&mut g);
+    }
+
+    fn on_partial_locked(&self, g: &mut LeaderState, pf: PartialFrame, wire_bytes: u64) {
+        let qid = pf.query_id;
+        let Some(st) = g.map.get_mut(&qid) else { return };
         if !matches!(st.phase, Phase::Reducing) {
             return;
         }
@@ -869,6 +1339,13 @@ impl LeaderShared {
             return;
         }
         st.trace.push(format!("recv Partial p{p}"));
+        // The buffered-bytes gauge: admission's memory gate and the
+        // load driver's peak both read it. Charged here, drained on
+        // every exit (complete consumes, fail/cancel drop).
+        let body_bytes = pf.body.len() as u64;
+        st.buf_bytes += body_bytes;
+        let cur = self.buffered.fetch_add(body_bytes, Ordering::SeqCst) + body_bytes;
+        self.peak_buffered.fetch_max(cur, Ordering::SeqCst);
         st.reducer_frames[p] = Some((pf.body, pf.reduce_ns, wire_bytes));
         st.reducer_got += 1;
         st.last_progress = Instant::now();
@@ -884,6 +1361,26 @@ impl LeaderShared {
         }
     }
 
+    /// A worker's mid-fold progress beat: renew the endpoint's lease (a
+    /// folding single-dispatch core cannot answer pings) and, when the
+    /// beat reports the query's current epoch, its stall clock. Beats
+    /// from superseded epochs still renew the lease — the endpoint is
+    /// alive, just busy with work a repair already re-homed.
+    fn on_progress(&self, pr: Progress) {
+        if let Some(slot) = self.last_heard.lock().unwrap().get_mut(pr.endpoint as usize) {
+            *slot = Instant::now();
+        }
+        let mut g = self.queries.lock().unwrap();
+        let Some(st) = g.map.get_mut(&pr.query_id) else { return };
+        if !matches!(st.phase, Phase::Mapping | Phase::Reducing) {
+            return;
+        }
+        let l = pr.worker as usize;
+        if l < st.w && st.want_epoch[l] == pr.epoch {
+            st.last_progress = Instant::now();
+        }
+    }
+
     /// One repair round for a stuck or bereaved query: bump the epoch,
     /// re-home partitions off dead reducers, re-place and re-execute
     /// every fragment lacking a valid ack (dead executor, or frames
@@ -896,7 +1393,8 @@ impl LeaderShared {
             return;
         }
         if st.repairs >= MAX_REPAIRS {
-            self.fail(qid, st, format!("unrecoverable after {MAX_REPAIRS} repair rounds"));
+            let msg = format!("unrecoverable after {MAX_REPAIRS} repair rounds");
+            self.fail(qid, st, FailCause::Error(msg));
             self.cv.notify_all();
             return;
         }
@@ -905,7 +1403,7 @@ impl LeaderShared {
         let dead = self.dead.lock().unwrap().clone();
         let live: Vec<usize> = (0..st.w).filter(|i| !dead.contains(i)).collect();
         if live.is_empty() {
-            self.fail(qid, st, "no live workers left".into());
+            self.fail(qid, st, FailCause::Error("no live workers left".into()));
             self.cv.notify_all();
             return;
         }
@@ -936,6 +1434,10 @@ impl LeaderShared {
             st.assign[l] = live[l % live.len()];
         }
         // Re-cast plan + range for every fragment lacking a valid ack.
+        let deadline_ms = st
+            .deadline
+            .map(|dl| (dl.saturating_duration_since(Instant::now()).as_millis() as u64).max(1))
+            .unwrap_or(0);
         let clients = self.worker_clients.get().expect("worker clients not wired");
         for l in 0..st.w {
             if st.acks[l].is_some() {
@@ -949,9 +1451,12 @@ impl LeaderShared {
                 plan: st.plan_bytes.clone(),
                 workers: st.w as u32,
                 morsel_rows: st.morsel_rows,
+                deadline_ms,
             };
             st.trace.push(format!("send Plan w{l} (repair)"));
-            if let Ok(b) = clients[dest].cast_frame(METHOD_PLAN, |out| frag.encode_into(out)) {
+            if let Ok(b) = with_cast_backoff(|| {
+                clients[dest].cast_frame(METHOD_PLAN, |out| frag.encode_into(out))
+            }) {
                 st.control_to[dest] += b as u64;
             }
             let (lo, hi) = st.ranges[l];
@@ -992,6 +1497,9 @@ impl LeaderShared {
         // Take the per-phase buffers out of the state: the bodies move
         // straight into the decode (no copies of the shuffle payload),
         // and a finished query retains only rows, report, and trace.
+        // Their bytes leave the buffered gauge here — consumed, whether
+        // the decode below succeeds or fails.
+        self.drain_buf(st);
         let frames = std::mem::take(&mut st.reducer_frames);
         let acks = std::mem::take(&mut st.acks);
         let mut reduce_secs = vec![0.0; st.w];
@@ -1006,7 +1514,7 @@ impl LeaderShared {
         }
         let mut merger = Merger::new(st.width);
         if let Err(e) = decode_and_merge(&self.pool, &self.credits, bodies, &mut merger) {
-            self.fail(qid, st, e.to_string());
+            self.fail(qid, st, FailCause::Error(e.to_string()));
             return;
         }
         let merged = merger.into_partial();
@@ -1014,7 +1522,7 @@ impl LeaderShared {
         let rows: Vec<Row> = match planir::finalize(&db, &st.finalize, &merged) {
             Ok(rows) => rows,
             Err(e) => {
-                self.fail(qid, st, format!("finalize: {e}"));
+                self.fail(qid, st, FailCause::Error(format!("finalize: {e}")));
                 return;
             }
         };
@@ -1085,6 +1593,7 @@ impl LeaderShared {
         };
         st.trace.push(format!("done rows={}", report.rows.len()));
         st.result = Some(report);
+        self.note_terminal(st);
         st.phase = Phase::Done;
         self.cv.notify_all();
     }
@@ -1096,6 +1605,8 @@ impl LeaderShared {
 pub struct QueryService {
     w: usize,
     morsel_rows: usize,
+    /// Deadline stamped on submissions that don't carry their own.
+    default_deadline: Option<Duration>,
     next_query: AtomicU64,
     catalog: Arc<Mutex<HashMap<QueryId, Arc<TpchDb>>>>,
     worker_clients: Vec<Client>,
@@ -1137,6 +1648,13 @@ impl QueryService {
         // tolerance; default-config services keep the exact pre-chaos
         // behavior and allocation profile.
         let fault_tolerant = cfg.chaos.is_some() || cfg.heartbeat_ms > 0 || cfg.lease_ms > 0;
+        let heartbeat =
+            Duration::from_millis(if cfg.heartbeat_ms == 0 { 20 } else { cfg.heartbeat_ms });
+        let lease = if cfg.lease_ms == 0 {
+            heartbeat * 8
+        } else {
+            Duration::from_millis(cfg.lease_ms)
+        };
         // Deterministic per-endpoint fault schedule: each endpoint
         // derives its own stream from the one chaos seed, so a run is
         // replayable end to end from `(seed, kill)` alone.
@@ -1170,6 +1688,11 @@ impl QueryService {
                     reduces: Mutex::new(HashMap::new()),
                     executed: Mutex::new((HashMap::new(), VecDeque::new())),
                     retain: fault_tolerant,
+                    progress_ms: if fault_tolerant {
+                        (heartbeat.as_millis() as u64).max(1)
+                    } else {
+                        0
+                    },
                     cancelled: Mutex::new((HashSet::new(), VecDeque::new())),
                     peers: OnceLock::new(),
                     leader: OnceLock::new(),
@@ -1226,7 +1749,13 @@ impl QueryService {
         let sched = Mutex::new(Scheduler::new(&cluster));
         let leader = Arc::new(LeaderShared {
             cluster,
-            queries: Mutex::new(HashMap::new()),
+            queries: Mutex::new(LeaderState {
+                map: HashMap::new(),
+                queue: DrrQueue::new(),
+                rejected: HashSet::new(),
+                rejected_order: VecDeque::new(),
+                next_dispatch_seq: 0,
+            }),
             cv: Condvar::new(),
             pool,
             credits,
@@ -1235,8 +1764,20 @@ impl QueryService {
             worker_clients: OnceLock::new(),
             last_heard: Mutex::new(vec![Instant::now(); w]),
             dead: Mutex::new(HashSet::new()),
+            admission: cfg.admission,
+            max_dispatched: cfg.max_dispatched,
+            live: AtomicUsize::new(0),
+            dispatched: AtomicUsize::new(0),
+            buffered: AtomicU64::new(0),
+            peak_buffered: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
         });
-        let (la, lp, lh) = (Arc::clone(&leader), Arc::clone(&leader), Arc::clone(&leader));
+        let (la, lp, lh, lg) = (
+            Arc::clone(&leader),
+            Arc::clone(&leader),
+            Arc::clone(&leader),
+            Arc::clone(&leader),
+        );
         // The leader endpoint gets its own fault stream (drops/delays of
         // acks and partials are recoverable via the stall repair) but
         // never a kill: leader death is explicitly out of scope.
@@ -1259,6 +1800,10 @@ impl QueryService {
                 lh.on_heartbeat(Heartbeat::decode(&m.payload)?);
                 Ok(Vec::new())
             })
+            .on(METHOD_PROGRESS, move |m| {
+                lg.on_progress(Progress::decode(&m.payload)?);
+                Ok(Vec::new())
+            })
             .serve_with_faults(leader_plan);
         let leader_client = leader_ep.client();
         let _ = leader.worker_clients.set(worker_clients.clone());
@@ -1267,23 +1812,32 @@ impl QueryService {
             let _ = ws.leader.set(leader_client.clone());
         }
         let stop = Arc::new(AtomicBool::new(false));
-        let monitor = fault_tolerant.then(|| {
-            let heartbeat =
-                Duration::from_millis(if cfg.heartbeat_ms == 0 { 20 } else { cfg.heartbeat_ms });
-            let lease = if cfg.lease_ms == 0 { heartbeat * 8 } else {
-                Duration::from_millis(cfg.lease_ms)
-            };
+        // The monitor also sweeps deadlines; a deadline-only service
+        // (no chaos, no lease config) arms it in a reduced mode that
+        // never pings, expires leases, or repairs.
+        let monitored = fault_tolerant || cfg.default_deadline_ms > 0;
+        let monitor = monitored.then(|| {
             let chaos_enabled = cfg.chaos.is_some();
             let leader = Arc::clone(&leader);
             let stop = Arc::clone(&stop);
             let clients = worker_clients.clone();
             std::thread::spawn(move || {
-                Self::monitor_loop(&leader, &clients, heartbeat, lease, chaos_enabled, &stop)
+                Self::monitor_loop(
+                    &leader,
+                    &clients,
+                    heartbeat,
+                    lease,
+                    fault_tolerant,
+                    chaos_enabled,
+                    &stop,
+                )
             })
         });
         Self {
             w,
             morsel_rows: cfg.morsel_rows.max(1),
+            default_deadline: (cfg.default_deadline_ms > 0)
+                .then(|| Duration::from_millis(cfg.default_deadline_ms)),
             next_query: AtomicU64::new(0),
             catalog,
             worker_clients,
@@ -1305,23 +1859,24 @@ impl QueryService {
         clients: &[Client],
         heartbeat: Duration,
         lease: Duration,
+        fault_tolerant: bool,
         chaos_enabled: bool,
         stop: &AtomicBool,
     ) {
         let mut nonce = 0u64;
         while !stop.load(Ordering::Relaxed) {
-            nonce += 1;
-            let ping = Ping { nonce };
-            {
-                let dead = leader.dead.lock().unwrap().clone();
-                for (i, c) in clients.iter().enumerate() {
-                    if !dead.contains(&i) {
-                        let _ = c.cast_frame(METHOD_PING, |out| ping.encode_into(out));
+            if fault_tolerant {
+                nonce += 1;
+                let ping = Ping { nonce };
+                {
+                    let dead = leader.dead.lock().unwrap().clone();
+                    for (i, c) in clients.iter().enumerate() {
+                        if !dead.contains(&i) {
+                            let _ = c.cast_frame(METHOD_PING, |out| ping.encode_into(out));
+                        }
                     }
                 }
-            }
-            let now = Instant::now();
-            {
+                let now = Instant::now();
                 let heard = leader.last_heard.lock().unwrap();
                 let mut dead = leader.dead.lock().unwrap();
                 for (i, t) in heard.iter().enumerate() {
@@ -1330,24 +1885,44 @@ impl QueryService {
                     }
                 }
             }
+            let now = Instant::now();
             {
                 let mut g = leader.queries.lock().unwrap();
-                let qids: Vec<QueryId> = g.keys().copied().collect();
-                for qid in qids {
-                    let Some(st) = g.get_mut(&qid) else { continue };
-                    if !matches!(st.phase, Phase::Mapping | Phase::Reducing) {
-                        continue;
+                let mut expired = false;
+                {
+                    let LeaderState { map, queue, .. } = &mut *g;
+                    let qids: Vec<QueryId> = map.keys().copied().collect();
+                    for qid in qids {
+                        let Some(st) = map.get_mut(&qid) else { continue };
+                        if !st.phase.is_live() {
+                            continue;
+                        }
+                        // Deadlines first: an expired query must not be
+                        // repaired, it must die (with full cleanup).
+                        if leader.check_deadline(qid, st, queue, now) {
+                            expired = true;
+                            continue;
+                        }
+                        if !fault_tolerant || !matches!(st.phase, Phase::Mapping | Phase::Reducing)
+                        {
+                            continue;
+                        }
+                        let touches_dead = {
+                            let dead = leader.dead.lock().unwrap();
+                            st.assign.iter().any(|a| dead.contains(a))
+                                || st.red_assign.iter().any(|r| dead.contains(&(*r as usize)))
+                        };
+                        let stalled =
+                            chaos_enabled && now.duration_since(st.last_progress) > lease;
+                        if touches_dead || stalled {
+                            leader.repair(qid, st);
+                        }
                     }
-                    let touches_dead = {
-                        let dead = leader.dead.lock().unwrap();
-                        st.assign.iter().any(|a| dead.contains(a))
-                            || st.red_assign.iter().any(|r| dead.contains(&(*r as usize)))
-                    };
-                    let stalled =
-                        chaos_enabled && now.duration_since(st.last_progress) > lease;
-                    if touches_dead || stalled {
-                        leader.repair(qid, st);
-                    }
+                }
+                // Expiries and repair failures may have retired slots.
+                leader.pump(&mut g);
+                if expired {
+                    leader.cv.notify_all();
                 }
             }
             std::thread::sleep(heartbeat);
@@ -1383,9 +1958,26 @@ impl QueryService {
     /// Submit a registered query by name: build its default-parameter
     /// plan and hand it to [`QueryService::submit_plan`].
     pub fn submit(&self, db: &Arc<TpchDb>, query: &str) -> Result<QueryId> {
+        self.submit_opts(db, query, SubmitOpts::default())
+    }
+
+    /// [`QueryService::submit`] with a session key and/or deadline.
+    pub fn submit_opts(&self, db: &Arc<TpchDb>, query: &str, opts: SubmitOpts) -> Result<QueryId> {
         let spec = engine::spec(query)
             .ok_or_else(|| crate::err!("query {query} has no distributed plan"))?;
-        self.submit_plan(db, &spec)
+        self.submit_plan_opts(db, &spec, opts)
+    }
+
+    /// [`QueryService::submit`] with a per-query deadline: the query
+    /// expires to [`FailCause::Timeout`] — with full cleanup on leader
+    /// and workers — if it has not finished within `deadline`.
+    pub fn submit_with_deadline(
+        &self,
+        db: &Arc<TpchDb>,
+        query: &str,
+        deadline: Duration,
+    ) -> Result<QueryId> {
+        self.submit_opts(db, query, SubmitOpts { deadline: Some(deadline), ..Default::default() })
     }
 
     /// Submit an ad-hoc SQL query: parse, bind, and optimize it into a
@@ -1393,16 +1985,56 @@ impl QueryService {
     /// The workers see only the encoded IR — SQL never crosses the
     /// fabric.
     pub fn submit_sql(&self, db: &Arc<TpchDb>, sql: &str) -> Result<QueryId> {
-        self.submit_plan(db, &crate::analytics::sql::plan_sql(sql)?)
+        self.submit_sql_opts(db, sql, SubmitOpts::default())
     }
 
-    /// Submit a logical plan: attach the input tables, place the worker
-    /// tasks on cluster nodes, and cast the PlanFragment (carrying the
-    /// **encoded plan** — workers compile it; no registry is consulted)
-    /// + ExecuteRange frames. Returns immediately — the query runs on
-    /// the endpoint threads. The plan needs no name the service has
-    /// ever heard of: ad-hoc IR runs exactly like the TPC-H set.
+    /// [`QueryService::submit_sql`] with a session key and/or deadline.
+    pub fn submit_sql_opts(
+        &self,
+        db: &Arc<TpchDb>,
+        sql: &str,
+        opts: SubmitOpts,
+    ) -> Result<QueryId> {
+        self.submit_plan_opts(db, &crate::analytics::sql::plan_sql(sql)?, opts)
+    }
+
+    /// Submit a logical plan (see [`QueryService::try_submit_plan`]).
+    /// Returns immediately — the query runs on the endpoint threads. A
+    /// submission shed by the admission controller comes back as an
+    /// error here; use `try_submit_plan` to branch on it without
+    /// string-matching.
     pub fn submit_plan(&self, db: &Arc<TpchDb>, plan: &LogicalPlan) -> Result<QueryId> {
+        self.submit_plan_opts(db, plan, SubmitOpts::default())
+    }
+
+    /// [`QueryService::submit_plan`] with a session key and/or deadline.
+    pub fn submit_plan_opts(
+        &self,
+        db: &Arc<TpchDb>,
+        plan: &LogicalPlan,
+        opts: SubmitOpts,
+    ) -> Result<QueryId> {
+        match self.try_submit_plan(db, plan, opts)? {
+            Submission::Admitted(id) => Ok(id),
+            Submission::Shed { id, reason } => Err(crate::err!("{id} shed: {reason}")),
+        }
+    }
+
+    /// Submit a logical plan under admission control: attach the input
+    /// tables and enqueue the query in the fair (deficit-round-robin
+    /// over sessions) dispatch queue — or shed it, explicitly, if an
+    /// admission gate is over threshold. Placement and the PlanFragment
+    /// + ExecuteRange casts happen at *dispatch* (immediately, unless
+    /// [`ServiceConfig::max_dispatched`] holds the query in the queue);
+    /// the PlanFragment carries the **encoded plan** — workers compile
+    /// it; no registry is consulted. The plan needs no name the service
+    /// has ever heard of: ad-hoc IR runs exactly like the TPC-H set.
+    pub fn try_submit_plan(
+        &self,
+        db: &Arc<TpchDb>,
+        plan: &LogicalPlan,
+        opts: SubmitOpts,
+    ) -> Result<Submission> {
         // The encoder narrows collection counts; an out-of-bounds plan
         // would truncate silently on the wire and decode to a different
         // (or undecodable) plan on every worker — reject it here, at the
@@ -1410,7 +2042,6 @@ impl QueryService {
         plan.check_wire_bounds()?;
         let width = plan.width();
         crate::ensure!(self.w >= 1, "cluster has no nodes");
-        let qid = QueryId(self.next_query.fetch_add(1, Ordering::SeqCst) + 1);
         let scan = planir::table(db, plan.scan);
         let n = scan.len();
         let ranges = Self::ranges(n, self.w);
@@ -1420,49 +2051,52 @@ impl QueryService {
         } else {
             (scan.bytes() as f64 * rows_each as f64 / n as f64) as u64
         };
-        // Place the worker tasks up front (estimate: rows at a nominal
-        // per-row rate — only relative load matters) so concurrent
-        // queries spread over the shared scheduler's least-loaded nodes.
-        // Placement runs before the storage attach: a placement failure
-        // must not leave the db pinned in the catalog.
+        // Fold-cost estimate (rows at a nominal per-row rate — only
+        // relative load matters): the scheduler's placement weight at
+        // dispatch and the DRR cost in the fair queue.
         let est_secs: Vec<f64> =
             ranges.iter().map(|(s, e)| ((e - s) as f64 * 2e-8).max(1e-9)).collect();
-        let worker_nodes: Vec<usize> = {
-            let tasks: Vec<Task> = est_secs
-                .iter()
-                .enumerate()
-                .map(|(id, &est)| Task { id, kind: TaskKind::Compute, est_secs: est })
-                .collect();
-            let mut s = self.leader.sched.lock().unwrap();
-            s.place_all(&tasks)
-                .ok_or_else(|| crate::err!("no eligible compute node for worker tasks"))?
-                .iter()
-                .map(|p| p.node_id)
-                .collect()
-        };
-        self.catalog.lock().unwrap().insert(qid, Arc::clone(db));
+        let cost: f64 = est_secs.iter().sum();
         let plan_bytes = plan.encode();
-        let identity_route: Vec<u32> = (0..self.w as u32).collect();
+        let qid = QueryId(self.next_query.fetch_add(1, Ordering::SeqCst) + 1);
         let mut g = self.leader.queries.lock().unwrap();
-        g.insert(
+        // Admission, under the state lock: the gauges are exact, and a
+        // shed query was never buffered — the only trace it leaves is
+        // its slot in the bounded rejected ring.
+        if let Some(reason) = self.leader.admission_check() {
+            g.note_rejected(qid);
+            self.leader.shed.fetch_add(1, Ordering::SeqCst);
+            return Ok(Submission::Shed { id: qid, reason });
+        }
+        self.catalog.lock().unwrap().insert(qid, Arc::clone(db));
+        self.leader.live.fetch_add(1, Ordering::SeqCst);
+        let deadline =
+            opts.deadline.or(self.default_deadline).map(|d| Instant::now() + d);
+        g.map.insert(
             qid,
             QueryState {
                 query: plan.name.clone(),
                 width,
                 finalize: plan.finalize.clone(),
                 db: Some(Arc::clone(db)),
-                phase: Phase::Mapping,
+                phase: Phase::Queued,
+                session: opts.session,
+                cost,
+                deadline,
+                dispatched: false,
+                dispatch_seq: None,
+                buf_bytes: 0,
                 w: self.w,
-                worker_nodes,
+                worker_nodes: Vec::new(),
                 est_secs,
                 input_bytes_each,
                 epoch: 0,
                 assign: (0..self.w).collect(),
-                red_assign: identity_route.clone(),
+                red_assign: (0..self.w as u32).collect(),
                 want_epoch: vec![0; self.w],
                 repairs: 0,
                 last_progress: Instant::now(),
-                plan_bytes: plan_bytes.clone(),
+                plan_bytes,
                 ranges: ranges.iter().map(|&(s, e)| (s as u64, e as u64)).collect(),
                 morsel_rows: self.morsel_rows as u64,
                 acks: (0..self.w).map(|_| None).collect(),
@@ -1476,65 +2110,49 @@ impl QueryService {
                 result: None,
             },
         );
-        // Cast the plan + range to every worker while holding the state
-        // lock: acks cannot race past the insert, and the trace stays
-        // ordered (casts are non-blocking sends).
-        let frag = PlanFragment {
-            query_id: qid,
-            name: plan.name.clone(),
-            plan: plan_bytes,
-            workers: self.w as u32,
-            morsel_rows: self.morsel_rows as u64,
-        };
-        let cast_all = (|| -> Result<()> {
-            let st = g.get_mut(&qid).expect("just inserted");
-            for (wi, &(lo, hi)) in ranges.iter().enumerate() {
-                st.trace.push(format!("send Plan w{wi}"));
-                st.control_to[wi] += self.worker_clients[wi]
-                    .cast_frame(METHOD_PLAN, |out| frag.encode_into(out))?
-                    as u64;
-                let ex = ExecuteRange {
-                    query_id: qid,
-                    worker: wi as u32,
-                    lo: lo as u64,
-                    hi: hi as u64,
-                    epoch: 0,
-                    route: identity_route.clone(),
-                };
-                st.trace.push(format!("send Execute w{wi} rows={lo}..{hi}"));
-                st.control_to[wi] += self.worker_clients[wi]
-                    .cast_frame(METHOD_EXECUTE, |out| ex.encode_into(out))?
-                    as u64;
-            }
-            Ok(())
-        })();
-        if let Err(e) = cast_all {
-            // A dead worker endpoint must not leak the registered query:
-            // unwind the insert, the storage attach, and the scheduler
-            // load, and tell the live workers to drop what they got.
-            let st = g.remove(&qid).expect("just inserted");
-            self.leader.release(qid, &st);
-            let cq = CancelQuery { query_id: qid };
-            for c in &self.worker_clients {
-                let _ = c.cast_frame(METHOD_CANCEL, |out| cq.encode_into(out));
-            }
-            return Err(e);
-        }
-        Ok(qid)
+        g.queue.push(opts.session, qid, cost);
+        // Dispatch under the same lock hold: with free slots the casts
+        // go out before the insert is visible to any ack, and the trace
+        // stays ordered (casts are non-blocking sends).
+        self.leader.pump(&mut g);
+        Ok(Submission::Admitted(qid))
     }
 
-    /// Snapshot a query's lifecycle state (non-blocking).
+    /// Snapshot a query's lifecycle state (non-blocking). Also the lazy
+    /// deadline check: polling an expired query expires it on the spot,
+    /// so deadlines hold even on services without a monitor thread.
     pub fn poll(&self, id: QueryId) -> QueryStatus {
-        let g = self.leader.queries.lock().unwrap();
-        g.get(&id).map_or(QueryStatus::Unknown, |st| st.status())
+        let mut g = self.leader.queries.lock().unwrap();
+        if g.rejected.contains(&id) {
+            return QueryStatus::Rejected;
+        }
+        let fired = {
+            let LeaderState { map, queue, .. } = &mut *g;
+            match map.get_mut(&id) {
+                Some(st) => self.leader.check_deadline(id, st, queue, Instant::now()),
+                None => return QueryStatus::Unknown,
+            }
+        };
+        if fired {
+            self.leader.pump(&mut g);
+            self.leader.cv.notify_all();
+        }
+        g.map.get(&id).map_or(QueryStatus::Unknown, |st| st.status())
     }
 
     /// Block until the query finishes; returns its rows and report.
-    /// Waiting is idempotent — any number of callers get the result.
+    /// Waiting is idempotent — any number of callers get the result. A
+    /// query with a deadline never blocks past it: the wait sleeps no
+    /// longer than the time remaining and expires the query itself if
+    /// the monitor hasn't — so `wait` is deadline-bounded even on
+    /// services with no monitor thread at all.
     pub fn wait(&self, id: QueryId) -> Result<(Vec<Row>, DistQueryReport)> {
         let mut g = self.leader.queries.lock().unwrap();
         loop {
-            match g.get(&id) {
+            match g.map.get(&id) {
+                None if g.rejected.contains(&id) => {
+                    crate::bail!("{id}: shed at admission")
+                }
                 None => crate::bail!("{id}: unknown query"),
                 Some(st) => match &st.phase {
                     Phase::Done => {
@@ -1543,50 +2161,82 @@ impl QueryService {
                     }
                     Phase::Failed(e) => crate::bail!("{id} failed: {e}"),
                     Phase::Cancelled => crate::bail!("{id} cancelled"),
-                    Phase::Mapping | Phase::Reducing => {}
+                    Phase::Queued | Phase::Mapping | Phase::Reducing => {}
                 },
             }
-            g = self.leader.cv.wait(g).unwrap();
+            let now = Instant::now();
+            let (fired, deadline) = {
+                let LeaderState { map, queue, .. } = &mut *g;
+                let st = map.get_mut(&id).expect("matched Some above");
+                let dl = st.deadline;
+                (self.leader.check_deadline(id, st, queue, now), dl)
+            };
+            if fired {
+                self.leader.pump(&mut g);
+                self.leader.cv.notify_all();
+                continue; // next iteration reports the Failed(Timeout)
+            }
+            g = match deadline {
+                Some(dl) => {
+                    let left = dl
+                        .saturating_duration_since(now)
+                        .max(Duration::from_millis(1));
+                    self.leader.cv.wait_timeout(g, left).unwrap().0
+                }
+                None => self.leader.cv.wait(g).unwrap(),
+            };
         }
     }
 
-    /// Best-effort cancel: returns `true` if the query was still in
-    /// flight (its late frames will be discarded), `false` if it already
-    /// finished, failed, or never existed.
+    /// Best-effort cancel: returns `true` if the query was still live
+    /// (queued or in flight; its late frames will be discarded),
+    /// `false` if it already finished, failed, or never existed.
     pub fn cancel(&self, id: QueryId) -> bool {
         let mut g = self.leader.queries.lock().unwrap();
-        let Some(st) = g.get_mut(&id) else { return false };
-        if !matches!(st.phase, Phase::Mapping | Phase::Reducing) {
-            return false;
-        }
-        self.leader.release(id, st);
-        st.db = None;
-        st.acks = Vec::new();
-        st.reducer_frames = Vec::new();
-        st.phase = Phase::Cancelled;
-        st.trace.push("cancelled".to_string());
-        let cq = CancelQuery { query_id: id };
-        for (wi, c) in self.worker_clients.iter().enumerate() {
-            if let Ok(b) = c.cast_frame(METHOD_CANCEL, |out| cq.encode_into(out)) {
-                st.control_to[wi] += b as u64;
+        {
+            let LeaderState { map, queue, .. } = &mut *g;
+            let Some(st) = map.get_mut(&id) else { return false };
+            if !st.phase.is_live() {
+                return false;
+            }
+            if matches!(st.phase, Phase::Queued) {
+                queue.remove(st.session, |q| *q == id);
+            }
+            self.leader.note_terminal(st);
+            self.leader.drain_buf(st);
+            self.leader.release(id, st);
+            st.db = None;
+            st.acks = Vec::new();
+            st.reducer_frames = Vec::new();
+            st.phase = Phase::Cancelled;
+            st.trace.push("cancelled".to_string());
+            let cq = CancelQuery { query_id: id };
+            for (wi, c) in self.worker_clients.iter().enumerate() {
+                if let Ok(b) = c.cast_frame(METHOD_CANCEL, |out| cq.encode_into(out)) {
+                    st.control_to[wi] += b as u64;
+                }
             }
         }
+        // Cancelling a dispatched query freed its slot.
+        self.leader.pump(&mut g);
         self.leader.cv.notify_all();
         true
     }
 
-    /// Evict a finished (done, failed, or cancelled) query's retained
-    /// state — rows, report, trace. Returns `false` if the query is
-    /// still in flight (or unknown); a long-lived service that serves an
-    /// unbounded query stream should retire ids once their result has
-    /// been consumed.
+    /// Evict a finished (done, failed, cancelled, or shed) query's
+    /// retained state — rows, report, trace. Returns `false` if the
+    /// query is still live (or unknown); a long-lived service that
+    /// serves an unbounded query stream should retire ids once their
+    /// result has been consumed.
     pub fn retire(&self, id: QueryId) -> bool {
         let mut g = self.leader.queries.lock().unwrap();
-        let terminal = g
-            .get(&id)
-            .is_some_and(|st| !matches!(st.phase, Phase::Mapping | Phase::Reducing));
+        if g.rejected.remove(&id) {
+            g.rejected_order.retain(|q| *q != id);
+            return true;
+        }
+        let terminal = g.map.get(&id).is_some_and(|st| !st.phase.is_live());
         if terminal {
-            g.remove(&id);
+            g.map.remove(&id);
         }
         terminal
     }
@@ -1595,7 +2245,39 @@ impl QueryService {
     /// per frame sent or received (empty for unknown ids).
     pub fn conversation(&self, id: QueryId) -> Vec<String> {
         let g = self.leader.queries.lock().unwrap();
-        g.get(&id).map_or_else(Vec::new, |st| st.trace.clone())
+        g.map.get(&id).map_or_else(Vec::new, |st| st.trace.clone())
+    }
+
+    /// Live (queued + executing) queries.
+    pub fn live_queries(&self) -> usize {
+        self.leader.live.load(Ordering::SeqCst)
+    }
+
+    /// Admitted queries waiting in the fair queue for a dispatch slot.
+    pub fn queued_queries(&self) -> usize {
+        self.leader.queries.lock().unwrap().queue.len()
+    }
+
+    /// Submissions shed by the admission controller since startup.
+    pub fn shed_queries(&self) -> u64 {
+        self.leader.shed.load(Ordering::SeqCst)
+    }
+
+    /// Pre-merged partial bytes currently buffered on the leader.
+    pub fn buffered_bytes(&self) -> u64 {
+        self.leader.buffered.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of [`QueryService::buffered_bytes`] — the number
+    /// the overload acceptance test holds against the memory watermark.
+    pub fn peak_buffered_bytes(&self) -> u64 {
+        self.leader.peak_buffered.load(Ordering::SeqCst)
+    }
+
+    /// The order this query left the fair queue (None while queued, or
+    /// for ids that never dispatched). Fairness tests assert on it.
+    pub fn dispatch_sequence(&self, id: QueryId) -> Option<u64> {
+        self.leader.queries.lock().unwrap().map.get(&id).and_then(|st| st.dispatch_seq)
     }
 }
 
@@ -1607,6 +2289,12 @@ impl QueryService {
 /// decoded-but-unmerged buffering. Credits are released on *every* path
 /// — a decode or merge failure must not leak the credit out of a
 /// long-lived gate (the leak regression tests below drive this).
+/// How long the decode path waits for a credit it cannot free itself
+/// before declaring the gate wedged (a release lost elsewhere) and
+/// failing the query with a typed error instead of blocking `wait()`
+/// forever.
+const LOST_CREDIT_WAIT: Duration = Duration::from_secs(2);
+
 fn decode_and_merge(
     pool: &ThreadPool,
     credits: &Backpressure,
@@ -1619,7 +2307,20 @@ fn decode_and_merge(
         // Admission: retire the oldest in-flight partial (merge order
         // stays body order) until a credit frees up.
         while result.is_ok() && !credits.try_acquire() {
-            let h = pending.pop_front().expect("credits exhausted with nothing pending");
+            let Some(h) = pending.pop_front() else {
+                // No in-flight decode of ours to retire and no credit
+                // free: every credit is held elsewhere (concurrent
+                // completer, or a release lost to a bug). Wait bounded —
+                // if the gate never recovers, the query fails with a
+                // typed error rather than wedging forever.
+                if credits.acquire_timeout(LOST_CREDIT_WAIT) {
+                    break; // credit in hand, proceed to submit the body
+                }
+                result = Err(crate::err!(
+                    "no backpressure credit after {LOST_CREDIT_WAIT:?} (lost release?)"
+                ));
+                break;
+            };
             let r = h.join().and_then(|p| merger.absorb(&p));
             credits.release();
             result = result.and(r);
@@ -1975,6 +2676,183 @@ mod tests {
         assert_eq!(credits.in_flight(), 0, "error path leaked a credit");
         assert!(credits.try_acquire(), "gate must still admit work");
         credits.release();
+    }
+
+    // ------------------------------------------------ overload hardening
+
+    #[test]
+    fn cast_backoff_retries_then_succeeds() {
+        let mut left = 2;
+        let t = Instant::now();
+        let r: Result<u32> = with_cast_backoff(|| {
+            if left > 0 {
+                left -= 1;
+                crate::bail!("transient");
+            }
+            Ok(7)
+        });
+        assert_eq!(r.unwrap(), 7);
+        // Two failures → 1ms + 2ms of backoff before the third attempt.
+        assert!(t.elapsed() >= Duration::from_millis(3));
+    }
+
+    #[test]
+    fn cast_backoff_gives_up_after_three_attempts() {
+        let mut calls = 0;
+        let r: Result<()> = with_cast_backoff(|| {
+            calls += 1;
+            crate::bail!("down")
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn zero_deadline_times_out_with_typed_cause() {
+        let db = db(0.001, 71);
+        let svc = QueryService::new(cluster(2));
+        // An already-expired deadline dies at dispatch, deterministically
+        // — and on a default-config service (no monitor thread), which
+        // proves the lazy poll/wait enforcement alone suffices.
+        let id = svc.submit_with_deadline(&db, "q6", Duration::ZERO).unwrap();
+        assert_eq!(svc.poll(id), QueryStatus::Failed(FailCause::Timeout));
+        let err = svc.wait(id).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        assert_eq!(svc.credits_in_flight(), 0);
+        assert_eq!(svc.buffered_bytes(), 0, "expired query must drop its buffers");
+        // The service is unharmed.
+        let ok = svc.submit(&db, "q6").unwrap();
+        let (rows, _) = svc.wait(ok).unwrap();
+        assert!(queries::run_query(&db, "q6").unwrap().approx_eq_rows(&rows));
+    }
+
+    #[test]
+    fn default_deadline_applies_and_is_overridable() {
+        let db = db(0.005, 73);
+        // morsel_rows: 1 makes the fold per-row, so q18 reliably takes
+        // many ms — far past the 1ms default deadline — and the mid-fold
+        // deadline check gets a boundary on every row.
+        let svc = QueryService::with_config(
+            cluster(2),
+            ServiceConfig { default_deadline_ms: 1, morsel_rows: 1, ..ServiceConfig::default() },
+        );
+        // 1ms is far under q18's runtime at this scale: must time out
+        // (monitor sweep or deadline-bounded wait, whichever first).
+        let id = svc.submit(&db, "q18").unwrap();
+        let err = svc.wait(id).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        assert_eq!(svc.poll(id), QueryStatus::Failed(FailCause::Timeout));
+        // A generous explicit deadline overrides the default.
+        let opts = SubmitOpts { deadline: Some(Duration::from_secs(60)), ..Default::default() };
+        let ok = svc.submit_opts(&db, "q6", opts).unwrap();
+        let (rows, _) = svc.wait(ok).unwrap();
+        assert!(queries::run_query(&db, "q6").unwrap().approx_eq_rows(&rows));
+        assert_eq!(svc.credits_in_flight(), 0);
+        assert_eq!(svc.live_queries(), 0);
+    }
+
+    #[test]
+    fn admission_sheds_explicitly_at_the_in_flight_gate() {
+        let db = db(0.005, 79);
+        let svc = QueryService::with_config(
+            cluster(2),
+            ServiceConfig {
+                max_dispatched: 1,
+                // Small morsels slow the dispatched query enough that
+                // the submissions below happen while it is still live.
+                morsel_rows: 8,
+                admission: AdmissionConfig { max_in_flight: 2, ..Default::default() },
+                ..ServiceConfig::default()
+            },
+        );
+        let plan = engine::spec("q18").unwrap();
+        let a = svc.submit_plan(&db, &plan).unwrap(); // dispatched
+        let b = svc.submit_plan(&db, &plan).unwrap(); // queued (live = 2)
+        let shed = svc.try_submit_plan(&db, &plan, SubmitOpts::default()).unwrap();
+        let Submission::Shed { id: c, reason } = shed else {
+            panic!("third submission must shed, got {shed:?}");
+        };
+        assert!(
+            matches!(reason, ShedReason::InFlight { live: 2, max: 2 }),
+            "unexpected reason {reason}"
+        );
+        assert_eq!(svc.poll(c), QueryStatus::Rejected);
+        assert_eq!(svc.shed_queries(), 1);
+        let err = svc.wait(c).unwrap_err();
+        assert!(err.to_string().contains("shed"), "{err}");
+        // submit_plan surfaces the shed as a typed-reason error.
+        let err = svc.submit_plan(&db, &plan).unwrap_err();
+        assert!(err.to_string().contains("overloaded"), "{err}");
+        // Admitted queries are unaffected and still serial-identical.
+        let single = queries::run_query(&db, "q18").unwrap();
+        for id in [a, b] {
+            let (rows, _) = svc.wait(id).unwrap();
+            assert!(single.approx_eq_rows(&rows));
+        }
+        // With the overload drained, admission opens again.
+        let d = svc.submit_plan(&db, &plan).unwrap();
+        svc.wait(d).unwrap();
+        // A shed id can be retired (drops it from the rejected ring).
+        assert!(svc.retire(c));
+        assert_eq!(svc.poll(c), QueryStatus::Unknown);
+        assert_eq!(svc.credits_in_flight(), 0);
+    }
+
+    #[test]
+    fn fair_queue_dispatches_across_sessions() {
+        let db = db(0.005, 83);
+        let svc = QueryService::with_config(
+            cluster(2),
+            ServiceConfig { max_dispatched: 1, morsel_rows: 8, ..ServiceConfig::default() },
+        );
+        // Session 1 floods; session 2 sends one query afterwards. With
+        // FIFO dispatch the light query would run last; DRR must slot it
+        // within the first few dispatches.
+        let heavy: Vec<QueryId> = (0..4)
+            .map(|_| {
+                svc.submit_opts(&db, "q18", SubmitOpts { session: 1, ..Default::default() })
+                    .unwrap()
+            })
+            .collect();
+        let light = svc
+            .submit_opts(&db, "q18", SubmitOpts { session: 2, ..Default::default() })
+            .unwrap();
+        for id in heavy.iter().chain([&light]) {
+            svc.wait(*id).unwrap();
+        }
+        let light_seq = svc.dispatch_sequence(light).expect("light must dispatch");
+        let last_heavy = heavy
+            .iter()
+            .map(|id| svc.dispatch_sequence(*id).expect("heavy must dispatch"))
+            .max()
+            .unwrap();
+        assert!(
+            light_seq <= 3,
+            "light session starved: dispatched #{light_seq} of 5 (heavies up to #{last_heavy})"
+        );
+        assert_eq!(svc.queued_queries(), 0);
+        assert_eq!(svc.live_queries(), 0);
+    }
+
+    #[test]
+    fn decode_waits_out_a_briefly_held_gate() {
+        // All credits held externally at entry: the decode path must
+        // wait (bounded) and proceed once a credit comes back — not
+        // panic, not wedge.
+        let pool = ThreadPool::new(2);
+        let credits = Arc::new(Backpressure::new(1));
+        assert!(credits.acquire());
+        let c2 = Arc::clone(&credits);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            c2.release();
+        });
+        let bodies = vec![Partial::single(1, &[1.0], 1, ExecStats::default()).encode()];
+        let mut merger = Merger::new(1);
+        decode_and_merge(&pool, &credits, bodies, &mut merger).unwrap();
+        t.join().unwrap();
+        assert_eq!(credits.in_flight(), 0);
+        assert_eq!(merger.into_partial().len(), 1);
     }
 
     #[test]

@@ -10,7 +10,8 @@ use lovelock::analytics::{profile, queries, run_query, TpchConfig, TpchDb, QUERY
 use lovelock::bigquery::{self, Breakdown};
 use lovelock::cli::Command;
 use lovelock::cluster::{ClusterSpec, Role};
-use lovelock::coordinator::{ChaosConfig, KillPhase, QueryService, ServiceConfig};
+use lovelock::coordinator::loadgen::{run_load, LoadMode, LoadSpec};
+use lovelock::coordinator::{AdmissionConfig, ChaosConfig, KillPhase, QueryService, ServiceConfig};
 use lovelock::costmodel::CostModel;
 use lovelock::gnn::{GnnHost, LovelockGnn};
 use lovelock::memsim;
@@ -34,6 +35,7 @@ fn main() {
         .sub("sql", "plan and run an ad-hoc SQL query (serial/morsel/dist)")
         .sub("explain", "show a SQL query's optimized plan, prune intervals, and costs")
         .sub("dist", "run a distributed query on a simulated cluster")
+        .sub("load", "drive a QueryService with open/closed-loop overload")
         .sub("train", "real AOT-compiled training loop via PJRT")
         .opt("sf", Some("0.01"), "TPC-H scale factor")
         .opt("seed", Some("42"), "experiment seed")
@@ -49,6 +51,14 @@ fn main() {
         .opt("concurrency", Some("1"), "simultaneous queries for dist (submit/poll/wait)")
         .opt("chaos-seed", None, "seed a deterministic fault schedule on every dist endpoint")
         .opt("kill-worker", None, "kill worker W at a phase: W, W@mid-map, or W@mid-reduce")
+        .opt("duration-ms", Some("1000"), "load submission window in ms")
+        .opt("qps", Some("0"), "open-loop arrival rate for load (0 = closed loop)")
+        .opt("sessions", Some("1000"), "distinct session keys for load")
+        .opt("zipf", Some("1.1"), "Zipf skew of the load query mix (0 = uniform)")
+        .opt("deadline-ms", Some("0"), "per-query deadline for load (0 = none)")
+        .opt("max-in-flight", Some("0"), "admission gate: max live queries (0 = off)")
+        .opt("max-buffered-mb", Some("0"), "admission gate: max leader buffered MB (0 = off)")
+        .opt("max-dispatched", Some("0"), "dispatch slots; extra queries queue fairly (0 = all)")
         .flag("lovelock", "use a Lovelock (E2000) cluster for dist")
         .flag("serial", "run tpch single-threaded instead of morsel-driven")
         .flag("dist", "run sql on a simulated cluster instead of locally")
@@ -72,6 +82,7 @@ fn main() {
         Some("sql") => cmd_sql(&args),
         Some("explain") => cmd_explain(&args),
         Some("dist") => cmd_dist(&args),
+        Some("load") => cmd_load(&args),
         Some("train") => cmd_train(&args),
         _ => {
             eprintln!("{}", cmd.help_text());
@@ -465,6 +476,59 @@ fn cmd_dist(args: &lovelock::cli::Args) -> lovelock::Result<()> {
             concurrency as f64 / wall
         );
     }
+    Ok(())
+}
+
+fn cmd_load(args: &lovelock::cli::Args) -> lovelock::Result<()> {
+    let sf = args.get_f64("sf", 0.01);
+    let seed = args.get_u64("seed", 42);
+    let workers = args.get_usize("workers", 8);
+    let threads = args.get_usize("threads", 0);
+    let qps = args.get_f64("qps", 0.0);
+    let concurrency = args.get_usize("concurrency", 1).max(1);
+    let deadline_ms = args.get_u64("deadline-ms", 0);
+    let db = Arc::new(TpchDb::generate(TpchConfig::new(sf, seed)));
+    let trad = ClusterSpec::traditional(workers, platform::n2d_milan(), Role::LiteCompute);
+    let cluster = if args.get_flag("lovelock") {
+        ClusterSpec::lovelock_e2000(&trad, args.get_u64("phi", 2) as u32)
+    } else {
+        trad
+    };
+    let name = cluster.name.clone();
+    let svc = QueryService::with_config(
+        cluster,
+        ServiceConfig {
+            workers: 0,
+            threads,
+            max_dispatched: args.get_usize("max-dispatched", 0),
+            admission: AdmissionConfig {
+                max_in_flight: args.get_usize("max-in-flight", 0),
+                max_buffered_bytes: args.get_u64("max-buffered-mb", 0) << 20,
+                min_free_credits: 0,
+            },
+            ..ServiceConfig::default()
+        },
+    );
+    let spec = LoadSpec {
+        mode: if qps > 0.0 {
+            LoadMode::Open { qps }
+        } else {
+            LoadMode::Closed { concurrency }
+        },
+        duration: std::time::Duration::from_millis(args.get_u64("duration-ms", 1000)),
+        sessions: args.get_u64("sessions", 1000),
+        zipf_s: args.get_f64("zipf", 1.1),
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        seed,
+        ..LoadSpec::default()
+    };
+    let mode = match spec.mode {
+        LoadMode::Open { qps } => format!("open loop @ {qps:.0}/s"),
+        LoadMode::Closed { concurrency } => format!("closed loop x{concurrency}"),
+    };
+    println!("{mode} on {name} ({workers} workers), {} sessions", spec.sessions);
+    let rep = run_load(&svc, &db, &spec)?;
+    println!("{}", rep.summary());
     Ok(())
 }
 

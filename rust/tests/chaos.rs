@@ -133,10 +133,12 @@ fn prop_random_fault_schedules_never_hang_wait() {
                 // An unrecoverable schedule may legitimately fail after
                 // MAX_REPAIRS rounds; the property is that it *settles*.
                 QueryStatus::Failed(_) => break,
-                QueryStatus::Unknown | QueryStatus::Cancelled => {
+                QueryStatus::Unknown | QueryStatus::Cancelled | QueryStatus::Rejected => {
                     return Err(format!("seed {seed}: impossible status"));
                 }
-                QueryStatus::Mapping { .. } | QueryStatus::Reducing { .. } => {
+                QueryStatus::Queued
+                | QueryStatus::Mapping { .. }
+                | QueryStatus::Reducing { .. } => {
                     if Instant::now() > deadline {
                         return Err(format!("seed {seed}: wait() hung past the repair bound"));
                     }
@@ -241,4 +243,40 @@ fn heartbeats_keep_live_workers_out_of_the_dead_set() {
     assert!(serial.approx_eq_rows(&rows));
     assert_eq!(report.repairs, 0, "a healthy cluster repaired");
     assert_eq!(svc.dead_workers(), 0, "a heartbeating worker was declared dead");
+}
+
+/// Livelock regression: a fold that outlives the lease. A worker's
+/// single dispatch core cannot answer pings mid-fold — they queue
+/// behind the ExecuteRange — so before mid-fold Progress beats existed,
+/// any fold longer than the lease got its endpoint declared dead and
+/// its fragment endlessly re-executed (each re-execution also outliving
+/// the lease): a livelock that burned every repair round and failed the
+/// query. With beats at morsel boundaries the lease stays fresh for as
+/// long as the fold genuinely makes progress.
+///
+/// Per-row morsels inflate a q18 fold far past the tiny lease on any
+/// machine; should some future engine make even that fast, the test
+/// degrades to trivially-true rather than flaky.
+#[test]
+fn long_folds_outliving_the_lease_are_not_livelocked() {
+    let db = db(0.01, 779);
+    let svc = QueryService::with_config(
+        cluster(2),
+        ServiceConfig {
+            threads: 2,
+            heartbeat_ms: 5,
+            lease_ms: 100,
+            morsel_rows: 1,
+            ..ServiceConfig::default()
+        },
+    );
+    let serial = queries::run_query(&db, "q18").unwrap();
+    let id = svc.submit(&db, "q18").unwrap();
+    let (rows, report) = svc.wait(id).unwrap_or_else(|e| {
+        panic!("fold outliving the lease livelocked (re-execution storm): {e}")
+    });
+    assert!(serial.approx_eq_rows(&rows), "q18 diverged from serial rows");
+    assert_eq!(report.repairs, 0, "progress beats must keep a folding worker leased");
+    assert_eq!(svc.dead_workers(), 0, "a folding worker was declared dead");
+    assert_eq!(svc.credits_in_flight(), 0);
 }

@@ -1,0 +1,235 @@
+//! Overload acceptance suite for the hardened QueryService (DESIGN.md
+//! §3g): admission control, per-query deadlines, fair scheduling, and
+//! graceful degradation — composed with the chaos machinery.
+//!
+//! The headline test is the ISSUE's acceptance bar: a 10x closed-loop
+//! overload *with a mid-map worker kill*, during which the service must
+//!
+//! * shed the excess **explicitly** (typed [`Submission::Shed`], ids
+//!   polling as `Rejected`) — never buffer it;
+//! * keep the leader's buffered-bytes peak under the configured
+//!   watermark;
+//! * return, for every *accepted* query, either serial-identical rows
+//!   or a typed `Failed(Timeout)` — nothing else;
+//! * balance the backpressure credit gate to zero afterwards.
+//!
+//! The satellite tests cover queued-deadline expiry and cross-session
+//! fairness under sustained overload — behaviors the in-module unit
+//! tests pin only in isolation.
+
+use lovelock::analytics::{queries, TpchConfig, TpchDb};
+use lovelock::coordinator::{
+    AdmissionConfig, ChaosConfig, FailCause, KillPhase, QueryService, QueryStatus, ServiceConfig,
+    SubmitOpts, Submission,
+};
+use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::platform::n2d_milan;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn db(sf: f64, seed: u64) -> Arc<TpchDb> {
+    Arc::new(TpchDb::generate(TpchConfig::new(sf, seed)))
+}
+
+fn cluster(n: usize) -> ClusterSpec {
+    ClusterSpec::traditional(n, n2d_milan(), Role::LiteCompute)
+}
+
+/// The acceptance bar (see module docs). Dispatch capacity is 4; the
+/// closed loop keeps 40 outstanding submissions — 10x — while chaos
+/// kills worker 2 at its first mid-map frame, so admission, fair
+/// queueing, deadline budgets, and lease/repair all run at once.
+#[test]
+fn ten_x_overload_with_a_mid_map_kill_degrades_gracefully() {
+    let db = db(0.002, 4311);
+    let watermark: u64 = 32 << 20;
+    let svc = QueryService::with_config(
+        cluster(4),
+        ServiceConfig {
+            threads: 2,
+            heartbeat_ms: 10,
+            lease_ms: 300,
+            chaos: Some(ChaosConfig { seed: 0xBEEF, kill: Some((2, KillPhase::MidMap)) }),
+            max_dispatched: 4,
+            admission: AdmissionConfig {
+                max_in_flight: 8,
+                max_buffered_bytes: watermark,
+                ..Default::default()
+            },
+            // Generous: repairs are meant to win; the deadline is the
+            // typed escape hatch, not the expected outcome.
+            default_deadline_ms: 60_000,
+            ..ServiceConfig::default()
+        },
+    );
+    // Serial ground truth per mix entry, computed once.
+    let mix = ["q6", "q1", "q12"];
+    let serial: HashMap<&str, _> =
+        mix.iter().map(|q| (*q, queries::run_query(&db, q).unwrap())).collect();
+    let offered_target = 120u32; // 10x the ~12 the capacity serves comfortably
+    let concurrency = 40usize;
+    let mut offered = 0u32;
+    let mut shed = 0u32;
+    let mut done = 0u32;
+    let mut timeouts = 0u32;
+    let mut inflight: Vec<(lovelock::coordinator::QueryId, &str)> = Vec::new();
+    let hard_stop = Instant::now() + Duration::from_secs(120);
+    while (offered < offered_target || !inflight.is_empty()) && Instant::now() < hard_stop {
+        // Refill the closed loop.
+        while offered < offered_target && inflight.len() < concurrency {
+            let q = mix[offered as usize % mix.len()];
+            let plan = lovelock::analytics::engine::spec(q).unwrap();
+            offered += 1;
+            let opts = SubmitOpts { session: offered as u64 % 7, ..Default::default() };
+            match svc.try_submit_plan(&db, &plan, opts).unwrap() {
+                Submission::Admitted(id) => inflight.push((id, q)),
+                Submission::Shed { id, reason } => {
+                    shed += 1;
+                    // Shedding is explicit and typed, and sheds hold
+                    // nothing: the id polls Rejected out of a bounded
+                    // ring, and the reason names the gate.
+                    assert_eq!(svc.poll(id), QueryStatus::Rejected);
+                    assert!(reason.to_string().starts_with("overloaded:"), "{reason}");
+                    assert!(svc.retire(id));
+                    break; // gates closed — drain a little before refilling
+                }
+            }
+        }
+        // Sweep completions; every accepted query must end in exactly
+        // serial rows or a typed timeout.
+        let mut i = 0;
+        while i < inflight.len() {
+            let (id, q) = inflight[i];
+            match svc.poll(id) {
+                QueryStatus::Done => {
+                    let (rows, _) = svc.wait(id).unwrap();
+                    assert!(
+                        serial[q].approx_eq_rows(&rows),
+                        "{q} ({id}) diverged from serial rows under overload + kill"
+                    );
+                    done += 1;
+                    svc.retire(id);
+                    inflight.swap_remove(i);
+                }
+                QueryStatus::Failed(FailCause::Timeout) => {
+                    timeouts += 1;
+                    svc.retire(id);
+                    inflight.swap_remove(i);
+                }
+                QueryStatus::Failed(FailCause::Error(e)) => {
+                    panic!("{q} ({id}) failed untyped under overload: {e}")
+                }
+                QueryStatus::Cancelled | QueryStatus::Rejected | QueryStatus::Unknown => {
+                    panic!("{q} ({id}) reached an impossible state")
+                }
+                QueryStatus::Queued
+                | QueryStatus::Mapping { .. }
+                | QueryStatus::Reducing { .. } => i += 1,
+            }
+        }
+        // The memory watermark holds *while* overloaded, not just at
+        // the end.
+        assert!(
+            svc.peak_buffered_bytes() <= watermark,
+            "leader buffering {} exceeded the {} watermark",
+            svc.peak_buffered_bytes(),
+            watermark
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(inflight.is_empty(), "overload run hit the 120s hard stop with work stuck");
+    assert_eq!(offered, offered_target);
+    assert_eq!(done + timeouts + shed, offered, "every submission must be accounted");
+    assert!(done > 0, "overload shed everything — no goodput at all");
+    assert!(shed > 0, "40 outstanding vs 8 in-flight slots never tripped admission");
+    assert_eq!(shed as u64, svc.shed_queries());
+    // The kill really happened and was ridden out.
+    assert!(svc.dead_workers() >= 1, "the mid-map kill never landed");
+    // Nothing leaked: credits balanced, gauges drained.
+    assert_eq!(svc.credits_in_flight(), 0, "overload + kill leaked a credit");
+    assert_eq!(svc.live_queries(), 0);
+    assert_eq!(svc.queued_queries(), 0);
+    assert_eq!(svc.buffered_bytes(), 0);
+    // And the service still serves cleanly afterwards.
+    let id = svc.submit(&db, "q6").unwrap();
+    let (rows, _) = svc.wait(id).unwrap();
+    assert!(serial["q6"].approx_eq_rows(&rows), "service unusable after the storm");
+}
+
+/// A deadline must fire while a query is still *queued* — the fair
+/// queue unlinks it, it never dispatches, and the slot math stays
+/// intact.
+#[test]
+fn queued_queries_expire_to_typed_timeouts() {
+    let db = db(0.005, 4313);
+    let svc = QueryService::with_config(
+        cluster(2),
+        ServiceConfig {
+            threads: 2,
+            max_dispatched: 1,
+            // Per-row morsels keep the front query folding long enough
+            // that the one behind it is still queued when its deadline
+            // lapses.
+            morsel_rows: 1,
+            ..ServiceConfig::default()
+        },
+    );
+    let front = svc.submit(&db, "q18").unwrap();
+    let doomed = svc
+        .submit_with_deadline(&db, "q6", Duration::from_millis(1))
+        .unwrap();
+    // No monitor on this service: the lazy checks in poll/wait must
+    // expire it.
+    std::thread::sleep(Duration::from_millis(5));
+    assert_eq!(svc.poll(doomed), QueryStatus::Failed(FailCause::Timeout));
+    let err = svc.wait(doomed).unwrap_err();
+    assert!(err.to_string().contains("timed out"), "{err}");
+    // The front query is untouched by its neighbor's expiry.
+    let serial = queries::run_query(&db, "q18").unwrap();
+    let (rows, _) = svc.wait(front).unwrap();
+    assert!(serial.approx_eq_rows(&rows));
+    assert_eq!(svc.queued_queries(), 0);
+    assert_eq!(svc.live_queries(), 0);
+    assert_eq!(svc.credits_in_flight(), 0);
+}
+
+/// Fairness under sustained overload: a tenant flooding the queue
+/// cannot starve a light tenant — the light tenant's single query
+/// dispatches within its first DRR turn, not after the flood.
+#[test]
+fn light_tenant_is_served_through_a_heavy_tenant_flood() {
+    let db = db(0.005, 4317);
+    let svc = QueryService::with_config(
+        cluster(2),
+        ServiceConfig {
+            threads: 2,
+            max_dispatched: 1,
+            morsel_rows: 8,
+            ..ServiceConfig::default()
+        },
+    );
+    let heavy: Vec<_> = (0..8)
+        .map(|_| {
+            svc.submit_opts(&db, "q18", SubmitOpts { session: 1, ..Default::default() }).unwrap()
+        })
+        .collect();
+    let light = svc
+        .submit_opts(&db, "q6", SubmitOpts { session: 2, ..Default::default() })
+        .unwrap();
+    let serial_light = queries::run_query(&db, "q6").unwrap();
+    let (rows, _) = svc.wait(light).unwrap();
+    assert!(serial_light.approx_eq_rows(&rows));
+    let light_seq = svc.dispatch_sequence(light).expect("light query must dispatch");
+    assert!(
+        light_seq <= 3,
+        "light tenant starved behind the flood: dispatched #{light_seq} of 9"
+    );
+    let serial_heavy = queries::run_query(&db, "q18").unwrap();
+    for id in heavy {
+        let (rows, _) = svc.wait(id).unwrap();
+        assert!(serial_heavy.approx_eq_rows(&rows), "heavy tenant lost work to fairness");
+    }
+    assert_eq!(svc.live_queries(), 0);
+    assert_eq!(svc.credits_in_flight(), 0);
+}

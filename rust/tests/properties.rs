@@ -252,8 +252,8 @@ fn prop_protocol_frame_codecs_roundtrip() {
     // inverse: encode → decode is the identity on any field values, and
     // decode rejects one-byte truncations of any encoding.
     use lovelock::coordinator::protocol::{
-        Ack, CancelQuery, ExecuteRange, Heartbeat, PartialFrame, Ping, PlanFragment, QueryId,
-        ReduceCmd, ReleaseQuery, ResendPartition,
+        Ack, CancelQuery, ExecuteRange, Heartbeat, PartialFrame, Ping, PlanFragment, Progress,
+        QueryId, ReduceCmd, ReleaseQuery, ResendPartition,
     };
     let strat = pair_of(
         pair_of(int_range(0, i64::MAX / 2), int_range(0, 5000)),
@@ -272,6 +272,7 @@ fn prop_protocol_frame_codecs_roundtrip() {
             plan: bytes.clone(),
             workers: small_u % 128,
             morsel_rows: *small as u64,
+            deadline_ms: *small as u64 * 11,
         };
         let exec = ExecuteRange {
             query_id: qid,
@@ -313,6 +314,12 @@ fn prop_protocol_frame_codecs_roundtrip() {
             to: small_u % 125,
         };
         let release = ReleaseQuery { query_id: qid };
+        let progress = Progress {
+            query_id: qid,
+            endpoint: small_u % 128,
+            worker: small_u % 127,
+            epoch: small_u % 43,
+        };
 
         macro_rules! roundtrip {
             ($ty:ident, $v:expr) => {{
@@ -336,6 +343,7 @@ fn prop_protocol_frame_codecs_roundtrip() {
         roundtrip!(Heartbeat, hb);
         roundtrip!(ResendPartition, resend);
         roundtrip!(ReleaseQuery, release);
+        roundtrip!(Progress, progress);
         Ok(())
     });
 }

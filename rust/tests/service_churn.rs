@@ -1,0 +1,123 @@
+//! Session-churn boundedness gate for the long-lived QueryService.
+//!
+//! An overload-hardened service is only as good as its steady state: a
+//! leader that leaks a few hundred bytes per session — a retained map
+//! entry, a growing trace, an unretired DRR session — dies not under
+//! the storm but a week after it. This file installs a live-byte
+//! allocator (same pattern as `gen_stream.rs`) and drives thousands of
+//! complete submit → wait → retire cycles, each under a **fresh
+//! session key**, then pins the heap high-water mark measured after
+//! warmup: the remaining thousands of cycles must not raise it by more
+//! than a small slack.
+//!
+//! Like the other allocator-instrumented gates this file keeps to a
+//! single measured test: the allocator is process-wide and concurrent
+//! sibling tests would pollute the peak.
+
+use lovelock::analytics::{queries, TpchConfig, TpchDb};
+use lovelock::cluster::{ClusterSpec, Role};
+use lovelock::coordinator::{QueryService, ServiceConfig, SubmitOpts};
+use lovelock::platform::n2d_milan;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// System allocator wrapper tracking live bytes and their peak.
+struct PeakAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+fn on_grow(grew: usize) {
+    let live = LIVE.fetch_add(grew, Ordering::Relaxed) + grew;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+// SAFETY: delegates verbatim to `System`; the additions are relaxed
+// atomic arithmetic, which allocates nothing and cannot unwind.
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            on_grow(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            on_grow(layout.size());
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                on_grow(new_size - layout.size());
+            } else {
+                LIVE.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+}
+
+#[global_allocator]
+static ALLOC: PeakAlloc = PeakAlloc;
+
+#[test]
+fn thousands_of_session_cycles_hold_the_heap_high_water() {
+    const WARMUP: u64 = 64;
+    const CYCLES: u64 = 2048;
+    // Generous slack over the post-warmup peak: absorbs allocator noise,
+    // hash-map resizes, and thread-pool scratch — but a per-cycle leak
+    // of even ~4 KB across ~2000 cycles blows through it.
+    const SLACK: usize = 8 << 20;
+
+    let db = Arc::new(TpchDb::generate(TpchConfig::new(0.001, 321)));
+    let svc = QueryService::with_config(
+        cluster(2),
+        ServiceConfig { threads: 2, ..ServiceConfig::default() },
+    );
+    let serial = queries::run_query(&db, "q6").unwrap();
+    let cycle = |session: u64| {
+        let id = svc
+            .submit_opts(&db, "q6", SubmitOpts { session, ..Default::default() })
+            .unwrap();
+        let (rows, _) = svc.wait(id).unwrap();
+        assert!(serial.approx_eq_rows(&rows), "cycle {session} diverged");
+        assert!(svc.retire(id), "cycle {session} could not retire");
+    };
+    // Warmup: fill pools, caches, and lazily-built state.
+    for s in 0..WARMUP {
+        cycle(s);
+    }
+    let baseline = PEAK.load(Ordering::Relaxed);
+    for s in WARMUP..CYCLES {
+        cycle(s);
+    }
+    let peak = PEAK.load(Ordering::Relaxed);
+    assert!(
+        peak <= baseline + SLACK,
+        "heap high-water grew {} KB over {} post-warmup session cycles \
+         (baseline {} KB, peak {} KB) — something retains per-session state",
+        (peak - baseline) / 1024,
+        CYCLES - WARMUP,
+        baseline / 1024,
+        peak / 1024,
+    );
+    assert_eq!(svc.live_queries(), 0);
+    assert_eq!(svc.credits_in_flight(), 0);
+}
+
+fn cluster(n: usize) -> ClusterSpec {
+    ClusterSpec::traditional(n, n2d_milan(), Role::LiteCompute)
+}
