@@ -24,6 +24,14 @@ else
     echo "==> cargo clippy unavailable; skipping lint"
 fi
 
+# Invariant lint: the zero-dependency in-repo checker (rule table in
+# DESIGN.md §3h). Hard-fail: any lock-order / hot-path-alloc /
+# wire-tag / no-panic-worker finding without a reasoned allow (or a
+# `// bound:` proof for codec indexing) stops the gate here. Pass
+# `--json` when a machine needs the findings.
+echo "==> lovelock lint (invariant checker, hard fail)"
+cargo run -q -- lint rust/src
+
 if [ "${1:-}" != "quick" ]; then
     echo "==> cargo build --release"
     cargo build --release
@@ -125,6 +133,30 @@ if [ "${1:-}" != "quick" ]; then
             LOVELOCK_BENCH_JSON=/tmp/BENCH_hotpath_smoke.json \
             cargo bench --bench "$bench" >/dev/null
     done
+fi
+
+# Sanitizer stages: both need optional components (miri; a nightly
+# toolchain with rust-src for -Zbuild-std), so detect before demanding
+# and skip LOUDLY — a silent skip reads as coverage that isn't there.
+if cargo miri --version >/dev/null 2>&1; then
+    # Miri over the wire-codec and scheduler unit tests: the codecs do
+    # the crate's only offset arithmetic over untrusted bytes, exactly
+    # where UB would hide.
+    echo "==> miri (wire codec + scheduler unit tests)"
+    cargo miri test -q --lib wirefmt:: coordinator::protocol:: coordinator::scheduler::
+else
+    echo "==> SKIPPED: cargo miri not installed (rustup component add miri) — no UB coverage this run"
+fi
+if cargo +nightly --version >/dev/null 2>&1; then
+    # ThreadSanitizer build of the two most interleaving-heavy suites.
+    # Building (not running) is the gate: TSan instrumentation itself
+    # requires -Zbuild-std, and a build catches bitrot in the config.
+    echo "==> TSan build (chaos + overload test binaries, nightly)"
+    RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test --no-run -q \
+        -Zbuild-std --target x86_64-unknown-linux-gnu \
+        --test chaos --test overload
+else
+    echo "==> SKIPPED: nightly toolchain not installed — no TSan build this run"
 fi
 
 echo "==> cargo doc --no-deps (warnings denied)"

@@ -92,7 +92,9 @@ impl Partial {
     /// [`ExecStats`].
     pub fn decode(buf: &[u8]) -> Result<Self> {
         crate::ensure!(buf.len() >= 8, "short partial frame: {} bytes", buf.len());
+        // bound: the ensure! above proves 8 <= buf.len()
         let width = u32::from_le_bytes(buf[0..4].try_into()?) as usize;
+        // bound: same ensure! — header is 8 bytes
         let len = u32::from_le_bytes(buf[4..8].try_into()?) as usize;
         crate::ensure!(width <= 64, "implausible partial width {width}");
         let gb = Self::group_bytes(width);
@@ -110,12 +112,15 @@ impl Partial {
         };
         for g in 0..len {
             let base = 8 + g * gb;
+            // bound: length ensure! pins buf.len() == 8 + len*gb; g < len so base + gb <= buf.len(), and 8 < gb
             p.keys.push(i64::from_le_bytes(buf[base..base + 8].try_into()?));
             for w in 0..width {
                 let o = base + 8 + w * 8;
+                // bound: w < width so o + 8 <= base + gb <= buf.len() per the length ensure!
                 p.accs.push(f64::from_le_bytes(buf[o..o + 8].try_into()?));
             }
             let o = base + 8 + width * 8;
+            // bound: o + 8 == base + gb <= buf.len() per the length ensure!
             p.counts.push(u64::from_le_bytes(buf[o..o + 8].try_into()?));
         }
         Ok(p)

@@ -1896,6 +1896,7 @@ fn build_step(db: &TpchDb, j: &JoinStep, built: &[Built], stats: &mut ExecStats)
                     Some((_, v)) => *v,
                     None => continue 'rows,
                 },
+                // lint: allow(no-panic-worker) compile_scan validated that every Link src has a link table
                 PaySrc::Link(k2) => link.as_ref().expect("validated").1[*k2][link_row],
             };
         }
@@ -2042,6 +2043,7 @@ pub fn compile_scan<'a>(
             hash: b.hash,
             pass: b.pass,
             vals: b.vals,
+            // lint: allow(no-panic-worker) build() sets env_base for every join with a probe_key
             env_base: b.env_base.expect("probed step has env"),
             dim_len: b.dim_len,
         });

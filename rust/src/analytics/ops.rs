@@ -1,13 +1,16 @@
-//! Vectorized primitive operators: selection filters, join wrappers,
-//! top-k, execution statistics.
+//! Vectorized primitive operators: branchless selection kernels, join
+//! wrappers, top-k, execution statistics.
 //!
 //! Operators work over selection vectors (`Vec<u32>` of row ids) and
 //! record an [`ExecStats`] so every query run yields the bytes-touched /
 //! rows-processed profile the memory-contention model consumes. The
-//! filters here are the leaf kernels the engine's predicate expressions
-//! ([`crate::analytics::engine::Predicate`]) compose; the hash tables
-//! themselves live in the engine layer ([`crate::analytics::engine`]) —
-//! [`JoinMap`] is a re-export alias kept for the original name.
+//! into-kernels here are the leaf shapes the engine's predicate
+//! expressions ([`crate::analytics::engine::Predicate`]) compose; the
+//! hash tables themselves live in the engine layer
+//! ([`crate::analytics::engine`]) — [`JoinMap`] is a re-export alias
+//! kept for the original name. (The one-shot owned-`Vec` filter
+//! wrappers the early engine used were dropped once the `lovelock
+//! lint` reachability walk showed nothing called them.)
 
 pub use crate::analytics::engine::join::{HashJoinTable as JoinMap, ProbeIter};
 
@@ -47,12 +50,6 @@ pub fn all_rows(n: usize) -> Vec<u32> {
     (0..n as u32).collect()
 }
 
-/// Filter a selection vector by a predicate on row index.
-/// Generic fallback; hot predicates below are specialized branch-lean.
-pub fn filter<F: Fn(u32) -> bool>(sel: &[u32], pred: F) -> Vec<u32> {
-    sel.iter().copied().filter(|&i| pred(i)).collect()
-}
-
 // ------------------------------------------------ branchless into-kernels
 //
 // The engine's hot path evaluates predicates into *caller-provided*
@@ -89,17 +86,6 @@ pub fn refine_into<F: Fn(usize) -> bool>(sel: &[u32], out: &mut [u32], pred: F) 
     k
 }
 
-/// `lo <= col[i] < hi` over f64 (e.g. discount windows in Q6).
-pub fn filter_f64_range(sel: &[u32], col: &[f64], lo: f64, hi: f64) -> Vec<u32> {
-    let mut out = vec![0u32; sel.len()];
-    let n = refine_into(sel, &mut out, |i| {
-        let v = col[i];
-        v >= lo && v < hi
-    });
-    out.truncate(n);
-    out
-}
-
 /// Morsel-parallel full-column variant of [`filter_i32_range`]: splits
 /// the column into `morsel_rows`-sized chunks, filters each on the
 /// scoped-thread pool, and concatenates the per-morsel selections in
@@ -134,31 +120,6 @@ pub fn filter_i32_range(sel: &[u32], col: &[i32], lo: i32, hi: i32) -> Vec<u32> 
     out
 }
 
-/// `col[i] < x` over f64.
-pub fn filter_f64_lt(sel: &[u32], col: &[f64], x: f64) -> Vec<u32> {
-    let mut out = vec![0u32; sel.len()];
-    let n = refine_into(sel, &mut out, |i| col[i] < x);
-    out.truncate(n);
-    out
-}
-
-/// Keep rows whose dictionary code equals `code`.
-pub fn filter_code_eq(sel: &[u32], codes: &[u32], code: u32) -> Vec<u32> {
-    let mut out = vec![0u32; sel.len()];
-    let n = refine_into(sel, &mut out, |i| codes[i] == code);
-    out.truncate(n);
-    out
-}
-
-/// Sum of `f(i)` over a selection (used for single-value aggregates).
-pub fn sum_over<F: Fn(u32) -> f64>(sel: &[u32], f: F) -> f64 {
-    let mut acc = 0.0;
-    for &i in sel {
-        acc += f(i);
-    }
-    acc
-}
-
 /// Inner hash join: returns (probe_row, build_row) pairs for matches.
 pub fn hash_join(
     build_keys: &[i64],
@@ -181,26 +142,6 @@ pub fn hash_join(
     out
 }
 
-/// Semi join: probe rows having at least one build match.
-pub fn hash_semi_join(
-    build_keys: &[i64],
-    build_sel: &[u32],
-    probe_keys: &[i64],
-    probe_sel: &[u32],
-    stats: &mut ExecStats,
-) -> Vec<u32> {
-    let map = JoinMap::build(build_keys, build_sel);
-    stats.ht_bytes += map.bytes();
-    stats.rows_in += (build_sel.len() + probe_sel.len()) as u64;
-    let out: Vec<u32> = probe_sel
-        .iter()
-        .copied()
-        .filter(|&p| map.probe_first(probe_keys[p as usize]).is_some())
-        .collect();
-    stats.rows_out += out.len() as u64;
-    out
-}
-
 /// Top-k by f64 score, descending; stable on ties by key ascending.
 pub fn top_k_desc<K: Clone + Ord>(items: &mut Vec<(K, f64)>, k: usize) {
     items.sort_by(|a, b| {
@@ -217,14 +158,9 @@ mod tests {
 
     #[test]
     fn filters_basic() {
-        let col = vec![1.0, 5.0, 3.0, 7.0, 5.5];
-        let sel = all_rows(5);
-        assert_eq!(filter_f64_range(&sel, &col, 3.0, 6.0), vec![1, 2, 4]);
-        assert_eq!(filter_f64_lt(&sel, &col, 3.5), vec![0, 2]);
         let dates = vec![10, 20, 30, 40];
         assert_eq!(filter_i32_range(&all_rows(4), &dates, 20, 40), vec![1, 2]);
-        let codes = vec![0u32, 1, 0, 2];
-        assert_eq!(filter_code_eq(&all_rows(4), &codes, 0), vec![0, 2]);
+        assert!(filter_i32_range(&[], &dates, 20, 40).is_empty());
     }
 
     #[test]
@@ -240,9 +176,9 @@ mod tests {
 
     #[test]
     fn filter_composes_on_selection() {
-        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0];
-        let sel = filter_f64_lt(&all_rows(5), &a, 4.5); // 0..=3
-        let sel2 = filter_f64_range(&sel, &a, 2.0, 10.0); // 1..=3
+        let a = vec![10, 20, 30, 40, 50];
+        let sel = filter_i32_range(&all_rows(5), &a, 0, 45); // 0..=3
+        let sel2 = filter_i32_range(&sel, &a, 15, 100); // 1..=3
         assert_eq!(sel2, vec![1, 2, 3]);
     }
 
@@ -268,15 +204,6 @@ mod tests {
     }
 
     #[test]
-    fn semi_join_dedups() {
-        let build = vec![5i64, 5, 7];
-        let probe = vec![5i64, 6, 7, 5];
-        let mut stats = ExecStats::default();
-        let got = hash_semi_join(&build, &all_rows(3), &probe, &all_rows(4), &mut stats);
-        assert_eq!(got, vec![0, 2, 3]);
-    }
-
-    #[test]
     fn join_with_selection_vectors() {
         let build = vec![1i64, 2, 3];
         let probe = vec![1i64, 2, 3];
@@ -291,18 +218,6 @@ mod tests {
         let mut items = vec![(1, 5.0), (2, 9.0), (3, 1.0), (4, 9.0)];
         top_k_desc(&mut items, 3);
         assert_eq!(items, vec![(2, 9.0), (4, 9.0), (1, 5.0)]);
-    }
-
-    #[test]
-    fn sum_over_selection() {
-        let v = [1.0, 2.0, 3.0, 4.0];
-        assert_eq!(sum_over(&[0, 3], |i| v[i as usize]), 5.0);
-    }
-
-    #[test]
-    fn generic_filter() {
-        let sel = all_rows(6);
-        assert_eq!(filter(&sel, |i| i % 2 == 0), vec![0, 2, 4]);
     }
 
     #[test]

@@ -405,10 +405,12 @@ struct WorkerShared {
 
 impl WorkerShared {
     fn leader(&self) -> &Client {
+        // lint: allow(no-panic-worker) wired once at startup, before the endpoint serves frames
         self.leader.get().expect("leader client not wired")
     }
 
     fn peers(&self) -> &[Client] {
+        // lint: allow(no-panic-worker) wired once at startup, before the endpoint serves frames
         self.peers.get().expect("peer clients not wired")
     }
 
@@ -706,7 +708,11 @@ impl WorkerShared {
             if !complete {
                 return;
             }
-            g.remove(&key).unwrap()
+            // `complete` above proved the entry exists; a racing second
+            // delivery between checks would make this None, so treat a
+            // lost race as already-reduced rather than panicking.
+            let Some(st) = g.remove(&key) else { return };
+            st
         };
         if let Err(e) = self.pre_merge(key.0, key.1, st) {
             self.ack_error(key.0, e.to_string());
@@ -715,11 +721,20 @@ impl WorkerShared {
 
     fn pre_merge(&self, qid: QueryId, partition: u32, st: ReduceState) -> Result<()> {
         let t = Instant::now();
-        let mut expect = st.expect.expect("checked complete");
+        // try_reduce only forwards states whose expect-set arrived; a
+        // frame slipping through without one is a protocol violation a
+        // hostile peer could trigger, so error-Ack instead of panicking.
+        let Some(mut expect) = st.expect else {
+            return Err(crate::err!("reduce state for {qid:?} p{partition} has no expect set"));
+        };
         expect.sort_unstable();
         let mut merger: Option<Merger> = None;
         for k in &expect {
-            let p = Partial::decode(&st.got[k])?;
+            let bytes = st
+                .got
+                .get(k)
+                .ok_or_else(|| crate::err!("missing partition frame from worker {k}"))?;
+            let p = Partial::decode(bytes)?;
             merger.get_or_insert_with(|| Merger::new(p.width)).absorb(&p)?;
         }
         let merged = match merger {
@@ -933,6 +948,11 @@ impl LeaderState {
 }
 
 /// Everything the leader endpoint's handlers touch.
+///
+/// Lock order (enforced by `lovelock lint`, rule `lock-order`):
+/// `queries` < `dead` < `sched`, and `last_heard` is leaf-only — it is
+/// stamped by every worker frame, so nothing may be acquired while it
+/// is held. `catalog` is unordered: it is only ever taken alone.
 struct LeaderShared {
     cluster: ClusterSpec,
     queries: Mutex<LeaderState>,
@@ -1877,7 +1897,10 @@ impl QueryService {
                     }
                 }
                 let now = Instant::now();
-                let heard = leader.last_heard.lock().unwrap();
+                // Snapshot `last_heard` instead of holding it: it is
+                // leaf-only in the lock order (workers stamp it on every
+                // frame), so it must never be held across `dead`.
+                let heard: Vec<Instant> = leader.last_heard.lock().unwrap().clone();
                 let mut dead = leader.dead.lock().unwrap();
                 for (i, t) in heard.iter().enumerate() {
                     if !dead.contains(&i) && now.duration_since(*t) > lease {

@@ -51,6 +51,7 @@ pub mod costmodel;
 pub mod error;
 pub mod exec;
 pub mod gnn;
+pub mod lint;
 pub mod memsim;
 pub mod metrics;
 pub mod platform;

@@ -1,0 +1,805 @@
+//! Structural layer of the invariant checker: brace matching, function
+//! extraction with `impl` qualification, the guard-liveness walk that
+//! turns `.lock()` calls into held-across facts, and call-site
+//! resolution shared by every reachability-based rule.
+//!
+//! ## Call-resolution policy
+//!
+//! Only three call shapes resolve to a callee, on purpose:
+//!
+//! 1. `self.foo(..)` — same `impl` block first, then same file, then a
+//!    scope-wide unique name;
+//! 2. `Type::foo(..)` / `module::foo(..)` — matching `impl` type first,
+//!    then a unique free function;
+//! 3. bare `foo(..)` — same file first, then scope-wide unique.
+//!
+//! A method on any *other* receiver (`guard.complete(..)`,
+//! `self.field.pump(..)`) is never resolved. That is the structural
+//! guarantee that keeps the lock graph free of false cycles: receiver
+//! types are unknown to a tokenizer, and one wrong guess (`cv.wait`
+//! resolving into a scheduler method, say) would fabricate an edge.
+//! The cost is false negatives on dynamic call paths, which the rule
+//! docs list explicitly.
+
+use super::lex::{Comment, Tok, Token};
+use std::collections::HashMap;
+
+/// A lexed source file plus its bracket-match tables.
+pub struct SourceFile {
+    pub path: String,
+    pub toks: Vec<Token>,
+    pub comments: Vec<Comment>,
+    /// `fwd[open] = close` for `{ ( [`; `usize::MAX` when unmatched.
+    pub fwd: Vec<usize>,
+    /// `rev[close] = open`; `usize::MAX` when unmatched.
+    pub rev: Vec<usize>,
+}
+
+impl SourceFile {
+    pub fn new(path: String, src: &str) -> Self {
+        let (toks, comments) = super::lex::lex(src);
+        let (fwd, rev) = match_table(&toks);
+        SourceFile { path, toks, comments, fwd, rev }
+    }
+
+    pub fn ident(&self, i: usize) -> Option<&str> {
+        match self.toks.get(i).map(|t| &t.tok) {
+            Some(Tok::Ident(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn punct(&self, i: usize) -> Option<char> {
+        match self.toks.get(i).map(|t| &t.tok) {
+            Some(Tok::Punct(c)) => Some(*c),
+            _ => None,
+        }
+    }
+
+    pub fn line(&self, i: usize) -> u32 {
+        self.toks.get(i).map(|t| t.line).unwrap_or(0)
+    }
+}
+
+/// Pair up `{}`, `()`, `[]`. Mismatches are tolerated (pop whatever is
+/// on top) so one stray token cannot wedge the whole file.
+fn match_table(toks: &[Token]) -> (Vec<usize>, Vec<usize>) {
+    let mut fwd = vec![usize::MAX; toks.len()];
+    let mut rev = vec![usize::MAX; toks.len()];
+    let mut stack: Vec<usize> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        match t.tok {
+            Tok::Punct('{') | Tok::Punct('(') | Tok::Punct('[') => stack.push(i),
+            Tok::Punct('}') | Tok::Punct(')') | Tok::Punct(']') => {
+                if let Some(o) = stack.pop() {
+                    fwd[o] = i;
+                    rev[i] = o;
+                }
+            }
+            _ => {}
+        }
+    }
+    (fwd, rev)
+}
+
+/// One `.lock()` acquisition site.
+#[derive(Debug, Clone)]
+pub struct Acq {
+    /// Receiver field name (`queries` in `self.queries.lock()`).
+    pub lock: String,
+    pub line: u32,
+}
+
+/// A lock acquired while another was live, within one function body.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub held: String,
+    pub lock: String,
+    pub line: u32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CallKind {
+    /// `self.name(..)`.
+    SelfMethod,
+    /// `Qual::name(..)` — `Qual` is a type or module segment.
+    Typed(String),
+    /// `name(..)`.
+    Bare,
+}
+
+/// A resolvable call site with the locks live at the moment of the call.
+#[derive(Debug, Clone)]
+pub struct Call {
+    pub kind: CallKind,
+    pub name: String,
+    pub line: u32,
+    pub held: Vec<String>,
+}
+
+/// An extracted function with its per-body lock/call facts.
+#[derive(Debug)]
+pub struct FnInfo {
+    pub file: usize,
+    pub name: String,
+    /// `Some("WorkerShared")` for `impl WorkerShared { fn … }`.
+    pub impl_ty: Option<String>,
+    pub line: u32,
+    /// Token indices of the body's `{` and `}`.
+    pub body: (usize, usize),
+    pub is_test: bool,
+    pub acqs: Vec<Acq>,
+    pub edges: Vec<Edge>,
+    pub calls: Vec<Call>,
+}
+
+impl FnInfo {
+    /// `File::name` style label for diagnostics.
+    pub fn qual(&self) -> String {
+        match &self.impl_ty {
+            Some(t) => format!("{t}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// Extraction result across a file set.
+pub struct Extracted {
+    pub fns: Vec<FnInfo>,
+}
+
+const ITEM_KEYWORDS: &[&str] =
+    &["fn", "mod", "struct", "enum", "trait", "impl", "const", "static", "use", "type"];
+
+pub fn extract(files: &[SourceFile]) -> Extracted {
+    let mut fns = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        extract_file(fi, f, &mut fns);
+    }
+    Extracted { fns }
+}
+
+fn extract_file(fi: usize, f: &SourceFile, out: &mut Vec<FnInfo>) {
+    let toks = &f.toks;
+    let mut impl_stack: Vec<(Option<String>, usize)> = Vec::new();
+    let mut test_regions: Vec<(usize, usize)> = Vec::new();
+    let mut pending_test = false;
+    let mut i = 0;
+    while i < toks.len() {
+        while impl_stack.last().is_some_and(|(_, close)| *close <= i) {
+            impl_stack.pop();
+        }
+        match &toks[i].tok {
+            Tok::Punct('#') => {
+                // Attribute: `#[…]` or `#![…]`.
+                let open = if f.punct(i + 1) == Some('[') {
+                    i + 1
+                } else if f.punct(i + 1) == Some('!') && f.punct(i + 2) == Some('[') {
+                    i + 2
+                } else {
+                    i += 1;
+                    continue;
+                };
+                let close = f.fwd[open];
+                if close != usize::MAX {
+                    let has_test = toks[open + 1..close]
+                        .iter()
+                        .any(|t| matches!(&t.tok, Tok::Ident(s) if s == "test"));
+                    if has_test {
+                        pending_test = true;
+                    }
+                    i = close + 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Tok::Ident(kw) if kw == "impl" => {
+                if let Some((ty, body_open)) = parse_impl_header(f, i) {
+                    let close = f.fwd[body_open];
+                    if close != usize::MAX {
+                        impl_stack.push((ty, close));
+                    }
+                    pending_test = false;
+                    i = body_open + 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Tok::Ident(kw) if kw == "mod" => {
+                // `mod name { … }` or `mod name;`. Bodies are scanned
+                // (fns inside a #[cfg(test)] mod get is_test via the
+                // recorded region).
+                if pending_test {
+                    let mut j = i + 1;
+                    while j < toks.len()
+                        && f.punct(j) != Some('{')
+                        && f.punct(j) != Some(';')
+                    {
+                        j += 1;
+                    }
+                    if f.punct(j) == Some('{') && f.fwd[j] != usize::MAX {
+                        test_regions.push((j, f.fwd[j]));
+                    }
+                }
+                pending_test = false;
+                i += 1;
+            }
+            Tok::Ident(kw) if kw == "fn" => {
+                if let Some((name, body_open)) = parse_fn_header(f, i) {
+                    let body_close = f.fwd[body_open];
+                    if body_close != usize::MAX {
+                        let in_region = test_regions
+                            .iter()
+                            .any(|(o, c)| body_open > *o && body_open < *c);
+                        let impl_ty = impl_stack.last().and_then(|(t, _)| t.clone());
+                        let mut info = FnInfo {
+                            file: fi,
+                            name,
+                            impl_ty,
+                            line: toks[i].line,
+                            body: (body_open, body_close),
+                            is_test: pending_test || in_region,
+                            acqs: Vec::new(),
+                            edges: Vec::new(),
+                            calls: Vec::new(),
+                        };
+                        analyze_body(f, &mut info);
+                        out.push(info);
+                        pending_test = false;
+                        // Skip the body: nested fns are not items we
+                        // track, and skipping keeps `impl Trait` in
+                        // expression position out of the item scan.
+                        i = body_close + 1;
+                        continue;
+                    }
+                }
+                pending_test = false;
+                i += 1;
+            }
+            Tok::Ident(kw) if ITEM_KEYWORDS.contains(&kw.as_str()) => {
+                pending_test = false;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+}
+
+/// Parse `impl<…> Type` / `impl Trait for Type`, returning the Self
+/// type name and the body-brace index.
+fn parse_impl_header(f: &SourceFile, i: usize) -> Option<(Option<String>, usize)> {
+    let toks = &f.toks;
+    let mut j = i + 1;
+    let mut angle = 0i32;
+    let mut ty: Option<String> = None;
+    let mut after_where = false;
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('<') if f.punct(j - 1) != Some('-') => angle += 1,
+            Tok::Punct('>') if f.punct(j - 1) != Some('-') => angle -= 1,
+            Tok::Punct('{') if angle <= 0 => return Some((ty, j)),
+            Tok::Punct(';') if angle <= 0 => return None, // `impl Foo;` — malformed
+            Tok::Punct('(') | Tok::Punct('[') if f.fwd[j] != usize::MAX => {
+                j = f.fwd[j];
+            }
+            Tok::Ident(s) if angle <= 0 && !after_where => {
+                if s == "for" {
+                    ty = None; // the Self type follows `for`
+                } else if s == "where" {
+                    after_where = true;
+                } else {
+                    ty = Some(s.clone()); // last path segment wins
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Parse `fn name<…>(…) -> … {`, returning the name and body `{` index.
+fn parse_fn_header(f: &SourceFile, i: usize) -> Option<(String, usize)> {
+    let name = f.ident(i + 1)?.to_string();
+    let toks = &f.toks;
+    let mut j = i + 2;
+    let mut angle = 0i32;
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct('<') if f.punct(j - 1) != Some('-') => angle += 1,
+            Tok::Punct('>') if f.punct(j - 1) != Some('-') => angle -= 1,
+            Tok::Punct('(') | Tok::Punct('[') if f.fwd[j] != usize::MAX => {
+                j = f.fwd[j];
+            }
+            Tok::Punct('{') => {
+                if angle <= 0 {
+                    return Some((name, j));
+                }
+                j = f.fwd[j].min(toks.len());
+            }
+            Tok::Punct(';') if angle <= 0 => return None, // declaration only
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// How long a guard produced at token `i` stays live.
+enum GuardLife {
+    /// Dies at this token index (a `;`, or a construct's closing `}`).
+    At(usize),
+    /// Named guard: dies at the enclosing scope's `}` unless dropped.
+    Named(String, usize),
+}
+
+struct Live {
+    lock: String,
+    name: Option<String>,
+    dies: usize,
+}
+
+const CALL_KEYWORDS: &[&str] = &[
+    "if", "while", "match", "for", "loop", "return", "in", "as", "move", "else", "unsafe",
+    "ref", "mut", "let", "fn", "break", "continue", "where",
+];
+
+/// Single linear pass over a function body: track live lock guards,
+/// emit held-while-acquiring edges and call sites with the held set.
+fn analyze_body(f: &SourceFile, info: &mut FnInfo) {
+    let (open, close) = info.body;
+    let toks = &f.toks;
+    let mut scopes: Vec<usize> = vec![close];
+    let mut live: Vec<Live> = Vec::new();
+    let mut i = open + 1;
+    while i < close {
+        live.retain(|g| g.dies > i);
+        match &toks[i].tok {
+            Tok::Punct('{') => {
+                if f.fwd[i] != usize::MAX {
+                    scopes.push(f.fwd[i]);
+                }
+            }
+            Tok::Punct('}') => {
+                if scopes.len() > 1 {
+                    scopes.pop();
+                }
+            }
+            Tok::Ident(id)
+                if id == "drop"
+                    && f.punct(i + 1) == Some('(')
+                    && f.ident(i + 2).is_some()
+                    && f.punct(i + 3) == Some(')') =>
+            {
+                let victim = f.ident(i + 2).unwrap().to_string();
+                live.retain(|g| g.name.as_deref() != Some(victim.as_str()));
+                i += 4;
+                continue;
+            }
+            Tok::Ident(id)
+                if id == "lock"
+                    && f.punct(i.wrapping_sub(1)) == Some('.')
+                    && f.punct(i + 1) == Some('(')
+                    && f.punct(i + 2) == Some(')') =>
+            {
+                if let Some((lock, chain_start)) = lock_receiver(f, i) {
+                    let line = toks[i].line;
+                    for g in &live {
+                        info.edges.push(Edge {
+                            held: g.lock.clone(),
+                            lock: lock.clone(),
+                            line,
+                        });
+                    }
+                    info.acqs.push(Acq { lock: lock.clone(), line });
+                    let scope_close = *scopes.last().unwrap_or(&close);
+                    let lifev = classify_guard(f, i, chain_start, scope_close, close);
+                    let (name, dies) = match lifev {
+                        GuardLife::At(d) => (None, d),
+                        GuardLife::Named(n, d) => (Some(n), d),
+                    };
+                    live.push(Live { lock, name, dies });
+                }
+            }
+            Tok::Ident(name) if f.punct(i + 1) == Some('(') => {
+                if !CALL_KEYWORDS.contains(&name.as_str()) {
+                    if let Some(kind) = call_kind(f, i) {
+                        info.calls.push(Call {
+                            kind,
+                            name: name.clone(),
+                            line: toks[i].line,
+                            held: live.iter().map(|g| g.lock.clone()).collect(),
+                        });
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+/// Extract the receiver field of `<chain>.lock()` at ident index `i`,
+/// plus the chain's first token index. Returns `None` when the receiver
+/// is not a plain ident (e.g. `fetch().lock()`).
+fn lock_receiver(f: &SourceFile, i: usize) -> Option<(String, usize)> {
+    let mut k = i.checked_sub(2)?;
+    if f.punct(k) == Some(']') && f.rev[k] != usize::MAX {
+        k = f.rev[k].checked_sub(1)?;
+    }
+    let recv = f.ident(k)?.to_string();
+    if recv == "self" {
+        return None; // a method literally named `lock` on self
+    }
+    // Walk the chain back over `seg.`-style prefixes to its first token.
+    let mut start = k;
+    while start >= 2 && f.punct(start - 1) == Some('.') && f.ident(start - 2).is_some() {
+        start -= 2;
+    }
+    Some((recv, start))
+}
+
+/// Decide how long the guard from the `.lock()` at `i` lives.
+fn classify_guard(
+    f: &SourceFile,
+    i: usize,
+    chain_start: usize,
+    scope_close: usize,
+    body_close: usize,
+) -> GuardLife {
+    // Backward: what context does this acquisition sit in?
+    #[derive(PartialEq)]
+    enum Ctx {
+        Stmt,
+        Let,
+        Construct,
+    }
+    let mut ctx = Ctx::Stmt;
+    let mut b = chain_start.wrapping_sub(1);
+    for _ in 0..40 {
+        if b == usize::MAX || b == 0 {
+            break;
+        }
+        match &f.toks[b].tok {
+            Tok::Punct(';') | Tok::Punct('{') | Tok::Punct('}') | Tok::Punct(',')
+            | Tok::Punct('(') => break,
+            Tok::Punct(')') | Tok::Punct(']') if f.rev[b] != usize::MAX => {
+                b = f.rev[b].wrapping_sub(1);
+                continue;
+            }
+            Tok::Ident(s) if s == "let" => {
+                // `if let` / `while let` scrutinees live for the construct.
+                if matches!(f.ident(b.wrapping_sub(1)), Some("if" | "while")) {
+                    ctx = Ctx::Construct;
+                } else {
+                    ctx = Ctx::Let;
+                }
+                break;
+            }
+            Tok::Ident(s) if matches!(s.as_str(), "if" | "while" | "match" | "for" | "else") => {
+                ctx = Ctx::Construct;
+                break;
+            }
+            Tok::Ident(s) if s == "return" => break,
+            _ => {}
+        }
+        b = b.wrapping_sub(1);
+    }
+
+    match ctx {
+        Ctx::Construct => GuardLife::At(construct_end(f, i, body_close)),
+        Ctx::Let => {
+            // Named guard only for the exact simple shape
+            // `let [mut] NAME = <chain>.lock().unwrap();` (or
+            // `.expect("…");`) — anything longer makes the guard a
+            // statement temporary under Rust's drop rules.
+            let name_idx = chain_start.wrapping_sub(2);
+            let named = f.punct(chain_start.wrapping_sub(1)) == Some('=')
+                && f.ident(name_idx).is_some();
+            let simple = {
+                let mut j = i + 3; // token after `lock ( )`
+                if f.punct(j) == Some('.')
+                    && matches!(f.ident(j + 1), Some("unwrap" | "expect"))
+                    && f.punct(j + 2) == Some('(')
+                    && f.fwd[j + 2] != usize::MAX
+                {
+                    j = f.fwd[j + 2] + 1;
+                    f.punct(j) == Some(';')
+                } else {
+                    false
+                }
+            };
+            if named && simple {
+                GuardLife::Named(f.ident(name_idx).unwrap().to_string(), scope_close)
+            } else {
+                GuardLife::At(stmt_end(f, i, scope_close))
+            }
+        }
+        Ctx::Stmt => GuardLife::At(stmt_end(f, i, scope_close)),
+    }
+}
+
+/// Next `;` at this brace level, else the scope's close.
+fn stmt_end(f: &SourceFile, i: usize, scope_close: usize) -> usize {
+    let mut j = i + 1;
+    while j < scope_close {
+        match &f.toks[j].tok {
+            Tok::Punct('{') | Tok::Punct('(') | Tok::Punct('[') if f.fwd[j] != usize::MAX => {
+                j = f.fwd[j];
+            }
+            Tok::Punct(';') => return j,
+            _ => {}
+        }
+        j += 1;
+    }
+    scope_close
+}
+
+/// Closing `}` of the construct whose header contains token `i`,
+/// extended through any `else` chain.
+fn construct_end(f: &SourceFile, i: usize, body_close: usize) -> usize {
+    let mut j = i + 1;
+    // First block at this level is the construct body.
+    while j < body_close {
+        match &f.toks[j].tok {
+            Tok::Punct('(') | Tok::Punct('[') if f.fwd[j] != usize::MAX => j = f.fwd[j],
+            Tok::Punct('{') if f.fwd[j] != usize::MAX => {
+                let mut end = f.fwd[j];
+                // `} else {` / `} else if … {` chains extend the life.
+                while f.ident(end + 1) == Some("else") {
+                    let mut k = end + 2;
+                    let mut found = false;
+                    while k < body_close {
+                        match &f.toks[k].tok {
+                            Tok::Punct('(') | Tok::Punct('[') if f.fwd[k] != usize::MAX => {
+                                k = f.fwd[k]
+                            }
+                            Tok::Punct('{') if f.fwd[k] != usize::MAX => {
+                                end = f.fwd[k];
+                                found = true;
+                                break;
+                            }
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    if !found {
+                        break;
+                    }
+                }
+                return end;
+            }
+            Tok::Punct(';') => return j, // `for x in it.lock()…;` degenerate
+            _ => {}
+        }
+        j += 1;
+    }
+    body_close
+}
+
+/// Classify a call at ident index `i` (which is followed by `(`).
+/// Returns `None` for shapes the resolver refuses on principle.
+fn call_kind(f: &SourceFile, i: usize) -> Option<CallKind> {
+    if i == 0 {
+        return Some(CallKind::Bare);
+    }
+    match f.punct(i - 1) {
+        Some('.') => {
+            // Method call: resolve only `self.name(…)`.
+            if f.ident(i.wrapping_sub(2)) == Some("self")
+                && f.punct(i.wrapping_sub(3)) != Some('.')
+            {
+                Some(CallKind::SelfMethod)
+            } else {
+                None
+            }
+        }
+        Some(':') if f.punct(i.wrapping_sub(2)) == Some(':') => {
+            // Path call `Qual::name(…)`; skip `<X as Y>::name`.
+            f.ident(i.wrapping_sub(3)).map(|q| CallKind::Typed(q.to_string()))
+        }
+        Some('!') => None, // macro bang — not a call
+        _ => Some(CallKind::Bare),
+    }
+}
+
+/// Name-indexed resolver over an in-scope, non-test subset of fns.
+pub struct Resolver<'a> {
+    pub fns: &'a [FnInfo],
+    by_name: HashMap<&'a str, Vec<usize>>,
+}
+
+impl<'a> Resolver<'a> {
+    /// `in_scope[i]` gates which fns are resolution candidates.
+    pub fn new(fns: &'a [FnInfo], in_scope: &[bool]) -> Self {
+        let mut by_name: HashMap<&str, Vec<usize>> = HashMap::new();
+        for (i, f) in fns.iter().enumerate() {
+            if in_scope[i] && !f.is_test {
+                by_name.entry(f.name.as_str()).or_default().push(i);
+            }
+        }
+        Resolver { fns, by_name }
+    }
+
+    pub fn resolve(&self, caller: &FnInfo, call: &Call) -> Option<usize> {
+        let cands = self.by_name.get(call.name.as_str())?;
+        let unique = |v: Vec<usize>| if v.len() == 1 { Some(v[0]) } else { None };
+        match &call.kind {
+            CallKind::SelfMethod => {
+                let ty = caller.impl_ty.as_deref();
+                let same_impl: Vec<usize> = cands
+                    .iter()
+                    .copied()
+                    .filter(|&c| {
+                        self.fns[c].impl_ty.as_deref() == ty && self.fns[c].file == caller.file
+                    })
+                    .collect();
+                if let Some(c) = unique(same_impl) {
+                    return Some(c);
+                }
+                let same_ty: Vec<usize> = cands
+                    .iter()
+                    .copied()
+                    .filter(|&c| self.fns[c].impl_ty.as_deref() == ty)
+                    .collect();
+                if let Some(c) = unique(same_ty) {
+                    return Some(c);
+                }
+                let same_file: Vec<usize> =
+                    cands.iter().copied().filter(|&c| self.fns[c].file == caller.file).collect();
+                unique(same_file).or_else(|| unique(cands.clone()))
+            }
+            CallKind::Typed(q) => {
+                let ty = if q == "Self" { caller.impl_ty.as_deref() } else { Some(q.as_str()) };
+                let same_ty: Vec<usize> = cands
+                    .iter()
+                    .copied()
+                    .filter(|&c| self.fns[c].impl_ty.as_deref() == ty)
+                    .collect();
+                if let Some(c) = unique(same_ty) {
+                    return Some(c);
+                }
+                // Module-path call to a free fn (`planir::compile`).
+                let free: Vec<usize> =
+                    cands.iter().copied().filter(|&c| self.fns[c].impl_ty.is_none()).collect();
+                unique(free).or_else(|| unique(cands.clone()))
+            }
+            CallKind::Bare => {
+                let same_file: Vec<usize> =
+                    cands.iter().copied().filter(|&c| self.fns[c].file == caller.file).collect();
+                unique(same_file).or_else(|| unique(cands.clone()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_file(src: &str) -> (Vec<SourceFile>, Extracted) {
+        let files = vec![SourceFile::new("rust/src/coordinator/t.rs".into(), src)];
+        let ex = extract(&files);
+        (files, ex)
+    }
+
+    #[test]
+    fn extracts_impl_qualified_fns_and_skips_tests() {
+        let src = r#"
+            impl Leader {
+                pub fn go(&self) {}
+            }
+            fn free() {}
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn t() {}
+                fn helper() {}
+            }
+        "#;
+        let (_, ex) = one_file(src);
+        let names: Vec<(String, bool)> =
+            ex.fns.iter().map(|f| (f.qual(), f.is_test)).collect();
+        assert!(names.contains(&("Leader::go".into(), false)));
+        assert!(names.contains(&("free".into(), false)));
+        assert!(names.contains(&("t".into(), true)));
+        assert!(names.contains(&("helper".into(), true)));
+    }
+
+    #[test]
+    fn named_guard_spans_scope_and_drop_kills_it() {
+        let src = r#"
+            impl S {
+                fn a(&self) {
+                    let mut q = self.queries.lock().unwrap();
+                    let mut s = self.sched.lock().unwrap();
+                    q.push(s.pop());
+                }
+                fn b(&self) {
+                    let mut q = self.queries.lock().unwrap();
+                    drop(q);
+                    let mut s = self.sched.lock().unwrap();
+                    s.clear();
+                }
+            }
+        "#;
+        let (_, ex) = one_file(src);
+        let a = ex.fns.iter().find(|f| f.name == "a").unwrap();
+        assert_eq!(a.edges.len(), 1);
+        assert_eq!((a.edges[0].held.as_str(), a.edges[0].lock.as_str()), ("queries", "sched"));
+        let b = ex.fns.iter().find(|f| f.name == "b").unwrap();
+        assert!(b.edges.is_empty(), "drop() must release the guard: {:?}", b.edges);
+    }
+
+    #[test]
+    fn statement_temp_dies_at_semicolon() {
+        let src = r#"
+            fn f(x: &X) {
+                let n: Vec<u32> = x.stats.lock().unwrap().clone();
+                let mut d = x.dead.lock().unwrap();
+                d.extend(n);
+            }
+        "#;
+        let (_, ex) = one_file(src);
+        assert!(ex.fns[0].edges.is_empty(), "temp guard leaked: {:?}", ex.fns[0].edges);
+        assert_eq!(ex.fns[0].acqs.len(), 2);
+    }
+
+    #[test]
+    fn construct_scoped_temp_lives_for_the_construct() {
+        let src = r#"
+            fn f(x: &X) {
+                if let Some(v) = x.heard.lock().unwrap().get(0) {
+                    let d = x.dead.lock().unwrap();
+                    use_it(v, d);
+                }
+                let q = x.queries.lock().unwrap();
+                q.len();
+            }
+        "#;
+        let (_, ex) = one_file(src);
+        let edges: Vec<(String, String)> =
+            ex.fns[0].edges.iter().map(|e| (e.held.clone(), e.lock.clone())).collect();
+        assert_eq!(edges, vec![("heard".into(), "dead".into())]);
+    }
+
+    #[test]
+    fn calls_record_held_locks_and_receiver_policy() {
+        let src = r#"
+            impl S {
+                fn outer(&self) {
+                    let g = self.queries.lock().unwrap();
+                    self.inner();
+                    other.never_resolved();
+                    g.touch();
+                }
+                fn inner(&self) {}
+            }
+        "#;
+        let (_, ex) = one_file(src);
+        let outer = ex.fns.iter().find(|f| f.name == "outer").unwrap();
+        let names: Vec<&str> = outer.calls.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["inner"], "non-self receivers must not be recorded");
+        assert_eq!(outer.calls[0].held, vec!["queries".to_string()]);
+    }
+
+    #[test]
+    fn match_scrutinee_guard_is_construct_scoped() {
+        let src = r#"
+            fn f(x: &X) {
+                let db = match x.catalog.lock().unwrap().get(0) {
+                    Some(d) => d,
+                    None => return,
+                };
+                let p = x.plans.lock().unwrap();
+                p.insert(db);
+            }
+        "#;
+        let (_, ex) = one_file(src);
+        assert!(
+            ex.fns[0].edges.is_empty(),
+            "match-scrutinee temp must die at match end: {:?}",
+            ex.fns[0].edges
+        );
+    }
+}

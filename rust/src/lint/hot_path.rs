@@ -1,0 +1,163 @@
+//! RULE `hot-path-alloc` — allocating constructs must not be reachable
+//! from the per-morsel kernels or the pooled-frame encode paths.
+//!
+//! The runtime `alloc_regression.rs` gate counts allocations on the
+//! paths the bench actually drives; this rule covers the code it never
+//! executes (rare branches, error paths, new call sites added later).
+//! Roots are the batch kernels (`fold_range`, `eval_into`,
+//! `update_sel`, …) and the wire-encode entry points that write into
+//! pooled buffers. Reachability follows the shared resolver; closure
+//! dispatch (`(c.eval)(…)`) is opaque to a tokenizer, so compiled-
+//! expression bodies are covered at their definition sites (they are
+//! roots themselves) rather than through the indirect call.
+//!
+//! `reserve`/`extend_from_slice`/`push` are deliberately not flagged:
+//! growing a caller-provided, pooled buffer is the sanctioned pattern
+//! (amortized to zero in steady state and measured by the runtime
+//! gate); what the rule rejects is constructing fresh owned storage
+//! per call.
+
+use super::fns::{Extracted, FnInfo, Resolver, SourceFile};
+use super::lex::Tok;
+use super::{Allows, Diag};
+use std::collections::VecDeque;
+
+pub const RULE: &str = "hot-path-alloc";
+
+/// (file suffix, fn name) pairs that anchor the reachability walk.
+const ROOTS: &[(&str, &str)] = &[
+    ("analytics/engine/mod.rs", "fold_range"),
+    ("analytics/engine/mod.rs", "fold_sel"),
+    ("analytics/engine/mod.rs", "select_pruned"),
+    ("analytics/engine/mod.rs", "run_range_scratch"),
+    ("analytics/engine/mod.rs", "aggregate_sel_scratch"),
+    ("analytics/engine/expr.rs", "eval_into"),
+    ("analytics/engine/agg.rs", "update_sel"),
+    ("analytics/engine/partial.rs", "encode_into"),
+    ("coordinator/protocol.rs", "encode_parts_into"),
+    ("src/rpc.rs", "frame_with"),
+    ("src/rpc.rs", "cast_frame"),
+    ("src/rpc.rs", "get"),
+    ("src/rpc.rs", "put"),
+];
+
+/// Files whose fns participate in resolution and scanning.
+const SCOPE: &[&str] = &[
+    "analytics/engine/mod.rs",
+    "analytics/engine/expr.rs",
+    "analytics/engine/agg.rs",
+    "analytics/engine/join.rs",
+    "analytics/engine/partial.rs",
+    "analytics/ops.rs",
+    "coordinator/protocol.rs",
+    "src/rpc.rs",
+    "src/wirefmt.rs",
+];
+
+const ALLOC_TYPES: &[&str] =
+    &["Vec", "String", "Box", "HashMap", "HashSet", "VecDeque", "BTreeMap", "BTreeSet"];
+const ALLOC_CTORS: &[&str] = &["new", "with_capacity", "from"];
+const ALLOC_METHODS: &[&str] = &["collect", "to_vec", "to_owned", "to_string", "clone"];
+const ALLOC_MACROS: &[&str] = &["vec", "format"];
+
+fn in_scope(path: &str) -> bool {
+    SCOPE.iter().any(|s| path.ends_with(s))
+}
+
+pub fn check(files: &[SourceFile], ex: &Extracted, allows: &[Allows], diags: &mut Vec<Diag>) {
+    let scope: Vec<bool> = ex.fns.iter().map(|f| in_scope(&files[f.file].path)).collect();
+    let resolver = Resolver::new(&ex.fns, &scope);
+
+    // BFS from the roots; remember which root first reached each fn.
+    let mut root_of: Vec<Option<usize>> = vec![None; ex.fns.len()];
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    for (i, f) in ex.fns.iter().enumerate() {
+        if f.is_test || !scope[i] {
+            continue;
+        }
+        let is_root = ROOTS
+            .iter()
+            .any(|(suf, name)| files[f.file].path.ends_with(suf) && f.name == *name);
+        if is_root {
+            root_of[i] = Some(i);
+            queue.push_back(i);
+        }
+    }
+    while let Some(i) = queue.pop_front() {
+        let f = &ex.fns[i];
+        for c in &f.calls {
+            if let Some(g) = resolver.resolve(f, c) {
+                if root_of[g].is_none() {
+                    root_of[g] = root_of[i];
+                    queue.push_back(g);
+                }
+            }
+        }
+    }
+
+    for (i, f) in ex.fns.iter().enumerate() {
+        let Some(root) = root_of[i] else { continue };
+        scan_fn(files, f, &ex.fns[root], &allows[f.file], diags);
+    }
+}
+
+fn scan_fn(
+    files: &[SourceFile],
+    f: &FnInfo,
+    root: &FnInfo,
+    allows: &Allows,
+    diags: &mut Vec<Diag>,
+) {
+    let file = &files[f.file];
+    let (open, close) = f.body;
+    let mut flag = |line: u32, what: &str, diags: &mut Vec<Diag>| {
+        if allows.allowed(RULE, line) {
+            return;
+        }
+        diags.push(Diag {
+            file: file.path.clone(),
+            line,
+            rule: RULE,
+            msg: format!(
+                "{what} allocates on a hot path (reachable from root `{}` via `{}`) — reuse \
+                 caller-provided buffers or add `// lint: allow({RULE}) reason`",
+                root.qual(),
+                f.qual()
+            ),
+        });
+    };
+    let mut i = open + 1;
+    while i < close {
+        match &file.toks[i].tok {
+            Tok::Ident(m)
+                if ALLOC_MACROS.contains(&m.as_str()) && file.punct(i + 1) == Some('!') =>
+            {
+                flag(file.line(i), &format!("`{m}!`"), diags);
+            }
+            Tok::Ident(t)
+                if ALLOC_TYPES.contains(&t.as_str())
+                    && file.punct(i + 1) == Some(':')
+                    && file.punct(i + 2) == Some(':')
+                    && file
+                        .ident(i + 3)
+                        .is_some_and(|m| ALLOC_CTORS.contains(&m)) =>
+            {
+                let m = file.ident(i + 3).unwrap();
+                flag(file.line(i), &format!("`{t}::{m}`"), diags);
+                i += 4;
+                continue;
+            }
+            Tok::Ident(m)
+                if ALLOC_METHODS.contains(&m.as_str())
+                    && file.punct(i.wrapping_sub(1)) == Some('.')
+                    && (file.punct(i + 1) == Some('(')
+                        || (file.punct(i + 1) == Some(':')
+                            && file.punct(i + 2) == Some(':'))) =>
+            {
+                flag(file.line(i), &format!("`.{m}()`"), diags);
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}

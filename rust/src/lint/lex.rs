@@ -1,0 +1,348 @@
+//! Minimal Rust tokenizer for the invariant checker — the same
+//! hand-rolled zero-dependency style as [`crate::analytics::sql::lex`],
+//! but for Rust source instead of SQL text.
+//!
+//! The rules downstream only need a faithful token stream with line
+//! numbers plus the comments (the allowlist lives in comments), so this
+//! lexer is deliberately lossy where it can afford to be: string and
+//! char literals keep no content, numeric literals keep raw text (for
+//! tag-value comparison), and every other non-ident character becomes a
+//! single-character [`Tok::Punct`]. What it must not be lossy about:
+//! comment boundaries (including nested `/* /* */ */`), raw strings
+//! (`r#"…"#` may contain `//` and braces), and the lifetime-vs-char
+//! ambiguity of `'` — getting any of those wrong desynchronizes every
+//! brace-matching pass built on top.
+
+/// One lexed token.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`fn`, `impl`, `queries`, …).
+    Ident(String),
+    /// Numeric literal, raw text preserved (`0x51`, `1_000`, `2.5`).
+    Num(String),
+    /// String literal (content dropped; raw/byte strings included).
+    Str,
+    /// Char literal (content dropped).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Life,
+    /// Any other single character (`{`, `.`, `=`, `#`, …).
+    Punct(char),
+}
+
+/// A token with the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// A comment with the 1-based line it starts on. `text` excludes the
+/// `//` / `/*` markers.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lex `src` into tokens plus the comment list.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    let cs: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut line: u32 = 1;
+    let mut i = 0;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < cs.len() && cs[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment { line, text: cs[start..j].iter().collect() });
+            i = j;
+            continue;
+        }
+        // Block comment, possibly nested.
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let start_line = line;
+            let start = i + 2;
+            let mut j = start;
+            let mut depth = 1usize;
+            while j < cs.len() && depth > 0 {
+                if cs[j] == '/' && cs.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && cs.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            let end = j.saturating_sub(2).max(start);
+            comments.push(Comment { line: start_line, text: cs[start..end].iter().collect() });
+            i = j;
+            continue;
+        }
+        // Raw / byte strings: r"…", r#"…"#, br"…", b"…".
+        if c == 'r' || c == 'b' {
+            let (skip, is_raw) = match (c, cs.get(i + 1), cs.get(i + 2)) {
+                ('r', Some(&'"'), _) | ('r', Some(&'#'), _) => (1, true),
+                ('b', Some(&'r'), Some(&'"')) | ('b', Some(&'r'), Some(&'#')) => (2, true),
+                ('b', Some(&'"'), _) => (1, false),
+                ('b', Some(&'\''), _) => {
+                    // Byte char literal b'x'.
+                    toks.push(Token { tok: Tok::Char, line });
+                    i = skip_char_literal(&cs, i + 1, &mut line);
+                    continue;
+                }
+                _ => (0, false),
+            };
+            // `r#ident` raw identifiers share the `r#` prefix with raw
+            // strings — only commit once the opening quote is seen.
+            let mut j = i + skip;
+            let mut hashes = 0usize;
+            while is_raw && cs.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if is_raw && cs.get(j) == Some(&'"') {
+                j += 1;
+                // Scan for `"` followed by `hashes` hash marks.
+                'outer: while j < cs.len() {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    } else if cs[j] == '"' {
+                        for k in 0..hashes {
+                            if cs.get(j + 1 + k) != Some(&'#') {
+                                j += 1;
+                                continue 'outer;
+                            }
+                        }
+                        j += 1 + hashes;
+                        break;
+                    }
+                    j += 1;
+                }
+                toks.push(Token { tok: Tok::Str, line });
+                i = j;
+                continue;
+            }
+            if skip == 1 && c == 'b' {
+                // b"…": plain string with a byte prefix.
+                let start_line = line;
+                i = skip_string(&cs, i + 2, &mut line);
+                toks.push(Token { tok: Tok::Str, line: start_line });
+                continue;
+            }
+            // Fall through: plain identifier starting with r/b.
+        }
+        if c == '"' {
+            let start_line = line;
+            i = skip_string(&cs, i + 1, &mut line);
+            toks.push(Token { tok: Tok::Str, line: start_line });
+            continue;
+        }
+        if c == '\'' {
+            // Lifetime if followed by ident-start NOT closing with a
+            // quote right after ('a vs 'a'). `'_'` is a char pattern in
+            // theory but `'_` the placeholder lifetime in practice.
+            let next = cs.get(i + 1).copied().unwrap_or(' ');
+            let after = cs.get(i + 2).copied().unwrap_or(' ');
+            if (next.is_alphabetic() || next == '_') && after != '\'' {
+                let mut j = i + 1;
+                while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                toks.push(Token { tok: Tok::Life, line });
+                i = j;
+                continue;
+            }
+            toks.push(Token { tok: Tok::Char, line });
+            i = skip_char_literal(&cs, i, &mut line);
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < cs.len() && (cs[j].is_alphanumeric() || cs[j] == '_') {
+                j += 1;
+            }
+            toks.push(Token { tok: Tok::Ident(cs[i..j].iter().collect()), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < cs.len() {
+                let d = cs[j];
+                if d.is_alphanumeric() || d == '_' {
+                    j += 1;
+                } else if d == '.'
+                    && cs.get(j + 1).is_some_and(|n| n.is_ascii_digit())
+                {
+                    // Float continuation, but never `0..n` ranges.
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Token { tok: Tok::Num(cs[i..j].iter().collect()), line });
+            i = j;
+            continue;
+        }
+        toks.push(Token { tok: Tok::Punct(c), line });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// Skip a string body starting just past the opening quote; returns the
+/// index just past the closing quote.
+fn skip_string(cs: &[char], mut j: usize, line: &mut u32) -> usize {
+    while j < cs.len() {
+        match cs[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Skip a char literal starting at the opening `'`; returns the index
+/// just past the closing `'`.
+fn skip_char_literal(cs: &[char], i: usize, line: &mut u32) -> usize {
+    let mut j = i + 1;
+    while j < cs.len() {
+        match cs[j] {
+            '\\' => j += 2,
+            '\'' => return j + 1,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Parse a numeric literal's value: handles `0x`/`0o`/`0b` radixes,
+/// `_` separators, and type suffixes (`0x51u32`). Returns `None` for
+/// floats or malformed text.
+pub fn num_value(text: &str) -> Option<u64> {
+    let t: String = text.chars().filter(|c| *c != '_').collect();
+    let (radix, digits) = if let Some(rest) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X"))
+    {
+        (16, rest)
+    } else if let Some(rest) = t.strip_prefix("0b").or_else(|| t.strip_prefix("0B")) {
+        (2, rest)
+    } else if let Some(rest) = t.strip_prefix("0o").or_else(|| t.strip_prefix("0O")) {
+        (8, rest)
+    } else {
+        (10, t.as_str())
+    };
+    // Take digit chars valid in this radix; the remainder must be a
+    // type suffix (starts with a letter outside the radix set).
+    let end = digits
+        .char_indices()
+        .find(|(_, c)| !c.is_digit(radix))
+        .map(|(i, _)| i)
+        .unwrap_or(digits.len());
+    if end == 0 {
+        return None;
+    }
+    let (num, suffix) = digits.split_at(end);
+    if !suffix.is_empty() && !suffix.chars().next().is_some_and(|c| c.is_alphabetic()) {
+        return None; // e.g. a float's `.5` tail
+    }
+    u64::from_str_radix(num, radix).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .0
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn basic_tokens_and_lines() {
+        let (toks, comments) = lex("fn f() {\n  x.lock(); // held\n}\n");
+        assert!(matches!(&toks[0].tok, Tok::Ident(s) if s == "fn"));
+        let lock = toks.iter().find(|t| t.tok == Tok::Ident("lock".into())).unwrap();
+        assert_eq!(lock.line, 2);
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].line, 2);
+        assert_eq!(comments[0].text.trim(), "held");
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let (toks, comments) = lex("/* a /* b */ c */ let s = r#\"no // comment {\"#;");
+        assert_eq!(comments.len(), 1);
+        assert!(comments[0].text.contains("b"));
+        // The raw string swallowed its contents: no brace puncts.
+        assert!(!toks.iter().any(|t| t.tok == Tok::Punct('{')));
+        assert!(toks.iter().any(|t| t.tok == Tok::Str));
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let (toks, _) = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifes = toks.iter().filter(|t| t.tok == Tok::Life).count();
+        let chars = toks.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!(lifes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn ranges_do_not_eat_dots() {
+        let (toks, _) = lex("for i in 0..n { a[i] = 2.5; }");
+        assert!(toks.iter().any(|t| t.tok == Tok::Num("0".into())));
+        assert!(toks.iter().any(|t| t.tok == Tok::Num("2.5".into())));
+        assert_eq!(toks.iter().filter(|t| t.tok == Tok::Punct('.')).count(), 2);
+    }
+
+    #[test]
+    fn num_values() {
+        assert_eq!(num_value("0x51"), Some(0x51));
+        assert_eq!(num_value("0x5A"), Some(0x5A));
+        assert_eq!(num_value("81u32"), Some(81));
+        assert_eq!(num_value("1_000"), Some(1000));
+        assert_eq!(num_value("0b1010"), Some(10));
+        assert_eq!(num_value("2.5"), None);
+    }
+
+    #[test]
+    fn keywords_are_idents() {
+        assert_eq!(idents("impl Foo for Bar {}"), vec!["impl", "Foo", "for", "Bar"]);
+    }
+}

@@ -1,0 +1,254 @@
+//! RULE `lock-order` — the inter-lock acquisition graph over the
+//! coordinator must be acyclic and respect the canonical order.
+//!
+//! The canonical order is written in exactly one place in the checked
+//! tree (the `LeaderShared` doc comment in `coordinator/service.rs`)
+//! and encoded exactly once here, in [`CANONICAL`]: `queries` before
+//! `dead` before `sched`, with `last_heard` leaf-only (never held
+//! while acquiring anything — the monitor reads it on every beat, so
+//! any lock taken under it inherits heartbeat latency).
+//!
+//! Edges come from two sources: a second `.lock()` while a guard is
+//! live in the same body, and a call made while a guard is live whose
+//! callee (transitively, via the resolver) acquires a lock. Locks are
+//! identified by receiver *field name* — two distinct mutexes sharing
+//! a field name would unify, which is why the checked scope is the
+//! coordinator plus `rpc.rs`/`exec.rs` where names are unique.
+
+use super::fns::{Extracted, Resolver, SourceFile};
+use super::{Allows, Diag};
+use std::collections::{BTreeMap, BTreeSet};
+
+pub const RULE: &str = "lock-order";
+
+/// Canonical acquisition order, outermost first.
+pub const CANONICAL: &[&str] = &["queries", "dead", "sched"];
+
+/// Locks that may never be held across another acquisition.
+pub const LEAF_ONLY: &[&str] = &["last_heard"];
+
+fn in_scope(path: &str) -> bool {
+    path.contains("/coordinator/")
+        || path.ends_with("src/rpc.rs")
+        || path.ends_with("src/exec.rs")
+}
+
+/// A lock acquisition attributable to a source site.
+#[derive(Clone)]
+struct Site {
+    file: usize,
+    line: u32,
+}
+
+pub fn check(
+    files: &[SourceFile],
+    ex: &Extracted,
+    allows: &[Allows],
+    diags: &mut Vec<Diag>,
+) {
+    let scope: Vec<bool> =
+        ex.fns.iter().map(|f| in_scope(&files[f.file].path)).collect();
+    let resolver = Resolver::new(&ex.fns, &scope);
+
+    // Transitive closure of acquisitions per fn: lock name -> one
+    // witness site. Fixpoint iteration; the graph is tiny.
+    let n = ex.fns.len();
+    let mut closure: Vec<BTreeMap<String, Site>> = vec![BTreeMap::new(); n];
+    for (i, f) in ex.fns.iter().enumerate() {
+        if !scope[i] || f.is_test {
+            continue;
+        }
+        for a in &f.acqs {
+            closure[i]
+                .entry(a.lock.clone())
+                .or_insert(Site { file: f.file, line: a.line });
+        }
+    }
+    let callees: Vec<Vec<usize>> = ex
+        .fns
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            if !scope[i] || f.is_test {
+                return Vec::new();
+            }
+            f.calls.iter().filter_map(|c| resolver.resolve(f, c)).collect()
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for i in 0..n {
+            for &g in &callees[i] {
+                let add: Vec<(String, Site)> = closure[g]
+                    .iter()
+                    .filter(|(k, _)| !closure[i].contains_key(*k))
+                    .map(|(k, v)| (k.clone(), v.clone()))
+                    .collect();
+                if !add.is_empty() {
+                    changed = true;
+                    closure[i].extend(add);
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Collect edges: (held, acquired) -> first witness + provenance.
+    let mut edges: BTreeMap<(String, String), (Site, String)> = BTreeMap::new();
+    let mut add_edge = |held: &str, lock: &str, site: Site, how: String| {
+        if allows[site.file].allowed(RULE, site.line) {
+            return;
+        }
+        edges
+            .entry((held.to_string(), lock.to_string()))
+            .or_insert((site, how));
+    };
+    for (i, f) in ex.fns.iter().enumerate() {
+        if !scope[i] || f.is_test {
+            continue;
+        }
+        for e in &f.edges {
+            add_edge(
+                &e.held,
+                &e.lock,
+                Site { file: f.file, line: e.line },
+                format!("in `{}`", f.qual()),
+            );
+        }
+        for c in &f.calls {
+            if c.held.is_empty() {
+                continue;
+            }
+            let Some(g) = resolver.resolve(f, c) else { continue };
+            for (lock, site) in &closure[g] {
+                for held in &c.held {
+                    add_edge(
+                        held,
+                        lock,
+                        site.clone(),
+                        format!(
+                            "via `{}` -> `{}` at {}:{}",
+                            f.qual(),
+                            ex.fns[g].qual(),
+                            files[f.file].path,
+                            c.line
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    let mut out: BTreeSet<(String, u32, String)> = BTreeSet::new();
+    let pos = |l: &str| CANONICAL.iter().position(|c| *c == l);
+    for ((held, lock), (site, how)) in &edges {
+        let path = files[site.file].path.clone();
+        if held == lock {
+            out.insert((
+                path,
+                site.line,
+                format!("`{held}` re-acquired while already held ({how}) — self-deadlock"),
+            ));
+            continue;
+        }
+        if LEAF_ONLY.contains(&held.as_str()) {
+            out.insert((
+                path,
+                site.line,
+                format!(
+                    "`{lock}` acquired while `{held}` is held ({how}) — `{held}` is leaf-only"
+                ),
+            ));
+            continue;
+        }
+        if let (Some(ph), Some(pl)) = (pos(held), pos(lock)) {
+            if ph > pl {
+                out.insert((
+                    path,
+                    site.line,
+                    format!(
+                        "`{lock}` acquired while `{held}` is held ({how}) — canonical order is {}",
+                        CANONICAL.join(" < ")
+                    ),
+                ));
+            }
+        }
+    }
+
+    // Cycle detection over the remaining (non-self) edge graph.
+    let nodes: BTreeSet<&str> = edges
+        .keys()
+        .flat_map(|(a, b)| [a.as_str(), b.as_str()])
+        .collect();
+    let nodes: Vec<&str> = nodes.into_iter().collect();
+    let idx: BTreeMap<&str, usize> = nodes.iter().enumerate().map(|(i, n)| (*n, i)).collect();
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+    for (a, b) in edges.keys() {
+        if a != b {
+            adj[idx[a.as_str()]].push(idx[b.as_str()]);
+        }
+    }
+    for cyc in collect_cycles(&adj) {
+        let names: Vec<&str> = cyc.iter().map(|&i| nodes[i]).collect();
+        let mut parts = Vec::new();
+        for w in 0..names.len() {
+            let a = names[w];
+            let b = names[(w + 1) % names.len()];
+            if let Some((site, _)) = edges.get(&(a.to_string(), b.to_string())) {
+                parts.push(format!("{} -> {} at {}:{}", a, b, files[site.file].path, site.line));
+            }
+        }
+        // Anchor the diag at the first edge's site.
+        let first = edges
+            .get(&(names[0].to_string(), names[1 % names.len()].to_string()))
+            .map(|(s, _)| (files[s.file].path.clone(), s.line))
+            .unwrap_or_default();
+        out.insert((
+            first.0,
+            first.1,
+            format!("lock cycle: {} -> {} ({})", names.join(" -> "), names[0], parts.join("; ")),
+        ));
+    }
+
+    for (file, line, msg) in out {
+        diags.push(Diag { file, line, rule: RULE, msg });
+    }
+}
+
+/// Find elementary cycles, one representative per distinct node set.
+fn collect_cycles(adj: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    let n = adj.len();
+    let mut found: Vec<Vec<usize>> = Vec::new();
+    let mut seen_sets: BTreeSet<Vec<usize>> = BTreeSet::new();
+    for start in 0..n {
+        // DFS from `start`, only visiting nodes >= start (canonical
+        // smallest-node representative per cycle).
+        let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+        let mut path: Vec<usize> = vec![start];
+        let mut on_path = vec![false; n];
+        on_path[start] = true;
+        while let Some((node, ei)) = stack.last_mut() {
+            if let Some(&next) = adj[*node].get(*ei) {
+                *ei += 1;
+                if next == start {
+                    let mut key = path.clone();
+                    key.sort_unstable();
+                    if seen_sets.insert(key) {
+                        found.push(path.clone());
+                    }
+                } else if next > start && !on_path[next] {
+                    on_path[next] = true;
+                    path.push(next);
+                    stack.push((next, 0));
+                }
+            } else {
+                on_path[*node] = false;
+                path.pop();
+                stack.pop();
+            }
+        }
+    }
+    found
+}

@@ -1,0 +1,245 @@
+//! `lovelock lint` — a zero-dependency invariant checker over
+//! `rust/src/**`, in the same hand-rolled spirit as the SQL front end:
+//! a lightweight Rust tokenizer ([`lex`]), a brace-tree/function
+//! extractor with a lock-guard liveness walk ([`fns`]), and four rules
+//! grounded in invariants this repo has already broken once:
+//!
+//! | RULE-ID           | invariant                                           |
+//! |-------------------|-----------------------------------------------------|
+//! | `lock-order`      | coordinator lock graph acyclic + canonical order    |
+//! | `hot-path-alloc`  | no fresh allocation reachable from morsel kernels   |
+//! | `wire-tag`        | tag constants collision-free, matches total         |
+//! | `no-panic-worker` | worker decode/compile paths return errors, not panics |
+//! | `lint-allow`      | (meta) every allow comment carries a reason         |
+//!
+//! Diagnostics are `file:line: RULE-ID message` on stdout (or a JSON
+//! array with `--json`). A finding is suppressed by an allow comment
+//! **with a mandatory reason** on the same or preceding line:
+//!
+//! ```text
+//! // lint: allow(no-panic-worker) wired once at startup, before any frame
+//! ```
+//!
+//! Codec indexing is proven rather than allowed: a `// bound: …`
+//! comment citing the length check satisfies `no-panic-worker`'s
+//! indexing sub-check.
+
+pub mod fns;
+pub mod hot_path;
+pub mod lex;
+pub mod lock_order;
+pub mod no_panic;
+pub mod wire_tags;
+
+use crate::Result;
+use fns::SourceFile;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One diagnostic.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diag {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, w: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(w, "{}:{}: {} {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Per-file allowlist: `// lint: allow(RULE-ID) reason` and
+/// `// bound: …` annotations. An annotation covers its own line and
+/// the next line (so a comment above the flagged expression works).
+#[derive(Default)]
+pub struct Allows {
+    /// line -> rules allowed there (with a non-empty reason).
+    allows: BTreeMap<u32, BTreeSet<String>>,
+    bounds: BTreeSet<u32>,
+}
+
+impl Allows {
+    pub fn allowed(&self, rule: &str, line: u32) -> bool {
+        [line, line.saturating_sub(1)]
+            .iter()
+            .any(|l| self.allows.get(l).is_some_and(|rs| rs.contains(rule)))
+    }
+
+    pub fn bound(&self, line: u32) -> bool {
+        self.bounds.contains(&line) || self.bounds.contains(&line.saturating_sub(1))
+    }
+}
+
+/// Parse a file's comments into its allowlist; missing reasons become
+/// `lint-allow` diagnostics (the allow still suppresses, so a fix
+/// doesn't cascade, but CI fails until the reason is written).
+fn parse_allows(file: &SourceFile, diags: &mut Vec<Diag>) -> Allows {
+    let mut a = Allows::default();
+    for c in &file.comments {
+        let text = c.text.trim();
+        if let Some(rest) = text.strip_prefix("bound:") {
+            if !rest.trim().is_empty() {
+                a.bounds.insert(c.line);
+            }
+            continue;
+        }
+        let Some(at) = text.find("lint: allow(") else { continue };
+        let rest = &text[at + "lint: allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let rule = rest[..close].trim().to_string();
+        let reason = rest[close + 1..].trim();
+        if reason.is_empty() {
+            diags.push(Diag {
+                file: file.path.clone(),
+                line: c.line,
+                rule: "lint-allow",
+                msg: format!(
+                    "allow({rule}) has no reason — `// lint: allow(RULE-ID) why it is safe`"
+                ),
+            });
+        }
+        a.allows.entry(c.line).or_default().insert(rule);
+    }
+    a
+}
+
+/// Lint a set of `(path, source)` pairs. The testable core: fixtures
+/// feed virtual paths here, the CLI feeds the real tree.
+pub fn lint_sources(sources: &[(String, String)]) -> Vec<Diag> {
+    let files: Vec<SourceFile> =
+        sources.iter().map(|(p, s)| SourceFile::new(p.clone(), s)).collect();
+    let mut diags = Vec::new();
+    let allows: Vec<Allows> = files.iter().map(|f| parse_allows(f, &mut diags)).collect();
+    let extracted = fns::extract(&files);
+    lock_order::check(&files, &extracted, &allows, &mut diags);
+    hot_path::check(&files, &extracted, &allows, &mut diags);
+    wire_tags::check(&files, &allows, &mut diags);
+    no_panic::check(&files, &extracted, &allows, &mut diags);
+    diags.sort();
+    diags.dedup();
+    diags
+}
+
+/// Recursively collect `.rs` files under each path (or the path itself
+/// for a plain file), sorted for deterministic output.
+pub fn load_paths(paths: &[String]) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for p in paths {
+        collect(std::path::Path::new(p), &mut out)?;
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn collect(p: &std::path::Path, out: &mut Vec<(String, String)>) -> Result<()> {
+    if p.is_dir() {
+        let mut entries: Vec<_> = std::fs::read_dir(p)
+            .map_err(crate::error::Error::msg)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .collect();
+        entries.sort();
+        for e in entries {
+            collect(&e, out)?;
+        }
+    } else if p.extension().is_some_and(|e| e == "rs") {
+        let text = std::fs::read_to_string(p).map_err(crate::error::Error::msg)?;
+        out.push((p.to_string_lossy().into_owned(), text));
+    }
+    Ok(())
+}
+
+/// Render diagnostics as a JSON array (machine-readable `--json`).
+pub fn render_json(diags: &[Diag]) -> String {
+    let mut s = String::from("[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n  {{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"msg\":\"{}\"}}",
+            json_escape(&d.file),
+            d.line,
+            d.rule,
+            json_escape(&d.msg)
+        ));
+    }
+    s.push_str(if diags.is_empty() { "]" } else { "\n]" });
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(path: &str, src: &str) -> Vec<Diag> {
+        lint_sources(&[(path.to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn allow_without_reason_is_flagged_but_still_suppresses() {
+        let src = r#"
+            impl WorkerShared {
+                fn on_x(&self) -> u32 {
+                    // lint: allow(no-panic-worker)
+                    self.v.get().expect("wired")
+                }
+            }
+        "#;
+        let diags = lint_one("rust/src/coordinator/service.rs", src);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].rule, "lint-allow");
+    }
+
+    #[test]
+    fn reasoned_allow_is_silent() {
+        let src = r#"
+            impl WorkerShared {
+                fn on_x(&self) -> u32 {
+                    // lint: allow(no-panic-worker) wired once at startup before any frame
+                    self.v.get().expect("wired")
+                }
+            }
+        "#;
+        let diags = lint_one("rust/src/coordinator/service.rs", src);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn json_renders_and_escapes() {
+        let diags = vec![Diag {
+            file: "a\"b.rs".into(),
+            line: 3,
+            rule: "wire-tag",
+            msg: "x\ny".into(),
+        }];
+        let j = render_json(&diags);
+        assert!(j.contains("\"rule\":\"wire-tag\""));
+        assert!(j.contains("a\\\"b.rs"));
+        assert!(j.contains("x\\ny"));
+        assert_eq!(render_json(&[]), "[]");
+    }
+
+    #[test]
+    fn diag_display_format() {
+        let d = Diag { file: "f.rs".into(), line: 7, rule: "lock-order", msg: "boom".into() };
+        assert_eq!(d.to_string(), "f.rs:7: lock-order boom");
+    }
+}

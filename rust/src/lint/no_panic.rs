@@ -1,0 +1,180 @@
+//! RULE `no-panic-worker` — worker wire-decode and plan-compile paths
+//! must reject hostile input with a typed `Error` (surfaced as an
+//! error Ack over the fabric), never a panic. A panicking worker
+//! thread on a headless NIC is a silent capacity loss; the PR 5
+//! invariant is that any byte sequence a peer can send produces either
+//! a result or an error frame.
+//!
+//! Roots: every non-test method of `WorkerShared` (the worker's frame
+//! handlers), the `decode`/`dec_*` codec fns in `protocol.rs`,
+//! `plan.rs`, and `partial.rs`, `compile`/`compile_scan` in `plan.rs`,
+//! and all of `wirefmt.rs` (the primitive reader every codec trusts).
+//!
+//! Flagged: `.unwrap()` / `.expect(…)` (except directly on `.lock()`,
+//! where propagating mutex poisoning is the repo-wide policy),
+//! `panic!`/`unreachable!`/`todo!`/`unimplemented!`, and — in codec
+//! fns (`wirefmt.rs` or fns named `decode`/`dec_*`) — slice indexing
+//! without a `// bound:` comment proving the bound on the same or the
+//! preceding line. `debug_assert!` is fine (compiled out in release);
+//! leader-side code is out of scope (a leader panic is loud and
+//! local, not a silent fleet-side loss).
+
+use super::fns::{Extracted, FnInfo, Resolver, SourceFile};
+use super::lex::Tok;
+use super::{Allows, Diag};
+use std::collections::VecDeque;
+
+pub const RULE: &str = "no-panic-worker";
+
+const SCOPE: &[&str] = &[
+    "coordinator/service.rs",
+    "coordinator/protocol.rs",
+    "src/wirefmt.rs",
+    "analytics/engine/plan.rs",
+    "analytics/engine/partial.rs",
+];
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+const INDEX_PREV_KEYWORDS: &[&str] = &[
+    "let", "in", "return", "else", "match", "if", "while", "for", "mut", "ref", "move", "as",
+    "box", "unsafe", "use", "pub", "fn", "where", "loop", "break", "continue",
+];
+
+fn in_scope(path: &str) -> bool {
+    SCOPE.iter().any(|s| path.ends_with(s))
+}
+
+fn is_root(f: &FnInfo, path: &str) -> bool {
+    if f.is_test {
+        return false;
+    }
+    let decode_name =
+        |n: &str| n.contains("decode") || n.starts_with("dec_");
+    if path.ends_with("coordinator/service.rs") {
+        return f.impl_ty.as_deref() == Some("WorkerShared");
+    }
+    if path.ends_with("coordinator/protocol.rs") {
+        return decode_name(&f.name);
+    }
+    if path.ends_with("analytics/engine/plan.rs") {
+        return decode_name(&f.name) || f.name == "compile" || f.name == "compile_scan";
+    }
+    if path.ends_with("analytics/engine/partial.rs") {
+        return decode_name(&f.name);
+    }
+    if path.ends_with("src/wirefmt.rs") {
+        return true;
+    }
+    false
+}
+
+/// Does the indexing sub-check apply to this fn?
+fn checks_indexing(f: &FnInfo, path: &str) -> bool {
+    path.ends_with("src/wirefmt.rs") || f.name.contains("decode") || f.name.starts_with("dec_")
+}
+
+pub fn check(files: &[SourceFile], ex: &Extracted, allows: &[Allows], diags: &mut Vec<Diag>) {
+    let scope: Vec<bool> = ex.fns.iter().map(|f| in_scope(&files[f.file].path)).collect();
+    let resolver = Resolver::new(&ex.fns, &scope);
+
+    let mut reached = vec![false; ex.fns.len()];
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    for (i, f) in ex.fns.iter().enumerate() {
+        if scope[i] && is_root(f, &files[f.file].path) {
+            reached[i] = true;
+            queue.push_back(i);
+        }
+    }
+    while let Some(i) = queue.pop_front() {
+        let f = &ex.fns[i];
+        for c in &f.calls {
+            if let Some(g) = resolver.resolve(f, c) {
+                if !reached[g] {
+                    reached[g] = true;
+                    queue.push_back(g);
+                }
+            }
+        }
+    }
+
+    for (i, f) in ex.fns.iter().enumerate() {
+        if reached[i] {
+            scan_fn(files, f, &allows[f.file], diags);
+        }
+    }
+}
+
+fn scan_fn(files: &[SourceFile], f: &FnInfo, allows: &Allows, diags: &mut Vec<Diag>) {
+    let file = &files[f.file];
+    let (open, close) = f.body;
+    let indexing = checks_indexing(f, &file.path);
+    let mut flag = |line: u32, msg: String, diags: &mut Vec<Diag>| {
+        if allows.allowed(RULE, line) {
+            return;
+        }
+        diags.push(Diag { file: file.path.clone(), line, rule: RULE, msg });
+    };
+    for i in (open + 1)..close {
+        match &file.toks[i].tok {
+            Tok::Ident(m)
+                if (m == "unwrap" || m == "expect")
+                    && file.punct(i.wrapping_sub(1)) == Some('.')
+                    && file.punct(i + 1) == Some('(') =>
+            {
+                // `.lock().unwrap()` propagates mutex poisoning — the
+                // repo-wide policy, exempt by design.
+                let on_lock = file.ident(i.wrapping_sub(4)) == Some("lock")
+                    && file.punct(i.wrapping_sub(3)) == Some('(')
+                    && file.punct(i.wrapping_sub(2)) == Some(')');
+                if !on_lock {
+                    flag(
+                        file.line(i),
+                        format!(
+                            "`.{m}()` in `{}` on a worker decode/compile path — return a typed \
+                             Error (error Ack) or add `// lint: allow({RULE}) reason`",
+                            f.qual()
+                        ),
+                        diags,
+                    );
+                }
+            }
+            Tok::Ident(m)
+                if PANIC_MACROS.contains(&m.as_str()) && file.punct(i + 1) == Some('!') =>
+            {
+                flag(
+                    file.line(i),
+                    format!(
+                        "`{m}!` in `{}` on a worker decode/compile path — return a typed Error \
+                         (error Ack) instead",
+                        f.qual()
+                    ),
+                    diags,
+                );
+            }
+            Tok::Punct('[') if indexing => {
+                // Index expression: `expr[...]` — previous token ends
+                // an expression (ident, `)`, or `]`), not a pattern,
+                // type, or attribute position.
+                let is_index = match &file.toks[i.wrapping_sub(1)].tok {
+                    Tok::Ident(p) => !INDEX_PREV_KEYWORDS.contains(&p.as_str()),
+                    Tok::Punct(')') | Tok::Punct(']') => true,
+                    _ => false,
+                };
+                if is_index && !allows.bound(file.line(i)) {
+                    flag(
+                        file.line(i),
+                        format!(
+                            "unchecked slice index in codec fn `{}` — prove the bound in a \
+                             `// bound:` comment on this or the preceding line, or return an \
+                             error on short input",
+                            f.qual()
+                        ),
+                        diags,
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}

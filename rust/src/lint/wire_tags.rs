@@ -1,0 +1,421 @@
+//! RULE `wire-tag` — the protocol's method-tag constants and the tag
+//! matches over wire bytes must stay collision-free and total.
+//!
+//! Three checks:
+//!
+//! 1. **Duplicate tags.** Two `METHOD_*` constants sharing a numeric
+//!    value (a frame routed to the wrong handler), or one `match`
+//!    containing two arms with the same literal value (the second is
+//!    dead — rustc warns on overlapping literals but not through
+//!    macro-generated arms).
+//! 2. **Encode/decode symmetry.** Every `METHOD_*` constant declared
+//!    in `protocol.rs` must appear both as a match-arm *pattern*
+//!    (something decodes it) and in a non-pattern position
+//!    (something sends or routes it), scanning `protocol.rs`,
+//!    `service.rs`, and `rpc.rs` outside test code.
+//! 3. **Rejecting defaults.** Any `match` in `protocol.rs`/`plan.rs`/
+//!    `wirefmt.rs` with two or more integer-literal or `METHOD_*`
+//!    arms is a tag dispatch and must end in a default arm (`_` or a
+//!    lone binding) whose body rejects — contains `bail`/`Err`/`err`
+//!    — so truncated or hostile bytes fail loudly instead of falling
+//!    through.
+
+use super::fns::SourceFile;
+use super::lex::{num_value, Tok};
+use super::{Allows, Diag};
+use std::collections::BTreeMap;
+
+pub const RULE: &str = "wire-tag";
+
+/// Token ranges of `#[cfg(test)] mod … { … }` bodies in one file —
+/// recomputed here because this rule scans files, not fns.
+fn test_regions(f: &SourceFile) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut pending = false;
+    let mut i = 0;
+    while i < f.toks.len() {
+        match &f.toks[i].tok {
+            Tok::Punct('#') if f.punct(i + 1) == Some('[') => {
+                let close = f.fwd[i + 1];
+                if close != usize::MAX {
+                    if f.toks[i + 2..close]
+                        .iter()
+                        .any(|t| matches!(&t.tok, Tok::Ident(s) if s == "test"))
+                    {
+                        pending = true;
+                    }
+                    i = close + 1;
+                    continue;
+                }
+            }
+            Tok::Ident(kw) if kw == "mod" && pending => {
+                let mut j = i + 1;
+                while j < f.toks.len() && f.punct(j) != Some('{') && f.punct(j) != Some(';') {
+                    j += 1;
+                }
+                if f.punct(j) == Some('{') && f.fwd[j] != usize::MAX {
+                    regions.push((j, f.fwd[j]));
+                    i = f.fwd[j] + 1;
+                    pending = false;
+                    continue;
+                }
+                pending = false;
+            }
+            Tok::Ident(kw) if kw == "fn" && pending => {
+                // `#[test] fn …` outside a test mod: skip its body.
+                let mut j = i + 1;
+                while j < f.toks.len() && f.punct(j) != Some('{') {
+                    j += 1;
+                }
+                if f.punct(j) == Some('{') && f.fwd[j] != usize::MAX {
+                    regions.push((j, f.fwd[j]));
+                    i = f.fwd[j] + 1;
+                    pending = false;
+                    continue;
+                }
+                pending = false;
+            }
+            Tok::Ident(_) => pending = false,
+            _ => {}
+        }
+        i += 1;
+    }
+    regions
+}
+
+fn in_test(regions: &[(usize, usize)], i: usize) -> bool {
+    regions.iter().any(|(o, c)| i > *o && i < *c)
+}
+
+struct Decl {
+    value: Option<u64>,
+    line: u32,
+    pattern_uses: u32,
+    other_uses: u32,
+}
+
+pub fn check(files: &[SourceFile], allows: &[Allows], diags: &mut Vec<Diag>) {
+    let find = |suffix: &str| files.iter().position(|f| f.path.ends_with(suffix));
+    let Some(proto) = find("coordinator/protocol.rs") else { return };
+    let use_files: Vec<usize> = [Some(proto), find("coordinator/service.rs"), find("src/rpc.rs")]
+        .into_iter()
+        .flatten()
+        .collect();
+    let match_files: Vec<usize> = [
+        Some(proto),
+        find("analytics/engine/plan.rs"),
+        find("src/wirefmt.rs"),
+    ]
+    .into_iter()
+    .flatten()
+    .collect();
+
+    // 1. Collect METHOD_* constants from protocol.rs.
+    let mut decls: BTreeMap<String, Decl> = BTreeMap::new();
+    {
+        let f = &files[proto];
+        let regions = test_regions(f);
+        let mut i = 0;
+        while i + 5 < f.toks.len() {
+            if f.ident(i) == Some("const")
+                && f.ident(i + 1).is_some_and(|n| n.starts_with("METHOD_"))
+                && f.punct(i + 2) == Some(':')
+                && !in_test(&regions, i)
+            {
+                // const NAME : TYPE = NUM ;
+                let name = f.ident(i + 1).unwrap().to_string();
+                let mut j = i + 3;
+                while j < f.toks.len() && f.punct(j) != Some('=') && f.punct(j) != Some(';') {
+                    j += 1;
+                }
+                let value = match f.toks.get(j + 1).map(|t| &t.tok) {
+                    Some(Tok::Num(text)) if f.punct(j) == Some('=') => num_value(text),
+                    _ => None,
+                };
+                decls.insert(
+                    name,
+                    Decl { value, line: f.line(i + 1), pattern_uses: 0, other_uses: 0 },
+                );
+            }
+            i += 1;
+        }
+        // Duplicate values.
+        let mut by_value: BTreeMap<u64, Vec<(&String, u32)>> = BTreeMap::new();
+        for (name, d) in &decls {
+            if let Some(v) = d.value {
+                by_value.entry(v).or_default().push((name, d.line));
+            }
+        }
+        for (v, names) in by_value {
+            if names.len() > 1 {
+                let (last, line) = names[names.len() - 1];
+                if !allows[proto].allowed(RULE, line) {
+                    let all: Vec<&str> = names.iter().map(|(n, _)| n.as_str()).collect();
+                    diags.push(Diag {
+                        file: f.path.clone(),
+                        line,
+                        rule: RULE,
+                        msg: format!(
+                            "duplicate wire tag {v:#x} shared by {} — `{last}` shadows the \
+                             dispatch",
+                            all.join(", ")
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // 2. Usage audit over protocol.rs + service.rs + rpc.rs.
+    for &fi in &use_files {
+        let f = &files[fi];
+        let regions = test_regions(f);
+        for i in 0..f.toks.len() {
+            let Some(name) = f.ident(i) else { continue };
+            let Some(d) = decls.get_mut(name) else { continue };
+            if in_test(&regions, i) {
+                continue;
+            }
+            if fi == proto && f.line(i) == d.line {
+                continue; // the declaration itself
+            }
+            if f.punct(i + 1) == Some('=') && f.punct(i + 2) == Some('>') {
+                d.pattern_uses += 1;
+            } else {
+                d.other_uses += 1;
+            }
+        }
+    }
+    for (name, d) in &decls {
+        if allows[proto].allowed(RULE, d.line) {
+            continue;
+        }
+        let v = d.value.unwrap_or(0);
+        if d.pattern_uses == 0 {
+            diags.push(Diag {
+                file: files[proto].path.clone(),
+                line: d.line,
+                rule: RULE,
+                msg: format!(
+                    "`{name}` ({v:#x}) is never matched in a decode path — frames with this \
+                     tag fall through to the unknown-method reject"
+                ),
+            });
+        }
+        if d.other_uses == 0 {
+            diags.push(Diag {
+                file: files[proto].path.clone(),
+                line: d.line,
+                rule: RULE,
+                msg: format!("`{name}` ({v:#x}) is declared and decoded but never sent"),
+            });
+        }
+    }
+
+    // 3. Tag matches must have a rejecting default arm.
+    for &fi in &match_files {
+        audit_matches(&files[fi], &allows[fi], diags);
+    }
+}
+
+/// One parsed match arm: its pattern tokens and body token range.
+struct Arm {
+    pat: (usize, usize),
+    body: (usize, usize),
+}
+
+fn audit_matches(f: &SourceFile, allows: &Allows, diags: &mut Vec<Diag>) {
+    let regions = test_regions(f);
+    for i in 0..f.toks.len() {
+        if f.ident(i) != Some("match") || in_test(&regions, i) {
+            continue;
+        }
+        // Scrutinee: first `{` at this level opens the match body.
+        let mut j = i + 1;
+        let mut body = None;
+        while j < f.toks.len() {
+            match &f.toks[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') if f.fwd[j] != usize::MAX => j = f.fwd[j],
+                Tok::Punct('{') => {
+                    body = Some(j);
+                    break;
+                }
+                Tok::Punct(';') => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(open) = body else { continue };
+        let close = f.fwd[open];
+        if close == usize::MAX {
+            continue;
+        }
+        let arms = parse_arms(f, open, close);
+        let mut int_values: Vec<(u64, u32)> = Vec::new();
+        let mut tag_arms = 0u32;
+        let mut default: Option<&Arm> = None;
+        for a in &arms {
+            match classify_pattern(f, a.pat) {
+                Pat::Ints(vs) => {
+                    for v in vs {
+                        int_values.push((v, f.line(a.pat.0)));
+                    }
+                }
+                Pat::Tag => tag_arms += 1,
+                Pat::Default => default = Some(a),
+                Pat::Other => {}
+            }
+        }
+        if (int_values.len() as u32 + tag_arms) < 2 {
+            continue; // not a tag dispatch
+        }
+        let line = f.line(i);
+        if allows.allowed(RULE, line) {
+            continue;
+        }
+        // Duplicate literal arms.
+        let mut seen: BTreeMap<u64, u32> = BTreeMap::new();
+        for (v, vl) in &int_values {
+            if let Some(first) = seen.get(v) {
+                diags.push(Diag {
+                    file: f.path.clone(),
+                    line: *vl,
+                    rule: RULE,
+                    msg: format!(
+                        "duplicate match arm for tag {v:#x} (first at line {first}) — this arm \
+                         is dead"
+                    ),
+                });
+            } else {
+                seen.insert(*v, *vl);
+            }
+        }
+        match default {
+            None => diags.push(Diag {
+                file: f.path.clone(),
+                line,
+                rule: RULE,
+                msg: "tag match has no default arm — truncated or hostile bytes must hit an \
+                      explicit reject (`t => bail!(…)`)"
+                    .into(),
+            }),
+            Some(a) => {
+                let rejects = (a.body.0..a.body.1).any(|k| {
+                    matches!(
+                        f.ident(k),
+                        Some("bail" | "Err" | "err" | "panic" | "unreachable")
+                    )
+                });
+                if !rejects {
+                    diags.push(Diag {
+                        file: f.path.clone(),
+                        line: f.line(a.pat.0),
+                        rule: RULE,
+                        msg: "tag match default arm does not reject — unknown tags must \
+                              produce an error, not a silent fallback"
+                            .into(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn parse_arms(f: &SourceFile, open: usize, close: usize) -> Vec<Arm> {
+    let mut arms = Vec::new();
+    let mut j = open + 1;
+    while j < close {
+        // Pattern: tokens up to `=>` at this level.
+        let pat_start = j;
+        let mut arrow = None;
+        while j < close {
+            match &f.toks[j].tok {
+                Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{')
+                    if f.fwd[j] != usize::MAX =>
+                {
+                    j = f.fwd[j]
+                }
+                Tok::Punct('=') if f.punct(j + 1) == Some('>') => {
+                    arrow = Some(j);
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(arrow) = arrow else { break };
+        // Body: a block, or tokens up to `,` at this level.
+        let body_start = arrow + 2;
+        let body_end;
+        if f.punct(body_start) == Some('{') && f.fwd[body_start] != usize::MAX {
+            body_end = f.fwd[body_start];
+            j = body_end + 1;
+            if f.punct(j) == Some(',') {
+                j += 1;
+            }
+        } else {
+            let mut k = body_start;
+            while k < close {
+                match &f.toks[k].tok {
+                    Tok::Punct('(') | Tok::Punct('[') | Tok::Punct('{')
+                        if f.fwd[k] != usize::MAX =>
+                    {
+                        k = f.fwd[k]
+                    }
+                    Tok::Punct(',') => break,
+                    _ => {}
+                }
+                k += 1;
+            }
+            body_end = k;
+            j = k + 1;
+        }
+        arms.push(Arm { pat: (pat_start, arrow), body: (body_start, body_end) });
+    }
+    arms
+}
+
+enum Pat {
+    /// Integer-literal arm(s): `0x51`, `1 | 2`.
+    Ints(Vec<u64>),
+    /// A `METHOD_*` constant pattern.
+    Tag,
+    /// `_` or a lone lowercase binding.
+    Default,
+    Other,
+}
+
+fn classify_pattern(f: &SourceFile, (start, end): (usize, usize)) -> Pat {
+    let toks: Vec<&Tok> = (start..end).map(|k| &f.toks[k].tok).collect();
+    match toks.as_slice() {
+        [Tok::Punct('_')] => Pat::Default,
+        [Tok::Ident(s)] if s.starts_with("METHOD_") => Pat::Tag,
+        [Tok::Ident(s)]
+            if s.chars().next().is_some_and(|c| c.is_lowercase() || c == '_') =>
+        {
+            Pat::Default
+        }
+        _ => {
+            // `N`, `N | M | …` — all tokens must be nums or `|`.
+            let mut vals = Vec::new();
+            for t in &toks {
+                match t {
+                    Tok::Num(text) => {
+                        if let Some(v) = num_value(text) {
+                            vals.push(v);
+                        } else {
+                            return Pat::Other;
+                        }
+                    }
+                    Tok::Punct('|') => {}
+                    _ => return Pat::Other,
+                }
+            }
+            if vals.is_empty() {
+                Pat::Other
+            } else {
+                Pat::Ints(vals)
+            }
+        }
+    }
+}

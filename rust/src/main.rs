@@ -37,6 +37,7 @@ fn main() {
         .sub("dist", "run a distributed query on a simulated cluster")
         .sub("load", "drive a QueryService with open/closed-loop overload")
         .sub("train", "real AOT-compiled training loop via PJRT")
+        .sub("lint", "zero-dep invariant checker over rust/src (see DESIGN.md §3h)")
         .opt("sf", Some("0.01"), "TPC-H scale factor")
         .opt("seed", Some("42"), "experiment seed")
         .opt("phi", Some("2"), "smart NICs per replaced server")
@@ -63,7 +64,9 @@ fn main() {
         .flag("serial", "run tpch single-threaded instead of morsel-driven")
         .flag("dist", "run sql on a simulated cluster instead of locally")
         .flag("no-optimize", "run/show the bound plan without optimizer rewrites")
-        .flag("chunked", "use chunked-stream checkpointing");
+        .flag("chunked", "use chunked-stream checkpointing")
+        .flag("json", "lint: emit diagnostics as a JSON array")
+        .flag("fix-none", "lint: report diagnostics but exit 0 (dry run for tooling)");
     let args = match cmd.parse(std::env::args().skip(1)) {
         Ok(a) => a,
         Err(msg) => {
@@ -84,6 +87,7 @@ fn main() {
         Some("dist") => cmd_dist(&args),
         Some("load") => cmd_load(&args),
         Some("train") => cmd_train(&args),
+        Some("lint") => cmd_lint(&args),
         _ => {
             eprintln!("{}", cmd.help_text());
             std::process::exit(2);
@@ -566,5 +570,32 @@ fn cmd_train(args: &lovelock::cli::Args) -> lovelock::Result<()> {
         acc.h2d_bytes / 1000,
         acc.d2h_bytes / 1000
     );
+    Ok(())
+}
+
+/// `lovelock lint [--json] [--fix-none] [paths…]` — run the invariant
+/// checker (DESIGN.md §3h). Default scope is the whole `rust/src` tree;
+/// exits non-zero on any diagnostic unless `--fix-none`.
+fn cmd_lint(args: &lovelock::cli::Args) -> lovelock::Result<()> {
+    let paths: Vec<String> = if args.positional.is_empty() {
+        vec!["rust/src".to_string()]
+    } else {
+        args.positional.clone()
+    };
+    let sources = lovelock::lint::load_paths(&paths)?;
+    let diags = lovelock::lint::lint_sources(&sources);
+    if args.get_flag("json") {
+        println!("{}", lovelock::lint::render_json(&diags));
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        if diags.is_empty() {
+            println!("lint clean: {} files, 0 diagnostics", sources.len());
+        }
+    }
+    if !diags.is_empty() && !args.get_flag("fix-none") {
+        lovelock::bail!("lint: {} diagnostic(s)", diags.len());
+    }
     Ok(())
 }

@@ -67,6 +67,7 @@ impl BufPool {
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                // lint: allow(hot-path-alloc) pool miss — cold start or burst beyond pool depth; steady state recycles
                 Vec::with_capacity(cap)
             }
         }

@@ -29,6 +29,7 @@ impl<'a> Reader<'a> {
             self.off,
             self.buf.len() - self.off
         );
+        // bound: the ensure! above proves off + n <= buf.len()
         let s = &self.buf[self.off..self.off + n];
         self.off += n;
         Ok(s)

@@ -1,0 +1,19 @@
+//! A morsel kernel that allocates per call, directly (`.collect()`)
+//! and through a helper it calls (`.to_vec()`). Never compiled:
+//! linted as text under the virtual path
+//! `rust/src/analytics/engine/mod.rs`, where `fold_range` is a
+//! hot-path root.
+
+pub fn fold_range(lo: usize, hi: usize, out: &mut Vec<f64>) -> f64 {
+    let ids: Vec<usize> = (lo..hi).collect();
+    let mut acc = 0.0;
+    for i in ids {
+        acc += helper(i, out);
+    }
+    acc
+}
+
+fn helper(i: usize, out: &mut Vec<f64>) -> f64 {
+    let copy = out.to_vec();
+    copy.get(i).copied().unwrap_or(0.0)
+}

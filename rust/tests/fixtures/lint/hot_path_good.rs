@@ -1,0 +1,16 @@
+//! The sanctioned kernel shape: write into a caller-provided buffer,
+//! no owned storage constructed per call. Never compiled: linted as
+//! text under the virtual path `rust/src/analytics/engine/mod.rs`.
+
+pub fn fold_range(lo: usize, hi: usize, out: &mut [u32]) -> usize {
+    let mut k = 0;
+    for i in lo..hi {
+        out[k] = i as u32;
+        k += helper(i);
+    }
+    k
+}
+
+fn helper(i: usize) -> usize {
+    (i & 1 == 0) as usize
+}

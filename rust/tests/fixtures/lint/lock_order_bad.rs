@@ -1,0 +1,41 @@
+//! Seeded reproduction of the PR 3 endpoint-teardown deadlock shape:
+//! `submit` takes `queries` then `sched`; `teardown_endpoint` holds
+//! `sched` while calling `retire_sessions`, which takes `queries` —
+//! a cross-function inversion and a two-lock cycle. `beat` re-creates
+//! the monitor-loop leaf-only violation (`last_heard` held across
+//! `dead`). Never compiled: linted as text by `lint_fixtures.rs`
+//! under the virtual path `rust/src/coordinator/fixture_teardown.rs`.
+
+struct Leader {
+    queries: Mutex<u32>,
+    sched: Mutex<u32>,
+    last_heard: Mutex<u32>,
+    dead: Mutex<u32>,
+}
+
+impl Leader {
+    fn submit(&self) {
+        let q = self.queries.lock().unwrap();
+        let s = self.sched.lock().unwrap();
+        drop(s);
+        drop(q);
+    }
+
+    fn teardown_endpoint(&self) {
+        let s = self.sched.lock().unwrap();
+        self.retire_sessions();
+        drop(s);
+    }
+
+    fn retire_sessions(&self) {
+        let q = self.queries.lock().unwrap();
+        drop(q);
+    }
+
+    fn beat(&self) {
+        let heard = self.last_heard.lock().unwrap();
+        let dead = self.dead.lock().unwrap();
+        drop(dead);
+        drop(heard);
+    }
+}

@@ -1,0 +1,38 @@
+//! The corrected teardown shape: every acquisition follows the
+//! canonical order, the held guard is dropped before the call that
+//! re-locks, and the leaf-only lock is snapshotted instead of held.
+//! Never compiled: linted as text by `lint_fixtures.rs`.
+
+struct Leader {
+    queries: Mutex<u32>,
+    sched: Mutex<u32>,
+    last_heard: Mutex<u32>,
+    dead: Mutex<u32>,
+}
+
+impl Leader {
+    fn submit(&self) {
+        let q = self.queries.lock().unwrap();
+        let s = self.sched.lock().unwrap();
+        drop(s);
+        drop(q);
+    }
+
+    fn teardown_endpoint(&self) {
+        let s = self.sched.lock().unwrap();
+        drop(s);
+        self.retire_sessions();
+    }
+
+    fn retire_sessions(&self) {
+        let q = self.queries.lock().unwrap();
+        drop(q);
+    }
+
+    fn beat(&self) {
+        let heard = self.last_heard.lock().unwrap().clone();
+        let dead = self.dead.lock().unwrap();
+        drop(dead);
+        drop(heard);
+    }
+}

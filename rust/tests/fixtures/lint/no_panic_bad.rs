@@ -1,0 +1,19 @@
+//! Panics on a worker frame path: a `WorkerShared` handler that
+//! unwraps and panics, calling a codec fn that indexes without a
+//! proven bound. Never compiled: linted as text under the virtual
+//! path `rust/src/coordinator/service.rs`, where `WorkerShared`
+//! methods are no-panic roots.
+
+impl WorkerShared {
+    fn on_frame(&self, body: &[u8]) -> u32 {
+        let first = decode(body);
+        if first == 0 {
+            panic!("zero tag");
+        }
+        self.slot.get().unwrap()
+    }
+}
+
+fn decode(body: &[u8]) -> u32 {
+    body[0] as u32
+}

@@ -1,0 +1,19 @@
+//! The panic-free worker shape: mutex poisoning propagates via
+//! `.lock().unwrap()` (exempt by policy), hostile input returns a
+//! typed error, and codec indexing carries a `// bound:` proof.
+//! Never compiled: linted as text under the virtual path
+//! `rust/src/coordinator/service.rs`.
+
+impl WorkerShared {
+    fn on_frame(&self, body: &[u8]) -> crate::Result<u32> {
+        let g = self.state.lock().unwrap();
+        let first = decode(body)?;
+        Ok(first + *g)
+    }
+}
+
+fn decode(body: &[u8]) -> crate::Result<u32> {
+    crate::ensure!(!body.is_empty(), "empty frame");
+    // bound: the ensure! above proves body is non-empty
+    Ok(body[0] as u32)
+}

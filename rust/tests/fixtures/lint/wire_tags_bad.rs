@@ -1,0 +1,24 @@
+//! Wire-tag pathologies: `METHOD_DUP` collides with `METHOD_CAST`,
+//! `METHOD_GHOST` is sent but never matched by any decoder, and the
+//! dispatch match has no rejecting default arm. Never compiled:
+//! linted as text under the virtual path
+//! `rust/src/coordinator/protocol.rs`.
+
+pub const METHOD_PING: u32 = 1;
+pub const METHOD_CAST: u32 = 2;
+pub const METHOD_DUP: u32 = 2;
+pub const METHOD_GHOST: u32 = 9;
+
+pub fn dispatch(m: u32) -> u32 {
+    match m {
+        METHOD_PING => 1,
+        METHOD_CAST => 2,
+    }
+}
+
+pub fn send_all(out: &mut Vec<u32>) {
+    out.push(METHOD_PING);
+    out.push(METHOD_CAST);
+    out.push(METHOD_DUP);
+    out.push(METHOD_GHOST);
+}

@@ -1,0 +1,20 @@
+//! The healthy protocol shape: unique tag values, every constant both
+//! matched (decoded) and sent, and the dispatch ends in a rejecting
+//! default. Never compiled: linted as text under the virtual path
+//! `rust/src/coordinator/protocol.rs`.
+
+pub const METHOD_PING: u32 = 1;
+pub const METHOD_CAST: u32 = 2;
+
+pub fn dispatch(m: u32) -> crate::Result<u32> {
+    match m {
+        METHOD_PING => Ok(1),
+        METHOD_CAST => Ok(2),
+        t => crate::bail!("unknown method tag {t:#x}"),
+    }
+}
+
+pub fn send_all(out: &mut Vec<u32>) {
+    out.push(METHOD_PING);
+    out.push(METHOD_CAST);
+}
